@@ -1,0 +1,109 @@
+//! End-to-end driver across ALL THREE LAYERS (the e2e validation run
+//! recorded in EXPERIMENTS.md):
+//!
+//!   L1/L2 — the Pallas/JAX strategy-latency model, AOT-compiled to HLO
+//!           text by `make artifacts`;
+//!   runtime — loaded and executed through PJRT from rust;
+//!   L3 — the SM-AD adaptive strategy queries the model per transaction
+//!        class and routes each transaction to SM-OB or SM-DD, beating
+//!        both fixed strategies on a mixed workload.
+//!
+//! Run: `make artifacts && cargo run --release --example adaptive`
+
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::coordinator::sched::{run_threads, TxnSource};
+use pmsm::coordinator::{Mirror, ThreadCtx};
+use pmsm::replication::TxnShape;
+use pmsm::runtime::{fallback_predictor, LatencyModel};
+use pmsm::workloads::transact::TransactConfig;
+use pmsm::Ns;
+
+/// Mixed workload: alternating small (4-1) and large (256-1) transactions
+/// — exactly the regime where neither fixed strategy wins everywhere.
+fn mixed_source(txns: u64) -> Box<dyn TxnSource> {
+    let mut i = 0u64;
+    Box::new(move |m: &mut Mirror, t: &mut ThreadCtx| {
+        if i >= txns {
+            return false;
+        }
+        let (epochs, writes) = if i % 2 == 0 { (4u32, 1u32) } else { (256, 1) };
+        m.txn_begin(
+            t,
+            Some(TxnShape {
+                epochs: epochs as f32,
+                writes: writes as f32,
+            }),
+        );
+        for e in 0..epochs {
+            let addr = 0x6000_0000 + ((i * 301 + e as u64) % 4096) * 64;
+            m.store(t, addr, i);
+            m.clwb(t, addr);
+            m.sfence(t);
+        }
+        m.txn_commit(t);
+        i += 1;
+        true
+    })
+}
+
+fn run(kind: StrategyKind, plat: &Platform, txns: u64) -> Ns {
+    let mut m = Mirror::new(plat.clone(), kind, false);
+    let mut srcs: Vec<Box<dyn TxnSource>> = vec![mixed_source(txns)];
+    run_threads(&mut m, &mut srcs).makespan
+}
+
+fn main() {
+    let plat = Platform::default();
+    let txns = 300u64;
+
+    // L1/L2 model through PJRT (closed-form fallback if artifacts absent).
+    let (predictor, source) = match LatencyModel::load(&plat) {
+        Ok(model) => {
+            println!("loaded AOT latency model (JAX/Pallas -> HLO text -> PJRT)");
+            // Show the model's own Figure-4-style predictions.
+            let e = [4.0f32, 256.0];
+            let w = [1.0f32, 1.0];
+            let (lat, _) = model.predict(&e, &w).expect("predict");
+            for (i, l) in lat.iter().enumerate() {
+                println!(
+                    "  model {}-1: NO-SM {:.0}ns RC {:.0}ns OB {:.0}ns DD {:.0}ns -> {}",
+                    e[i] as u32,
+                    l[0],
+                    l[1],
+                    l[2],
+                    l[3],
+                    if l[2] < l[3] { "SM-OB" } else { "SM-DD" }
+                );
+            }
+            (model.predictor().expect("predictor"), "pjrt")
+        }
+        Err(e) => {
+            println!("artifacts unavailable ({e}); using closed-form fallback");
+            (fallback_predictor(&plat), "fallback")
+        }
+    };
+
+    // Fixed strategies on the mixed workload.
+    let ob = run(StrategyKind::SmOb, &plat, txns);
+    let dd = run(StrategyKind::SmDd, &plat, txns);
+
+    // Adaptive: model-driven per-transaction routing.
+    let mut m = Mirror::with_predictor(plat.clone(), StrategyKind::SmAd, predictor, false);
+    let mut srcs: Vec<Box<dyn TxnSource>> = vec![mixed_source(txns)];
+    let ad = run_threads(&mut m, &mut srcs).makespan;
+
+    println!("\nmixed workload ({txns} txns, alternating 4-1 / 256-1):");
+    println!("  SM-OB fixed    : {:.3} ms", ob as f64 / 1e6);
+    println!("  SM-DD fixed    : {:.3} ms", dd as f64 / 1e6);
+    println!("  SM-AD ({source:8}): {:.3} ms", ad as f64 / 1e6);
+    let best = ob.min(dd);
+    println!(
+        "  adaptive vs best fixed: {:+.1}%",
+        100.0 * (ad as f64 - best as f64) / best as f64
+    );
+    assert!(
+        (ad as f64) <= best as f64 * 1.05,
+        "adaptive should track or beat the best fixed strategy"
+    );
+    println!("adaptive OK");
+}

@@ -1,0 +1,89 @@
+//! Failover drill: crash the primary at adversarial instants and recover
+//! from the backup replica, verifying the paper's two guarantees
+//! (failure atomicity + durability) at every crash point.
+//!
+//! Run: `cargo run --release --example failover`
+
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::coordinator::{Mirror, ThreadCtx};
+use pmsm::pstore::log_base_for;
+use pmsm::recovery::{check_crash, recover_image, TxnHistory};
+use pmsm::txn::Txn;
+use std::collections::HashMap;
+
+fn main() {
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        println!("=== strategy {kind} ===");
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        let log = log_base_for(0);
+        let accounts: Vec<u64> = (0..4).map(|i| 0x4000_0000 + i * 64).collect();
+
+        // A banking workload: each txn moves funds between two accounts.
+        let mut hist = TxnHistory::new(HashMap::new());
+        let mut img = HashMap::new();
+        // Initial funding is itself a replicated transaction — the backup
+        // must learn the opening balances.
+        {
+            let mut tx = Txn::begin(&mut m, &mut t, log, None);
+            for &a in &accounts {
+                tx.write(&mut m, &mut t, a, 1000);
+                img.insert(a, 1000u64);
+            }
+            tx.commit(&mut m, &mut t);
+            hist.commit(img.clone(), t.last_dfence);
+        }
+        for i in 0..12u64 {
+            let from = accounts[(i % 4) as usize];
+            let to = accounts[((i + 1) % 4) as usize];
+            let mut tx = Txn::begin(&mut m, &mut t, log, None);
+            let f = m.peek(from);
+            let g = m.peek(to);
+            tx.write(&mut m, &mut t, from, f - 50);
+            tx.write(&mut m, &mut t, to, g + 50);
+            tx.commit(&mut m, &mut t);
+            img.insert(from, f - 50);
+            img.insert(to, g + 50);
+            hist.commit(img.clone(), t.last_dfence);
+        }
+
+        // Crash at every ledger event boundary and mid-flight instants.
+        let ledger = &m.rdma.remote.ledger;
+        let times: Vec<u64> = {
+            let mut v: Vec<u64> = ledger.events().iter().map(|e| e.at).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let mut worst_rollback = 0usize;
+        let mut checked = 0;
+        for &crash in &times {
+            let k = check_crash(ledger, &hist, &[log], &accounts, crash)
+                .unwrap_or_else(|e| panic!("{kind}: {e}"));
+            worst_rollback = worst_rollback.max(hist.committed() - k.min(hist.committed()));
+            checked += 1;
+        }
+        // Conservation law: money is conserved in every recovered state.
+        for &crash in times.iter().step_by(7) {
+            let rec = recover_image(ledger, crash, &[log]);
+            let total: u64 = accounts
+                .iter()
+                .map(|a| rec.get(a).copied().unwrap_or(0))
+                .sum();
+            // Before the funding txn is durable the accounts read 0;
+            // afterwards every consistent state conserves the 4000 total.
+            assert!(
+                total == 4000 || total < 4000 && crash <= hist.dfences[0],
+                "{kind}: non-atomic balance {total} at crash {crash}"
+            );
+        }
+        println!(
+            "  {checked} crash points verified; deepest rollback: {worst_rollback} txn(s)"
+        );
+        println!("  final backup == primary: {}", {
+            let rec = recover_image(ledger, ledger.horizon(), &[log]);
+            accounts.iter().all(|a| rec.get(a) == Some(&m.peek(*a)))
+        });
+    }
+    println!("failover OK");
+}

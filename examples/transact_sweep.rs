@@ -1,0 +1,29 @@
+//! Figure-4 sweep (paper §7.1): the Transact microbenchmark across all
+//! replication strategies, printed as the paper's slowdown table, plus
+//! the A1 crossover scan.
+//!
+//! Run: `cargo run --release --example transact_sweep [txns-per-cell]`
+
+use pmsm::cli::fig4_sweep;
+use pmsm::config::Platform;
+use pmsm::metrics::report::fig4_table;
+
+fn main() {
+    let txns: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let plat = Platform::default();
+
+    let rows = fig4_sweep(&plat, txns, 1);
+    println!("{}", fig4_table(&rows, None));
+
+    println!("A1 — OB/DD crossover at w=1 (paper: DD wins small txns, OB large):");
+    for r in rows.iter().filter(|r| r.writes == 1) {
+        let winner = if r.ob < r.dd { "SM-OB" } else { "SM-DD" };
+        println!(
+            "  e={:<4} OB {:5.1}x  DD {:5.1}x  -> {winner}",
+            r.epochs, r.ob, r.dd
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Figure-5 suite (paper §7.2): the five SM-extended WHISPER applications
+//! under every replication strategy — execution time, throughput and the
+//! H1 headline comparison.
+//!
+//! Run: `cargo run --release --example whisper_suite [ops-per-thread]`
+
+use pmsm::cli::fig5_suite;
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::metrics::report::fig5_tables;
+use pmsm::workloads::{run_whisper, WhisperApp, WhisperConfig};
+
+fn main() {
+    let ops: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000);
+    let plat = Platform::default();
+
+    let rows = fig5_suite(&plat, ops, 4, None);
+    println!("{}", fig5_tables(&rows));
+
+    // Workload characterization (paper §7.2 discussion).
+    println!("workload characterization (NO-SM):");
+    println!("{:>8} {:>10} {:>12} {:>12}", "app", "txns", "epochs/txn", "writes/epoch");
+    for app in WhisperApp::ALL {
+        let cfg = WhisperConfig {
+            app,
+            ops: if app == WhisperApp::Echo { ops / 16 } else { ops }.max(10),
+            threads: 4,
+            seed: 42,
+        };
+        let out = run_whisper(&plat, StrategyKind::NoSm, cfg);
+        println!(
+            "{:>8} {:>10} {:>12.1} {:>12.2}",
+            app.name(),
+            out.txns,
+            out.epochs_per_txn(),
+            out.writes_per_epoch()
+        );
+    }
+}

@@ -1,0 +1,68 @@
+"""AOT: lower the L2 model to HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text — NOT `lowered.compile().serialize()` and NOT the serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+`xla` 0.1.6 crate links) rejects (`proto.id() <= INT_MAX`). The HLO text
+parser on the rust side reassigns ids and round-trips cleanly.
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_latency_model() -> str:
+    n = model.MODEL_N
+    spec_v = jax.ShapeDtypeStruct((n,), jnp.float32)
+    spec_p = jax.ShapeDtypeStruct((16,), jnp.float32)
+    lowered = jax.jit(model.strategy_model).lower(spec_v, spec_v, spec_p)
+    return to_hlo_text(lowered)
+
+
+def lower_cache_index() -> str:
+    n = model.INDEX_N
+    spec_a = jax.ShapeDtypeStruct((n,), jnp.uint64)
+    spec_m = jax.ShapeDtypeStruct((8,), jnp.uint64)
+    spec_meta = jax.ShapeDtypeStruct((2,), jnp.uint64)
+    lowered = jax.jit(model.cache_index_model).lower(spec_a, spec_m, spec_meta)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, fn in (
+        ("latency_model", lower_latency_model),
+        ("cache_index", lower_cache_index),
+    ):
+        text = fn()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: batch LLC set-index computation.
+
+Maps batches of physical line addresses to global LLC set indices using the
+Intel complex-addressing slice hash (Maurice et al. [41]): slice bit i is the
+XOR-fold (popcount parity) of the address masked with `masks[i]`; the local
+set index is taken from address bits [6, 6+log2(sets_per_slice)).
+
+The rust coordinator uses the AOT artifact of this kernel to annotate
+workload traces with cache-set pressure in bulk (one PJRT call per trace
+chunk), mirroring rust/src/mem/addr.rs which implements the identical hash
+for the simulator hot path.
+
+TPU mapping: pure integer VPU work; addresses stream HBM->VMEM in BLOCK-sized
+tiles; masks (a handful of u64s) are replicated per step. interpret=True for
+CPU execution (see latency.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+N_MASKS = 8  # supports up to 256 slices; unused masks are zero
+
+
+def _cache_index_kernel(masks_ref, meta_ref, addr_ref, out_ref):
+    """addr_ref: u64[BLOCK]; masks_ref: u64[N_MASKS]; meta_ref: u64[2] =
+    [sets_per_slice, n_mask_bits]; out_ref: i32[BLOCK]."""
+    addr = addr_ref[...]
+    masks = masks_ref[...]
+    sets_per_slice = meta_ref[0]
+
+    bits = jax.lax.population_count(addr[:, None] & masks[None, :]) & jnp.uint64(1)
+    weights = (jnp.uint64(1) << jnp.arange(N_MASKS, dtype=jnp.uint64))[None, :]
+    # Zero masks produce popcount 0 -> bit 0, so unused mask slots are inert.
+    slice_idx = jnp.sum(bits * weights, axis=1)
+    local_set = (addr >> jnp.uint64(6)) & (sets_per_slice - jnp.uint64(1))
+    out_ref[...] = (slice_idx * sets_per_slice + local_set).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cache_index(addr, masks, sets_per_slice):
+    """Global LLC set index for each address.
+
+    Args:
+      addr: u64[n] physical line addresses.
+      masks: u64[k<=N_MASKS] slice-hash XOR masks.
+      sets_per_slice: int (power of two).
+    Returns:
+      i32[n].
+    """
+    addr = jnp.asarray(addr, jnp.uint64)
+    masks = jnp.asarray(masks, jnp.uint64)
+    k = masks.shape[0]
+    if k < N_MASKS:
+        masks = jnp.concatenate([masks, jnp.zeros((N_MASKS - k,), jnp.uint64)])
+    meta = jnp.array([sets_per_slice, k], jnp.uint64)
+
+    n = addr.shape[0]
+    n_pad = -n % BLOCK
+    if n_pad:
+        addr = jnp.concatenate([addr, jnp.zeros((n_pad,), jnp.uint64)])
+    grid = (addr.shape[0] // BLOCK,)
+    out = pl.pallas_call(
+        _cache_index_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((N_MASKS,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((addr.shape[0],), jnp.int32),
+        interpret=True,
+    )(masks, meta, addr)
+    return out[:n]

@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: replication-strategy latency model.
+
+Evaluates the closed-form per-transaction latency of the paper's four
+replication strategies (NO-SM, SM-RC, SM-OB, SM-DD) for a batch of
+(epochs/txn, writes/epoch) configurations.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the configuration batch is
+tiled into VMEM-resident blocks via BlockSpec; the per-config arithmetic is
+pure element-wise VPU work vectorized over the lane dimension; the 16-entry
+platform parameter vector rides along as a whole-array block (scalar
+prefetch-like). `interpret=True` is mandatory on this CPU test bed — a real
+TPU lowering would emit a Mosaic custom-call the CPU PJRT plugin cannot run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import params as P
+
+# Block of configurations processed per grid step. 256 configs x (2 inputs +
+# 4 outputs) x 4 B = 6 KiB per step — far inside a TPU core's VMEM budget,
+# leaving headroom for double-buffering the HBM->VMEM stream.
+BLOCK = 256
+
+
+def _latency_kernel(p_ref, e_ref, w_ref, lat_ref):
+    """Pallas kernel body. e_ref/w_ref: f32[BLOCK]; p_ref: f32[16];
+    lat_ref: f32[BLOCK, 4]."""
+    e = e_ref[...]
+    w = w_ref[...]
+    p = p_ref[...]
+
+    rtt = p[P.P_RTT]
+    gap = p[P.P_GAP]
+    nqp = p[P.P_NQP]
+    llc_mc = p[P.P_LLC_MC]
+    mc_pm = p[P.P_MC_PM]
+    store = p[P.P_STORE]
+    flush = p[P.P_FLUSH]
+    sfence = p[P.P_SFENCE]
+    banks = p[P.P_MC_BANKS]
+    ob_barrier = p[P.P_OB_BARRIER]
+    qp_depth = p[P.P_QP_DEPTH]
+    nt_serial = p[P.P_NT_SERIAL]
+    ddio_lines = p[P.P_LLC_DDIO_LINES]
+
+    n = e * w
+
+    local_epoch = w * (store + flush) + sfence + w * llc_mc
+    lat_nosm = e * local_epoch
+
+    rc_remote_epoch = w * gap + rtt + w * llc_mc + mc_pm
+    lat_rc = e * jnp.maximum(local_epoch, rc_remote_epoch)
+
+    ob_issue = n * (gap / nqp) + e * (gap / nqp + ob_barrier)
+    ob_drain = n * (mc_pm / banks)
+    ob_overflow = jnp.maximum(0.0, n - ddio_lines) * (mc_pm / banks)
+    lat_ob = (
+        jnp.maximum(jnp.maximum(ob_issue, e * local_epoch), ob_drain)
+        + ob_overflow
+        + rtt
+        + mc_pm  # rdfence: last-line PM landing (rcommit-like drain tail)
+    )
+
+    dd_issue = n * gap
+    dd_serial = jnp.maximum(0.0, n - qp_depth) * jnp.maximum(0.0, nt_serial - gap)
+    lat_dd = jnp.maximum(e * local_epoch, dd_issue + dd_serial) + rtt
+
+    lat_ref[...] = jnp.stack([lat_nosm, lat_rc, lat_ob, lat_dd], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def latency(e, w, p):
+    """Per-transaction latency (ns) for [NO-SM, SM-RC, SM-OB, SM-DD].
+
+    Args:
+      e: f32[n] epochs/txn; w: f32[n] writes/epoch (n multiple of BLOCK, or
+         it is padded); p: f32[16] platform vector.
+    Returns:
+      f32[n, 4].
+    """
+    e = jnp.asarray(e, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    n = e.shape[0]
+    n_pad = -n % BLOCK
+    if n_pad:
+        # Pad with a benign config (1 epoch, 1 write) — sliced off below.
+        e = jnp.concatenate([e, jnp.ones((n_pad,), jnp.float32)])
+        w = jnp.concatenate([w, jnp.ones((n_pad,), jnp.float32)])
+    grid = (e.shape[0] // BLOCK,)
+    out = pl.pallas_call(
+        _latency_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P.N_PARAMS,), lambda i: (0,)),  # params: replicated
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, P.N_STRATEGIES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e.shape[0], P.N_STRATEGIES), jnp.float32),
+        interpret=True,
+    )(p, e, w)
+    return out[:n]
+
+
+def slowdowns(e, w, p):
+    """Slowdown over NO-SM for [SM-RC, SM-OB, SM-DD] — Figure 4 series."""
+    lat = latency(e, w, p)
+    return lat[:, 1:] / lat[:, :1]

@@ -1,0 +1,59 @@
+"""Platform parameter vector shared by the L1 kernels, the jnp oracle and the
+rust simulator (rust/src/config/platform.rs mirrors the same indices).
+
+All latencies are in nanoseconds. The defaults correspond to the paper's §6.1
+model parameters (Xeon E5-2630 v3 + ConnectX-3) — see DESIGN.md §6.
+
+The parameter vector is passed to the AOT-compiled model as a plain f32[16]
+operand so the rust coordinator can re-evaluate the model for any platform
+configuration without re-running Python.
+"""
+
+# Parameter vector indices (f32[16]).
+P_RTT = 0  # RDMA small-message round-trip (ns)
+P_GAP = 1  # per-WQE issue gap on one QP (ns)
+P_NQP = 2  # number of QPs used by parallel strategies (SM-OB)
+P_PCIE_RT = 3  # PCIe write round-trip to LLC (ns) — paper: 200
+P_LLC_MC = 4  # LLC -> memory-controller queue transfer (ns) — paper: 10
+P_MC_PM = 5  # MC queue -> PM write latency (ns) — paper: 150
+P_MCQ = 6  # MC write queue depth (entries) — paper: 64
+P_STORE = 7  # local store issue (ns)
+P_FLUSH = 8  # local clflush/clwb issue (ns)
+P_SFENCE = 9  # local sfence base cost (ns)
+P_MC_BANKS = 10  # MC drain parallelism (banks); sustained drain = MC_PM/banks
+P_OB_BARRIER = 11  # remote cross-QP ordering barrier bubble for rofence (ns)
+P_QP_DEPTH = 12  # NIC pipeline depth hiding NT serialization (entries)
+P_NT_SERIAL = 13  # serialized per-line cost of an NT write beyond QP_DEPTH (ns)
+P_LLC_DDIO_LINES = 14  # lines the DDIO ways can buffer (2 MB / 64 B)
+P_RESERVED = 15
+
+N_PARAMS = 16
+
+# Strategy indices in the kernel output lat[n, 4].
+S_NOSM = 0
+S_RC = 1
+S_OB = 2
+S_DD = 3
+
+N_STRATEGIES = 4
+
+
+def default_params():
+    """Paper §6.1 / Table 2 platform defaults (see DESIGN.md §6)."""
+    p = [0.0] * N_PARAMS
+    p[P_RTT] = 2600.0
+    p[P_GAP] = 150.0
+    p[P_NQP] = 4.0
+    p[P_PCIE_RT] = 200.0
+    p[P_LLC_MC] = 10.0
+    p[P_MC_PM] = 150.0
+    p[P_MCQ] = 64.0
+    p[P_STORE] = 10.0
+    p[P_FLUSH] = 25.0
+    p[P_SFENCE] = 20.0
+    p[P_MC_BANKS] = 4.0
+    p[P_OB_BARRIER] = 75.0
+    p[P_QP_DEPTH] = 64.0
+    p[P_NT_SERIAL] = 210.0  # PCIe_RT + LLC_MC: non-posted ordered NT write
+    p[P_LLC_DDIO_LINES] = 32768.0  # 2 MB / 64 B
+    return p

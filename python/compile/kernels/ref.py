@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+These are the correctness references: `latency.py` and `cache_index.py` must
+produce fp32-exact results against these under pytest + hypothesis sweeps.
+
+The latency model is the closed-form counterpart of the rust discrete-event
+simulator: per (epochs/txn, writes/epoch) configuration it predicts the
+per-transaction latency of the four replication strategies of the paper
+(NO-SM, SM-RC, SM-OB, SM-DD). See DESIGN.md §5-§6 for the derivation and the
+parameter meanings.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import params as P
+
+
+def latency_ref(e, w, p):
+    """Closed-form per-transaction latency (ns) for each strategy.
+
+    Args:
+      e: f32[n] — epochs per transaction.
+      w: f32[n] — writes per epoch.
+      p: f32[16] — platform parameter vector (see params.py).
+
+    Returns:
+      f32[n, 4] — latency for [NO-SM, SM-RC, SM-OB, SM-DD].
+    """
+    e = jnp.asarray(e, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+
+    rtt = p[P.P_RTT]
+    gap = p[P.P_GAP]
+    nqp = p[P.P_NQP]
+    llc_mc = p[P.P_LLC_MC]
+    mc_pm = p[P.P_MC_PM]
+    store = p[P.P_STORE]
+    flush = p[P.P_FLUSH]
+    sfence = p[P.P_SFENCE]
+    banks = p[P.P_MC_BANKS]
+    ob_barrier = p[P.P_OB_BARRIER]
+    qp_depth = p[P.P_QP_DEPTH]
+    nt_serial = p[P.P_NT_SERIAL]
+    ddio_lines = p[P.P_LLC_DDIO_LINES]
+
+    n = e * w  # total persistent writes per transaction
+
+    # --- NO-SM: local persistence only. Per epoch the thread issues w
+    # store+clwb pairs, then the sfence waits for the tagged lines to reach
+    # the MC write queue (persistence domain boundary under ADR).
+    local_epoch = w * (store + flush) + sfence + w * llc_mc
+    lat_nosm = e * local_epoch
+
+    # --- SM-RC: per epoch, w async RDMA writes then a *blocking* rcommit
+    # (RTT + drain of the touched lines from the remote LLC into the MC
+    # queue + the last line's PM landing). Local work overlaps the remote
+    # write burst but not the blocking fence.
+    rc_remote_epoch = w * gap + rtt + w * llc_mc + mc_pm
+    lat_rc = e * jnp.maximum(local_epoch, rc_remote_epoch)
+
+    # --- SM-OB: rwtw writes round-robined over nqp QPs (issue gap/nqp),
+    # one posted rofence WQE per epoch plus a remote cross-QP ordering
+    # barrier bubble; the LLC DDIO ways buffer up to `ddio_lines` in flight;
+    # the MC drains write-through traffic at mc_pm/banks sustained. The
+    # single blocking point is the rdfence at the end (RTT + residual drain).
+    ob_issue = n * (gap / nqp) + e * (gap / nqp + ob_barrier)
+    ob_drain = n * (mc_pm / banks)
+    # Beyond the DDIO buffering capacity the NIC itself is gated by drain.
+    ob_overflow = jnp.maximum(0.0, n - ddio_lines) * (mc_pm / banks)
+    lat_ob = (
+        jnp.maximum(jnp.maximum(ob_issue, e * local_epoch), ob_drain)
+        + ob_overflow
+        + rtt
+        + mc_pm  # rdfence: last-line PM landing (rcommit-like drain tail)
+    )
+
+    # --- SM-DD: every write is an rntw on a *single* QP (no QP parallelism:
+    # full per-WQE gap). Ordering without DDIO forces serialized (non-posted)
+    # PCIe transactions at the remote NIC; the NIC pipeline hides that
+    # serialization for the first qp_depth writes, after which the effective
+    # per-line cost is nt_serial. Durability is a single RDMA read (RTT).
+    dd_issue = n * gap
+    dd_serial = jnp.maximum(0.0, n - qp_depth) * jnp.maximum(0.0, nt_serial - gap)
+    lat_dd = jnp.maximum(e * local_epoch, dd_issue + dd_serial) + rtt
+
+    return jnp.stack([lat_nosm, lat_rc, lat_ob, lat_dd], axis=-1)
+
+
+def slowdowns_ref(e, w, p):
+    """Slowdown of each SM strategy over NO-SM. Returns f32[n, 3] ordered
+    [SM-RC, SM-OB, SM-DD] (paper Figure 4 series)."""
+    lat = latency_ref(e, w, p)
+    base = lat[..., P.S_NOSM : P.S_NOSM + 1]
+    return lat[..., 1:] / base
+
+
+def cache_index_ref(addr, masks, sets_per_slice):
+    """Intel complex-addressing LLC set mapping (Maurice et al. [41]).
+
+    Args:
+      addr: uint64[n] — physical line addresses.
+      masks: uint64[k] — per-slice-bit XOR masks; slice bit i =
+        parity(popcount(addr & masks[i])).
+      sets_per_slice: int — power of two.
+
+    Returns:
+      int32[n] — global set index = slice * sets_per_slice + local set.
+    """
+    addr = jnp.asarray(addr, jnp.uint64)
+    masks = jnp.asarray(masks, jnp.uint64)
+    bits = jax.lax.population_count(addr[:, None] & masks[None, :]) & jnp.uint64(1)
+    k = masks.shape[0]
+    weights = (jnp.uint64(1) << jnp.arange(k, dtype=jnp.uint64))[None, :]
+    slice_idx = jnp.sum(bits * weights, axis=1)
+    local_set = (addr >> jnp.uint64(6)) & jnp.uint64(sets_per_slice - 1)
+    return (slice_idx * jnp.uint64(sets_per_slice) + local_set).astype(jnp.int32)

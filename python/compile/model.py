@@ -1,0 +1,68 @@
+"""L2: JAX compute graph combining the L1 kernels.
+
+Two exported entry points (AOT-lowered by aot.py to HLO text for the rust
+PJRT runtime):
+
+  * `strategy_model(e, w, p)` — per-config latencies AND slowdowns for the
+    four strategies; the rust SM-AD adaptive strategy and the `analytic` CLI
+    evaluate this to pick SM-OB vs SM-DD per transaction class and to
+    regenerate the Figure-4 prediction.
+  * `cache_index_model(addr, masks, meta)` — bulk trace annotation.
+
+Shapes are static for AOT (rust pads batches to MODEL_N / INDEX_N).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import cache_index as ci
+from .kernels import latency as lat
+from .kernels import params as P
+
+# Static AOT batch sizes (rust pads to these; see rust/src/runtime/).
+MODEL_N = 256
+INDEX_N = 1024
+
+
+def strategy_model(e, w, p):
+    """f32[N],f32[N],f32[16] -> (f32[N,4] latencies, f32[N,3] slowdowns)."""
+    l = lat.latency(e, w, p)
+    slow = l[:, 1:] / jnp.maximum(l[:, :1], 1.0)
+    return l, slow
+
+
+def cache_index_model(addr, masks, meta):
+    """u64[N], u64[8], u64[2] -> i32[N]. meta = [sets_per_slice, k]."""
+    # Meta is a traced operand, but sets_per_slice is needed inside the
+    # kernel as data — cache_index takes it as a python int for mask
+    # padding only; here masks are already padded to 8 by the caller.
+    import jax
+    from jax.experimental import pallas as pl
+
+    grid = (addr.shape[0] // ci.BLOCK,)
+    return pl.pallas_call(
+        ci._cache_index_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ci.N_MASKS,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((ci.BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((ci.BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((addr.shape[0],), jnp.int32),
+        interpret=True,
+    )(masks, meta, addr)
+
+
+def fig4_grid():
+    """The paper's Figure-4 sweep grid: e in {1,4,16,64,256} x w in
+    {1,2,4,8}. Returns (e, w) f32 arrays of length 20."""
+    es, ws = [], []
+    for e in (1, 4, 16, 64, 256):
+        for w in (1, 2, 4, 8):
+            es.append(float(e))
+            ws.append(float(w))
+    return jnp.array(es, jnp.float32), jnp.array(ws, jnp.float32)
+
+
+def default_params():
+    return jnp.array(P.default_params(), jnp.float32)

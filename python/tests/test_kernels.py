@@ -1,0 +1,174 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and parameter values; golden tests pin the paper's
+qualitative Figure-4 shape (who wins, where the crossover falls).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import cache_index as ci
+from compile.kernels import latency as lk
+from compile.kernels import params as P
+from compile.kernels import ref
+
+DEFAULT_P = jnp.array(P.default_params(), jnp.float32)
+
+
+# ---------------------------------------------------------------- latency
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    n=st.integers(1, 700),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_latency_matches_ref_random_configs(n, seed):
+    rng = np.random.default_rng(seed)
+    e = jnp.asarray(rng.integers(1, 512, n), jnp.float32)
+    w = jnp.asarray(rng.integers(1, 16, n), jnp.float32)
+    got = lk.latency(e, w, DEFAULT_P)
+    want = ref.latency_ref(e, w, DEFAULT_P)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rtt=st.floats(500, 10000),
+    gap=st.floats(10, 500),
+    nqp=st.integers(1, 16),
+    mc_pm=st.floats(50, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_latency_matches_ref_random_platforms(rtt, gap, nqp, mc_pm, seed):
+    p = np.array(P.default_params(), np.float32)
+    p[P.P_RTT] = rtt
+    p[P.P_GAP] = gap
+    p[P.P_NQP] = nqp
+    p[P.P_MC_PM] = mc_pm
+    p = jnp.asarray(p)
+    rng = np.random.default_rng(seed)
+    e = jnp.asarray(rng.integers(1, 300, 64), jnp.float32)
+    w = jnp.asarray(rng.integers(1, 9, 64), jnp.float32)
+    got = lk.latency(e, w, p)
+    want = ref.latency_ref(e, w, p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_latency_handles_non_block_multiple():
+    # Padding path: n not a multiple of BLOCK.
+    e = jnp.array([1.0, 4.0, 16.0])
+    w = jnp.array([1.0, 1.0, 2.0])
+    got = lk.latency(e, w, DEFAULT_P)
+    want = ref.latency_ref(e, w, DEFAULT_P)
+    assert got.shape == (3, 4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_all_latencies_positive_and_ordered():
+    e, w = np.meshgrid(np.arange(1, 65), np.arange(1, 9))
+    e = jnp.asarray(e.ravel(), jnp.float32)
+    w = jnp.asarray(w.ravel(), jnp.float32)
+    lat = np.asarray(lk.latency(e, w, DEFAULT_P))
+    assert (lat > 0).all()
+    # Every SM strategy is at least as slow as NO-SM.
+    assert (lat[:, 1:] >= lat[:, :1] - 1e-3).all()
+    # SM-RC is never the fastest SM strategy (paper: RC worst everywhere).
+    assert (lat[:, P.S_RC] >= lat[:, P.S_OB] - 1e-3).all()
+    assert (lat[:, P.S_RC] >= lat[:, P.S_DD] - 1e-3).all()
+
+
+def test_fig4_shape_rc_band():
+    """Paper: SM-RC slowdowns range ~20x-55x, worst at w=1, easing with w."""
+    e = jnp.array([1, 4, 16, 64, 256] * 4, jnp.float32)
+    w = jnp.array([1] * 5 + [2] * 5 + [4] * 5 + [8] * 5, jnp.float32)
+    s = np.asarray(lk.slowdowns(e, w, DEFAULT_P))
+    rc = s[:, 0]
+    assert rc.max() > 20, "RC worst case should exceed 20x"
+    assert rc.max() < 80
+    # Monotone easing with writes/epoch at fixed e.
+    assert rc[0] > rc[5] > rc[10] > rc[15]
+
+
+def test_fig4_shape_ob_dd_crossover():
+    """Paper: DD better for few epochs/txn, OB better for many (fixed w)."""
+    e = jnp.array([1.0, 4.0, 256.0])
+    w = jnp.ones(3, jnp.float32)
+    lat = np.asarray(lk.latency(e, w, DEFAULT_P))
+    assert lat[0, P.S_DD] < lat[0, P.S_OB], "DD should win at e=1,w=1"
+    assert lat[1, P.S_DD] < lat[1, P.S_OB], "DD should win at e=4,w=1"
+    assert lat[2, P.S_OB] < lat[2, P.S_DD], "OB should win at e=256,w=1"
+
+
+def test_fig4_ob_dd_beat_rc_by_up_to_3_5x():
+    """Paper: OB/DD outperform RC by as much as ~3.5x (Transact 4-1)."""
+    e = jnp.array([4.0])
+    w = jnp.array([1.0])
+    lat = np.asarray(lk.latency(e, w, DEFAULT_P))[0]
+    assert lat[P.S_RC] / lat[P.S_DD] > 2.5
+    assert lat[P.S_RC] / lat[P.S_OB] > 2.5
+
+
+def test_slowdowns_match_ref():
+    e = jnp.array([1, 4, 16, 64, 256] * 4, jnp.float32)
+    w = jnp.array([1] * 5 + [2] * 5 + [4] * 5 + [8] * 5, jnp.float32)
+    got = np.asarray(lk.slowdowns(e, w, DEFAULT_P))
+    want = np.asarray(ref.slowdowns_ref(e, w, DEFAULT_P))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ------------------------------------------------------------ cache_index
+
+INTEL_MASKS = [0x1B5F575440, 0x2EB5FAA880, 0x3CCCC93100]  # Maurice et al. [41]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(1, 2000),
+    nbits=st.integers(28, 46),
+    k=st.integers(1, 8),
+    sets_log2=st.integers(6, 13),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cache_index_matches_ref(n, nbits, k, sets_log2, seed):
+    rng = np.random.default_rng(seed)
+    addr = jnp.asarray(rng.integers(0, 1 << nbits, n, dtype=np.uint64))
+    masks = jnp.asarray(rng.integers(0, 1 << nbits, k, dtype=np.uint64))
+    sets = 1 << sets_log2
+    got = ci.cache_index(addr, masks, sets)
+    want = ref.cache_index_ref(addr, masks, sets)
+    assert bool(jnp.all(got == want))
+
+
+def test_cache_index_intel_masks_in_range():
+    rng = np.random.default_rng(7)
+    addr = jnp.asarray(rng.integers(0, 1 << 38, 4096, dtype=np.uint64))
+    masks = jnp.asarray(np.array(INTEL_MASKS, np.uint64))
+    out = np.asarray(ci.cache_index(addr, masks, 2048))
+    assert out.min() >= 0
+    assert out.max() < 8 * 2048  # 8 slices x 2048 sets
+
+
+def test_cache_index_uniformity():
+    """The complex hash should spread sequential lines across slices."""
+    addr = jnp.asarray(np.arange(0, 8192 * 64, 64, dtype=np.uint64))
+    masks = jnp.asarray(np.array(INTEL_MASKS, np.uint64))
+    out = np.asarray(ci.cache_index(addr, masks, 2048))
+    slices = out // 2048
+    counts = np.bincount(slices, minlength=8)
+    assert counts.min() > 0.5 * counts.mean()
+
+
+def test_cache_index_deterministic():
+    addr = jnp.asarray(np.array([0, 64, 128, 1 << 33], np.uint64))
+    masks = jnp.asarray(np.array(INTEL_MASKS, np.uint64))
+    a = np.asarray(ci.cache_index(addr, masks, 2048))
+    b = np.asarray(ci.cache_index(addr, masks, 2048))
+    assert (a == b).all()

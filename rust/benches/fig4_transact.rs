@@ -1,0 +1,62 @@
+//! Figure-4 bench: regenerates the Transact slowdown table (paper §7.1)
+//! and times the simulator itself (elements/s = simulated line writes/s).
+//!
+//! Run: `cargo bench --bench fig4_transact`
+//! Scale with PMSM_BENCH_TXNS (default 20000 committed writes per cell)
+//! and PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::cli::fig4_sweep;
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::metrics::report::fig4_table;
+use pmsm::workloads::{run_transact, TransactConfig};
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+    let plat = Platform::default();
+
+    // ---- The paper's figure: full e x w grid.
+    let rows = fig4_sweep(&plat, txns, 1);
+    println!("{}", fig4_table(&rows, None));
+
+    // Shape summary (who wins, by roughly what factor).
+    let rc_max = rows.iter().map(|r| r.rc).fold(0.0, f64::max);
+    let rc_min = rows.iter().map(|r| r.rc).fold(f64::MAX, f64::min);
+    println!("SM-RC slowdown band: {rc_min:.1}x ..= {rc_max:.1}x (paper: ~20x-55x)");
+    // The paper quotes the 4-1 cell ("as much as 3.5x"); also report the
+    // grid-wide maximum for context.
+    let cell41 = rows
+        .iter()
+        .find(|r| r.epochs == 4 && r.writes == 1)
+        .expect("4-1 cell");
+    let grid_max = rows
+        .iter()
+        .map(|r| r.rc / r.ob.min(r.dd))
+        .fold(0.0, f64::max);
+    println!(
+        "OB/DD gain over RC at 4-1: {:.1}x (paper: ~3.5x); grid max: {grid_max:.1}x\n",
+        cell41.rc / cell41.ob.min(cell41.dd)
+    );
+
+    // ---- Simulator throughput (perf tracking, EXPERIMENTS.md §Perf).
+    let mut b = Bencher::new();
+    for (e, w) in [(4u32, 1u32), (64, 1), (16, 8)] {
+        for kind in StrategyKind::ALL {
+            let cfg = TransactConfig {
+                epochs: e,
+                writes: w,
+                txns: (txns / (e as u64 * w as u64)).max(50),
+                ..Default::default()
+            };
+            let writes = cfg.txns * e as u64 * w as u64;
+            b.bench_elems(
+                &format!("transact/{e}-{w}/{kind}"),
+                writes as f64,
+                || run_transact(&plat, kind, cfg).makespan,
+            );
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! Figure-5 bench: regenerates the WHISPER execution-time (5a) and
+//! throughput (5b) tables plus the headline H1 summary, and times the
+//! simulator on each app.
+//!
+//! Run: `cargo bench --bench fig5_whisper`
+//! Scale with PMSM_BENCH_OPS (transactions per thread, default 1000).
+
+use pmsm::bench::Bencher;
+use pmsm::cli::fig5_suite;
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::metrics::report::fig5_tables;
+use pmsm::workloads::{run_whisper, WhisperApp, WhisperConfig};
+
+fn main() {
+    let ops: u64 = std::env::var("PMSM_BENCH_OPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000);
+    let plat = Platform::default();
+
+    // ---- The paper's figure: all five apps x strategies, 4 threads.
+    let rows = fig5_suite(&plat, ops, 4, None);
+    println!("{}", fig5_tables(&rows));
+
+    // ---- Simulator throughput per app (EXPERIMENTS.md §Perf).
+    let mut b = Bencher::new();
+    for app in WhisperApp::ALL {
+        let cfg = WhisperConfig {
+            app,
+            ops: (ops / 4).max(50),
+            threads: 4,
+            seed: 42,
+        };
+        for kind in [StrategyKind::NoSm, StrategyKind::SmDd] {
+            b.bench(&format!("whisper/{app}/{kind}"), || {
+                run_whisper(&plat, kind, cfg).makespan
+            });
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Mini benchmark harness (the offline registry has no `criterion`).
+//!
+//! Provides warmup + timed iterations with mean/stddev/min reporting and a
+//! `harness = false` entry-point helper used by `rust/benches/*.rs`.
+
+use crate::util::Summary;
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elems_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<40} {:>12} /iter (±{:>10}, min {:>12}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+            fmt_ns(self.min_ns),
+            self.iters,
+        );
+        if let Some(e) = self.elems_per_iter {
+            let per_sec = e / (self.mean_ns * 1e-9);
+            s.push_str(&format!("  [{} elem/s]", fmt_count(per_sec)));
+        }
+        s
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+fn fmt_count(c: f64) -> String {
+    if c >= 1e9 {
+        format!("{:.2}G", c / 1e9)
+    } else if c >= 1e6 {
+        format!("{:.2}M", c / 1e6)
+    } else if c >= 1e3 {
+        format!("{:.2}K", c / 1e3)
+    } else {
+        format!("{c:.0}")
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    warmup_iters: u64,
+    measure_iters: u64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Respect PMSM_BENCH_ITERS for quick smoke runs.
+        let iters = std::env::var("PMSM_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10);
+        Bencher {
+            warmup_iters: 2.min(iters),
+            measure_iters: iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` and record wall-clock stats. `f` returns an opaque value to
+    /// defeat dead-code elimination.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.bench_with_elems(name, None, &mut f)
+    }
+
+    /// Like [`Bencher::bench`] with a throughput denominator.
+    pub fn bench_elems<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elems: f64,
+        mut f: F,
+    ) -> &BenchResult {
+        self.bench_with_elems(name, Some(elems), &mut f)
+    }
+
+    fn bench_with_elems<T>(
+        &mut self,
+        name: &str,
+        elems: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.measure_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            s.add(t0.elapsed().as_nanos() as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: s.count(),
+            mean_ns: s.mean(),
+            stddev_ns: s.stddev(),
+            min_ns: s.min(),
+            elems_per_iter: elems,
+        };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("PMSM_BENCH_ITERS", "3");
+        let mut b = Bencher::new();
+        let r = b.bench("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.mean_ns > 0.0);
+        assert_eq!(r.iters, 3);
+        std::env::remove_var("PMSM_BENCH_ITERS");
+    }
+
+    #[test]
+    fn formatting_scales() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.500 µs");
+        assert_eq!(fmt_ns(2_000_000.0), "2.000 ms");
+        assert_eq!(fmt_ns(3e9), "3.000 s");
+        assert_eq!(fmt_count(5_000_000.0), "5.00M");
+    }
+}

@@ -1,0 +1,471 @@
+//! Command-line interface (hand-rolled; no `clap` in the offline
+//! registry).
+//!
+//! Subcommands:
+//!   * `run`      — one experiment (strategy x workload), prints stats.
+//!   * `sweep`    — the Figure-4 Transact sweep (`--crossover`,
+//!                  `--ablate` for the A1/A2 ablations).
+//!   * `whisper`  — the Figure-5 WHISPER suite.
+//!   * `analytic` — evaluate the AOT latency model via PJRT
+//!                  (`--validate` cross-checks model vs simulator).
+//!   * `recover`  — failure injection + recovery check.
+//!   * `config`   — print the platform (Table 2).
+//!   * `selftest` — Table 1 + quick invariant checks.
+
+use crate::config::{Experiment, Platform, StrategyKind};
+use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
+use crate::recovery;
+use crate::runtime::{fallback_predictor, LatencyModel};
+use crate::workloads::{run_transact, run_whisper, TransactConfig, WhisperApp, WhisperConfig};
+use anyhow::{bail, Context, Result};
+
+/// Parsed flag set: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key value` unless the next token is another flag or
+                // missing -> boolean flag.
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    args.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    args.options.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        args
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+}
+
+/// Top-level dispatch.
+pub fn main_with_args(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "whisper" => cmd_whisper(&args),
+        "analytic" => cmd_analytic(&args),
+        "recover" => cmd_recover(&args),
+        "config" => cmd_config(&args),
+        "selftest" => cmd_selftest(&args),
+        "help" | "-h" | "--help" => {
+            println!("{}", help_text());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{}", help_text()),
+    }
+}
+
+pub fn help_text() -> &'static str {
+    "pmsm — RDMA-based synchronous mirroring of persistent memory (repro)\n\
+     \n\
+     USAGE: pmsm <command> [options]\n\
+     \n\
+     COMMANDS:\n\
+       run       --strategy no-sm|sm-rc|sm-ob|sm-dd|sm-ad --workload transact|<app>\n\
+                 [--epochs N --writes N --txns N --threads N --config FILE]\n\
+       sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
+       whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
+       analytic  AOT latency model via PJRT [--validate]\n\
+       recover   failure injection + recovery check [--strategy S --txns N]\n\
+       config    print platform model parameters (Table 2)\n\
+       selftest  Table-1 transformations + invariant smoke checks\n"
+}
+
+fn platform_from(args: &Args) -> Result<Platform> {
+    match args.get("config") {
+        Some(path) => Ok(Experiment::from_file(path)?.platform),
+        None => Ok(Platform::default()),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let plat = platform_from(args)?;
+    let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
+    let workload = args.get("workload").unwrap_or("transact");
+    let threads = args.get_usize("threads", 1)?;
+
+    let outcome = if workload == "transact" {
+        let cfg = TransactConfig {
+            epochs: args.get_u64("epochs", 4)? as u32,
+            writes: args.get_u64("writes", 1)? as u32,
+            txns: args.get_u64("txns", 10_000)?,
+            threads,
+            seed: args.get_u64("seed", 42)?,
+            ..Default::default()
+        };
+        println!(
+            "transact {}-{} x {} txns, {} threads, strategy {}",
+            cfg.epochs, cfg.writes, cfg.txns, cfg.threads, strategy
+        );
+        if strategy == StrategyKind::SmAd {
+            let predictor = match LatencyModel::load(&plat) {
+                Ok(m) => m.predictor()?,
+                Err(e) => {
+                    eprintln!("note: PJRT model unavailable ({e}); using fallback");
+                    fallback_predictor(&plat)
+                }
+            };
+            crate::workloads::transact::run_transact_adaptive(&plat, predictor, cfg)
+        } else {
+            run_transact(&plat, strategy, cfg)
+        }
+    } else {
+        let app = WhisperApp::parse(workload)
+            .with_context(|| format!("unknown workload {workload:?}"))?;
+        let cfg = WhisperConfig {
+            app,
+            ops: args.get_u64("ops", 2_000)?,
+            threads: args.get_usize("threads", 4)?,
+            seed: args.get_u64("seed", 42)?,
+        };
+        println!(
+            "whisper {} x {} ops, {} threads, strategy {}",
+            app, cfg.ops, cfg.threads, strategy
+        );
+        run_whisper(&plat, strategy, cfg)
+    };
+
+    println!("  makespan      : {:.3} ms", outcome.makespan as f64 / 1e6);
+    println!("  transactions  : {}", outcome.txns);
+    println!("  writes        : {}", outcome.writes);
+    println!("  epochs/txn    : {:.1}", outcome.epochs_per_txn());
+    println!("  writes/epoch  : {:.2}", outcome.writes_per_epoch());
+    println!("  throughput    : {:.0} txn/s", outcome.txn_per_sec());
+    Ok(())
+}
+
+/// Figure-4 grid used across sweep/bench/analytic commands.
+pub const FIG4_EPOCHS: [u32; 5] = [1, 4, 16, 64, 256];
+pub const FIG4_WRITES: [u32; 4] = [1, 2, 4, 8];
+
+/// Run the Figure-4 sweep; returns the measured rows.
+pub fn fig4_sweep(plat: &Platform, txns: u64, threads: usize) -> Vec<Fig4Row> {
+    let mut rows = Vec::new();
+    for &w in &FIG4_WRITES {
+        for &e in &FIG4_EPOCHS {
+            // Keep total writes roughly constant across configs.
+            let t = (txns / (e as u64 * w as u64)).max(20);
+            let cfg = TransactConfig {
+                epochs: e,
+                writes: w,
+                txns: t,
+                threads,
+                ..Default::default()
+            };
+            let base = run_transact(plat, StrategyKind::NoSm, cfg).makespan as f64;
+            let rc = run_transact(plat, StrategyKind::SmRc, cfg).makespan as f64;
+            let ob = run_transact(plat, StrategyKind::SmOb, cfg).makespan as f64;
+            let dd = run_transact(plat, StrategyKind::SmDd, cfg).makespan as f64;
+            rows.push(Fig4Row {
+                epochs: e,
+                writes: w,
+                rc: rc / base,
+                ob: ob / base,
+                dd: dd / base,
+            });
+        }
+    }
+    rows
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let plat = platform_from(args)?;
+    let txns = args.get_u64("txns", 20_000)?;
+    let threads = args.get_usize("threads", 1)?;
+    let rows = fig4_sweep(&plat, txns, threads);
+    println!("{}", fig4_table(&rows, None));
+
+    if args.flag("crossover") {
+        println!("A1 — OB/DD crossover (w=1):");
+        for r in rows.iter().filter(|r| r.writes == 1) {
+            let winner = if r.ob < r.dd { "SM-OB" } else { "SM-DD" };
+            println!(
+                "  e={:<4} OB {:5.1}x DD {:5.1}x  -> {winner}",
+                r.epochs, r.ob, r.dd
+            );
+        }
+    }
+    if args.flag("ablate") {
+        println!("\nA2 — sensitivity ablations (Transact 64-1):");
+        let cfg = TransactConfig {
+            epochs: 64,
+            writes: 1,
+            txns: 500,
+            threads,
+            ..Default::default()
+        };
+        for mcq in [16usize, 64, 256] {
+            let mut p = plat.clone();
+            p.mcq = mcq;
+            let s = crate::workloads::transact::slowdown(&p, StrategyKind::SmDd, cfg);
+            println!("  mcq={mcq:<4}         SM-DD {s:5.1}x");
+        }
+        for ddio in [1usize, 2, 4, 8] {
+            let mut p = plat.clone();
+            p.ddio_ways = ddio;
+            let s = crate::workloads::transact::slowdown(&p, StrategyKind::SmOb, cfg);
+            println!("  ddio_ways={ddio:<2}     SM-OB {s:5.1}x");
+        }
+        for barrier in [25u64, 75, 150, 300] {
+            let mut p = plat.clone();
+            p.ob_barrier = barrier;
+            let s = crate::workloads::transact::slowdown(&p, StrategyKind::SmOb, cfg);
+            println!("  ob_barrier={barrier:<4}  SM-OB {s:5.1}x");
+        }
+        for nt in [110u64, 150, 210, 400] {
+            let mut p = plat.clone();
+            p.nt_serial = nt;
+            let s = crate::workloads::transact::slowdown(&p, StrategyKind::SmDd, cfg);
+            println!("  nt_serial={nt:<4}   SM-DD {s:5.1}x");
+        }
+    }
+    Ok(())
+}
+
+/// Run the Figure-5 suite; returns per-app rows.
+pub fn fig5_suite(
+    plat: &Platform,
+    ops: u64,
+    threads: usize,
+    only: Option<WhisperApp>,
+) -> Vec<Fig5Row> {
+    let mut rows = Vec::new();
+    for app in WhisperApp::ALL {
+        if let Some(o) = only {
+            if app != o {
+                continue;
+            }
+        }
+        // Echo batches ~64 updates per txn: scale op count down.
+        let app_ops = if app == WhisperApp::Echo {
+            (ops / 16).max(10)
+        } else {
+            ops
+        };
+        let cfg = WhisperConfig {
+            app,
+            ops: app_ops,
+            threads,
+            seed: 42,
+        };
+        let base = run_whisper(plat, StrategyKind::NoSm, cfg);
+        let rc = run_whisper(plat, StrategyKind::SmRc, cfg);
+        let ob = run_whisper(plat, StrategyKind::SmOb, cfg);
+        let dd = run_whisper(plat, StrategyKind::SmDd, cfg);
+        let b = base.makespan as f64;
+        rows.push(Fig5Row {
+            app: app.name().to_string(),
+            time_rc: rc.makespan as f64 / b,
+            time_ob: ob.makespan as f64 / b,
+            time_dd: dd.makespan as f64 / b,
+            tput_rc: rc.txn_per_sec() / base.txn_per_sec(),
+            tput_ob: ob.txn_per_sec() / base.txn_per_sec(),
+            tput_dd: dd.txn_per_sec() / base.txn_per_sec(),
+        });
+    }
+    rows
+}
+
+fn cmd_whisper(args: &Args) -> Result<()> {
+    let plat = platform_from(args)?;
+    let ops = args.get_u64("ops", 2_000)?;
+    let threads = args.get_usize("threads", 4)?;
+    let only = match args.get("app") {
+        Some(name) => {
+            Some(WhisperApp::parse(name).with_context(|| format!("unknown app {name:?}"))?)
+        }
+        None => None,
+    };
+    let rows = fig5_suite(&plat, ops, threads, only);
+    println!("{}", fig5_tables(&rows));
+    Ok(())
+}
+
+fn cmd_analytic(args: &Args) -> Result<()> {
+    let plat = platform_from(args)?;
+    let model = LatencyModel::load(&plat)?;
+    let mut e = Vec::new();
+    let mut w = Vec::new();
+    for &wi in &FIG4_WRITES {
+        for &ei in &FIG4_EPOCHS {
+            e.push(ei as f32);
+            w.push(wi as f32);
+        }
+    }
+    let (_, slow) = model.predict(&e, &w)?;
+    let pred: Vec<Fig4Row> = e
+        .iter()
+        .zip(&w)
+        .zip(&slow)
+        .map(|((&e, &w), s)| Fig4Row {
+            epochs: e as u32,
+            writes: w as u32,
+            rc: s[0] as f64,
+            ob: s[1] as f64,
+            dd: s[2] as f64,
+        })
+        .collect();
+
+    if args.flag("validate") {
+        let txns = args.get_u64("txns", 5_000)?;
+        let meas = fig4_sweep(&plat, txns, 1);
+        println!("{}", fig4_table(&meas, Some(&pred)));
+        // A3: model-vs-simulator agreement.
+        let mut winners_agree = 0;
+        for (m, p) in meas.iter().zip(&pred) {
+            if (m.ob < m.dd) == (p.ob < p.dd) {
+                winners_agree += 1;
+            }
+        }
+        println!(
+            "A3 cross-validation: OB/DD winner agreement {}/{} cells",
+            winners_agree,
+            meas.len()
+        );
+    } else {
+        println!("{}", fig4_table(&pred, None));
+    }
+    Ok(())
+}
+
+fn cmd_recover(args: &Args) -> Result<()> {
+    let plat = platform_from(args)?;
+    let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
+    let txns = args.get_u64("txns", 10)?;
+    use crate::coordinator::{Mirror, ThreadCtx};
+    use crate::txn::Txn;
+
+    let mut m = Mirror::new(plat, strategy, true);
+    let mut t = ThreadCtx::new(0);
+    let log = crate::pstore::log_base_for(0);
+    let d0 = 0x20_0000u64;
+    let d1 = 0x20_0040u64;
+    let mut hist = recovery::TxnHistory::new(Default::default());
+    for i in 0..txns {
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        tx.write(&mut m, &mut t, d0, 100 + i);
+        tx.write(&mut m, &mut t, d1, 200 + i);
+        tx.commit(&mut m, &mut t);
+        let mut snap = std::collections::HashMap::new();
+        snap.insert(d0, 100 + i);
+        snap.insert(d1, 200 + i);
+        hist.commit(snap, t.last_dfence);
+    }
+    let checked =
+        recovery::check_all_crashes(&m.rdma.remote.ledger, &hist, &[log], &[d0, d1])?;
+    recovery::check_epoch_ordering(&m.rdma.remote.ledger)?;
+    println!(
+        "recovery check [{strategy}]: {txns} txns, {} ledger events, \
+         {checked} crash points verified — failure atomicity + durability hold",
+        m.rdma.remote.ledger.len()
+    );
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    let plat = platform_from(args)?;
+    println!("{}", plat.table2());
+    println!("\nAOT model parameter vector: {:?}", plat.to_param_vec());
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    println!("{}", crate::net::verbs::table1());
+    // Quick end-to-end invariant smoke: every strategy, small Transact.
+    let plat = platform_from(args)?;
+    for kind in StrategyKind::SM {
+        let cfg = TransactConfig {
+            epochs: 8,
+            writes: 2,
+            txns: 50,
+            ..Default::default()
+        };
+        let base = run_transact(&plat, StrategyKind::NoSm, cfg).makespan;
+        let sm = run_transact(&plat, kind, cfg).makespan;
+        anyhow::ensure!(sm > base, "{kind}: SM must cost more than NO-SM");
+        println!(
+            "selftest {kind}: slowdown {:.1}x — ok",
+            sm as f64 / base as f64
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_mixed() {
+        let argv: Vec<String> = ["run", "--strategy", "sm-ob", "--crossover", "--txns", "5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("strategy"), Some("sm-ob"));
+        assert!(a.flag("crossover"));
+        assert_eq!(a.get_u64("txns", 0).unwrap(), 5);
+        assert_eq!(a.get_u64("missing", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let argv = vec!["bogus".to_string()];
+        assert!(main_with_args(&argv).is_err());
+    }
+
+    #[test]
+    fn selftest_runs() {
+        main_with_args(&["selftest".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn recover_command_runs_for_all_strategies() {
+        for s in ["sm-rc", "sm-ob", "sm-dd"] {
+            main_with_args(&[
+                "recover".to_string(),
+                "--strategy".to_string(),
+                s.to_string(),
+                "--txns".to_string(),
+                "3".to_string(),
+            ])
+            .unwrap_or_else(|e| panic!("{s}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! Configuration system: typed configs + a TOML-subset parser.
+//!
+//! No `serde`/`toml` crates exist in the offline registry, so parsing is
+//! implemented in-repo (`toml.rs` — sections, scalars, arrays; enough for
+//! platform/workload files). Defaults mirror the paper's §6.1 model
+//! parameters and Table 2 platform, and are kept in lock-step with
+//! `python/compile/kernels/params.py` (the AOT model's parameter vector).
+
+pub mod platform;
+pub mod toml;
+
+pub use platform::{Platform, StrategyKind};
+
+use anyhow::{bail, Context, Result};
+
+/// Workload selection for the CLI / experiment driver.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkloadSpec {
+    /// Transact microbenchmark: epochs/txn, writes/epoch, #transactions.
+    Transact { epochs: u32, writes: u32, txns: u64 },
+    /// A WHISPER application by name (ctree|echo|hashmap|ycsb|tpcc).
+    Whisper { app: String, ops: u64, threads: usize },
+}
+
+/// Top-level experiment configuration.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub platform: Platform,
+    pub strategy: StrategyKind,
+    pub workload: WorkloadSpec,
+    pub seed: u64,
+    /// Record the durability ledger (needed for recovery checks; off for
+    /// large benches).
+    pub ledger: bool,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            platform: Platform::default(),
+            strategy: StrategyKind::NoSm,
+            workload: WorkloadSpec::Transact {
+                epochs: 4,
+                writes: 1,
+                txns: 10_000,
+            },
+            seed: 42,
+            ledger: false,
+        }
+    }
+}
+
+impl Experiment {
+    /// Load an experiment from a TOML-subset file.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_str(&text)
+    }
+
+    /// Parse from TOML-subset text.
+    pub fn from_str(text: &str) -> Result<Self> {
+        let doc = toml::parse(text)?;
+        let mut exp = Experiment::default();
+
+        exp.platform = Platform::from_doc(&doc)?;
+        if let Some(v) = doc.get("experiment.seed") {
+            exp.seed = v.as_int()? as u64;
+        }
+        if let Some(v) = doc.get("experiment.ledger") {
+            exp.ledger = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("experiment.strategy") {
+            exp.strategy = v.as_str()?.parse()?;
+        }
+        if let Some(v) = doc.get("workload.kind") {
+            match v.as_str()? {
+                "transact" => {
+                    let epochs = doc
+                        .get("workload.epochs")
+                        .map(|v| v.as_int())
+                        .transpose()?
+                        .unwrap_or(4) as u32;
+                    let writes = doc
+                        .get("workload.writes")
+                        .map(|v| v.as_int())
+                        .transpose()?
+                        .unwrap_or(1) as u32;
+                    let txns = doc
+                        .get("workload.txns")
+                        .map(|v| v.as_int())
+                        .transpose()?
+                        .unwrap_or(10_000) as u64;
+                    exp.workload = WorkloadSpec::Transact {
+                        epochs,
+                        writes,
+                        txns,
+                    };
+                }
+                "whisper" => {
+                    let app = doc
+                        .get("workload.app")
+                        .map(|v| v.as_str().map(str::to_string))
+                        .transpose()?
+                        .unwrap_or_else(|| "ctree".into());
+                    let ops = doc
+                        .get("workload.ops")
+                        .map(|v| v.as_int())
+                        .transpose()?
+                        .unwrap_or(10_000) as u64;
+                    let threads = doc
+                        .get("workload.threads")
+                        .map(|v| v.as_int())
+                        .transpose()?
+                        .unwrap_or(4) as usize;
+                    exp.workload = WorkloadSpec::Whisper { app, ops, threads };
+                }
+                other => bail!("unknown workload.kind {other:?}"),
+            }
+        }
+        Ok(exp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let exp = Experiment::default();
+        assert_eq!(exp.strategy, StrategyKind::NoSm);
+        assert_eq!(exp.seed, 42);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# experiment file
+[experiment]
+seed = 7
+strategy = "sm-ob"
+ledger = true
+
+[workload]
+kind = "transact"
+epochs = 16
+writes = 2
+txns = 500
+
+[platform]
+rtt = 2000
+nqp = 8
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.seed, 7);
+        assert_eq!(exp.strategy, StrategyKind::SmOb);
+        assert!(exp.ledger);
+        assert_eq!(
+            exp.workload,
+            WorkloadSpec::Transact {
+                epochs: 16,
+                writes: 2,
+                txns: 500
+            }
+        );
+        assert_eq!(exp.platform.rtt, 2000);
+        assert_eq!(exp.platform.nqp, 8);
+    }
+
+    #[test]
+    fn parse_whisper_config() {
+        let text = r#"
+[experiment]
+strategy = "sm-dd"
+[workload]
+kind = "whisper"
+app = "echo"
+ops = 123
+threads = 2
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(
+            exp.workload,
+            WorkloadSpec::Whisper {
+                app: "echo".into(),
+                ops: 123,
+                threads: 2
+            }
+        );
+    }
+
+    #[test]
+    fn bad_workload_kind_rejected() {
+        assert!(Experiment::from_str("[workload]\nkind = \"nope\"").is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! Platform model parameters — the paper's §6.1 model inputs + Table 2
+//! test-bed geometry, kept in lock-step with
+//! `python/compile/kernels/params.py` (see `to_param_vec`).
+
+use super::toml::Doc;
+use crate::Ns;
+use anyhow::{bail, Result};
+use std::str::FromStr;
+
+/// Replication strategy selector (paper §5 + our adaptive extension).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// Local persistence only (hypothetical upper bound).
+    NoSm,
+    /// SM using the remote-commit verb (Talpey & Pinkerton draft).
+    SmRc,
+    /// SM using ordered buffering (rwtw + rofence + rdfence) — ours.
+    SmOb,
+    /// SM with DDIO disabled (rntw on a single QP + read fence) — ours.
+    SmDd,
+    /// Model-driven adaptive OB/DD selection (extension, uses the AOT
+    /// latency model through PJRT).
+    SmAd,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 4] =
+        [Self::NoSm, Self::SmRc, Self::SmOb, Self::SmDd];
+    pub const SM: [StrategyKind; 3] = [Self::SmRc, Self::SmOb, Self::SmDd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::NoSm => "no-sm",
+            Self::SmRc => "sm-rc",
+            Self::SmOb => "sm-ob",
+            Self::SmDd => "sm-dd",
+            Self::SmAd => "sm-ad",
+        }
+    }
+}
+
+impl FromStr for StrategyKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "no-sm" | "nosm" | "none" => Self::NoSm,
+            "sm-rc" | "rc" => Self::SmRc,
+            "sm-ob" | "ob" => Self::SmOb,
+            "sm-dd" | "dd" => Self::SmDd,
+            "sm-ad" | "ad" | "adaptive" => Self::SmAd,
+            other => bail!("unknown strategy {other:?}"),
+        })
+    }
+}
+
+impl std::fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Default Intel complex-addressing slice-hash masks for an 8-slice LLC
+/// (Maurice et al., "Reverse engineering Intel last-level cache complex
+/// addressing using performance counters").
+pub const INTEL_8SLICE_MASKS: [u64; 3] =
+    [0x1B5F_5754_40, 0x2EB5_FAA8_80, 0x3CCC_C931_00];
+
+/// All model latencies in ns; geometry in entries/ways/lines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Platform {
+    // ---- network (ConnectX-3-like)
+    /// RDMA small-message round trip (ns).
+    pub rtt: Ns,
+    /// Per-WQE issue gap on one QP (ns).
+    pub gap: Ns,
+    /// QPs used by multi-QP strategies (SM-RC, SM-OB).
+    pub nqp: usize,
+    /// Per-WQE pipeline depth of a QP before posting stalls.
+    pub qp_depth: usize,
+    /// CPU cost to post a WQE / ring a doorbell (ns).
+    pub post_cost: Ns,
+    /// CPU cost of one CQ poll iteration (ns).
+    pub poll_cost: Ns,
+
+    // ---- PCIe / DDIO
+    /// PCIe write round trip to the LLC (ns) — paper: 200.
+    pub pcie_rt: Ns,
+    /// Occupancy of one posted PCIe write on the shared root-complex port
+    /// (pipelined burst rate, ns/line).
+    pub pcie_occ: Ns,
+    /// Serialized per-line cost of an ordered non-temporal (non-posted)
+    /// PCIe write beyond the NIC pipeline depth (ns).
+    pub nt_serial: Ns,
+
+    // ---- memory subsystem (paper §6.1)
+    /// LLC -> memory-controller queue transfer (ns) — paper: 10.
+    pub llc_mc: Ns,
+    /// MC queue -> PM write latency per line (ns) — paper: 150.
+    pub mc_pm: Ns,
+    /// MC write queue depth (entries) — paper: 64.
+    pub mcq: usize,
+    /// MC drain bank parallelism.
+    pub mc_banks: usize,
+
+    // ---- LLC geometry (Xeon E5-2630 v3: 20 MB, 20-way)
+    /// Cache slices.
+    pub llc_slices: usize,
+    /// Sets per slice.
+    pub llc_sets_per_slice: usize,
+    /// Ways per set.
+    pub llc_ways: usize,
+    /// Ways per set available to DDIO traffic — paper: 2 of 20.
+    pub ddio_ways: usize,
+    /// Slice-hash XOR masks.
+    pub slice_masks: Vec<u64>,
+
+    // ---- local CPU persistence path
+    /// Store issue (ns).
+    pub store: Ns,
+    /// clwb/clflush issue (ns).
+    pub flush: Ns,
+    /// sfence base cost (ns).
+    pub sfence: Ns,
+
+    // ---- strategy model constants
+    /// Remote cross-QP ordering barrier bubble charged per rofence (ns).
+    pub ob_barrier: Ns,
+}
+
+impl Default for Platform {
+    fn default() -> Self {
+        Platform {
+            rtt: 2600,
+            gap: 150,
+            nqp: 4,
+            qp_depth: 64,
+            post_cost: 30,
+            poll_cost: 20,
+            pcie_rt: 200,
+            pcie_occ: 25,
+            nt_serial: 210,
+            llc_mc: 10,
+            mc_pm: 150,
+            mcq: 64,
+            mc_banks: 4,
+            llc_slices: 8,
+            llc_sets_per_slice: 2048,
+            llc_ways: 20,
+            ddio_ways: 2,
+            slice_masks: INTEL_8SLICE_MASKS.to_vec(),
+            store: 10,
+            flush: 25,
+            sfence: 20,
+            ob_barrier: 75,
+        }
+    }
+}
+
+impl Platform {
+    /// Lines the DDIO ways can buffer across the whole LLC (paper: ~2 MB).
+    pub fn ddio_lines(&self) -> u64 {
+        (self.llc_slices * self.llc_sets_per_slice * self.ddio_ways) as u64
+    }
+
+    /// The f32[16] parameter vector consumed by the AOT latency model —
+    /// indices must match `python/compile/kernels/params.py`.
+    pub fn to_param_vec(&self) -> [f32; 16] {
+        let mut p = [0f32; 16];
+        p[0] = self.rtt as f32;
+        p[1] = self.gap as f32;
+        p[2] = self.nqp as f32;
+        p[3] = self.pcie_rt as f32;
+        p[4] = self.llc_mc as f32;
+        p[5] = self.mc_pm as f32;
+        p[6] = self.mcq as f32;
+        p[7] = self.store as f32;
+        p[8] = self.flush as f32;
+        p[9] = self.sfence as f32;
+        p[10] = self.mc_banks as f32;
+        p[11] = self.ob_barrier as f32;
+        p[12] = self.qp_depth as f32;
+        p[13] = self.nt_serial as f32;
+        p[14] = self.ddio_lines() as f32;
+        p
+    }
+
+    /// Override fields from a parsed config document (`[platform]` table).
+    pub fn from_doc(doc: &Doc) -> Result<Self> {
+        let mut p = Platform::default();
+        macro_rules! ns_field {
+            ($key:literal, $field:ident) => {
+                if let Some(v) = doc.get(concat!("platform.", $key)) {
+                    p.$field = v.as_int()? as Ns;
+                }
+            };
+        }
+        macro_rules! usize_field {
+            ($key:literal, $field:ident) => {
+                if let Some(v) = doc.get(concat!("platform.", $key)) {
+                    p.$field = v.as_int()? as usize;
+                }
+            };
+        }
+        ns_field!("rtt", rtt);
+        ns_field!("gap", gap);
+        ns_field!("pcie_rt", pcie_rt);
+        ns_field!("pcie_occ", pcie_occ);
+        ns_field!("nt_serial", nt_serial);
+        ns_field!("llc_mc", llc_mc);
+        ns_field!("mc_pm", mc_pm);
+        ns_field!("store", store);
+        ns_field!("flush", flush);
+        ns_field!("sfence", sfence);
+        ns_field!("ob_barrier", ob_barrier);
+        ns_field!("post_cost", post_cost);
+        ns_field!("poll_cost", poll_cost);
+        usize_field!("nqp", nqp);
+        usize_field!("qp_depth", qp_depth);
+        usize_field!("mcq", mcq);
+        usize_field!("mc_banks", mc_banks);
+        usize_field!("llc_slices", llc_slices);
+        usize_field!("llc_sets_per_slice", llc_sets_per_slice);
+        usize_field!("llc_ways", llc_ways);
+        usize_field!("ddio_ways", ddio_ways);
+        if let Some(v) = doc.get("platform.slice_masks") {
+            p.slice_masks = v.as_u64_array()?;
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Sanity-check invariants.
+    pub fn validate(&self) -> Result<()> {
+        if self.ddio_ways > self.llc_ways {
+            bail!(
+                "ddio_ways ({}) exceeds llc_ways ({})",
+                self.ddio_ways,
+                self.llc_ways
+            );
+        }
+        if !self.llc_sets_per_slice.is_power_of_two() {
+            bail!("llc_sets_per_slice must be a power of two");
+        }
+        if self.nqp == 0 || self.mcq == 0 || self.mc_banks == 0 {
+            bail!("nqp/mcq/mc_banks must be positive");
+        }
+        if (1usize << self.slice_masks.len().min(63)) < self.llc_slices {
+            bail!(
+                "{} slice masks cannot address {} slices",
+                self.slice_masks.len(),
+                self.llc_slices
+            );
+        }
+        Ok(())
+    }
+
+    /// Render a Table-2-style summary (experiment T2).
+    pub fn table2(&self) -> String {
+        format!(
+            "Platform (paper Table 2 analogue)\n\
+               network   : RDMA rtt={}ns gap={}ns nqp={} qp_depth={}\n\
+               pcie/ddio : pcie_rt={}ns nt_serial={}ns ddio_ways={}/{}\n\
+               llc       : {} slices x {} sets x {} ways (64B lines)\n\
+               memctrl   : queue={} banks={} llc->mc={}ns mc->pm={}ns\n\
+               cpu       : store={}ns flush={}ns sfence={}ns",
+            self.rtt,
+            self.gap,
+            self.nqp,
+            self.qp_depth,
+            self.pcie_rt,
+            self.nt_serial,
+            self.ddio_ways,
+            self.llc_ways,
+            self.llc_slices,
+            self.llc_sets_per_slice,
+            self.llc_ways,
+            self.mcq,
+            self.mc_banks,
+            self.llc_mc,
+            self.mc_pm,
+            self.store,
+            self.flush,
+            self.sfence,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_python_params() {
+        // Lock-step with python/compile/kernels/params.py default_params().
+        let p = Platform::default().to_param_vec();
+        assert_eq!(p[0], 2600.0); // rtt
+        assert_eq!(p[1], 150.0); // gap
+        assert_eq!(p[2], 4.0); // nqp
+        assert_eq!(p[3], 200.0); // pcie_rt
+        assert_eq!(p[4], 10.0); // llc_mc
+        assert_eq!(p[5], 150.0); // mc_pm
+        assert_eq!(p[6], 64.0); // mcq
+        assert_eq!(p[7], 10.0); // store
+        assert_eq!(p[8], 25.0); // flush
+        assert_eq!(p[9], 20.0); // sfence
+        assert_eq!(p[10], 4.0); // banks
+        assert_eq!(p[11], 75.0); // ob_barrier
+        assert_eq!(p[12], 64.0); // qp_depth
+        assert_eq!(p[13], 210.0); // nt_serial
+        assert_eq!(p[14], 32768.0); // ddio lines = 8*2048*2
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!("sm-ob".parse::<StrategyKind>().unwrap(), StrategyKind::SmOb);
+        assert_eq!("RC".parse::<StrategyKind>().unwrap(), StrategyKind::SmRc);
+        assert!("bogus".parse::<StrategyKind>().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_geometry() {
+        let mut p = Platform::default();
+        p.ddio_ways = 30;
+        assert!(p.validate().is_err());
+        let mut p = Platform::default();
+        p.llc_sets_per_slice = 1000;
+        assert!(p.validate().is_err());
+        let mut p = Platform::default();
+        p.slice_masks = vec![1];
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn ddio_capacity_is_2mb() {
+        let p = Platform::default();
+        assert_eq!(p.ddio_lines() * crate::LINE, 2 * 1024 * 1024);
+    }
+}

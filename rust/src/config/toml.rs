@@ -1,0 +1,276 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports the subset used by pmsm config files:
+//!   * `[section]` and `[section.sub]` headers;
+//!   * `key = value` with integers, floats, booleans, quoted strings and
+//!     flat arrays of those;
+//!   * `#` comments and blank lines.
+//!
+//! Keys are exposed flattened as `"section.key"`. Duplicate keys: last one
+//! wins (same as TOML's behaviour is an error, but for config overrides the
+//! last-wins rule is friendlier and we document it).
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+/// A parsed scalar or array value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(v) => Ok(v),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+    /// Array of u64 (accepting ints and hex strings).
+    pub fn as_u64_array(&self) -> Result<Vec<u64>> {
+        self.as_array()?
+            .iter()
+            .map(|v| match v {
+                Value::Int(i) => Ok(*i as u64),
+                Value::Str(s) => parse_u64_literal(s),
+                _ => bail!("expected integer array element, got {v:?}"),
+            })
+            .collect()
+    }
+}
+
+fn parse_u64_literal(s: &str) -> Result<u64> {
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(&hex.replace('_', ""), 16)
+            .map_err(|e| anyhow!("bad hex literal {s:?}: {e}"))
+    } else {
+        s.replace('_', "")
+            .parse::<u64>()
+            .map_err(|e| anyhow!("bad integer literal {s:?}: {e}"))
+    }
+}
+
+/// A parsed document: flattened `section.key -> Value`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    map: HashMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: malformed section {raw:?}", ln + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", ln + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| anyhow!("line {}: expected `key = value`: {raw:?}", ln + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", ln + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow!("line {}: {e}", ln + 1))?;
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.map.insert(full, val);
+    }
+    Ok(doc)
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array: {s:?}"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                items.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string: {s:?}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if s.starts_with("0x") || s.starts_with("0X") {
+        return Ok(Value::Int(parse_u64_literal(s)? as i64));
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split a flat array body on commas (no nested arrays in the subset).
+fn split_array_items(s: &str) -> Vec<&str> {
+    let mut items = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                items.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    items.push(&s[start..]);
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let d = parse("a = 1\nb = 2.5\nc = true\nd = \"hi\"").unwrap();
+        assert_eq!(d.get("a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(d.get("b").unwrap().as_float().unwrap(), 2.5);
+        assert!(d.get("c").unwrap().as_bool().unwrap());
+        assert_eq!(d.get("d").unwrap().as_str().unwrap(), "hi");
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let d = parse("[x]\na = 1\n[x.y]\nb = 2").unwrap();
+        assert_eq!(d.get("x.a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(d.get("x.y.b").unwrap().as_int().unwrap(), 2);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let d = parse("# header\n\na = 1 # trailing\nb = \"x # not comment\"").unwrap();
+        assert_eq!(d.get("a").unwrap().as_int().unwrap(), 1);
+        assert_eq!(d.get("b").unwrap().as_str().unwrap(), "x # not comment");
+    }
+
+    #[test]
+    fn arrays() {
+        let d = parse("m = [1, 2, 3]\nh = [\"0x1B\", \"0x2E\"]").unwrap();
+        assert_eq!(
+            d.get("m").unwrap().as_u64_array().unwrap(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(
+            d.get("h").unwrap().as_u64_array().unwrap(),
+            vec![0x1B, 0x2E]
+        );
+    }
+
+    #[test]
+    fn hex_and_underscores() {
+        let d = parse("a = 0xFF\nb = 1_000_000").unwrap();
+        assert_eq!(d.get("a").unwrap().as_int().unwrap(), 255);
+        assert_eq!(d.get("b").unwrap().as_int().unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn last_key_wins() {
+        let d = parse("a = 1\na = 2").unwrap();
+        assert_eq!(d.get("a").unwrap().as_int().unwrap(), 2);
+    }
+}

@@ -1,0 +1,306 @@
+//! The mirroring coordinator: binds a primary node's persistency-model
+//! traffic to the backup over the simulated RDMA fabric (paper Fig. 2).
+//!
+//! [`Mirror`] exposes the persistency-model API the paper assumes
+//! (Intel-style `store`/`clwb`/`sfence` plus an explicit durability fence
+//! at transaction end); every `clwb` simultaneously (1) persists the line
+//! locally through the primary's memory controller and (2) hands the dirty
+//! line to the active replication [`Strategy`](crate::replication::Strategy)
+//! for remote replication. Multi-threaded workloads are executed by the
+//! conservative min-clock scheduler in [`sched`].
+
+pub mod sched;
+
+use crate::config::{Platform, StrategyKind};
+use crate::net::{Rdma, WriteMeta};
+use crate::replication::{self, Predictor, Strategy, TxnShape};
+use crate::sim::{RateLimiter, ThreadClock};
+use crate::util::FastMap;
+use crate::{line_of, Addr, Ns};
+
+/// Per-thread execution context: virtual clock + transactional counters.
+#[derive(Debug)]
+pub struct ThreadCtx {
+    pub clock: ThreadClock,
+    /// Local persist completions awaiting the next sfence.
+    pending_local: Vec<Ns>,
+    /// Transaction / epoch / write-sequence coordinates.
+    pub txn: u64,
+    pub epoch: u32,
+    pub seq: u64,
+    /// Completed transactions and their total writes (stats).
+    pub txns_done: u64,
+    pub writes_done: u64,
+    pub epochs_done: u64,
+    /// Completion time of the last durability fence.
+    pub last_dfence: Ns,
+    /// Virtual time at which stats were last reset (steady-state marker).
+    pub stats_zero_at: Ns,
+}
+
+impl ThreadCtx {
+    pub fn new(id: usize) -> Self {
+        ThreadCtx {
+            clock: ThreadClock::new(id),
+            pending_local: Vec::with_capacity(16),
+            txn: 0,
+            epoch: 0,
+            seq: 0,
+            txns_done: 0,
+            writes_done: 0,
+            epochs_done: 0,
+            last_dfence: 0,
+            stats_zero_at: 0,
+        }
+    }
+
+    /// Drop warm-up/load-phase counters: measurement starts now.
+    pub fn reset_stats(&mut self) {
+        self.txns_done = 0;
+        self.writes_done = 0;
+        self.epochs_done = 0;
+        self.stats_zero_at = self.clock.now;
+    }
+
+    pub fn id(&self) -> usize {
+        self.clock.id
+    }
+    pub fn now(&self) -> Ns {
+        self.clock.now
+    }
+}
+
+/// The primary node + replication pipeline.
+pub struct Mirror {
+    pub plat: Platform,
+    /// Primary's memory-controller ingress (local persistence path):
+    /// time-indexed so multi-threaded clwb streams don't false-serialize
+    /// (see sim::rate). Admission to the MC queue == persistence (ADR).
+    local_mc: RateLimiter,
+    local_mc_lat: Ns,
+    /// Primary PM contents (line address -> word value).
+    image: FastMap<Addr, u64>,
+    /// RDMA stack: local NIC + fabric + backup node.
+    pub rdma: Rdma,
+    strategy: Box<dyn Strategy>,
+    kind: StrategyKind,
+    /// Load latency from the primary image (ns).
+    load_cost: Ns,
+}
+
+impl Mirror {
+    /// Build a mirror with a fixed strategy (no predictor needed).
+    pub fn new(plat: Platform, kind: StrategyKind, ledger: bool) -> Self {
+        assert!(
+            kind != StrategyKind::SmAd,
+            "use Mirror::with_predictor for SM-AD"
+        );
+        Self::build(plat, kind, None, ledger)
+    }
+
+    /// Build a mirror with the adaptive strategy wired to `predictor`.
+    pub fn with_predictor(
+        plat: Platform,
+        kind: StrategyKind,
+        predictor: Predictor,
+        ledger: bool,
+    ) -> Self {
+        Self::build(plat, kind, Some(predictor), ledger)
+    }
+
+    fn build(
+        plat: Platform,
+        kind: StrategyKind,
+        predictor: Option<Predictor>,
+        ledger: bool,
+    ) -> Self {
+        let rdma = Rdma::new(&plat, ledger);
+        let local_mc = RateLimiter::new(plat.llc_mc);
+        let local_mc_lat = plat.llc_mc;
+        let strategy = replication::make_strategy(kind, predictor);
+        Mirror {
+            plat,
+            local_mc,
+            local_mc_lat,
+            image: FastMap::default(),
+            rdma,
+            strategy,
+            kind,
+            load_cost: 5,
+        }
+    }
+
+    pub fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    /// Read a word from the primary PM image (0 when never written).
+    pub fn load(&mut self, t: &mut ThreadCtx, addr: Addr) -> u64 {
+        t.clock.busy(self.load_cost);
+        self.image.get(&line_of(addr)).copied().unwrap_or(0)
+    }
+
+    /// Peek without advancing time (assertion/recovery helpers).
+    pub fn peek(&self, addr: Addr) -> u64 {
+        self.image.get(&line_of(addr)).copied().unwrap_or(0)
+    }
+
+    /// Store a word to a line of persistent memory (volatile until clwb'd).
+    pub fn store(&mut self, t: &mut ThreadCtx, addr: Addr, val: u64) {
+        t.clock.busy(self.plat.store);
+        self.image.insert(line_of(addr), val);
+    }
+
+    /// Volatile compute — advances the thread without touching PM.
+    pub fn compute(&mut self, t: &mut ThreadCtx, ns: Ns) {
+        t.clock.busy(ns);
+    }
+
+    /// `clwb`: persist the line locally (eager write-back into the local
+    /// MC queue) and replicate it per the active strategy.
+    pub fn clwb(&mut self, t: &mut ThreadCtx, addr: Addr) {
+        let line = line_of(addr);
+        t.clock.busy(self.plat.flush);
+        let persist = self.local_mc.submit(t.clock.now) + self.local_mc_lat;
+        t.pending_local.push(persist);
+        let meta = WriteMeta {
+            addr: line,
+            val: self.image.get(&line).copied().unwrap_or(0),
+            thread: t.id() as u32,
+            txn: t.txn,
+            epoch: t.epoch,
+            seq: t.seq,
+        };
+        t.seq += 1;
+        t.writes_done += 1;
+        self.strategy.on_clwb(&mut self.rdma, &mut t.clock, meta);
+    }
+
+    /// `sfence`: ordering point — wait for local persists, signal the
+    /// strategy's ordering primitive, and open the next epoch.
+    pub fn sfence(&mut self, t: &mut ThreadCtx) {
+        t.clock.busy(self.plat.sfence);
+        if let Some(&max) = t.pending_local.iter().max() {
+            t.clock.wait_until(max);
+        }
+        t.pending_local.clear();
+        self.strategy.on_ofence(&mut self.rdma, &mut t.clock);
+        t.epoch += 1;
+        t.epochs_done += 1;
+    }
+
+    /// Transaction begin: resets epoch numbering; passes the shape hint to
+    /// adaptive strategies.
+    pub fn txn_begin(&mut self, t: &mut ThreadCtx, hint: Option<TxnShape>) {
+        t.epoch = 0;
+        self.strategy.on_txn_begin(&mut self.rdma, &mut t.clock, hint);
+    }
+
+    /// Transaction end: durability point (local drain + strategy fence).
+    pub fn txn_commit(&mut self, t: &mut ThreadCtx) {
+        t.clock.busy(self.plat.sfence);
+        if let Some(&max) = t.pending_local.iter().max() {
+            t.clock.wait_until(max);
+        }
+        t.pending_local.clear();
+        self.strategy.on_dfence(&mut self.rdma, &mut t.clock);
+        t.last_dfence = t.clock.now;
+        t.txn += 1;
+        t.txns_done += 1;
+    }
+
+    /// The primary PM image (golden state for recovery comparison).
+    pub fn image(&self) -> &FastMap<Addr, u64> {
+        &self.image
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn run_transact_txn(m: &mut Mirror, t: &mut ThreadCtx, epochs: u32, writes: u32) {
+        m.txn_begin(t, None);
+        for e in 0..epochs {
+            for w in 0..writes {
+                let addr = 0x1000 + ((e * writes + w) as u64) * 64;
+                m.store(t, addr, 1);
+                m.clwb(t, addr);
+            }
+            m.sfence(t);
+        }
+        m.txn_commit(t);
+    }
+
+    #[test]
+    fn no_sm_txn_costs_local_only() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::NoSm, false);
+        let mut t = ThreadCtx::new(0);
+        run_transact_txn(&mut m, &mut t, 4, 1);
+        // 4 epochs x ~(store+flush+sfence+drain) + commit fence: well under
+        // a single RTT.
+        assert!(t.now() < 2600, "NO-SM txn took {}", t.now());
+        assert_eq!(t.txns_done, 1);
+        assert_eq!(t.writes_done, 4);
+    }
+
+    #[test]
+    fn sm_strategies_rank_as_paper_for_4_1() {
+        // Transact 4-1: RC should be ~3x+ worse than OB/DD (paper Fig. 4).
+        let mut times = HashMap::new();
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            let mut m = Mirror::new(Platform::default(), kind, false);
+            let mut t = ThreadCtx::new(0);
+            for _ in 0..20 {
+                run_transact_txn(&mut m, &mut t, 4, 1);
+            }
+            times.insert(kind, t.now());
+        }
+        let rc = times[&StrategyKind::SmRc] as f64;
+        let ob = times[&StrategyKind::SmOb] as f64;
+        let dd = times[&StrategyKind::SmDd] as f64;
+        assert!(rc / ob > 2.0, "rc/ob = {}", rc / ob);
+        assert!(rc / dd > 2.0, "rc/dd = {}", rc / dd);
+    }
+
+    #[test]
+    fn store_then_load_round_trips() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::NoSm, false);
+        let mut t = ThreadCtx::new(0);
+        m.store(&mut t, 0x40, 77);
+        assert_eq!(m.load(&mut t, 0x40), 77);
+        assert_eq!(m.load(&mut t, 0x7f), 77, "same line");
+        assert_eq!(m.load(&mut t, 0x80), 0, "next line untouched");
+    }
+
+    #[test]
+    fn ledger_captures_replica_writes_with_coordinates() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::SmDd, true);
+        let mut t = ThreadCtx::new(3);
+        run_transact_txn(&mut m, &mut t, 2, 2);
+        let evs = m.rdma.remote.ledger.events();
+        assert_eq!(evs.len(), 4);
+        assert!(evs.iter().all(|e| e.thread == 3));
+        assert_eq!(evs.iter().filter(|e| e.epoch == 0).count(), 2);
+        assert_eq!(evs.iter().filter(|e| e.epoch == 1).count(), 2);
+    }
+
+    #[test]
+    fn dfence_completion_covers_all_persists() {
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            let mut m = Mirror::new(Platform::default(), kind, true);
+            let mut t = ThreadCtx::new(0);
+            run_transact_txn(&mut m, &mut t, 8, 2);
+            let horizon = m.rdma.remote.persist_horizon();
+            assert!(
+                t.last_dfence >= horizon,
+                "{kind:?}: dfence at {} < persist horizon {}",
+                t.last_dfence,
+                horizon
+            );
+            assert_eq!(m.rdma.remote.ledger.len(), 16, "{kind:?}");
+        }
+    }
+}

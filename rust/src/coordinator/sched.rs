@@ -1,0 +1,230 @@
+//! Conservative min-clock scheduler for multi-threaded workloads.
+//!
+//! Shared resources in the timestamp-calculus simulator serialize requests
+//! in *submission* order, so submission order should approximate virtual-
+//! time order. The scheduler achieves this by always stepping the thread
+//! with the smallest virtual clock, one transaction at a time — the same
+//! conservative discipline used in parallel discrete-event simulation,
+//! with transaction granularity as the lookahead window. Cross-thread
+//! ordering error is bounded by one transaction's span.
+
+use super::{Mirror, ThreadCtx};
+use crate::Ns;
+
+/// A per-thread transaction source: executes ONE transaction per call and
+/// returns `false` when the thread has no more work. The optional warmup
+/// phase (data loading, structure pre-population) runs to completion on
+/// ALL threads before measurement starts: the scheduler then aligns every
+/// thread's clock to the slowest loader (a barrier) and resets stats, so
+/// load traffic never contaminates the measured steady state.
+pub trait TxnSource {
+    /// One warmup step; return true while more warmup work remains.
+    fn warmup(&mut self, _m: &mut Mirror, _t: &mut ThreadCtx) -> bool {
+        false
+    }
+    fn step(&mut self, m: &mut Mirror, t: &mut ThreadCtx) -> bool;
+}
+
+impl<F: FnMut(&mut Mirror, &mut ThreadCtx) -> bool> TxnSource for F {
+    fn step(&mut self, m: &mut Mirror, t: &mut ThreadCtx) -> bool {
+        self(m, t)
+    }
+}
+
+/// Combinator pairing a warmup closure with a steady-state closure
+/// (shared state goes in an `Rc<RefCell<..>>` captured by both).
+pub struct Phased<W, S> {
+    pub warmup: W,
+    pub step: S,
+}
+
+impl<W, S> TxnSource for Phased<W, S>
+where
+    W: FnMut(&mut Mirror, &mut ThreadCtx) -> bool,
+    S: FnMut(&mut Mirror, &mut ThreadCtx) -> bool,
+{
+    fn warmup(&mut self, m: &mut Mirror, t: &mut ThreadCtx) -> bool {
+        (self.warmup)(m, t)
+    }
+    fn step(&mut self, m: &mut Mirror, t: &mut ThreadCtx) -> bool {
+        (self.step)(m, t)
+    }
+}
+
+/// Result of a multi-threaded run.
+#[derive(Clone, Debug, Default)]
+pub struct RunOutcome {
+    /// Makespan: max thread completion time (ns).
+    pub makespan: Ns,
+    /// Sum of transactions completed across threads.
+    pub txns: u64,
+    /// Sum of replicated line writes.
+    pub writes: u64,
+    /// Sum of epochs executed.
+    pub epochs: u64,
+    /// Per-thread completion times.
+    pub per_thread: Vec<Ns>,
+}
+
+impl RunOutcome {
+    /// Aggregate throughput in transactions per simulated second.
+    pub fn txn_per_sec(&self) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.txns as f64 / (self.makespan as f64 * 1e-9)
+    }
+
+    /// Mean writes per epoch (workload-characterization stat, paper §7.2).
+    pub fn writes_per_epoch(&self) -> f64 {
+        if self.epochs == 0 {
+            return 0.0;
+        }
+        self.writes as f64 / self.epochs as f64
+    }
+
+    /// Mean epochs per transaction.
+    pub fn epochs_per_txn(&self) -> f64 {
+        if self.txns == 0 {
+            return 0.0;
+        }
+        self.epochs as f64 / self.txns as f64
+    }
+}
+
+/// Run `sources` (one per thread) to completion on `mirror`.
+pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> RunOutcome {
+    let n = sources.len();
+    let mut ctxs: Vec<ThreadCtx> = (0..n).map(ThreadCtx::new).collect();
+    let mut alive: Vec<bool> = vec![true; n];
+    let mut remaining = n;
+
+    // ---- warmup phase: run every thread's loader to completion.
+    {
+        let mut warming: Vec<bool> = vec![true; n];
+        let mut left = n;
+        while left > 0 {
+            let i = (0..n)
+                .filter(|&i| warming[i])
+                .min_by_key(|&i| ctxs[i].now())
+                .expect("left > 0");
+            if !sources[i].warmup(mirror, &mut ctxs[i]) {
+                warming[i] = false;
+                left -= 1;
+            }
+        }
+        // Barrier: align clocks to the slowest loader; measurement
+        // starts here.
+        let tmax = ctxs.iter().map(|c| c.now()).max().unwrap_or(0);
+        for c in ctxs.iter_mut() {
+            c.clock.wait_until(tmax);
+            c.reset_stats();
+        }
+    }
+
+    while remaining > 0 {
+        // Pick the live thread with the smallest clock.
+        let i = (0..n)
+            .filter(|&i| alive[i])
+            .min_by_key(|&i| ctxs[i].now())
+            .expect("remaining > 0");
+        if !sources[i].step(mirror, &mut ctxs[i]) {
+            alive[i] = false;
+            remaining -= 1;
+        }
+    }
+
+    let mut out = RunOutcome::default();
+    for c in &ctxs {
+        // Steady-state span: excludes any load phase before reset_stats.
+        out.makespan = out.makespan.max(c.now() - c.stats_zero_at);
+        out.txns += c.txns_done;
+        out.writes += c.writes_done;
+        out.epochs += c.epochs_done;
+        out.per_thread.push(c.now() - c.stats_zero_at);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, StrategyKind};
+
+    fn transact_source(txns: u64, epochs: u32, writes: u32, base: u64) -> Box<dyn TxnSource> {
+        let mut done = 0u64;
+        Box::new(move |m: &mut Mirror, t: &mut ThreadCtx| {
+            if done >= txns {
+                return false;
+            }
+            m.txn_begin(t, None);
+            for e in 0..epochs {
+                for w in 0..writes {
+                    let addr = base + ((done * 64 + (e * writes + w) as u64) % 1024) * 64;
+                    m.store(t, addr, done);
+                    m.clwb(t, addr);
+                }
+                m.sfence(t);
+            }
+            m.txn_commit(t);
+            done += 1;
+            true
+        })
+    }
+
+    #[test]
+    fn all_threads_complete() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::SmOb, false);
+        let mut srcs: Vec<Box<dyn TxnSource>> = (0..4)
+            .map(|i| transact_source(10, 2, 1, 0x10000 * (i + 1) as u64))
+            .collect();
+        let out = run_threads(&mut m, &mut srcs);
+        assert_eq!(out.txns, 40);
+        assert_eq!(out.writes, 80);
+        assert_eq!(out.per_thread.len(), 4);
+        assert!(out.makespan > 0);
+        assert!(out.txn_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn workload_stats_are_consistent() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::NoSm, false);
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(5, 4, 2, 0)];
+        let out = run_threads(&mut m, &mut srcs);
+        assert_eq!(out.epochs_per_txn(), 4.0);
+        assert_eq!(out.writes_per_epoch(), 2.0);
+    }
+
+    #[test]
+    fn contention_slows_shared_qp_strategies() {
+        // SM-DD routes every thread through QP0: 4 threads must be slower
+        // than 1 thread doing a quarter of the work... i.e. scaling is
+        // sublinear. Compare per-txn cost at 1 vs 4 threads.
+        let cost = |threads: usize| {
+            let mut m = Mirror::new(Platform::default(), StrategyKind::SmDd, false);
+            let mut srcs: Vec<Box<dyn TxnSource>> = (0..threads)
+                .map(|i| transact_source(50, 4, 1, 0x100000 * (i + 1) as u64))
+                .collect();
+            let out = run_threads(&mut m, &mut srcs);
+            out.makespan as f64 / (out.txns as f64 / threads as f64)
+        };
+        let solo = cost(1);
+        let contended = cost(4);
+        assert!(
+            contended > solo,
+            "expected QP0 contention: solo={solo} contended={contended}"
+        );
+    }
+
+    #[test]
+    fn min_clock_keeps_threads_balanced() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::SmOb, false);
+        let mut srcs: Vec<Box<dyn TxnSource>> = (0..4)
+            .map(|i| transact_source(20, 2, 1, 0x10000 * (i + 1) as u64))
+            .collect();
+        let out = run_threads(&mut m, &mut srcs);
+        let min = *out.per_thread.iter().min().unwrap() as f64;
+        let max = *out.per_thread.iter().max().unwrap() as f64;
+        assert!(max / min < 1.5, "thread imbalance: {min} vs {max}");
+    }
+}

@@ -1,0 +1,61 @@
+//! # pmsm — RDMA-based Synchronous Mirroring of Persistent Memory Transactions
+//!
+//! A full-system reproduction of Tavakkol et al., *"Enabling Efficient
+//! RDMA-based Synchronous Mirroring of Persistent Memory Transactions"*
+//! (2018). The crate provides:
+//!
+//! * a cycle-approximate model of the paper's test bed — LLC (with DDIO
+//!   ways and complex-addressing set hash), memory-controller write queue,
+//!   persistent memory, PCIe, RNIC queue pairs and an InfiniBand-like
+//!   fabric ([`mem`], [`net`], [`sim`]);
+//! * the persistency-model transaction runtime (store/clwb/sfence undo-log
+//!   transactions, [`txn`]);
+//! * the paper's four replication strategies — NO-SM, SM-RC, SM-OB, SM-DD —
+//!   plus a model-driven adaptive strategy ([`replication`]);
+//! * the mirroring coordinator that binds a primary node's persistency
+//!   traffic to a backup node over the simulated fabric ([`coordinator`]);
+//! * failure injection and recovery checking ([`recovery`]);
+//! * persistent data structures and the WHISPER-like workload suite
+//!   ([`pstore`], [`workloads`]);
+//! * an AOT-compiled analytic performance model executed through PJRT
+//!   ([`runtime`]), used by the adaptive strategy and for
+//!   model-vs-simulator cross validation;
+//! * infrastructure substrates built in-repo (no external crates are
+//!   available offline): config parsing ([`config`]), metrics
+//!   ([`metrics`]), a micro-benchmark harness ([`bench`]), a property
+//!   testing harness ([`ptest`]) and a PCG PRNG ([`util`]).
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod mem;
+pub mod metrics;
+pub mod net;
+pub mod pstore;
+pub mod ptest;
+pub mod recovery;
+pub mod replication;
+pub mod runtime;
+pub mod sim;
+pub mod txn;
+pub mod util;
+pub mod workloads;
+
+/// Simulated time in nanoseconds.
+pub type Ns = u64;
+
+/// A 64-byte-aligned physical line address in the simulated PM space.
+pub type Addr = u64;
+
+/// Cache line size used throughout (bytes).
+pub const LINE: u64 = 64;
+
+/// Align an address down to its cache line.
+#[inline]
+pub fn line_of(addr: Addr) -> Addr {
+    addr & !(LINE - 1)
+}

@@ -1,0 +1,9 @@
+//! pmsm leader binary — see `pmsm help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = pmsm::cli::main_with_args(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,146 @@
+//! Intel complex-addressing LLC set-index hash (Maurice et al. [41]).
+//!
+//! Slice bit `i` is the XOR-fold (popcount parity) of the physical address
+//! masked with `masks[i]`; the local set index comes from address bits
+//! `[6, 6+log2(sets_per_slice))`. This mirrors the L1 Pallas kernel
+//! `python/compile/kernels/cache_index.py` exactly — the rust integration
+//! test `pjrt_model.rs` cross-checks the two on random batches.
+
+use crate::Addr;
+
+/// Configured slice hash + set geometry.
+#[derive(Clone, Debug)]
+pub struct SliceHash {
+    masks: Vec<u64>,
+    sets_per_slice: usize,
+    set_mask: u64,
+    slices: usize,
+}
+
+impl SliceHash {
+    pub fn new(masks: &[u64], slices: usize, sets_per_slice: usize) -> Self {
+        assert!(sets_per_slice.is_power_of_two());
+        assert!(
+            (1usize << masks.len().min(63)) >= slices,
+            "not enough mask bits for {slices} slices"
+        );
+        SliceHash {
+            masks: masks.to_vec(),
+            sets_per_slice,
+            set_mask: sets_per_slice as u64 - 1,
+            slices,
+        }
+    }
+
+    /// Slice index of a physical address.
+    #[inline]
+    pub fn slice(&self, addr: Addr) -> usize {
+        let mut s = 0usize;
+        for (i, &m) in self.masks.iter().enumerate() {
+            s |= (((addr & m).count_ones() & 1) as usize) << i;
+        }
+        // Non-power-of-two slice counts fold the hash (matches how Intel
+        // maps 6/10/12-slice parts); for power-of-two counts this is exact.
+        s % self.slices
+    }
+
+    /// Local set index within a slice.
+    #[inline]
+    pub fn local_set(&self, addr: Addr) -> usize {
+        ((addr >> 6) & self.set_mask) as usize
+    }
+
+    /// Global set index: `slice * sets_per_slice + local`.
+    #[inline]
+    pub fn global_set(&self, addr: Addr) -> usize {
+        self.slice(addr) * self.sets_per_slice + self.local_set(addr)
+    }
+
+    pub fn total_sets(&self) -> usize {
+        self.slices * self.sets_per_slice
+    }
+    pub fn sets_per_slice(&self) -> usize {
+        self.sets_per_slice
+    }
+    pub fn slices(&self) -> usize {
+        self.slices
+    }
+    pub fn masks(&self) -> &[u64] {
+        &self.masks
+    }
+}
+
+impl From<&crate::config::Platform> for SliceHash {
+    fn from(p: &crate::config::Platform) -> Self {
+        SliceHash::new(&p.slice_masks, p.llc_slices, p.llc_sets_per_slice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::platform::INTEL_8SLICE_MASKS;
+    use crate::util::Pcg64;
+
+    fn intel() -> SliceHash {
+        SliceHash::new(&INTEL_8SLICE_MASKS, 8, 2048)
+    }
+
+    #[test]
+    fn global_set_in_range() {
+        let h = intel();
+        let mut r = Pcg64::new(1);
+        for _ in 0..10_000 {
+            let a = r.next_u64() & ((1 << 40) - 1);
+            assert!(h.global_set(a) < h.total_sets());
+        }
+    }
+
+    #[test]
+    fn line_offset_does_not_change_set() {
+        let h = intel();
+        // Bits [0,6) are the line offset; the masks have zero low bits so
+        // any offset within a line maps identically.
+        for base in [0u64, 0x1234_5680, 0xdead_bec0] {
+            let base = base & !63;
+            let s = h.global_set(base);
+            for off in 0..64 {
+                assert_eq!(h.global_set(base + off), s);
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_lines_walk_sets() {
+        let h = intel();
+        let a = 0x4000_0000u64;
+        let s1 = h.local_set(a);
+        let s2 = h.local_set(a + 64);
+        assert_eq!((s1 + 1) % 2048, s2);
+    }
+
+    #[test]
+    fn slices_are_roughly_balanced() {
+        let h = intel();
+        let mut counts = vec![0u32; 8];
+        for i in 0..65_536u64 {
+            counts[h.slice(i * 64)] += 1;
+        }
+        let mean = 65_536.0 / 8.0;
+        for &c in &counts {
+            assert!((c as f64) > 0.5 * mean, "slice count {c}");
+            assert!((c as f64) < 1.5 * mean, "slice count {c}");
+        }
+    }
+
+    #[test]
+    fn matches_reference_parity_definition() {
+        let h = intel();
+        let addr = 0x0123_4567_89ab_cdefu64;
+        let mut want = 0usize;
+        for (i, &m) in INTEL_8SLICE_MASKS.iter().enumerate() {
+            want |= (((addr & m).count_ones() as usize) & 1) << i;
+        }
+        assert_eq!(h.slice(addr), want % 8);
+    }
+}

@@ -1,0 +1,13 @@
+//! Memory-subsystem models: LLC set hashing, the set-associative LLC with
+//! DDIO-restricted ways, the memory-controller write queue, and the PM
+//! durability ledger — the paper's §6.1 model.
+
+pub mod addr;
+pub mod llc;
+pub mod memctrl;
+pub mod pmem;
+
+pub use addr::SliceHash;
+pub use llc::Llc;
+pub use memctrl::MemCtrl;
+pub use pmem::{DurEvent, DurabilityLog};

@@ -1,0 +1,8 @@
+//! Metrics: counters, log-scale histograms, and the report formatters that
+//! regenerate the paper's figures as text tables.
+
+pub mod hist;
+pub mod report;
+
+pub use hist::LogHistogram;
+pub use report::{Fig4Row, Fig5Row, Table};

@@ -1,0 +1,207 @@
+//! Report formatters: text tables that mirror the paper's figures.
+//!
+//! * Figure 4: Transact slowdowns per `e-w` configuration and strategy.
+//! * Figure 5a/5b: WHISPER normalized execution time and throughput.
+
+use crate::util::stats::geomean;
+
+/// Generic fixed-width text table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", cells[i], width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// One Figure-4 series point: Transact `e-w` slowdowns over NO-SM.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig4Row {
+    pub epochs: u32,
+    pub writes: u32,
+    pub rc: f64,
+    pub ob: f64,
+    pub dd: f64,
+}
+
+/// Render the Figure-4 table (+ per-strategy analytic prediction columns
+/// when available).
+pub fn fig4_table(rows: &[Fig4Row], predicted: Option<&[Fig4Row]>) -> String {
+    let mut t = match predicted {
+        Some(_) => Table::new(&[
+            "cfg", "SM-RC", "SM-OB", "SM-DD", "~RC", "~OB", "~DD",
+        ]),
+        None => Table::new(&["cfg", "SM-RC", "SM-OB", "SM-DD"]),
+    };
+    for (i, r) in rows.iter().enumerate() {
+        let mut cells = vec![
+            format!("{}-{}", r.epochs, r.writes),
+            format!("{:.1}x", r.rc),
+            format!("{:.1}x", r.ob),
+            format!("{:.1}x", r.dd),
+        ];
+        if let Some(pred) = predicted {
+            let p = &pred[i];
+            cells.push(format!("{:.1}x", p.rc));
+            cells.push(format!("{:.1}x", p.ob));
+            cells.push(format!("{:.1}x", p.dd));
+        }
+        t.row(cells);
+    }
+    format!(
+        "Figure 4 — Transact slowdown over NO-SM (e-w = epochs/txn - writes/epoch)\n{}",
+        t.render()
+    )
+}
+
+/// One Figure-5 row: a WHISPER app's normalized results.
+#[derive(Clone, Debug)]
+pub struct Fig5Row {
+    pub app: String,
+    /// Execution time normalized to NO-SM (>= 1).
+    pub time_rc: f64,
+    pub time_ob: f64,
+    pub time_dd: f64,
+    /// Throughput normalized to NO-SM (<= 1).
+    pub tput_rc: f64,
+    pub tput_ob: f64,
+    pub tput_dd: f64,
+}
+
+/// Render Figure 5a/5b + the headline summary (H1).
+pub fn fig5_tables(rows: &[Fig5Row]) -> String {
+    let mut a = Table::new(&["app", "SM-RC", "SM-OB", "SM-DD"]);
+    let mut b = Table::new(&["app", "SM-RC", "SM-OB", "SM-DD"]);
+    for r in rows {
+        a.row(vec![
+            r.app.clone(),
+            format!("{:.1}x", r.time_rc),
+            format!("{:.1}x", r.time_ob),
+            format!("{:.1}x", r.time_dd),
+        ]);
+        b.row(vec![
+            r.app.clone(),
+            format!("{:.0}%", 100.0 * (1.0 - r.tput_rc)),
+            format!("{:.0}%", 100.0 * (1.0 - r.tput_ob)),
+            format!("{:.0}%", 100.0 * (1.0 - r.tput_dd)),
+        ]);
+    }
+    let rc: Vec<f64> = rows.iter().map(|r| r.time_rc).collect();
+    let ob: Vec<f64> = rows.iter().map(|r| r.time_ob).collect();
+    let dd: Vec<f64> = rows.iter().map(|r| r.time_dd).collect();
+    let (grc, gob, gdd) = (geomean(&rc), geomean(&ob), geomean(&dd));
+    let trc: Vec<f64> = rows.iter().map(|r| r.tput_rc).collect();
+    let tob: Vec<f64> = rows.iter().map(|r| r.tput_ob).collect();
+    let tdd: Vec<f64> = rows.iter().map(|r| r.tput_dd).collect();
+    format!(
+        "Figure 5a — execution time normalized to NO-SM\n{}\n\
+         Figure 5b — throughput decrease vs NO-SM\n{}\n\
+         Headline (H1): exec-time overhead geomean RC={:.1}x OB={:.1}x DD={:.1}x\n\
+                        OB beats RC by {:.1}x, DD beats RC by {:.1}x\n\
+                        throughput drop mean RC={:.0}% OB={:.0}% DD={:.0}%\n",
+        a.render(),
+        b.render(),
+        grc,
+        gob,
+        gdd,
+        grc / gob,
+        grc / gdd,
+        100.0 * (1.0 - trc.iter().sum::<f64>() / trc.len().max(1) as f64),
+        100.0 * (1.0 - tob.iter().sum::<f64>() / tob.len().max(1) as f64),
+        100.0 * (1.0 - tdd.iter().sum::<f64>() / tdd.len().max(1) as f64),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["100".into(), "2000".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].len(), lines[0].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fig4_renders_all_configs() {
+        let rows = vec![
+            Fig4Row { epochs: 1, writes: 1, rc: 44.0, ob: 40.0, dd: 39.0 },
+            Fig4Row { epochs: 256, writes: 8, rc: 10.0, ob: 1.2, dd: 4.4 },
+        ];
+        let s = fig4_table(&rows, None);
+        assert!(s.contains("1-1"));
+        assert!(s.contains("256-8"));
+        assert!(s.contains("44.0x"));
+    }
+
+    #[test]
+    fn fig5_headline_math() {
+        let rows = vec![Fig5Row {
+            app: "ctree".into(),
+            time_rc: 6.0,
+            time_ob: 3.0,
+            time_dd: 2.0,
+            tput_rc: 0.15,
+            tput_ob: 0.3,
+            tput_dd: 0.5,
+        }];
+        let s = fig5_tables(&rows);
+        assert!(s.contains("OB beats RC by 2.0x"));
+        assert!(s.contains("DD beats RC by 3.0x"));
+        assert!(s.contains("85%"));
+    }
+}

@@ -1,0 +1,13 @@
+//! RDMA network models: local queue pairs, the fabric, the remote (backup)
+//! NIC engine with its memory subsystem, and the verb layer tying them
+//! together with the paper's §6.2 latency semantics.
+
+pub mod qp;
+pub mod rdma;
+pub mod remote;
+pub mod verbs;
+
+pub use qp::LocalQp;
+pub use rdma::Rdma;
+pub use remote::RemoteEngine;
+pub use verbs::WriteMeta;

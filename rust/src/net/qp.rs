@@ -1,0 +1,146 @@
+//! Local (requester-side) queue-pair model.
+//!
+//! A QP issues one WQE every `gap` ns (message-rate limit of the RNIC) and
+//! tracks a bounded window of outstanding (un-completed) WQEs: posting
+//! blocks when `depth` requests are in flight — this is how remote-side
+//! back-pressure (e.g. a full MC write queue under SM-DD) propagates back
+//! to the issuing thread, producing the paper's "frequent pauses".
+
+use crate::sim::FifoResource;
+use crate::Ns;
+use std::collections::VecDeque;
+
+/// Requester-side queue pair.
+#[derive(Clone, Debug)]
+pub struct LocalQp {
+    issue: FifoResource,
+    gap: Ns,
+    depth: usize,
+    /// Completion times of outstanding WQEs (ascending — completions on a
+    /// QP are ordered by the RDMA spec).
+    inflight: VecDeque<Ns>,
+    /// Stats: total WQEs posted and total stall waiting for window space.
+    pub posted: u64,
+    pub window_stall_ns: Ns,
+}
+
+impl LocalQp {
+    pub fn new(gap: Ns, depth: usize) -> Self {
+        assert!(depth > 0);
+        LocalQp {
+            issue: FifoResource::new(),
+            gap,
+            depth,
+            inflight: VecDeque::with_capacity(depth + 1),
+            posted: 0,
+            window_stall_ns: 0,
+        }
+    }
+
+    /// Post a WQE at thread-time `at`. Returns `(ready, start)`: `ready`
+    /// is when the posting CPU regains control (later than `at` only when
+    /// the send window was full — remote back-pressure reaching the
+    /// thread), `start` the instant the WQE leaves the NIC toward the
+    /// wire. The caller must later call [`LocalQp::complete`] with the
+    /// WQE's completion time.
+    pub fn post(&mut self, at: Ns) -> (Ns, Ns) {
+        // Retire completions that have already arrived.
+        while let Some(&head) = self.inflight.front() {
+            if head <= at {
+                self.inflight.pop_front();
+            } else {
+                break;
+            }
+        }
+        let mut ready = at;
+        if self.inflight.len() >= self.depth {
+            // Window full: wait for the oldest outstanding completion.
+            let head = self.inflight.pop_front().expect("depth > 0");
+            self.window_stall_ns += head.saturating_sub(at);
+            ready = ready.max(head);
+        }
+        let (start, _done) = self.issue.submit(ready, self.gap);
+        self.posted += 1;
+        (ready, start)
+    }
+
+    /// Register the completion time of the most recently posted WQE.
+    /// Completion times on a QP must be monotone (RDMA ordered channel);
+    /// the model clamps to enforce it.
+    pub fn complete(&mut self, done: Ns) {
+        let done = self
+            .inflight
+            .back()
+            .map_or(done, |&last| done.max(last));
+        self.inflight.push_back(done);
+    }
+
+    /// Completion time of the newest outstanding WQE (0 if none ever).
+    pub fn last_completion(&self) -> Ns {
+        self.inflight.back().copied().unwrap_or(0)
+    }
+
+    /// Time the issue pipeline next frees up.
+    pub fn next_issue(&self) -> Ns {
+        self.issue.next_free()
+    }
+
+    pub fn reset(&mut self) {
+        self.issue.reset();
+        self.inflight.clear();
+        self.posted = 0;
+        self.window_stall_ns = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn issue_rate_is_gap_limited() {
+        let mut qp = LocalQp::new(150, 64);
+        let (_, s1) = qp.post(0);
+        qp.complete(10_000);
+        let (_, s2) = qp.post(0);
+        qp.complete(10_000);
+        assert_eq!(s1, 0);
+        assert_eq!(s2, 150);
+    }
+
+    #[test]
+    fn window_blocks_when_full() {
+        let mut qp = LocalQp::new(10, 2);
+        let (_, s1) = qp.post(0);
+        qp.complete(1_000);
+        let (_, s2) = qp.post(0);
+        qp.complete(2_000);
+        assert_eq!((s1, s2), (0, 10));
+        // Third post must wait for the first completion (t=1000).
+        let (r3, s3) = qp.post(0);
+        assert!(s3 >= 1_000, "expected window stall, got {s3}");
+        assert!(r3 >= 1_000, "thread must block too, got {r3}");
+        assert!(qp.window_stall_ns > 0);
+    }
+
+    #[test]
+    fn completions_clamped_monotone() {
+        let mut qp = LocalQp::new(10, 8);
+        qp.post(0);
+        qp.complete(500);
+        qp.post(0);
+        qp.complete(300); // out of order: clamped up to 500
+        assert_eq!(qp.last_completion(), 500);
+    }
+
+    #[test]
+    fn retired_completions_free_window() {
+        let mut qp = LocalQp::new(10, 1);
+        qp.post(0);
+        qp.complete(100);
+        // At t=200 the previous WQE has completed; no stall.
+        let (_, s) = qp.post(200);
+        assert_eq!(s, 200);
+        assert_eq!(qp.window_stall_ns, 0);
+    }
+}

@@ -1,0 +1,441 @@
+//! Remote (backup-side) NIC engine + memory subsystem.
+//!
+//! Implements the responder half of every verb with the paper's §6.2
+//! latency decomposition: per-QP arrival ordering, a shared PCIe
+//! root-complex port, the DDIO path into the LLC model, the direct
+//! (DDIO-disabled) path into the MC write queue, the ordered FIFO +
+//! cross-QP barrier behaviour of `rofence`, and the drain semantics of
+//! `rcommit` / `rdfence`. Every line that reaches the MC write queue is
+//! recorded in the durability ledger with its transactional coordinates.
+
+use super::verbs::WriteMeta;
+use crate::mem::{llc::DdioWrite, DurEvent, DurabilityLog, Llc, MemCtrl};
+use crate::sim::RateLimiter;
+use crate::{config::Platform, line_of, Addr, Ns};
+use std::collections::HashMap;
+
+/// Remote engine: one backup node.
+#[derive(Clone, Debug)]
+pub struct RemoteEngine {
+    /// Per-(QP, thread) last ordered instant — RDMA guarantees ordering
+    /// only within a QP's stream; per-thread scoping avoids false
+    /// cross-thread serialization from out-of-order submission (see
+    /// sim::rate).
+    order: HashMap<(usize, u32), Ns>,
+    /// Shared PCIe root-complex port (posted-write burst rate) —
+    /// time-indexed so cross-thread contention is conserved but
+    /// submission order is irrelevant.
+    shared_pcie: RateLimiter,
+    /// Serialized non-temporal processing stage (ordered non-posted
+    /// writes; SM-DD routes everything through QP 0 + this stage).
+    nt_proc: RateLimiter,
+    pcie_occ: Ns,
+    /// One-way latency of a non-posted NT PCIe write (occupancy is
+    /// `nt_serial`; latency is shorter — the serialization limits *rate*).
+    nt_latency: Ns,
+    ob_barrier: Ns,
+    /// Last-line PM landing charged by rdfence (rcommit-like drain tail).
+    mc_pm: Ns,
+    /// Backup LLC + memory controller.
+    pub llc: Llc,
+    pub mc: MemCtrl,
+    /// Lines written via plain `Write` that are dirty in the LLC and not
+    /// yet persistent — drained by `rcommit` (insertion-ordered).
+    pending: Vec<(Addr, WriteMeta)>,
+    pending_idx: crate::util::FastMap<Addr, usize>,
+    /// SM-OB per-thread ordering floor: none of the thread's later-epoch
+    /// WTs may persist before its floor.
+    persist_floor: HashMap<u32, Ns>,
+    /// Running max persist instant (any path).
+    max_persist: Ns,
+    /// Per-QP latest persist instant (read-fence semantics).
+    per_qp_persist: Vec<Ns>,
+    /// Per-thread latest remote processing / persist instants (rcommit and
+    /// rdfence are scoped to the caller's own writes — the rcommit draft
+    /// takes an address *range*, i.e. the caller's region).
+    per_thread_proc: HashMap<u32, Ns>,
+    per_thread_persist: HashMap<u32, Ns>,
+    /// Durability ledger of the backup PM.
+    pub ledger: DurabilityLog,
+    // stats
+    pub writes: u64,
+    pub persists: u64,
+    pub barriers: u64,
+}
+
+impl RemoteEngine {
+    pub fn new(p: &Platform, ledger: bool) -> Self {
+        RemoteEngine {
+            order: HashMap::new(),
+            shared_pcie: RateLimiter::new(p.pcie_occ),
+            nt_proc: RateLimiter::new(p.nt_serial),
+            pcie_occ: p.pcie_occ,
+            nt_latency: p.pcie_rt / 2 + p.llc_mc,
+            ob_barrier: p.ob_barrier,
+            mc_pm: p.mc_pm,
+            llc: Llc::from_platform(p),
+            mc: MemCtrl::from_platform(p),
+            pending: Vec::new(),
+            pending_idx: crate::util::FastMap::default(),
+            persist_floor: HashMap::new(),
+            max_persist: 0,
+            per_qp_persist: vec![0; p.nqp],
+            per_thread_proc: HashMap::new(),
+            per_thread_persist: HashMap::new(),
+            ledger: DurabilityLog::new(ledger),
+            writes: 0,
+            persists: 0,
+            barriers: 0,
+        }
+    }
+
+    fn record_persist(&mut self, meta: &WriteMeta, at: Ns) {
+        self.persists += 1;
+        self.max_persist = self.max_persist.max(at);
+        self.ledger.record(DurEvent {
+            addr: meta.addr,
+            val: meta.val,
+            at,
+            thread: meta.thread,
+            txn: meta.txn,
+            epoch: meta.epoch,
+            seq: meta.seq,
+        });
+    }
+
+    /// Remote processing instant for a verb from `thread` arriving on
+    /// `qp` at `arrive`: per-(qp, thread) stream ordering, then the shared
+    /// PCIe port's capacity.
+    fn process(&mut self, qp: usize, thread: u32, arrive: Ns) -> Ns {
+        let slot = self.order.entry((qp, thread)).or_insert(0);
+        let ordered = arrive.max(*slot);
+        let start = self.shared_pcie.submit(ordered);
+        let proc_done = start + self.pcie_occ;
+        *slot = start;
+        proc_done
+    }
+
+    /// Posted one-sided write via DDIO (paper Fig. 3a left). Returns the
+    /// remote processing instant. The line lands dirty in the LLC; a dirty
+    /// DDIO-way eviction pushes the *evicted* line into the MC queue.
+    pub fn write_ddio(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> Ns {
+        self.writes += 1;
+        let proc = self.process(qp, meta.thread, arrive);
+        let line = line_of(meta.addr);
+        match self.llc.ddio_write(line, proc) {
+            DdioWrite::EvictDirty(old) => {
+                // The evicted (older) line persists now.
+                let (persist, _) = self.mc.push(proc);
+                if let Some(old_meta) = self.remove_pending(old) {
+                    self.record_persist(&old_meta, persist);
+                    self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+                }
+            }
+            DdioWrite::Hit | DdioWrite::Fill | DdioWrite::EvictClean => {}
+        }
+        let e = self.per_thread_proc.entry(meta.thread).or_insert(0);
+        *e = (*e).max(proc);
+        self.insert_pending(line, meta);
+        proc
+    }
+
+    /// Write-through write (paper Fig. 3b): DDIO into the LLC then an
+    /// immediate write-through to the MC queue; the LLC copy stays clean.
+    /// Returns `(proc, persist)`.
+    pub fn write_wt(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> (Ns, Ns) {
+        self.writes += 1;
+        let proc = self.process(qp, meta.thread, arrive);
+        let line = line_of(meta.addr);
+        match self.llc.ddio_write(line, proc) {
+            DdioWrite::EvictDirty(old) => {
+                let (persist, _) = self.mc.push(proc);
+                if let Some(old_meta) = self.remove_pending(old) {
+                    self.record_persist(&old_meta, persist);
+                }
+            }
+            _ => {}
+        }
+        // Write through: push this line now; the ordering floor from the
+        // issuing thread's prior rofence epochs applies (the NIC's
+        // ordered FIFO delays the WT).
+        let floor = self.persist_floor.get(&meta.thread).copied().unwrap_or(0);
+        let (raw_persist, _) = self.mc.push(proc.max(floor));
+        let persist = raw_persist.max(floor);
+        self.llc.writeback(line, persist); // LLC copy now clean
+        self.record_persist(&meta, persist);
+        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+        let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
+        *e = (*e).max(persist);
+        (proc, persist)
+    }
+
+    /// Non-temporal write (paper Fig. 3c): bypasses the LLC; ordered
+    /// non-posted PCIe transaction serialized at `nt_serial` per line.
+    /// Returns `(proc, persist)` — completion is non-posted (at persist).
+    pub fn write_nt(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> (Ns, Ns) {
+        self.writes += 1;
+        let slot = self.order.entry((qp, meta.thread)).or_insert(0);
+        let ordered = arrive.max(*slot);
+        // Ordered non-posted transactions limit the *rate* to one per
+        // `nt_serial`; each write's own latency is the shorter PCIe+MC
+        // ingress path.
+        let start = self.nt_proc.submit(ordered);
+        *slot = start;
+        let proc = start + self.nt_latency;
+        let (persist, _) = self.mc.push(proc);
+        self.record_persist(&meta, persist);
+        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+        let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
+        *e = (*e).max(persist);
+        (proc, persist)
+    }
+
+    /// Remote ordering fence (paper Fig. 3b): cross-QP barrier in the
+    /// remote NIC's ordered FIFO. Writes on *any* QP arriving after the
+    /// fence process after the barrier (time-filtered floor on the shared
+    /// port — §6.2's "serializes the commands received from multiple
+    /// independent threads"); the issuing thread's persistence floor
+    /// rises to everything it has persisted so far.
+    pub fn rofence(&mut self, arrive: Ns, thread: u32) -> Ns {
+        self.barriers += 1;
+        let own = self
+            .per_thread_persist
+            .get(&thread)
+            .copied()
+            .unwrap_or(0)
+            .max(self.per_thread_proc.get(&thread).copied().unwrap_or(0));
+        let barrier = arrive.max(own) + self.ob_barrier;
+        self.shared_pcie.add_floor(arrive, barrier);
+        let f = self.persist_floor.entry(thread).or_insert(0);
+        *f = (*f).max(barrier);
+        barrier
+    }
+
+    /// Remote commit (SM-RC): drain the *caller's* pending (dirty)
+    /// RDMA-written lines from the LLC into the MC queue (the rcommit
+    /// draft scopes the commit to an address range — the caller's own
+    /// replication region). Returns the drain-complete instant.
+    pub fn rcommit(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
+        let mut start = self.process(qp, thread, arrive);
+        // The caller's prior writes must have been processed remotely.
+        start = start.max(self.per_thread_proc.get(&thread).copied().unwrap_or(0));
+        let mut done = start;
+        let all: Vec<(Addr, WriteMeta)> = std::mem::take(&mut self.pending);
+        self.pending_idx.clear();
+        for (line, meta) in all {
+            if meta.thread != thread {
+                self.insert_pending(line, meta); // keep others' lines
+                continue;
+            }
+            if self.llc.writeback(line, start) {
+                let (persist, _) = self.mc.push(start);
+                self.record_persist(&meta, persist);
+                done = done.max(persist);
+            }
+        }
+        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(done);
+        let e = self.per_thread_persist.entry(thread).or_insert(0);
+        *e = (*e).max(done);
+        self.max_persist = self.max_persist.max(done);
+        done
+    }
+
+    /// Remote durability fence (SM-OB): completes once all prior writes
+    /// (already written-through) are persistent and all barriers executed.
+    pub fn rdfence(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
+        let mut done = self.process(qp, thread, arrive);
+        // The caller's write-through persists must all have landed;
+        // cross-QP sync bubble + the last line's PM landing.
+        done = done
+            .max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
+            + self.ob_barrier
+            + self.mc_pm;
+        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(done);
+        done
+    }
+
+    /// One-sided read on `qp`: fences the caller's prior writes on that
+    /// QP (RDMA read-after-write ordering); with DDIO disabled their
+    /// completion implies persistence (SM-DD's durability point).
+    pub fn read(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
+        let proc = self.process(qp, thread, arrive);
+        proc.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
+    }
+
+    fn insert_pending(&mut self, line: Addr, meta: WriteMeta) {
+        match self.pending_idx.get(&line) {
+            Some(&i) => self.pending[i].1 = meta, // coalesce in place
+            None => {
+                self.pending_idx.insert(line, self.pending.len());
+                self.pending.push((line, meta));
+            }
+        }
+    }
+
+    fn remove_pending(&mut self, line: Addr) -> Option<WriteMeta> {
+        let i = self.pending_idx.remove(&line)?;
+        let (_, meta) = self.pending[i];
+        // O(1) removal: swap with the tail and fix the moved index.
+        let last = self.pending.len() - 1;
+        self.pending.swap(i, last);
+        self.pending.pop();
+        if i < self.pending.len() {
+            let moved = self.pending[i].0;
+            self.pending_idx.insert(moved, i);
+        }
+        Some(meta)
+    }
+
+    /// Number of replicated-but-not-yet-persistent lines (SM-RC exposure).
+    pub fn pending_lines(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Latest persist instant seen on any path.
+    pub fn persist_horizon(&self) -> Ns {
+        self.max_persist
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(addr: Addr, seq: u64) -> WriteMeta {
+        WriteMeta {
+            addr,
+            val: seq,
+            thread: 0,
+            txn: 0,
+            epoch: 0,
+            seq,
+        }
+    }
+
+    fn engine() -> RemoteEngine {
+        RemoteEngine::new(&Platform::default(), true)
+    }
+
+    #[test]
+    fn ddio_write_is_not_persistent() {
+        let mut e = engine();
+        e.write_ddio(0, 1000, meta(0x40, 0));
+        assert_eq!(e.ledger.len(), 0, "plain write must not persist");
+        assert_eq!(e.pending_lines(), 1);
+    }
+
+    #[test]
+    fn rcommit_drains_pending() {
+        let mut e = engine();
+        e.write_ddio(0, 1000, meta(0x40, 0));
+        e.write_ddio(1, 1010, meta(0x80, 1));
+        let done = e.rcommit(2, 2000, 0);
+        assert_eq!(e.pending_lines(), 0);
+        assert_eq!(e.ledger.len(), 2);
+        assert!(done >= 2000);
+        for ev in e.ledger.events() {
+            assert!(ev.at <= done);
+        }
+    }
+
+    #[test]
+    fn wt_write_persists_immediately() {
+        let mut e = engine();
+        let (proc, persist) = e.write_wt(0, 1000, meta(0x40, 0));
+        assert!(persist >= proc);
+        assert_eq!(e.ledger.len(), 1);
+        assert!(!e.llc.is_dirty(0x40), "WT line must be clean in LLC");
+        assert!(e.llc.contains(0x40), "WT line stays cached");
+    }
+
+    #[test]
+    fn nt_write_bypasses_llc() {
+        let mut e = engine();
+        let (_, persist) = e.write_nt(0, 1000, meta(0x40, 0));
+        assert!(persist > 1000);
+        assert_eq!(e.ledger.len(), 1);
+        assert!(!e.llc.contains(0x40), "NT write must bypass the LLC");
+    }
+
+    #[test]
+    fn nt_writes_serialize() {
+        let mut e = engine();
+        let (_, p1) = e.write_nt(0, 0, meta(0x40, 0));
+        let (_, p2) = e.write_nt(0, 0, meta(0x80, 1));
+        assert!(p2 >= p1 + 210 - 10, "NT writes must serialize: {p1} {p2}");
+    }
+
+    #[test]
+    fn rofence_barriers_all_qps() {
+        let mut e = engine();
+        e.write_wt(0, 1000, meta(0x40, 0));
+        e.write_wt(1, 1000, meta(0x80, 1));
+        let barrier = e.rofence(1100, 0);
+        // A write on any QP arriving after the fence processes after the
+        // barrier (time-filtered floor on the shared port).
+        let (proc, _) = e.write_wt(2, 1200, meta(0xc0, 2));
+        assert!(proc >= barrier, "proc {proc} < barrier {barrier}");
+        // A write that (in virtual time) preceded the fence is unaffected
+        // even when submitted later — no false cross-thread serialization.
+        let m2 = WriteMeta { thread: 9, ..meta(0x100, 3) };
+        let (proc_early, _) = e.write_wt(3, 500, m2);
+        assert!(proc_early < barrier);
+    }
+
+    #[test]
+    fn rofence_orders_epochs_persist() {
+        let mut e = engine();
+        let (_, p1) = e.write_wt(0, 1000, meta(0x40, 0));
+        e.rofence(1100, 0);
+        let (_, p2) = e.write_wt(1, 0, meta(0x80, 1)); // early arrival
+        assert!(p2 >= p1, "epoch 2 persisted before epoch 1: {p2} < {p1}");
+    }
+
+    #[test]
+    fn read_fences_prior_qp_writes() {
+        let mut e = engine();
+        let (_, p1) = e.write_nt(0, 1000, meta(0x40, 0));
+        let done = e.read(0, 1001, 0);
+        assert!(done >= p1);
+    }
+
+    #[test]
+    fn rdfence_waits_for_all_persists() {
+        let mut e = engine();
+        let (_, p1) = e.write_wt(0, 1000, meta(0x40, 0));
+        let (_, p2) = e.write_wt(1, 1000, meta(0x80, 1));
+        let done = e.rdfence(2, 900, 0);
+        assert!(done >= p1.max(p2));
+    }
+
+    #[test]
+    fn eviction_from_ddio_ways_persists_old_line() {
+        // Tiny LLC to force evictions through pending bookkeeping.
+        let mut p = Platform::default();
+        p.llc_slices = 1;
+        p.llc_sets_per_slice = 2;
+        p.llc_ways = 2;
+        p.ddio_ways = 1;
+        p.slice_masks = vec![0];
+        let mut e = RemoteEngine::new(&p, true);
+        let stride = 2 * 64; // same set
+        e.write_ddio(0, 100, meta(0, 0));
+        assert_eq!(e.ledger.len(), 0);
+        e.write_ddio(0, 200, meta(stride, 1)); // evicts line 0
+        assert_eq!(e.ledger.len(), 1);
+        assert_eq!(e.ledger.events()[0].addr, 0);
+        assert_eq!(e.pending_lines(), 1);
+    }
+
+    #[test]
+    fn pending_coalesces_same_line() {
+        let mut e = engine();
+        e.write_ddio(0, 100, meta(0x40, 0));
+        e.write_ddio(0, 200, meta(0x40, 1));
+        assert_eq!(e.pending_lines(), 1);
+        e.rcommit(0, 300, 0);
+        // Only the newest value persists.
+        assert_eq!(e.ledger.len(), 1);
+        assert_eq!(e.ledger.events()[0].val, 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Verb definitions and write metadata.
+//!
+//! The paper's verb set: the standard one-sided `Write`/`Read`, the
+//! proposed `rcommit` (Talpey-Pinkerton draft, used by SM-RC) and the four
+//! new primitives — write-through writes (`WriteWT`), non-temporal writes
+//! (`WriteNT`), the remote ordering fence (`ROFence`) and the remote
+//! durability fence (`RDFence`). Latency semantics live in
+//! [`crate::net::rdma::Rdma`]; this module defines the vocabulary and the
+//! per-write transactional metadata threaded through to the durability
+//! ledger.
+
+use crate::Addr;
+
+/// Transactional coordinates of a replicated line write (durability-ledger
+/// attribution; see [`crate::mem::pmem::DurEvent`]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WriteMeta {
+    pub addr: Addr,
+    pub val: u64,
+    pub thread: u32,
+    pub txn: u64,
+    pub epoch: u32,
+    pub seq: u64,
+}
+
+/// RDMA verbs modeled by the framework (paper §2.3, §5, §6.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Verb {
+    /// One-sided RDMA write; lands in the remote LLC via DDIO (posted).
+    Write,
+    /// One-sided RDMA read; completion fences all prior writes on the QP.
+    Read,
+    /// Remote commit: flush all prior RDMA-written lines to the remote MC
+    /// (blocking; both ordering and durability — the overloaded primitive).
+    RCommit,
+    /// Write-through write: DDIO into LLC then immediate write-through to
+    /// the MC queue (posted) — new primitive, used by SM-OB.
+    WriteWT,
+    /// Non-temporal write: bypasses the LLC straight to the MC queue
+    /// (ordered, non-posted at the root complex) — new primitive, SM-DD.
+    WriteNT,
+    /// Remote ordering fence: epoch barrier at the remote NIC (posted) —
+    /// new primitive, SM-OB.
+    ROFence,
+    /// Remote durability fence: blocks until all prior writes persist —
+    /// new primitive, SM-OB.
+    RDFence,
+}
+
+impl Verb {
+    pub fn name(self) -> &'static str {
+        match self {
+            Verb::Write => "write",
+            Verb::Read => "read",
+            Verb::RCommit => "rcommit",
+            Verb::WriteWT => "write-wt",
+            Verb::WriteNT => "write-nt",
+            Verb::ROFence => "rofence",
+            Verb::RDFence => "rdfence",
+        }
+    }
+
+    /// Does the issuing thread block on this verb's completion?
+    pub fn is_blocking(self) -> bool {
+        matches!(self, Verb::Read | Verb::RCommit | Verb::RDFence)
+    }
+}
+
+/// Table 1 rendering: the per-strategy code transformation of a 2-epoch
+/// transaction (experiment T1; printed by `pmsm selftest --show-table1`).
+pub fn table1() -> String {
+    let rows = [
+        (
+            "NO-SM",
+            "st A; clwb A; sfence; st B; clwb B; sfence",
+        ),
+        (
+            "SM-RC",
+            "st A; clwb A; write(A); rcommit; sfence; st B; clwb B; write(B); rcommit; sfence",
+        ),
+        (
+            "SM-OB",
+            "st A; clwb A; write_wt(A); rofence; sfence; st B; clwb B; write_wt(B); rofence; sfence; rdfence",
+        ),
+        (
+            "SM-DD",
+            "st A; clwb A; write_nt(A); sfence; st B; clwb B; write_nt(B); sfence; read(sentinel)",
+        ),
+    ];
+    let mut s = String::from("Table 1 — replication code transformations (2 epochs, 1 write each)\n");
+    for (name, code) in rows {
+        s.push_str(&format!("  {name:<6} : {code}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocking_classification() {
+        assert!(Verb::RCommit.is_blocking());
+        assert!(Verb::RDFence.is_blocking());
+        assert!(Verb::Read.is_blocking());
+        assert!(!Verb::Write.is_blocking());
+        assert!(!Verb::WriteWT.is_blocking());
+        assert!(!Verb::WriteNT.is_blocking());
+        assert!(!Verb::ROFence.is_blocking());
+    }
+
+    #[test]
+    fn table1_mentions_all_strategies() {
+        let t = table1();
+        for s in ["NO-SM", "SM-RC", "SM-OB", "SM-DD"] {
+            assert!(t.contains(s));
+        }
+        assert!(t.contains("rcommit"));
+        assert!(t.contains("rofence"));
+        assert!(t.contains("read(sentinel)"));
+    }
+}

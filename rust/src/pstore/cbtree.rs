@@ -1,0 +1,297 @@
+//! Persistent crit-bit tree over u64 keys — the `ctree` WHISPER workload
+//! (originally released with NVML [25]).
+//!
+//! A crit-bit (PATRICIA) tree: internal nodes store the index of the most
+//! significant bit on which their two subtrees differ; leaves store
+//! (key, value). Lookup walks bit decisions; insert finds the critical bit
+//! between the new key and the nearest existing key and splices an
+//! internal node at the correct depth; delete splices a leaf's parent out.
+//!
+//! PM layout (one u64 field per line):
+//!   * leaf:     [TAG_LEAF,  key,  value]              (3 lines)
+//!   * internal: [TAG_INNER | bit, left, right]        (3 lines)
+//!   * root pointer: one line in REGION_ROOTS.
+//!
+//! Every mutation runs inside an undo-log transaction.
+
+use super::{PmHeap, REGION_ROOTS};
+use crate::coordinator::{Mirror, ThreadCtx};
+use crate::replication::TxnShape;
+use crate::txn::Txn;
+use crate::{Addr, LINE};
+
+const TAG_LEAF: u64 = 0x4C00_0000_0000_0000;
+const TAG_INNER: u64 = 0x4900_0000_0000_0000;
+const TAG_MASK: u64 = 0xFF00_0000_0000_0000;
+
+/// Persistent crit-bit tree handle.
+#[derive(Clone, Debug)]
+pub struct CritBitTree {
+    root_ptr: Addr,
+    /// Volatile size counter (rebuildable by walking the tree).
+    len: u64,
+}
+
+impl CritBitTree {
+    /// Create a tree whose root pointer lives in slot `root_slot` of the
+    /// roots region.
+    pub fn new(root_slot: u64) -> Self {
+        CritBitTree {
+            root_ptr: REGION_ROOTS + root_slot * LINE,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn node_tag(m: &Mirror, node: Addr) -> u64 {
+        m.peek(node) & TAG_MASK
+    }
+    fn inner_bit(m: &Mirror, node: Addr) -> u32 {
+        (m.peek(node) & !TAG_MASK) as u32
+    }
+
+    /// Walk to the leaf that `key` would reach. Returns leaf address (0 if
+    /// the tree is empty). Advances thread time for each node load.
+    fn walk(&self, m: &mut Mirror, t: &mut ThreadCtx, key: u64) -> Addr {
+        let mut node = m.load(t, self.root_ptr);
+        while node != 0 && Self::node_tag(m, node) == TAG_INNER {
+            let bit = Self::inner_bit(m, node);
+            let side = (key >> bit) & 1;
+            node = m.load(t, node + LINE * (1 + side));
+        }
+        node
+    }
+
+    /// Lookup: `Some(value)` if present.
+    pub fn get(&self, m: &mut Mirror, t: &mut ThreadCtx, key: u64) -> Option<u64> {
+        let leaf = self.walk(m, t, key);
+        if leaf != 0 && m.load(t, leaf + LINE) == key {
+            Some(m.load(t, leaf + 2 * LINE))
+        } else {
+            None
+        }
+    }
+
+    /// Insert or update. Returns true if a new key was inserted.
+    pub fn insert(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        key: u64,
+        val: u64,
+        log: Addr,
+        hint: Option<TxnShape>,
+    ) -> bool {
+        let nearest = self.walk(m, t, key);
+        if nearest == 0 {
+            // Empty tree: install a leaf as root.
+            let leaf = heap.alloc(3);
+            let mut tx = Txn::begin(m, t, log, hint);
+            tx.write(m, t, leaf, TAG_LEAF);
+            tx.write(m, t, leaf + LINE, key);
+            tx.write(m, t, leaf + 2 * LINE, val);
+            tx.write(m, t, self.root_ptr, leaf);
+            tx.commit(m, t);
+            self.len = 1;
+            return true;
+        }
+        let nearest_key = m.load(t, nearest + LINE);
+        if nearest_key == key {
+            // Update in place.
+            let mut tx = Txn::begin(m, t, log, hint);
+            tx.write(m, t, nearest + 2 * LINE, val);
+            tx.commit(m, t);
+            return false;
+        }
+        // Critical bit: most significant differing bit.
+        let crit = 63 - (key ^ nearest_key).leading_zeros();
+        let new_side = (key >> crit) & 1;
+
+        // Find the insertion point: walk again until the next node's bit is
+        // below the critical bit (bits decrease toward the leaves).
+        let mut parent_slot = self.root_ptr; // slot holding the child ptr
+        let mut node = m.load(t, self.root_ptr);
+        while node != 0
+            && Self::node_tag(m, node) == TAG_INNER
+            && Self::inner_bit(m, node) > crit
+        {
+            let bit = Self::inner_bit(m, node);
+            let side = (key >> bit) & 1;
+            parent_slot = node + LINE * (1 + side);
+            node = m.load(t, parent_slot);
+        }
+
+        let leaf = heap.alloc(3);
+        let inner = heap.alloc(3);
+        let mut tx = Txn::begin(m, t, log, hint);
+        tx.write(m, t, leaf, TAG_LEAF);
+        tx.write(m, t, leaf + LINE, key);
+        tx.write(m, t, leaf + 2 * LINE, val);
+        tx.write(m, t, inner, TAG_INNER | crit as u64);
+        let (l, r) = if new_side == 0 {
+            (leaf, node)
+        } else {
+            (node, leaf)
+        };
+        tx.write(m, t, inner + LINE, l);
+        tx.write(m, t, inner + 2 * LINE, r);
+        tx.write(m, t, parent_slot, inner); // atomic splice-in
+        tx.commit(m, t);
+        self.len += 1;
+        true
+    }
+
+    /// Delete a key. Returns true if it was present.
+    pub fn remove(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        key: u64,
+        log: Addr,
+        hint: Option<TxnShape>,
+    ) -> bool {
+        let root = m.load(t, self.root_ptr);
+        if root == 0 {
+            return false;
+        }
+        // Walk with grandparent tracking.
+        let mut gp_slot: Addr = 0; // slot holding parent pointer
+        let mut parent: Addr = 0; // internal node above the leaf
+        let mut leaf_slot = self.root_ptr;
+        let mut node = root;
+        while Self::node_tag(m, node) == TAG_INNER {
+            let bit = Self::inner_bit(m, node);
+            let side = (key >> bit) & 1;
+            gp_slot = leaf_slot;
+            parent = node;
+            leaf_slot = node + LINE * (1 + side);
+            node = m.load(t, leaf_slot);
+        }
+        if m.load(t, node + LINE) != key {
+            return false;
+        }
+        let mut tx = Txn::begin(m, t, log, hint);
+        if parent == 0 {
+            // Leaf was the root.
+            tx.write(m, t, self.root_ptr, 0);
+        } else {
+            // Splice the sibling into the grandparent slot.
+            let side = if leaf_slot == parent + LINE { 0u64 } else { 1 };
+            let sibling = m.load(t, parent + LINE * (1 + (1 - side)));
+            tx.write(m, t, gp_slot, sibling);
+        }
+        tx.commit(m, t);
+        heap.free(node, 3);
+        if parent != 0 {
+            heap.free(parent, 3);
+        }
+        self.len -= 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, StrategyKind};
+    use crate::pstore::log_base_for;
+    use crate::util::Pcg64;
+
+    fn setup() -> (Mirror, ThreadCtx, PmHeap, CritBitTree) {
+        (
+            Mirror::new(Platform::default(), StrategyKind::NoSm, false),
+            ThreadCtx::new(0),
+            PmHeap::new(),
+            CritBitTree::new(0),
+        )
+    }
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let (mut m, mut t, mut h, mut tree) = setup();
+        let log = log_base_for(0);
+        for k in [5u64, 1, 9, 1 << 40, 0] {
+            assert!(tree.insert(&mut m, &mut t, &mut h, k, k * 10, log, None));
+        }
+        assert_eq!(tree.len(), 5);
+        for k in [5u64, 1, 9, 1 << 40, 0] {
+            assert_eq!(tree.get(&mut m, &mut t, k), Some(k * 10), "key {k}");
+        }
+        assert_eq!(tree.get(&mut m, &mut t, 777), None);
+    }
+
+    #[test]
+    fn update_existing_key() {
+        let (mut m, mut t, mut h, mut tree) = setup();
+        let log = log_base_for(0);
+        assert!(tree.insert(&mut m, &mut t, &mut h, 42, 1, log, None));
+        assert!(!tree.insert(&mut m, &mut t, &mut h, 42, 2, log, None));
+        assert_eq!(tree.get(&mut m, &mut t, 42), Some(2));
+        assert_eq!(tree.len(), 1);
+    }
+
+    #[test]
+    fn remove_keys() {
+        let (mut m, mut t, mut h, mut tree) = setup();
+        let log = log_base_for(0);
+        for k in 0..20u64 {
+            tree.insert(&mut m, &mut t, &mut h, k * 7, k, log, None);
+        }
+        for k in 0..10u64 {
+            assert!(tree.remove(&mut m, &mut t, &mut h, k * 7, log, None));
+        }
+        assert!(!tree.remove(&mut m, &mut t, &mut h, 3, log, None));
+        assert_eq!(tree.len(), 10);
+        for k in 0..20u64 {
+            let want = if k < 10 { None } else { Some(k) };
+            assert_eq!(tree.get(&mut m, &mut t, k * 7), want, "key {}", k * 7);
+        }
+    }
+
+    #[test]
+    fn randomized_against_std_btreemap() {
+        let (mut m, mut t, mut h, mut tree) = setup();
+        let log = log_base_for(0);
+        let mut oracle = std::collections::BTreeMap::new();
+        let mut rng = Pcg64::new(1234);
+        for _ in 0..500 {
+            let k = rng.next_below(100);
+            match rng.next_below(3) {
+                0 | 1 => {
+                    let v = rng.next_u64() | 1;
+                    tree.insert(&mut m, &mut t, &mut h, k, v, log, None);
+                    oracle.insert(k, v);
+                }
+                _ => {
+                    let a = tree.remove(&mut m, &mut t, &mut h, k, log, None);
+                    let b = oracle.remove(&k).is_some();
+                    assert_eq!(a, b, "remove {k}");
+                }
+            }
+            assert_eq!(tree.len(), oracle.len() as u64);
+        }
+        for (&k, &v) in &oracle {
+            assert_eq!(tree.get(&mut m, &mut t, k), Some(v));
+        }
+    }
+
+    #[test]
+    fn mutations_produce_epochs_and_writes() {
+        let (mut m, mut t, mut h, mut tree) = setup();
+        let log = log_base_for(0);
+        tree.insert(&mut m, &mut t, &mut h, 1, 1, log, None);
+        let epochs_one = t.epochs_done;
+        assert!(epochs_one >= 4, "expected multiple epochs, got {epochs_one}");
+        tree.insert(&mut m, &mut t, &mut h, 2, 2, log, None);
+        assert!(t.epochs_done > epochs_one);
+        assert!(t.writes_done > 0);
+    }
+}

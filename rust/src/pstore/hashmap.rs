@@ -1,0 +1,221 @@
+//! Persistent chained hashmap — the `hashmap` WHISPER workload (NVML
+//! heritage, like ctree).
+//!
+//! PM layout (one u64 field per line):
+//!   * bucket array: `nbuckets` head-pointer lines (allocated contiguously)
+//!   * node: [key, value, next] (3 lines)
+//!
+//! Collision chains are prepended (new node becomes the bucket head), so
+//! an insert is a small transaction (node init + head swap) and a remove
+//! splices `next` into the predecessor.
+
+use super::PmHeap;
+use crate::coordinator::{Mirror, ThreadCtx};
+use crate::replication::TxnShape;
+use crate::txn::Txn;
+use crate::util::fnv1a_u64;
+use crate::{Addr, LINE};
+
+/// Persistent hashmap handle.
+#[derive(Clone, Debug)]
+pub struct PHashMap {
+    buckets: Addr,
+    nbuckets: u64,
+    len: u64,
+}
+
+impl PHashMap {
+    /// Allocate the bucket array from `heap` (power-of-two `nbuckets`).
+    pub fn create(heap: &mut PmHeap, nbuckets: u64) -> Self {
+        assert!(nbuckets.is_power_of_two());
+        let buckets = heap.alloc(nbuckets as usize);
+        PHashMap {
+            buckets,
+            nbuckets,
+            len: 0,
+        }
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn bucket_slot(&self, key: u64) -> Addr {
+        self.buckets + (fnv1a_u64(key) & (self.nbuckets - 1)) * LINE
+    }
+
+    /// Bucket slot address (exposed for composite stores like
+    /// [`crate::pstore::KvStore`] that inline puts into larger txns).
+    pub fn bucket_slot_pub(&self, key: u64) -> Addr {
+        self.bucket_slot(key)
+    }
+
+    /// Bump the length counter (composite-store insert path).
+    pub fn len_inc(&mut self) {
+        self.len += 1;
+    }
+
+    /// Find `(pred_slot, node)` for a key: `pred_slot` is the line holding
+    /// the pointer to `node` (bucket head or predecessor's next field).
+    fn find(&self, m: &mut Mirror, t: &mut ThreadCtx, key: u64) -> (Addr, Addr) {
+        let mut slot = self.bucket_slot(key);
+        let mut node = m.load(t, slot);
+        while node != 0 {
+            if m.load(t, node) == key {
+                return (slot, node);
+            }
+            slot = node + 2 * LINE;
+            node = m.load(t, slot);
+        }
+        (slot, 0)
+    }
+
+    /// Lookup.
+    pub fn get(&self, m: &mut Mirror, t: &mut ThreadCtx, key: u64) -> Option<u64> {
+        let (_, node) = self.find(m, t, key);
+        if node != 0 {
+            Some(m.load(t, node + LINE))
+        } else {
+            None
+        }
+    }
+
+    /// Insert or update; returns true on fresh insert.
+    pub fn put(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        key: u64,
+        val: u64,
+        log: Addr,
+        hint: Option<TxnShape>,
+    ) -> bool {
+        let (_, node) = self.find(m, t, key);
+        if node != 0 {
+            let mut tx = Txn::begin(m, t, log, hint);
+            tx.write(m, t, node + LINE, val);
+            tx.commit(m, t);
+            return false;
+        }
+        let head_slot = self.bucket_slot(key);
+        let head = m.load(t, head_slot);
+        let new = heap.alloc(3);
+        let mut tx = Txn::begin(m, t, log, hint);
+        tx.write(m, t, new, key);
+        tx.write(m, t, new + LINE, val);
+        tx.write(m, t, new + 2 * LINE, head);
+        tx.write(m, t, head_slot, new); // atomic publish
+        tx.commit(m, t);
+        self.len += 1;
+        true
+    }
+
+    /// Remove; returns true if the key was present.
+    pub fn remove(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        key: u64,
+        log: Addr,
+        hint: Option<TxnShape>,
+    ) -> bool {
+        let (pred_slot, node) = self.find(m, t, key);
+        if node == 0 {
+            return false;
+        }
+        let next = m.load(t, node + 2 * LINE);
+        let mut tx = Txn::begin(m, t, log, hint);
+        tx.write(m, t, pred_slot, next);
+        tx.commit(m, t);
+        heap.free(node, 3);
+        self.len -= 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, StrategyKind};
+    use crate::pstore::log_base_for;
+    use crate::util::Pcg64;
+
+    fn setup() -> (Mirror, ThreadCtx, PmHeap, PHashMap) {
+        let mut heap = PmHeap::new();
+        let map = PHashMap::create(&mut heap, 64);
+        (
+            Mirror::new(Platform::default(), StrategyKind::NoSm, false),
+            ThreadCtx::new(0),
+            heap,
+            map,
+        )
+    }
+
+    #[test]
+    fn put_get_remove() {
+        let (mut m, mut t, mut h, mut map) = setup();
+        let log = log_base_for(0);
+        assert!(map.put(&mut m, &mut t, &mut h, 1, 10, log, None));
+        assert!(map.put(&mut m, &mut t, &mut h, 2, 20, log, None));
+        assert!(!map.put(&mut m, &mut t, &mut h, 1, 11, log, None));
+        assert_eq!(map.get(&mut m, &mut t, 1), Some(11));
+        assert_eq!(map.get(&mut m, &mut t, 2), Some(20));
+        assert_eq!(map.get(&mut m, &mut t, 3), None);
+        assert!(map.remove(&mut m, &mut t, &mut h, 1, log, None));
+        assert!(!map.remove(&mut m, &mut t, &mut h, 1, log, None));
+        assert_eq!(map.get(&mut m, &mut t, 1), None);
+        assert_eq!(map.len(), 1);
+    }
+
+    #[test]
+    fn chains_survive_collisions() {
+        // 64 buckets, 500 keys: heavy chaining.
+        let (mut m, mut t, mut h, mut map) = setup();
+        let log = log_base_for(0);
+        for k in 0..500u64 {
+            map.put(&mut m, &mut t, &mut h, k, k + 1000, log, None);
+        }
+        assert_eq!(map.len(), 500);
+        for k in 0..500u64 {
+            assert_eq!(map.get(&mut m, &mut t, k), Some(k + 1000), "key {k}");
+        }
+        // Remove every third key from the middles of chains.
+        for k in (0..500u64).step_by(3) {
+            assert!(map.remove(&mut m, &mut t, &mut h, k, log, None));
+        }
+        for k in 0..500u64 {
+            let want = if k % 3 == 0 { None } else { Some(k + 1000) };
+            assert_eq!(map.get(&mut m, &mut t, k), want, "key {k}");
+        }
+    }
+
+    #[test]
+    fn randomized_against_std_hashmap() {
+        let (mut m, mut t, mut h, mut map) = setup();
+        let log = log_base_for(0);
+        let mut oracle = std::collections::HashMap::new();
+        let mut rng = Pcg64::new(99);
+        for _ in 0..1000 {
+            let k = rng.next_below(200);
+            if rng.chance(0.6) {
+                let v = rng.next_u64() | 1;
+                map.put(&mut m, &mut t, &mut h, k, v, log, None);
+                oracle.insert(k, v);
+            } else {
+                assert_eq!(
+                    map.remove(&mut m, &mut t, &mut h, k, log, None),
+                    oracle.remove(&k).is_some()
+                );
+            }
+        }
+        assert_eq!(map.len(), oracle.len() as u64);
+        for (&k, &v) in &oracle {
+            assert_eq!(map.get(&mut m, &mut t, k), Some(v));
+        }
+    }
+}

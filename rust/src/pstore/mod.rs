@@ -1,0 +1,38 @@
+//! Persistent data structures — the substrate behind the WHISPER-like
+//! application suite (paper §7.2).
+//!
+//! All structures live in the simulated PM address space and perform every
+//! mutation through undo-log transactions ([`crate::txn::Txn`]) over the
+//! persistency-model API of [`crate::coordinator::Mirror`] — so the traces
+//! they generate (writes/epoch, epochs/txn, persist fraction) are produced
+//! by *real* data-structure algorithms, not synthetic replay.
+//!
+//! Layout convention: every logical field occupies one 64-byte line and
+//! holds one u64 word (see DESIGN.md §4 — the simulator models line-
+//! granular persistence, which is what the paper's clwb-level analysis
+//! observes).
+
+pub mod cbtree;
+pub mod hashmap;
+pub mod heap;
+pub mod kvstore;
+pub mod nstore;
+
+pub use cbtree::CritBitTree;
+pub use hashmap::PHashMap;
+pub use heap::PmHeap;
+pub use kvstore::KvStore;
+pub use nstore::NStore;
+
+use crate::Addr;
+
+/// PM address-space layout (per-region bases; regions never overlap for
+/// the workload sizes used — asserted by the heap).
+pub const REGION_HEAP: Addr = 0x0100_0000_0000;
+pub const REGION_LOGS: Addr = 0x0200_0000_0000;
+pub const REGION_ROOTS: Addr = 0x0300_0000_0000;
+
+/// Per-thread undo-log base (disjoint 1 MiB log areas).
+pub fn log_base_for(thread: usize) -> Addr {
+    REGION_LOGS + (thread as Addr) * 0x10_0000
+}

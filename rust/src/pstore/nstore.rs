@@ -1,0 +1,229 @@
+//! Mini N-store: a relational storage engine for persistent memory — the
+//! substrate of the YCSB and TPCC WHISPER workloads (paper §7.2: "two
+//! transaction processing workloads operating over N-store, a relational
+//! DBMS designed from scratch for persistent memories").
+//!
+//! Model: fixed-schema tables of u64 tuples. Rows live in PM (one line per
+//! field); primary-key indexes are volatile (N-store's opt-NVM variant
+//! rebuilds indexes on recovery) and map key -> row base address. All row
+//! mutations run under the caller's undo transaction so multi-row business
+//! transactions (TPCC new-order) are failure-atomic end to end.
+
+use super::PmHeap;
+use crate::coordinator::{Mirror, ThreadCtx};
+use crate::txn::Txn;
+use crate::{Addr, LINE};
+use std::collections::HashMap;
+
+/// A table handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TableId(pub usize);
+
+#[derive(Clone, Debug)]
+struct Table {
+    name: String,
+    fields: usize,
+    index: HashMap<u64, Addr>,
+}
+
+/// Mini relational store.
+#[derive(Clone, Debug, Default)]
+pub struct NStore {
+    tables: Vec<Table>,
+}
+
+impl NStore {
+    pub fn new() -> Self {
+        NStore { tables: Vec::new() }
+    }
+
+    /// Create a table with `fields` u64 columns (column 0 is the key).
+    pub fn create_table(&mut self, name: &str, fields: usize) -> TableId {
+        assert!(fields >= 1);
+        self.tables.push(Table {
+            name: name.to_string(),
+            fields,
+            index: HashMap::new(),
+        });
+        TableId(self.tables.len() - 1)
+    }
+
+    pub fn table_name(&self, t: TableId) -> &str {
+        &self.tables[t.0].name
+    }
+    pub fn rows(&self, t: TableId) -> usize {
+        self.tables[t.0].index.len()
+    }
+
+    /// Insert a full row inside transaction `tx`. Panics on duplicate key.
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        tx: &mut Txn,
+        heap: &mut PmHeap,
+        table: TableId,
+        row: &[u64],
+    ) -> Addr {
+        let tb = &mut self.tables[table.0];
+        assert_eq!(row.len(), tb.fields, "schema mismatch for {}", tb.name);
+        let key = row[0];
+        assert!(
+            !tb.index.contains_key(&key),
+            "duplicate key {key} in {}",
+            tb.name
+        );
+        let base = heap.alloc(tb.fields);
+        for (i, &v) in row.iter().enumerate() {
+            tx.write(m, t, base + (i as Addr) * LINE, v);
+        }
+        tb.index.insert(key, base);
+        base
+    }
+
+    /// Point lookup of one field (loads walk the simulated memory).
+    pub fn select(
+        &self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        table: TableId,
+        key: u64,
+        field: usize,
+    ) -> Option<u64> {
+        let tb = &self.tables[table.0];
+        debug_assert!(field < tb.fields);
+        tb.index
+            .get(&key)
+            .map(|&base| m.load(t, base + (field as Addr) * LINE))
+    }
+
+    /// Update one field of a row inside transaction `tx`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        tx: &mut Txn,
+        table: TableId,
+        key: u64,
+        field: usize,
+        val: u64,
+    ) -> bool {
+        let tb = &self.tables[table.0];
+        debug_assert!(field < tb.fields);
+        match tb.index.get(&key) {
+            Some(&base) => {
+                tx.write(m, t, base + (field as Addr) * LINE, val);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Delete a row inside transaction `tx` (tombstone the key field; the
+    /// index entry is dropped; space is reclaimed).
+    pub fn delete(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        tx: &mut Txn,
+        heap: &mut PmHeap,
+        table: TableId,
+        key: u64,
+    ) -> bool {
+        let tb = &mut self.tables[table.0];
+        match tb.index.remove(&key) {
+            Some(base) => {
+                tx.write(m, t, base, u64::MAX); // tombstone
+                heap.free(base, tb.fields);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, StrategyKind};
+    use crate::pstore::log_base_for;
+
+    fn setup() -> (Mirror, ThreadCtx, PmHeap, NStore) {
+        (
+            Mirror::new(Platform::default(), StrategyKind::NoSm, false),
+            ThreadCtx::new(0),
+            PmHeap::new(),
+            NStore::new(),
+        )
+    }
+
+    #[test]
+    fn insert_select_update() {
+        let (mut m, mut t, mut h, mut db) = setup();
+        let log = log_base_for(0);
+        let users = db.create_table("users", 3);
+
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        db.insert(&mut m, &mut t, &mut tx, &mut h, users, &[1, 100, 200]);
+        db.insert(&mut m, &mut t, &mut tx, &mut h, users, &[2, 101, 201]);
+        tx.commit(&mut m, &mut t);
+
+        assert_eq!(db.select(&mut m, &mut t, users, 1, 1), Some(100));
+        assert_eq!(db.select(&mut m, &mut t, users, 2, 2), Some(201));
+        assert_eq!(db.select(&mut m, &mut t, users, 9, 0), None);
+
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        assert!(db.update(&mut m, &mut t, &mut tx, users, 1, 1, 999));
+        tx.commit(&mut m, &mut t);
+        assert_eq!(db.select(&mut m, &mut t, users, 1, 1), Some(999));
+        assert_eq!(db.rows(users), 2);
+    }
+
+    #[test]
+    fn delete_removes_row() {
+        let (mut m, mut t, mut h, mut db) = setup();
+        let log = log_base_for(0);
+        let tb = db.create_table("t", 2);
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        db.insert(&mut m, &mut t, &mut tx, &mut h, tb, &[7, 70]);
+        tx.commit(&mut m, &mut t);
+
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        assert!(db.delete(&mut m, &mut t, &mut tx, &mut h, tb, 7));
+        assert!(!db.delete(&mut m, &mut t, &mut tx, &mut h, tb, 7));
+        tx.commit(&mut m, &mut t);
+        assert_eq!(db.select(&mut m, &mut t, tb, 7, 1), None);
+        assert_eq!(db.rows(tb), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate key")]
+    fn duplicate_keys_rejected() {
+        let (mut m, mut t, mut h, mut db) = setup();
+        let log = log_base_for(0);
+        let tb = db.create_table("t", 2);
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        db.insert(&mut m, &mut t, &mut tx, &mut h, tb, &[1, 1]);
+        db.insert(&mut m, &mut t, &mut tx, &mut h, tb, &[1, 2]);
+        tx.commit(&mut m, &mut t);
+    }
+
+    #[test]
+    fn multi_row_txn_is_one_transaction() {
+        let (mut m, mut t, mut h, mut db) = setup();
+        let log = log_base_for(0);
+        let tb = db.create_table("orders", 8);
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        for k in 0..5u64 {
+            let row: Vec<u64> = (0..8).map(|f| k * 10 + f).collect();
+            db.insert(&mut m, &mut t, &mut tx, &mut h, tb, &row);
+        }
+        tx.commit(&mut m, &mut t);
+        assert_eq!(t.txns_done, 1);
+        assert_eq!(db.rows(tb), 5);
+        // 5 rows x 8 fields x 2 epochs + commit.
+        assert!(t.epochs_done >= 80, "epochs {}", t.epochs_done);
+    }
+}

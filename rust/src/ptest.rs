@@ -1,0 +1,232 @@
+//! Mini property-testing harness (the offline registry has no `proptest`).
+//!
+//! Provides seeded random-case generation with failure shrinking over u64
+//! tuples: on a failing case, each coordinate is independently bisected
+//! toward its minimum to report a small counterexample. Used by the
+//! coordinator/recovery invariant tests.
+//!
+//! ```no_run
+//! use pmsm::ptest::{Gen, check};
+//! check("addition commutes", 200, |g: &mut Gen| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::Pcg64;
+
+/// Per-case value generator; records drawn values for shrinking.
+pub struct Gen {
+    rng: Pcg64,
+    /// (lo, hi, drawn) per draw site, in draw order.
+    trace: Vec<(u64, u64, u64)>,
+    /// When replaying a shrunk candidate: forced values per draw index.
+    forced: Vec<Option<u64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            rng: Pcg64::new(seed),
+            trace: Vec::new(),
+            forced: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    fn with_forced(seed: u64, forced: Vec<Option<u64>>) -> Self {
+        Gen {
+            rng: Pcg64::new(seed),
+            trace: Vec::new(),
+            forced,
+            cursor: 0,
+        }
+    }
+
+    /// Uniform u64 in `[lo, hi]` (inclusive).
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        let raw = if hi == lo {
+            lo
+        } else {
+            lo + self.rng.next_below(hi - lo + 1)
+        };
+        let v = match self.forced.get(self.cursor).copied().flatten() {
+            Some(f) => f.clamp(lo, hi),
+            None => raw,
+        };
+        self.trace.push((lo, hi, v));
+        self.cursor += 1;
+        v
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self) -> bool {
+        self.u64(0, 1) == 1
+    }
+
+    /// Pick an element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+}
+
+/// Outcome of one property run.
+struct CaseResult {
+    panicked: bool,
+}
+
+fn run_case<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(
+    f: &F,
+    seed: u64,
+    forced: Vec<Option<u64>>,
+) -> CaseResult {
+    let result = std::panic::catch_unwind(|| {
+        let mut g = Gen::with_forced(seed, forced);
+        f(&mut g);
+        g.trace
+    });
+    match result {
+        Ok(_trace) => CaseResult { panicked: false },
+        Err(_) => CaseResult { panicked: true },
+    }
+}
+
+/// Run `cases` random cases of property `f`; on failure, shrink and panic
+/// with the minimal trace found. Deterministic per (name, case index).
+pub fn check<F>(name: &str, cases: u64, f: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    let base = crate::util::fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        // First pass records the trace (un-forced).
+        let probe = {
+            let mut g = Gen::new(seed);
+            // Capture the trace even on panic by re-running below.
+            let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut g);
+            }))
+            .is_ok();
+            (ok, g.trace)
+        };
+        if probe.0 {
+            continue;
+        }
+        // Failure: shrink each drawn value toward its lower bound.
+        let mut forced: Vec<Option<u64>> = probe.1.iter().map(|&(_, _, v)| Some(v)).collect();
+        let bounds: Vec<(u64, u64)> = probe.1.iter().map(|&(lo, hi, _)| (lo, hi)).collect();
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for k in 0..forced.len() {
+                let (lo, _hi) = bounds[k];
+                let cur = forced[k].unwrap_or(lo);
+                if cur == lo {
+                    continue;
+                }
+                // Bisect toward lo while still failing.
+                let mut hi_fail = cur;
+                let mut lo_pass = lo;
+                // Try the minimum outright first.
+                let mut cand = forced.clone();
+                cand[k] = Some(lo);
+                if run_case(&f, seed, cand).panicked {
+                    forced[k] = Some(lo);
+                    changed = true;
+                    continue;
+                }
+                while hi_fail - lo_pass > 1 {
+                    let mid = lo_pass + (hi_fail - lo_pass) / 2;
+                    let mut cand = forced.clone();
+                    cand[k] = Some(mid);
+                    if run_case(&f, seed, cand).panicked {
+                        hi_fail = mid;
+                    } else {
+                        lo_pass = mid;
+                    }
+                }
+                if hi_fail != cur {
+                    forced[k] = Some(hi_fail);
+                    changed = true;
+                }
+            }
+        }
+        let shrunk = run_case(&f, seed, forced.clone());
+        let vals: Vec<u64> = if shrunk.panicked {
+            forced.iter().map(|v| v.unwrap_or(0)).collect()
+        } else {
+            probe.1.iter().map(|&(_, _, v)| v).collect()
+        };
+        panic!(
+            "property {name:?} failed at case {i} (seed {seed}): \
+             minimal draws = {vals:?}"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |g| {
+            let a = g.u64(0, 100);
+            let b = g.u64(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check("fails-over-10", 100, |g| {
+                let v = g.u64(0, 1000);
+                assert!(v <= 10, "too big");
+            });
+        });
+        let msg = match r {
+            Ok(()) => panic!("property should have failed"),
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+        };
+        // The shrunk counterexample should be exactly 11.
+        assert!(msg.contains("[11]"), "shrink failed: {msg}");
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            let v = g.u64(5, 9);
+            assert!((5..=9).contains(&v));
+        }
+        assert_eq!(g.u64(3, 3), 3);
+    }
+
+    #[test]
+    fn pick_and_bool_work() {
+        let mut g = Gen::new(2);
+        let xs = [1, 2, 3];
+        for _ in 0..20 {
+            assert!(xs.contains(g.pick(&xs)));
+        }
+        let mut seen = [false; 2];
+        for _ in 0..50 {
+            seen[g.bool() as usize] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+}

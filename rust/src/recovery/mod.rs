@@ -1,0 +1,287 @@
+//! Failure injection + recovery checking.
+//!
+//! The paper's two transactional guarantees are verified mechanically
+//! against the backup's durability ledger:
+//!
+//! * **Guarantee-1 (failure atomicity)** — crash the system at an
+//!   arbitrary instant, reconstruct the backup PM image from the ledger,
+//!   run undo-log recovery, and require the resulting data state to equal
+//!   the state after some *prefix* of committed transactions.
+//! * **Guarantee-2 (durability)** — that prefix must include every
+//!   transaction whose durability fence completed before the crash.
+//!
+//! Plus the epoch-ordering invariant that underpins both: a later-epoch
+//! write must never be durable while an earlier-epoch write of the same
+//! thread is not.
+
+use crate::mem::DurabilityLog;
+use crate::txn::undo::rollback_plan;
+use crate::{Addr, Ns};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Golden transaction history recorded by a (single-threaded) workload:
+/// `snapshots[k]` is the data image after `k` committed transactions;
+/// `dfences[k]` the completion time of transaction `k`'s durability fence.
+#[derive(Clone, Debug, Default)]
+pub struct TxnHistory {
+    pub snapshots: Vec<HashMap<Addr, u64>>,
+    pub dfences: Vec<Ns>,
+}
+
+impl TxnHistory {
+    pub fn new(initial: HashMap<Addr, u64>) -> Self {
+        TxnHistory {
+            snapshots: vec![initial],
+            dfences: Vec::new(),
+        }
+    }
+
+    /// Record a committed transaction's post-image + dfence completion.
+    pub fn commit(&mut self, image: HashMap<Addr, u64>, dfence: Ns) {
+        self.snapshots.push(image);
+        self.dfences.push(dfence);
+    }
+
+    pub fn committed(&self) -> usize {
+        self.dfences.len()
+    }
+
+    /// Transactions durably committed by time `t`.
+    pub fn durable_by(&self, t: Ns) -> usize {
+        self.dfences.iter().filter(|&&d| d <= t).count()
+    }
+}
+
+/// Reconstruct the post-crash, post-recovery data image: ledger replay up
+/// to `crash_t`, then undo-rollback of any active logs.
+pub fn recover_image(
+    ledger: &DurabilityLog,
+    crash_t: Ns,
+    log_bases: &[Addr],
+) -> HashMap<Addr, u64> {
+    let mut img = ledger.image_at(crash_t);
+    for &log in log_bases {
+        for (addr, old) in rollback_plan(&img, log) {
+            img.insert(crate::line_of(addr), old);
+        }
+    }
+    img
+}
+
+/// Compare a recovered image to a snapshot over the given data addresses
+/// (absent keys read as 0 — never-written PM).
+fn matches_snapshot(
+    img: &HashMap<Addr, u64>,
+    snap: &HashMap<Addr, u64>,
+    data_addrs: &[Addr],
+) -> bool {
+    data_addrs.iter().all(|a| {
+        img.get(a).copied().unwrap_or(0) == snap.get(a).copied().unwrap_or(0)
+    })
+}
+
+/// Check Guarantee-1 + Guarantee-2 for a crash at `crash_t`.
+/// Returns the recovered prefix length `k` on success.
+pub fn check_crash(
+    ledger: &DurabilityLog,
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    crash_t: Ns,
+) -> Result<usize> {
+    let img = recover_image(ledger, crash_t, log_bases);
+    // Search newest-first: the recovered state is the *latest* consistent
+    // prefix (later snapshots subsume earlier on overwritten addresses).
+    let k = (0..history.snapshots.len())
+        .rev()
+        .find(|&k| matches_snapshot(&img, &history.snapshots[k], data_addrs));
+    let Some(k) = k else {
+        bail!(
+            "failure atomicity violated at crash t={crash_t}: recovered \
+             image matches no committed prefix"
+        );
+    };
+    let durable = history.durable_by(crash_t);
+    if k < durable {
+        bail!(
+            "durability violated at crash t={crash_t}: {durable} txns had \
+             completed their dfence but only prefix {k} survived"
+        );
+    }
+    Ok(k)
+}
+
+/// Sweep crash instants across the ledger (every event time, its
+/// predecessor instant, and midpoints) and check them all.
+pub fn check_all_crashes(
+    ledger: &DurabilityLog,
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+) -> Result<u64> {
+    let mut times: Vec<Ns> = ledger.events().iter().map(|e| e.at).collect();
+    times.sort_unstable();
+    times.dedup();
+    let mut checked = 0u64;
+    let sample = |t: Ns| -> Result<()> {
+        check_crash(ledger, history, log_bases, data_addrs, t).map(|_| ())
+    };
+    sample(0)?;
+    checked += 1;
+    for w in times.windows(2) {
+        for t in [w[0], w[0] + (w[1] - w[0]) / 2] {
+            sample(t)?;
+            checked += 1;
+        }
+    }
+    if let Some(&last) = times.last() {
+        sample(last)?;
+        sample(last + 1)?;
+        checked += 2;
+    }
+    Ok(checked)
+}
+
+/// Epoch-ordering invariant over the ledger: for any two events of the
+/// same thread, lexicographically earlier (txn, epoch) must not persist
+/// strictly later. O(n log n) via per-thread sort.
+pub fn check_epoch_ordering(ledger: &DurabilityLog) -> Result<()> {
+    let mut per_thread: HashMap<u32, Vec<(u64, u32, Ns, u64)>> = HashMap::new();
+    for e in ledger.events() {
+        per_thread
+            .entry(e.thread)
+            .or_default()
+            .push((e.txn, e.epoch, e.at, e.seq));
+    }
+    for (thread, mut evs) in per_thread {
+        evs.sort_unstable_by_key(|&(txn, epoch, _, seq)| (txn, epoch, seq));
+        // Walk in (txn, epoch) order; persist times of *later* epochs must
+        // never fall below the running max of earlier epochs.
+        let mut prev_epoch_max: Ns = 0; // max persist over all earlier epochs
+        let mut cur_coord = (u64::MAX, u32::MAX);
+        let mut cur_max: Ns = 0;
+        for (txn, epoch, at, _) in evs {
+            if (txn, epoch) != cur_coord {
+                prev_epoch_max = prev_epoch_max.max(cur_max);
+                cur_coord = (txn, epoch);
+                cur_max = 0;
+            }
+            if at < prev_epoch_max {
+                bail!(
+                    "epoch ordering violated for thread {thread}: \
+                     (txn {txn}, epoch {epoch}) persisted at {at} before an \
+                     earlier epoch's write at {prev_epoch_max}"
+                );
+            }
+            cur_max = cur_max.max(at);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, StrategyKind};
+    use crate::coordinator::{Mirror, ThreadCtx};
+    use crate::txn::Txn;
+
+    const LOG: Addr = 0x10_0000;
+    const D0: Addr = 0x20_0000;
+    const D1: Addr = 0x20_0040;
+
+    /// Run `n` txns alternating writes to D0/D1; return (mirror, history).
+    fn run_workload(kind: StrategyKind, n: u64) -> (Mirror, TxnHistory) {
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        let mut hist = TxnHistory::new(HashMap::new());
+        for i in 0..n {
+            let mut tx = Txn::begin(&mut m, &mut t, LOG, None);
+            tx.write(&mut m, &mut t, D0, 100 + i);
+            tx.write(&mut m, &mut t, D1, 200 + i);
+            tx.commit(&mut m, &mut t);
+            let mut snap = HashMap::new();
+            snap.insert(D0, 100 + i);
+            snap.insert(D1, 200 + i);
+            hist.commit(snap, t.last_dfence);
+        }
+        (m, hist)
+    }
+
+    #[test]
+    fn every_strategy_survives_all_crash_points() {
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            let (m, hist) = run_workload(kind, 5);
+            let checked = check_all_crashes(
+                &m.rdma.remote.ledger,
+                &hist,
+                &[LOG],
+                &[D0, D1],
+            )
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            assert!(checked > 10, "{kind:?}: only {checked} crash points");
+        }
+    }
+
+    #[test]
+    fn epoch_ordering_holds_for_every_strategy() {
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            let (m, _) = run_workload(kind, 5);
+            check_epoch_ordering(&m.rdma.remote.ledger)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+    }
+
+    #[test]
+    fn detects_fabricated_ordering_violation() {
+        use crate::mem::DurEvent;
+        let mut ledger = DurabilityLog::new(true);
+        ledger.record(DurEvent {
+            addr: D0,
+            val: 1,
+            at: 100,
+            thread: 0,
+            txn: 0,
+            epoch: 1, // later epoch...
+            seq: 1,
+        });
+        ledger.record(DurEvent {
+            addr: D1,
+            val: 1,
+            at: 200, // ...but the earlier epoch persists later
+            thread: 0,
+            txn: 0,
+            epoch: 0,
+            seq: 0,
+        });
+        assert!(check_epoch_ordering(&ledger).is_err());
+    }
+
+    #[test]
+    fn detects_durability_violation() {
+        // History claims txn 0's dfence completed at t=50, but nothing is
+        // durable by then: Guarantee-2 must fail for a crash at t=50.
+        let (m, mut hist) = run_workload(StrategyKind::SmOb, 1);
+        hist.dfences[0] = 50;
+        let err = check_crash(&m.rdma.remote.ledger, &hist, &[LOG], &[D0, D1], 50);
+        assert!(err.is_err(), "expected durability violation");
+    }
+
+    #[test]
+    fn recovery_rolls_back_active_log() {
+        // Crash right before the commit of txn 2 (data written, log still
+        // active): recovery must restore txn-1 values.
+        let (m, hist) = run_workload(StrategyKind::SmDd, 2);
+        let ledger = &m.rdma.remote.ledger;
+        // Find a crash point where txn 1 (0-based) data is durable but its
+        // commit (log invalidation) is not: just before the last event.
+        let evs = ledger.events();
+        let last = evs.iter().map(|e| e.at).max().unwrap();
+        let k = check_crash(ledger, &hist, &[LOG], &[D0, D1], last - 1).unwrap();
+        assert!(k <= 2);
+        // At the very end everything is durable.
+        let k = check_crash(ledger, &hist, &[LOG], &[D0, D1], last).unwrap();
+        assert_eq!(k, 2);
+    }
+}

@@ -1,0 +1,157 @@
+//! SM-AD: model-driven adaptive strategy (our extension, motivated by the
+//! paper's observation that "SM-OB and SM-DD are suitable to different
+//! kinds of transactions").
+//!
+//! At each transaction begin, SM-AD consults a latency predictor — in
+//! production wiring, the AOT-compiled JAX/Pallas model executed through
+//! PJRT ([`crate::runtime`]) — with the transaction's shape hint
+//! (epochs/txn, writes/epoch) and adopts SM-OB or SM-DD behaviour for the
+//! whole transaction. Mixing per transaction is safe: both strategies'
+//! durability fences cover all prior writes of the thread regardless of
+//! the path each write took.
+
+use super::{Strategy, TxnShape};
+use crate::config::StrategyKind;
+use crate::net::{Rdma, WriteMeta};
+use crate::sim::ThreadClock;
+
+/// Latency predictor: `(epochs, writes) -> (lat_ob_ns, lat_dd_ns)`.
+pub type Predictor = Box<dyn Fn(f32, f32) -> (f32, f32)>;
+
+/// Behaviour adopted for the current transaction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Ob,
+    Dd,
+}
+
+/// Model-driven adaptive OB/DD strategy.
+pub struct SmAd {
+    predictor: Predictor,
+    mode: Mode,
+    /// Stats: transactions routed to each mode.
+    pub chose_ob: u64,
+    pub chose_dd: u64,
+}
+
+impl SmAd {
+    pub fn new(predictor: Predictor) -> Self {
+        SmAd {
+            predictor,
+            mode: Mode::Dd,
+            chose_ob: 0,
+            chose_dd: 0,
+        }
+    }
+}
+
+impl Strategy for SmAd {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::SmAd
+    }
+
+    fn on_txn_begin(
+        &mut self,
+        _rdma: &mut Rdma,
+        _t: &mut ThreadClock,
+        hint: Option<TxnShape>,
+    ) {
+        if let Some(shape) = hint {
+            let (ob, dd) = (self.predictor)(shape.epochs, shape.writes);
+            self.mode = if ob < dd { Mode::Ob } else { Mode::Dd };
+        }
+        match self.mode {
+            Mode::Ob => self.chose_ob += 1,
+            Mode::Dd => self.chose_dd += 1,
+        }
+    }
+
+    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
+        match self.mode {
+            Mode::Ob => r.post_write_wt(t, m),
+            Mode::Dd => r.post_write_nt(t, m),
+        }
+    }
+
+    fn on_ofence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        if self.mode == Mode::Ob {
+            r.rofence(t);
+        }
+    }
+
+    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        match self.mode {
+            Mode::Ob => r.rdfence(t),
+            Mode::Dd => r.read_fence(t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Platform;
+
+    fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
+        WriteMeta {
+            addr,
+            val: seq,
+            thread: 0,
+            txn: 0,
+            epoch,
+            seq,
+        }
+    }
+
+    #[test]
+    fn picks_mode_from_predictor() {
+        // Predictor: OB wins iff epochs > 64.
+        let mut s = SmAd::new(Box::new(|e, _w| {
+            if e > 64.0 {
+                (1.0, 2.0)
+            } else {
+                (2.0, 1.0)
+            }
+        }));
+        let mut r = Rdma::new(&Platform::default(), true);
+        let mut t = ThreadClock::new(0);
+
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 256.0, writes: 1.0 }));
+        assert_eq!(s.mode, Mode::Ob);
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 4.0, writes: 1.0 }));
+        assert_eq!(s.mode, Mode::Dd);
+        assert_eq!((s.chose_ob, s.chose_dd), (1, 1));
+    }
+
+    #[test]
+    fn no_hint_keeps_previous_mode() {
+        let mut s = SmAd::new(Box::new(|_, _| (1.0, 2.0)));
+        let mut r = Rdma::new(&Platform::default(), true);
+        let mut t = ThreadClock::new(0);
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 1.0, writes: 1.0 }));
+        assert_eq!(s.mode, Mode::Ob);
+        s.on_txn_begin(&mut r, &mut t, None);
+        assert_eq!(s.mode, Mode::Ob);
+    }
+
+    #[test]
+    fn mixed_modes_still_replicate_everything() {
+        let mut s = SmAd::new(Box::new(|e, _| if e > 2.0 { (1.0, 2.0) } else { (2.0, 1.0) }));
+        let mut r = Rdma::new(&Platform::default(), true);
+        let mut t = ThreadClock::new(0);
+        // Txn 1 -> DD mode; txn 2 -> OB mode.
+        for (txn, epochs) in [(0u64, 1.0f32), (1, 8.0)] {
+            s.on_txn_begin(
+                &mut r,
+                &mut t,
+                Some(TxnShape { epochs, writes: 1.0 }),
+            );
+            for epoch in 0..2u32 {
+                s.on_clwb(&mut r, &mut t, meta(0x40 * (1 + txn * 2 + epoch as u64), epoch, 0));
+                s.on_ofence(&mut r, &mut t);
+            }
+            s.on_dfence(&mut r, &mut t);
+        }
+        assert_eq!(r.remote.ledger.len(), 4);
+    }
+}

@@ -1,0 +1,92 @@
+//! Replication strategies (paper §5, Table 1).
+//!
+//! A [`Strategy`] maps the primary's persistency-model events — `clwb`
+//! (dirty line identified), `sfence` (ordering point / epoch boundary),
+//! `dfence` (durability point / transaction end) — onto RDMA verbs:
+//!
+//! | event   | NO-SM | SM-RC     | SM-OB        | SM-DD          |
+//! |---------|-------|-----------|--------------|----------------|
+//! | clwb    | —     | write()   | write_wt()   | write_nt() @QP0|
+//! | sfence  | —     | rcommit() | rofence()    | — (implicit)   |
+//! | dfence  | —     | rcommit() | rdfence()    | read(sentinel) |
+//!
+//! plus the model-driven adaptive strategy (ours) that picks SM-OB or
+//! SM-DD per transaction using the AOT latency model.
+
+pub mod adaptive;
+pub mod strategies;
+
+pub use adaptive::{Predictor, SmAd};
+pub use strategies::{NoSm, SmDd, SmOb, SmRc};
+
+use crate::config::StrategyKind;
+use crate::net::{Rdma, WriteMeta};
+use crate::sim::ThreadClock;
+
+/// Hint describing the shape of an upcoming transaction (adaptive use).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TxnShape {
+    /// Expected epochs per transaction.
+    pub epochs: f32,
+    /// Expected writes per epoch.
+    pub writes: f32,
+}
+
+/// A replication strategy: reacts to the primary's persistency events.
+pub trait Strategy {
+    fn kind(&self) -> StrategyKind;
+
+    /// A dirty persistent line was identified (`clwb`): replicate it.
+    fn on_clwb(&mut self, rdma: &mut Rdma, t: &mut ThreadClock, meta: WriteMeta);
+
+    /// Ordering point (`sfence` between epochs).
+    fn on_ofence(&mut self, rdma: &mut Rdma, t: &mut ThreadClock);
+
+    /// Durability point (transaction end).
+    fn on_dfence(&mut self, rdma: &mut Rdma, t: &mut ThreadClock);
+
+    /// Transaction start (shape hint for adaptive strategies).
+    fn on_txn_begin(
+        &mut self,
+        _rdma: &mut Rdma,
+        _t: &mut ThreadClock,
+        _hint: Option<TxnShape>,
+    ) {
+    }
+}
+
+/// Construct a strategy by kind. `SmAd` takes the prediction function
+/// (wired to the PJRT runtime by the caller, or the closed-form fallback).
+pub fn make_strategy(
+    kind: StrategyKind,
+    predictor: Option<Predictor>,
+) -> Box<dyn Strategy> {
+    match kind {
+        StrategyKind::NoSm => Box::new(NoSm),
+        StrategyKind::SmRc => Box::new(SmRc),
+        StrategyKind::SmOb => Box::new(SmOb),
+        StrategyKind::SmDd => Box::new(SmDd),
+        StrategyKind::SmAd => Box::new(SmAd::new(
+            predictor.expect("SmAd requires a predictor; see runtime::model"),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_all_fixed_strategies() {
+        for kind in StrategyKind::ALL {
+            let s = make_strategy(kind, None);
+            assert_eq!(s.kind(), kind);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "SmAd requires a predictor")]
+    fn adaptive_requires_predictor() {
+        let _ = make_strategy(StrategyKind::SmAd, None);
+    }
+}

@@ -1,0 +1,187 @@
+//! The four fixed replication strategies of the paper (Table 1).
+
+use super::Strategy;
+use crate::config::StrategyKind;
+use crate::net::{Rdma, WriteMeta};
+use crate::sim::ThreadClock;
+
+/// NO-SM: local persistence only (hypothetical performance upper bound).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoSm;
+
+impl Strategy for NoSm {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::NoSm
+    }
+    fn on_clwb(&mut self, _r: &mut Rdma, _t: &mut ThreadClock, _m: WriteMeta) {}
+    fn on_ofence(&mut self, _r: &mut Rdma, _t: &mut ThreadClock) {}
+    fn on_dfence(&mut self, _r: &mut Rdma, _t: &mut ThreadClock) {}
+}
+
+/// SM-RC: one RDMA write per clwb, one blocking `rcommit` per fence —
+/// the overloaded-primitive design built on the Talpey-Pinkerton draft.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SmRc;
+
+impl Strategy for SmRc {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::SmRc
+    }
+    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
+        r.post_write(t, m);
+    }
+    fn on_ofence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        // rcommit provides (overloaded) ordering: blocking at every epoch.
+        r.rcommit(t);
+    }
+    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        r.rcommit(t);
+    }
+}
+
+/// SM-OB (ours): write-through writes + posted `rofence` per epoch + one
+/// blocking `rdfence` per transaction — ordering decoupled from durability.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SmOb;
+
+impl Strategy for SmOb {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::SmOb
+    }
+    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
+        r.post_write_wt(t, m);
+    }
+    fn on_ofence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        r.rofence(t); // posted: the thread does not block
+    }
+    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        r.rdfence(t);
+    }
+}
+
+/// SM-DD (ours): DDIO disabled on the backup; non-temporal writes through
+/// a single QP give implicit program-order persistence; durability is one
+/// sentinel RDMA read.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SmDd;
+
+impl Strategy for SmDd {
+    fn kind(&self) -> StrategyKind {
+        StrategyKind::SmDd
+    }
+    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
+        r.post_write_nt(t, m);
+    }
+    fn on_ofence(&mut self, _r: &mut Rdma, _t: &mut ThreadClock) {
+        // Implicit ordering: single QP + ordered non-posted PCIe writes.
+    }
+    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+        r.read_fence(t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Platform;
+
+    fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
+        WriteMeta {
+            addr,
+            val: seq,
+            thread: 0,
+            txn: 0,
+            epoch,
+            seq,
+        }
+    }
+
+    /// Drive one 2-epoch, 1-write-per-epoch transaction through a strategy;
+    /// return (thread time, persists on backup).
+    fn run_txn(s: &mut dyn Strategy) -> (u64, usize) {
+        let mut r = Rdma::new(&Platform::default(), true);
+        let mut t = ThreadClock::new(0);
+        s.on_clwb(&mut r, &mut t, meta(0x40, 0, 0));
+        s.on_ofence(&mut r, &mut t);
+        s.on_clwb(&mut r, &mut t, meta(0x80, 1, 1));
+        s.on_ofence(&mut r, &mut t);
+        s.on_dfence(&mut r, &mut t);
+        (t.now, r.remote.ledger.len())
+    }
+
+    #[test]
+    fn no_sm_is_free_and_replicates_nothing() {
+        let (time, persists) = run_txn(&mut NoSm);
+        assert_eq!(time, 0);
+        assert_eq!(persists, 0);
+    }
+
+    #[test]
+    fn all_sm_strategies_replicate_both_writes() {
+        for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
+            let (_, persists) = run_txn(s);
+            assert_eq!(persists, 2, "{:?}", s.kind());
+        }
+    }
+
+    #[test]
+    fn rc_pays_per_epoch_round_trips() {
+        let (rc_time, _) = run_txn(&mut SmRc);
+        let (ob_time, _) = run_txn(&mut SmOb);
+        let (dd_time, _) = run_txn(&mut SmDd);
+        // RC blocks on rcommit at *every* epoch: ~3 RTTs. OB/DD block once.
+        assert!(
+            rc_time > 2 * ob_time.min(dd_time),
+            "rc={rc_time} ob={ob_time} dd={dd_time}"
+        );
+        assert!(rc_time >= 3 * 2600, "rc={rc_time}");
+    }
+
+    #[test]
+    fn ob_and_dd_block_roughly_one_rtt() {
+        let (ob_time, _) = run_txn(&mut SmOb);
+        let (dd_time, _) = run_txn(&mut SmDd);
+        for (name, time) in [("ob", ob_time), ("dd", dd_time)] {
+            assert!(
+                (2600..2 * 2600).contains(&time),
+                "{name}={time} should be ~1 RTT"
+            );
+        }
+    }
+
+    #[test]
+    fn epoch_order_preserved_by_every_strategy() {
+        for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
+            let kind = s.kind();
+            let mut r = Rdma::new(&Platform::default(), true);
+            let mut t = ThreadClock::new(0);
+            for epoch in 0..8u32 {
+                for wi in 0..2u64 {
+                    s.on_clwb(
+                        &mut r,
+                        &mut t,
+                        meta(0x40 * (1 + epoch as u64 * 2 + wi), epoch, epoch as u64 * 2 + wi),
+                    );
+                }
+                s.on_ofence(&mut r, &mut t);
+            }
+            s.on_dfence(&mut r, &mut t);
+            let evs = r.remote.ledger.events();
+            assert_eq!(evs.len(), 16, "{kind}");
+            for a in evs {
+                for b in evs {
+                    if a.epoch < b.epoch {
+                        assert!(
+                            a.at <= b.at,
+                            "{kind}: epoch {} persisted at {} after epoch {} at {}",
+                            a.epoch,
+                            a.at,
+                            b.epoch,
+                            b.at
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

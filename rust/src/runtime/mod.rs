@@ -1,0 +1,236 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and serves them to the coordinator.
+//!
+//! Two artifacts (built by `make artifacts`, see `python/compile/aot.py`):
+//!
+//! * `latency_model.hlo.txt` — the L2 strategy-latency model
+//!   (`f32[256] e, f32[256] w, f32[16] params -> (f32[256,4] lat,
+//!   f32[256,3] slowdown)`), used by the SM-AD adaptive strategy and the
+//!   `analytic` CLI command;
+//! * `cache_index.hlo.txt` — the L1 complex-addressing set-index kernel
+//!   (`u64[1024] addr, u64[8] masks, u64[2] meta -> i32[1024]`), used for
+//!   bulk trace annotation and cross-checked against
+//!   [`crate::mem::addr::SliceHash`].
+//!
+//! HLO *text* is the interchange format: jax >= 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! Python never runs at simulation time — the executables are compiled
+//! once here and invoked as pure functions.
+
+use crate::config::Platform;
+use crate::replication::Predictor;
+use anyhow::{anyhow, Context, Result};
+
+/// Static batch shape of the latency model artifact.
+pub const MODEL_N: usize = 256;
+/// Static batch shape of the cache-index artifact.
+pub const INDEX_N: usize = 1024;
+
+/// Default artifact directory (overridable with PMSM_ARTIFACTS).
+pub fn artifacts_dir() -> String {
+    std::env::var("PMSM_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn compile(path: &str) -> Result<xla::PjRtLoadedExecutable> {
+    let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing {path}: {e:?}"))
+        .with_context(|| "did you run `make artifacts`?")?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {path}: {e:?}"))
+}
+
+/// The compiled strategy-latency model.
+pub struct LatencyModel {
+    exe: xla::PjRtLoadedExecutable,
+    params: [f32; 16],
+}
+
+impl LatencyModel {
+    /// Compile the artifact for `platform` on the CPU PJRT client.
+    pub fn load(platform: &Platform) -> Result<Self> {
+        Self::load_from(
+            &format!("{}/latency_model.hlo.txt", artifacts_dir()),
+            platform,
+        )
+    }
+
+    pub fn load_from(path: &str, platform: &Platform) -> Result<Self> {
+        Ok(LatencyModel {
+            exe: compile(path)?,
+            params: platform.to_param_vec(),
+        })
+    }
+
+    /// Evaluate the model for up to [`MODEL_N`] configurations.
+    /// Returns `(latencies[n][4], slowdowns[n][3])` ordered
+    /// [NO-SM, SM-RC, SM-OB, SM-DD] / [SM-RC, SM-OB, SM-DD].
+    #[allow(clippy::type_complexity)]
+    pub fn predict(&self, e: &[f32], w: &[f32]) -> Result<(Vec<[f32; 4]>, Vec<[f32; 3]>)> {
+        anyhow::ensure!(e.len() == w.len(), "e/w length mismatch");
+        anyhow::ensure!(e.len() <= MODEL_N, "batch exceeds MODEL_N");
+        let n = e.len();
+        let mut eb = vec![1.0f32; MODEL_N];
+        let mut wb = vec![1.0f32; MODEL_N];
+        eb[..n].copy_from_slice(e);
+        wb[..n].copy_from_slice(w);
+
+        let le = xla::Literal::vec1(&eb);
+        let lw = xla::Literal::vec1(&wb);
+        let lp = xla::Literal::vec1(&self.params[..]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[le, lw, lp])
+            .map_err(|e| anyhow!("executing latency model: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let (lat_lit, slow_lit) = result
+            .to_tuple2()
+            .map_err(|e| anyhow!("expected 2-tuple: {e:?}"))?;
+        let lat_flat = lat_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("lat to_vec: {e:?}"))?;
+        let slow_flat = slow_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("slow to_vec: {e:?}"))?;
+        let lat = (0..n)
+            .map(|i| {
+                [
+                    lat_flat[i * 4],
+                    lat_flat[i * 4 + 1],
+                    lat_flat[i * 4 + 2],
+                    lat_flat[i * 4 + 3],
+                ]
+            })
+            .collect();
+        let slow = (0..n)
+            .map(|i| [slow_flat[i * 3], slow_flat[i * 3 + 1], slow_flat[i * 3 + 2]])
+            .collect();
+        Ok((lat, slow))
+    }
+
+    /// Build an SM-AD predictor: ONE batched PJRT call precomputes an
+    /// (epochs x writes) latency table; the returned closure looks up the
+    /// nearest log-grid cell with zero PJRT work on the decision path.
+    pub fn predictor(&self) -> Result<Predictor> {
+        // Log-spaced epoch grid x writes 1..=8: 32*8 = 256 = MODEL_N.
+        let mut e = Vec::with_capacity(MODEL_N);
+        let mut w = Vec::with_capacity(MODEL_N);
+        for i in 0..32 {
+            let eg = (2f32).powf(i as f32 * 10.0 / 31.0); // 1 .. 1024
+            for wi in 1..=8 {
+                e.push(eg);
+                w.push(wi as f32);
+            }
+        }
+        let (lat, _) = self.predict(&e, &w)?;
+        let table: Vec<(f32, f32)> = lat.iter().map(|l| (l[2], l[3])).collect();
+        Ok(Box::new(move |eq: f32, wq: f32| {
+            let ei = ((eq.max(1.0).log2() * 31.0 / 10.0).round() as usize).min(31);
+            let wi = (wq.round() as usize).clamp(1, 8) - 1;
+            table[ei * 8 + wi]
+        }))
+    }
+}
+
+/// The compiled cache-index kernel.
+pub struct CacheIndexModel {
+    exe: xla::PjRtLoadedExecutable,
+    masks: [u64; 8],
+    meta: [u64; 2],
+}
+
+impl CacheIndexModel {
+    pub fn load(platform: &Platform) -> Result<Self> {
+        Self::load_from(&format!("{}/cache_index.hlo.txt", artifacts_dir()), platform)
+    }
+
+    pub fn load_from(path: &str, platform: &Platform) -> Result<Self> {
+        let mut masks = [0u64; 8];
+        for (i, &m) in platform.slice_masks.iter().take(8).enumerate() {
+            masks[i] = m;
+        }
+        Ok(CacheIndexModel {
+            exe: compile(path)?,
+            masks,
+            meta: [
+                platform.llc_sets_per_slice as u64,
+                platform.slice_masks.len() as u64,
+            ],
+        })
+    }
+
+    /// Map up to [`INDEX_N`] line addresses to global LLC set indices.
+    pub fn cache_sets(&self, addrs: &[u64]) -> Result<Vec<i32>> {
+        anyhow::ensure!(addrs.len() <= INDEX_N, "batch exceeds INDEX_N");
+        let n = addrs.len();
+        let mut ab = vec![0u64; INDEX_N];
+        ab[..n].copy_from_slice(addrs);
+        let la = xla::Literal::vec1(&ab);
+        let lm = xla::Literal::vec1(&self.masks[..]);
+        let lmeta = xla::Literal::vec1(&self.meta[..]);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[la, lm, lmeta])
+            .map_err(|e| anyhow!("executing cache index: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple: {e:?}"))?;
+        let flat = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        Ok(flat[..n].to_vec())
+    }
+}
+
+/// Closed-form fallback predictor (no artifacts needed) — mirrors the
+/// python `ref.py` formulas so SM-AD remains usable without
+/// `make artifacts`; kept in sync via the pjrt_model integration test.
+pub fn fallback_predictor(platform: &Platform) -> Predictor {
+    let p = platform.to_param_vec();
+    Box::new(move |e: f32, w: f32| {
+        let (rtt, gap, nqp) = (p[0], p[1], p[2]);
+        let (llc_mc, mc_pm) = (p[4], p[5]);
+        let (store, flush, sfence) = (p[7], p[8], p[9]);
+        let (banks, ob_barrier) = (p[10], p[11]);
+        let (qp_depth, nt_serial, ddio_lines) = (p[12], p[13], p[14]);
+        let n = e * w;
+        let local_epoch = w * (store + flush) + sfence + w * llc_mc;
+        let ob_issue = n * (gap / nqp) + e * (gap / nqp + ob_barrier);
+        let ob_drain = n * (mc_pm / banks);
+        let ob_overflow = (n - ddio_lines).max(0.0) * (mc_pm / banks);
+        let lat_ob =
+            ob_issue.max(e * local_epoch).max(ob_drain) + ob_overflow + rtt + mc_pm;
+        let dd_issue = n * gap;
+        let dd_serial = (n - qp_depth).max(0.0) * (nt_serial - gap).max(0.0);
+        let lat_dd = (e * local_epoch).max(dd_issue + dd_serial) + rtt;
+        (lat_ob, lat_dd)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_predictor_crossover() {
+        let p = Platform::default();
+        let f = fallback_predictor(&p);
+        let (ob_small, dd_small) = f(4.0, 1.0);
+        assert!(dd_small < ob_small, "DD should win at 4-1");
+        let (ob_big, dd_big) = f(256.0, 1.0);
+        assert!(ob_big < dd_big, "OB should win at 256-1");
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        std::env::set_var("PMSM_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(artifacts_dir(), "/tmp/xyz");
+        std::env::remove_var("PMSM_ARTIFACTS");
+        assert_eq!(artifacts_dir(), "artifacts");
+    }
+}

@@ -1,0 +1,10 @@
+//! PM transaction runtime (paper §3, Figure 1).
+//!
+//! Storage transactions with undo logging on top of the persistency-model
+//! API exposed by [`crate::coordinator::Mirror`]: prepare a log entry,
+//! mutate the data structure, invalidate the log — with ordering fences
+//! between the steps and a durability fence at commit.
+
+pub mod undo;
+
+pub use undo::{Txn, LOG_ACTIVE, LOG_INVALID};

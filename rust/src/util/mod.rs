@@ -1,0 +1,73 @@
+//! Small self-contained utilities: PRNG, stable hashing, f64 statistics.
+
+pub mod prng;
+pub mod stats;
+
+pub use prng::Pcg64;
+pub use stats::Summary;
+
+/// Fast single-word hasher for `u64`-keyed maps on the simulator hot path
+/// (SipHash's per-lookup cost showed up in the image-map profile —
+/// EXPERIMENTS.md §Perf #2). FNV-1a over the 8 key bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FnvHasher(u64);
+
+impl std::hash::Hasher for FnvHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut h = if self.0 == 0 { 0xcbf2_9ce4_8422_2325 } else { self.0 };
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        self.0 = h;
+    }
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        // Single multiply-xor mix — enough dispersion for line addresses.
+        let mut h = self.0 ^ v;
+        h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h ^= h >> 33;
+        self.0 = h;
+    }
+}
+
+/// `BuildHasher` for [`FnvHasher`].
+pub type FnvBuild = std::hash::BuildHasherDefault<FnvHasher>;
+
+/// A `HashMap` keyed by u64-like keys using the fast hasher.
+pub type FastMap<K, V> = std::collections::HashMap<K, V, FnvBuild>;
+
+/// FNV-1a 64-bit hash — stable across runs/platforms (used for bucket
+/// selection in the persistent hashmap and for deterministic key spreads).
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a u64 key.
+#[inline]
+pub fn fnv1a_u64(v: u64) -> u64 {
+    fnv1a(&v.to_le_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a_u64(1), fnv1a_u64(2));
+    }
+}

@@ -1,0 +1,220 @@
+//! PCG-XSL-RR 128/64 pseudo-random number generator.
+//!
+//! The offline crate set only provides `rand_core` without any generator
+//! implementations, so the generator itself is implemented here. PCG64 is
+//! small, fast, statistically strong, and — critically for the simulator —
+//! fully deterministic and seedable, so every experiment is reproducible
+//! from its config seed.
+
+/// PCG-XSL-RR 128/64 (the algorithm behind `rand_pcg::Pcg64`).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xa02b_df8f_2cc8_57b7)
+    }
+
+    /// Create a generator with an explicit stream (odd increment derived).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut pcg = Pcg64 {
+            state: 0,
+            inc: ((stream as u128) << 1) | 1,
+        };
+        pcg.next_u64();
+        pcg.state = pcg.state.wrapping_add(seed as u128);
+        pcg.next_u64();
+        pcg
+    }
+
+    /// Next uniform u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, bound)` (Lemire rejection-free multiply-shift with
+    /// a correction loop for exactness).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // Multiply-shift with rejection to remove modulo bias.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            let (hi, lo) = {
+                let m = (r as u128) * (bound as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= threshold {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.next_below(hi - lo)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipfian-distributed value in `[0, n)` with skew `theta` (YCSB-style,
+    /// Gray et al. approximation). The zeta partial sums are memoized per
+    /// (n, theta) — recomputing the 10^4-term series per draw dominated
+    /// the YCSB driver's profile (EXPERIMENTS.md §Perf #1).
+    pub fn zipf(&mut self, n: u64, theta: f64) -> u64 {
+        debug_assert!(n > 0);
+        let zetan = zeta_cached(n, theta);
+        let zeta2 = zeta_cached(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        let u = self.next_f64();
+        let uz = u * zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(theta) {
+            return 1;
+        }
+        ((n as f64) * (eta * u - eta + 1.0).powf(alpha)) as u64 % n
+    }
+}
+
+thread_local! {
+    static ZETA_CACHE: std::cell::RefCell<std::collections::HashMap<(u64, u64), f64>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+/// Memoized zeta partial sum (theta keyed by bit pattern).
+fn zeta_cached(n: u64, theta: f64) -> f64 {
+    ZETA_CACHE.with(|c| {
+        *c.borrow_mut()
+            .entry((n, theta.to_bits()))
+            .or_insert_with(|| zeta_approx(n, theta))
+    })
+}
+
+/// Riemann zeta partial-sum approximation (exact below 10_000 terms, Euler–
+/// Maclaurin style tail beyond — adequate for workload skew generation).
+fn zeta_approx(n: u64, theta: f64) -> f64 {
+    let exact = n.min(10_000);
+    let mut z = 0.0;
+    for i in 1..=exact {
+        z += 1.0 / (i as f64).powf(theta);
+    }
+    if n > exact {
+        // integral tail: ∫ x^-theta dx from `exact` to `n`
+        z += ((n as f64).powf(1.0 - theta) - (exact as f64).powf(1.0 - theta))
+            / (1.0 - theta);
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Pcg64::new(7);
+        for bound in [1u64, 2, 3, 10, 1000, u64::MAX / 2] {
+            for _ in 0..200 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(9);
+        for _ in 0..1000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniformity_rough() {
+        let mut r = Pcg64::new(3);
+        let mut buckets = [0u32; 10];
+        for _ in 0..100_000 {
+            buckets[r.next_below(10) as usize] += 1;
+        }
+        for &b in &buckets {
+            assert!((8_000..12_000).contains(&b), "bucket count {b}");
+        }
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut r = Pcg64::new(5);
+        let n = 1000;
+        let mut head = 0u32;
+        for _ in 0..10_000 {
+            let v = r.zipf(n, 0.99);
+            assert!(v < n);
+            if v < 10 {
+                head += 1;
+            }
+        }
+        // With theta=0.99 the top-10 keys should absorb a large fraction.
+        assert!(head > 2_000, "zipf head mass too small: {head}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(11);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

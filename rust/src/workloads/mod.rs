@@ -1,0 +1,8 @@
+//! Workload suite: the Transact microbenchmark (paper §7.1) and the
+//! SM-extended WHISPER applications (paper §7.2).
+
+pub mod transact;
+pub mod whisper;
+
+pub use transact::{run_transact, TransactConfig};
+pub use whisper::{run_whisper, WhisperApp, WhisperConfig};

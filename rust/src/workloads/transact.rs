@@ -1,0 +1,202 @@
+//! Transact — the configurable transaction microbenchmark (paper §7.1).
+//!
+//! Executes `txns` transactions, each with a configurable number of epochs
+//! per transaction and writes per epoch; write addresses are chosen
+//! uniformly at random from a working set (the paper: "the addresses of
+//! writes within a transaction are randomly chosen"). Ranges mirror the
+//! paper: writes/epoch in [1..8], epochs/txn in [1..256].
+
+use crate::config::{Platform, StrategyKind};
+use crate::coordinator::sched::{run_threads, RunOutcome, TxnSource};
+use crate::coordinator::Mirror;
+use crate::replication::{Predictor, TxnShape};
+use crate::util::Pcg64;
+use crate::{Addr, LINE};
+
+/// Transact configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TransactConfig {
+    pub epochs: u32,
+    pub writes: u32,
+    pub txns: u64,
+    pub threads: usize,
+    pub seed: u64,
+    /// Working-set lines per thread (paper-scale LLC pressure).
+    pub working_set: u64,
+}
+
+impl Default for TransactConfig {
+    fn default() -> Self {
+        TransactConfig {
+            epochs: 4,
+            writes: 1,
+            txns: 10_000,
+            threads: 1,
+            seed: 42,
+            working_set: 1 << 16, // 64K lines = 4 MiB per thread
+        }
+    }
+}
+
+fn transact_source(cfg: TransactConfig, thread: usize) -> Box<dyn TxnSource> {
+    let mut rng = Pcg64::with_stream(cfg.seed, thread as u64);
+    let base: Addr = 0x4000_0000_0000 + (thread as Addr) * 0x1_0000_0000;
+    let mut done = 0u64;
+    let hint = TxnShape {
+        epochs: cfg.epochs as f32,
+        writes: cfg.writes as f32,
+    };
+    Box::new(move |m: &mut Mirror, t: &mut crate::coordinator::ThreadCtx| {
+        if done >= cfg.txns {
+            return false;
+        }
+        m.txn_begin(t, Some(hint));
+        for _ in 0..cfg.epochs {
+            for _ in 0..cfg.writes {
+                let addr = base + rng.next_below(cfg.working_set) * LINE;
+                m.store(t, addr, done);
+                m.clwb(t, addr);
+            }
+            m.sfence(t);
+        }
+        m.txn_commit(t);
+        done += 1;
+        true
+    })
+}
+
+/// Run Transact under `kind` and return the outcome.
+pub fn run_transact(plat: &Platform, kind: StrategyKind, cfg: TransactConfig) -> RunOutcome {
+    let mut mirror = Mirror::new(plat.clone(), kind, false);
+    run_transact_on(&mut mirror, cfg)
+}
+
+/// Run Transact with the adaptive strategy wired to `predictor`.
+pub fn run_transact_adaptive(
+    plat: &Platform,
+    predictor: Predictor,
+    cfg: TransactConfig,
+) -> RunOutcome {
+    let mut mirror =
+        Mirror::with_predictor(plat.clone(), StrategyKind::SmAd, predictor, false);
+    run_transact_on(&mut mirror, cfg)
+}
+
+fn run_transact_on(mirror: &mut Mirror, cfg: TransactConfig) -> RunOutcome {
+    let mut sources: Vec<Box<dyn TxnSource>> = (0..cfg.threads)
+        .map(|i| transact_source(cfg, i))
+        .collect();
+    run_threads(mirror, &mut sources)
+}
+
+/// Slowdown of `kind` over NO-SM for one Transact configuration
+/// (a single Figure-4 cell).
+pub fn slowdown(plat: &Platform, kind: StrategyKind, cfg: TransactConfig) -> f64 {
+    let base = run_transact(plat, StrategyKind::NoSm, cfg);
+    let sm = run_transact(plat, kind, cfg);
+    sm.makespan as f64 / base.makespan.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(epochs: u32, writes: u32) -> TransactConfig {
+        TransactConfig {
+            epochs,
+            writes,
+            txns: 200,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn counts_match_configuration() {
+        let out = run_transact(&Platform::default(), StrategyKind::NoSm, small(4, 2));
+        assert_eq!(out.txns, 200);
+        assert_eq!(out.epochs, 800);
+        assert_eq!(out.writes, 1600);
+        assert_eq!(out.epochs_per_txn(), 4.0);
+        assert_eq!(out.writes_per_epoch(), 2.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = run_transact(&Platform::default(), StrategyKind::SmOb, small(4, 1));
+        let b = run_transact(&Platform::default(), StrategyKind::SmOb, small(4, 1));
+        assert_eq!(a.makespan, b.makespan);
+    }
+
+    #[test]
+    fn rc_slowdown_in_paper_band_for_4_1() {
+        // Paper Figure 4: SM-RC slowdowns range ~20x-55x.
+        let s = slowdown(&Platform::default(), StrategyKind::SmRc, small(4, 1));
+        assert!((15.0..80.0).contains(&s), "SM-RC 4-1 slowdown {s}");
+    }
+
+    #[test]
+    fn ob_dd_beat_rc() {
+        let cfg = small(4, 1);
+        let p = Platform::default();
+        let rc = slowdown(&p, StrategyKind::SmRc, cfg);
+        let ob = slowdown(&p, StrategyKind::SmOb, cfg);
+        let dd = slowdown(&p, StrategyKind::SmDd, cfg);
+        assert!(rc / ob > 2.0, "rc={rc} ob={ob}");
+        assert!(rc / dd > 2.0, "rc={rc} dd={dd}");
+    }
+
+    #[test]
+    fn dd_wins_small_ob_wins_large_w1() {
+        // Paper Figure-4 crossover: DD better at few epochs/txn, OB at many.
+        let p = Platform::default();
+        let dd_small = slowdown(&p, StrategyKind::SmDd, small(4, 1));
+        let ob_small = slowdown(&p, StrategyKind::SmOb, small(4, 1));
+        assert!(
+            dd_small <= ob_small * 1.05,
+            "DD should win small txns: dd={dd_small} ob={ob_small}"
+        );
+        let cfg_big = TransactConfig {
+            epochs: 256,
+            writes: 1,
+            txns: 30,
+            ..Default::default()
+        };
+        let dd_big = slowdown(&p, StrategyKind::SmDd, cfg_big);
+        let ob_big = slowdown(&p, StrategyKind::SmOb, cfg_big);
+        assert!(
+            ob_big < dd_big,
+            "OB should win big txns: ob={ob_big} dd={dd_big}"
+        );
+    }
+
+    #[test]
+    fn adaptive_tracks_best_fixed_strategy() {
+        let p = Platform::default();
+        let cfg = TransactConfig {
+            epochs: 256,
+            writes: 1,
+            txns: 30,
+            ..Default::default()
+        };
+        // Predictor mirrors the closed-form crossover at e=69 (w=1).
+        let adapt = run_transact_adaptive(
+            &p,
+            Box::new(|e, w| {
+                let n = e * w;
+                let ob = n * 37.5 + e * 112.5 + 2750.0;
+                let dd = n * 150.0 + (n - 64.0).max(0.0) * 60.0 + 2600.0;
+                (ob, dd)
+            }),
+            cfg,
+        );
+        let ob = run_transact(&p, StrategyKind::SmOb, cfg);
+        let dd = run_transact(&p, StrategyKind::SmDd, cfg);
+        let best = ob.makespan.min(dd.makespan);
+        assert!(
+            (adapt.makespan as f64) <= best as f64 * 1.10,
+            "adaptive {} should track best fixed {}",
+            adapt.makespan,
+            best
+        );
+    }
+}

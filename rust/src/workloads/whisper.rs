@@ -1,0 +1,548 @@
+//! WHISPER applications extended with SM support (paper §7.2).
+//!
+//! Five applications, each generating its persistency trace from *real*
+//! persistent data structures ([`crate::pstore`]):
+//!
+//! * `ctree`   — inserts/deletes on a persistent crit-bit tree (NVML).
+//! * `echo`    — persistent KV store applying batched updates (the
+//!               largest epochs/txn in WHISPER, 300+).
+//! * `hashmap` — inserts/deletes on a persistent chained hashmap (NVML).
+//! * `ycsb`    — zipfian read/update over a mini N-store table.
+//! * `tpcc`    — new-order + payment business transactions over N-store.
+//!
+//! Threads own disjoint structure instances (lock-based concurrency
+//! control serializes structure access in WHISPER; partitioning gives the
+//! same trace shape) but share the NIC, fabric and backup memory system —
+//! so cross-thread QP/barrier/MC contention is fully modeled. Volatile
+//! compute between persistent ops reproduces WHISPER's ~5% persistent-
+//! write fraction.
+
+use crate::config::{Platform, StrategyKind};
+use crate::coordinator::sched::{run_threads, Phased, RunOutcome, TxnSource};
+use crate::coordinator::{Mirror, ThreadCtx};
+use std::cell::RefCell;
+use std::rc::Rc;
+use crate::pstore::{log_base_for, CritBitTree, KvStore, NStore, PHashMap, PmHeap};
+use crate::replication::TxnShape;
+use crate::txn::Txn;
+use crate::util::Pcg64;
+
+/// The five WHISPER applications.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WhisperApp {
+    Ctree,
+    Echo,
+    Hashmap,
+    Ycsb,
+    Tpcc,
+}
+
+impl WhisperApp {
+    pub const ALL: [WhisperApp; 5] = [
+        Self::Ctree,
+        Self::Echo,
+        Self::Hashmap,
+        Self::Ycsb,
+        Self::Tpcc,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ctree => "ctree",
+            Self::Echo => "echo",
+            Self::Hashmap => "hashmap",
+            Self::Ycsb => "ycsb",
+            Self::Tpcc => "tpcc",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|a| a.name() == s)
+    }
+}
+
+impl std::fmt::Display for WhisperApp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// WHISPER run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct WhisperConfig {
+    pub app: WhisperApp,
+    /// Transactions per thread.
+    pub ops: u64,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for WhisperConfig {
+    fn default() -> Self {
+        WhisperConfig {
+            app: WhisperApp::Ctree,
+            ops: 2_000,
+            threads: 4,
+            seed: 42,
+        }
+    }
+}
+
+// --------------------------------------------------------------- sources
+
+struct CtreeState {
+    rng: Pcg64,
+    heap: PmHeap,
+    tree: CritBitTree,
+    log: u64,
+    done: u64,
+    warm: u64,
+}
+
+fn ctree_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
+    let mut heap = PmHeap::new(); // volatile metadata; addresses disjoint
+    // Offset each thread's heap into its own area by pre-reserving.
+    heap.alloc((thread + 1) << 16);
+    let st = Rc::new(RefCell::new(CtreeState {
+        rng: Pcg64::with_stream(cfg.seed, thread as u64),
+        heap,
+        tree: CritBitTree::new(thread as u64 * 4),
+        log: log_base_for(thread),
+        done: 0,
+        warm: 0,
+    }));
+    let hint = TxnShape { epochs: 15.0, writes: 1.0 };
+    let stw = st.clone();
+    Box::new(Phased {
+        // Warmup: pre-populate ~2048 keys (chunks interleave threads).
+        warmup: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *stw.borrow_mut();
+            for _ in 0..128 {
+                let key = s.rng.next_below(4096);
+                s.tree.insert(m, t, &mut s.heap, key, 1, s.log, None);
+                s.warm += 1;
+            }
+            s.warm < 2048
+        },
+        step: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *st.borrow_mut();
+            if s.done >= cfg.ops {
+                return false;
+            }
+            let key = s.rng.next_below(4096);
+            // Volatile work: request parsing, key comparison walk, etc.
+            m.compute(t, 2200);
+            let v = s.done;
+            if s.rng.chance(0.6) || s.tree.is_empty() {
+                s.tree.insert(m, t, &mut s.heap, key, v, s.log, Some(hint));
+            } else {
+                s.tree.remove(m, t, &mut s.heap, key, s.log, Some(hint));
+            }
+            // Read-mostly foreground traffic between updates.
+            for _ in 0..3 {
+                let k = s.rng.next_below(4096);
+                s.tree.get(m, t, k);
+                m.compute(t, 600);
+            }
+            s.done += 1;
+            true
+        },
+    })
+}
+
+struct HashmapState {
+    rng: Pcg64,
+    heap: PmHeap,
+    map: PHashMap,
+    log: u64,
+    done: u64,
+    warm: u64,
+}
+
+fn hashmap_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
+    let mut heap = PmHeap::new();
+    heap.alloc(0x100000 * (thread + 1));
+    let map = PHashMap::create(&mut heap, 1024);
+    let st = Rc::new(RefCell::new(HashmapState {
+        rng: Pcg64::with_stream(cfg.seed ^ 0x4a5_u64, thread as u64),
+        heap,
+        map,
+        log: log_base_for(thread),
+        done: 0,
+        warm: 0,
+    }));
+    let hint = TxnShape { epochs: 9.0, writes: 1.0 };
+    let stw = st.clone();
+    Box::new(Phased {
+        warmup: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *stw.borrow_mut();
+            for _ in 0..128 {
+                let key = s.rng.next_below(8192);
+                s.map.put(m, t, &mut s.heap, key, 1, s.log, None);
+                s.warm += 1;
+            }
+            s.warm < 4096
+        },
+        step: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *st.borrow_mut();
+            if s.done >= cfg.ops {
+                return false;
+            }
+            let key = s.rng.next_below(8192);
+            m.compute(t, 1600);
+            let v = s.done;
+            if s.rng.chance(0.6) || s.map.is_empty() {
+                s.map.put(m, t, &mut s.heap, key, v, s.log, Some(hint));
+            } else {
+                s.map.remove(m, t, &mut s.heap, key, s.log, Some(hint));
+            }
+            for _ in 0..2 {
+                let k = s.rng.next_below(8192);
+                s.map.get(m, t, k);
+                m.compute(t, 500);
+            }
+            s.done += 1;
+            true
+        },
+    })
+}
+
+struct EchoState {
+    rng: Pcg64,
+    heap: PmHeap,
+    kv: KvStore,
+    log: u64,
+    done: u64,
+    warm: u64,
+}
+
+fn echo_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
+    let mut heap = PmHeap::new();
+    heap.alloc(0x200000 * (thread + 1));
+    let kv = KvStore::create(&mut heap, 4096, thread as u64);
+    let st = Rc::new(RefCell::new(EchoState {
+        rng: Pcg64::with_stream(cfg.seed ^ 0xec0, thread as u64),
+        heap,
+        kv,
+        log: log_base_for(thread),
+        done: 0,
+        warm: 0,
+    }));
+    const BATCH: usize = 64; // master applies batched client updates
+    let stw = st.clone();
+    Box::new(Phased {
+        warmup: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *stw.borrow_mut();
+            let batch: Vec<(u64, u64)> = (0..BATCH)
+                .map(|_| (s.rng.next_below(64 * 1024), 1))
+                .collect();
+            s.kv.apply_batch(m, t, &mut s.heap, &batch, s.log);
+            s.warm += 1;
+            s.warm < 4
+        },
+        step: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *st.borrow_mut();
+            if s.done >= cfg.ops {
+                return false;
+            }
+            // Client-side work: accumulate + deduplicate the batch.
+            let mut batch = Vec::with_capacity(BATCH);
+            for _ in 0..BATCH {
+                let k = s.rng.next_below(64 * 1024);
+                let v = s.rng.next_u64();
+                batch.push((k, v));
+                m.compute(t, 900); // request handling per update
+            }
+            s.kv.apply_batch(m, t, &mut s.heap, &batch, s.log);
+            s.done += 1;
+            true
+        },
+    })
+}
+
+struct YcsbState {
+    rng: Pcg64,
+    heap: PmHeap,
+    db: NStore,
+    table: crate::pstore::nstore::TableId,
+    log: u64,
+    done: u64,
+    loaded: u64,
+}
+
+fn ycsb_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
+    let mut heap = PmHeap::new();
+    heap.alloc(0x400000 * (thread + 1));
+    let mut db = NStore::new();
+    let table = db.create_table("usertable", 8);
+    let st = Rc::new(RefCell::new(YcsbState {
+        rng: Pcg64::with_stream(cfg.seed ^ 0x5c5b, thread as u64),
+        heap,
+        db,
+        table,
+        log: log_base_for(thread),
+        done: 0,
+        loaded: 0,
+    }));
+    let rows = 4096u64;
+    let hint = TxnShape { epochs: 3.0, writes: 1.0 };
+    let stw = st.clone();
+    Box::new(Phased {
+        // Warmup: load the table in 256-row transactions.
+        warmup: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *stw.borrow_mut();
+            let log = s.log;
+            let table = s.table;
+            let from = s.loaded;
+            let to = (from + 256).min(rows);
+            let mut tx = Txn::begin(m, t, log, None);
+            for k in from..to {
+                let mut row: Vec<u64> = vec![k];
+                row.extend((1..8).map(|f| k * 100 + f));
+                // Split borrows: db / heap are separate fields.
+                let YcsbState { db, heap, .. } = s;
+                db.insert(m, t, &mut tx, heap, table, &row);
+            }
+            tx.commit(m, t);
+            s.loaded = to;
+            s.loaded < rows
+        },
+        step: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *st.borrow_mut();
+            if s.done >= cfg.ops {
+                return false;
+            }
+            let key = s.rng.zipf(rows, 0.99);
+            m.compute(t, 2000); // query parsing/planning
+            if s.rng.chance(0.5) {
+                // Read: load all fields.
+                for f in 0..8 {
+                    s.db.select(m, t, s.table, key, f);
+                }
+            } else {
+                // Update: one field under a transaction.
+                let log = s.log;
+                let table = s.table;
+                let field = 1 + (s.rng.next_below(7) as usize);
+                let val = s.rng.next_u64();
+                let mut tx = Txn::begin(m, t, log, Some(hint));
+                s.db.update(m, t, &mut tx, table, key, field, val);
+                tx.commit(m, t);
+            }
+            s.done += 1;
+            true
+        },
+    })
+}
+
+struct TpccState {
+    rng: Pcg64,
+    heap: PmHeap,
+    db: NStore,
+    orders: crate::pstore::nstore::TableId,
+    stock: crate::pstore::nstore::TableId,
+    customer: crate::pstore::nstore::TableId,
+    district: crate::pstore::nstore::TableId,
+    log: u64,
+    order_id: u64,
+    done: u64,
+    loaded: u64,
+}
+
+fn tpcc_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
+    let mut heap = PmHeap::new();
+    heap.alloc(0x800000 * (thread + 1));
+    let mut db = NStore::new();
+    let orders = db.create_table("orders", 8);
+    let stock = db.create_table("stock", 4);
+    let customer = db.create_table("customer", 6);
+    let district = db.create_table("district", 4);
+    let st = Rc::new(RefCell::new(TpccState {
+        rng: Pcg64::with_stream(cfg.seed ^ 0x79cc, thread as u64),
+        heap,
+        db,
+        orders,
+        stock,
+        customer,
+        district,
+        log: log_base_for(thread),
+        order_id: (thread as u64) << 32,
+        done: 0,
+        loaded: 0,
+    }));
+    let n_items = 1024u64;
+    let n_cust = 512u64;
+    let stw = st.clone();
+    Box::new(Phased {
+        // Warmup: load stock + customers + district in chunks.
+        warmup: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *stw.borrow_mut();
+            let log = s.log;
+            let from = s.loaded;
+            let to = (from + 256).min(n_items + n_cust + 1);
+            let mut tx = Txn::begin(m, t, log, None);
+            for i in from..to {
+                let TpccState { db, heap, stock, customer, district, .. } = s;
+                if i < n_items {
+                    db.insert(m, t, &mut tx, heap, *stock, &[i, 100, 0, 0]);
+                } else if i < n_items + n_cust {
+                    let c = i - n_items;
+                    db.insert(m, t, &mut tx, heap, *customer, &[c, 1000, 0, 0, 0, 0]);
+                } else {
+                    db.insert(m, t, &mut tx, heap, *district, &[0, 1, 0, 0]);
+                }
+            }
+            tx.commit(m, t);
+            s.loaded = to;
+            s.loaded < n_items + n_cust + 1
+        },
+        step: move |m: &mut Mirror, t: &mut ThreadCtx| {
+            let s = &mut *st.borrow_mut();
+            if s.done >= cfg.ops {
+                return false;
+            }
+            m.compute(t, 9000); // business logic, item validation
+            let log = s.log;
+            if s.rng.chance(0.5) {
+                // NEW-ORDER: insert an order row + decrement 5 stock
+                // levels + bump the district next-order-id.
+                s.order_id += 1;
+                let order_id = s.order_id;
+                let cust = s.rng.next_below(n_cust);
+                let items: Vec<u64> =
+                    (0..5).map(|_| s.rng.next_below(n_items)).collect();
+                let mut tx =
+                    Txn::begin(m, t, log, Some(TxnShape { epochs: 29.0, writes: 1.0 }));
+                let row = [order_id, cust, 5, 0, 0, 0, 0, 0];
+                {
+                    let TpccState { db, heap, orders, .. } = s;
+                    db.insert(m, t, &mut tx, heap, *orders, &row);
+                }
+                for &item in &items {
+                    let stock = s.stock;
+                    let cur = s.db.select(m, t, stock, item, 1).unwrap_or(100);
+                    s.db
+                        .update(m, t, &mut tx, stock, item, 1, cur.saturating_sub(1));
+                }
+                let district = s.district;
+                let next = s.db.select(m, t, district, 0, 1).unwrap_or(1);
+                s.db.update(m, t, &mut tx, district, 0, 1, next + 1);
+                tx.commit(m, t);
+            } else {
+                // PAYMENT: update customer balance + district YTD.
+                let cust = s.rng.next_below(n_cust);
+                let mut tx =
+                    Txn::begin(m, t, log, Some(TxnShape { epochs: 5.0, writes: 1.0 }));
+                let customer = s.customer;
+                let bal = s.db.select(m, t, customer, cust, 1).unwrap_or(0);
+                s.db
+                    .update(m, t, &mut tx, customer, cust, 1, bal.saturating_sub(10));
+                let district = s.district;
+                let ytd = s.db.select(m, t, district, 0, 2).unwrap_or(0);
+                s.db.update(m, t, &mut tx, district, 0, 2, ytd + 10);
+                tx.commit(m, t);
+            }
+            s.done += 1;
+            true
+        },
+    })
+}
+
+fn make_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
+    match cfg.app {
+        WhisperApp::Ctree => ctree_source(cfg, thread),
+        WhisperApp::Echo => echo_source(cfg, thread),
+        WhisperApp::Hashmap => hashmap_source(cfg, thread),
+        WhisperApp::Ycsb => ycsb_source(cfg, thread),
+        WhisperApp::Tpcc => tpcc_source(cfg, thread),
+    }
+}
+
+/// Run a WHISPER app under `kind`.
+pub fn run_whisper(plat: &Platform, kind: StrategyKind, cfg: WhisperConfig) -> RunOutcome {
+    let mut mirror = Mirror::new(plat.clone(), kind, false);
+    let mut sources: Vec<Box<dyn TxnSource>> = (0..cfg.threads)
+        .map(|i| make_source(cfg, i))
+        .collect();
+    run_threads(&mut mirror, &mut sources)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(app: WhisperApp) -> WhisperConfig {
+        WhisperConfig {
+            app,
+            ops: 60,
+            threads: 2,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn all_apps_run_and_produce_transactions() {
+        for app in WhisperApp::ALL {
+            let out = run_whisper(&Platform::default(), StrategyKind::NoSm, tiny(app));
+            assert!(out.txns > 0, "{app}: no transactions");
+            assert!(out.writes > 0, "{app}: no persistent writes");
+            assert!(out.makespan > 0, "{app}");
+        }
+    }
+
+    #[test]
+    fn echo_has_largest_epochs_per_txn() {
+        let echo = run_whisper(&Platform::default(), StrategyKind::NoSm, tiny(WhisperApp::Echo));
+        let hm = run_whisper(
+            &Platform::default(),
+            StrategyKind::NoSm,
+            tiny(WhisperApp::Hashmap),
+        );
+        assert!(
+            echo.epochs_per_txn() > 100.0,
+            "echo epochs/txn = {}",
+            echo.epochs_per_txn()
+        );
+        assert!(
+            echo.epochs_per_txn() > 5.0 * hm.epochs_per_txn(),
+            "echo {} vs hashmap {}",
+            echo.epochs_per_txn(),
+            hm.epochs_per_txn()
+        );
+    }
+
+    #[test]
+    fn writes_per_epoch_is_low() {
+        // Paper §7.2: WHISPER averages ~1.4 writes/epoch.
+        for app in WhisperApp::ALL {
+            let out = run_whisper(&Platform::default(), StrategyKind::NoSm, tiny(app));
+            let wpe = out.writes_per_epoch();
+            assert!(
+                (0.8..2.5).contains(&wpe),
+                "{app}: writes/epoch = {wpe}"
+            );
+        }
+    }
+
+    #[test]
+    fn strategies_order_rc_worst() {
+        let cfg = tiny(WhisperApp::Hashmap);
+        let p = Platform::default();
+        let base = run_whisper(&p, StrategyKind::NoSm, cfg).makespan as f64;
+        let rc = run_whisper(&p, StrategyKind::SmRc, cfg).makespan as f64;
+        let ob = run_whisper(&p, StrategyKind::SmOb, cfg).makespan as f64;
+        let dd = run_whisper(&p, StrategyKind::SmDd, cfg).makespan as f64;
+        assert!(rc > ob, "rc={rc} ob={ob}");
+        assert!(rc > dd, "rc={rc} dd={dd}");
+        assert!(rc / base > 2.0, "rc overhead {}", rc / base);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = tiny(WhisperApp::Ycsb);
+        let a = run_whisper(&Platform::default(), StrategyKind::SmDd, cfg);
+        let b = run_whisper(&Platform::default(), StrategyKind::SmDd, cfg);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.writes, b.writes);
+    }
+}

@@ -1,0 +1,125 @@
+//! Integration: the AOT artifacts (built by `make artifacts`) load and
+//! execute through the rust PJRT runtime, and agree with the in-repo
+//! implementations — the A3 cross-validation layer.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` is
+//! missing, so `cargo test` works before `make artifacts`; `make test`
+//! always builds artifacts first.
+
+use pmsm::config::Platform;
+use pmsm::mem::SliceHash;
+use pmsm::runtime::{fallback_predictor, CacheIndexModel, LatencyModel};
+use pmsm::util::Pcg64;
+
+fn artifacts_present() -> bool {
+    let dir = pmsm::runtime::artifacts_dir();
+    let ok = std::path::Path::new(&format!("{dir}/latency_model.hlo.txt")).exists()
+        && std::path::Path::new(&format!("{dir}/cache_index.hlo.txt")).exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts` first");
+    }
+    ok
+}
+
+#[test]
+fn latency_model_loads_and_predicts() {
+    if !artifacts_present() {
+        return;
+    }
+    let plat = Platform::default();
+    let model = LatencyModel::load(&plat).expect("load latency model");
+    let e = [1.0f32, 4.0, 16.0, 64.0, 256.0];
+    let w = [1.0f32; 5];
+    let (lat, slow) = model.predict(&e, &w).expect("predict");
+    assert_eq!(lat.len(), 5);
+    assert_eq!(slow.len(), 5);
+    for (i, l) in lat.iter().enumerate() {
+        assert!(l[0] > 0.0, "cfg {i}: NO-SM latency must be positive");
+        // Every SM strategy costs at least NO-SM.
+        for s in 1..4 {
+            assert!(l[s] >= l[0], "cfg {i} strategy {s}: {l:?}");
+        }
+        // RC is never the best SM strategy (paper headline).
+        assert!(l[1] >= l[2].min(l[3]), "cfg {i}: {l:?}");
+    }
+}
+
+#[test]
+fn latency_model_matches_closed_form_fallback() {
+    if !artifacts_present() {
+        return;
+    }
+    let plat = Platform::default();
+    let model = LatencyModel::load(&plat).expect("load");
+    let fallback = fallback_predictor(&plat);
+    let e = [1.0f32, 2.0, 8.0, 32.0, 128.0, 256.0];
+    let w = [1.0f32, 2.0, 4.0, 8.0, 1.0, 2.0];
+    let (lat, _) = model.predict(&e, &w).expect("predict");
+    for i in 0..e.len() {
+        let (ob, dd) = fallback(e[i], w[i]);
+        let rel = |a: f32, b: f32| (a - b).abs() / b.max(1.0);
+        assert!(
+            rel(lat[i][2], ob) < 1e-4,
+            "OB mismatch at {}-{}: pjrt {} vs fallback {}",
+            e[i],
+            w[i],
+            lat[i][2],
+            ob
+        );
+        assert!(
+            rel(lat[i][3], dd) < 1e-4,
+            "DD mismatch at {}-{}: pjrt {} vs fallback {}",
+            e[i],
+            w[i],
+            lat[i][3],
+            dd
+        );
+    }
+}
+
+#[test]
+fn predictor_reproduces_crossover() {
+    if !artifacts_present() {
+        return;
+    }
+    let plat = Platform::default();
+    let model = LatencyModel::load(&plat).expect("load");
+    let predictor = model.predictor().expect("predictor");
+    let (ob_small, dd_small) = predictor(4.0, 1.0);
+    assert!(dd_small < ob_small, "DD should win 4-1");
+    let (ob_big, dd_big) = predictor(256.0, 1.0);
+    assert!(ob_big < dd_big, "OB should win 256-1");
+}
+
+#[test]
+fn cache_index_kernel_matches_rust_hash() {
+    if !artifacts_present() {
+        return;
+    }
+    let plat = Platform::default();
+    let model = CacheIndexModel::load(&plat).expect("load cache index");
+    let hash = SliceHash::from(&plat);
+    let mut rng = Pcg64::new(0xCAFE);
+    let addrs: Vec<u64> = (0..1024).map(|_| rng.next_u64() & ((1 << 40) - 1)).collect();
+    let got = model.cache_sets(&addrs).expect("cache_sets");
+    for (i, (&addr, &set)) in addrs.iter().zip(&got).enumerate() {
+        assert_eq!(
+            set as usize,
+            hash.global_set(addr),
+            "idx {i} addr {addr:#x}"
+        );
+    }
+}
+
+#[test]
+fn cache_index_partial_batch() {
+    if !artifacts_present() {
+        return;
+    }
+    let plat = Platform::default();
+    let model = CacheIndexModel::load(&plat).expect("load");
+    let got = model.cache_sets(&[0, 64, 128]).expect("cache_sets");
+    assert_eq!(got.len(), 3);
+    let hash = SliceHash::from(&plat);
+    assert_eq!(got[1] as usize, hash.global_set(64));
+}

@@ -1,0 +1,224 @@
+//! Property-based tests (mini-proptest harness, `pmsm::ptest`) over the
+//! coordinator's core invariants: ordering, durability, recovery, and
+//! model-component properties under randomized configurations.
+
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::coordinator::{Mirror, ThreadCtx};
+use pmsm::mem::MemCtrl;
+use pmsm::ptest::{check, Gen};
+use pmsm::pstore::log_base_for;
+use pmsm::recovery::{self, TxnHistory};
+use pmsm::sim::RateLimiter;
+use pmsm::txn::Txn;
+use std::collections::HashMap;
+
+fn strategy_of(g: &mut Gen) -> StrategyKind {
+    *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd])
+}
+
+#[test]
+fn prop_epoch_ordering_random_transactions() {
+    check("epoch-ordering", 40, |g| {
+        let kind = strategy_of(g);
+        let txns = g.u64(1, 6);
+        let epochs = g.u64(1, 8) as u32;
+        let writes = g.u64(1, 4) as u32;
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        for i in 0..txns {
+            m.txn_begin(&mut t, None);
+            for e in 0..epochs {
+                for w in 0..writes {
+                    let addr = 0x1000_0000 + ((i + e as u64 * 3 + w as u64) % 16) * 64;
+                    m.store(&mut t, addr, i);
+                    m.clwb(&mut t, addr);
+                }
+                m.sfence(&mut t);
+            }
+            m.txn_commit(&mut t);
+        }
+        recovery::check_epoch_ordering(&m.rdma.remote.ledger).unwrap();
+    });
+}
+
+#[test]
+fn prop_durability_fence_covers_everything() {
+    check("durability-fence", 40, |g| {
+        let kind = strategy_of(g);
+        let epochs = g.u64(1, 16) as u32;
+        let writes = g.u64(1, 4) as u32;
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        for e in 0..epochs {
+            for w in 0..writes {
+                let addr = 0x2000_0000 + (e * writes + w) as u64 * 64;
+                m.store(&mut t, addr, 7);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+        }
+        m.txn_commit(&mut t);
+        // Every replicated write persisted no later than the dfence.
+        let dfence = t.last_dfence;
+        for ev in m.rdma.remote.ledger.events() {
+            assert!(
+                ev.at <= dfence,
+                "write at {} after dfence {}",
+                ev.at,
+                dfence
+            );
+        }
+        assert_eq!(
+            m.rdma.remote.ledger.len() as u64,
+            (epochs * writes) as u64
+        );
+    });
+}
+
+#[test]
+fn prop_crash_consistency_random_workloads() {
+    check("crash-consistency", 15, |g| {
+        let kind = strategy_of(g);
+        let txns = g.u64(1, 5);
+        let wpt = g.u64(1, 3); // writes per txn
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        let log = log_base_for(0);
+        let addrs: Vec<u64> = (0..4).map(|i| 0x3000_0000 + i * 64).collect();
+        let mut hist = TxnHistory::new(HashMap::new());
+        let mut img: HashMap<u64, u64> = HashMap::new();
+        for i in 0..txns {
+            let mut tx = Txn::begin(&mut m, &mut t, log, None);
+            for k in 0..wpt {
+                let a = addrs[((i + k) % 4) as usize];
+                let v = i * 100 + k;
+                tx.write(&mut m, &mut t, a, v);
+                img.insert(a, v);
+            }
+            tx.commit(&mut m, &mut t);
+            hist.commit(img.clone(), t.last_dfence);
+        }
+        recovery::check_all_crashes(&m.rdma.remote.ledger, &hist, &[log], &addrs)
+            .unwrap();
+    });
+}
+
+#[test]
+fn prop_rate_limiter_conserves_capacity() {
+    check("rate-limiter-capacity", 60, |g| {
+        let occ = g.u64(10, 500);
+        let n = g.u64(10, 300);
+        let spread = g.u64(1, 100_000);
+        let mut rl = RateLimiter::new(occ);
+        let mut starts: Vec<u64> = Vec::new();
+        for i in 0..n {
+            // Arbitrary (possibly decreasing) arrival pattern.
+            let at = (i * 7919 + 13) % spread;
+            starts.push(rl.submit(at));
+        }
+        // Capacity conservation: within any window of W ns, at most
+        // ~W/occ + slack requests may start.
+        starts.sort_unstable();
+        let w = occ * 32;
+        for (i, &s) in starts.iter().enumerate() {
+            let until = s + w;
+            let in_window = starts[i..].iter().take_while(|&&x| x < until).count();
+            let cap = (w / occ) as usize + 2 * 64 + 2; // window granularity slack
+            assert!(
+                in_window <= cap,
+                "{in_window} starts within {w}ns window (occ={occ})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_memctrl_admission_precedes_landing_and_is_monotonic_per_stream() {
+    check("memctrl-admission", 60, |g| {
+        let depth = g.usize(2, 128);
+        let banks = g.usize(1, 8);
+        let drain = g.u64(50, 400);
+        let mut mc = MemCtrl::new(depth, banks, drain, 10);
+        let n = g.u64(5, 200);
+        let mut at = 0u64;
+        let mut last_admit = 0u64;
+        for _ in 0..n {
+            at += g.u64(0, 300);
+            let (admit, pm) = mc.push(at);
+            assert!(admit >= at, "admission before arrival");
+            assert!(pm > admit, "PM landing must follow admission");
+            // Monotone for a monotone arrival stream.
+            assert!(admit >= last_admit);
+            last_admit = admit;
+        }
+    });
+}
+
+#[test]
+fn prop_transact_slowdown_ordering_random_platforms() {
+    check("strategy-ordering", 10, |g| {
+        let mut p = Platform::default();
+        p.rtt = g.u64(1_000, 5_000);
+        p.gap = g.u64(50, 300);
+        p.mc_pm = g.u64(80, 300);
+        let cfg = pmsm::workloads::TransactConfig {
+            epochs: g.u64(2, 32) as u32,
+            writes: g.u64(1, 4) as u32,
+            txns: 40,
+            ..Default::default()
+        };
+        let base =
+            pmsm::workloads::run_transact(&p, StrategyKind::NoSm, cfg).makespan as f64;
+        let rc =
+            pmsm::workloads::run_transact(&p, StrategyKind::SmRc, cfg).makespan as f64;
+        let ob =
+            pmsm::workloads::run_transact(&p, StrategyKind::SmOb, cfg).makespan as f64;
+        let dd =
+            pmsm::workloads::run_transact(&p, StrategyKind::SmDd, cfg).makespan as f64;
+        // Under ANY platform: SM costs more than NO-SM, and RC (blocking
+        // round trip per epoch) is never better than both OB and DD.
+        assert!(rc >= base && ob >= base && dd >= base);
+        assert!(rc >= ob.min(dd) * 0.999, "rc={rc} ob={ob} dd={dd}");
+    });
+}
+
+#[test]
+fn prop_ledger_image_respects_crash_time() {
+    check("ledger-image", 60, |g| {
+        use pmsm::mem::{DurEvent, DurabilityLog};
+        let mut log = DurabilityLog::new(true);
+        let n = g.u64(1, 40);
+        let mut events = Vec::new();
+        for i in 0..n {
+            let ev = DurEvent {
+                addr: g.u64(0, 8) * 64,
+                val: g.u64(0, 1000),
+                at: g.u64(0, 10_000),
+                thread: 0,
+                txn: i,
+                epoch: 0,
+                seq: i,
+            };
+            log.record(ev);
+            events.push(ev);
+        }
+        let t = g.u64(0, 12_000);
+        let img = log.image_at(t);
+        // No value from the future.
+        for (addr, val) in &img {
+            assert!(
+                events
+                    .iter()
+                    .any(|e| e.addr == *addr && e.val == *val && e.at <= t),
+                "image contains future/phantom value"
+            );
+        }
+        // Every address with a past event is present.
+        for e in &events {
+            if e.at <= t {
+                assert!(img.contains_key(&e.addr));
+            }
+        }
+    });
+}

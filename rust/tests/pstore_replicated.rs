@@ -1,0 +1,153 @@
+//! Integration: persistent data structures under active replication —
+//! the structures must stay functionally correct while every mutation is
+//! mirrored, and the backup must converge to the primary.
+
+use pmsm::config::{Platform, StrategyKind};
+use pmsm::coordinator::{Mirror, ThreadCtx};
+use pmsm::pstore::{log_base_for, CritBitTree, KvStore, NStore, PHashMap, PmHeap};
+use pmsm::txn::Txn;
+use pmsm::util::Pcg64;
+
+fn backup_equals_primary(m: &Mirror) -> bool {
+    let ledger = &m.rdma.remote.ledger;
+    let img = ledger.image_at(ledger.horizon());
+    m.image().iter().all(|(a, v)| img.get(a) == Some(v))
+}
+
+#[test]
+fn cbtree_correct_under_every_strategy() {
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        let mut heap = PmHeap::new();
+        let mut tree = CritBitTree::new(0);
+        let log = log_base_for(0);
+        let mut rng = Pcg64::new(42);
+        let mut oracle = std::collections::BTreeMap::new();
+        for _ in 0..120 {
+            let k = rng.next_below(40);
+            if rng.chance(0.65) {
+                let v = rng.next_u64() | 1;
+                tree.insert(&mut m, &mut t, &mut heap, k, v, log, None);
+                oracle.insert(k, v);
+            } else {
+                assert_eq!(
+                    tree.remove(&mut m, &mut t, &mut heap, k, log, None),
+                    oracle.remove(&k).is_some(),
+                    "{kind}: remove {k}"
+                );
+            }
+        }
+        for (&k, &v) in &oracle {
+            assert_eq!(tree.get(&mut m, &mut t, k), Some(v), "{kind}: get {k}");
+        }
+        assert!(backup_equals_primary(&m), "{kind}: backup diverged");
+    }
+}
+
+#[test]
+fn hashmap_backup_converges() {
+    for kind in [StrategyKind::SmOb, StrategyKind::SmDd] {
+        let mut m = Mirror::new(Platform::default(), kind, true);
+        let mut t = ThreadCtx::new(0);
+        let mut heap = PmHeap::new();
+        let mut map = PHashMap::create(&mut heap, 64);
+        let log = log_base_for(0);
+        for k in 0..100u64 {
+            map.put(&mut m, &mut t, &mut heap, k, k * 3, log, None);
+        }
+        for k in (0..100u64).step_by(2) {
+            map.remove(&mut m, &mut t, &mut heap, k, log, None);
+        }
+        assert_eq!(map.len(), 50);
+        assert!(backup_equals_primary(&m), "{kind}: backup diverged");
+    }
+}
+
+#[test]
+fn kvstore_batches_replicate_atomically() {
+    let mut m = Mirror::new(Platform::default(), StrategyKind::SmOb, true);
+    let mut t = ThreadCtx::new(0);
+    let mut heap = PmHeap::new();
+    let mut kv = KvStore::create(&mut heap, 256, 0);
+    let log = log_base_for(0);
+    for b in 0..5u64 {
+        let batch: Vec<(u64, u64)> = (0..30).map(|k| (k, b * 1000 + k)).collect();
+        kv.apply_batch(&mut m, &mut t, &mut heap, &batch, log);
+    }
+    assert_eq!(kv.generation(&m), 5);
+    assert!(backup_equals_primary(&m));
+    // Crash mid-stream: the recovered generation counter and data must
+    // come from the same consistent batch prefix.
+    let ledger = &m.rdma.remote.ledger;
+    let mid = ledger.horizon() / 2;
+    let img = pmsm::recovery::recover_image(ledger, mid, &[log]);
+    let gen = img
+        .get(&(pmsm::pstore::REGION_ROOTS + 1000 * 64))
+        .copied()
+        .unwrap_or(0);
+    assert!(gen <= 5);
+    // Key 0 of the last durable generation must match that generation.
+    if gen > 0 {
+        // Find key 0's node value via the primary layout is non-trivial
+        // from the raw image; assert the ledger-consistency invariant
+        // instead: no value from a batch newer than gen+1 exists.
+        let max_val = img
+            .values()
+            .filter(|v| **v >= 1000 && **v < 10_000)
+            .max()
+            .copied()
+            .unwrap_or(0);
+        assert!(
+            max_val < (gen + 1) * 1000 + 100,
+            "value {max_val} from future batch visible at gen {gen}"
+        );
+    }
+}
+
+#[test]
+fn nstore_multi_table_txn_replicates() {
+    let mut m = Mirror::new(Platform::default(), StrategyKind::SmDd, true);
+    let mut t = ThreadCtx::new(0);
+    let mut heap = PmHeap::new();
+    let mut db = NStore::new();
+    let a = db.create_table("a", 2);
+    let b = db.create_table("b", 2);
+    let log = log_base_for(0);
+
+    let mut tx = Txn::begin(&mut m, &mut t, log, None);
+    db.insert(&mut m, &mut t, &mut tx, &mut heap, a, &[1, 10]);
+    db.insert(&mut m, &mut t, &mut tx, &mut heap, b, &[1, 20]);
+    tx.commit(&mut m, &mut t);
+
+    let mut tx = Txn::begin(&mut m, &mut t, log, None);
+    db.update(&mut m, &mut t, &mut tx, a, 1, 1, 11);
+    db.update(&mut m, &mut t, &mut tx, b, 1, 1, 21);
+    tx.commit(&mut m, &mut t);
+
+    assert_eq!(db.select(&mut m, &mut t, a, 1, 1), Some(11));
+    assert_eq!(db.select(&mut m, &mut t, b, 1, 1), Some(21));
+    assert!(backup_equals_primary(&m));
+}
+
+#[test]
+fn heavy_churn_keeps_ledger_ordered() {
+    // Interleave structure types on one thread; epoch ordering must hold
+    // across all of it.
+    let mut m = Mirror::new(Platform::default(), StrategyKind::SmOb, true);
+    let mut t = ThreadCtx::new(0);
+    let mut heap = PmHeap::new();
+    let mut tree = CritBitTree::new(0);
+    let mut map = PHashMap::create(&mut heap, 64);
+    let log = log_base_for(0);
+    let mut rng = Pcg64::new(9);
+    for i in 0..60u64 {
+        if rng.chance(0.5) {
+            tree.insert(&mut m, &mut t, &mut heap, rng.next_below(64), i, log, None);
+        } else {
+            map.put(&mut m, &mut t, &mut heap, rng.next_below(64), i, log, None);
+        }
+    }
+    pmsm::recovery::check_epoch_ordering(&m.rdma.remote.ledger).unwrap();
+    assert!(m.rdma.remote.ledger.len() > 200);
+}
