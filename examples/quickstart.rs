@@ -39,7 +39,7 @@ fn main() {
     }
 
     // Everything the primary persisted is durable on the backup.
-    let ledger = &mirror.rdma.remote.ledger;
+    let ledger = &mirror.backup(0).ledger;
     println!(
         "\nbackup ledger: {} durable line writes, horizon {} ns",
         ledger.len(),

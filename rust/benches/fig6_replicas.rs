@@ -1,0 +1,102 @@
+//! Figure-6 bench (ours): replica-group scaling — the Transact
+//! microbenchmark swept over `backups ∈ {1, 2, 3, 5}` × strategy, with
+//! the standard metrics report (slowdown over the single-backup run plus
+//! per-group fence-lag breakdowns) so BENCH_*.json tracking captures the
+//! cost of N-way mirroring and of relaxing `all` to quorum policies.
+//!
+//! Run: `cargo bench --bench fig6_replicas`
+//! Scale with PMSM_BENCH_TXNS (default 2000 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::Mirror;
+use pmsm::metrics::report::Table;
+use pmsm::metrics::GroupReport;
+use pmsm::runtime::fallback_predictor;
+use pmsm::workloads::transact::run_transact_on;
+use pmsm::workloads::{run_transact_with, TransactConfig};
+
+const BACKUPS: [usize; 4] = [1, 2, 3, 5];
+
+fn cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    cfg: TransactConfig,
+) -> u64 {
+    let predictor = (kind == StrategyKind::SmAd).then(|| fallback_predictor(plat));
+    run_transact_with(plat, kind, predictor, repl, cfg)
+        .expect("valid replication config")
+        .makespan
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let plat = Platform::default();
+    let cfg = TransactConfig {
+        epochs: 4,
+        writes: 1,
+        txns,
+        ..Default::default()
+    };
+
+    // ---- Replica-scaling table: slowdown over the same strategy at
+    // backups = 1 (ack = all), the regression anchor column.
+    let strategies = [
+        StrategyKind::SmRc,
+        StrategyKind::SmOb,
+        StrategyKind::SmDd,
+        StrategyKind::SmAd,
+    ];
+    let mut t = Table::new(&["backups", "policy", "SM-RC", "SM-OB", "SM-DD", "SM-AD"]);
+    let base: Vec<f64> = strategies
+        .iter()
+        .map(|&k| cell(&plat, k, ReplicationConfig::default(), cfg) as f64)
+        .collect();
+    for &b in &BACKUPS {
+        let mut policies = vec![AckPolicy::All];
+        if b >= 3 {
+            policies.push(AckPolicy::Majority);
+        }
+        for policy in policies {
+            let mut cells = vec![format!("{b}"), policy.to_string()];
+            for (i, &k) in strategies.iter().enumerate() {
+                let ms = cell(&plat, k, ReplicationConfig::new(b, policy), cfg) as f64;
+                cells.push(format!("{:.2}x", ms / base[i]));
+            }
+            t.row(cells);
+        }
+    }
+    println!(
+        "Figure 6 — Transact 4-1 replica-group scaling \
+         (slowdown over backups=1, ack=all)\n{}",
+        t.render()
+    );
+
+    // ---- Group fence-lag breakdown at 3 backups (per-backup report).
+    for policy in [AckPolicy::All, AckPolicy::Quorum(2)] {
+        let repl = ReplicationConfig::new(3, policy);
+        let mut m = Mirror::with_replication(plat.clone(), StrategyKind::SmOb, repl, false)
+            .expect("valid replication config");
+        run_transact_on(&mut m, cfg);
+        print!("{}", GroupReport::from_fabric(&m.fabric).render());
+    }
+
+    // ---- Simulator throughput while fanning out (perf tracking).
+    let mut b = Bencher::new();
+    for &n in &BACKUPS {
+        for kind in [StrategyKind::SmOb, StrategyKind::SmDd] {
+            let repl = ReplicationConfig::new(n, AckPolicy::All);
+            let writes = cfg.txns * 4;
+            b.bench_elems(
+                &format!("transact/4-1/{kind}/backups-{n}"),
+                (writes * n as u64) as f64,
+                || cell(&plat, kind, repl, cfg),
+            );
+        }
+    }
+}

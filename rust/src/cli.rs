@@ -12,10 +12,15 @@
 //!   * `config`   — print the platform (Table 2).
 //!   * `selftest` — Table 1 + quick invariant checks.
 
-use crate::config::{Experiment, Platform, StrategyKind};
+use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, StrategyKind};
+use crate::coordinator::Mirror;
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
+use crate::metrics::GroupReport;
 use crate::recovery;
+use crate::replication::Predictor;
 use crate::runtime::{fallback_predictor, LatencyModel};
+use crate::workloads::transact::run_transact_on;
+use crate::workloads::whisper::run_whisper_on;
 use crate::workloads::{run_transact, run_whisper, TransactConfig, WhisperApp, WhisperConfig};
 use anyhow::{bail, Context, Result};
 
@@ -98,12 +103,18 @@ pub fn help_text() -> &'static str {
      COMMANDS:\n\
        run       --strategy no-sm|sm-rc|sm-ob|sm-dd|sm-ad --workload transact|<app>\n\
                  [--epochs N --writes N --txns N --threads N --config FILE]\n\
+                 [--backups N --ack-policy all|majority|quorum:K]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
        recover   failure injection + recovery check [--strategy S --txns N]\n\
+                 [--backups N --ack-policy P]  (cross-replica ledger check)\n\
        config    print platform model parameters (Table 2)\n\
-       selftest  Table-1 transformations + invariant smoke checks\n"
+       selftest  Table-1 transformations + invariant smoke checks\n\
+     \n\
+     REPLICA GROUPS: --backups N mirrors every write to N backups; the\n\
+     durability fence completes per --ack-policy (all = true SM;\n\
+     quorum:K / majority = K-durable, tolerating K-1 backup losses).\n"
 }
 
 fn platform_from(args: &Args) -> Result<Platform> {
@@ -113,11 +124,48 @@ fn platform_from(args: &Args) -> Result<Platform> {
     }
 }
 
+/// Platform + replica-group shape: `--config` supplies both (via the
+/// `[replication]` section); `--backups` / `--ack-policy` override.
+fn setup_from(args: &Args) -> Result<(Platform, ReplicationConfig)> {
+    let (plat, mut repl) = match args.get("config") {
+        Some(path) => {
+            let e = Experiment::from_file(path)?;
+            (e.platform, e.replication)
+        }
+        None => (Platform::default(), ReplicationConfig::default()),
+    };
+    if let Some(b) = args.get("backups") {
+        repl.backups = b.parse().with_context(|| format!("--backups {b}"))?;
+    }
+    if let Some(s) = args.get("ack-policy") {
+        repl.ack_policy = s.parse::<AckPolicy>().context("--ack-policy")?;
+    }
+    repl.validate()?;
+    Ok((plat, repl))
+}
+
+/// A predictor for `SmAd` (PJRT model if the artifacts load, else the
+/// closed-form fallback), `None` for fixed strategies.
+fn predictor_for(plat: &Platform, strategy: StrategyKind) -> Result<Option<Predictor>> {
+    if strategy != StrategyKind::SmAd {
+        return Ok(None);
+    }
+    Ok(Some(match LatencyModel::load(plat) {
+        Ok(m) => m.predictor()?,
+        Err(e) => {
+            eprintln!("note: PJRT model unavailable ({e}); using fallback");
+            fallback_predictor(plat)
+        }
+    }))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
-    let plat = platform_from(args)?;
+    let (plat, repl) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
     let threads = args.get_usize("threads", 1)?;
+    let predictor = predictor_for(&plat, strategy)?;
+    let mut mirror = Mirror::try_build(plat.clone(), strategy, predictor, repl, false)?;
 
     let outcome = if workload == "transact" {
         let cfg = TransactConfig {
@@ -129,21 +177,17 @@ fn cmd_run(args: &Args) -> Result<()> {
             ..Default::default()
         };
         println!(
-            "transact {}-{} x {} txns, {} threads, strategy {}",
-            cfg.epochs, cfg.writes, cfg.txns, cfg.threads, strategy
+            "transact {}-{} x {} txns, {} threads, strategy {}, \
+             {} backup(s), ack {}",
+            cfg.epochs,
+            cfg.writes,
+            cfg.txns,
+            cfg.threads,
+            strategy,
+            repl.backups,
+            repl.ack_policy
         );
-        if strategy == StrategyKind::SmAd {
-            let predictor = match LatencyModel::load(&plat) {
-                Ok(m) => m.predictor()?,
-                Err(e) => {
-                    eprintln!("note: PJRT model unavailable ({e}); using fallback");
-                    fallback_predictor(&plat)
-                }
-            };
-            crate::workloads::transact::run_transact_adaptive(&plat, predictor, cfg)
-        } else {
-            run_transact(&plat, strategy, cfg)
-        }
+        run_transact_on(&mut mirror, cfg)
     } else {
         let app = WhisperApp::parse(workload)
             .with_context(|| format!("unknown workload {workload:?}"))?;
@@ -154,10 +198,11 @@ fn cmd_run(args: &Args) -> Result<()> {
             seed: args.get_u64("seed", 42)?,
         };
         println!(
-            "whisper {} x {} ops, {} threads, strategy {}",
-            app, cfg.ops, cfg.threads, strategy
+            "whisper {} x {} ops, {} threads, strategy {}, \
+             {} backup(s), ack {}",
+            app, cfg.ops, cfg.threads, strategy, repl.backups, repl.ack_policy
         );
-        run_whisper(&plat, strategy, cfg)
+        run_whisper_on(&mut mirror, cfg)
     };
 
     println!("  makespan      : {:.3} ms", outcome.makespan as f64 / 1e6);
@@ -166,6 +211,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  epochs/txn    : {:.1}", outcome.epochs_per_txn());
     println!("  writes/epoch  : {:.2}", outcome.writes_per_epoch());
     println!("  throughput    : {:.0} txn/s", outcome.txn_per_sec());
+    if repl.backups > 1 {
+        print!("{}", GroupReport::from_fabric(&mirror.fabric).render());
+    }
     Ok(())
 }
 
@@ -364,13 +412,13 @@ fn cmd_analytic(args: &Args) -> Result<()> {
 }
 
 fn cmd_recover(args: &Args) -> Result<()> {
-    let plat = platform_from(args)?;
+    let (plat, repl) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
-    use crate::coordinator::{Mirror, ThreadCtx};
+    use crate::coordinator::ThreadCtx;
     use crate::txn::Txn;
 
-    let mut m = Mirror::new(plat, strategy, true);
+    let mut m = Mirror::with_replication(plat, strategy, repl, true)?;
     let mut t = ThreadCtx::new(0);
     let log = crate::pstore::log_base_for(0);
     let d0 = 0x20_0000u64;
@@ -386,14 +434,28 @@ fn cmd_recover(args: &Args) -> Result<()> {
         snap.insert(d1, 200 + i);
         hist.commit(snap, t.last_dfence);
     }
-    let checked =
-        recovery::check_all_crashes(&m.rdma.remote.ledger, &hist, &[log], &[d0, d1])?;
-    recovery::check_epoch_ordering(&m.rdma.remote.ledger)?;
+    let ledgers = m.fabric.ledgers();
+    recovery::check_group_epoch_ordering(&ledgers)?;
+    let checked = recovery::check_group_crashes(
+        &ledgers,
+        &hist,
+        &[log],
+        &[d0, d1],
+        repl.required(),
+    )?;
+    let events: Vec<usize> = ledgers.iter().map(|l| l.len()).collect();
     println!(
-        "recovery check [{strategy}]: {txns} txns, {} ledger events, \
-         {checked} crash points verified — failure atomicity + durability hold",
-        m.rdma.remote.ledger.len()
+        "recovery check [{strategy}, {} backup(s), ack {}]: {txns} txns, \
+         ledger events per backup {events:?}, {checked} crash points \
+         verified — failure atomicity + group durability hold \
+         (tolerates {} backup failure(s))",
+        repl.backups,
+        repl.ack_policy,
+        repl.required() - 1
     );
+    if repl.backups > 1 {
+        print!("{}", GroupReport::from_fabric(&m.fabric).render());
+    }
     Ok(())
 }
 
@@ -467,5 +529,47 @@ mod tests {
             ])
             .unwrap_or_else(|e| panic!("{s}: {e}"));
         }
+    }
+
+    #[test]
+    fn recover_command_runs_for_replica_groups() {
+        for policy in ["all", "quorum:2", "majority"] {
+            main_with_args(&[
+                "recover".to_string(),
+                "--strategy".to_string(),
+                "sm-ob".to_string(),
+                "--txns".to_string(),
+                "3".to_string(),
+                "--backups".to_string(),
+                "3".to_string(),
+                "--ack-policy".to_string(),
+                policy.to_string(),
+            ])
+            .unwrap_or_else(|e| panic!("{policy}: {e}"));
+        }
+    }
+
+    #[test]
+    fn run_command_rejects_invalid_group() {
+        let argv: Vec<String> = [
+            "run", "--strategy", "sm-ob", "--txns", "5", "--backups", "2",
+            "--ack-policy", "quorum:9",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(main_with_args(&argv).is_err());
+    }
+
+    #[test]
+    fn run_command_replica_group_smoke() {
+        let argv: Vec<String> = [
+            "run", "--strategy", "sm-dd", "--txns", "20", "--backups", "3",
+            "--ack-policy", "quorum:2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        main_with_args(&argv).unwrap();
     }
 }

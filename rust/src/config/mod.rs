@@ -9,7 +9,7 @@
 pub mod platform;
 pub mod toml;
 
-pub use platform::{Platform, StrategyKind};
+pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 
 use anyhow::{bail, Context, Result};
 
@@ -28,6 +28,9 @@ pub struct Experiment {
     pub platform: Platform,
     pub strategy: StrategyKind,
     pub workload: WorkloadSpec,
+    /// Replica-group shape (`[replication]` section; defaults to the
+    /// paper's single fully-synchronous backup).
+    pub replication: ReplicationConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -44,6 +47,7 @@ impl Default for Experiment {
                 writes: 1,
                 txns: 10_000,
             },
+            replication: ReplicationConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -73,6 +77,19 @@ impl Experiment {
         if let Some(v) = doc.get("experiment.strategy") {
             exp.strategy = v.as_str()?.parse()?;
         }
+        if let Some(v) = doc.get("replication.backups") {
+            let b = v.as_int()?;
+            if b < 0 {
+                bail!("replication.backups must be >= 1, got {b}");
+            }
+            exp.replication.backups = b as usize;
+        }
+        if let Some(v) = doc.get("replication.ack_policy") {
+            exp.replication.ack_policy = v.as_str()?.parse()?;
+        }
+        exp.replication
+            .validate()
+            .context("invalid [replication] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -193,5 +210,50 @@ threads = 2
     #[test]
     fn bad_workload_kind_rejected() {
         assert!(Experiment::from_str("[workload]\nkind = \"nope\"").is_err());
+    }
+
+    #[test]
+    fn replication_defaults_when_section_missing() {
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.replication, ReplicationConfig::default());
+        assert_eq!(exp.replication.backups, 1);
+        assert_eq!(exp.replication.ack_policy, AckPolicy::All);
+    }
+
+    #[test]
+    fn replication_section_roundtrip() {
+        let text = r#"
+[replication]
+backups = 3
+ack_policy = "quorum:2"
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.replication.backups, 3);
+        assert_eq!(exp.replication.ack_policy, AckPolicy::Quorum(2));
+        assert_eq!(exp.replication.required(), 2);
+
+        let text = "[replication]\nbackups = 5\nack_policy = \"majority\"";
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.replication.ack_policy, AckPolicy::Majority);
+        assert_eq!(exp.replication.required(), 3);
+    }
+
+    #[test]
+    fn replication_bad_policy_string_rejected() {
+        let text = "[replication]\nbackups = 2\nack_policy = \"most-of-them\"";
+        assert!(Experiment::from_str(text).is_err());
+    }
+
+    #[test]
+    fn replication_quorum_larger_than_group_rejected() {
+        let text = "[replication]\nbackups = 2\nack_policy = \"quorum:3\"";
+        let err = Experiment::from_str(text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("quorum:3"),
+            "error should name the policy: {err:#}"
+        );
+        // Zero and negative backups are also invalid (no usize wrap).
+        assert!(Experiment::from_str("[replication]\nbackups = 0").is_err());
+        assert!(Experiment::from_str("[replication]\nbackups = -1").is_err());
     }
 }

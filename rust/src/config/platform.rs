@@ -59,6 +59,115 @@ impl std::fmt::Display for StrategyKind {
     }
 }
 
+/// Acknowledgement policy of a replica group: when is a durability fence
+/// on the primary allowed to complete?
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AckPolicy {
+    /// True synchronous mirroring: every backup must be durable.
+    All,
+    /// Majority-durable: `floor(backups/2) + 1` backups must be durable.
+    Majority,
+    /// At least `k` backups must be durable (`1 <= k <= backups`).
+    Quorum(usize),
+}
+
+impl AckPolicy {
+    /// Number of durable backups this policy requires out of `backups`.
+    pub fn required(self, backups: usize) -> usize {
+        match self {
+            AckPolicy::All => backups,
+            AckPolicy::Majority => backups / 2 + 1,
+            AckPolicy::Quorum(k) => k,
+        }
+    }
+}
+
+impl FromStr for AckPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "all" => return Ok(AckPolicy::All),
+            "majority" => return Ok(AckPolicy::Majority),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("quorum") {
+            // Exactly one separator then K — quorum:K, quorum(K),
+            // quorum-K, quorum=K, quorum K — with K parsed strictly, so
+            // "quorum2", "quorum:-2" and "quorum:2)" all error.
+            let k_str = if let Some(inner) = rest.strip_prefix('(') {
+                inner.strip_suffix(')')
+            } else {
+                rest.strip_prefix(|c: char| ":=- ".contains(c))
+            };
+            if let Some(k) = k_str.and_then(|d| d.trim().parse::<usize>().ok()) {
+                return Ok(AckPolicy::Quorum(k));
+            }
+            bail!("malformed quorum ack policy {s:?}; use \"quorum:K\"");
+        }
+        bail!("unknown ack policy {s:?}; expected all | majority | quorum:K")
+    }
+}
+
+impl std::fmt::Display for AckPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AckPolicy::All => f.write_str("all"),
+            AckPolicy::Majority => f.write_str("majority"),
+            AckPolicy::Quorum(k) => write!(f, "quorum:{k}"),
+        }
+    }
+}
+
+/// Replica-group shape: how many backups a [`crate::net::Fabric`] drives
+/// and the acknowledgement policy governing durability fences.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicationConfig {
+    pub backups: usize,
+    pub ack_policy: AckPolicy,
+}
+
+impl Default for ReplicationConfig {
+    /// The paper's topology: one backup, fully synchronous.
+    fn default() -> Self {
+        ReplicationConfig {
+            backups: 1,
+            ack_policy: AckPolicy::All,
+        }
+    }
+}
+
+impl ReplicationConfig {
+    pub fn new(backups: usize, ack_policy: AckPolicy) -> Self {
+        ReplicationConfig { backups, ack_policy }
+    }
+
+    /// Number of durable backups required at a durability fence.
+    pub fn required(&self) -> usize {
+        self.ack_policy.required(self.backups)
+    }
+
+    /// Sanity-check invariants (`1 <= required <= backups`).
+    pub fn validate(&self) -> Result<()> {
+        if self.backups == 0 {
+            bail!("replication.backups must be >= 1");
+        }
+        let req = self.required();
+        if req == 0 {
+            bail!("ack policy {} requires at least one ack", self.ack_policy);
+        }
+        if req > self.backups {
+            bail!(
+                "ack policy {} needs {req} durable backups but the group \
+                 only has {}",
+                self.ack_policy,
+                self.backups
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Default Intel complex-addressing slice-hash masks for an 8-slice LLC
 /// (Maurice et al., "Reverse engineering Intel last-level cache complex
 /// addressing using performance counters").
@@ -334,5 +443,59 @@ mod tests {
     fn ddio_capacity_is_2mb() {
         let p = Platform::default();
         assert_eq!(p.ddio_lines() * crate::LINE, 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn ack_policy_parse() {
+        assert_eq!("all".parse::<AckPolicy>().unwrap(), AckPolicy::All);
+        assert_eq!("ALL".parse::<AckPolicy>().unwrap(), AckPolicy::All);
+        assert_eq!(
+            "majority".parse::<AckPolicy>().unwrap(),
+            AckPolicy::Majority
+        );
+        for s in ["quorum:2", "quorum(2)", "quorum-2", "quorum 2"] {
+            assert_eq!(s.parse::<AckPolicy>().unwrap(), AckPolicy::Quorum(2), "{s}");
+        }
+        assert!("bogus".parse::<AckPolicy>().is_err());
+        assert!("quorum:x".parse::<AckPolicy>().is_err());
+        assert!("quorum".parse::<AckPolicy>().is_err());
+        assert!("quorum:-2".parse::<AckPolicy>().is_err());
+        assert!("quorum--2".parse::<AckPolicy>().is_err());
+        assert!("quorum2".parse::<AckPolicy>().is_err());
+        assert!("quorum:2)".parse::<AckPolicy>().is_err());
+        assert!("quorum(2".parse::<AckPolicy>().is_err());
+    }
+
+    #[test]
+    fn ack_policy_required_counts() {
+        assert_eq!(AckPolicy::All.required(3), 3);
+        assert_eq!(AckPolicy::Majority.required(3), 2);
+        assert_eq!(AckPolicy::Majority.required(5), 3);
+        assert_eq!(AckPolicy::Majority.required(1), 1);
+        assert_eq!(AckPolicy::Quorum(2).required(5), 2);
+    }
+
+    #[test]
+    fn replication_validation() {
+        assert!(ReplicationConfig::default().validate().is_ok());
+        assert_eq!(ReplicationConfig::default().backups, 1);
+        let ok = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+        assert!(ok.validate().is_ok());
+        assert_eq!(ok.required(), 2);
+        // k > backups, k = 0, backups = 0 all rejected.
+        assert!(ReplicationConfig::new(2, AckPolicy::Quorum(3))
+            .validate()
+            .is_err());
+        assert!(ReplicationConfig::new(2, AckPolicy::Quorum(0))
+            .validate()
+            .is_err());
+        assert!(ReplicationConfig::new(0, AckPolicy::All).validate().is_err());
+    }
+
+    #[test]
+    fn ack_policy_display_roundtrip() {
+        for p in [AckPolicy::All, AckPolicy::Majority, AckPolicy::Quorum(4)] {
+            assert_eq!(p.to_string().parse::<AckPolicy>().unwrap(), p);
+        }
     }
 }

@@ -1,22 +1,27 @@
 //! The mirroring coordinator: binds a primary node's persistency-model
-//! traffic to the backup over the simulated RDMA fabric (paper Fig. 2).
+//! traffic to a replica group of backups over the simulated RDMA fabric
+//! (paper Fig. 2, generalized from one backup to N).
 //!
 //! [`Mirror`] exposes the persistency-model API the paper assumes
 //! (Intel-style `store`/`clwb`/`sfence` plus an explicit durability fence
 //! at transaction end); every `clwb` simultaneously (1) persists the line
 //! locally through the primary's memory controller and (2) hands the dirty
 //! line to the active replication [`Strategy`](crate::replication::Strategy)
-//! for remote replication. Multi-threaded workloads are executed by the
-//! conservative min-clock scheduler in [`sched`].
+//! for remote replication across the group's [`Fabric`]. Durability
+//! fences complete per the group's ack policy; per-backup fence
+//! completions are tracked on the [`ThreadCtx`] for lag analysis.
+//! Multi-threaded workloads are executed by the conservative min-clock
+//! scheduler in [`sched`].
 
 pub mod sched;
 
-use crate::config::{Platform, StrategyKind};
-use crate::net::{Rdma, WriteMeta};
+use crate::config::{Platform, ReplicationConfig, StrategyKind};
+use crate::net::{Fabric, RemoteEngine, WriteMeta};
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
 use crate::util::FastMap;
 use crate::{line_of, Addr, Ns};
+use anyhow::Result;
 
 /// Per-thread execution context: virtual clock + transactional counters.
 #[derive(Debug)]
@@ -32,8 +37,11 @@ pub struct ThreadCtx {
     pub txns_done: u64,
     pub writes_done: u64,
     pub epochs_done: u64,
-    /// Completion time of the last durability fence.
+    /// Completion time of the last durability fence (ack-policy level).
     pub last_dfence: Ns,
+    /// Per-backup completion instants of the last durability fence
+    /// (index = backup id; all zeros under NO-SM).
+    pub last_dfence_per_backup: Vec<Ns>,
     /// Virtual time at which stats were last reset (steady-state marker).
     pub stats_zero_at: Ns,
 }
@@ -50,6 +58,7 @@ impl ThreadCtx {
             writes_done: 0,
             epochs_done: 0,
             last_dfence: 0,
+            last_dfence_per_backup: Vec::new(),
             stats_zero_at: 0,
         }
     }
@@ -80,58 +89,96 @@ pub struct Mirror {
     local_mc_lat: Ns,
     /// Primary PM contents (line address -> word value).
     image: FastMap<Addr, u64>,
-    /// RDMA stack: local NIC + fabric + backup node.
-    pub rdma: Rdma,
+    /// Replica-group fabric: one RDMA stack per backup.
+    pub fabric: Fabric,
     strategy: Box<dyn Strategy>,
     kind: StrategyKind,
+    repl: ReplicationConfig,
     /// Load latency from the primary image (ns).
     load_cost: Ns,
 }
 
 impl Mirror {
-    /// Build a mirror with a fixed strategy (no predictor needed).
+    /// Build a single-backup mirror with a fixed strategy (the paper's
+    /// topology; no predictor needed).
     pub fn new(plat: Platform, kind: StrategyKind, ledger: bool) -> Self {
         assert!(
             kind != StrategyKind::SmAd,
             "use Mirror::with_predictor for SM-AD"
         );
-        Self::build(plat, kind, None, ledger)
+        Self::try_build(plat, kind, None, ReplicationConfig::default(), ledger)
+            .expect("fixed strategy + default replication cannot fail")
     }
 
-    /// Build a mirror with the adaptive strategy wired to `predictor`.
+    /// Build a single-backup mirror with the adaptive strategy wired to
+    /// `predictor`.
     pub fn with_predictor(
         plat: Platform,
         kind: StrategyKind,
         predictor: Predictor,
         ledger: bool,
     ) -> Self {
-        Self::build(plat, kind, Some(predictor), ledger)
+        Self::try_build(
+            plat,
+            kind,
+            Some(predictor),
+            ReplicationConfig::default(),
+            ledger,
+        )
+        .expect("strategy with predictor + default replication cannot fail")
     }
 
-    fn build(
+    /// Build a mirror driving an N-way replica group (for `SmAd`, use
+    /// [`Mirror::try_build`] with a predictor — this errors without one).
+    pub fn with_replication(
+        plat: Platform,
+        kind: StrategyKind,
+        repl: ReplicationConfig,
+        ledger: bool,
+    ) -> Result<Self> {
+        Self::try_build(plat, kind, None, repl, ledger)
+    }
+
+    /// Fully general constructor: any strategy, any replica-group shape.
+    /// Fails on an invalid replication config or on `SmAd` without a
+    /// predictor.
+    pub fn try_build(
         plat: Platform,
         kind: StrategyKind,
         predictor: Option<Predictor>,
+        repl: ReplicationConfig,
         ledger: bool,
-    ) -> Self {
-        let rdma = Rdma::new(&plat, ledger);
+    ) -> Result<Self> {
+        repl.validate()?;
+        let strategy = replication::make_strategy(kind, predictor)?;
+        let fabric = Fabric::new(&plat, &repl, ledger);
         let local_mc = RateLimiter::new(plat.llc_mc);
         let local_mc_lat = plat.llc_mc;
-        let strategy = replication::make_strategy(kind, predictor);
-        Mirror {
+        Ok(Mirror {
             plat,
             local_mc,
             local_mc_lat,
             image: FastMap::default(),
-            rdma,
+            fabric,
             strategy,
             kind,
+            repl,
             load_cost: 5,
-        }
+        })
     }
 
     pub fn kind(&self) -> StrategyKind {
         self.kind
+    }
+
+    /// The replica-group shape this mirror drives.
+    pub fn replication(&self) -> &ReplicationConfig {
+        &self.repl
+    }
+
+    /// Backup `i`'s remote engine (shorthand for `fabric.backup(i)`).
+    pub fn backup(&self, i: usize) -> &RemoteEngine {
+        self.fabric.backup(i)
     }
 
     /// Read a word from the primary PM image (0 when never written).
@@ -173,7 +220,7 @@ impl Mirror {
         };
         t.seq += 1;
         t.writes_done += 1;
-        self.strategy.on_clwb(&mut self.rdma, &mut t.clock, meta);
+        self.strategy.on_clwb(&mut self.fabric, &mut t.clock, meta);
     }
 
     /// `sfence`: ordering point — wait for local persists, signal the
@@ -184,7 +231,7 @@ impl Mirror {
             t.clock.wait_until(max);
         }
         t.pending_local.clear();
-        self.strategy.on_ofence(&mut self.rdma, &mut t.clock);
+        self.strategy.on_ofence(&mut self.fabric, &mut t.clock);
         t.epoch += 1;
         t.epochs_done += 1;
     }
@@ -193,18 +240,24 @@ impl Mirror {
     /// adaptive strategies.
     pub fn txn_begin(&mut self, t: &mut ThreadCtx, hint: Option<TxnShape>) {
         t.epoch = 0;
-        self.strategy.on_txn_begin(&mut self.rdma, &mut t.clock, hint);
+        self.strategy
+            .on_txn_begin(&mut self.fabric, &mut t.clock, hint);
     }
 
     /// Transaction end: durability point (local drain + strategy fence).
+    /// Records both the ack-policy completion and the per-backup fence
+    /// completions.
     pub fn txn_commit(&mut self, t: &mut ThreadCtx) {
         t.clock.busy(self.plat.sfence);
         if let Some(&max) = t.pending_local.iter().max() {
             t.clock.wait_until(max);
         }
         t.pending_local.clear();
-        self.strategy.on_dfence(&mut self.rdma, &mut t.clock);
+        self.strategy.on_dfence(&mut self.fabric, &mut t.clock);
         t.last_dfence = t.clock.now;
+        t.last_dfence_per_backup.clear();
+        t.last_dfence_per_backup
+            .extend_from_slice(self.fabric.last_fence());
         t.txn += 1;
         t.txns_done += 1;
     }
@@ -213,12 +266,12 @@ impl Mirror {
     pub fn image(&self) -> &FastMap<Addr, u64> {
         &self.image
     }
-
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::AckPolicy;
     use std::collections::HashMap;
 
     fn run_transact_txn(m: &mut Mirror, t: &mut ThreadCtx, epochs: u32, writes: u32) {
@@ -280,7 +333,7 @@ mod tests {
         let mut m = Mirror::new(Platform::default(), StrategyKind::SmDd, true);
         let mut t = ThreadCtx::new(3);
         run_transact_txn(&mut m, &mut t, 2, 2);
-        let evs = m.rdma.remote.ledger.events();
+        let evs = m.backup(0).ledger.events();
         assert_eq!(evs.len(), 4);
         assert!(evs.iter().all(|e| e.thread == 3));
         assert_eq!(evs.iter().filter(|e| e.epoch == 0).count(), 2);
@@ -293,14 +346,75 @@ mod tests {
             let mut m = Mirror::new(Platform::default(), kind, true);
             let mut t = ThreadCtx::new(0);
             run_transact_txn(&mut m, &mut t, 8, 2);
-            let horizon = m.rdma.remote.persist_horizon();
+            let horizon = m.backup(0).persist_horizon();
             assert!(
                 t.last_dfence >= horizon,
                 "{kind:?}: dfence at {} < persist horizon {}",
                 t.last_dfence,
                 horizon
             );
-            assert_eq!(m.rdma.remote.ledger.len(), 16, "{kind:?}");
+            assert_eq!(m.backup(0).ledger.len(), 16, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn replica_group_mirrors_every_backup() {
+        let repl = ReplicationConfig::new(3, AckPolicy::All);
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            let mut m =
+                Mirror::with_replication(Platform::default(), kind, repl, true).unwrap();
+            let mut t = ThreadCtx::new(0);
+            run_transact_txn(&mut m, &mut t, 4, 2);
+            assert_eq!(m.fabric.backups(), 3);
+            for b in 0..3 {
+                assert_eq!(m.backup(b).ledger.len(), 8, "{kind:?} backup {b}");
+            }
+            // All policy: the dfence covers every backup's horizon, and
+            // per-backup completions are recorded.
+            assert_eq!(t.last_dfence_per_backup.len(), 3);
+            for b in 0..3 {
+                assert!(
+                    t.last_dfence >= m.backup(b).persist_horizon(),
+                    "{kind:?} backup {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quorum_dfence_may_lead_slowest_backup() {
+        // With quorum:1 of 3, the fence completes at the fastest backup;
+        // per-backup completion times expose the laggards.
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(1));
+        let mut m =
+            Mirror::with_replication(Platform::default(), StrategyKind::SmOb, repl, true)
+                .unwrap();
+        let mut t = ThreadCtx::new(0);
+        for _ in 0..5 {
+            run_transact_txn(&mut m, &mut t, 4, 1);
+        }
+        let fences = t.last_dfence_per_backup.clone();
+        assert_eq!(fences.len(), 3);
+        let fastest = *fences.iter().min().unwrap();
+        let slowest = *fences.iter().max().unwrap();
+        assert!(fastest <= slowest);
+        // The policy-level dfence equals the fastest completion (+ poll).
+        assert!(
+            t.last_dfence >= fastest && t.last_dfence <= slowest + 1000,
+            "dfence {} outside [{fastest}, {slowest}+poll]",
+            t.last_dfence
+        );
+    }
+
+    #[test]
+    fn invalid_replication_rejected_at_build() {
+        let repl = ReplicationConfig::new(2, AckPolicy::Quorum(5));
+        assert!(Mirror::with_replication(
+            Platform::default(),
+            StrategyKind::SmOb,
+            repl,
+            false
+        )
+        .is_err());
     }
 }

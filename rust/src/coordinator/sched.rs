@@ -64,6 +64,9 @@ pub struct RunOutcome {
     pub epochs: u64,
     /// Per-thread completion times.
     pub per_thread: Vec<Ns>,
+    /// Per-backup persist horizons at the end of the run (index =
+    /// backup id; length = replica-group size).
+    pub per_backup_horizon: Vec<Ns>,
 }
 
 impl RunOutcome {
@@ -89,6 +92,14 @@ impl RunOutcome {
             return 0.0;
         }
         self.epochs as f64 / self.txns as f64
+    }
+
+    /// Replica lag: spread between the slowest and fastest backup's
+    /// persist horizon (0 for a single backup or NO-SM).
+    pub fn backup_lag(&self) -> Ns {
+        let max = self.per_backup_horizon.iter().copied().max().unwrap_or(0);
+        let min = self.per_backup_horizon.iter().copied().min().unwrap_or(0);
+        max - min
     }
 }
 
@@ -143,6 +154,7 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         out.epochs += c.epochs_done;
         out.per_thread.push(c.now() - c.stats_zero_at);
     }
+    out.per_backup_horizon = mirror.fabric.persist_horizons();
     out
 }
 
@@ -214,6 +226,27 @@ mod tests {
             contended > solo,
             "expected QP0 contention: solo={solo} contended={contended}"
         );
+    }
+
+    #[test]
+    fn outcome_reports_per_backup_horizons() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+        let mut m = Mirror::with_replication(
+            Platform::default(),
+            StrategyKind::SmOb,
+            repl,
+            false,
+        )
+        .unwrap();
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(10, 2, 1, 0x10000)];
+        let out = run_threads(&mut m, &mut srcs);
+        assert_eq!(out.per_backup_horizon.len(), 3);
+        for (i, &h) in out.per_backup_horizon.iter().enumerate() {
+            assert!(h > 0, "backup {i} never persisted");
+        }
+        // Lag is bounded by the run itself.
+        assert!(out.backup_lag() <= out.makespan);
     }
 
     #[test]

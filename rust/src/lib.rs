@@ -12,9 +12,20 @@
 //!   transactions, [`txn`]);
 //! * the paper's four replication strategies — NO-SM, SM-RC, SM-OB, SM-DD —
 //!   plus a model-driven adaptive strategy ([`replication`]);
+//! * an N-way **replica-group fabric** generalizing the paper's single
+//!   backup: every verb fans out to N independent backups (each with its
+//!   own LLC/MC/durability ledger) and durability fences complete per a
+//!   pluggable **ack policy** — `all` (true synchronous mirroring),
+//!   `quorum:k` / `majority` (k-durable, tolerating `k-1` backup
+//!   losses); `backups = 1` + `all` reproduces the paper's numbers
+//!   bit-exactly ([`net::Fabric`], `[replication] backups/ack_policy`
+//!   config keys, per-backup latency breakdowns in [`metrics`]);
 //! * the mirroring coordinator that binds a primary node's persistency
-//!   traffic to a backup node over the simulated fabric ([`coordinator`]);
-//! * failure injection and recovery checking ([`recovery`]);
+//!   traffic to the replica group over the simulated fabric
+//!   ([`coordinator`]);
+//! * failure injection and recovery checking, including the
+//!   cross-replica ledger consistency check (every committed txn durable
+//!   on the ack-policy-required set) ([`recovery`]);
 //! * persistent data structures and the WHISPER-like workload suite
 //!   ([`pstore`], [`workloads`]);
 //! * an AOT-compiled analytic performance model executed through PJRT

@@ -1,8 +1,11 @@
-//! Metrics: counters, log-scale histograms, and the report formatters that
-//! regenerate the paper's figures as text tables.
+//! Metrics: counters, log-scale histograms, the report formatters that
+//! regenerate the paper's figures as text tables, and the replica-group
+//! (per-backup + group-level) breakdown report.
 
 pub mod hist;
+pub mod replica;
 pub mod report;
 
 pub use hist::LogHistogram;
+pub use replica::GroupReport;
 pub use report::{Fig4Row, Fig5Row, Table};

@@ -1,0 +1,155 @@
+//! Replica-group metrics: per-backup and group-level latency breakdowns
+//! for an N-way mirroring run (the replica-group analogue of the Fig. 4/5
+//! report formatters).
+
+use crate::net::{BackupStats, Fabric};
+use crate::Ns;
+
+use super::report::Table;
+
+/// Snapshot of a replica group after a run: per-backup stats plus the
+/// group-level blocking profile.
+#[derive(Clone, Debug)]
+pub struct GroupReport {
+    /// Rendered ack policy (e.g. `all`, `quorum:2`).
+    pub policy: String,
+    /// Durable backups required at a fence.
+    pub required: usize,
+    pub stats: Vec<BackupStats>,
+    /// Blocking fences executed (group level).
+    pub blocking_waits: u64,
+    /// Total ns the workload threads spent blocked on group fences.
+    pub blocked_ns: Ns,
+}
+
+impl GroupReport {
+    /// Capture a report from a fabric (typically after a run).
+    pub fn from_fabric(fabric: &Fabric) -> GroupReport {
+        GroupReport {
+            policy: fabric.policy().to_string(),
+            required: fabric.required(),
+            stats: fabric.backup_stats(),
+            blocking_waits: fabric.blocking_waits,
+            blocked_ns: fabric.blocked_ns,
+        }
+    }
+
+    /// Number of backups in the group.
+    pub fn backups(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Spread between the slowest and fastest backup's persist horizon.
+    pub fn horizon_lag(&self) -> Ns {
+        let max = self.stats.iter().map(|s| s.persist_horizon).max().unwrap_or(0);
+        let min = self.stats.iter().map(|s| s.persist_horizon).min().unwrap_or(0);
+        max - min
+    }
+
+    /// Spread between the slowest and fastest backup's completion of the
+    /// most recent durability fence.
+    pub fn fence_lag(&self) -> Ns {
+        let max = self.stats.iter().map(|s| s.last_fence).max().unwrap_or(0);
+        let min = self.stats.iter().map(|s| s.last_fence).min().unwrap_or(0);
+        max - min
+    }
+
+    /// Mean blocked time per fence (ns).
+    pub fn mean_block_ns(&self) -> f64 {
+        if self.blocking_waits == 0 {
+            return 0.0;
+        }
+        self.blocked_ns as f64 / self.blocking_waits as f64
+    }
+
+    /// Render the per-backup table + group summary.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "backup",
+            "writes",
+            "persists",
+            "barriers",
+            "pending",
+            "horizon(ns)",
+            "fence(ns)",
+            "stall(ns)",
+        ]);
+        for s in &self.stats {
+            t.row(vec![
+                format!("{}", s.id),
+                format!("{}", s.writes),
+                format!("{}", s.persists),
+                format!("{}", s.barriers),
+                format!("{}", s.pending_lines),
+                format!("{}", s.persist_horizon),
+                format!("{}", s.last_fence),
+                format!("{}", s.window_stall_ns),
+            ]);
+        }
+        format!(
+            "Replica group — {} backups, ack policy {} (required {})\n{}\
+             group: {} blocking fences, {:.0} ns mean block, \
+             horizon lag {} ns, fence lag {} ns\n",
+            self.backups(),
+            self.policy,
+            self.required,
+            t.render(),
+            self.blocking_waits,
+            self.mean_block_ns(),
+            self.horizon_lag(),
+            self.fence_lag(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{AckPolicy, Platform, ReplicationConfig};
+    use crate::net::WriteMeta;
+    use crate::sim::ThreadClock;
+
+    #[test]
+    fn report_captures_group_shape() {
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+        let mut f = Fabric::new(&p, &repl, true);
+        let mut t = ThreadClock::new(0);
+        for s in 0..3u64 {
+            f.post_write_wt(
+                &mut t,
+                WriteMeta {
+                    addr: 0x40 * (1 + s),
+                    val: s,
+                    thread: 0,
+                    txn: 0,
+                    epoch: 0,
+                    seq: s,
+                },
+            );
+        }
+        f.rdfence(&mut t);
+        let r = GroupReport::from_fabric(&f);
+        assert_eq!(r.backups(), 3);
+        assert_eq!(r.required, 2);
+        assert_eq!(r.policy, "quorum:2");
+        assert_eq!(r.blocking_waits, 1);
+        assert!(r.mean_block_ns() >= 0.0);
+        let text = r.render();
+        assert!(text.contains("3 backups"));
+        assert!(text.contains("quorum:2"));
+        // One line per backup plus header/rule/summary.
+        assert!(text.lines().count() >= 6, "{text}");
+    }
+
+    #[test]
+    fn lag_zero_for_single_backup_before_any_fence() {
+        let p = Platform::default();
+        let f = Fabric::single(&p, false);
+        let r = GroupReport::from_fabric(&f);
+        assert_eq!(r.backups(), 1);
+        assert_eq!(r.horizon_lag(), 0);
+        assert_eq!(r.fence_lag(), 0);
+        assert_eq!(r.mean_block_ns(), 0.0);
+    }
+}

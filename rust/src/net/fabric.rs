@@ -1,0 +1,439 @@
+//! Replica-group fabric: one requester stack ([`Rdma`] — QP set, wire,
+//! remote engine with its own LLC/MC/durability ledger) **per backup**,
+//! with verb fan-out and a pluggable acknowledgement policy.
+//!
+//! The paper defines its SM strategies for a single primary→backup pair;
+//! enterprise SM deployments mirror to N replicas. The fabric generalizes
+//! the verb layer without touching per-backup semantics: posted verbs
+//! (writes, `rofence`) are fanned out to every replica — each backup
+//! independently enforces its own ordering floors and drain behaviour —
+//! while blocking verbs (`rcommit`, `rdfence`, sentinel reads) are
+//! *issued* on every replica and the calling thread blocks once, until
+//! the [`AckPolicy`] is satisfied:
+//!
+//! * [`AckPolicy::All`] — true synchronous mirroring; the fence completes
+//!   at the **max** replica completion;
+//! * [`AckPolicy::Quorum`]`(k)` / [`AckPolicy::Majority`] — the fence
+//!   completes at the k-th smallest replica completion, so up to
+//!   `k - 1` backup losses still leave a durable acked replica.
+//!
+//! With `backups = 1` and `ack_policy = "all"` the fabric is
+//! event-for-event identical to driving the single [`Rdma`] stack
+//! directly (the pre-replica-group behaviour); the unit tests below pin
+//! that equivalence, which is the refactor's regression anchor.
+
+use super::rdma::Rdma;
+use super::remote::RemoteEngine;
+use super::verbs::WriteMeta;
+use crate::config::{AckPolicy, Platform, ReplicationConfig};
+use crate::mem::DurabilityLog;
+use crate::sim::ThreadClock;
+use crate::Ns;
+
+/// Per-backup snapshot for metrics reports.
+#[derive(Clone, Debug)]
+pub struct BackupStats {
+    pub id: usize,
+    /// Replicated line writes received.
+    pub writes: u64,
+    /// Durable line writes (MC-queue admissions).
+    pub persists: u64,
+    /// Ordering barriers executed.
+    pub barriers: u64,
+    /// Replicated-but-not-yet-persistent lines (SM-RC exposure).
+    pub pending_lines: usize,
+    /// Latest persist instant on this backup.
+    pub persist_horizon: Ns,
+    /// Send-window stall attributable to this backup's stack.
+    pub window_stall_ns: Ns,
+    /// This backup's completion of the most recent durability fence.
+    pub last_fence: Ns,
+}
+
+/// N-way mirroring fabric (see module docs).
+pub struct Fabric {
+    replicas: Vec<Rdma>,
+    policy: AckPolicy,
+    /// Durable-backup count required at a fence (validated against
+    /// `replicas.len()` at construction).
+    required: usize,
+    poll_cost: Ns,
+    /// Per-backup completion instants of the most recent blocking fence
+    /// (index = backup id).
+    last_fence: Vec<Ns>,
+    // stats
+    pub blocking_waits: u64,
+    pub blocked_ns: Ns,
+}
+
+impl Fabric {
+    /// Build a fabric for `repl` (the config must be pre-validated —
+    /// see [`ReplicationConfig::validate`]; invalid shapes panic here).
+    pub fn new(p: &Platform, repl: &ReplicationConfig, ledger: bool) -> Self {
+        repl.validate()
+            .expect("ReplicationConfig must be validated before Fabric::new");
+        let replicas: Vec<Rdma> = (0..repl.backups).map(|_| Rdma::new(p, ledger)).collect();
+        Fabric {
+            last_fence: vec![0; replicas.len()],
+            replicas,
+            policy: repl.ack_policy,
+            required: repl.required(),
+            poll_cost: p.poll_cost,
+            blocking_waits: 0,
+            blocked_ns: 0,
+        }
+    }
+
+    /// The paper's topology: one backup, fully synchronous.
+    pub fn single(p: &Platform, ledger: bool) -> Self {
+        Self::new(p, &ReplicationConfig::default(), ledger)
+    }
+
+    pub fn backups(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn policy(&self) -> AckPolicy {
+        self.policy
+    }
+
+    /// Durable backups required at a durability fence.
+    pub fn required(&self) -> usize {
+        self.required
+    }
+
+    /// Backup `i`'s remote engine (LLC/MC/ledger).
+    pub fn backup(&self, i: usize) -> &RemoteEngine {
+        &self.replicas[i].remote
+    }
+
+    /// Backup `i`'s full requester stack.
+    pub fn replica(&self, i: usize) -> &Rdma {
+        &self.replicas[i]
+    }
+
+    /// All backup durability ledgers, in backup order.
+    pub fn ledgers(&self) -> Vec<&DurabilityLog> {
+        self.replicas.iter().map(|r| &r.remote.ledger).collect()
+    }
+
+    /// Per-backup persist horizons, in backup order.
+    pub fn persist_horizons(&self) -> Vec<Ns> {
+        self.replicas
+            .iter()
+            .map(|r| r.remote.persist_horizon())
+            .collect()
+    }
+
+    /// Latest persist instant across the whole group.
+    pub fn group_horizon(&self) -> Ns {
+        self.persist_horizons().into_iter().max().unwrap_or(0)
+    }
+
+    /// Per-backup completions of the most recent blocking fence.
+    pub fn last_fence(&self) -> &[Ns] {
+        &self.last_fence
+    }
+
+    /// Aggregate send-window stall across all backups' stacks.
+    pub fn window_stall_ns(&self) -> Ns {
+        self.replicas.iter().map(|r| r.window_stall_ns()).sum()
+    }
+
+    /// Aggregate posted writes across all backups' stacks.
+    pub fn posted_writes(&self) -> u64 {
+        self.replicas.iter().map(|r| r.posted_writes).sum()
+    }
+
+    /// Per-backup metric snapshots.
+    pub fn backup_stats(&self) -> Vec<BackupStats> {
+        self.replicas
+            .iter()
+            .enumerate()
+            .map(|(id, r)| BackupStats {
+                id,
+                writes: r.remote.writes,
+                persists: r.remote.persists,
+                barriers: r.remote.barriers,
+                pending_lines: r.remote.pending_lines(),
+                persist_horizon: r.remote.persist_horizon(),
+                window_stall_ns: r.window_stall_ns(),
+                last_fence: self.last_fence[id],
+            })
+            .collect()
+    }
+
+    /// Ack-policy completion over per-backup fence completions: the
+    /// `required`-th smallest instant.
+    fn policy_completion(&self, times: &[Ns]) -> Ns {
+        debug_assert_eq!(times.len(), self.replicas.len());
+        let mut sorted = times.to_vec();
+        sorted.sort_unstable();
+        sorted[self.required - 1]
+    }
+
+    /// Block the calling thread until `completion` (same cost model as
+    /// the single-stack path: CQ poll after the wait).
+    fn block(&mut self, t: &mut ThreadClock, completion: Ns) {
+        self.blocking_waits += 1;
+        self.blocked_ns += completion.saturating_sub(t.now);
+        t.wait_until(completion);
+        t.busy(self.poll_cost);
+    }
+
+    // ---- verb fan-out ----------------------------------------------------
+
+    /// Posted one-sided DDIO write to every backup (SM-RC data path).
+    pub fn post_write(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
+        for r in &mut self.replicas {
+            r.post_write(t, meta);
+        }
+    }
+
+    /// Posted write-through write to every backup (SM-OB data path).
+    pub fn post_write_wt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
+        for r in &mut self.replicas {
+            r.post_write_wt(t, meta);
+        }
+    }
+
+    /// Non-temporal write on every backup's shared QP (SM-DD data path).
+    pub fn post_write_nt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
+        for r in &mut self.replicas {
+            r.post_write_nt(t, meta);
+        }
+    }
+
+    /// Posted remote ordering fence on every backup (SM-OB epochs).
+    /// Ordering is a per-backup property, so no ack policy applies.
+    pub fn rofence(&mut self, t: &mut ThreadClock) {
+        for r in &mut self.replicas {
+            r.rofence(t);
+        }
+    }
+
+    /// Shared blocking-fence protocol: issue the verb on every backup,
+    /// record per-backup completions, block once per the ack policy.
+    fn fence(&mut self, t: &mut ThreadClock, issue: fn(&mut Rdma, &mut ThreadClock) -> Ns) {
+        let mut times = Vec::with_capacity(self.replicas.len());
+        for r in &mut self.replicas {
+            times.push(issue(r, t));
+        }
+        let done = self.policy_completion(&times);
+        self.last_fence.clone_from(&times);
+        self.block(t, done);
+    }
+
+    /// Blocking remote commit across the group (SM-RC fence).
+    pub fn rcommit(&mut self, t: &mut ThreadClock) {
+        self.fence(t, Rdma::rcommit_issue);
+    }
+
+    /// Blocking remote durability fence across the group (SM-OB).
+    pub fn rdfence(&mut self, t: &mut ThreadClock) {
+        self.fence(t, Rdma::rdfence_issue);
+    }
+
+    /// Blocking sentinel read across the group (SM-DD durability point).
+    pub fn read_fence(&mut self, t: &mut ThreadClock) {
+        self.fence(t, Rdma::read_fence_issue);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
+        WriteMeta {
+            addr,
+            val: seq,
+            thread: 0,
+            txn: 0,
+            epoch,
+            seq,
+        }
+    }
+
+    fn repl(backups: usize, policy: AckPolicy) -> ReplicationConfig {
+        ReplicationConfig::new(backups, policy)
+    }
+
+    /// The regression anchor: with one backup and `All`, the fabric must
+    /// be event-for-event identical to driving the raw `Rdma` stack —
+    /// same thread time after every verb, same ledger events, same
+    /// backup counters.
+    #[test]
+    fn single_backup_identical_to_raw_rdma() {
+        type Step = fn(&mut Rdma, &mut Fabric, &mut ThreadClock, &mut ThreadClock);
+        // Each sequence mirrors one strategy's verb pattern.
+        let sequences: Vec<(&str, Vec<Step>)> = vec![
+            (
+                "sm-rc",
+                vec![
+                    |r, f, tr, tf| {
+                        r.post_write(tr, meta(0x40, 0, 0));
+                        f.post_write(tf, meta(0x40, 0, 0));
+                    },
+                    |r, f, tr, tf| {
+                        r.rcommit(tr);
+                        f.rcommit(tf);
+                    },
+                    |r, f, tr, tf| {
+                        r.post_write(tr, meta(0x80, 1, 1));
+                        f.post_write(tf, meta(0x80, 1, 1));
+                    },
+                    |r, f, tr, tf| {
+                        r.rcommit(tr);
+                        f.rcommit(tf);
+                    },
+                ],
+            ),
+            (
+                "sm-ob",
+                vec![
+                    |r, f, tr, tf| {
+                        r.post_write_wt(tr, meta(0x40, 0, 0));
+                        f.post_write_wt(tf, meta(0x40, 0, 0));
+                    },
+                    |r, f, tr, tf| {
+                        r.rofence(tr);
+                        f.rofence(tf);
+                    },
+                    |r, f, tr, tf| {
+                        r.post_write_wt(tr, meta(0x80, 1, 1));
+                        f.post_write_wt(tf, meta(0x80, 1, 1));
+                    },
+                    |r, f, tr, tf| {
+                        r.rdfence(tr);
+                        f.rdfence(tf);
+                    },
+                ],
+            ),
+            (
+                "sm-dd",
+                vec![
+                    |r, f, tr, tf| {
+                        for s in 0..6u64 {
+                            r.post_write_nt(tr, meta(0x40 * (1 + s), 0, s));
+                            f.post_write_nt(tf, meta(0x40 * (1 + s), 0, s));
+                        }
+                    },
+                    |r, f, tr, tf| {
+                        r.read_fence(tr);
+                        f.read_fence(tf);
+                    },
+                ],
+            ),
+        ];
+        for (name, steps) in sequences {
+            let p = Platform::default();
+            let mut r = Rdma::new(&p, true);
+            let mut f = Fabric::single(&p, true);
+            let mut tr = ThreadClock::new(0);
+            let mut tf = ThreadClock::new(0);
+            for (i, step) in steps.into_iter().enumerate() {
+                step(&mut r, &mut f, &mut tr, &mut tf);
+                assert_eq!(
+                    tr.now, tf.now,
+                    "{name} step {i}: raw {} vs fabric {}",
+                    tr.now, tf.now
+                );
+            }
+            assert_eq!(
+                r.remote.ledger.events(),
+                f.backup(0).ledger.events(),
+                "{name}: ledgers diverged"
+            );
+            assert_eq!(r.remote.writes, f.backup(0).writes, "{name}");
+            assert_eq!(r.remote.persists, f.backup(0).persists, "{name}");
+            assert_eq!(r.remote.barriers, f.backup(0).barriers, "{name}");
+            assert_eq!(
+                r.remote.persist_horizon(),
+                f.backup(0).persist_horizon(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn fan_out_replicates_to_every_backup() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &repl(3, AckPolicy::All), true);
+        let mut t = ThreadClock::new(0);
+        for s in 0..4u64 {
+            f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+        }
+        f.rdfence(&mut t);
+        for i in 0..3 {
+            assert_eq!(f.backup(i).ledger.len(), 4, "backup {i}");
+        }
+        // The fence completion covers every backup's persists.
+        for (i, &fence) in f.last_fence().iter().enumerate() {
+            assert!(
+                fence >= f.backup(i).persist_horizon(),
+                "backup {i}: fence {fence} < horizon {}",
+                f.backup(i).persist_horizon()
+            );
+        }
+        assert!(t.now >= f.group_horizon(), "All must cover the group");
+    }
+
+    #[test]
+    fn quorum_completes_no_later_than_all() {
+        let run = |policy: AckPolicy| {
+            let p = Platform::default();
+            let mut f = Fabric::new(&p, &repl(3, policy), false);
+            let mut t = ThreadClock::new(0);
+            for e in 0..4u32 {
+                f.post_write_wt(&mut t, meta(0x40 * (1 + e as u64), e, e as u64));
+                f.rofence(&mut t);
+            }
+            f.rdfence(&mut t);
+            t.now
+        };
+        let all = run(AckPolicy::All);
+        let q2 = run(AckPolicy::Quorum(2));
+        let q1 = run(AckPolicy::Quorum(1));
+        assert!(q2 <= all, "quorum:2 {q2} vs all {all}");
+        assert!(q1 <= q2, "quorum:1 {q1} vs quorum:2 {q2}");
+    }
+
+    #[test]
+    fn quorum_fence_covers_required_backups() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &repl(3, AckPolicy::Quorum(2)), true);
+        let mut t = ThreadClock::new(0);
+        for s in 0..5u64 {
+            f.post_write_nt(&mut t, meta(0x40 * (1 + s), 0, s));
+        }
+        f.read_fence(&mut t);
+        // At the thread's post-fence instant, at least `required` backups
+        // must have completed their fence (and thus be fully durable for
+        // this thread's writes).
+        let covered = f
+            .last_fence()
+            .iter()
+            .filter(|&&c| c <= t.now)
+            .count();
+        assert!(covered >= 2, "only {covered} backups covered at fence");
+    }
+
+    #[test]
+    fn backup_stats_snapshot() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &repl(2, AckPolicy::All), true);
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(&mut t, meta(0x40, 0, 0));
+        f.rdfence(&mut t);
+        let stats = f.backup_stats();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.writes, 1);
+            assert_eq!(s.persists, 1);
+            assert!(s.last_fence > 0);
+            assert!(s.persist_horizon > 0);
+        }
+        assert_eq!(f.blocking_waits, 1);
+    }
+}

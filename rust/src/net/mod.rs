@@ -1,12 +1,16 @@
-//! RDMA network models: local queue pairs, the fabric, the remote (backup)
-//! NIC engine with its memory subsystem, and the verb layer tying them
-//! together with the paper's §6.2 latency semantics.
+//! RDMA network models: local queue pairs, the per-backup requester
+//! stack, the remote (backup) NIC engine with its memory subsystem, the
+//! verb layer tying them together with the paper's §6.2 latency
+//! semantics, and the N-way replica-group [`Fabric`] with pluggable
+//! ack policies.
 
+pub mod fabric;
 pub mod qp;
 pub mod rdma;
 pub mod remote;
 pub mod verbs;
 
+pub use fabric::{BackupStats, Fabric};
 pub use qp::LocalQp;
 pub use rdma::Rdma;
 pub use remote::RemoteEngine;

@@ -181,8 +181,11 @@ impl Rdma {
         self.posted_writes += 1;
     }
 
-    /// Blocking remote commit (SM-RC's overloaded fence).
-    pub fn rcommit(&mut self, t: &mut ThreadClock) {
+    /// Issue a remote commit without blocking the thread; returns the
+    /// completion instant. Used by [`crate::net::Fabric`] so the caller
+    /// can combine completions across a replica group before blocking
+    /// once per its ack policy.
+    pub fn rcommit_issue(&mut self, t: &mut ThreadClock) -> Ns {
         t.busy(self.post_cost);
         let thread = t.id as u32;
         let lane = self.next_lane(thread);
@@ -192,6 +195,12 @@ impl Rdma {
         let done_remote = self.remote.rcommit(lane, arrive, thread);
         let completion = done_remote + self.half;
         self.complete_lane(thread, lane, completion);
+        completion
+    }
+
+    /// Blocking remote commit (SM-RC's overloaded fence).
+    pub fn rcommit(&mut self, t: &mut ThreadClock) {
+        let completion = self.rcommit_issue(t);
         self.block(t, completion);
     }
 
@@ -208,8 +217,9 @@ impl Rdma {
         self.posted_fences += 1;
     }
 
-    /// Blocking remote durability fence (SM-OB's transaction end).
-    pub fn rdfence(&mut self, t: &mut ThreadClock) {
+    /// Issue a remote durability fence without blocking; returns the
+    /// completion instant (see [`Rdma::rcommit_issue`]).
+    pub fn rdfence_issue(&mut self, t: &mut ThreadClock) -> Ns {
         t.busy(self.post_cost);
         let thread = t.id as u32;
         let lane = self.next_lane(thread);
@@ -219,11 +229,18 @@ impl Rdma {
         let done_remote = self.remote.rdfence(lane, arrive, thread);
         let completion = done_remote + self.half;
         self.complete_lane(thread, lane, completion);
+        completion
+    }
+
+    /// Blocking remote durability fence (SM-OB's transaction end).
+    pub fn rdfence(&mut self, t: &mut ThreadClock) {
+        let completion = self.rdfence_issue(t);
         self.block(t, completion);
     }
 
-    /// Blocking sentinel read on the shared QP (SM-DD's durability point).
-    pub fn read_fence(&mut self, t: &mut ThreadClock) {
+    /// Issue a sentinel read on the shared QP without blocking; returns
+    /// the completion instant (see [`Rdma::rcommit_issue`]).
+    pub fn read_fence_issue(&mut self, t: &mut ThreadClock) -> Ns {
         t.busy(self.post_cost);
         let thread = t.id as u32;
         let (ready, iss) = self.post_dd(thread, t.now);
@@ -232,6 +249,12 @@ impl Rdma {
         let done_remote = self.remote.read(0, arrive, thread);
         let completion = done_remote + self.half;
         self.complete_dd(thread, completion);
+        completion
+    }
+
+    /// Blocking sentinel read on the shared QP (SM-DD's durability point).
+    pub fn read_fence(&mut self, t: &mut ThreadClock) {
+        let completion = self.read_fence_issue(t);
         self.block(t, completion);
     }
 

@@ -81,9 +81,11 @@ fn matches_snapshot(
     })
 }
 
-/// Check Guarantee-1 + Guarantee-2 for a crash at `crash_t`.
-/// Returns the recovered prefix length `k` on success.
-pub fn check_crash(
+/// Guarantee-1 (failure atomicity) alone: the recovered image must match
+/// *some* committed prefix; returns its length. Used per backup inside
+/// the group checks, where durability (Guarantee-2) is a property of the
+/// ack-policy-required *set* of backups, not of each backup alone.
+pub fn best_prefix(
     ledger: &DurabilityLog,
     history: &TxnHistory,
     log_bases: &[Addr],
@@ -96,12 +98,25 @@ pub fn check_crash(
     let k = (0..history.snapshots.len())
         .rev()
         .find(|&k| matches_snapshot(&img, &history.snapshots[k], data_addrs));
-    let Some(k) = k else {
-        bail!(
+    match k {
+        Some(k) => Ok(k),
+        None => bail!(
             "failure atomicity violated at crash t={crash_t}: recovered \
              image matches no committed prefix"
-        );
-    };
+        ),
+    }
+}
+
+/// Check Guarantee-1 + Guarantee-2 for a crash at `crash_t`.
+/// Returns the recovered prefix length `k` on success.
+pub fn check_crash(
+    ledger: &DurabilityLog,
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    crash_t: Ns,
+) -> Result<usize> {
+    let k = best_prefix(ledger, history, log_bases, data_addrs, crash_t)?;
     let durable = history.durable_by(crash_t);
     if k < durable {
         bail!(
@@ -141,6 +156,96 @@ pub fn check_all_crashes(
         checked += 2;
     }
     Ok(checked)
+}
+
+/// Cross-replica consistency for one crash instant: Guarantee-1 must
+/// hold on **every** backup individually (each receives the same ordered
+/// verb stream, so each image is some committed prefix), and the
+/// ack-policy form of Guarantee-2 must hold on the group: the policy
+/// required `required` durable backups at every completed dfence, so
+/// after losing any `required - 1` backups some survivor still holds
+/// every durably-acked transaction. Returns that worst-case surviving
+/// prefix length.
+pub fn check_group_crash(
+    ledgers: &[&DurabilityLog],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    required: usize,
+    crash_t: Ns,
+) -> Result<usize> {
+    let n = ledgers.len();
+    if required == 0 || required > n {
+        bail!("required acks {required} invalid for a {n}-backup group");
+    }
+    let mut prefixes = Vec::with_capacity(n);
+    for (b, ledger) in ledgers.iter().enumerate() {
+        let k = best_prefix(ledger, history, log_bases, data_addrs, crash_t)
+            .map_err(|e| anyhow::anyhow!("backup {b}: {e}"))?;
+        prefixes.push(k);
+    }
+    // Adversary removes the `required - 1` most-advanced backups; the
+    // best surviving prefix must still cover everything durably acked.
+    prefixes.sort_unstable_by(|a, b| b.cmp(a)); // descending
+    let survivor_best = prefixes[required - 1];
+    let durable = history.durable_by(crash_t);
+    if survivor_best < durable {
+        bail!(
+            "group durability violated at crash t={crash_t}: {durable} txns \
+             durably acked, but after losing {} backups the best survivor \
+             holds only prefix {survivor_best} (per-backup prefixes, desc: \
+             {prefixes:?})",
+            required - 1
+        );
+    }
+    Ok(survivor_best)
+}
+
+/// Sweep crash instants across the union of all backup ledgers (every
+/// event time, midpoints, and the boundaries) and run
+/// [`check_group_crash`] at each. Returns the number of crash points
+/// verified.
+pub fn check_group_crashes(
+    ledgers: &[&DurabilityLog],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    required: usize,
+) -> Result<u64> {
+    let mut times: Vec<Ns> = ledgers
+        .iter()
+        .flat_map(|l| l.events().iter().map(|e| e.at))
+        .collect();
+    times.sort_unstable();
+    times.dedup();
+    let mut checked = 0u64;
+    let sample = |t: Ns| -> Result<()> {
+        check_group_crash(ledgers, history, log_bases, data_addrs, required, t)
+            .map(|_| ())
+    };
+    sample(0)?;
+    checked += 1;
+    for w in times.windows(2) {
+        for t in [w[0], w[0] + (w[1] - w[0]) / 2] {
+            sample(t)?;
+            checked += 1;
+        }
+    }
+    if let Some(&last) = times.last() {
+        sample(last)?;
+        sample(last + 1)?;
+        checked += 2;
+    }
+    Ok(checked)
+}
+
+/// Epoch-ordering invariant across a whole replica group: each backup's
+/// ledger must satisfy [`check_epoch_ordering`] independently.
+pub fn check_group_epoch_ordering(ledgers: &[&DurabilityLog]) -> Result<()> {
+    for (b, ledger) in ledgers.iter().enumerate() {
+        check_epoch_ordering(ledger).map_err(|e| anyhow::anyhow!("backup {b}: {e}"))?;
+    }
+    Ok(())
 }
 
 /// Epoch-ordering invariant over the ledger: for any two events of the
@@ -194,19 +299,25 @@ mod tests {
     /// Run `n` txns alternating writes to D0/D1; return (mirror, history).
     fn run_workload(kind: StrategyKind, n: u64) -> (Mirror, TxnHistory) {
         let mut m = Mirror::new(Platform::default(), kind, true);
+        let hist = drive_txns(&mut m, n);
+        (m, hist)
+    }
+
+    /// Drive `n` two-write txns on an existing mirror, recording history.
+    fn drive_txns(m: &mut Mirror, n: u64) -> TxnHistory {
         let mut t = ThreadCtx::new(0);
         let mut hist = TxnHistory::new(HashMap::new());
         for i in 0..n {
-            let mut tx = Txn::begin(&mut m, &mut t, LOG, None);
-            tx.write(&mut m, &mut t, D0, 100 + i);
-            tx.write(&mut m, &mut t, D1, 200 + i);
-            tx.commit(&mut m, &mut t);
+            let mut tx = Txn::begin(m, &mut t, LOG, None);
+            tx.write(m, &mut t, D0, 100 + i);
+            tx.write(m, &mut t, D1, 200 + i);
+            tx.commit(m, &mut t);
             let mut snap = HashMap::new();
             snap.insert(D0, 100 + i);
             snap.insert(D1, 200 + i);
             hist.commit(snap, t.last_dfence);
         }
-        (m, hist)
+        hist
     }
 
     #[test]
@@ -214,7 +325,7 @@ mod tests {
         for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
             let (m, hist) = run_workload(kind, 5);
             let checked = check_all_crashes(
-                &m.rdma.remote.ledger,
+                &m.backup(0).ledger,
                 &hist,
                 &[LOG],
                 &[D0, D1],
@@ -228,7 +339,7 @@ mod tests {
     fn epoch_ordering_holds_for_every_strategy() {
         for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
             let (m, _) = run_workload(kind, 5);
-            check_epoch_ordering(&m.rdma.remote.ledger)
+            check_epoch_ordering(&m.backup(0).ledger)
                 .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
         }
     }
@@ -264,8 +375,65 @@ mod tests {
         // durable by then: Guarantee-2 must fail for a crash at t=50.
         let (m, mut hist) = run_workload(StrategyKind::SmOb, 1);
         hist.dfences[0] = 50;
-        let err = check_crash(&m.rdma.remote.ledger, &hist, &[LOG], &[D0, D1], 50);
+        let err = check_crash(&m.backup(0).ledger, &hist, &[LOG], &[D0, D1], 50);
         assert!(err.is_err(), "expected durability violation");
+    }
+
+    #[test]
+    fn group_crash_checks_pass_for_all_and_quorum() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            for policy in [AckPolicy::All, AckPolicy::Quorum(2)] {
+                let repl = ReplicationConfig::new(3, policy);
+                let mut m =
+                    Mirror::with_replication(Platform::default(), kind, repl, true)
+                        .unwrap();
+                let hist = drive_txns(&mut m, 4);
+                let ledgers = m.fabric.ledgers();
+                check_group_epoch_ordering(&ledgers)
+                    .unwrap_or_else(|e| panic!("{kind:?}/{policy}: {e}"));
+                let checked = check_group_crashes(
+                    &ledgers,
+                    &hist,
+                    &[LOG],
+                    &[D0, D1],
+                    repl.required(),
+                )
+                .unwrap_or_else(|e| panic!("{kind:?}/{policy}: {e}"));
+                assert!(checked > 10, "{kind:?}/{policy}: only {checked} points");
+            }
+        }
+    }
+
+    #[test]
+    fn group_check_detects_fabricated_lag() {
+        // A 2-backup group claiming required=2 (All): if one backup's
+        // ledger is empty while txns durably acked, the check must fail.
+        let (m, hist) = run_workload(StrategyKind::SmOb, 2);
+        let full = &m.backup(0).ledger;
+        let empty = DurabilityLog::new(true);
+        let crash = full.horizon();
+        let err = check_group_crash(
+            &[full, &empty],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            2,
+            crash,
+        );
+        assert!(err.is_err(), "lagging required backup must fail the check");
+        // The same pair under quorum required=1 passes: the full backup
+        // alone satisfies the policy.
+        check_group_crash(&[full, &empty], &hist, &[LOG], &[D0, D1], 1, crash)
+            .expect("quorum:1 tolerates one empty backup");
+    }
+
+    #[test]
+    fn group_check_rejects_bad_required() {
+        let (m, hist) = run_workload(StrategyKind::SmOb, 1);
+        let l = &m.backup(0).ledger;
+        assert!(check_group_crash(&[l], &hist, &[LOG], &[D0, D1], 0, 0).is_err());
+        assert!(check_group_crash(&[l], &hist, &[LOG], &[D0, D1], 2, 0).is_err());
     }
 
     #[test]
@@ -273,7 +441,7 @@ mod tests {
         // Crash right before the commit of txn 2 (data written, log still
         // active): recovery must restore txn-1 values.
         let (m, hist) = run_workload(StrategyKind::SmDd, 2);
-        let ledger = &m.rdma.remote.ledger;
+        let ledger = &m.backup(0).ledger;
         // Find a crash point where txn 1 (0-based) data is durable but its
         // commit (log invalidation) is not: just before the last event.
         let evs = ledger.events();

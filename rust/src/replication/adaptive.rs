@@ -12,7 +12,7 @@
 
 use super::{Strategy, TxnShape};
 use crate::config::StrategyKind;
-use crate::net::{Rdma, WriteMeta};
+use crate::net::{Fabric, WriteMeta};
 use crate::sim::ThreadClock;
 
 /// Latency predictor: `(epochs, writes) -> (lat_ob_ns, lat_dd_ns)`.
@@ -52,7 +52,7 @@ impl Strategy for SmAd {
 
     fn on_txn_begin(
         &mut self,
-        _rdma: &mut Rdma,
+        _fabric: &mut Fabric,
         _t: &mut ThreadClock,
         hint: Option<TxnShape>,
     ) {
@@ -66,23 +66,23 @@ impl Strategy for SmAd {
         }
     }
 
-    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
+    fn on_clwb(&mut self, f: &mut Fabric, t: &mut ThreadClock, m: WriteMeta) {
         match self.mode {
-            Mode::Ob => r.post_write_wt(t, m),
-            Mode::Dd => r.post_write_nt(t, m),
+            Mode::Ob => f.post_write_wt(t, m),
+            Mode::Dd => f.post_write_nt(t, m),
         }
     }
 
-    fn on_ofence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+    fn on_ofence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
         if self.mode == Mode::Ob {
-            r.rofence(t);
+            f.rofence(t);
         }
     }
 
-    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+    fn on_dfence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
         match self.mode {
-            Mode::Ob => r.rdfence(t),
-            Mode::Dd => r.read_fence(t),
+            Mode::Ob => f.rdfence(t),
+            Mode::Dd => f.read_fence(t),
         }
     }
 }
@@ -113,7 +113,7 @@ mod tests {
                 (2.0, 1.0)
             }
         }));
-        let mut r = Rdma::new(&Platform::default(), true);
+        let mut r = Fabric::single(&Platform::default(), true);
         let mut t = ThreadClock::new(0);
 
         s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 256.0, writes: 1.0 }));
@@ -126,7 +126,7 @@ mod tests {
     #[test]
     fn no_hint_keeps_previous_mode() {
         let mut s = SmAd::new(Box::new(|_, _| (1.0, 2.0)));
-        let mut r = Rdma::new(&Platform::default(), true);
+        let mut r = Fabric::single(&Platform::default(), true);
         let mut t = ThreadClock::new(0);
         s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 1.0, writes: 1.0 }));
         assert_eq!(s.mode, Mode::Ob);
@@ -137,7 +137,7 @@ mod tests {
     #[test]
     fn mixed_modes_still_replicate_everything() {
         let mut s = SmAd::new(Box::new(|e, _| if e > 2.0 { (1.0, 2.0) } else { (2.0, 1.0) }));
-        let mut r = Rdma::new(&Platform::default(), true);
+        let mut r = Fabric::single(&Platform::default(), true);
         let mut t = ThreadClock::new(0);
         // Txn 1 -> DD mode; txn 2 -> OB mode.
         for (txn, epochs) in [(0u64, 1.0f32), (1, 8.0)] {
@@ -152,6 +152,6 @@ mod tests {
             }
             s.on_dfence(&mut r, &mut t);
         }
-        assert_eq!(r.remote.ledger.len(), 4);
+        assert_eq!(r.backup(0).ledger.len(), 4);
     }
 }

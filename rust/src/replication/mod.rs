@@ -1,8 +1,10 @@
-//! Replication strategies (paper §5, Table 1).
+//! Replication strategies (paper §5, Table 1), generalized to N-way
+//! replica groups.
 //!
 //! A [`Strategy`] maps the primary's persistency-model events — `clwb`
 //! (dirty line identified), `sfence` (ordering point / epoch boundary),
-//! `dfence` (durability point / transaction end) — onto RDMA verbs:
+//! `dfence` (durability point / transaction end) — onto RDMA verbs
+//! against the replica-group [`Fabric`]:
 //!
 //! | event   | NO-SM | SM-RC     | SM-OB        | SM-DD          |
 //! |---------|-------|-----------|--------------|----------------|
@@ -11,7 +13,10 @@
 //! | dfence  | —     | rcommit() | rdfence()    | read(sentinel) |
 //!
 //! plus the model-driven adaptive strategy (ours) that picks SM-OB or
-//! SM-DD per transaction using the AOT latency model.
+//! SM-DD per transaction using the AOT latency model. The fabric fans
+//! every verb out to all backups; blocking fences complete per the
+//! group's ack policy (all / quorum), so a strategy is written once and
+//! works for any group size.
 
 pub mod adaptive;
 pub mod strategies;
@@ -20,8 +25,9 @@ pub use adaptive::{Predictor, SmAd};
 pub use strategies::{NoSm, SmDd, SmOb, SmRc};
 
 use crate::config::StrategyKind;
-use crate::net::{Rdma, WriteMeta};
+use crate::net::{Fabric, WriteMeta};
 use crate::sim::ThreadClock;
+use anyhow::{bail, Result};
 
 /// Hint describing the shape of an upcoming transaction (adaptive use).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,18 +43,18 @@ pub trait Strategy {
     fn kind(&self) -> StrategyKind;
 
     /// A dirty persistent line was identified (`clwb`): replicate it.
-    fn on_clwb(&mut self, rdma: &mut Rdma, t: &mut ThreadClock, meta: WriteMeta);
+    fn on_clwb(&mut self, fabric: &mut Fabric, t: &mut ThreadClock, meta: WriteMeta);
 
     /// Ordering point (`sfence` between epochs).
-    fn on_ofence(&mut self, rdma: &mut Rdma, t: &mut ThreadClock);
+    fn on_ofence(&mut self, fabric: &mut Fabric, t: &mut ThreadClock);
 
     /// Durability point (transaction end).
-    fn on_dfence(&mut self, rdma: &mut Rdma, t: &mut ThreadClock);
+    fn on_dfence(&mut self, fabric: &mut Fabric, t: &mut ThreadClock);
 
     /// Transaction start (shape hint for adaptive strategies).
     fn on_txn_begin(
         &mut self,
-        _rdma: &mut Rdma,
+        _fabric: &mut Fabric,
         _t: &mut ThreadClock,
         _hint: Option<TxnShape>,
     ) {
@@ -56,20 +62,22 @@ pub trait Strategy {
 }
 
 /// Construct a strategy by kind. `SmAd` takes the prediction function
-/// (wired to the PJRT runtime by the caller, or the closed-form fallback).
+/// (wired to the PJRT runtime by the caller, or the closed-form
+/// fallback); constructing `SmAd` without one is a configuration error.
 pub fn make_strategy(
     kind: StrategyKind,
     predictor: Option<Predictor>,
-) -> Box<dyn Strategy> {
-    match kind {
+) -> Result<Box<dyn Strategy>> {
+    Ok(match kind {
         StrategyKind::NoSm => Box::new(NoSm),
         StrategyKind::SmRc => Box::new(SmRc),
         StrategyKind::SmOb => Box::new(SmOb),
         StrategyKind::SmDd => Box::new(SmDd),
-        StrategyKind::SmAd => Box::new(SmAd::new(
-            predictor.expect("SmAd requires a predictor; see runtime::model"),
-        )),
-    }
+        StrategyKind::SmAd => match predictor {
+            Some(p) => Box::new(SmAd::new(p)),
+            None => bail!("SmAd requires a predictor; see runtime::model"),
+        },
+    })
 }
 
 #[cfg(test)]
@@ -79,14 +87,24 @@ mod tests {
     #[test]
     fn factory_builds_all_fixed_strategies() {
         for kind in StrategyKind::ALL {
-            let s = make_strategy(kind, None);
+            let s = make_strategy(kind, None).unwrap();
             assert_eq!(s.kind(), kind);
         }
     }
 
     #[test]
-    #[should_panic(expected = "SmAd requires a predictor")]
     fn adaptive_requires_predictor() {
-        let _ = make_strategy(StrategyKind::SmAd, None);
+        let err = make_strategy(StrategyKind::SmAd, None).unwrap_err();
+        assert!(
+            err.to_string().contains("SmAd requires a predictor"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn adaptive_builds_with_predictor() {
+        let s = make_strategy(StrategyKind::SmAd, Some(Box::new(|_, _| (1.0, 2.0))))
+            .unwrap();
+        assert_eq!(s.kind(), StrategyKind::SmAd);
     }
 }

@@ -1,8 +1,10 @@
-//! The four fixed replication strategies of the paper (Table 1).
+//! The four fixed replication strategies of the paper (Table 1), driven
+//! against a replica-group [`Fabric`] (one backup reproduces the paper;
+//! N backups fan out with the group's ack policy at durability points).
 
 use super::Strategy;
 use crate::config::StrategyKind;
-use crate::net::{Rdma, WriteMeta};
+use crate::net::{Fabric, WriteMeta};
 use crate::sim::ThreadClock;
 
 /// NO-SM: local persistence only (hypothetical performance upper bound).
@@ -13,9 +15,9 @@ impl Strategy for NoSm {
     fn kind(&self) -> StrategyKind {
         StrategyKind::NoSm
     }
-    fn on_clwb(&mut self, _r: &mut Rdma, _t: &mut ThreadClock, _m: WriteMeta) {}
-    fn on_ofence(&mut self, _r: &mut Rdma, _t: &mut ThreadClock) {}
-    fn on_dfence(&mut self, _r: &mut Rdma, _t: &mut ThreadClock) {}
+    fn on_clwb(&mut self, _f: &mut Fabric, _t: &mut ThreadClock, _m: WriteMeta) {}
+    fn on_ofence(&mut self, _f: &mut Fabric, _t: &mut ThreadClock) {}
+    fn on_dfence(&mut self, _f: &mut Fabric, _t: &mut ThreadClock) {}
 }
 
 /// SM-RC: one RDMA write per clwb, one blocking `rcommit` per fence —
@@ -27,15 +29,15 @@ impl Strategy for SmRc {
     fn kind(&self) -> StrategyKind {
         StrategyKind::SmRc
     }
-    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
-        r.post_write(t, m);
+    fn on_clwb(&mut self, f: &mut Fabric, t: &mut ThreadClock, m: WriteMeta) {
+        f.post_write(t, m);
     }
-    fn on_ofence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
+    fn on_ofence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
         // rcommit provides (overloaded) ordering: blocking at every epoch.
-        r.rcommit(t);
+        f.rcommit(t);
     }
-    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
-        r.rcommit(t);
+    fn on_dfence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
+        f.rcommit(t);
     }
 }
 
@@ -48,20 +50,20 @@ impl Strategy for SmOb {
     fn kind(&self) -> StrategyKind {
         StrategyKind::SmOb
     }
-    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
-        r.post_write_wt(t, m);
+    fn on_clwb(&mut self, f: &mut Fabric, t: &mut ThreadClock, m: WriteMeta) {
+        f.post_write_wt(t, m);
     }
-    fn on_ofence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
-        r.rofence(t); // posted: the thread does not block
+    fn on_ofence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
+        f.rofence(t); // posted: the thread does not block
     }
-    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
-        r.rdfence(t);
+    fn on_dfence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
+        f.rdfence(t);
     }
 }
 
-/// SM-DD (ours): DDIO disabled on the backup; non-temporal writes through
-/// a single QP give implicit program-order persistence; durability is one
-/// sentinel RDMA read.
+/// SM-DD (ours): DDIO disabled on the backups; non-temporal writes through
+/// a single QP per backup give implicit program-order persistence;
+/// durability is one sentinel RDMA read per backup, acked per policy.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SmDd;
 
@@ -69,21 +71,21 @@ impl Strategy for SmDd {
     fn kind(&self) -> StrategyKind {
         StrategyKind::SmDd
     }
-    fn on_clwb(&mut self, r: &mut Rdma, t: &mut ThreadClock, m: WriteMeta) {
-        r.post_write_nt(t, m);
+    fn on_clwb(&mut self, f: &mut Fabric, t: &mut ThreadClock, m: WriteMeta) {
+        f.post_write_nt(t, m);
     }
-    fn on_ofence(&mut self, _r: &mut Rdma, _t: &mut ThreadClock) {
+    fn on_ofence(&mut self, _f: &mut Fabric, _t: &mut ThreadClock) {
         // Implicit ordering: single QP + ordered non-posted PCIe writes.
     }
-    fn on_dfence(&mut self, r: &mut Rdma, t: &mut ThreadClock) {
-        r.read_fence(t);
+    fn on_dfence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
+        f.read_fence(t);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Platform;
+    use crate::config::{AckPolicy, Platform, ReplicationConfig};
 
     fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
         WriteMeta {
@@ -97,16 +99,16 @@ mod tests {
     }
 
     /// Drive one 2-epoch, 1-write-per-epoch transaction through a strategy;
-    /// return (thread time, persists on backup).
+    /// return (thread time, persists on backup 0).
     fn run_txn(s: &mut dyn Strategy) -> (u64, usize) {
-        let mut r = Rdma::new(&Platform::default(), true);
+        let mut f = Fabric::single(&Platform::default(), true);
         let mut t = ThreadClock::new(0);
-        s.on_clwb(&mut r, &mut t, meta(0x40, 0, 0));
-        s.on_ofence(&mut r, &mut t);
-        s.on_clwb(&mut r, &mut t, meta(0x80, 1, 1));
-        s.on_ofence(&mut r, &mut t);
-        s.on_dfence(&mut r, &mut t);
-        (t.now, r.remote.ledger.len())
+        s.on_clwb(&mut f, &mut t, meta(0x40, 0, 0));
+        s.on_ofence(&mut f, &mut t);
+        s.on_clwb(&mut f, &mut t, meta(0x80, 1, 1));
+        s.on_ofence(&mut f, &mut t);
+        s.on_dfence(&mut f, &mut t);
+        (t.now, f.backup(0).ledger.len())
     }
 
     #[test]
@@ -153,20 +155,20 @@ mod tests {
     fn epoch_order_preserved_by_every_strategy() {
         for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
             let kind = s.kind();
-            let mut r = Rdma::new(&Platform::default(), true);
+            let mut f = Fabric::single(&Platform::default(), true);
             let mut t = ThreadClock::new(0);
             for epoch in 0..8u32 {
                 for wi in 0..2u64 {
                     s.on_clwb(
-                        &mut r,
+                        &mut f,
                         &mut t,
                         meta(0x40 * (1 + epoch as u64 * 2 + wi), epoch, epoch as u64 * 2 + wi),
                     );
                 }
-                s.on_ofence(&mut r, &mut t);
+                s.on_ofence(&mut f, &mut t);
             }
-            s.on_dfence(&mut r, &mut t);
-            let evs = r.remote.ledger.events();
+            s.on_dfence(&mut f, &mut t);
+            let evs = f.backup(0).ledger.events();
             assert_eq!(evs.len(), 16, "{kind}");
             for a in evs {
                 for b in evs {
@@ -180,6 +182,34 @@ mod tests {
                             b.at
                         );
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strategies_replicate_to_full_group() {
+        // Every strategy, run against a 3-backup group, must land every
+        // write on every backup and preserve per-backup epoch order.
+        for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
+            let kind = s.kind();
+            let p = Platform::default();
+            let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+            let mut f = Fabric::new(&p, &repl, true);
+            let mut t = ThreadClock::new(0);
+            for epoch in 0..3u32 {
+                s.on_clwb(&mut f, &mut t, meta(0x40 * (1 + epoch as u64), epoch, epoch as u64));
+                s.on_ofence(&mut f, &mut t);
+            }
+            s.on_dfence(&mut f, &mut t);
+            for b in 0..3 {
+                let evs = f.backup(b).ledger.events();
+                assert_eq!(evs.len(), 3, "{kind} backup {b}");
+                for w in evs.windows(2) {
+                    assert!(
+                        w[0].at <= w[1].at || w[0].epoch >= w[1].epoch,
+                        "{kind} backup {b}: epoch order violated"
+                    );
                 }
             }
         }

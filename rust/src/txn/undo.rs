@@ -207,7 +207,7 @@ mod tests {
             tx.write(&mut m, &mut t, DATA, 7);
             tx.commit(&mut m, &mut t);
             // clwbs: entry addr, entry val, status, data, status-invalid = 5
-            assert_eq!(m.rdma.remote.ledger.len(), 5, "{kind:?}");
+            assert_eq!(m.backup(0).ledger.len(), 5, "{kind:?}");
         }
     }
 }

@@ -6,12 +6,13 @@
 //! writes within a transaction are randomly chosen"). Ranges mirror the
 //! paper: writes/epoch in [1..8], epochs/txn in [1..256].
 
-use crate::config::{Platform, StrategyKind};
+use crate::config::{Platform, ReplicationConfig, StrategyKind};
 use crate::coordinator::sched::{run_threads, RunOutcome, TxnSource};
 use crate::coordinator::Mirror;
 use crate::replication::{Predictor, TxnShape};
 use crate::util::Pcg64;
 use crate::{Addr, LINE};
+use anyhow::Result;
 
 /// Transact configuration.
 #[derive(Clone, Copy, Debug)]
@@ -65,13 +66,15 @@ fn transact_source(cfg: TransactConfig, thread: usize) -> Box<dyn TxnSource> {
     })
 }
 
-/// Run Transact under `kind` and return the outcome.
+/// Run Transact under `kind` and return the outcome (single backup, the
+/// paper's topology).
 pub fn run_transact(plat: &Platform, kind: StrategyKind, cfg: TransactConfig) -> RunOutcome {
     let mut mirror = Mirror::new(plat.clone(), kind, false);
     run_transact_on(&mut mirror, cfg)
 }
 
-/// Run Transact with the adaptive strategy wired to `predictor`.
+/// Run Transact with the adaptive strategy wired to `predictor`
+/// (single backup).
 pub fn run_transact_adaptive(
     plat: &Platform,
     predictor: Predictor,
@@ -82,7 +85,22 @@ pub fn run_transact_adaptive(
     run_transact_on(&mut mirror, cfg)
 }
 
-fn run_transact_on(mirror: &mut Mirror, cfg: TransactConfig) -> RunOutcome {
+/// Run Transact against an N-way replica group. Pass a predictor when
+/// `kind` is `SmAd`; fails on an invalid replication config.
+pub fn run_transact_with(
+    plat: &Platform,
+    kind: StrategyKind,
+    predictor: Option<Predictor>,
+    repl: ReplicationConfig,
+    cfg: TransactConfig,
+) -> Result<RunOutcome> {
+    let mut mirror = Mirror::try_build(plat.clone(), kind, predictor, repl, false)?;
+    Ok(run_transact_on(&mut mirror, cfg))
+}
+
+/// Run Transact on a caller-built mirror (exposes the fabric for
+/// replica-group metrics afterwards).
+pub fn run_transact_on(mirror: &mut Mirror, cfg: TransactConfig) -> RunOutcome {
     let mut sources: Vec<Box<dyn TxnSource>> = (0..cfg.threads)
         .map(|i| transact_source(cfg, i))
         .collect();
@@ -167,6 +185,57 @@ mod tests {
             ob_big < dd_big,
             "OB should win big txns: ob={ob_big} dd={dd_big}"
         );
+    }
+
+    #[test]
+    fn replica_groups_scale_cost_monotonically() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        let p = Platform::default();
+        let cfg = small(4, 1);
+        // backups=1 + all through the group path must equal the classic
+        // single-backup entry point (the regression anchor end-to-end).
+        let single = run_transact(&p, StrategyKind::SmOb, cfg).makespan;
+        let group1 = run_transact_with(
+            &p,
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::default(),
+            cfg,
+        )
+        .unwrap()
+        .makespan;
+        assert_eq!(single, group1, "fabric(1, all) must reproduce single-backup");
+        // More backups never make an All-policy run faster.
+        let group3 = run_transact_with(
+            &p,
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(3, AckPolicy::All),
+            cfg,
+        )
+        .unwrap()
+        .makespan;
+        assert!(group3 >= group1, "3 backups {group3} < 1 backup {group1}");
+        // Quorum relaxes the fence relative to All on the same group.
+        let quorum3 = run_transact_with(
+            &p,
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+            cfg,
+        )
+        .unwrap()
+        .makespan;
+        assert!(quorum3 <= group3, "quorum {quorum3} > all {group3}");
+        // Invalid shapes surface as errors, not panics.
+        assert!(run_transact_with(
+            &p,
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::Quorum(3)),
+            cfg,
+        )
+        .is_err());
     }
 
     #[test]

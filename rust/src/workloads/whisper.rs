@@ -458,13 +458,29 @@ fn make_source(cfg: WhisperConfig, thread: usize) -> Box<dyn TxnSource> {
     }
 }
 
-/// Run a WHISPER app under `kind`.
+/// Run a WHISPER app under `kind` (single backup, the paper's topology).
 pub fn run_whisper(plat: &Platform, kind: StrategyKind, cfg: WhisperConfig) -> RunOutcome {
     let mut mirror = Mirror::new(plat.clone(), kind, false);
+    run_whisper_on(&mut mirror, cfg)
+}
+
+/// Run a WHISPER app against an N-way replica group.
+pub fn run_whisper_with(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: crate::config::ReplicationConfig,
+    cfg: WhisperConfig,
+) -> anyhow::Result<RunOutcome> {
+    let mut mirror = Mirror::with_replication(plat.clone(), kind, repl, false)?;
+    Ok(run_whisper_on(&mut mirror, cfg))
+}
+
+/// Run a WHISPER app on a caller-built mirror.
+pub fn run_whisper_on(mirror: &mut Mirror, cfg: WhisperConfig) -> RunOutcome {
     let mut sources: Vec<Box<dyn TxnSource>> = (0..cfg.threads)
         .map(|i| make_source(cfg, i))
         .collect();
-    run_threads(&mut mirror, &mut sources)
+    run_threads(mirror, &mut sources)
 }
 
 #[cfg(test)]

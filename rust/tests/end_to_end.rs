@@ -144,14 +144,14 @@ fn crash_recovery_on_real_data_structure() {
             hist.commit(snap, t.last_dfence);
         }
         let checked = recovery::check_all_crashes(
-            &m.rdma.remote.ledger,
+            &m.backup(0).ledger,
             &hist,
             &[log],
             &data_addrs,
         )
         .unwrap_or_else(|e| panic!("{kind}: {e}"));
         assert!(checked > 50, "{kind}: only {checked} crash points");
-        recovery::check_epoch_ordering(&m.rdma.remote.ledger)
+        recovery::check_epoch_ordering(&m.backup(0).ledger)
             .unwrap_or_else(|e| panic!("{kind}: {e}"));
     }
 }
@@ -181,9 +181,9 @@ fn multithreaded_epoch_ordering_invariant() {
             })
             .collect();
         pmsm::coordinator::sched::run_threads(&mut m, &mut sources);
-        recovery::check_epoch_ordering(&m.rdma.remote.ledger)
+        recovery::check_epoch_ordering(&m.backup(0).ledger)
             .unwrap_or_else(|e| panic!("{kind}: {e}"));
-        assert_eq!(m.rdma.remote.ledger.len() > 0, true);
+        assert_eq!(m.backup(0).ledger.len() > 0, true);
     }
 }
 
@@ -203,7 +203,7 @@ fn dfence_horizon_invariant_all_strategies() {
                 m.sfence(&mut t);
             }
             m.txn_commit(&mut t);
-            let horizon = m.rdma.remote.persist_horizon();
+            let horizon = m.backup(0).persist_horizon();
             assert!(
                 t.last_dfence >= horizon,
                 "{kind} txn {i}: dfence {} < horizon {}",

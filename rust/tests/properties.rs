@@ -37,7 +37,7 @@ fn prop_epoch_ordering_random_transactions() {
             }
             m.txn_commit(&mut t);
         }
-        recovery::check_epoch_ordering(&m.rdma.remote.ledger).unwrap();
+        recovery::check_epoch_ordering(&m.backup(0).ledger).unwrap();
     });
 }
 
@@ -61,7 +61,7 @@ fn prop_durability_fence_covers_everything() {
         m.txn_commit(&mut t);
         // Every replicated write persisted no later than the dfence.
         let dfence = t.last_dfence;
-        for ev in m.rdma.remote.ledger.events() {
+        for ev in m.backup(0).ledger.events() {
             assert!(
                 ev.at <= dfence,
                 "write at {} after dfence {}",
@@ -70,7 +70,7 @@ fn prop_durability_fence_covers_everything() {
             );
         }
         assert_eq!(
-            m.rdma.remote.ledger.len() as u64,
+            m.backup(0).ledger.len() as u64,
             (epochs * writes) as u64
         );
     });
@@ -99,7 +99,7 @@ fn prop_crash_consistency_random_workloads() {
             tx.commit(&mut m, &mut t);
             hist.commit(img.clone(), t.last_dfence);
         }
-        recovery::check_all_crashes(&m.rdma.remote.ledger, &hist, &[log], &addrs)
+        recovery::check_all_crashes(&m.backup(0).ledger, &hist, &[log], &addrs)
             .unwrap();
     });
 }

@@ -9,7 +9,7 @@ use pmsm::txn::Txn;
 use pmsm::util::Pcg64;
 
 fn backup_equals_primary(m: &Mirror) -> bool {
-    let ledger = &m.rdma.remote.ledger;
+    let ledger = &m.backup(0).ledger;
     let img = ledger.image_at(ledger.horizon());
     m.image().iter().all(|(a, v)| img.get(a) == Some(v))
 }
@@ -79,7 +79,7 @@ fn kvstore_batches_replicate_atomically() {
     assert!(backup_equals_primary(&m));
     // Crash mid-stream: the recovered generation counter and data must
     // come from the same consistent batch prefix.
-    let ledger = &m.rdma.remote.ledger;
+    let ledger = &m.backup(0).ledger;
     let mid = ledger.horizon() / 2;
     let img = pmsm::recovery::recover_image(ledger, mid, &[log]);
     let gen = img
@@ -148,6 +148,6 @@ fn heavy_churn_keeps_ledger_ordered() {
             map.put(&mut m, &mut t, &mut heap, rng.next_below(64), i, log, None);
         }
     }
-    pmsm::recovery::check_epoch_ordering(&m.rdma.remote.ledger).unwrap();
-    assert!(m.rdma.remote.ledger.len() > 200);
+    pmsm::recovery::check_epoch_ordering(&m.backup(0).ledger).unwrap();
+    assert!(m.backup(0).ledger.len() > 200);
 }

@@ -1,0 +1,180 @@
+//! Minimal in-repo shim of the `anyhow` API surface used by pmsm.
+//!
+//! The offline registry carries no crates, so the error-handling
+//! vocabulary the codebase relies on — [`Error`], [`Result`],
+//! [`Context`], and the `anyhow!` / `bail!` / `ensure!` macros — is
+//! provided here. Semantics match upstream for the used subset:
+//!
+//! * `Error` is an opaque, context-chained error value (deliberately
+//!   *not* `std::error::Error`, exactly like upstream, which is what
+//!   makes the blanket `From<E: std::error::Error>` conversion legal);
+//! * `context`/`with_context` wrap both `Result` (any displayable error,
+//!   including `anyhow::Error` itself) and `Option`;
+//! * `{:#}` formatting renders the full cause chain `ctx: cause`.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional chain of wrapped causes.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error {
+            msg: c.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The outermost message (no chain).
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = &self.cause;
+        while let Some(e) = cur {
+            write!(f, ": {}", e.msg)?;
+            cur = &e.cause;
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` prints the outermost message; `{:#}` the full chain.
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to fallible values (`Result` with displayable errors —
+/// including `anyhow::Error` — and `Option`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from format args.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 7)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 7");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_renders() {
+        let e: Result<u32> = "x".parse::<u32>().with_context(|| "parsing x");
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e}"), "parsing x");
+        assert!(format!("{e:#}").starts_with("parsing x: "));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x > 1, "too small: {x}");
+            Ok(())
+        }
+        assert!(check(2).is_ok());
+        assert_eq!(check(0).unwrap_err().to_string(), "too small: 0");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here/xyz")?;
+            Ok(s)
+        }
+        assert!(io().is_err());
+    }
+}

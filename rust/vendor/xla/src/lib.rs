@@ -1,0 +1,131 @@
+//! Stub of the `xla` PJRT binding surface used by `pmsm::runtime`.
+//!
+//! The build environment has no PJRT plugin or `xla_extension` shared
+//! library, so this crate provides the same types and signatures with
+//! loaders that return a descriptive [`Error`]. Callers already handle
+//! that path: `LatencyModel::load` failures route the adaptive strategy
+//! to the closed-form fallback predictor, and the `pjrt_model`
+//! integration tests skip when artifacts are absent. Swapping this stub
+//! for the real binding requires no changes in `pmsm` itself.
+
+use std::fmt;
+
+/// Error raised by every stubbed entry point.
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT runtime unavailable (stub xla crate; install the \
+             xla_extension binding to enable AOT model execution)"
+        ))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (stub: carries no data).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a slice (stub: drops the data).
+    pub fn vec1<T: Copy>(_v: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple2(self) -> Result<(Literal, Literal)> {
+        Err(Error::unavailable("Literal::to_tuple2"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({path})"
+        )))
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client (stub: construction reports unavailability).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loaders_report_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("PJRT runtime unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        assert!(Literal::vec1(&[1.0f32]).to_vec::<f32>().is_err());
+    }
+}
