@@ -59,4 +59,5 @@ fn main() {
             );
         }
     }
+    pmsm::bench::emit_json(&b, "fig4_transact");
 }

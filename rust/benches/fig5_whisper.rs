@@ -37,4 +37,5 @@ fn main() {
             });
         }
     }
+    pmsm::bench::emit_json(&b, "fig5_whisper");
 }

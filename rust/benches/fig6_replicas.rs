@@ -1,8 +1,9 @@
 //! Figure-6 bench (ours): replica-group scaling — the Transact
 //! microbenchmark swept over `backups ∈ {1, 2, 3, 5}` × strategy, with
 //! the standard metrics report (slowdown over the single-backup run plus
-//! per-group fence-lag breakdowns) so BENCH_*.json tracking captures the
-//! cost of N-way mirroring and of relaxing `all` to quorum policies.
+//! per-group fence-lag breakdowns). Emits `BENCH_fig6_replicas.json` so
+//! run-over-run tracking captures the cost of N-way mirroring and of
+//! relaxing `all` to quorum policies.
 //!
 //! Run: `cargo bench --bench fig6_replicas`
 //! Scale with PMSM_BENCH_TXNS (default 2000 transactions per cell) and
@@ -99,4 +100,5 @@ fn main() {
             );
         }
     }
+    pmsm::bench::emit_json(&b, "fig6_replicas");
 }

@@ -1,0 +1,134 @@
+//! Figure-7 bench (ours): failover & rejoin dynamics — the Transact
+//! microbenchmark swept over kill-time × ack-policy at `backups = 3`,
+//! reporting completion (or the halt-mode stall point), per-backup dead
+//! time and catch-up resync volume, plus simulator throughput while
+//! fault-injecting. Emits `BENCH_fig7_failover.json` for run-over-run
+//! perf tracking.
+//!
+//! Run: `cargo bench --bench fig7_failover`
+//! Scale with PMSM_BENCH_TXNS (default 2000 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::metrics::report::Table;
+use pmsm::net::{FaultsConfig, OnLoss};
+use pmsm::workloads::transact::run_transact_faulted;
+use pmsm::workloads::TransactConfig;
+
+/// Kill instants as fractions of the fault-free makespan.
+const KILL_FRACS: [(u64, u64); 3] = [(1, 4), (1, 2), (3, 4)];
+
+fn faults(plan: &str, on_loss: OnLoss) -> FaultsConfig {
+    FaultsConfig::with_plan(plan, on_loss).expect("valid plan")
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let plat = Platform::default();
+    let cfg = TransactConfig {
+        epochs: 4,
+        writes: 1,
+        txns,
+        ..Default::default()
+    };
+    let repl = |policy| ReplicationConfig::new(3, policy);
+
+    // Fault-free baseline places the kill instants.
+    let base = run_transact_faulted(
+        &plat,
+        StrategyKind::SmOb,
+        repl(AckPolicy::All),
+        FaultsConfig::default(),
+        cfg,
+    )
+    .expect("baseline")
+    .makespan;
+
+    // ---- Kill-time x ack-policy matrix: kill backup 2, rejoin 20% of
+    // the run later; report outcome relative to the fault-free run.
+    let cells: [(AckPolicy, OnLoss); 4] = [
+        (AckPolicy::All, OnLoss::Halt),
+        (AckPolicy::All, OnLoss::Degrade),
+        (AckPolicy::Majority, OnLoss::Halt),
+        (AckPolicy::Quorum(2), OnLoss::Halt),
+    ];
+    let mut t = Table::new(&[
+        "kill@",
+        "policy",
+        "on_loss",
+        "outcome",
+        "time",
+        "txns",
+        "dead(ns)",
+        "resync(B)",
+    ]);
+    for &(num, den) in &KILL_FRACS {
+        let kill_at = base * num / den;
+        let rejoin_at = kill_at + base / 5;
+        let plan = format!("kill:2@{kill_at},rejoin:2@{rejoin_at}");
+        for &(policy, on_loss) in &cells {
+            let out = run_transact_faulted(
+                &plat,
+                StrategyKind::SmOb,
+                repl(policy),
+                faults(&plan, on_loss),
+                cfg,
+            )
+            .expect("valid fault config");
+            let outcome = match &out.stalled {
+                Some(s) => format!("STALL@{}", s.at),
+                None => "completed".to_string(),
+            };
+            let dead: u64 = out.per_backup_dead_ns.iter().sum();
+            let resync: u64 = out.per_backup_resync_lines.iter().sum::<u64>() * pmsm::LINE;
+            t.row(vec![
+                format!("{num}/{den}"),
+                policy.to_string(),
+                on_loss.to_string(),
+                outcome,
+                format!("{:.2}x", out.makespan as f64 / base as f64),
+                format!("{}", out.txns),
+                format!("{dead}"),
+                format!("{resync}"),
+            ]);
+        }
+    }
+    println!(
+        "Figure 7 — Transact 4-1 failover dynamics at backups=3 \
+         (kill backup 2, rejoin +20% of run; time vs fault-free)\n{}",
+        t.render()
+    );
+
+    // ---- Simulator throughput while fault-injecting (perf tracking).
+    let mut b = Bencher::new();
+    let kill_at = base / 2;
+    let rejoin_at = kill_at + base / 5;
+    let plan = format!("kill:2@{kill_at},rejoin:2@{rejoin_at}");
+    for (name, policy, on_loss) in [
+        ("all-halt", AckPolicy::All, OnLoss::Halt),
+        ("all-degrade", AckPolicy::All, OnLoss::Degrade),
+        ("quorum2-halt", AckPolicy::Quorum(2), OnLoss::Halt),
+    ] {
+        let writes = cfg.txns * 4;
+        b.bench_elems(
+            &format!("transact/4-1/sm-ob/failover/{name}"),
+            (writes * 3) as f64,
+            || {
+                run_transact_faulted(
+                    &plat,
+                    StrategyKind::SmOb,
+                    repl(policy),
+                    faults(&plan, on_loss),
+                    cfg,
+                )
+                .expect("valid fault config")
+                .makespan
+            },
+        );
+    }
+    pmsm::bench::emit_json(&b, "fig7_failover");
+}

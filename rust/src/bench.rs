@@ -1,7 +1,10 @@
 //! Mini benchmark harness (the offline registry has no `criterion`).
 //!
-//! Provides warmup + timed iterations with mean/stddev/min reporting and a
-//! `harness = false` entry-point helper used by `rust/benches/*.rs`.
+//! Provides warmup + timed iterations with mean/stddev/min reporting, a
+//! `harness = false` entry-point helper used by `rust/benches/*.rs`, and
+//! machine-readable `BENCH_<name>.json` emission (hand-rolled JSON — no
+//! `serde` offline) so run-over-run perf trajectories can be tracked by
+//! tooling instead of scraped from stdout.
 
 use crate::util::Summary;
 use std::time::Instant;
@@ -19,6 +22,29 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// One result as a JSON object (the `BENCH_*.json` schema element).
+    pub fn to_json(&self) -> String {
+        let elems = match self.elems_per_iter {
+            Some(e) => json_num(e),
+            None => "null".to_string(),
+        };
+        let elems_per_sec = match self.elems_per_iter {
+            Some(e) if self.mean_ns > 0.0 => json_num(e / (self.mean_ns * 1e-9)),
+            _ => "null".to_string(),
+        };
+        format!(
+            "{{\"name\":{},\"iters\":{},\"mean_ns\":{},\"stddev_ns\":{},\
+             \"min_ns\":{},\"elems_per_iter\":{},\"elems_per_sec\":{}}}",
+            json_str(&self.name),
+            self.iters,
+            json_num(self.mean_ns),
+            json_num(self.stddev_ns),
+            json_num(self.min_ns),
+            elems,
+            elems_per_sec,
+        )
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
             "{:<40} {:>12} /iter (±{:>10}, min {:>12}, n={})",
@@ -34,6 +60,34 @@ impl BenchResult {
         }
         s
     }
+}
+
+/// JSON-safe number rendering (JSON has no NaN/Inf).
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// JSON string escaping (Rust's `{:?}` Debug escapes are not JSON).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -134,6 +188,40 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Render all recorded results as the `BENCH_*.json` document:
+    /// `{"bench": <name>, "results": [<BenchResult>, ...]}`.
+    pub fn to_json(&self, bench: &str) -> String {
+        let results: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
+        format!(
+            "{{\"bench\":{},\"results\":[{}]}}\n",
+            json_str(bench),
+            results.join(",")
+        )
+    }
+
+    /// Write `BENCH_<bench>.json` into `dir`; returns the path written.
+    pub fn write_json_to(&self, dir: &str, bench: &str) -> std::io::Result<String> {
+        let path = format!("{dir}/BENCH_{bench}.json");
+        std::fs::write(&path, self.to_json(bench))?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<bench>.json` into `$PMSM_BENCH_JSON_DIR` (default:
+    /// the current directory); returns the path written.
+    pub fn write_json(&self, bench: &str) -> std::io::Result<String> {
+        let dir = std::env::var("PMSM_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_json_to(&dir, bench)
+    }
+}
+
+/// Emit the bench's JSON artifact, tolerating a read-only working
+/// directory (benches must still run in sandboxes).
+pub fn emit_json(b: &Bencher, bench: &str) {
+    match b.write_json(bench) {
+        Ok(path) => println!("wrote {path}"),
+        Err(e) => eprintln!("note: could not write BENCH_{bench}.json: {e}"),
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +242,62 @@ mod tests {
         assert!(r.mean_ns > 0.0);
         assert_eq!(r.iters, 3);
         std::env::remove_var("PMSM_BENCH_ITERS");
+    }
+
+    #[test]
+    fn json_schema_is_well_formed() {
+        let r = BenchResult {
+            name: "transact/4-1/sm-ob".to_string(),
+            iters: 5,
+            mean_ns: 1234.5678,
+            stddev_ns: f64::NAN, // must not leak NaN into JSON
+            min_ns: 1000.0,
+            elems_per_iter: Some(2000.0),
+        };
+        let j = r.to_json();
+        assert!(j.contains("\"name\":\"transact/4-1/sm-ob\""), "{j}");
+        assert!(j.contains("\"mean_ns\":1234.568"), "{j}");
+        assert!(j.contains("\"stddev_ns\":0"), "{j}");
+        assert!(j.contains("\"elems_per_sec\":"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+        let mut b = Bencher::new();
+        b.results.push(r);
+        let doc = b.to_json("fig_test");
+        assert!(doc.starts_with("{\"bench\":\"fig_test\",\"results\":["), "{doc}");
+        assert!(doc.trim_end().ends_with("]}"), "{doc}");
+    }
+
+    #[test]
+    fn json_strings_are_escaped_for_json_not_rust() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b"), "\"a\\\"b\"");
+        assert_eq!(json_str("a\\b"), "\"a\\\\b\"");
+        assert_eq!(json_str("a\nb\tc"), "\"a\\nb\\tc\"");
+        // Control chars become \u escapes (valid JSON), not Rust's \u{..}.
+        assert_eq!(json_str("\u{7}"), "\"\\u0007\"");
+        assert!(!json_str("\u{7}").contains('{'));
+    }
+
+    #[test]
+    fn write_json_emits_a_file() {
+        let mut b = Bencher::new();
+        b.results.push(BenchResult {
+            name: "x".to_string(),
+            iters: 1,
+            mean_ns: 1.0,
+            stddev_ns: 0.0,
+            min_ns: 1.0,
+            elems_per_iter: None,
+        });
+        let dir = std::env::temp_dir().join("pmsm_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir = dir.to_str().unwrap().to_string();
+        let path = b.write_json_to(&dir, "unit").unwrap();
+        assert!(path.ends_with("BENCH_unit.json"), "{path}");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"bench\":\"unit\""), "{text}");
+        assert!(text.contains("\"elems_per_iter\":null"), "{text}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -16,6 +16,7 @@ use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, Strategy
 use crate::coordinator::Mirror;
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
 use crate::metrics::GroupReport;
+use crate::net::{FaultsConfig, OnLoss};
 use crate::recovery;
 use crate::replication::Predictor;
 use crate::runtime::{fallback_predictor, LatencyModel};
@@ -104,17 +105,28 @@ pub fn help_text() -> &'static str {
        run       --strategy no-sm|sm-rc|sm-ob|sm-dd|sm-ad --workload transact|<app>\n\
                  [--epochs N --writes N --txns N --threads N --config FILE]\n\
                  [--backups N --ack-policy all|majority|quorum:K]\n\
+                 [--fault-plan SPEC --on-loss halt|degrade]\n\
+                 [--handoff-ns N --resync-line-ns N]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
        recover   failure injection + recovery check [--strategy S --txns N]\n\
-                 [--backups N --ack-policy P]  (cross-replica ledger check)\n\
+                 [--backups N --ack-policy P --fault-plan SPEC --on-loss M]\n\
+                 (cross-replica ledger check; fault-aware when a plan is set)\n\
        config    print platform model parameters (Table 2)\n\
        selftest  Table-1 transformations + invariant smoke checks\n\
      \n\
      REPLICA GROUPS: --backups N mirrors every write to N backups; the\n\
      durability fence completes per --ack-policy (all = true SM;\n\
-     quorum:K / majority = K-durable, tolerating K-1 backup losses).\n"
+     quorum:K / majority = K-durable, tolerating K-1 backup losses).\n\
+     \n\
+     FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
+     backup B at virtual time T (ns). Killed backups leave fan-out and\n\
+     ack accounting; --on-loss halt stops at an unsatisfiable fence\n\
+     (reported stall) while degrade clamps the quorum to the survivors.\n\
+     A rejoining backup resyncs the missed ledger suffix from the\n\
+     healthiest peer (--handoff-ns + lines x --resync-line-ns) before\n\
+     re-entering the quorum.\n"
 }
 
 fn platform_from(args: &Args) -> Result<Platform> {
@@ -124,15 +136,21 @@ fn platform_from(args: &Args) -> Result<Platform> {
     }
 }
 
-/// Platform + replica-group shape: `--config` supplies both (via the
-/// `[replication]` section); `--backups` / `--ack-policy` override.
-fn setup_from(args: &Args) -> Result<(Platform, ReplicationConfig)> {
-    let (plat, mut repl) = match args.get("config") {
+/// Platform + replica-group shape + failure dynamics: `--config`
+/// supplies all three (via the `[replication]` / `[faults]` sections);
+/// `--backups` / `--ack-policy` / `--fault-plan` / `--on-loss` /
+/// `--handoff-ns` / `--resync-line-ns` override.
+fn setup_from(args: &Args) -> Result<(Platform, ReplicationConfig, FaultsConfig)> {
+    let (plat, mut repl, mut faults) = match args.get("config") {
         Some(path) => {
             let e = Experiment::from_file(path)?;
-            (e.platform, e.replication)
+            (e.platform, e.replication, e.faults)
         }
-        None => (Platform::default(), ReplicationConfig::default()),
+        None => (
+            Platform::default(),
+            ReplicationConfig::default(),
+            FaultsConfig::default(),
+        ),
     };
     if let Some(b) = args.get("backups") {
         repl.backups = b.parse().with_context(|| format!("--backups {b}"))?;
@@ -140,8 +158,17 @@ fn setup_from(args: &Args) -> Result<(Platform, ReplicationConfig)> {
     if let Some(s) = args.get("ack-policy") {
         repl.ack_policy = s.parse::<AckPolicy>().context("--ack-policy")?;
     }
+    if let Some(s) = args.get("fault-plan") {
+        faults.plan = s.parse().context("--fault-plan")?;
+    }
+    if let Some(s) = args.get("on-loss") {
+        faults.on_loss = s.parse().context("--on-loss")?;
+    }
+    faults.handoff_ns = args.get_u64("handoff-ns", faults.handoff_ns)?;
+    faults.resync_line_ns = args.get_u64("resync-line-ns", faults.resync_line_ns)?;
     repl.validate()?;
-    Ok((plat, repl))
+    faults.validate(repl.backups)?;
+    Ok((plat, repl, faults))
 }
 
 /// A predictor for `SmAd` (PJRT model if the artifacts load, else the
@@ -160,12 +187,20 @@ fn predictor_for(plat: &Platform, strategy: StrategyKind) -> Result<Option<Predi
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let (plat, repl) = setup_from(args)?;
+    let (plat, repl, faults) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
     let threads = args.get_usize("threads", 1)?;
     let predictor = predictor_for(&plat, strategy)?;
-    let mut mirror = Mirror::try_build(plat.clone(), strategy, predictor, repl, false)?;
+    let injecting = !faults.plan.is_empty();
+    if injecting {
+        println!(
+            "fault plan: {} (on_loss = {}, handoff {} ns, resync {} ns/line)",
+            faults.plan, faults.on_loss, faults.handoff_ns, faults.resync_line_ns
+        );
+    }
+    let mut mirror =
+        Mirror::try_build_faulted(plat.clone(), strategy, predictor, repl, faults, false)?;
 
     let outcome = if workload == "transact" {
         let cfg = TransactConfig {
@@ -211,7 +246,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  epochs/txn    : {:.1}", outcome.epochs_per_txn());
     println!("  writes/epoch  : {:.2}", outcome.writes_per_epoch());
     println!("  throughput    : {:.0} txn/s", outcome.txn_per_sec());
-    if repl.backups > 1 {
+    if let Some(stall) = &outcome.stalled {
+        println!("  STALL         : {stall}");
+        if stall.on_loss == OnLoss::Halt {
+            println!(
+                "                  the run stopped at the kill point; \
+                 durability was never weakened"
+            );
+        }
+    }
+    if repl.backups > 1 || injecting {
         print!("{}", GroupReport::from_fabric(&mirror.fabric).render());
     }
     Ok(())
@@ -412,13 +456,15 @@ fn cmd_analytic(args: &Args) -> Result<()> {
 }
 
 fn cmd_recover(args: &Args) -> Result<()> {
-    let (plat, repl) = setup_from(args)?;
+    let (plat, repl, faults) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
     use crate::coordinator::ThreadCtx;
     use crate::txn::Txn;
 
-    let mut m = Mirror::with_replication(plat, strategy, repl, true)?;
+    let injecting = !faults.plan.is_empty();
+    let on_loss = faults.on_loss;
+    let mut m = Mirror::try_build_faulted(plat, strategy, None, repl, faults, true)?;
     let mut t = ThreadCtx::new(0);
     let log = crate::pstore::log_base_for(0);
     let d0 = 0x20_0000u64;
@@ -429,31 +475,59 @@ fn cmd_recover(args: &Args) -> Result<()> {
         tx.write(&mut m, &mut t, d0, 100 + i);
         tx.write(&mut m, &mut t, d1, 200 + i);
         tx.commit(&mut m, &mut t);
+        if m.fabric.stall().is_some() {
+            break;
+        }
         let mut snap = std::collections::HashMap::new();
         snap.insert(d0, 100 + i);
         snap.insert(d1, 200 + i);
         hist.commit(snap, t.last_dfence);
     }
+    m.fabric.settle(t.now());
+    if let Some(stall) = m.fabric.stall() {
+        println!(
+            "recovery check [{strategy}, {} backup(s), ack {}]: run stopped \
+             after {} of {txns} txns — {stall}",
+            repl.backups,
+            repl.ack_policy,
+            hist.committed(),
+        );
+        print!("{}", GroupReport::from_fabric(&m.fabric).render());
+        return Ok(());
+    }
     let ledgers = m.fabric.ledgers();
     recovery::check_group_epoch_ordering(&ledgers)?;
-    let checked = recovery::check_group_crashes(
-        &ledgers,
-        &hist,
-        &[log],
-        &[d0, d1],
-        repl.required(),
-    )?;
+    let checked = if injecting {
+        recovery::check_faulted_group_crashes(
+            &ledgers,
+            &hist,
+            &[log],
+            &[d0, d1],
+            repl.required(),
+            on_loss,
+            &m.fabric.timeline(),
+        )?
+    } else {
+        recovery::check_group_crashes(
+            &ledgers,
+            &hist,
+            &[log],
+            &[d0, d1],
+            repl.required(),
+        )?
+    };
     let events: Vec<usize> = ledgers.iter().map(|l| l.len()).collect();
     println!(
-        "recovery check [{strategy}, {} backup(s), ack {}]: {txns} txns, \
+        "recovery check [{strategy}, {} backup(s), ack {}{}]: {txns} txns, \
          ledger events per backup {events:?}, {checked} crash points \
          verified — failure atomicity + group durability hold \
          (tolerates {} backup failure(s))",
         repl.backups,
         repl.ack_policy,
+        if injecting { ", fault-injected" } else { "" },
         repl.required() - 1
     );
-    if repl.backups > 1 {
+    if repl.backups > 1 || injecting {
         print!("{}", GroupReport::from_fabric(&m.fabric).render());
     }
     Ok(())
@@ -571,5 +645,80 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn run_command_fault_plan_smoke() {
+        // Degraded run with a mid-run kill + rejoin completes.
+        let argv: Vec<String> = [
+            "run", "--strategy", "sm-ob", "--txns", "50", "--backups", "3",
+            "--ack-policy", "quorum:2", "--fault-plan",
+            "kill:1@40000,rejoin:1@120000", "--on-loss", "degrade",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        main_with_args(&argv).unwrap();
+    }
+
+    #[test]
+    fn run_command_rejects_bad_fault_plan() {
+        // Plan names a backup outside the group.
+        let argv: Vec<String> = [
+            "run", "--strategy", "sm-ob", "--txns", "5", "--backups", "2",
+            "--fault-plan", "kill:7@100",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(main_with_args(&argv).is_err());
+        // Malformed spec string.
+        let argv: Vec<String> =
+            ["run", "--fault-plan", "explode:0@1"].iter().map(|s| s.to_string()).collect();
+        assert!(main_with_args(&argv).is_err());
+        // Unknown loss mode.
+        let argv: Vec<String> = [
+            "run", "--backups", "2", "--fault-plan", "kill:0@1", "--on-loss", "retry",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        assert!(main_with_args(&argv).is_err());
+    }
+
+    #[test]
+    fn recover_command_fault_aware_check() {
+        // Tolerated loss: quorum:2 of 3 with one backup killed mid-run
+        // still verifies (fault-aware sweep).
+        main_with_args(&[
+            "recover".to_string(),
+            "--strategy".to_string(),
+            "sm-ob".to_string(),
+            "--txns".to_string(),
+            "4".to_string(),
+            "--backups".to_string(),
+            "3".to_string(),
+            "--ack-policy".to_string(),
+            "quorum:2".to_string(),
+            "--fault-plan".to_string(),
+            "kill:2@20000".to_string(),
+        ])
+        .unwrap();
+        // Intolerable loss under halt: the run stalls but the command
+        // still reports cleanly (no error).
+        main_with_args(&[
+            "recover".to_string(),
+            "--txns".to_string(),
+            "4".to_string(),
+            "--backups".to_string(),
+            "3".to_string(),
+            "--ack-policy".to_string(),
+            "all".to_string(),
+            "--fault-plan".to_string(),
+            "kill:2@20000".to_string(),
+            "--on-loss".to_string(),
+            "halt".to_string(),
+        ])
+        .unwrap();
     }
 }

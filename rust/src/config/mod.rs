@@ -11,6 +11,7 @@ pub mod toml;
 
 pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 
+use crate::net::faults::FaultsConfig;
 use anyhow::{bail, Context, Result};
 
 /// Workload selection for the CLI / experiment driver.
@@ -31,6 +32,10 @@ pub struct Experiment {
     /// Replica-group shape (`[replication]` section; defaults to the
     /// paper's single fully-synchronous backup).
     pub replication: ReplicationConfig,
+    /// Failure dynamics (`[faults]` section: a deterministic kill/rejoin
+    /// plan plus the on-loss mode and resync cost knobs; defaults to no
+    /// faults, `on_loss = halt`).
+    pub faults: FaultsConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -48,6 +53,7 @@ impl Default for Experiment {
                 txns: 10_000,
             },
             replication: ReplicationConfig::default(),
+            faults: FaultsConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -90,6 +96,29 @@ impl Experiment {
         exp.replication
             .validate()
             .context("invalid [replication] section")?;
+        if let Some(v) = doc.get("faults.plan") {
+            exp.faults.plan = v.as_str()?.parse().context("faults.plan")?;
+        }
+        if let Some(v) = doc.get("faults.on_loss") {
+            exp.faults.on_loss = v.as_str()?.parse()?;
+        }
+        if let Some(v) = doc.get("faults.handoff_ns") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("faults.handoff_ns must be >= 0, got {n}");
+            }
+            exp.faults.handoff_ns = n as u64;
+        }
+        if let Some(v) = doc.get("faults.resync_line_ns") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("faults.resync_line_ns must be >= 0, got {n}");
+            }
+            exp.faults.resync_line_ns = n as u64;
+        }
+        exp.faults
+            .validate(exp.replication.backups)
+            .context("invalid [faults] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -236,6 +265,56 @@ ack_policy = "quorum:2"
         let exp = Experiment::from_str(text).unwrap();
         assert_eq!(exp.replication.ack_policy, AckPolicy::Majority);
         assert_eq!(exp.replication.required(), 3);
+    }
+
+    #[test]
+    fn faults_section_roundtrip() {
+        use crate::net::faults::OnLoss;
+        let text = r#"
+[replication]
+backups = 3
+ack_policy = "quorum:2"
+
+[faults]
+plan = "kill:1@50000,rejoin:1@120000"
+on_loss = "degrade"
+handoff_ns = 5000
+resync_line_ns = 50
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.faults.plan.len(), 2);
+        assert_eq!(
+            exp.faults.plan.to_string(),
+            "kill:1@50000,rejoin:1@120000"
+        );
+        assert_eq!(exp.faults.on_loss, OnLoss::Degrade);
+        assert_eq!(exp.faults.handoff_ns, 5000);
+        assert_eq!(exp.faults.resync_line_ns, 50);
+    }
+
+    #[test]
+    fn faults_default_when_section_missing() {
+        use crate::net::faults::{FaultsConfig, OnLoss};
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.faults, FaultsConfig::default());
+        assert!(exp.faults.plan.is_empty());
+        assert_eq!(exp.faults.on_loss, OnLoss::Halt);
+    }
+
+    #[test]
+    fn faults_section_rejects_bad_shapes() {
+        // Plan names a backup outside the group.
+        let text = "[replication]\nbackups = 2\n[faults]\nplan = \"kill:2@100\"";
+        assert!(Experiment::from_str(text).is_err());
+        // Rejoin without a prior kill.
+        let text = "[faults]\nplan = \"rejoin:0@100\"";
+        assert!(Experiment::from_str(text).is_err());
+        // Unknown loss mode and malformed plan strings.
+        assert!(Experiment::from_str("[faults]\non_loss = \"explode\"").is_err());
+        assert!(Experiment::from_str("[faults]\nplan = \"kill:0\"").is_err());
+        // Negative knobs.
+        assert!(Experiment::from_str("[faults]\nhandoff_ns = -1").is_err());
+        assert!(Experiment::from_str("[faults]\nresync_line_ns = -1").is_err());
     }
 
     #[test]

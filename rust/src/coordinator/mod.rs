@@ -16,12 +16,12 @@
 pub mod sched;
 
 use crate::config::{Platform, ReplicationConfig, StrategyKind};
-use crate::net::{Fabric, RemoteEngine, WriteMeta};
+use crate::net::{Fabric, FaultKind, FaultsConfig, RemoteEngine, WriteMeta};
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
 use crate::util::FastMap;
 use crate::{line_of, Addr, Ns};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Per-thread execution context: virtual clock + transactional counters.
 #[derive(Debug)]
@@ -139,9 +139,9 @@ impl Mirror {
         Self::try_build(plat, kind, None, repl, ledger)
     }
 
-    /// Fully general constructor: any strategy, any replica-group shape.
-    /// Fails on an invalid replication config or on `SmAd` without a
-    /// predictor.
+    /// Fully general fault-free constructor: any strategy, any
+    /// replica-group shape. Fails on an invalid replication config or on
+    /// `SmAd` without a predictor.
     pub fn try_build(
         plat: Platform,
         kind: StrategyKind,
@@ -149,9 +149,45 @@ impl Mirror {
         repl: ReplicationConfig,
         ledger: bool,
     ) -> Result<Self> {
+        Self::try_build_faulted(plat, kind, predictor, repl, FaultsConfig::default(), ledger)
+    }
+
+    /// Fully general constructor with runtime failure dynamics: the
+    /// fabric consults `faults` on every post/fence (backup kills,
+    /// catch-up rejoins, halt/degrade loss handling — see
+    /// [`crate::net::faults`]). Fails on an invalid replication config,
+    /// a fault plan that does not fit the group, or `SmAd` without a
+    /// predictor.
+    pub fn try_build_faulted(
+        plat: Platform,
+        kind: StrategyKind,
+        predictor: Option<Predictor>,
+        repl: ReplicationConfig,
+        faults: FaultsConfig,
+        ledger: bool,
+    ) -> Result<Self> {
         repl.validate()?;
+        faults.validate(repl.backups)?;
+        if kind == StrategyKind::SmRc
+            && faults
+                .plan
+                .events()
+                .iter()
+                .any(|e| e.kind == FaultKind::Rejoin)
+        {
+            // SM-RC replicates into volatile backup state (dirty DDIO
+            // lines drained by rcommit); a killed backup loses that
+            // state and no peer holds it durably, so a rejoin catch-up
+            // cannot be faithful. Real deployments re-replicate from
+            // the primary on failback — not modeled yet.
+            bail!(
+                "sm-rc cannot resync a rejoining backup (replicated-but-\
+                 undrained lines are volatile); use a kill-only fault \
+                 plan or sm-ob / sm-dd"
+            );
+        }
         let strategy = replication::make_strategy(kind, predictor)?;
-        let fabric = Fabric::new(&plat, &repl, ledger);
+        let fabric = Fabric::with_faults(&plat, &repl, faults, ledger);
         let local_mc = RateLimiter::new(plat.llc_mc);
         let local_mc_lat = plat.llc_mc;
         Ok(Mirror {
@@ -246,7 +282,9 @@ impl Mirror {
 
     /// Transaction end: durability point (local drain + strategy fence).
     /// Records both the ack-policy completion and the per-backup fence
-    /// completions.
+    /// completions. A transaction whose durability fence stalled (fault
+    /// injection under `on_loss = halt`, or a fully dead group) was
+    /// never durably acked and is NOT counted as committed.
     pub fn txn_commit(&mut self, t: &mut ThreadCtx) {
         t.clock.busy(self.plat.sfence);
         if let Some(&max) = t.pending_local.iter().max() {
@@ -254,6 +292,9 @@ impl Mirror {
         }
         t.pending_local.clear();
         self.strategy.on_dfence(&mut self.fabric, &mut t.clock);
+        if self.fabric.stall().is_some() {
+            return;
+        }
         t.last_dfence = t.clock.now;
         t.last_dfence_per_backup.clear();
         t.last_dfence_per_backup
@@ -404,6 +445,120 @@ mod tests {
             "dfence {} outside [{fastest}, {slowest}+poll]",
             t.last_dfence
         );
+    }
+
+    #[test]
+    fn faulted_mirror_halts_or_degrades_on_backup_loss() {
+        use crate::net::{FaultsConfig, OnLoss};
+        let repl = ReplicationConfig::new(3, AckPolicy::All);
+        let faults = |mode| FaultsConfig::with_plan("kill:1@0", mode).unwrap();
+        // Halt: the first durability fence records a stall.
+        let mut m = Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            repl,
+            faults(OnLoss::Halt),
+            false,
+        )
+        .unwrap();
+        let mut t = ThreadCtx::new(0);
+        run_transact_txn(&mut m, &mut t, 2, 1);
+        let stall = m.fabric.stall().expect("all + halt must stall");
+        assert_eq!(stall.alive, 2);
+        assert_eq!(stall.required, 3);
+        // Degrade: the run completes on the survivors.
+        let mut m = Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            repl,
+            faults(OnLoss::Degrade),
+            true,
+        )
+        .unwrap();
+        let mut t = ThreadCtx::new(0);
+        run_transact_txn(&mut m, &mut t, 2, 1);
+        assert!(m.fabric.stall().is_none());
+        assert_eq!(t.txns_done, 1);
+        assert_eq!(m.backup(0).ledger.len(), 2);
+        assert_eq!(m.backup(2).ledger.len(), 2);
+        assert_eq!(m.backup(1).ledger.len(), 0, "dead backup sees nothing");
+    }
+
+    #[test]
+    fn sm_rc_rejoin_plans_rejected_but_kill_only_allowed() {
+        use crate::net::{FaultsConfig, OnLoss};
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+        // Rejoin catch-up is impossible for SM-RC's volatile pending.
+        let rejoin = FaultsConfig::with_plan("kill:1@100,rejoin:1@200", OnLoss::Degrade)
+            .unwrap();
+        assert!(Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmRc,
+            None,
+            repl,
+            rejoin.clone(),
+            false,
+        )
+        .is_err());
+        // Kill-only plans are fine for SM-RC; rejoin plans are fine for
+        // the write-through strategies.
+        let kill_only = FaultsConfig::with_plan("kill:1@100", OnLoss::Degrade).unwrap();
+        Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmRc,
+            None,
+            repl,
+            kill_only,
+            false,
+        )
+        .unwrap();
+        Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            repl,
+            rejoin,
+            false,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn stalled_commit_is_not_counted() {
+        use crate::net::{FaultsConfig, OnLoss};
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let faults = FaultsConfig::with_plan("kill:0@0", OnLoss::Halt).unwrap();
+        let mut m = Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            repl,
+            faults,
+            false,
+        )
+        .unwrap();
+        let mut t = ThreadCtx::new(0);
+        run_transact_txn(&mut m, &mut t, 2, 1);
+        assert!(m.fabric.stall().is_some());
+        assert_eq!(t.txns_done, 0, "a stalled fence is not a commit");
+        assert_eq!(t.last_dfence, 0, "no durability instant was reached");
+    }
+
+    #[test]
+    fn fault_plan_outside_group_rejected_at_build() {
+        use crate::net::{FaultsConfig, OnLoss};
+        let faults = FaultsConfig::with_plan("kill:5@100", OnLoss::Halt).unwrap();
+        assert!(Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(3, AckPolicy::All),
+            faults,
+            false,
+        )
+        .is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! ordering error is bounded by one transaction's span.
 
 use super::{Mirror, ThreadCtx};
+use crate::net::Stall;
 use crate::Ns;
 
 /// A per-thread transaction source: executes ONE transaction per call and
@@ -67,6 +68,16 @@ pub struct RunOutcome {
     /// Per-backup persist horizons at the end of the run (index =
     /// backup id; length = replica-group size).
     pub per_backup_horizon: Vec<Ns>,
+    /// Per-backup out-of-quorum time accrued by the end of the run
+    /// (fault-injection runs; all zeros otherwise).
+    pub per_backup_dead_ns: Vec<Ns>,
+    /// Per-backup catch-up resync volume (lines streamed from a peer on
+    /// rejoin; fault-injection runs, zeros otherwise).
+    pub per_backup_resync_lines: Vec<u64>,
+    /// The unsatisfiable durability fence that stopped the run, if any
+    /// (fault-injection runs under `on_loss = halt`, or a fully dead
+    /// group). When set, the workload did NOT run to completion.
+    pub stalled: Option<Stall>,
 }
 
 impl RunOutcome {
@@ -114,7 +125,7 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     {
         let mut warming: Vec<bool> = vec![true; n];
         let mut left = n;
-        while left > 0 {
+        while left > 0 && mirror.fabric.stall().is_none() {
             let i = (0..n)
                 .filter(|&i| warming[i])
                 .min_by_key(|&i| ctxs[i].now())
@@ -133,7 +144,10 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         }
     }
 
-    while remaining > 0 {
+    // A stalled fabric (halt-mode fault injection) stops the run at the
+    // kill point: remaining transactions are abandoned, and the outcome
+    // reports the stall.
+    while remaining > 0 && mirror.fabric.stall().is_none() {
         // Pick the live thread with the smallest clock.
         let i = (0..n)
             .filter(|&i| alive[i])
@@ -145,6 +159,11 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         }
     }
 
+    // Realize any fault events / resync completions the verb stream never
+    // reached (e.g. a rejoin scheduled after the last write).
+    let wall = ctxs.iter().map(|c| c.now()).max().unwrap_or(0);
+    mirror.fabric.settle(wall);
+
     let mut out = RunOutcome::default();
     for c in &ctxs {
         // Steady-state span: excludes any load phase before reset_stats.
@@ -155,6 +174,14 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         out.per_thread.push(c.now() - c.stats_zero_at);
     }
     out.per_backup_horizon = mirror.fabric.persist_horizons();
+    out.per_backup_dead_ns = mirror.fabric.accrued_dead_ns(wall);
+    out.per_backup_resync_lines = mirror
+        .fabric
+        .backup_stats()
+        .iter()
+        .map(|s| s.resync_lines)
+        .collect();
+    out.stalled = mirror.fabric.stall().copied();
     out
 }
 
@@ -247,6 +274,31 @@ mod tests {
         }
         // Lag is bounded by the run itself.
         assert!(out.backup_lag() <= out.makespan);
+    }
+
+    #[test]
+    fn stalled_fabric_stops_the_run_at_the_kill_point() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::net::{FaultsConfig, OnLoss};
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let faults = FaultsConfig::with_plan("kill:0@5000", OnLoss::Halt).unwrap();
+        let mut m = Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            repl,
+            faults,
+            false,
+        )
+        .unwrap();
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(1000, 2, 1, 0x10000)];
+        let out = run_threads(&mut m, &mut srcs);
+        let stall = out.stalled.expect("all + halt must stall the run");
+        assert!(stall.at >= 5000, "stall at {} before the kill", stall.at);
+        assert!(out.txns < 1000, "run must stop early, did {} txns", out.txns);
+        assert_eq!(out.per_backup_dead_ns.len(), 2);
+        assert!(out.per_backup_dead_ns[0] > 0, "killed backup accrues dead time");
+        assert_eq!(out.per_backup_dead_ns[1], 0);
     }
 
     #[test]

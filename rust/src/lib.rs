@@ -20,6 +20,12 @@
 //!   losses); `backups = 1` + `all` reproduces the paper's numbers
 //!   bit-exactly ([`net::Fabric`], `[replication] backups/ack_policy`
 //!   config keys, per-backup latency breakdowns in [`metrics`]);
+//! * deterministic **failure dynamics** on the replica group: sim-clock
+//!   fault plans kill and rejoin backups mid-run, with catch-up resync
+//!   from the healthiest peer, halt/degrade handling of intolerable
+//!   losses, and fault-aware recovery checks over the realized
+//!   alive/dead timeline ([`net::faults`], `[faults]` config keys,
+//!   `--fault-plan` CLI);
 //! * the mirroring coordinator that binds a primary node's persistency
 //!   traffic to the replica group over the simulated fabric
 //!   ([`coordinator`]);

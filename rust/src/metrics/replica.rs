@@ -1,9 +1,11 @@
 //! Replica-group metrics: per-backup and group-level latency breakdowns
 //! for an N-way mirroring run (the replica-group analogue of the Fig. 4/5
-//! report formatters).
+//! report formatters), including the failure-dynamics view — per-backup
+//! state, out-of-quorum (dead) time, catch-up resync volume and hand-off
+//! latency, and the stall that stopped a halt-mode run.
 
-use crate::net::{BackupStats, Fabric};
-use crate::Ns;
+use crate::net::{BackupStats, Fabric, Stall};
+use crate::{Ns, LINE};
 
 use super::report::Table;
 
@@ -15,11 +17,15 @@ pub struct GroupReport {
     pub policy: String,
     /// Durable backups required at a fence.
     pub required: usize,
+    /// Rendered loss mode (`halt` / `degrade`).
+    pub on_loss: String,
     pub stats: Vec<BackupStats>,
     /// Blocking fences executed (group level).
     pub blocking_waits: u64,
     /// Total ns the workload threads spent blocked on group fences.
     pub blocked_ns: Ns,
+    /// The unsatisfiable fence that stopped the run, if any.
+    pub stalled: Option<Stall>,
 }
 
 impl GroupReport {
@@ -28,9 +34,11 @@ impl GroupReport {
         GroupReport {
             policy: fabric.policy().to_string(),
             required: fabric.required(),
+            on_loss: fabric.on_loss().to_string(),
             stats: fabric.backup_stats(),
             blocking_waits: fabric.blocking_waits,
             blocked_ns: fabric.blocked_ns,
+            stalled: fabric.stall().copied(),
         }
     }
 
@@ -62,10 +70,21 @@ impl GroupReport {
         self.blocked_ns as f64 / self.blocking_waits as f64
     }
 
+    /// Total catch-up resync volume across the group (bytes).
+    pub fn resync_bytes(&self) -> u64 {
+        self.stats.iter().map(|s| s.resync_lines * LINE).sum()
+    }
+
+    /// Total out-of-quorum time across the group (closed intervals, ns).
+    pub fn total_dead_ns(&self) -> Ns {
+        self.stats.iter().map(|s| s.dead_ns).sum()
+    }
+
     /// Render the per-backup table + group summary.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "backup",
+            "state",
             "writes",
             "persists",
             "barriers",
@@ -73,10 +92,14 @@ impl GroupReport {
             "horizon(ns)",
             "fence(ns)",
             "stall(ns)",
+            "dead(ns)",
+            "resync(B)",
+            "handoff(ns)",
         ]);
         for s in &self.stats {
             t.row(vec![
                 format!("{}", s.id),
+                s.state.name().to_string(),
                 format!("{}", s.writes),
                 format!("{}", s.persists),
                 format!("{}", s.barriers),
@@ -84,21 +107,32 @@ impl GroupReport {
                 format!("{}", s.persist_horizon),
                 format!("{}", s.last_fence),
                 format!("{}", s.window_stall_ns),
+                format!("{}", s.dead_ns),
+                format!("{}", s.resync_lines * LINE),
+                format!("{}", s.last_handoff_ns),
             ]);
         }
-        format!(
-            "Replica group — {} backups, ack policy {} (required {})\n{}\
+        let mut out = format!(
+            "Replica group — {} backups, ack policy {} (required {}, \
+             on_loss {})\n{}\
              group: {} blocking fences, {:.0} ns mean block, \
-             horizon lag {} ns, fence lag {} ns\n",
+             horizon lag {} ns, fence lag {} ns, dead {} ns, resync {} B\n",
             self.backups(),
             self.policy,
             self.required,
+            self.on_loss,
             t.render(),
             self.blocking_waits,
             self.mean_block_ns(),
             self.horizon_lag(),
             self.fence_lag(),
-        )
+            self.total_dead_ns(),
+            self.resync_bytes(),
+        );
+        if let Some(stall) = &self.stalled {
+            out.push_str(&format!("group: STALLED — {stall}\n"));
+        }
+        out
     }
 }
 
@@ -106,7 +140,7 @@ impl GroupReport {
 mod tests {
     use super::*;
     use crate::config::{AckPolicy, Platform, ReplicationConfig};
-    use crate::net::WriteMeta;
+    use crate::net::{FaultsConfig, OnLoss, WriteMeta};
     use crate::sim::ThreadClock;
 
     #[test]
@@ -135,9 +169,13 @@ mod tests {
         assert_eq!(r.policy, "quorum:2");
         assert_eq!(r.blocking_waits, 1);
         assert!(r.mean_block_ns() >= 0.0);
+        assert_eq!(r.resync_bytes(), 0);
+        assert_eq!(r.total_dead_ns(), 0);
+        assert!(r.stalled.is_none());
         let text = r.render();
         assert!(text.contains("3 backups"));
         assert!(text.contains("quorum:2"));
+        assert!(text.contains("alive"));
         // One line per backup plus header/rule/summary.
         assert!(text.lines().count() >= 6, "{text}");
     }
@@ -151,5 +189,32 @@ mod tests {
         assert_eq!(r.horizon_lag(), 0);
         assert_eq!(r.fence_lag(), 0);
         assert_eq!(r.mean_block_ns(), 0.0);
+    }
+
+    #[test]
+    fn report_surfaces_faults_and_stalls() {
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let faults = FaultsConfig::with_plan("kill:1@0", OnLoss::Halt).unwrap();
+        let mut f = Fabric::with_faults(&p, &repl, faults, true);
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(
+            &mut t,
+            WriteMeta {
+                addr: 0x40,
+                val: 0,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: 0,
+            },
+        );
+        f.rdfence(&mut t);
+        let r = GroupReport::from_fabric(&f);
+        assert!(r.stalled.is_some());
+        assert_eq!(r.on_loss, "halt");
+        let text = r.render();
+        assert!(text.contains("STALLED"), "{text}");
+        assert!(text.contains("dead"), "{text}");
     }
 }

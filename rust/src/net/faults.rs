@@ -1,0 +1,499 @@
+//! Deterministic fault injection for replica groups.
+//!
+//! A [`FaultPlan`] is a sim-clock-scheduled list of `Kill { backup, at }` /
+//! `Rejoin { backup, at }` events. The [`crate::net::Fabric`] consults the
+//! plan on every post and fence: a killed backup drops out of verb fan-out
+//! and out of ack-policy accounting, and a rejoining backup first streams
+//! the ledger suffix it missed from the healthiest surviving peer (the
+//! catch-up resync), re-entering the quorum only once the stream completes
+//! — hand-off latency plus a per-line streaming cost, charged on the
+//! simulated clock.
+//!
+//! Losing more backups than the ack policy tolerates is governed by
+//! [`OnLoss`]:
+//!
+//! * [`OnLoss::Halt`] — true synchronous-mirroring semantics: the first
+//!   durability fence that cannot gather its required acks records a
+//!   [`Stall`] and the run stops at the kill point (no weakened acks are
+//!   ever reported durable);
+//! * [`OnLoss::Degrade`] — availability-first: the fence degrades to the
+//!   surviving backups (`required` clamps to the alive count), durability
+//!   is temporarily weakened, and the run continues.
+//!
+//! The fabric records the *realized* alive/dead transitions (kills, and
+//! resync completions whose instants are only known at run time) as a
+//! [`FaultTimeline`], which the fault-aware recovery checks consume to
+//! know which backups can serve a crash at a given instant.
+
+use crate::config::AckPolicy;
+use crate::Ns;
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// What happens to a backup at a plan event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The backup dies: no further verbs reach it, its completions drop
+    /// out of ack accounting.
+    Kill,
+    /// The backup comes back and starts its catch-up resync.
+    Rejoin,
+}
+
+/// One scheduled fault event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Virtual instant at which the event takes effect (ns).
+    pub at: Ns,
+    /// Backup index within the replica group.
+    pub backup: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, time-sorted fault schedule.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan (events are sorted by time; per-backup shape is
+    /// checked by [`FaultPlan::validate`]).
+    pub fn new(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by_key(|e| e.at);
+        FaultPlan { events }
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Check the plan against a group of `backups` replicas: indices in
+    /// range, and each backup's events strictly increasing in time,
+    /// alternating kill → rejoin → kill → …, starting with a kill.
+    pub fn validate(&self, backups: usize) -> Result<()> {
+        for b in 0..backups {
+            let mut last_at: Option<Ns> = None;
+            let mut expect = FaultKind::Kill;
+            for ev in self.events.iter().filter(|e| e.backup == b) {
+                if let Some(prev) = last_at {
+                    if ev.at <= prev {
+                        bail!(
+                            "fault plan: backup {b} has non-increasing event \
+                             times ({prev} then {})",
+                            ev.at
+                        );
+                    }
+                }
+                if ev.kind != expect {
+                    bail!(
+                        "fault plan: backup {b} events must alternate \
+                         kill/rejoin starting with kill (got {:?} at t={})",
+                        ev.kind,
+                        ev.at
+                    );
+                }
+                expect = match ev.kind {
+                    FaultKind::Kill => FaultKind::Rejoin,
+                    FaultKind::Rejoin => FaultKind::Kill,
+                };
+                last_at = Some(ev.at);
+            }
+        }
+        if let Some(ev) = self.events.iter().find(|e| e.backup >= backups) {
+            bail!(
+                "fault plan names backup {} but the group only has {backups}",
+                ev.backup
+            );
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    /// Parse a `--fault-plan` spec: comma-separated `kill:B@T` /
+    /// `rejoin:B@T` entries (`T` in ns, underscores allowed). The empty
+    /// string is the empty plan.
+    fn from_str(s: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind_s, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault event {tok:?}: expected kill:B@T or rejoin:B@T"))?;
+            let kind = match kind_s.trim().to_ascii_lowercase().as_str() {
+                "kill" => FaultKind::Kill,
+                "rejoin" => FaultKind::Rejoin,
+                other => bail!("unknown fault kind {other:?}; expected kill | rejoin"),
+            };
+            let (backup_s, at_s) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault event {tok:?}: missing @time"))?;
+            let backup: usize = backup_s
+                .trim()
+                .parse()
+                .map_err(|e| anyhow!("fault event {tok:?}: bad backup index: {e}"))?;
+            let at: Ns = at_s
+                .trim()
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("fault event {tok:?}: bad time: {e}"))?;
+            events.push(FaultEvent { at, backup, kind });
+        }
+        Ok(FaultPlan::new(events))
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, ev) in self.events.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            let kind = match ev.kind {
+                FaultKind::Kill => "kill",
+                FaultKind::Rejoin => "rejoin",
+            };
+            write!(f, "{kind}:{}@{}", ev.backup, ev.at)?;
+        }
+        Ok(())
+    }
+}
+
+/// Behaviour when backup losses exceed what the ack policy tolerates.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnLoss {
+    /// Stop at the kill point (record a [`Stall`]); never report a
+    /// weakened ack as durable.
+    #[default]
+    Halt,
+    /// Degrade the fence to the surviving backups and continue.
+    Degrade,
+}
+
+impl FromStr for OnLoss {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "halt" => Ok(OnLoss::Halt),
+            "degrade" => Ok(OnLoss::Degrade),
+            other => bail!("unknown on_loss {other:?}; expected halt | degrade"),
+        }
+    }
+}
+
+impl fmt::Display for OnLoss {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            OnLoss::Halt => "halt",
+            OnLoss::Degrade => "degrade",
+        })
+    }
+}
+
+/// Acks a fence must gather given `alive` surviving backups, under a
+/// policy statically requiring `required`. Returns 0 when the fence is
+/// unsatisfiable (the stall condition).
+pub fn effective_required(required: usize, alive: usize, on_loss: OnLoss) -> usize {
+    match on_loss {
+        OnLoss::Halt => {
+            if alive < required {
+                0
+            } else {
+                required
+            }
+        }
+        OnLoss::Degrade => required.min(alive),
+    }
+}
+
+/// Default hand-off latency charged when a rejoin starts its catch-up
+/// stream (ns) — connection re-establishment + source selection.
+pub const DEFAULT_HANDOFF_NS: Ns = 10_000;
+/// Default per-line streaming cost of the catch-up resync (ns/line).
+pub const DEFAULT_RESYNC_LINE_NS: Ns = 100;
+
+/// Failure-dynamics configuration (`[faults]` table / `--fault-plan`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultsConfig {
+    pub plan: FaultPlan,
+    pub on_loss: OnLoss,
+    /// Fixed hand-off latency at the start of a catch-up resync (ns).
+    pub handoff_ns: Ns,
+    /// Streaming cost per missed line during resync (ns/line).
+    pub resync_line_ns: Ns,
+}
+
+impl Default for FaultsConfig {
+    fn default() -> Self {
+        FaultsConfig {
+            plan: FaultPlan::default(),
+            on_loss: OnLoss::default(),
+            handoff_ns: DEFAULT_HANDOFF_NS,
+            resync_line_ns: DEFAULT_RESYNC_LINE_NS,
+        }
+    }
+}
+
+impl FaultsConfig {
+    /// Parse `spec` as the fault plan, with default cost knobs — the
+    /// common construction across tests, benches, and examples.
+    pub fn with_plan(spec: &str, on_loss: OnLoss) -> Result<Self> {
+        Ok(FaultsConfig {
+            plan: spec.parse()?,
+            on_loss,
+            ..FaultsConfig::default()
+        })
+    }
+
+    /// Validate the plan against the replica-group size.
+    pub fn validate(&self, backups: usize) -> Result<()> {
+        self.plan.validate(backups)
+    }
+}
+
+/// Runtime state of one backup in the failover state machine
+/// (alive → dead → resyncing → alive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackupState {
+    /// In the quorum: receives fan-out, counts toward acks.
+    Alive,
+    /// Killed at `since`: receives nothing, counts toward nothing.
+    Dead { since: Ns },
+    /// Rejoined and streaming the missed ledger suffix; back in the
+    /// quorum at `ready_at`. Still excluded from fan-out and acks.
+    Resyncing { since: Ns, ready_at: Ns },
+}
+
+impl BackupState {
+    pub fn is_alive(&self) -> bool {
+        matches!(self, BackupState::Alive)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackupState::Alive => "alive",
+            BackupState::Dead { .. } => "dead",
+            BackupState::Resyncing { .. } => "resyncing",
+        }
+    }
+}
+
+impl fmt::Display for BackupState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A durability fence that could not gather its required acks (halt mode
+/// or a fully dead group): the run stops here.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Stall {
+    /// Virtual instant of the unsatisfiable fence.
+    pub at: Ns,
+    /// Backups alive (in-quorum) at the fence.
+    pub alive: usize,
+    /// Acks the policy statically requires.
+    pub required: usize,
+    pub policy: AckPolicy,
+    pub on_loss: OnLoss,
+}
+
+impl fmt::Display for Stall {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "durability stalled at t={}: policy {} requires {} durable \
+             backup(s) but only {} alive (on_loss = {})",
+            self.at, self.policy, self.required, self.alive, self.on_loss
+        )
+    }
+}
+
+/// Realized alive/dead transitions of a run — kills at their scheduled
+/// instants plus resync completions at their computed `ready_at`s — used
+/// by fault-aware recovery to know which backups can serve a crash at a
+/// given instant.
+#[derive(Clone, Debug, Default)]
+pub struct FaultTimeline {
+    backups: usize,
+    /// `(instant, backup, alive-after)`, time-sorted.
+    transitions: Vec<(Ns, usize, bool)>,
+}
+
+impl FaultTimeline {
+    pub fn new(backups: usize, mut transitions: Vec<(Ns, usize, bool)>) -> Self {
+        transitions.sort_by_key(|t| t.0);
+        FaultTimeline {
+            backups,
+            transitions,
+        }
+    }
+
+    pub fn backups(&self) -> usize {
+        self.backups
+    }
+
+    pub fn transitions(&self) -> &[(Ns, usize, bool)] {
+        &self.transitions
+    }
+
+    /// Which backups are in the quorum (alive, fully resynced) at `t`.
+    pub fn alive_at(&self, t: Ns) -> Vec<bool> {
+        let mut alive = vec![true; self.backups];
+        for &(at, b, up) in &self.transitions {
+            if at > t {
+                break;
+            }
+            alive[b] = up;
+        }
+        alive
+    }
+
+    pub fn alive_count_at(&self, t: Ns) -> usize {
+        self.alive_at(t).into_iter().filter(|&a| a).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_and_display_round_trip() {
+        let plan: FaultPlan = "kill:1@5_000, rejoin:1@9000,kill:2@12000".parse().unwrap();
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.to_string(), "kill:1@5000,rejoin:1@9000,kill:2@12000");
+        let again: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(plan, again);
+        assert!("".parse::<FaultPlan>().unwrap().is_empty());
+        assert!("  ".parse::<FaultPlan>().unwrap().is_empty());
+    }
+
+    #[test]
+    fn plan_parse_rejects_malformed_specs() {
+        for bad in [
+            "kill",
+            "kill:1",
+            "kill:@100",
+            "kill:x@100",
+            "kill:1@",
+            "kill:1@abc",
+            "explode:1@100",
+            "kill:1@-5",
+        ] {
+            assert!(bad.parse::<FaultPlan>().is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn plan_events_sorted_by_time() {
+        let plan: FaultPlan = "kill:2@900,kill:0@100,kill:1@500".parse().unwrap();
+        let ats: Vec<u64> = plan.events().iter().map(|e| e.at).collect();
+        assert_eq!(ats, vec![100, 500, 900]);
+    }
+
+    #[test]
+    fn plan_validation() {
+        let ok: FaultPlan = "kill:0@100,rejoin:0@200,kill:0@300".parse().unwrap();
+        ok.validate(1).unwrap();
+        // Index out of range.
+        let oob: FaultPlan = "kill:3@100".parse().unwrap();
+        assert!(oob.validate(3).is_err());
+        oob.validate(4).unwrap();
+        // Rejoin before any kill.
+        let rj: FaultPlan = "rejoin:0@100".parse().unwrap();
+        assert!(rj.validate(1).is_err());
+        // Double kill.
+        let dk: FaultPlan = "kill:0@100,kill:0@200".parse().unwrap();
+        assert!(dk.validate(1).is_err());
+        // Equal times on one backup.
+        let eq = FaultPlan::new(vec![
+            FaultEvent {
+                at: 100,
+                backup: 0,
+                kind: FaultKind::Kill,
+            },
+            FaultEvent {
+                at: 100,
+                backup: 0,
+                kind: FaultKind::Rejoin,
+            },
+        ]);
+        assert!(eq.validate(1).is_err());
+        // Distinct backups may share instants.
+        let share: FaultPlan = "kill:0@100,kill:1@100".parse().unwrap();
+        share.validate(2).unwrap();
+    }
+
+    #[test]
+    fn on_loss_parse_and_display() {
+        assert_eq!("halt".parse::<OnLoss>().unwrap(), OnLoss::Halt);
+        assert_eq!("DEGRADE".parse::<OnLoss>().unwrap(), OnLoss::Degrade);
+        assert!("panic".parse::<OnLoss>().is_err());
+        for m in [OnLoss::Halt, OnLoss::Degrade] {
+            assert_eq!(m.to_string().parse::<OnLoss>().unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn effective_required_table() {
+        // Halt: all-or-nothing.
+        assert_eq!(effective_required(3, 3, OnLoss::Halt), 3);
+        assert_eq!(effective_required(3, 2, OnLoss::Halt), 0);
+        assert_eq!(effective_required(2, 2, OnLoss::Halt), 2);
+        assert_eq!(effective_required(2, 3, OnLoss::Halt), 2);
+        // Degrade: clamp to survivors; zero survivors still stalls.
+        assert_eq!(effective_required(3, 2, OnLoss::Degrade), 2);
+        assert_eq!(effective_required(2, 3, OnLoss::Degrade), 2);
+        assert_eq!(effective_required(3, 0, OnLoss::Degrade), 0);
+        assert_eq!(effective_required(1, 0, OnLoss::Degrade), 0);
+    }
+
+    #[test]
+    fn faults_config_default_is_empty_halt() {
+        let f = FaultsConfig::default();
+        assert!(f.plan.is_empty());
+        assert_eq!(f.on_loss, OnLoss::Halt);
+        f.validate(1).unwrap();
+    }
+
+    #[test]
+    fn timeline_alive_tracking() {
+        let tl = FaultTimeline::new(
+            3,
+            vec![(100, 1, false), (500, 1, true), (300, 2, false)],
+        );
+        assert_eq!(tl.alive_at(0), vec![true, true, true]);
+        assert_eq!(tl.alive_at(100), vec![true, false, true]);
+        assert_eq!(tl.alive_at(350), vec![true, false, false]);
+        assert_eq!(tl.alive_at(500), vec![true, true, false]);
+        assert_eq!(tl.alive_count_at(350), 1);
+        assert_eq!(tl.alive_count_at(10_000), 2);
+    }
+
+    #[test]
+    fn stall_renders_the_shortfall() {
+        let s = Stall {
+            at: 1234,
+            alive: 1,
+            required: 3,
+            policy: AckPolicy::All,
+            on_loss: OnLoss::Halt,
+        };
+        let text = s.to_string();
+        assert!(text.contains("t=1234"), "{text}");
+        assert!(text.contains("requires 3"), "{text}");
+        assert!(text.contains("only 1 alive"), "{text}");
+    }
+}

@@ -2,15 +2,22 @@
 //! stack, the remote (backup) NIC engine with its memory subsystem, the
 //! verb layer tying them together with the paper's §6.2 latency
 //! semantics, and the N-way replica-group [`Fabric`] with pluggable
-//! ack policies.
+//! ack policies and deterministic failure dynamics ([`faults`]): backups
+//! can be killed and rejoin mid-run, with catch-up resync and
+//! halt/degrade loss handling.
 
 pub mod fabric;
+pub mod faults;
 pub mod qp;
 pub mod rdma;
 pub mod remote;
 pub mod verbs;
 
 pub use fabric::{BackupStats, Fabric};
+pub use faults::{
+    effective_required, BackupState, FaultEvent, FaultKind, FaultPlan, FaultTimeline,
+    FaultsConfig, OnLoss, Stall,
+};
 pub use qp::LocalQp;
 pub use rdma::Rdma;
 pub use remote::RemoteEngine;

@@ -286,6 +286,36 @@ impl RemoteEngine {
         Some(meta)
     }
 
+    /// Install a failover catch-up stream from a peer: `events` (empty
+    /// when ledgers are off) are re-recorded as persisting at
+    /// `max(at, ev.at)` — the stream lands at `at`, but a line the source
+    /// itself only persists later cannot become durable here earlier than
+    /// there — and the write/persist counters advance by `lines` so group
+    /// accounting sees the transfer even without a ledger. Transactional
+    /// coordinates are preserved, so per-thread (txn, epoch, seq) order
+    /// survives the replay; only the durability instant moves.
+    pub fn absorb_resync(&mut self, events: &[DurEvent], lines: u64, at: Ns) {
+        for ev in events {
+            let stamped = at.max(ev.at);
+            self.ledger.record(DurEvent { at: stamped, ..*ev });
+            self.max_persist = self.max_persist.max(stamped);
+        }
+        self.writes += lines;
+        self.persists += lines;
+        if lines > 0 && events.is_empty() {
+            // Ledger-off sizing: no per-event instants to take a max over.
+            self.max_persist = self.max_persist.max(at);
+        }
+    }
+
+    /// Drop replicated-but-not-yet-persistent state (a killed backup's
+    /// dirty DDIO lines are volatile — exactly SM-RC's exposure; they do
+    /// not survive the crash and must not drain after a rejoin).
+    pub fn drop_volatile(&mut self) {
+        self.pending.clear();
+        self.pending_idx.clear();
+    }
+
     /// Number of replicated-but-not-yet-persistent lines (SM-RC exposure).
     pub fn pending_lines(&self) -> usize {
         self.pending.len()
@@ -425,6 +455,76 @@ mod tests {
         assert_eq!(e.ledger.len(), 1);
         assert_eq!(e.ledger.events()[0].addr, 0);
         assert_eq!(e.pending_lines(), 1);
+    }
+
+    #[test]
+    fn absorb_resync_replays_at_the_given_instant() {
+        let mut e = engine();
+        e.write_wt(0, 1000, meta(0x40, 0));
+        let before = e.persists;
+        let missed = [
+            DurEvent {
+                addr: 0x80,
+                val: 7,
+                at: 1234, // source-side instant: must be rewritten
+                thread: 0,
+                txn: 1,
+                epoch: 2,
+                seq: 1,
+            },
+            DurEvent {
+                addr: 0xc0,
+                val: 8,
+                at: 1300,
+                thread: 0,
+                txn: 1,
+                epoch: 2,
+                seq: 2,
+            },
+        ];
+        e.absorb_resync(&missed, 2, 50_000);
+        assert_eq!(e.persists, before + 2);
+        assert_eq!(e.ledger.len(), 3);
+        assert!(e
+            .ledger
+            .events()
+            .iter()
+            .filter(|ev| ev.seq >= 1)
+            .all(|ev| ev.at == 50_000));
+        assert_eq!(e.persist_horizon(), 50_000);
+        // An event the source only persists AFTER the stream completes
+        // keeps its later instant — no backdated durability.
+        let future = [DurEvent {
+            addr: 0x100,
+            val: 9,
+            at: 55_000,
+            thread: 0,
+            txn: 2,
+            epoch: 3,
+            seq: 3,
+        }];
+        e.absorb_resync(&future, 1, 50_000);
+        let late = e.ledger.events().iter().find(|ev| ev.seq == 3).unwrap();
+        assert_eq!(late.at, 55_000);
+        assert_eq!(e.persist_horizon(), 55_000);
+        // Blind (ledger-off style) absorption still moves the counters.
+        e.absorb_resync(&[], 3, 60_000);
+        assert_eq!(e.persists, before + 6);
+        assert_eq!(e.persist_horizon(), 60_000);
+    }
+
+    #[test]
+    fn drop_volatile_clears_pending_without_persisting() {
+        let mut e = engine();
+        e.write_ddio(0, 100, meta(0x40, 0));
+        e.write_ddio(1, 110, meta(0x80, 1));
+        assert_eq!(e.pending_lines(), 2);
+        e.drop_volatile();
+        assert_eq!(e.pending_lines(), 0);
+        assert_eq!(e.ledger.len(), 0, "volatile loss must not persist");
+        // A later rcommit has nothing stale to drain.
+        e.rcommit(0, 1_000, 0);
+        assert_eq!(e.ledger.len(), 0);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! thread is not.
 
 use crate::mem::DurabilityLog;
+use crate::net::{effective_required, FaultTimeline, OnLoss};
 use crate::txn::undo::rollback_plan;
 use crate::{Addr, Ns};
 use anyhow::{bail, Result};
@@ -174,31 +175,18 @@ pub fn check_group_crash(
     required: usize,
     crash_t: Ns,
 ) -> Result<usize> {
-    let n = ledgers.len();
-    if required == 0 || required > n {
-        bail!("required acks {required} invalid for a {n}-backup group");
-    }
-    let mut prefixes = Vec::with_capacity(n);
-    for (b, ledger) in ledgers.iter().enumerate() {
-        let k = best_prefix(ledger, history, log_bases, data_addrs, crash_t)
-            .map_err(|e| anyhow::anyhow!("backup {b}: {e}"))?;
-        prefixes.push(k);
-    }
-    // Adversary removes the `required - 1` most-advanced backups; the
-    // best surviving prefix must still cover everything durably acked.
-    prefixes.sort_unstable_by(|a, b| b.cmp(a)); // descending
-    let survivor_best = prefixes[required - 1];
-    let durable = history.durable_by(crash_t);
-    if survivor_best < durable {
-        bail!(
-            "group durability violated at crash t={crash_t}: {durable} txns \
-             durably acked, but after losing {} backups the best survivor \
-             holds only prefix {survivor_best} (per-backup prefixes, desc: \
-             {prefixes:?})",
-            required - 1
-        );
-    }
-    Ok(survivor_best)
+    // The static-membership check is the fault-aware check under an
+    // empty timeline: everyone is alive and `required` never degrades.
+    check_faulted_group_crash(
+        ledgers,
+        history,
+        log_bases,
+        data_addrs,
+        required,
+        OnLoss::Halt,
+        &FaultTimeline::new(ledgers.len(), Vec::new()),
+        crash_t,
+    )
 }
 
 /// Sweep crash instants across the union of all backup ledgers (every
@@ -212,16 +200,109 @@ pub fn check_group_crashes(
     data_addrs: &[Addr],
     required: usize,
 ) -> Result<u64> {
+    check_faulted_group_crashes(
+        ledgers,
+        history,
+        log_bases,
+        data_addrs,
+        required,
+        OnLoss::Halt,
+        &FaultTimeline::new(ledgers.len(), Vec::new()),
+    )
+}
+
+/// Fault-aware cross-replica consistency for one crash instant: only
+/// backups in the quorum at `crash_t` per the realized [`FaultTimeline`]
+/// can serve recovery — a backup that was dead (or still resyncing) when
+/// the crash hit is unavailable, and a dead-then-rejoined backup is
+/// acceptable even though its ledger prefix diverged during the outage
+/// (the catch-up resync replayed the missed suffix at its completion
+/// instant). Guarantee-1 is checked on every *survivor*; the group
+/// Guarantee-2 uses the loss-adjusted requirement: under
+/// [`OnLoss::Degrade`] fences issued while `d` backups were down were
+/// acked by only `required - d` survivors, so the adversary argument is
+/// run with `effective_required(required, alive_at_crash, on_loss)`.
+/// Returns the worst-case surviving prefix length.
+#[allow(clippy::too_many_arguments)]
+pub fn check_faulted_group_crash(
+    ledgers: &[&DurabilityLog],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    required: usize,
+    on_loss: OnLoss,
+    timeline: &FaultTimeline,
+    crash_t: Ns,
+) -> Result<usize> {
+    let n = ledgers.len();
+    if required == 0 || required > n {
+        bail!("required acks {required} invalid for a {n}-backup group");
+    }
+    if timeline.backups() != n {
+        bail!(
+            "timeline covers {} backups but the group has {n}",
+            timeline.backups()
+        );
+    }
+    let alive = timeline.alive_at(crash_t);
+    let mut prefixes = Vec::with_capacity(n);
+    for (b, ledger) in ledgers.iter().enumerate() {
+        if !alive[b] {
+            continue;
+        }
+        let k = best_prefix(ledger, history, log_bases, data_addrs, crash_t)
+            .map_err(|e| anyhow::anyhow!("backup {b}: {e}"))?;
+        prefixes.push(k);
+    }
+    let eff = effective_required(required, prefixes.len(), on_loss);
+    if eff == 0 {
+        bail!(
+            "no ack-satisfying survivor set at crash t={crash_t}: {} of {n} \
+             backups alive, policy requires {required} (on_loss = {on_loss})",
+            prefixes.len()
+        );
+    }
+    prefixes.sort_unstable_by(|a, b| b.cmp(a)); // descending
+    let survivor_best = prefixes[eff - 1];
+    let durable = history.durable_by(crash_t);
+    if survivor_best < durable {
+        bail!(
+            "group durability violated at crash t={crash_t}: {durable} txns \
+             durably acked, but after losing {} further backups the best \
+             survivor holds only prefix {survivor_best} (survivor prefixes, \
+             desc: {prefixes:?})",
+            eff - 1
+        );
+    }
+    Ok(survivor_best)
+}
+
+/// Sweep crash instants (union of all ledger event times, midpoints, and
+/// boundaries — including each timeline transition) through
+/// [`check_faulted_group_crash`]. Returns the number of crash points
+/// verified.
+pub fn check_faulted_group_crashes(
+    ledgers: &[&DurabilityLog],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    required: usize,
+    on_loss: OnLoss,
+    timeline: &FaultTimeline,
+) -> Result<u64> {
     let mut times: Vec<Ns> = ledgers
         .iter()
         .flat_map(|l| l.events().iter().map(|e| e.at))
+        .chain(timeline.transitions().iter().map(|t| t.0))
         .collect();
     times.sort_unstable();
     times.dedup();
     let mut checked = 0u64;
     let sample = |t: Ns| -> Result<()> {
-        check_group_crash(ledgers, history, log_bases, data_addrs, required, t)
-            .map(|_| ())
+        check_faulted_group_crash(
+            ledgers, history, log_bases, data_addrs, required, on_loss, timeline, t,
+        )
+        .map(|_| ())
     };
     sample(0)?;
     checked += 1;
@@ -434,6 +515,214 @@ mod tests {
         let l = &m.backup(0).ledger;
         assert!(check_group_crash(&[l], &hist, &[LOG], &[D0, D1], 0, 0).is_err());
         assert!(check_group_crash(&[l], &hist, &[LOG], &[D0, D1], 2, 0).is_err());
+    }
+
+    #[test]
+    fn empty_ledgers_with_empty_history_pass() {
+        // A group that never wrote anything: every backup trivially holds
+        // prefix 0, and nothing was durably acked.
+        let hist = TxnHistory::new(HashMap::new());
+        let a = DurabilityLog::new(true);
+        let b = DurabilityLog::new(true);
+        for required in [1usize, 2] {
+            let k = check_group_crash(&[&a, &b], &hist, &[LOG], &[D0, D1], required, 0)
+                .unwrap();
+            assert_eq!(k, 0);
+            let k = check_group_crash(
+                &[&a, &b],
+                &hist,
+                &[LOG],
+                &[D0, D1],
+                required,
+                1_000_000,
+            )
+            .unwrap();
+            assert_eq!(k, 0);
+        }
+        // But an empty ledger cannot cover a durably-acked transaction.
+        let (_m, hist) = run_workload(StrategyKind::SmOb, 1);
+        let crash = hist.dfences[0]; // txn 0 is durable by here
+        assert!(check_group_crash(
+            &[&a, &b],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            1,
+            crash
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn all_backups_dead_is_a_checked_error() {
+        use crate::net::FaultTimeline;
+        let (m, hist) = run_workload(StrategyKind::SmOb, 2);
+        let ledger = &m.backup(0).ledger;
+        let crash = ledger.horizon();
+        // Both backups killed before the crash: no survivor can serve.
+        let tl = FaultTimeline::new(2, vec![(10, 0, false), (20, 1, false)]);
+        let err = check_faulted_group_crash(
+            &[ledger, ledger],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            1,
+            OnLoss::Degrade,
+            &tl,
+            crash,
+        );
+        assert!(err.is_err(), "zero survivors must fail even in degrade");
+        // Before the kills the same group passes.
+        check_faulted_group_crash(
+            &[ledger, ledger],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            1,
+            OnLoss::Degrade,
+            &tl,
+            5,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn faulted_check_excludes_dead_backups_from_the_survivor_set() {
+        use crate::net::FaultTimeline;
+        // Backup 1 is empty (it missed everything) but is also dead at
+        // the crash: the timeline-aware check must not count it, so the
+        // full survivor carries the group under degrade.
+        let (m, hist) = run_workload(StrategyKind::SmOb, 2);
+        let full = &m.backup(0).ledger;
+        let empty = DurabilityLog::new(true);
+        let crash = full.horizon();
+        let tl = FaultTimeline::new(2, vec![(0, 1, false)]);
+        // Static required = 2 (All): degrade clamps to the one survivor.
+        check_faulted_group_crash(
+            &[full, &empty],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            2,
+            OnLoss::Degrade,
+            &tl,
+            crash,
+        )
+        .expect("degrade must recover from the surviving backup");
+        // Halt refuses: 1 survivor < required 2.
+        assert!(check_faulted_group_crash(
+            &[full, &empty],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            2,
+            OnLoss::Halt,
+            &tl,
+            crash,
+        )
+        .is_err());
+        // A timeline of the wrong width is rejected.
+        assert!(check_faulted_group_crash(
+            &[full, &empty],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            1,
+            OnLoss::Halt,
+            &FaultTimeline::new(3, Vec::new()),
+            crash,
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn duplicate_epoch_ties_are_tolerated() {
+        use crate::mem::DurEvent;
+        // Two backups whose ledgers carry duplicate (txn, epoch) entries
+        // persisting at identical instants — e.g. the same line written
+        // twice in one epoch, landing in the same MC slot — must not
+        // confuse the group check: image reconstruction breaks ties by
+        // issue sequence.
+        let mut hist = TxnHistory::new(HashMap::new());
+        let mut snap = HashMap::new();
+        snap.insert(D0, 2u64);
+        hist.commit(snap, 100);
+        let mk = || {
+            let mut l = DurabilityLog::new(true);
+            l.record(DurEvent {
+                addr: D0,
+                val: 1,
+                at: 100,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: 0,
+            });
+            l.record(DurEvent {
+                addr: D0,
+                val: 2,
+                at: 100, // duplicate (txn, epoch) at the same instant
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: 1,
+            });
+            l
+        };
+        let a = mk();
+        let b = mk();
+        check_group_epoch_ordering(&[&a, &b]).unwrap();
+        for required in [1usize, 2] {
+            let k =
+                check_group_crash(&[&a, &b], &hist, &[], &[D0], required, 100).unwrap();
+            assert_eq!(k, 1, "required {required}");
+        }
+        // Before the tie instant nothing is durable yet.
+        let k = check_group_crash(&[&a, &b], &hist, &[], &[D0], 2, 99).unwrap();
+        assert_eq!(k, 0);
+    }
+
+    #[test]
+    fn rejoined_backup_with_replayed_suffix_passes_group_checks() {
+        use crate::mem::DurEvent;
+        // Simulate a dead-then-rejoined ledger: backup B misses txn 1's
+        // writes and receives them replayed at the resync completion
+        // instant (later than the source's persist times, identical
+        // coordinates). The faulted check must accept the divergence.
+        use crate::net::FaultTimeline;
+        let (m, hist) = run_workload(StrategyKind::SmOb, 2);
+        let full = &m.backup(0).ledger;
+        let horizon = full.horizon();
+        let kill_at = hist.dfences[0]; // dies right after txn 0 acked
+        let ready_at = horizon + 50_000; // resync completes post-run
+        let mut rejoined = DurabilityLog::new(true);
+        for ev in full.events() {
+            if ev.at <= kill_at {
+                rejoined.record(*ev);
+            } else {
+                rejoined.record(DurEvent {
+                    at: ready_at,
+                    ..*ev
+                });
+            }
+        }
+        check_epoch_ordering(&rejoined).unwrap();
+        let tl = FaultTimeline::new(
+            2,
+            vec![(kill_at, 1, false), (ready_at, 1, true)],
+        );
+        // Sweep the whole run including the outage window and the
+        // post-resync instant.
+        check_faulted_group_crashes(
+            &[full, &rejoined],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            2,
+            OnLoss::Degrade,
+            &tl,
+        )
+        .expect("dead-then-rejoined ledger must be accepted");
     }
 
     #[test]

@@ -86,6 +86,7 @@ impl Strategy for SmDd {
 mod tests {
     use super::*;
     use crate::config::{AckPolicy, Platform, ReplicationConfig};
+    use crate::net::{FaultsConfig, OnLoss};
 
     fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
         WriteMeta {
@@ -184,6 +185,56 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Every strategy's verb pattern must tolerate a dead backup: the
+    /// survivors get the full stream, the corpse gets nothing, and the
+    /// durability fence still completes under a tolerated loss.
+    #[test]
+    fn strategies_skip_dead_backups() {
+        for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
+            let kind = s.kind();
+            let p = Platform::default();
+            let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+            let faults = FaultsConfig::with_plan("kill:2@0", OnLoss::Halt).unwrap();
+            let mut f = Fabric::with_faults(&p, &repl, faults, true);
+            let mut t = ThreadClock::new(0);
+            for epoch in 0..3u32 {
+                s.on_clwb(
+                    &mut f,
+                    &mut t,
+                    meta(0x40 * (1 + epoch as u64), epoch, epoch as u64),
+                );
+                s.on_ofence(&mut f, &mut t);
+            }
+            s.on_dfence(&mut f, &mut t);
+            assert!(f.stall().is_none(), "{kind}: quorum:2 tolerates one loss");
+            assert!(t.now >= 2600, "{kind}: fence must still pay the RTT");
+            for b in 0..2 {
+                assert_eq!(f.backup(b).ledger.len(), 3, "{kind} survivor {b}");
+            }
+            assert_eq!(f.backup(2).ledger.len(), 0, "{kind}: dead backup wrote");
+        }
+    }
+
+    /// `all` + `halt`: every strategy's durability point stops at the
+    /// kill instead of reporting a weakened ack as durable.
+    #[test]
+    fn strategies_stall_on_intolerable_loss_under_halt() {
+        for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
+            let kind = s.kind();
+            let p = Platform::default();
+            let repl = ReplicationConfig::new(2, AckPolicy::All);
+            let faults = FaultsConfig::with_plan("kill:0@0", OnLoss::Halt).unwrap();
+            let mut f = Fabric::with_faults(&p, &repl, faults, true);
+            let mut t = ThreadClock::new(0);
+            s.on_clwb(&mut f, &mut t, meta(0x40, 0, 0));
+            s.on_ofence(&mut f, &mut t);
+            s.on_dfence(&mut f, &mut t);
+            let stall = f.stall().unwrap_or_else(|| panic!("{kind}: must stall"));
+            assert_eq!(stall.alive, 1, "{kind}");
+            assert_eq!(stall.required, 2, "{kind}");
         }
     }
 

@@ -98,6 +98,21 @@ pub fn run_transact_with(
     Ok(run_transact_on(&mut mirror, cfg))
 }
 
+/// Run Transact against a replica group under a fault plan (runtime
+/// backup kills/rejoins — see [`crate::net::faults`]). A halt-mode run
+/// that loses more backups than the ack policy tolerates stops at the
+/// kill point and reports it in [`RunOutcome::stalled`].
+pub fn run_transact_faulted(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    faults: crate::net::FaultsConfig,
+    cfg: TransactConfig,
+) -> Result<RunOutcome> {
+    let mut mirror = Mirror::try_build_faulted(plat.clone(), kind, None, repl, faults, false)?;
+    Ok(run_transact_on(&mut mirror, cfg))
+}
+
 /// Run Transact on a caller-built mirror (exposes the fabric for
 /// replica-group metrics afterwards).
 pub fn run_transact_on(mirror: &mut Mirror, cfg: TransactConfig) -> RunOutcome {
@@ -236,6 +251,54 @@ mod tests {
             cfg,
         )
         .is_err());
+    }
+
+    #[test]
+    fn faulted_run_degrades_or_stalls() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::net::{FaultsConfig, OnLoss};
+        let p = Platform::default();
+        let cfg = small(4, 1);
+        let repl = ReplicationConfig::new(3, AckPolicy::All);
+        // Empty plan: identical to the fault-free group path (anchor).
+        let clean = run_transact_with(&p, StrategyKind::SmOb, None, repl, cfg)
+            .unwrap()
+            .makespan;
+        let empty = run_transact_faulted(
+            &p,
+            StrategyKind::SmOb,
+            repl,
+            FaultsConfig::default(),
+            cfg,
+        )
+        .unwrap();
+        assert_eq!(empty.makespan, clean, "empty fault plan must be a no-op");
+        assert!(empty.stalled.is_none());
+        // Kill one backup mid-run: degrade completes, halt stops early.
+        let kill_at = clean / 2;
+        let mk = |mode| FaultsConfig::with_plan(&format!("kill:1@{kill_at}"), mode).unwrap();
+        let degraded = run_transact_faulted(
+            &p,
+            StrategyKind::SmOb,
+            repl,
+            mk(OnLoss::Degrade),
+            cfg,
+        )
+        .unwrap();
+        assert!(degraded.stalled.is_none());
+        assert_eq!(degraded.txns, cfg.txns);
+        assert!(degraded.per_backup_dead_ns[1] > 0);
+        let halted = run_transact_faulted(
+            &p,
+            StrategyKind::SmOb,
+            repl,
+            mk(OnLoss::Halt),
+            cfg,
+        )
+        .unwrap();
+        let stall = halted.stalled.expect("all + halt must stall");
+        assert!(stall.at >= kill_at);
+        assert!(halted.txns < cfg.txns, "halted run must stop early");
     }
 
     #[test]

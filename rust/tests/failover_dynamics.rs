@@ -1,0 +1,289 @@
+//! Failover & rejoin dynamics, end to end: the fault matrix (kill each
+//! backup index at early/mid/late points under every ack policy),
+//! halt-mode stalls at the kill point, catch-up resync of a rejoining
+//! backup, and the recovery edge cases that only appear with dynamic
+//! membership.
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, ThreadCtx};
+use pmsm::net::{BackupState, FaultsConfig, OnLoss};
+use pmsm::pstore::log_base_for;
+use pmsm::recovery::{
+    check_faulted_group_crashes, check_group_crashes, check_group_epoch_ordering,
+    TxnHistory,
+};
+use pmsm::txn::Txn;
+use std::collections::HashMap;
+
+const D0: u64 = 0x7000_0000;
+const D1: u64 = 0x7000_0040;
+
+fn faults(plan: &str, on_loss: OnLoss) -> FaultsConfig {
+    FaultsConfig::with_plan(plan, on_loss).expect("valid plan")
+}
+
+fn build(policy: AckPolicy, f: FaultsConfig) -> Mirror {
+    Mirror::try_build_faulted(
+        Platform::default(),
+        StrategyKind::SmOb,
+        None,
+        ReplicationConfig::new(3, policy),
+        f,
+        true,
+    )
+    .expect("valid build")
+}
+
+/// Drive `n` two-write txns, recording history; stops early (returning
+/// the partial history) if the fabric stalls.
+fn drive_txns(m: &mut Mirror, t: &mut ThreadCtx, n: u64) -> TxnHistory {
+    let log = log_base_for(0);
+    let mut hist = TxnHistory::new(HashMap::new());
+    for i in 0..n {
+        let mut tx = Txn::begin(m, t, log, None);
+        tx.write(m, t, D0, 100 + i);
+        tx.write(m, t, D1, 200 + i);
+        tx.commit(m, t);
+        if m.fabric.stall().is_some() {
+            break;
+        }
+        let mut snap = HashMap::new();
+        snap.insert(D0, 100 + i);
+        snap.insert(D1, 200 + i);
+        hist.commit(snap, t.last_dfence);
+    }
+    hist
+}
+
+/// Fault-free span of the standard workload, used to place kill points.
+fn baseline_span(n: u64) -> u64 {
+    let mut m = build(AckPolicy::All, FaultsConfig::default());
+    let mut t = ThreadCtx::new(0);
+    drive_txns(&mut m, &mut t, n);
+    t.now()
+}
+
+/// The fault matrix: kill each backup index at an early/mid/late point
+/// under each ack policy, run to completion in degrade mode, then check
+/// recovery from the *surviving* ledgers with the policy's static
+/// requirement — it must succeed exactly when enough replicas survive
+/// (quorum:2 / majority of 3 → 2 survivors suffice) and return a checked
+/// error otherwise (all → 3 required, only 2 survive).
+#[test]
+fn fault_matrix_kill_each_backup_each_phase() {
+    const TXNS: u64 = 6;
+    let span = baseline_span(TXNS);
+    let log = log_base_for(0);
+    for policy in [AckPolicy::All, AckPolicy::Majority, AckPolicy::Quorum(2)] {
+        let required = ReplicationConfig::new(3, policy).required();
+        for victim in 0..3usize {
+            for (num, den) in [(1u64, 8u64), (1, 2), (7, 8)] {
+                let kill_at = span * num / den;
+                let mut m = build(
+                    policy,
+                    faults(&format!("kill:{victim}@{kill_at}"), OnLoss::Degrade),
+                );
+                let mut t = ThreadCtx::new(0);
+                let hist = drive_txns(&mut m, &mut t, TXNS);
+                assert!(
+                    m.fabric.stall().is_none(),
+                    "{policy}/kill {victim}@{num}/{den}: degrade must not stall"
+                );
+                assert_eq!(
+                    hist.committed(),
+                    TXNS as usize,
+                    "{policy}/kill {victim}@{num}/{den}: run must complete"
+                );
+                m.fabric.settle(t.now());
+                let ledgers = m.fabric.ledgers();
+                check_group_epoch_ordering(&ledgers).unwrap();
+                let survivors: Vec<_> = (0..3)
+                    .filter(|&b| b != victim)
+                    .map(|b| ledgers[b])
+                    .collect();
+                let result = check_group_crashes(
+                    &survivors,
+                    &hist,
+                    &[log],
+                    &[D0, D1],
+                    required,
+                );
+                if required <= survivors.len() {
+                    let checked = result.unwrap_or_else(|e| {
+                        panic!("{policy}/kill {victim}@{num}/{den}: {e}")
+                    });
+                    assert!(checked > 10, "{policy}: only {checked} crash points");
+                } else {
+                    assert!(
+                        result.is_err(),
+                        "{policy}/kill {victim}@{num}/{den}: {required} required \
+                         but only {} survive — must be a checked error",
+                        survivors.len()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance scenario, halt side: `backups = 3, ack = all, on_loss =
+/// halt` with a mid-run kill stops at the kill point with a reported
+/// stall; the exact same run under `quorum:2` completes and recovers
+/// from the two survivors via the fault-aware sweep.
+#[test]
+fn halt_stops_at_kill_point_quorum_completes() {
+    const TXNS: u64 = 6;
+    let span = baseline_span(TXNS);
+    let kill_at = span / 2;
+    let plan = format!("kill:1@{kill_at}");
+
+    // all + halt: stall at the kill point.
+    let mut m = build(AckPolicy::All, faults(&plan, OnLoss::Halt));
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, TXNS);
+    let stall = *m.fabric.stall().expect("all + halt must stall");
+    assert!(stall.at >= kill_at, "stalled at {} before the kill", stall.at);
+    assert_eq!(stall.required, 3);
+    assert_eq!(stall.alive, 2);
+    assert!(
+        (hist.committed() as u64) < TXNS,
+        "the halted run must abandon transactions"
+    );
+    // Every transaction acked before the stall is durable on EVERY
+    // backup (the all-policy never weakened).
+    let ledgers = m.fabric.ledgers();
+    check_group_crashes(&ledgers, &hist, &[log_base_for(0)], &[D0, D1], 3)
+        .expect("acked prefix must be fully replicated");
+
+    // quorum:2 + halt: completes and recovers from the survivors.
+    let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Halt));
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, TXNS);
+    assert!(m.fabric.stall().is_none(), "quorum:2 tolerates one loss");
+    assert_eq!(hist.committed(), TXNS as usize);
+    m.fabric.settle(t.now());
+    let checked = check_faulted_group_crashes(
+        &m.fabric.ledgers(),
+        &hist,
+        &[log_base_for(0)],
+        &[D0, D1],
+        2,
+        OnLoss::Halt,
+        &m.fabric.timeline(),
+    )
+    .expect("two survivors satisfy quorum:2");
+    assert!(checked > 10);
+}
+
+/// A killed backup that rejoins resyncs the missed suffix from a peer
+/// and re-enters the quorum: ledgers converge, the epoch invariant holds
+/// on the replayed ledger, and the fault-aware sweep accepts the
+/// diverged-then-healed prefix across the outage window.
+#[test]
+fn rejoin_resyncs_and_reenters_quorum() {
+    const TXNS: u64 = 10;
+    let span = baseline_span(TXNS);
+    let kill_at = span / 4;
+    let rejoin_at = span / 2;
+    let plan = format!("kill:2@{kill_at},rejoin:2@{rejoin_at}");
+    let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Halt));
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, TXNS);
+    assert!(m.fabric.stall().is_none());
+    assert_eq!(hist.committed(), TXNS as usize);
+    // Settle beyond any pending resync completion so the backup is back.
+    m.fabric.settle(t.now().max(rejoin_at + 10_000_000));
+    assert_eq!(m.fabric.state(2), BackupState::Alive, "must re-enter");
+    let stats = m.fabric.backup_stats();
+    assert_eq!(stats[2].resyncs, 1);
+    assert!(stats[2].resync_lines > 0, "missed suffix must be streamed");
+    assert!(stats[2].dead_ns > 0);
+    assert!(stats[2].last_handoff_ns >= m.fabric.faults().handoff_ns);
+    assert_eq!(stats[0].resyncs, 0);
+    // Ledgers converge to the same event count.
+    let ledgers = m.fabric.ledgers();
+    assert_eq!(ledgers[2].len(), ledgers[0].len(), "resync must close the gap");
+    check_group_epoch_ordering(&ledgers).unwrap();
+    let checked = check_faulted_group_crashes(
+        &ledgers,
+        &hist,
+        &[log_base_for(0)],
+        &[D0, D1],
+        2,
+        OnLoss::Halt,
+        &m.fabric.timeline(),
+    )
+    .expect("dead-then-rejoined ledger must pass the fault-aware sweep");
+    assert!(checked > 10);
+    // The timeline recorded the whole round trip: down, then up again.
+    let tl = m.fabric.timeline();
+    assert_eq!(tl.alive_count_at(kill_at), 2);
+    assert_eq!(tl.alive_count_at(u64::MAX), 3);
+}
+
+/// Edge case: a backup that dies and rejoins before the first write has
+/// nothing to resync; the run is indistinguishable from fault-free.
+#[test]
+fn rejoin_before_any_write_is_a_noop_resync() {
+    let mut f = faults("kill:1@0,rejoin:1@1", OnLoss::Halt);
+    f.handoff_ns = 5; // the resync window closes before the first write
+    let mut m = build(AckPolicy::All, f);
+    let mut t = ThreadCtx::new(0);
+    // Idle past the resync window before touching PM.
+    m.compute(&mut t, 1_000);
+    let hist = drive_txns(&mut m, &mut t, 3);
+    assert!(m.fabric.stall().is_none(), "backup is back before any write");
+    assert_eq!(hist.committed(), 3);
+    assert_eq!(m.fabric.state(1), BackupState::Alive);
+    let stats = m.fabric.backup_stats();
+    assert_eq!(stats[1].resync_lines, 0, "nothing to stream");
+    assert_eq!(stats[1].resyncs, 1);
+    // All three ledgers identical: the outage predates every write.
+    let ledgers = m.fabric.ledgers();
+    assert_eq!(ledgers[1].len(), ledgers[0].len());
+    check_group_crashes(&ledgers, &hist, &[log_base_for(0)], &[D0, D1], 3)
+        .expect("full group durability holds");
+}
+
+/// Edge case: killing every backup stalls even in degrade mode — a
+/// fully dead group can never ack a durability fence.
+#[test]
+fn all_backups_dead_stalls_in_any_mode() {
+    for mode in [OnLoss::Halt, OnLoss::Degrade] {
+        let mut m = build(
+            AckPolicy::Quorum(1),
+            faults("kill:0@0,kill:1@0,kill:2@0", mode),
+        );
+        let mut t = ThreadCtx::new(0);
+        let hist = drive_txns(&mut m, &mut t, 3);
+        let stall = m.fabric.stall().unwrap_or_else(|| panic!("{mode}: no stall"));
+        assert_eq!(stall.alive, 0, "{mode}");
+        assert_eq!(hist.committed(), 0, "{mode}: nothing durably acked");
+    }
+}
+
+/// A degraded `all` group keeps group durability on the survivors: after
+/// the kill the fence covers both remaining backups, so recovery with
+/// the loss-adjusted requirement passes across the whole run.
+#[test]
+fn degraded_all_keeps_survivor_durability() {
+    const TXNS: u64 = 6;
+    let span = baseline_span(TXNS);
+    let plan = format!("kill:0@{}", span / 3);
+    let mut m = build(AckPolicy::All, faults(&plan, OnLoss::Degrade));
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, TXNS);
+    assert_eq!(hist.committed(), TXNS as usize);
+    m.fabric.settle(t.now());
+    let checked = check_faulted_group_crashes(
+        &m.fabric.ledgers(),
+        &hist,
+        &[log_base_for(0)],
+        &[D0, D1],
+        3,
+        OnLoss::Degrade,
+        &m.fabric.timeline(),
+    )
+    .expect("degraded all must still cover the survivors");
+    assert!(checked > 10);
+}

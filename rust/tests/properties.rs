@@ -184,6 +184,152 @@ fn prop_transact_slowdown_ordering_random_platforms() {
 }
 
 #[test]
+fn prop_fault_policy_completion_ordering() {
+    // For random write streams and random kill plans (degrade mode, so
+    // every run completes), group completion time is monotone in the ack
+    // requirement: quorum:1 <= quorum:2 = majority-of-3 <= all.
+    use pmsm::config::{AckPolicy, ReplicationConfig};
+    use pmsm::net::{FaultsConfig, OnLoss};
+    use pmsm::workloads::transact::run_transact_faulted;
+    check("fault-policy-ordering", 8, |g| {
+        let cfg = pmsm::workloads::TransactConfig {
+            epochs: g.u64(2, 6) as u32,
+            writes: g.u64(1, 3) as u32,
+            txns: 25,
+            ..Default::default()
+        };
+        let p = Platform::default();
+        // Place a kill (and sometimes a rejoin) inside the fault-free span.
+        let span = run_transact_faulted(
+            &p,
+            StrategyKind::SmOb,
+            ReplicationConfig::new(3, AckPolicy::All),
+            FaultsConfig::default(),
+            cfg,
+        )
+        .unwrap()
+        .makespan;
+        let victim = g.usize(0, 2);
+        let kill_at = g.u64(span / 10, span);
+        let plan = if g.bool() {
+            format!("kill:{victim}@{kill_at},rejoin:{victim}@{}", kill_at + span / 4)
+        } else {
+            format!("kill:{victim}@{kill_at}")
+        };
+        let mk = |policy| {
+            let out = run_transact_faulted(
+                &p,
+                StrategyKind::SmOb,
+                ReplicationConfig::new(3, policy),
+                FaultsConfig::with_plan(&plan, OnLoss::Degrade).unwrap(),
+                cfg,
+            )
+            .unwrap();
+            assert!(out.stalled.is_none(), "degrade must complete ({plan})");
+            assert_eq!(out.txns, cfg.txns);
+            out.makespan
+        };
+        let q1 = mk(AckPolicy::Quorum(1)) as f64;
+        let q2 = mk(AckPolicy::Quorum(2)) as f64;
+        let maj = mk(AckPolicy::Majority) as f64;
+        let all = mk(AckPolicy::All) as f64;
+        // Tiny slack absorbs sub-RTT modeling noise, as in the
+        // strategy-ordering property above.
+        assert!(q1 <= q2 * 1.001, "quorum:1 {q1} > quorum:2 {q2} ({plan})");
+        assert_eq!(q2, maj, "quorum:2 {q2} != majority {maj} at 3 backups");
+        assert!(q2 <= all * 1.001, "quorum:2 {q2} > all {all} ({plan})");
+    });
+}
+
+#[test]
+fn prop_surviving_ledgers_recover_a_committed_prefix() {
+    // For random write streams and kill plans, every surviving backup's
+    // recovered image is some committed prefix of the primary's history
+    // (never ahead of the primary's persist horizon), and once every
+    // ledger has drained, some survivor holds the full durable prefix.
+    use pmsm::config::{AckPolicy, ReplicationConfig};
+    use pmsm::net::{FaultsConfig, OnLoss};
+    check("survivor-prefix", 10, |g| {
+        let kind = strategy_of(g);
+        let txns = g.u64(2, 5);
+        let log = log_base_for(0);
+        let addrs: Vec<u64> = (0..3).map(|i| 0x5000_0000 + i * 64).collect();
+        let drive = |m: &mut Mirror| -> (TxnHistory, u64) {
+            let mut t = ThreadCtx::new(0);
+            let mut hist = TxnHistory::new(HashMap::new());
+            let mut img: HashMap<u64, u64> = HashMap::new();
+            for i in 0..txns {
+                let mut tx = Txn::begin(m, &mut t, log, None);
+                for k in 0..2u64 {
+                    let a = addrs[((i + k) % 3) as usize];
+                    let v = i * 10 + k;
+                    tx.write(m, &mut t, a, v);
+                    img.insert(a, v);
+                }
+                tx.commit(m, &mut t);
+                if m.fabric.stall().is_some() {
+                    break;
+                }
+                hist.commit(img.clone(), t.last_dfence);
+            }
+            (hist, t.now())
+        };
+        // Fault-free dry run places the kill.
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(1));
+        let mut dry = Mirror::with_replication(Platform::default(), kind, repl, true).unwrap();
+        let (_, span) = drive(&mut dry);
+        let victim = g.usize(0, 2);
+        let kill_at = g.u64(1, span.max(2) - 1);
+        let faults =
+            FaultsConfig::with_plan(&format!("kill:{victim}@{kill_at}"), OnLoss::Degrade)
+                .unwrap();
+        let mut m = Mirror::try_build_faulted(
+            Platform::default(),
+            kind,
+            None,
+            repl,
+            faults,
+            true,
+        )
+        .unwrap();
+        let (hist, end) = drive(&mut m);
+        m.fabric.settle(end);
+        let timeline = m.fabric.timeline();
+        let ledgers = m.fabric.ledgers();
+        // Crash horizon at which every surviving ledger has drained.
+        let horizon = ledgers.iter().map(|l| l.horizon()).max().unwrap_or(0);
+        let alive = timeline.alive_at(horizon);
+        let mut best = 0usize;
+        for (b, ledger) in ledgers.iter().enumerate() {
+            if !alive[b] {
+                continue;
+            }
+            // Guarantee-1 on every survivor, at random instants and at
+            // the drained horizon; never ahead of the primary's history.
+            for t in [g.u64(0, horizon.max(1)), horizon] {
+                let k = recovery::best_prefix(ledger, &hist, &[log], &addrs, t)
+                    .unwrap_or_else(|e| panic!("{kind:?} backup {b}: {e}"));
+                assert!(
+                    k <= hist.committed(),
+                    "{kind:?} backup {b}: prefix {k} ahead of primary ({})",
+                    hist.committed()
+                );
+                if t == horizon {
+                    best = best.max(k);
+                }
+            }
+        }
+        // The two never-killed backups received the full stream, so the
+        // best drained survivor holds every durably-acked transaction.
+        assert!(
+            best >= hist.durable_by(horizon),
+            "{kind:?}: best survivor prefix {best} < durable {}",
+            hist.durable_by(horizon)
+        );
+    });
+}
+
+#[test]
 fn prop_ledger_image_respects_crash_time() {
     check("ledger-image", 60, |g| {
         use pmsm::mem::{DurEvent, DurabilityLog};
