@@ -109,14 +109,14 @@ fn main() {
             img.insert(a, 1000 + i);
             hist.commit(img.clone(), t.last_dfence);
         }
-        let ledgers = m.fabric.ledgers();
+        let ledgers = m.fabric().ledgers();
         let checked =
             check_group_crashes(&ledgers, &hist, &[log], &accounts, repl.required())
                 .expect("group durability");
         // Injected failure: drop each backup in turn; the best survivor
         // must keep every acked txn. Only unacked txns may be lost
         // relative to a no-failure recovery — track that depth.
-        let horizon = m.fabric.group_horizon();
+        let horizon = m.fabric().group_horizon();
         let mut worst_unacked_loss = 0usize;
         for crash in (0..=horizon).step_by((horizon as usize / 16).max(1)) {
             let durable = hist.durable_by(crash);

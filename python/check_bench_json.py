@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Schema / sanity checker for the BENCH_*.json artifacts the fig*
+benches emit (see rust/src/bench.rs and rust/src/util/json.rs).
+
+CI's bench-smoke job runs every bench with PMSM_BENCH_JSON_DIR pointed
+at a scratch directory and then fails the build if any artifact is
+missing, malformed, or carries non-finite / negative numbers — so perf
+regressions in the fan-out hot path surface per-PR instead of rotting
+in stdout.
+
+Usage:
+    python3 python/check_bench_json.py DIR_OR_FILE [...]
+        [--expect name1,name2,...]
+
+Exit code 0 when every document passes; 1 otherwise, with one line per
+problem. --expect asserts that BENCH_<name>.json exists for each listed
+bench (catching a bench that silently failed to emit).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+# Must match rust/src/util/json.rs::SCHEMA_VERSION.
+SCHEMA_VERSION = 1
+
+REQUIRED_RESULT_KEYS = ("name", "iters", "mean_ns", "stddev_ns", "min_ns")
+OPTIONAL_NUMBER_KEYS = ("elems_per_iter", "elems_per_sec")
+
+
+def _is_finite_number(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool) and math.isfinite(x)
+
+
+def check_result(doc_name: str, i: int, result) -> list[str]:
+    errors = []
+    where = f"{doc_name}: results[{i}]"
+    if not isinstance(result, dict):
+        return [f"{where}: not an object"]
+    for key in REQUIRED_RESULT_KEYS:
+        if key not in result:
+            errors.append(f"{where}: missing key {key!r}")
+    name = result.get("name")
+    if "name" in result and (not isinstance(name, str) or not name):
+        errors.append(f"{where}: name must be a nonempty string, got {name!r}")
+    iters = result.get("iters")
+    if "iters" in result and (not isinstance(iters, int) or isinstance(iters, bool) or iters <= 0):
+        errors.append(f"{where}: iters must be a positive integer, got {iters!r}")
+    for key in ("mean_ns", "stddev_ns", "min_ns"):
+        if key not in result:
+            continue
+        v = result[key]
+        if not _is_finite_number(v) or v < 0:
+            errors.append(f"{where}: {key} must be a finite number >= 0, got {v!r}")
+    for key in OPTIONAL_NUMBER_KEYS:
+        v = result.get(key)
+        if v is not None and (not _is_finite_number(v) or v < 0):
+            errors.append(f"{where}: {key} must be null or a finite number >= 0, got {v!r}")
+    return errors
+
+
+def check_document(path: Path) -> list[str]:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or invalid JSON: {e}"]
+    errors = []
+    if not isinstance(doc, dict):
+        return [f"{path}: top level must be an object"]
+    version = doc.get("schema_version")
+    if version != SCHEMA_VERSION:
+        errors.append(
+            f"{path}: schema_version must be {SCHEMA_VERSION}, got {version!r}"
+        )
+    bench = doc.get("bench")
+    if not isinstance(bench, str) or not bench:
+        errors.append(f"{path}: bench must be a nonempty string, got {bench!r}")
+    elif path.name != f"BENCH_{bench}.json":
+        errors.append(f"{path}: bench {bench!r} does not match the file name")
+    results = doc.get("results")
+    if not isinstance(results, list):
+        errors.append(f"{path}: results must be a list, got {type(results).__name__}")
+    elif not results:
+        errors.append(f"{path}: results is empty — the bench measured nothing")
+    else:
+        for i, result in enumerate(results):
+            errors.extend(check_result(str(path), i, result))
+    return errors
+
+
+def collect(paths: list[str]) -> list[Path]:
+    files: list[Path] = []
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            files.extend(sorted(p.glob("BENCH_*.json")))
+        else:
+            files.append(p)
+    return files
+
+
+def main(argv: list[str]) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("paths", nargs="+", help="BENCH_*.json files or directories")
+    parser.add_argument(
+        "--expect",
+        default="",
+        help="comma-separated bench names that must be present (e.g. "
+        "fig4_transact,fig8_shards)",
+    )
+    args = parser.parse_args(argv)
+
+    files = collect(args.paths)
+    errors: list[str] = []
+    if not files:
+        errors.append(f"no BENCH_*.json artifacts found under {args.paths}")
+
+    present = {f.name for f in files}
+    for name in filter(None, (s.strip() for s in args.expect.split(","))):
+        want = f"BENCH_{name}.json"
+        if want not in present:
+            errors.append(f"expected artifact {want} was not emitted")
+
+    for f in files:
+        errors.extend(check_document(f))
+
+    if errors:
+        for e in errors:
+            print(f"check_bench_json: FAIL: {e}", file=sys.stderr)
+        return 1
+    total = len(files)
+    print(f"check_bench_json: OK — {total} artifact(s) pass schema v{SCHEMA_VERSION}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -84,7 +84,7 @@ fn main() {
         let mut m = Mirror::with_replication(plat.clone(), StrategyKind::SmOb, repl, false)
             .expect("valid replication config");
         run_transact_on(&mut m, cfg);
-        print!("{}", GroupReport::from_fabric(&m.fabric).render());
+        print!("{}", GroupReport::from_fabric(m.fabric()).render());
     }
 
     // ---- Simulator throughput while fanning out (perf tracking).

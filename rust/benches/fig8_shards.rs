@@ -1,0 +1,154 @@
+//! Figure-8 bench (ours): address-space sharding — the Transact
+//! microbenchmark swept over `shards ∈ {1, 2, 4, 8}` × `backups ∈
+//! {1, 2}` × ack policy, reporting per-txn cost relative to the
+//! unsharded run of the same group shape, plus the per-shard
+//! [`ShardedReport`] rollup (write skew, per-shard fence profiles) and
+//! simulator throughput while routing. Emits `BENCH_fig8_shards.json`
+//! for run-over-run perf tracking; CI's bench-smoke job validates it
+//! with `python/check_bench_json.py`.
+//!
+//! Run: `cargo bench --bench fig8_shards`
+//! Scale with PMSM_BENCH_TXNS (default 2000 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, ShardMapSpec, ShardingConfig};
+use pmsm::metrics::report::Table;
+use pmsm::metrics::ShardedReport;
+use pmsm::net::FaultsConfig;
+use pmsm::workloads::transact::run_transact_on;
+use pmsm::workloads::{run_transact_sharded, TransactConfig};
+
+const SHARDS: [usize; 4] = [1, 2, 4, 8];
+
+fn cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    sharding: ShardingConfig,
+    cfg: TransactConfig,
+) -> u64 {
+    run_transact_sharded(plat, kind, repl, sharding, cfg)
+        .expect("valid sharding config")
+        .makespan
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let plat = Platform::default();
+    let cfg = TransactConfig {
+        epochs: 4,
+        writes: 2,
+        txns,
+        ..Default::default()
+    };
+
+    // ---- Shard-scaling table: time relative to shards=1 of the same
+    // (backups, policy) column, SM-OB and SM-DD. The random working set
+    // spreads lines across shards, so cross-shard commit fences (max,
+    // not sum) and per-shard wire parallelism set the trend.
+    let cols: [(usize, AckPolicy); 3] = [
+        (1, AckPolicy::All),
+        (2, AckPolicy::All),
+        (2, AckPolicy::Quorum(1)),
+    ];
+    for kind in [StrategyKind::SmOb, StrategyKind::SmDd] {
+        let mut t = Table::new(&["shards", "b1/all", "b2/all", "b2/quorum:1"]);
+        let base: Vec<f64> = cols
+            .iter()
+            .map(|&(b, p)| {
+                cell(
+                    &plat,
+                    kind,
+                    ReplicationConfig::new(b, p),
+                    ShardingConfig::default(),
+                    cfg,
+                ) as f64
+            })
+            .collect();
+        for &s in &SHARDS {
+            let sharding = ShardingConfig::new(s, ShardMapSpec::Modulo);
+            let mut cells = vec![format!("{s}")];
+            for (i, &(b, p)) in cols.iter().enumerate() {
+                // The sim is deterministic: s = 1 IS the baseline run.
+                let ms = if s == 1 {
+                    base[i]
+                } else {
+                    cell(&plat, kind, ReplicationConfig::new(b, p), sharding, cfg) as f64
+                };
+                cells.push(format!("{:.2}x", ms / base[i]));
+            }
+            t.row(cells);
+        }
+        println!(
+            "Figure 8 — Transact 4-2 shard scaling, {kind} \
+             (time vs shards=1 per column)\n{}",
+            t.render()
+        );
+    }
+
+    // ---- Per-shard rollup at the acceptance shape (4 shards x 2
+    // backups): balance + fence profile per shard.
+    let mut m = Mirror::try_build_sharded(
+        plat.clone(),
+        StrategyKind::SmOb,
+        None,
+        ReplicationConfig::new(2, AckPolicy::All),
+        FaultsConfig::default(),
+        ShardingConfig::new(4, ShardMapSpec::Modulo),
+        false,
+    )
+    .expect("valid sharded mirror");
+    let out = run_transact_on(&mut m, cfg);
+    assert_eq!(out.txns, cfg.txns, "sharded run must commit every txn");
+    print!("{}", ShardedReport::from_mirror(&m).render());
+
+    // ---- Modulo vs contiguous-range map at 4 shards (routing cost and
+    // balance differ; both must complete the full workload).
+    let mut t = Table::new(&["map", "time", "write skew"]);
+    for map in [
+        ShardMapSpec::Modulo,
+        ShardMapSpec::Range { stripe_lines: 1 << 10 },
+    ] {
+        let sharding = ShardingConfig::new(4, map);
+        let mut m = Mirror::try_build_sharded(
+            plat.clone(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::default(),
+            sharding,
+            false,
+        )
+        .expect("valid sharded mirror");
+        let out = run_transact_on(&mut m, cfg);
+        let r = ShardedReport::from_mirror(&m);
+        t.row(vec![
+            map.to_string(),
+            format!("{:.3} ms", out.makespan as f64 / 1e6),
+            format!("{:.2}x", r.write_skew()),
+        ]);
+    }
+    println!("map comparison at shards=4, backups=2\n{}", t.render());
+
+    // ---- Simulator throughput while routing (perf tracking): the
+    // fan-out hot path the CI bench-smoke gate watches.
+    let mut b = Bencher::new();
+    for &s in &SHARDS {
+        for kind in [StrategyKind::SmOb, StrategyKind::SmDd] {
+            let sharding = ShardingConfig::new(s, ShardMapSpec::Modulo);
+            let repl = ReplicationConfig::new(2, AckPolicy::All);
+            let writes = cfg.txns * (cfg.epochs as u64) * (cfg.writes as u64);
+            b.bench_elems(
+                &format!("transact/4-2/{kind}/shards-{s}/backups-2"),
+                (writes * 2) as f64,
+                || cell(&plat, kind, repl, sharding, cfg),
+            );
+        }
+    }
+    pmsm::bench::emit_json(&b, "fig8_shards");
+}

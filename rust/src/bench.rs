@@ -2,10 +2,14 @@
 //!
 //! Provides warmup + timed iterations with mean/stddev/min reporting, a
 //! `harness = false` entry-point helper used by `rust/benches/*.rs`, and
-//! machine-readable `BENCH_<name>.json` emission (hand-rolled JSON — no
-//! `serde` offline) so run-over-run perf trajectories can be tracked by
-//! tooling instead of scraped from stdout.
+//! machine-readable `BENCH_<name>.json` emission (assembled with the
+//! shared [`crate::util::json`] helpers — no `serde` offline) so
+//! run-over-run perf trajectories can be tracked by tooling instead of
+//! scraped from stdout. Every document stamps
+//! [`json::SCHEMA_VERSION`](crate::util::json::SCHEMA_VERSION), which
+//! CI's `python/check_bench_json.py` asserts on.
 
+use crate::util::json;
 use crate::util::Summary;
 use std::time::Instant;
 
@@ -24,25 +28,19 @@ pub struct BenchResult {
 impl BenchResult {
     /// One result as a JSON object (the `BENCH_*.json` schema element).
     pub fn to_json(&self) -> String {
-        let elems = match self.elems_per_iter {
-            Some(e) => json_num(e),
-            None => "null".to_string(),
-        };
         let elems_per_sec = match self.elems_per_iter {
-            Some(e) if self.mean_ns > 0.0 => json_num(e / (self.mean_ns * 1e-9)),
-            _ => "null".to_string(),
+            Some(e) if self.mean_ns > 0.0 => Some(e / (self.mean_ns * 1e-9)),
+            _ => None,
         };
-        format!(
-            "{{\"name\":{},\"iters\":{},\"mean_ns\":{},\"stddev_ns\":{},\
-             \"min_ns\":{},\"elems_per_iter\":{},\"elems_per_sec\":{}}}",
-            json_str(&self.name),
-            self.iters,
-            json_num(self.mean_ns),
-            json_num(self.stddev_ns),
-            json_num(self.min_ns),
-            elems,
-            elems_per_sec,
-        )
+        json::obj(&[
+            ("name", json::esc(&self.name)),
+            ("iters", self.iters.to_string()),
+            ("mean_ns", json::num(self.mean_ns)),
+            ("stddev_ns", json::num(self.stddev_ns)),
+            ("min_ns", json::num(self.min_ns)),
+            ("elems_per_iter", json::opt_num(self.elems_per_iter)),
+            ("elems_per_sec", json::opt_num(elems_per_sec)),
+        ])
     }
 
     pub fn report(&self) -> String {
@@ -60,34 +58,6 @@ impl BenchResult {
         }
         s
     }
-}
-
-/// JSON-safe number rendering (JSON has no NaN/Inf).
-fn json_num(x: f64) -> String {
-    if x.is_finite() {
-        format!("{x:.3}")
-    } else {
-        "0".to_string()
-    }
-}
-
-/// JSON string escaping (Rust's `{:?}` Debug escapes are not JSON).
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -190,14 +160,15 @@ impl Bencher {
     }
 
     /// Render all recorded results as the `BENCH_*.json` document:
-    /// `{"bench": <name>, "results": [<BenchResult>, ...]}`.
+    /// `{"schema_version": N, "bench": <name>, "results": [...]}`.
     pub fn to_json(&self, bench: &str) -> String {
         let results: Vec<String> = self.results.iter().map(|r| r.to_json()).collect();
-        format!(
-            "{{\"bench\":{},\"results\":[{}]}}\n",
-            json_str(bench),
-            results.join(",")
-        )
+        let doc = json::obj(&[
+            ("schema_version", json::SCHEMA_VERSION.to_string()),
+            ("bench", json::esc(bench)),
+            ("results", json::arr(&results)),
+        ]);
+        format!("{doc}\n")
     }
 
     /// Write `BENCH_<bench>.json` into `dir`; returns the path written.
@@ -263,19 +234,14 @@ mod tests {
         let mut b = Bencher::new();
         b.results.push(r);
         let doc = b.to_json("fig_test");
-        assert!(doc.starts_with("{\"bench\":\"fig_test\",\"results\":["), "{doc}");
+        assert!(
+            doc.starts_with(&format!(
+                "{{\"schema_version\":{},\"bench\":\"fig_test\",\"results\":[",
+                json::SCHEMA_VERSION
+            )),
+            "{doc}"
+        );
         assert!(doc.trim_end().ends_with("]}"), "{doc}");
-    }
-
-    #[test]
-    fn json_strings_are_escaped_for_json_not_rust() {
-        assert_eq!(json_str("plain"), "\"plain\"");
-        assert_eq!(json_str("a\"b"), "\"a\\\"b\"");
-        assert_eq!(json_str("a\\b"), "\"a\\\\b\"");
-        assert_eq!(json_str("a\nb\tc"), "\"a\\nb\\tc\"");
-        // Control chars become \u escapes (valid JSON), not Rust's \u{..}.
-        assert_eq!(json_str("\u{7}"), "\"\\u0007\"");
-        assert!(!json_str("\u{7}").contains('{'));
     }
 
     #[test]

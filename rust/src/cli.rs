@@ -13,9 +13,9 @@
 //!   * `selftest` — Table 1 + quick invariant checks.
 
 use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, StrategyKind};
-use crate::coordinator::Mirror;
+use crate::coordinator::{Mirror, ShardingConfig};
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
-use crate::metrics::GroupReport;
+use crate::metrics::{GroupReport, ShardedReport};
 use crate::net::{FaultsConfig, OnLoss};
 use crate::recovery;
 use crate::replication::Predictor;
@@ -107,12 +107,15 @@ pub fn help_text() -> &'static str {
                  [--backups N --ack-policy all|majority|quorum:K]\n\
                  [--fault-plan SPEC --on-loss halt|degrade]\n\
                  [--handoff-ns N --resync-line-ns N]\n\
+                 [--shards S --shard-map modulo|range|range:LINES]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
        recover   failure injection + recovery check [--strategy S --txns N]\n\
                  [--backups N --ack-policy P --fault-plan SPEC --on-loss M]\n\
-                 (cross-replica ledger check; fault-aware when a plan is set)\n\
+                 [--shards S --shard-map M]\n\
+                 (cross-replica ledger check; fault-aware when a plan is\n\
+                 set; per-shard checks + cross-shard merge when sharded)\n\
        config    print platform model parameters (Table 2)\n\
        selftest  Table-1 transformations + invariant smoke checks\n\
      \n\
@@ -120,13 +123,21 @@ pub fn help_text() -> &'static str {
      durability fence completes per --ack-policy (all = true SM;\n\
      quorum:K / majority = K-durable, tolerating K-1 backup losses).\n\
      \n\
+     SHARDING: --shards S partitions the PM line-address space over S\n\
+     independent replica groups (each with its own backups, ack policy\n\
+     and fault plan); --shard-map picks the partition (modulo = line-\n\
+     interleaved, range:LINES = contiguous stripes). A transaction's\n\
+     commit fence completes at the max across the shards it touched.\n\
+     CLI flags override the [sharding] config table.\n\
+     \n\
      FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
      backup B at virtual time T (ns). Killed backups leave fan-out and\n\
      ack accounting; --on-loss halt stops at an unsatisfiable fence\n\
      (reported stall) while degrade clamps the quorum to the survivors.\n\
      A rejoining backup resyncs the missed ledger suffix from the\n\
      healthiest peer (--handoff-ns + lines x --resync-line-ns) before\n\
-     re-entering the quorum.\n"
+     re-entering the quorum. Under sharding a kill models the loss of\n\
+     a backup node: replica B of every shard dies at T.\n"
 }
 
 fn platform_from(args: &Args) -> Result<Platform> {
@@ -136,20 +147,24 @@ fn platform_from(args: &Args) -> Result<Platform> {
     }
 }
 
-/// Platform + replica-group shape + failure dynamics: `--config`
-/// supplies all three (via the `[replication]` / `[faults]` sections);
-/// `--backups` / `--ack-policy` / `--fault-plan` / `--on-loss` /
-/// `--handoff-ns` / `--resync-line-ns` override.
-fn setup_from(args: &Args) -> Result<(Platform, ReplicationConfig, FaultsConfig)> {
-    let (plat, mut repl, mut faults) = match args.get("config") {
+/// Platform + replica-group shape + failure dynamics + sharding:
+/// `--config` supplies all four (via the `[replication]` / `[faults]` /
+/// `[sharding]` sections); `--backups` / `--ack-policy` /
+/// `--fault-plan` / `--on-loss` / `--handoff-ns` / `--resync-line-ns` /
+/// `--shards` / `--shard-map` override.
+fn setup_from(
+    args: &Args,
+) -> Result<(Platform, ReplicationConfig, FaultsConfig, ShardingConfig)> {
+    let (plat, mut repl, mut faults, mut sharding) = match args.get("config") {
         Some(path) => {
             let e = Experiment::from_file(path)?;
-            (e.platform, e.replication, e.faults)
+            (e.platform, e.replication, e.faults, e.sharding)
         }
         None => (
             Platform::default(),
             ReplicationConfig::default(),
             FaultsConfig::default(),
+            ShardingConfig::default(),
         ),
     };
     if let Some(b) = args.get("backups") {
@@ -166,9 +181,18 @@ fn setup_from(args: &Args) -> Result<(Platform, ReplicationConfig, FaultsConfig)
     }
     faults.handoff_ns = args.get_u64("handoff-ns", faults.handoff_ns)?;
     faults.resync_line_ns = args.get_u64("resync-line-ns", faults.resync_line_ns)?;
+    if let Some(s) = args.get("shards") {
+        sharding.shards = s
+            .parse()
+            .with_context(|| format!("--shards {s} (must be a count >= 1)"))?;
+    }
+    if let Some(s) = args.get("shard-map") {
+        sharding.map = s.parse().context("--shard-map")?;
+    }
     repl.validate()?;
     faults.validate(repl.backups)?;
-    Ok((plat, repl, faults))
+    sharding.validate()?;
+    Ok((plat, repl, faults, sharding))
 }
 
 /// A predictor for `SmAd` (PJRT model if the artifacts load, else the
@@ -187,7 +211,7 @@ fn predictor_for(plat: &Platform, strategy: StrategyKind) -> Result<Option<Predi
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let (plat, repl, faults) = setup_from(args)?;
+    let (plat, repl, faults, sharding) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
     let threads = args.get_usize("threads", 1)?;
@@ -199,8 +223,21 @@ fn cmd_run(args: &Args) -> Result<()> {
             faults.plan, faults.on_loss, faults.handoff_ns, faults.resync_line_ns
         );
     }
-    let mut mirror =
-        Mirror::try_build_faulted(plat.clone(), strategy, predictor, repl, faults, false)?;
+    if sharding.shards > 1 {
+        println!(
+            "sharding: {} shards, map {} (each shard: {} backup(s), ack {})",
+            sharding.shards, sharding.map, repl.backups, repl.ack_policy
+        );
+    }
+    let mut mirror = Mirror::try_build_sharded(
+        plat.clone(),
+        strategy,
+        predictor,
+        repl,
+        faults,
+        sharding,
+        false,
+    )?;
 
     let outcome = if workload == "transact" {
         let cfg = TransactConfig {
@@ -255,8 +292,10 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
         }
     }
-    if repl.backups > 1 || injecting {
-        print!("{}", GroupReport::from_fabric(&mirror.fabric).render());
+    if sharding.shards > 1 {
+        print!("{}", ShardedReport::from_mirror(&mirror).render());
+    } else if repl.backups > 1 || injecting {
+        print!("{}", GroupReport::from_fabric(mirror.fabric()).render());
     }
     Ok(())
 }
@@ -456,7 +495,7 @@ fn cmd_analytic(args: &Args) -> Result<()> {
 }
 
 fn cmd_recover(args: &Args) -> Result<()> {
-    let (plat, repl, faults) = setup_from(args)?;
+    let (plat, repl, faults, sharding) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
     use crate::coordinator::ThreadCtx;
@@ -464,7 +503,8 @@ fn cmd_recover(args: &Args) -> Result<()> {
 
     let injecting = !faults.plan.is_empty();
     let on_loss = faults.on_loss;
-    let mut m = Mirror::try_build_faulted(plat, strategy, None, repl, faults, true)?;
+    let mut m =
+        Mirror::try_build_sharded(plat, strategy, None, repl, faults, sharding, true)?;
     let mut t = ThreadCtx::new(0);
     let log = crate::pstore::log_base_for(0);
     let d0 = 0x20_0000u64;
@@ -475,7 +515,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
         tx.write(&mut m, &mut t, d0, 100 + i);
         tx.write(&mut m, &mut t, d1, 200 + i);
         tx.commit(&mut m, &mut t);
-        if m.fabric.stall().is_some() {
+        if m.stall().is_some() {
             break;
         }
         let mut snap = std::collections::HashMap::new();
@@ -483,8 +523,8 @@ fn cmd_recover(args: &Args) -> Result<()> {
         snap.insert(d1, 200 + i);
         hist.commit(snap, t.last_dfence);
     }
-    m.fabric.settle(t.now());
-    if let Some(stall) = m.fabric.stall() {
+    m.settle(t.now());
+    if let Some(stall) = m.stall() {
         println!(
             "recovery check [{strategy}, {} backup(s), ack {}]: run stopped \
              after {} of {txns} txns — {stall}",
@@ -492,43 +532,69 @@ fn cmd_recover(args: &Args) -> Result<()> {
             repl.ack_policy,
             hist.committed(),
         );
-        print!("{}", GroupReport::from_fabric(&m.fabric).render());
+        if sharding.shards > 1 {
+            print!("{}", ShardedReport::from_mirror(&m).render());
+        } else {
+            print!("{}", GroupReport::from_fabric(m.fabric()).render());
+        }
         return Ok(());
     }
-    let ledgers = m.fabric.ledgers();
-    recovery::check_group_epoch_ordering(&ledgers)?;
-    let checked = if injecting {
-        recovery::check_faulted_group_crashes(
-            &ledgers,
+    let shard_ledgers = m.shard_ledgers();
+    for ledgers in &shard_ledgers {
+        recovery::check_group_epoch_ordering(ledgers)?;
+    }
+    let checked = if sharding.shards > 1 {
+        // Per-shard group checks merged into the cross-shard verdict
+        // (fault-aware by construction: the realized timelines feed in).
+        recovery::check_sharded_group_crashes(
+            &shard_ledgers,
+            &m.timelines(),
             &hist,
             &[log],
             &[d0, d1],
             repl.required(),
             on_loss,
-            &m.fabric.timeline(),
+            m.shard_map(),
+        )?
+    } else if injecting {
+        recovery::check_faulted_group_crashes(
+            &shard_ledgers[0],
+            &hist,
+            &[log],
+            &[d0, d1],
+            repl.required(),
+            on_loss,
+            &m.fabric().timeline(),
         )?
     } else {
         recovery::check_group_crashes(
-            &ledgers,
+            &shard_ledgers[0],
             &hist,
             &[log],
             &[d0, d1],
             repl.required(),
         )?
     };
-    let events: Vec<usize> = ledgers.iter().map(|l| l.len()).collect();
+    let events: Vec<Vec<usize>> = shard_ledgers
+        .iter()
+        .map(|ls| ls.iter().map(|l| l.len()).collect())
+        .collect();
     println!(
-        "recovery check [{strategy}, {} backup(s), ack {}{}]: {txns} txns, \
-         ledger events per backup {events:?}, {checked} crash points \
-         verified — failure atomicity + group durability hold \
-         (tolerates {} backup failure(s))",
+        "recovery check [{strategy}, {} shard(s), {} backup(s), ack {}{}]: \
+         {txns} txns, ledger events per shard x backup {events:?}, {checked} \
+         crash points verified — failure atomicity + {}group durability hold \
+         (tolerates {} backup failure(s) per shard)",
+        sharding.shards,
         repl.backups,
         repl.ack_policy,
         if injecting { ", fault-injected" } else { "" },
+        if sharding.shards > 1 { "cross-shard " } else { "" },
         repl.required() - 1
     );
-    if repl.backups > 1 || injecting {
-        print!("{}", GroupReport::from_fabric(&m.fabric).render());
+    if sharding.shards > 1 {
+        print!("{}", ShardedReport::from_mirror(&m).render());
+    } else if repl.backups > 1 || injecting {
+        print!("{}", GroupReport::from_fabric(m.fabric()).render());
     }
     Ok(())
 }
@@ -684,6 +750,83 @@ mod tests {
         .map(|s| s.to_string())
         .collect();
         assert!(main_with_args(&argv).is_err());
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn cli_shards_override_config_file() {
+        use crate::coordinator::ShardMapSpec;
+        // `--shards` beats the [sharding] table; the map survives from
+        // the file when not overridden.
+        let dir = std::env::temp_dir().join("pmsm_cli_sharding_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[sharding]\nshards = 2\nmap = \"range:1024\"\n",
+        )
+        .unwrap();
+        let path = path.to_str().unwrap();
+        let a = Args::parse(&argv(&["run", "--config", path, "--shards", "4"]));
+        let (_, _, _, sharding) = setup_from(&a).unwrap();
+        assert_eq!(sharding.shards, 4, "--shards overrides the TOML");
+        assert_eq!(
+            sharding.map,
+            ShardMapSpec::Range { stripe_lines: 1024 },
+            "map keeps the TOML value"
+        );
+        // No override: the file's shape wins entirely.
+        let a = Args::parse(&argv(&["run", "--config", path]));
+        let (_, _, _, sharding) = setup_from(&a).unwrap();
+        assert_eq!(sharding.shards, 2);
+        // `--shard-map` overrides the file's map.
+        let a = Args::parse(&argv(&["run", "--config", path, "--shard-map", "modulo"]));
+        let (_, _, _, sharding) = setup_from(&a).unwrap();
+        assert_eq!(sharding.map, ShardMapSpec::Modulo);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_rejects_invalid_shard_shapes() {
+        // shards = 0 carries the clear validation error.
+        let a = Args::parse(&argv(&["run", "--shards", "0"]));
+        let err = setup_from(&a).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("sharding.shards must be >= 1"),
+            "{err:#}"
+        );
+        assert!(setup_from(&Args::parse(&argv(&["run", "--shards", "-1"]))).is_err());
+        assert!(
+            setup_from(&Args::parse(&argv(&["run", "--shard-map", "hash"]))).is_err()
+        );
+    }
+
+    #[test]
+    fn run_command_sharded_smoke() {
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "20", "--shards", "4",
+            "--backups", "2", "--ack-policy", "all",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn recover_command_sharded_check() {
+        // The acceptance shape: shards=4, backups=2 commits and recovers.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-ob", "--txns", "4", "--shards", "4",
+            "--backups", "2", "--ack-policy", "all",
+        ]))
+        .unwrap();
+        // Contiguous-range map too.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-dd", "--txns", "3", "--shards", "2",
+            "--shard-map", "range:1",
+        ]))
+        .unwrap();
     }
 
     #[test]

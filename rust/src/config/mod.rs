@@ -11,6 +11,7 @@ pub mod toml;
 
 pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 
+use crate::coordinator::shard::ShardingConfig;
 use crate::net::faults::FaultsConfig;
 use anyhow::{bail, Context, Result};
 
@@ -36,6 +37,9 @@ pub struct Experiment {
     /// plan plus the on-loss mode and resync cost knobs; defaults to no
     /// faults, `on_loss = halt`).
     pub faults: FaultsConfig,
+    /// Address-space sharding (`[sharding]` section: shard count +
+    /// routing map; defaults to one shard — sharding off).
+    pub sharding: ShardingConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -54,6 +58,7 @@ impl Default for Experiment {
             },
             replication: ReplicationConfig::default(),
             faults: FaultsConfig::default(),
+            sharding: ShardingConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -119,6 +124,19 @@ impl Experiment {
         exp.faults
             .validate(exp.replication.backups)
             .context("invalid [faults] section")?;
+        if let Some(v) = doc.get("sharding.shards") {
+            let n = v.as_int()?;
+            if n < 1 {
+                bail!("sharding.shards must be >= 1, got {n}");
+            }
+            exp.sharding.shards = n as usize;
+        }
+        if let Some(v) = doc.get("sharding.map") {
+            exp.sharding.map = v.as_str()?.parse().context("sharding.map")?;
+        }
+        exp.sharding
+            .validate()
+            .context("invalid [sharding] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -315,6 +333,47 @@ resync_line_ns = 50
         // Negative knobs.
         assert!(Experiment::from_str("[faults]\nhandoff_ns = -1").is_err());
         assert!(Experiment::from_str("[faults]\nresync_line_ns = -1").is_err());
+    }
+
+    #[test]
+    fn sharding_section_roundtrip() {
+        use crate::coordinator::shard::ShardMapSpec;
+        let text = r#"
+[sharding]
+shards = 4
+map = "range:2048"
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.sharding.shards, 4);
+        assert_eq!(exp.sharding.map, ShardMapSpec::Range { stripe_lines: 2048 });
+        // Display of the spec round-trips through the parser.
+        let text = format!(
+            "[sharding]\nshards = 4\nmap = \"{}\"",
+            exp.sharding.map
+        );
+        assert_eq!(Experiment::from_str(&text).unwrap().sharding, exp.sharding);
+    }
+
+    #[test]
+    fn sharding_defaults_when_section_missing() {
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.sharding, ShardingConfig::default());
+        assert_eq!(exp.sharding.shards, 1);
+    }
+
+    #[test]
+    fn sharding_section_rejects_bad_shapes() {
+        // Zero/negative shard counts carry a clear error.
+        let err = Experiment::from_str("[sharding]\nshards = 0").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("sharding.shards must be >= 1"),
+            "{err:#}"
+        );
+        assert!(Experiment::from_str("[sharding]\nshards = -3").is_err());
+        assert!(Experiment::from_str("[sharding]\nshards = 65").is_err());
+        // Unknown / malformed maps.
+        assert!(Experiment::from_str("[sharding]\nmap = \"hash\"").is_err());
+        assert!(Experiment::from_str("[sharding]\nmap = \"range:0\"").is_err());
     }
 
     #[test]

@@ -1,27 +1,51 @@
 //! The mirroring coordinator: binds a primary node's persistency-model
-//! traffic to a replica group of backups over the simulated RDMA fabric
-//! (paper Fig. 2, generalized from one backup to N).
+//! traffic to one or more replica groups of backups over the simulated
+//! RDMA fabric (paper Fig. 2, generalized from one backup to N — and
+//! from one group to `S` address-space [`shard`]s).
 //!
 //! [`Mirror`] exposes the persistency-model API the paper assumes
 //! (Intel-style `store`/`clwb`/`sfence` plus an explicit durability fence
 //! at transaction end); every `clwb` simultaneously (1) persists the line
 //! locally through the primary's memory controller and (2) hands the dirty
-//! line to the active replication [`Strategy`](crate::replication::Strategy)
-//! for remote replication across the group's [`Fabric`]. Durability
-//! fences complete per the group's ack policy; per-backup fence
-//! completions are tracked on the [`ThreadCtx`] for lag analysis.
-//! Multi-threaded workloads are executed by the conservative min-clock
-//! scheduler in [`sched`].
+//! line to the owning shard's replication
+//! [`Strategy`](crate::replication::Strategy) for remote replication
+//! across that shard's [`Fabric`]. The [`ShardMap`] routes each line to
+//! exactly one shard; with `shards = 1` (the default) the router is a
+//! pass-through and the coordinator is event-for-event identical to the
+//! pre-sharding single-fabric path (pinned by `rust/tests/sharding.rs`).
+//!
+//! **Cross-shard fence semantics.** Each shard's fabric completes its
+//! fences independently, per its own ack policy. A thread's ordering
+//! fence (`sfence`) reaches every shard it wrote since the previous
+//! fence; its durability fence (transaction commit) reaches every shard
+//! the transaction touched, and the transaction's commit instant is the
+//! **max** across those shards' fence completions — the fences are
+//! issued concurrently (each shard has its own QPs and wire; nothing is
+//! shared between shards), and the thread blocks until the last one
+//! completes. Per-backup fence completions are tracked shard-major on
+//! the [`ThreadCtx`] for lag analysis. Note the atomicity caveat:
+//! remote-persistence *ordering* is per-fabric, so an in-flight
+//! transaction whose undo log and data straddle shards can be torn by
+//! a crash — only durably acked transactions are guaranteed whole
+//! across shards (DESIGN.md §Sharding). Multi-threaded workloads are
+//! executed by the conservative min-clock scheduler in [`sched`].
 
 pub mod sched;
+pub mod shard;
+
+pub use shard::{ShardMap, ShardMapSpec, ShardingConfig};
 
 use crate::config::{Platform, ReplicationConfig, StrategyKind};
-use crate::net::{Fabric, FaultKind, FaultsConfig, RemoteEngine, WriteMeta};
+use crate::mem::DurabilityLog;
+use crate::net::{
+    Fabric, FaultKind, FaultTimeline, FaultsConfig, RemoteEngine, Stall, WriteMeta,
+};
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
 use crate::util::FastMap;
 use crate::{line_of, Addr, Ns};
 use anyhow::{bail, Result};
+use std::rc::Rc;
 
 /// Per-thread execution context: virtual clock + transactional counters.
 #[derive(Debug)]
@@ -37,11 +61,18 @@ pub struct ThreadCtx {
     pub txns_done: u64,
     pub writes_done: u64,
     pub epochs_done: u64,
-    /// Completion time of the last durability fence (ack-policy level).
+    /// Completion time of the last durability fence (ack-policy level,
+    /// max across the shards the transaction touched).
     pub last_dfence: Ns,
-    /// Per-backup completion instants of the last durability fence
-    /// (index = backup id; all zeros under NO-SM).
+    /// Per-backup completion instants of the last durability fence,
+    /// flattened shard-major (index = `shard * backups + backup`; all
+    /// zeros under NO-SM; shards untouched by the transaction keep
+    /// their previous fence instants).
     pub last_dfence_per_backup: Vec<Ns>,
+    /// Shards written since the last ordering fence (bitmask).
+    touched_epoch: u64,
+    /// Shards written since the transaction began (bitmask).
+    touched_txn: u64,
     /// Virtual time at which stats were last reset (steady-state marker).
     pub stats_zero_at: Ns,
 }
@@ -59,6 +90,8 @@ impl ThreadCtx {
             epochs_done: 0,
             last_dfence: 0,
             last_dfence_per_backup: Vec::new(),
+            touched_epoch: 0,
+            touched_txn: 0,
             stats_zero_at: 0,
         }
     }
@@ -79,6 +112,13 @@ impl ThreadCtx {
     }
 }
 
+/// One shard of the replication pipeline: an independent replica-group
+/// fabric plus its own (shard-local) strategy instance.
+struct ShardLane {
+    fabric: Fabric,
+    strategy: Box<dyn Strategy>,
+}
+
 /// The primary node + replication pipeline.
 pub struct Mirror {
     pub plat: Platform,
@@ -89,11 +129,12 @@ pub struct Mirror {
     local_mc_lat: Ns,
     /// Primary PM contents (line address -> word value).
     image: FastMap<Addr, u64>,
-    /// Replica-group fabric: one RDMA stack per backup.
-    pub fabric: Fabric,
-    strategy: Box<dyn Strategy>,
+    /// One lane per shard: shard `s` owns the lines `map` routes to it.
+    lanes: Vec<ShardLane>,
+    map: ShardMap,
     kind: StrategyKind,
     repl: ReplicationConfig,
+    sharding: ShardingConfig,
     /// Load latency from the primary image (ns).
     load_cost: Ns,
 }
@@ -139,9 +180,9 @@ impl Mirror {
         Self::try_build(plat, kind, None, repl, ledger)
     }
 
-    /// Fully general fault-free constructor: any strategy, any
-    /// replica-group shape. Fails on an invalid replication config or on
-    /// `SmAd` without a predictor.
+    /// Fully general fault-free, unsharded constructor: any strategy,
+    /// any replica-group shape. Fails on an invalid replication config
+    /// or on `SmAd` without a predictor.
     pub fn try_build(
         plat: Platform,
         kind: StrategyKind,
@@ -152,7 +193,7 @@ impl Mirror {
         Self::try_build_faulted(plat, kind, predictor, repl, FaultsConfig::default(), ledger)
     }
 
-    /// Fully general constructor with runtime failure dynamics: the
+    /// General unsharded constructor with runtime failure dynamics: the
     /// fabric consults `faults` on every post/fence (backup kills,
     /// catch-up rejoins, halt/degrade loss handling — see
     /// [`crate::net::faults`]). Fails on an invalid replication config,
@@ -166,8 +207,38 @@ impl Mirror {
         faults: FaultsConfig,
         ledger: bool,
     ) -> Result<Self> {
+        Self::try_build_sharded(
+            plat,
+            kind,
+            predictor,
+            repl,
+            faults,
+            ShardingConfig::default(),
+            ledger,
+        )
+    }
+
+    /// The fully general constructor: `sharding.shards` independent
+    /// replica groups, each with its own fabric (backups, ack policy,
+    /// durability ledgers) and its own shard-local strategy instance.
+    /// The `repl` shape and `faults` plan apply to **every** shard: a
+    /// `kill:B@T` event models the loss of backup *node* B, which hosts
+    /// replica B of every shard, so all shards lose that backup at once.
+    /// Fails on an invalid replication/faults/sharding config or on
+    /// `SmAd` without a predictor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn try_build_sharded(
+        plat: Platform,
+        kind: StrategyKind,
+        predictor: Option<Predictor>,
+        repl: ReplicationConfig,
+        faults: FaultsConfig,
+        sharding: ShardingConfig,
+        ledger: bool,
+    ) -> Result<Self> {
         repl.validate()?;
         faults.validate(repl.backups)?;
+        sharding.validate()?;
         if kind == StrategyKind::SmRc
             && faults
                 .plan
@@ -186,8 +257,30 @@ impl Mirror {
                  plan or sm-ob / sm-dd"
             );
         }
-        let strategy = replication::make_strategy(kind, predictor)?;
-        let fabric = Fabric::with_faults(&plat, &repl, faults, ledger);
+        // The predictor is a boxed closure; with several shards it is
+        // shared behind an Rc so every shard-local SmAd instance
+        // consults the same model.
+        let mut predictor = predictor;
+        let shared: Option<Rc<dyn Fn(f32, f32) -> (f32, f32)>> =
+            if kind == StrategyKind::SmAd && sharding.shards > 1 {
+                predictor.take().map(Rc::from)
+            } else {
+                None
+            };
+        let mut lanes = Vec::with_capacity(sharding.shards);
+        for s in 0..sharding.shards {
+            let pred: Option<Predictor> = match &shared {
+                Some(rc) => {
+                    let rc = Rc::clone(rc);
+                    Some(Box::new(move |e: f32, w: f32| (*rc)(e, w)))
+                }
+                None => predictor.take(),
+            };
+            let strategy = replication::make_strategy(kind, pred)?;
+            let fabric =
+                Fabric::with_faults(&plat, &repl, faults.clone(), ledger).with_shard(s);
+            lanes.push(ShardLane { fabric, strategy });
+        }
         let local_mc = RateLimiter::new(plat.llc_mc);
         let local_mc_lat = plat.llc_mc;
         Ok(Mirror {
@@ -195,10 +288,11 @@ impl Mirror {
             local_mc,
             local_mc_lat,
             image: FastMap::default(),
-            fabric,
-            strategy,
+            lanes,
+            map: sharding.build_map(),
             kind,
             repl,
+            sharding,
             load_cost: 5,
         })
     }
@@ -207,14 +301,95 @@ impl Mirror {
         self.kind
     }
 
-    /// The replica-group shape this mirror drives.
+    /// The replica-group shape every shard drives.
     pub fn replication(&self) -> &ReplicationConfig {
         &self.repl
     }
 
-    /// Backup `i`'s remote engine (shorthand for `fabric.backup(i)`).
+    /// The sharding shape this mirror routes over.
+    pub fn sharding(&self) -> &ShardingConfig {
+        &self.sharding
+    }
+
+    /// The address-to-shard routing function.
+    pub fn shard_map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Number of independent shards (1 = sharding off).
+    pub fn shard_count(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Shard 0's fabric — *the* fabric when sharding is off (the common
+    /// case for the paper's experiments and the regression anchor).
+    pub fn fabric(&self) -> &Fabric {
+        &self.lanes[0].fabric
+    }
+
+    /// Shard `s`'s replica-group fabric.
+    pub fn shard_fabric(&self, s: usize) -> &Fabric {
+        &self.lanes[s].fabric
+    }
+
+    /// Backup `i`'s remote engine on shard 0 (shorthand for
+    /// `fabric().backup(i)`).
     pub fn backup(&self, i: usize) -> &RemoteEngine {
-        self.fabric.backup(i)
+        self.lanes[0].fabric.backup(i)
+    }
+
+    /// The earliest unsatisfiable durability fence across all shards,
+    /// if any — the run stops there (see [`Fabric::stall`]).
+    pub fn stall(&self) -> Option<&Stall> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.fabric.stall())
+            .min_by_key(|s| s.at)
+    }
+
+    /// Advance every shard's fault state to `now` without issuing any
+    /// verb (end-of-run bookkeeping before metrics/recovery).
+    pub fn settle(&mut self, now: Ns) {
+        for lane in &mut self.lanes {
+            lane.fabric.settle(now);
+        }
+    }
+
+    /// Per-shard backup ledgers: `[shard][backup]`, for the sharded
+    /// recovery checks.
+    pub fn shard_ledgers(&self) -> Vec<Vec<&DurabilityLog>> {
+        self.lanes.iter().map(|l| l.fabric.ledgers()).collect()
+    }
+
+    /// Per-shard realized fault timelines (call [`Mirror::settle`]
+    /// first so late events/resyncs have taken effect).
+    pub fn timelines(&self) -> Vec<FaultTimeline> {
+        self.lanes.iter().map(|l| l.fabric.timeline()).collect()
+    }
+
+    /// Per-backup persist horizons, flattened shard-major
+    /// (index = `shard * backups + backup`).
+    pub fn persist_horizons(&self) -> Vec<Ns> {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.fabric.persist_horizons())
+            .collect()
+    }
+
+    /// Per-backup out-of-quorum time as of `now`, flattened shard-major.
+    pub fn accrued_dead_ns(&self, now: Ns) -> Vec<Ns> {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.fabric.accrued_dead_ns(now))
+            .collect()
+    }
+
+    /// Per-backup catch-up resync volume (lines), flattened shard-major.
+    pub fn resync_lines(&self) -> Vec<u64> {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.fabric.backup_stats().into_iter().map(|s| s.resync_lines))
+            .collect()
     }
 
     /// Read a word from the primary PM image (0 when never written).
@@ -240,7 +415,7 @@ impl Mirror {
     }
 
     /// `clwb`: persist the line locally (eager write-back into the local
-    /// MC queue) and replicate it per the active strategy.
+    /// MC queue) and replicate it per the owning shard's strategy.
     pub fn clwb(&mut self, t: &mut ThreadCtx, addr: Addr) {
         let line = line_of(addr);
         t.clock.busy(self.plat.flush);
@@ -256,33 +431,97 @@ impl Mirror {
         };
         t.seq += 1;
         t.writes_done += 1;
-        self.strategy.on_clwb(&mut self.fabric, &mut t.clock, meta);
+        let s = self.map.shard_of(line);
+        t.touched_epoch |= 1 << s;
+        t.touched_txn |= 1 << s;
+        let lane = &mut self.lanes[s];
+        lane.strategy.on_clwb(&mut lane.fabric, &mut t.clock, meta);
+    }
+
+    /// Issue a fence on every shard in `mask` with cross-shard
+    /// concurrency: the shards share no simulated resources (each has
+    /// its own QPs, wire, and backups), so each shard's fence is run
+    /// from the same start instant and the thread lands on the **max**
+    /// completion. Rewinding the clock between shards is safe: this
+    /// thread's prior verbs on each shard were issued at times <=
+    /// `start`, and the sim's resources serialize in submission order
+    /// while tolerating out-of-order arrival instants — the same
+    /// bounded-error discipline the min-clock scheduler relies on
+    /// ([`sched`]). With one shard in the mask this degenerates to the
+    /// plain single-fabric call.
+    fn fan_fence(
+        &mut self,
+        t: &mut ThreadCtx,
+        mask: u64,
+        issue: fn(&mut dyn Strategy, &mut Fabric, &mut ThreadClock),
+    ) {
+        let start = t.clock.now;
+        let mut done = start;
+        for (s, lane) in self.lanes.iter_mut().enumerate() {
+            if mask & (1 << s) == 0 {
+                continue;
+            }
+            t.clock.now = start;
+            issue(lane.strategy.as_mut(), &mut lane.fabric, &mut t.clock);
+            done = done.max(t.clock.now);
+        }
+        t.clock.now = done;
+    }
+
+    /// Shards a fence must reach: the touched set, or shard 0 when the
+    /// window saw no writes (preserving the pre-sharding behaviour of
+    /// unconditional fence issue; with `shards = 1` the two coincide).
+    fn fence_mask(&self, touched: u64) -> u64 {
+        if self.lanes.len() == 1 || touched == 0 {
+            1
+        } else {
+            touched
+        }
     }
 
     /// `sfence`: ordering point — wait for local persists, signal the
-    /// strategy's ordering primitive, and open the next epoch.
+    /// ordering primitive of every shard written this epoch, and open
+    /// the next epoch.
     pub fn sfence(&mut self, t: &mut ThreadCtx) {
         t.clock.busy(self.plat.sfence);
         if let Some(&max) = t.pending_local.iter().max() {
             t.clock.wait_until(max);
         }
         t.pending_local.clear();
-        self.strategy.on_ofence(&mut self.fabric, &mut t.clock);
+        let mask = self.fence_mask(t.touched_epoch);
+        self.fan_fence(t, mask, |s, f, c| s.on_ofence(f, c));
+        t.touched_epoch = 0;
         t.epoch += 1;
         t.epochs_done += 1;
     }
 
-    /// Transaction begin: resets epoch numbering; passes the shape hint to
-    /// adaptive strategies.
+    /// Transaction begin: resets epoch numbering; passes the shape hint
+    /// to every shard's strategy (adaptive strategies pick their mode
+    /// here — no verbs are issued, so this is free on the wire). With
+    /// several shards, a shard-local strategy serves only ~1/S of the
+    /// transaction's writes under a spreading map, so the hint's
+    /// writes-per-epoch is scaled to the expected per-shard share
+    /// before the adaptive predictor sees it (exact pass-through at
+    /// `shards = 1`).
     pub fn txn_begin(&mut self, t: &mut ThreadCtx, hint: Option<TxnShape>) {
         t.epoch = 0;
-        self.strategy
-            .on_txn_begin(&mut self.fabric, &mut t.clock, hint);
+        t.touched_epoch = 0;
+        t.touched_txn = 0;
+        let hint = hint.map(|h| TxnShape {
+            epochs: h.epochs,
+            writes: h.writes / self.lanes.len() as f32,
+        });
+        for lane in &mut self.lanes {
+            lane.strategy
+                .on_txn_begin(&mut lane.fabric, &mut t.clock, hint);
+        }
     }
 
-    /// Transaction end: durability point (local drain + strategy fence).
-    /// Records both the ack-policy completion and the per-backup fence
-    /// completions. A transaction whose durability fence stalled (fault
+    /// Transaction end: durability point (local drain + per-shard
+    /// strategy fence on every shard the transaction touched; the
+    /// commit instant is the max across those shards). Records both the
+    /// ack-policy completion and the per-backup fence completions. A
+    /// transaction whose durability fence stalled on any shard (fault
     /// injection under `on_loss = halt`, or a fully dead group) was
     /// never durably acked and is NOT counted as committed.
     pub fn txn_commit(&mut self, t: &mut ThreadCtx) {
@@ -291,14 +530,19 @@ impl Mirror {
             t.clock.wait_until(max);
         }
         t.pending_local.clear();
-        self.strategy.on_dfence(&mut self.fabric, &mut t.clock);
-        if self.fabric.stall().is_some() {
+        let mask = self.fence_mask(t.touched_txn);
+        self.fan_fence(t, mask, |s, f, c| s.on_dfence(f, c));
+        t.touched_txn = 0;
+        t.touched_epoch = 0;
+        if self.stall().is_some() {
             return;
         }
         t.last_dfence = t.clock.now;
         t.last_dfence_per_backup.clear();
-        t.last_dfence_per_backup
-            .extend_from_slice(self.fabric.last_fence());
+        for lane in &self.lanes {
+            t.last_dfence_per_backup
+                .extend_from_slice(lane.fabric.last_fence());
+        }
         t.txn += 1;
         t.txns_done += 1;
     }
@@ -406,7 +650,7 @@ mod tests {
                 Mirror::with_replication(Platform::default(), kind, repl, true).unwrap();
             let mut t = ThreadCtx::new(0);
             run_transact_txn(&mut m, &mut t, 4, 2);
-            assert_eq!(m.fabric.backups(), 3);
+            assert_eq!(m.fabric().backups(), 3);
             for b in 0..3 {
                 assert_eq!(m.backup(b).ledger.len(), 8, "{kind:?} backup {b}");
             }
@@ -464,7 +708,7 @@ mod tests {
         .unwrap();
         let mut t = ThreadCtx::new(0);
         run_transact_txn(&mut m, &mut t, 2, 1);
-        let stall = m.fabric.stall().expect("all + halt must stall");
+        let stall = m.stall().expect("all + halt must stall");
         assert_eq!(stall.alive, 2);
         assert_eq!(stall.required, 3);
         // Degrade: the run completes on the survivors.
@@ -479,7 +723,7 @@ mod tests {
         .unwrap();
         let mut t = ThreadCtx::new(0);
         run_transact_txn(&mut m, &mut t, 2, 1);
-        assert!(m.fabric.stall().is_none());
+        assert!(m.stall().is_none());
         assert_eq!(t.txns_done, 1);
         assert_eq!(m.backup(0).ledger.len(), 2);
         assert_eq!(m.backup(2).ledger.len(), 2);
@@ -541,7 +785,7 @@ mod tests {
         .unwrap();
         let mut t = ThreadCtx::new(0);
         run_transact_txn(&mut m, &mut t, 2, 1);
-        assert!(m.fabric.stall().is_some());
+        assert!(m.stall().is_some());
         assert_eq!(t.txns_done, 0, "a stalled fence is not a commit");
         assert_eq!(t.last_dfence, 0, "no durability instant was reached");
     }
@@ -571,5 +815,140 @@ mod tests {
             false
         )
         .is_err());
+    }
+
+    // ---- sharding --------------------------------------------------------
+
+    /// Build a sharded SM-OB mirror over `shards` modulo-mapped groups.
+    fn sharded(shards: usize, backups: usize, ledger: bool) -> Mirror {
+        Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(backups, AckPolicy::All),
+            FaultsConfig::default(),
+            ShardingConfig::new(shards, ShardMapSpec::Modulo),
+            ledger,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn invalid_sharding_rejected_at_build() {
+        for shards in [0usize, 65] {
+            assert!(Mirror::try_build_sharded(
+                Platform::default(),
+                StrategyKind::SmOb,
+                None,
+                ReplicationConfig::default(),
+                FaultsConfig::default(),
+                ShardingConfig::new(shards, ShardMapSpec::Modulo),
+                false,
+            )
+            .is_err());
+        }
+    }
+
+    #[test]
+    fn clwb_routes_lines_to_owning_shards() {
+        let mut m = sharded(4, 1, true);
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        // Lines 0..8 land modulo-4: shards 0..3 twice each.
+        for i in 0..8u64 {
+            let addr = i * 64;
+            m.store(&mut t, addr, i);
+            m.clwb(&mut t, addr);
+        }
+        m.sfence(&mut t);
+        m.txn_commit(&mut t);
+        for s in 0..4 {
+            assert_eq!(
+                m.shard_fabric(s).backup(0).ledger.len(),
+                2,
+                "shard {s} write count"
+            );
+        }
+        assert_eq!(t.txns_done, 1);
+    }
+
+    #[test]
+    fn commit_fence_is_max_across_touched_shards() {
+        // A txn touching 2 of 4 shards must not fence the other two,
+        // and its commit instant covers both touched shards' horizons.
+        let mut m = sharded(4, 1, true);
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        for addr in [0u64, 64] {
+            // shards 0 and 1
+            m.store(&mut t, addr, 7);
+            m.clwb(&mut t, addr);
+        }
+        m.sfence(&mut t);
+        m.txn_commit(&mut t);
+        for s in [0usize, 1] {
+            assert!(
+                t.last_dfence >= m.shard_fabric(s).group_horizon(),
+                "shard {s} horizon not covered"
+            );
+            assert_eq!(m.shard_fabric(s).blocking_waits, 1, "shard {s}");
+        }
+        for s in [2usize, 3] {
+            assert_eq!(
+                m.shard_fabric(s).blocking_waits,
+                0,
+                "untouched shard {s} must not fence"
+            );
+            assert_eq!(m.shard_fabric(s).backup(0).ledger.len(), 0);
+        }
+        // Per-backup fence record is shard-major over all 4 shards.
+        assert_eq!(t.last_dfence_per_backup.len(), 4);
+    }
+
+    #[test]
+    fn concurrent_shard_fences_cost_max_not_sum() {
+        // One write per shard: the commit fence spans all shards but is
+        // issued concurrently, so the txn costs ~one fence, not S.
+        let span = |shards: usize| {
+            let mut m = sharded(shards, 1, false);
+            let mut t = ThreadCtx::new(0);
+            m.txn_begin(&mut t, None);
+            for s in 0..shards as u64 {
+                let addr = s * 64; // modulo: one line per shard
+                m.store(&mut t, addr, s);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+            m.txn_commit(&mut t);
+            t.now()
+        };
+        let one = span(1);
+        let four = span(4);
+        // Same number of writes would cost ~4x the wire time if fences
+        // serialized; concurrent fences keep it well under 2x.
+        assert!(
+            four < one * 2,
+            "4-shard fence should overlap: 1 shard {one}, 4 shards {four}"
+        );
+    }
+
+    #[test]
+    fn single_shard_stall_is_visible_at_mirror_level() {
+        use crate::net::{FaultsConfig, OnLoss};
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::with_plan("kill:0@0", OnLoss::Halt).unwrap(),
+            ShardingConfig::new(2, ShardMapSpec::Modulo),
+            false,
+        )
+        .unwrap();
+        let mut t = ThreadCtx::new(0);
+        run_transact_txn(&mut m, &mut t, 2, 1);
+        let stall = m.stall().expect("both shards lost backup node 0");
+        assert_eq!(stall.required, 2);
+        assert_eq!(t.txns_done, 0, "stalled commit not counted");
     }
 }

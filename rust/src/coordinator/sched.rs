@@ -65,8 +65,11 @@ pub struct RunOutcome {
     pub epochs: u64,
     /// Per-thread completion times.
     pub per_thread: Vec<Ns>,
-    /// Per-backup persist horizons at the end of the run (index =
-    /// backup id; length = replica-group size).
+    /// Shards the mirror routed over (1 = sharding off). The
+    /// `per_backup_*` vectors below are flattened shard-major: index
+    /// `shard * backups + backup`, length `shards * backups`.
+    pub shards: usize,
+    /// Per-backup persist horizons at the end of the run.
     pub per_backup_horizon: Vec<Ns>,
     /// Per-backup out-of-quorum time accrued by the end of the run
     /// (fault-injection runs; all zeros otherwise).
@@ -74,9 +77,10 @@ pub struct RunOutcome {
     /// Per-backup catch-up resync volume (lines streamed from a peer on
     /// rejoin; fault-injection runs, zeros otherwise).
     pub per_backup_resync_lines: Vec<u64>,
-    /// The unsatisfiable durability fence that stopped the run, if any
-    /// (fault-injection runs under `on_loss = halt`, or a fully dead
-    /// group). When set, the workload did NOT run to completion.
+    /// The earliest unsatisfiable durability fence that stopped the
+    /// run, if any (fault-injection runs under `on_loss = halt`, or a
+    /// fully dead group). When set, the workload did NOT run to
+    /// completion.
     pub stalled: Option<Stall>,
 }
 
@@ -106,7 +110,8 @@ impl RunOutcome {
     }
 
     /// Replica lag: spread between the slowest and fastest backup's
-    /// persist horizon (0 for a single backup or NO-SM).
+    /// persist horizon across all shards (0 for a single backup or
+    /// NO-SM).
     pub fn backup_lag(&self) -> Ns {
         let max = self.per_backup_horizon.iter().copied().max().unwrap_or(0);
         let min = self.per_backup_horizon.iter().copied().min().unwrap_or(0);
@@ -125,7 +130,7 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     {
         let mut warming: Vec<bool> = vec![true; n];
         let mut left = n;
-        while left > 0 && mirror.fabric.stall().is_none() {
+        while left > 0 && mirror.stall().is_none() {
             let i = (0..n)
                 .filter(|&i| warming[i])
                 .min_by_key(|&i| ctxs[i].now())
@@ -144,10 +149,10 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         }
     }
 
-    // A stalled fabric (halt-mode fault injection) stops the run at the
-    // kill point: remaining transactions are abandoned, and the outcome
-    // reports the stall.
-    while remaining > 0 && mirror.fabric.stall().is_none() {
+    // A stalled fabric on any shard (halt-mode fault injection) stops
+    // the run at the kill point: remaining transactions are abandoned,
+    // and the outcome reports the stall.
+    while remaining > 0 && mirror.stall().is_none() {
         // Pick the live thread with the smallest clock.
         let i = (0..n)
             .filter(|&i| alive[i])
@@ -160,9 +165,10 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     }
 
     // Realize any fault events / resync completions the verb stream never
-    // reached (e.g. a rejoin scheduled after the last write).
+    // reached (e.g. a rejoin scheduled after the last write) — on every
+    // shard's fabric.
     let wall = ctxs.iter().map(|c| c.now()).max().unwrap_or(0);
-    mirror.fabric.settle(wall);
+    mirror.settle(wall);
 
     let mut out = RunOutcome::default();
     for c in &ctxs {
@@ -173,15 +179,11 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         out.epochs += c.epochs_done;
         out.per_thread.push(c.now() - c.stats_zero_at);
     }
-    out.per_backup_horizon = mirror.fabric.persist_horizons();
-    out.per_backup_dead_ns = mirror.fabric.accrued_dead_ns(wall);
-    out.per_backup_resync_lines = mirror
-        .fabric
-        .backup_stats()
-        .iter()
-        .map(|s| s.resync_lines)
-        .collect();
-    out.stalled = mirror.fabric.stall().copied();
+    out.shards = mirror.shard_count();
+    out.per_backup_horizon = mirror.persist_horizons();
+    out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);
+    out.per_backup_resync_lines = mirror.resync_lines();
+    out.stalled = mirror.stall().copied();
     out
 }
 
@@ -299,6 +301,35 @@ mod tests {
         assert_eq!(out.per_backup_dead_ns.len(), 2);
         assert!(out.per_backup_dead_ns[0] > 0, "killed backup accrues dead time");
         assert_eq!(out.per_backup_dead_ns[1], 0);
+    }
+
+    #[test]
+    fn outcome_flattens_per_backup_vectors_shard_major() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::coordinator::{ShardMapSpec, ShardingConfig};
+        use crate::net::FaultsConfig;
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::default(),
+            ShardingConfig::new(3, ShardMapSpec::Modulo),
+            false,
+        )
+        .unwrap();
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(20, 2, 2, 0x10000)];
+        let out = run_threads(&mut m, &mut srcs);
+        assert_eq!(out.shards, 3);
+        assert_eq!(out.per_backup_horizon.len(), 6, "3 shards x 2 backups");
+        assert_eq!(out.per_backup_dead_ns.len(), 6);
+        assert_eq!(out.txns, 20);
+        // A spread of line addresses reaches more than one shard.
+        assert!(
+            out.per_backup_horizon.iter().filter(|&&h| h > 0).count() > 2,
+            "writes should spread across shards: {:?}",
+            out.per_backup_horizon
+        );
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Sharding the PM line-address space across independent replica groups.
+//!
+//! The paper mirrors one primary's persistent memory to one replica
+//! group. Scaling that design to many users means partitioning the PM
+//! address space over `S` **shards**, each served by its own
+//! [`Fabric`](crate::net::Fabric) — its own backups, ack policy,
+//! durability ledgers, and fault plan — so write traffic spreads across
+//! independent groups and per-group quorums stay small.
+//!
+//! This module holds the *routing* half of that design:
+//!
+//! * [`ShardMapSpec`] — the pluggable partitioning function (`modulo`
+//!   line-interleaving, or `range:N` contiguous striping);
+//! * [`ShardMap`] — a spec bound to a shard count, mapping any PM
+//!   address to the shard that owns its cache line;
+//! * [`ShardingConfig`] — the `[sharding]` config table /
+//!   `--shards` / `--shard-map` CLI surface.
+//!
+//! The [`Mirror`](super::Mirror) consults the map on every `clwb` and
+//! routes ordering/durability fences to the shards a thread actually
+//! touched; see the coordinator docs for the cross-shard fence
+//! semantics. With `shards = 1` every map degenerates to the identity
+//! and the coordinator passes verbs through to the single fabric
+//! unchanged — the pre-sharding behaviour, pinned by
+//! `rust/tests/sharding.rs`.
+
+use crate::{line_of, Addr, LINE};
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// Routing bitmask width: shards a single thread can address. The
+/// coordinator tracks touched shards in a `u64` mask, so group counts
+/// beyond this are rejected at validation.
+pub const MAX_SHARDS: usize = 64;
+
+/// Default stripe width of the contiguous-range map (lines): 16 Ki
+/// lines = 1 MiB runs per shard before the next shard takes over.
+pub const DEFAULT_STRIPE_LINES: u64 = 1 << 14;
+
+/// The partitioning function family (pluggable shard map).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardMapSpec {
+    /// Line-interleaved: consecutive cache lines round-robin across
+    /// shards (finest spread; every multi-line object is scattered).
+    #[default]
+    Modulo,
+    /// Contiguous-range striping: runs of `stripe_lines` consecutive
+    /// lines stay on one shard before rotating to the next, so objects
+    /// smaller than a stripe are shard-local (`stripe_lines >= 1`).
+    Range { stripe_lines: u64 },
+}
+
+impl ShardMapSpec {
+    pub fn validate(&self) -> Result<()> {
+        if let ShardMapSpec::Range { stripe_lines: 0 } = self {
+            bail!("shard map range stripe must be >= 1 line");
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for ShardMapSpec {
+    type Err = anyhow::Error;
+
+    /// Parse a `--shard-map` spec: `modulo`, `range`, or `range:LINES`
+    /// (stripe width in cache lines, underscores allowed).
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "modulo" | "mod" => return Ok(ShardMapSpec::Modulo),
+            "range" => {
+                return Ok(ShardMapSpec::Range {
+                    stripe_lines: DEFAULT_STRIPE_LINES,
+                })
+            }
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("range:") {
+            let stripe_lines: u64 = rest
+                .trim()
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("shard map {s:?}: bad stripe width: {e}"))?;
+            let spec = ShardMapSpec::Range { stripe_lines };
+            spec.validate()?;
+            return Ok(spec);
+        }
+        bail!("unknown shard map {s:?}; expected modulo | range | range:LINES")
+    }
+}
+
+impl fmt::Display for ShardMapSpec {
+    /// Round-trips through [`FromStr`]: `modulo` / `range:N`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShardMapSpec::Modulo => f.write_str("modulo"),
+            ShardMapSpec::Range { stripe_lines } => write!(f, "range:{stripe_lines}"),
+        }
+    }
+}
+
+/// Sharding shape: `[sharding]` table / `--shards` + `--shard-map`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardingConfig {
+    /// Number of independent replica groups the PM space is split over.
+    pub shards: usize,
+    pub map: ShardMapSpec,
+}
+
+impl Default for ShardingConfig {
+    /// One shard: the paper's topology (sharding off).
+    fn default() -> Self {
+        ShardingConfig {
+            shards: 1,
+            map: ShardMapSpec::default(),
+        }
+    }
+}
+
+impl ShardingConfig {
+    pub fn new(shards: usize, map: ShardMapSpec) -> Self {
+        ShardingConfig { shards, map }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("sharding.shards must be >= 1 (0 shards cannot own the PM space)");
+        }
+        if self.shards > MAX_SHARDS {
+            bail!(
+                "sharding.shards must be <= {MAX_SHARDS}, got {}",
+                self.shards
+            );
+        }
+        self.map.validate()
+    }
+
+    /// Bind the spec to the shard count, yielding the runtime router.
+    pub fn build_map(&self) -> ShardMap {
+        ShardMap {
+            spec: self.map,
+            shards: self.shards,
+        }
+    }
+}
+
+/// A partitioning function bound to a shard count: maps every PM
+/// address to the shard owning its cache line. Total — every address
+/// has exactly one owner — so the shard images are disjoint and their
+/// union reconstructs the full PM space (the property cross-shard
+/// recovery relies on).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMap {
+    spec: ShardMapSpec,
+    shards: usize,
+}
+
+impl ShardMap {
+    pub fn new(shards: usize, spec: ShardMapSpec) -> Self {
+        ShardMap { spec, shards }
+    }
+
+    /// The identity map (sharding off).
+    pub fn single() -> Self {
+        ShardMap {
+            spec: ShardMapSpec::Modulo,
+            shards: 1,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn spec(&self) -> ShardMapSpec {
+        self.spec
+    }
+
+    /// The shard owning `addr`'s cache line.
+    #[inline]
+    pub fn shard_of(&self, addr: Addr) -> usize {
+        if self.shards == 1 {
+            return 0;
+        }
+        let line_idx = line_of(addr) / LINE;
+        match self.spec {
+            ShardMapSpec::Modulo => (line_idx % self.shards as u64) as usize,
+            ShardMapSpec::Range { stripe_lines } => {
+                ((line_idx / stripe_lines) % self.shards as u64) as usize
+            }
+        }
+    }
+}
+
+impl fmt::Display for ShardMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} x{}", self.spec, self.shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_and_display_round_trip() {
+        assert_eq!("modulo".parse::<ShardMapSpec>().unwrap(), ShardMapSpec::Modulo);
+        assert_eq!("MOD".parse::<ShardMapSpec>().unwrap(), ShardMapSpec::Modulo);
+        assert_eq!(
+            "range".parse::<ShardMapSpec>().unwrap(),
+            ShardMapSpec::Range {
+                stripe_lines: DEFAULT_STRIPE_LINES
+            }
+        );
+        assert_eq!(
+            "range:4_096".parse::<ShardMapSpec>().unwrap(),
+            ShardMapSpec::Range { stripe_lines: 4096 }
+        );
+        for spec in [
+            ShardMapSpec::Modulo,
+            ShardMapSpec::Range { stripe_lines: 128 },
+        ] {
+            assert_eq!(spec.to_string().parse::<ShardMapSpec>().unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn spec_parse_rejects_malformed() {
+        for bad in ["", "hash", "range:", "range:abc", "range:0", "modulo:4"] {
+            assert!(bad.parse::<ShardMapSpec>().is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        ShardingConfig::default().validate().unwrap();
+        ShardingConfig::new(64, ShardMapSpec::Modulo).validate().unwrap();
+        let err = ShardingConfig::new(0, ShardMapSpec::Modulo)
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        assert!(ShardingConfig::new(65, ShardMapSpec::Modulo).validate().is_err());
+        assert!(
+            ShardingConfig::new(2, ShardMapSpec::Range { stripe_lines: 0 })
+                .validate()
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn maps_are_total_and_stable() {
+        for cfg in [
+            ShardingConfig::new(4, ShardMapSpec::Modulo),
+            ShardingConfig::new(4, ShardMapSpec::Range { stripe_lines: 4 }),
+            ShardingConfig::new(3, ShardMapSpec::Range { stripe_lines: 16 }),
+        ] {
+            let map = cfg.build_map();
+            for i in 0..1000u64 {
+                let addr = 0x4000_0000_0000 + i * LINE;
+                let s = map.shard_of(addr);
+                assert!(s < cfg.shards, "{map}: {addr:#x} -> {s}");
+                // Same line (any byte offset) -> same shard.
+                assert_eq!(map.shard_of(addr + 63), s, "{map}");
+                // Deterministic.
+                assert_eq!(map.shard_of(addr), s, "{map}");
+            }
+        }
+    }
+
+    #[test]
+    fn modulo_interleaves_adjacent_lines() {
+        let map = ShardingConfig::new(4, ShardMapSpec::Modulo).build_map();
+        let base = 0x1000u64;
+        let shards: Vec<usize> =
+            (0..8).map(|i| map.shard_of(base + i * LINE)).collect();
+        assert_eq!(shards, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn range_keeps_stripes_contiguous() {
+        let map = ShardingConfig::new(2, ShardMapSpec::Range { stripe_lines: 4 })
+            .build_map();
+        let shards: Vec<usize> = (0..12).map(|i| map.shard_of(i * LINE)).collect();
+        assert_eq!(shards, vec![0, 0, 0, 0, 1, 1, 1, 1, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let map = ShardMap::single();
+        for addr in [0u64, 0x40, 0x4000_0000_0000, u64::MAX - 63] {
+            assert_eq!(map.shard_of(addr), 0);
+        }
+    }
+}

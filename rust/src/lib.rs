@@ -26,12 +26,21 @@
 //!   losses, and fault-aware recovery checks over the realized
 //!   alive/dead timeline ([`net::faults`], `[faults]` config keys,
 //!   `--fault-plan` CLI);
+//! * **address-space sharding**: the PM line space partitions over `S`
+//!   independent replica groups (pluggable [`coordinator::ShardMap`]:
+//!   modulo line-interleave or contiguous-range striping), each shard
+//!   with its own fabric, ack policy, ledgers and fault plan; a
+//!   transaction's commit fence completes at the max across the shards
+//!   it touched, and cross-shard recovery merges per-shard verdicts
+//!   ([`coordinator::shard`], `[sharding]` config keys, `--shards` /
+//!   `--shard-map` CLI; `shards = 1` reproduces the single-fabric path
+//!   event-for-event);
 //! * the mirroring coordinator that binds a primary node's persistency
-//!   traffic to the replica group over the simulated fabric
+//!   traffic to the replica groups over the simulated fabric
 //!   ([`coordinator`]);
 //! * failure injection and recovery checking, including the
 //!   cross-replica ledger consistency check (every committed txn durable
-//!   on the ack-policy-required set) ([`recovery`]);
+//!   on the ack-policy-required set) and its sharded merge ([`recovery`]);
 //! * persistent data structures and the WHISPER-like workload suite
 //!   ([`pstore`], [`workloads`]);
 //! * an AOT-compiled analytic performance model executed through PJRT

@@ -1,11 +1,12 @@
 //! Metrics: counters, log-scale histograms, the report formatters that
 //! regenerate the paper's figures as text tables, and the replica-group
-//! (per-backup + group-level) breakdown report.
+//! (per-backup + group-level) breakdown report with its per-shard
+//! rollup.
 
 pub mod hist;
 pub mod replica;
 pub mod report;
 
 pub use hist::LogHistogram;
-pub use replica::GroupReport;
+pub use replica::{GroupReport, ShardedReport};
 pub use report::{Fig4Row, Fig5Row, Table};

@@ -2,9 +2,13 @@
 //! for an N-way mirroring run (the replica-group analogue of the Fig. 4/5
 //! report formatters), including the failure-dynamics view — per-backup
 //! state, out-of-quorum (dead) time, catch-up resync volume and hand-off
-//! latency, and the stall that stopped a halt-mode run.
+//! latency, and the stall that stopped a halt-mode run — plus the
+//! sharded rollup ([`ShardedReport`]): one [`GroupReport`] per address-
+//! space shard with group totals and a machine-readable JSON dump.
 
+use crate::coordinator::Mirror;
 use crate::net::{BackupStats, Fabric, Stall};
+use crate::util::json;
 use crate::{Ns, LINE};
 
 use super::report::Table;
@@ -134,6 +138,114 @@ impl GroupReport {
         }
         out
     }
+
+    /// One group as a JSON object (element of the sharded dump).
+    pub fn to_json(&self) -> String {
+        let backups: Vec<String> = self
+            .stats
+            .iter()
+            .map(|s| {
+                json::obj(&[
+                    ("id", s.id.to_string()),
+                    ("state", json::esc(s.state.name())),
+                    ("writes", s.writes.to_string()),
+                    ("persists", s.persists.to_string()),
+                    ("persist_horizon_ns", s.persist_horizon.to_string()),
+                    ("last_fence_ns", s.last_fence.to_string()),
+                    ("dead_ns", s.dead_ns.to_string()),
+                    ("resync_lines", s.resync_lines.to_string()),
+                ])
+            })
+            .collect();
+        json::obj(&[
+            ("policy", json::esc(&self.policy)),
+            ("required", self.required.to_string()),
+            ("on_loss", json::esc(&self.on_loss)),
+            ("blocking_waits", self.blocking_waits.to_string()),
+            ("blocked_ns", self.blocked_ns.to_string()),
+            ("stalled", self.stalled.is_some().to_string()),
+            ("backups", json::arr(&backups)),
+        ])
+    }
+}
+
+/// Sharded rollup: one [`GroupReport`] per shard of a sharded
+/// [`Mirror`], with the routing map and cross-shard totals.
+#[derive(Clone, Debug)]
+pub struct ShardedReport {
+    /// Rendered shard map (e.g. `modulo x4`).
+    pub map: String,
+    pub per_shard: Vec<GroupReport>,
+}
+
+impl ShardedReport {
+    /// Capture per-shard reports from a (possibly sharded) mirror.
+    pub fn from_mirror(m: &Mirror) -> ShardedReport {
+        ShardedReport {
+            map: m.shard_map().to_string(),
+            per_shard: (0..m.shard_count())
+                .map(|s| GroupReport::from_fabric(m.shard_fabric(s)))
+                .collect(),
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.per_shard.len()
+    }
+
+    /// Total replicated line writes across all shards and backups.
+    pub fn total_writes(&self) -> u64 {
+        self.per_shard
+            .iter()
+            .flat_map(|r| r.stats.iter().map(|s| s.writes))
+            .sum()
+    }
+
+    /// Shard-imbalance factor: max over mean of per-shard write counts
+    /// (1.0 = perfectly balanced; meaningful only for `shards > 1`).
+    pub fn write_skew(&self) -> f64 {
+        let per_shard: Vec<u64> = self
+            .per_shard
+            .iter()
+            .map(|r| r.stats.iter().map(|s| s.writes).sum::<u64>())
+            .collect();
+        let max = per_shard.iter().copied().max().unwrap_or(0) as f64;
+        let mean = per_shard.iter().sum::<u64>() as f64 / per_shard.len().max(1) as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Render every shard's table plus the rollup line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (s, r) in self.per_shard.iter().enumerate() {
+            out.push_str(&format!("shard {s}: "));
+            out.push_str(&r.render());
+        }
+        out.push_str(&format!(
+            "shards: {} over map {}, {} total writes, write skew {:.2}x\n",
+            self.shards(),
+            self.map,
+            self.total_writes(),
+            self.write_skew(),
+        ));
+        out
+    }
+
+    /// The machine-readable dump (same schema stamp as `BENCH_*.json`;
+    /// see [`json::SCHEMA_VERSION`]).
+    pub fn to_json(&self) -> String {
+        let shards: Vec<String> = self.per_shard.iter().map(|r| r.to_json()).collect();
+        let doc = json::obj(&[
+            ("schema_version", json::SCHEMA_VERSION.to_string()),
+            ("map", json::esc(&self.map)),
+            ("shards", json::arr(&shards)),
+        ]);
+        format!("{doc}\n")
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +301,45 @@ mod tests {
         assert_eq!(r.horizon_lag(), 0);
         assert_eq!(r.fence_lag(), 0);
         assert_eq!(r.mean_block_ns(), 0.0);
+    }
+
+    #[test]
+    fn sharded_report_rolls_up_per_shard_groups() {
+        use crate::config::StrategyKind;
+        use crate::coordinator::{ShardMapSpec, ShardingConfig, ThreadCtx};
+        use crate::net::FaultsConfig;
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::default(),
+            ShardingConfig::new(2, ShardMapSpec::Modulo),
+            true,
+        )
+        .unwrap();
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        for i in 0..4u64 {
+            let addr = i * 64; // two lines per shard under modulo-2
+            m.store(&mut t, addr, i);
+            m.clwb(&mut t, addr);
+        }
+        m.sfence(&mut t);
+        m.txn_commit(&mut t);
+        let r = ShardedReport::from_mirror(&m);
+        assert_eq!(r.shards(), 2);
+        assert_eq!(r.total_writes(), 8, "2 lines x 2 backups x 2 shards");
+        assert!((r.write_skew() - 1.0).abs() < 1e-9, "balanced: {}", r.write_skew());
+        let text = r.render();
+        assert!(text.contains("shard 0:"), "{text}");
+        assert!(text.contains("shard 1:"), "{text}");
+        assert!(text.contains("write skew"), "{text}");
+        let j = r.to_json();
+        assert!(j.contains("\"schema_version\":"), "{j}");
+        assert!(j.contains("\"map\":\"modulo x2\""), "{j}");
+        assert!(j.contains("\"backups\":["), "{j}");
+        assert!(j.matches("\"policy\":\"all\"").count() == 2, "{j}");
     }
 
     #[test]

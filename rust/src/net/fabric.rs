@@ -105,6 +105,10 @@ pub struct Fabric {
     /// Latest instant fault state was advanced to (verbs + settle) —
     /// the "as of" point for open-interval dead-time in snapshots.
     seen: Ns,
+    /// Which shard of the coordinator's address-space partition this
+    /// fabric serves (0 when sharding is off); stamps [`Stall`]s so a
+    /// multi-shard run attributes the unsatisfiable fence.
+    shard: usize,
     stall: Option<Stall>,
     // stats
     pub blocking_waits: u64,
@@ -151,10 +155,24 @@ impl Fabric {
             last_handoff_ns: vec![0; n],
             transitions: Vec::new(),
             seen: 0,
+            shard: 0,
             stall: None,
             blocking_waits: 0,
             blocked_ns: 0,
         }
+    }
+
+    /// Tag this fabric as serving shard `s` of a sharded coordinator
+    /// (see [`crate::coordinator::shard`]); stalls it records carry the
+    /// tag. Purely diagnostic — no behaviour depends on it.
+    pub fn with_shard(mut self, s: usize) -> Self {
+        self.shard = s;
+        self
+    }
+
+    /// The shard this fabric serves (0 when sharding is off).
+    pub fn shard(&self) -> usize {
+        self.shard
     }
 
     /// The paper's topology: one backup, fully synchronous.
@@ -511,6 +529,7 @@ impl Fabric {
                 required: self.required,
                 policy: self.policy,
                 on_loss: self.faults.on_loss,
+                shard: self.shard,
             });
             return;
         }

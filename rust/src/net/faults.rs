@@ -307,6 +307,9 @@ pub struct Stall {
     pub required: usize,
     pub policy: AckPolicy,
     pub on_loss: OnLoss,
+    /// Shard whose fabric recorded the stall (0 when sharding is off —
+    /// see `coordinator::shard`).
+    pub shard: usize,
 }
 
 impl fmt::Display for Stall {
@@ -316,7 +319,11 @@ impl fmt::Display for Stall {
             "durability stalled at t={}: policy {} requires {} durable \
              backup(s) but only {} alive (on_loss = {})",
             self.at, self.policy, self.required, self.alive, self.on_loss
-        )
+        )?;
+        if self.shard > 0 {
+            write!(f, " [shard {}]", self.shard)?;
+        }
+        Ok(())
     }
 }
 
@@ -490,10 +497,14 @@ mod tests {
             required: 3,
             policy: AckPolicy::All,
             on_loss: OnLoss::Halt,
+            shard: 0,
         };
         let text = s.to_string();
         assert!(text.contains("t=1234"), "{text}");
         assert!(text.contains("requires 3"), "{text}");
         assert!(text.contains("only 1 alive"), "{text}");
+        assert!(!text.contains("shard"), "shard 0 is elided: {text}");
+        let text = Stall { shard: 2, ..s }.to_string();
+        assert!(text.contains("[shard 2]"), "{text}");
     }
 }

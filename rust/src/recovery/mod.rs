@@ -13,7 +13,13 @@
 //! Plus the epoch-ordering invariant that underpins both: a later-epoch
 //! write must never be durable while an earlier-epoch write of the same
 //! thread is not.
+//!
+//! For sharded coordinators (several independent replica groups
+//! partitioning the PM space — [`crate::coordinator::shard`]), the
+//! group checks run per shard and merge into a cross-shard verdict:
+//! see [`check_sharded_group_crash`].
 
+use crate::coordinator::ShardMap;
 use crate::mem::DurabilityLog;
 use crate::net::{effective_required, FaultTimeline, OnLoss};
 use crate::txn::undo::rollback_plan;
@@ -128,21 +134,17 @@ pub fn check_crash(
     Ok(k)
 }
 
-/// Sweep crash instants across the ledger (every event time, its
-/// predecessor instant, and midpoints) and check them all.
-pub fn check_all_crashes(
-    ledger: &DurabilityLog,
-    history: &TxnHistory,
-    log_bases: &[Addr],
-    data_addrs: &[Addr],
+/// Run `sample` at t=0, every instant in `times` (sorted and deduped
+/// here), each adjacent midpoint, and one instant past the last event —
+/// the shared crash-point sampling grid of all the sweep checks.
+/// Returns the number of crash points checked.
+fn sweep_crash_points(
+    mut times: Vec<Ns>,
+    mut sample: impl FnMut(Ns) -> Result<()>,
 ) -> Result<u64> {
-    let mut times: Vec<Ns> = ledger.events().iter().map(|e| e.at).collect();
     times.sort_unstable();
     times.dedup();
     let mut checked = 0u64;
-    let sample = |t: Ns| -> Result<()> {
-        check_crash(ledger, history, log_bases, data_addrs, t).map(|_| ())
-    };
     sample(0)?;
     checked += 1;
     for w in times.windows(2) {
@@ -157,6 +159,20 @@ pub fn check_all_crashes(
         checked += 2;
     }
     Ok(checked)
+}
+
+/// Sweep crash instants across the ledger (every event time, its
+/// predecessor instant, and midpoints) and check them all.
+pub fn check_all_crashes(
+    ledger: &DurabilityLog,
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+) -> Result<u64> {
+    let times: Vec<Ns> = ledger.events().iter().map(|e| e.at).collect();
+    sweep_crash_points(times, |t| {
+        check_crash(ledger, history, log_bases, data_addrs, t).map(|_| ())
+    })
 }
 
 /// Cross-replica consistency for one crash instant: Guarantee-1 must
@@ -290,34 +306,207 @@ pub fn check_faulted_group_crashes(
     on_loss: OnLoss,
     timeline: &FaultTimeline,
 ) -> Result<u64> {
-    let mut times: Vec<Ns> = ledgers
+    let times: Vec<Ns> = ledgers
         .iter()
         .flat_map(|l| l.events().iter().map(|e| e.at))
         .chain(timeline.transitions().iter().map(|t| t.0))
         .collect();
-    times.sort_unstable();
-    times.dedup();
-    let mut checked = 0u64;
-    let sample = |t: Ns| -> Result<()> {
+    sweep_crash_points(times, |t| {
         check_faulted_group_crash(
             ledgers, history, log_bases, data_addrs, required, on_loss, timeline, t,
         )
         .map(|_| ())
-    };
-    sample(0)?;
-    checked += 1;
-    for w in times.windows(2) {
-        for t in [w[0], w[0] + (w[1] - w[0]) / 2] {
-            sample(t)?;
-            checked += 1;
+    })
+}
+
+/// Cross-shard consistency for one crash instant, over a coordinator
+/// that partitions the PM line-address space across `S` independent
+/// replica groups (see [`crate::coordinator::shard`]).
+///
+/// Because the [`ShardMap`] is a *partition* — every line has exactly
+/// one owning shard — the shards' recovered images are disjoint and
+/// their union reconstructs the full PM space. The check runs the
+/// group-crash argument **per shard**, then merges:
+///
+/// * **Guarantee-1 per shard** — every surviving backup of every shard
+///   must recover to some committed prefix *restricted to the data
+///   addresses that shard owns*. Undo-log lines may live on a
+///   different shard than the data they guard, so each candidate image
+///   is completed with the healthiest survivor's image of every other
+///   shard before rollback (one shard is adversarial at a time; the
+///   other shards' durability is covered by their own iteration).
+/// * **Group Guarantee-2, merged** — per shard, the adversary removes
+///   `effective_required - 1` further backups and the best remaining
+///   prefix is taken; the cross-shard verdict is the **min** of the
+///   per-shard prefixes and must cover every transaction durably acked
+///   by `crash_t` (a commit fence completed only after *every* touched
+///   shard acked, so the min is the right merge).
+///
+/// Returns the merged worst-case surviving prefix length.
+#[allow(clippy::too_many_arguments)]
+pub fn check_sharded_group_crash(
+    shard_ledgers: &[Vec<&DurabilityLog>],
+    timelines: &[FaultTimeline],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    required: usize,
+    on_loss: OnLoss,
+    map: &ShardMap,
+    crash_t: Ns,
+) -> Result<usize> {
+    let s_count = shard_ledgers.len();
+    if s_count == 0 {
+        bail!("sharded group check needs at least one shard");
+    }
+    if map.shards() != s_count {
+        bail!(
+            "shard map covers {} shards but {} ledger groups were given",
+            map.shards(),
+            s_count
+        );
+    }
+    if timelines.len() != s_count {
+        bail!(
+            "{} timelines for {s_count} shards",
+            timelines.len()
+        );
+    }
+    let n = shard_ledgers[0].len();
+    if required == 0 || required > n {
+        bail!("required acks {required} invalid for a {n}-backup group");
+    }
+    // Survivor sets + the healthiest survivor's raw (pre-rollback)
+    // image per shard, used to complete other shards' candidates.
+    let mut alive_idx: Vec<Vec<usize>> = Vec::with_capacity(s_count);
+    let mut best_img: Vec<HashMap<Addr, u64>> = Vec::with_capacity(s_count);
+    for s in 0..s_count {
+        if shard_ledgers[s].len() != n {
+            bail!(
+                "shard {s} has {} backups, expected {n}",
+                shard_ledgers[s].len()
+            );
         }
+        if timelines[s].backups() != n {
+            bail!(
+                "shard {s} timeline covers {} backups but the group has {n}",
+                timelines[s].backups()
+            );
+        }
+        let alive = timelines[s].alive_at(crash_t);
+        let idx: Vec<usize> = (0..n).filter(|&b| alive[b]).collect();
+        if effective_required(required, idx.len(), on_loss) == 0 {
+            bail!(
+                "shard {s}: no ack-satisfying survivor set at crash \
+                 t={crash_t}: {} of {n} backups alive, policy requires \
+                 {required} (on_loss = {on_loss})",
+                idx.len()
+            );
+        }
+        let healthiest = idx
+            .iter()
+            .copied()
+            .max_by_key(|&b| {
+                let drained = shard_ledgers[s][b]
+                    .events()
+                    .iter()
+                    .filter(|e| e.at <= crash_t)
+                    .count();
+                (drained, std::cmp::Reverse(b))
+            })
+            .expect("idx nonempty");
+        best_img.push(shard_ledgers[s][healthiest].image_at(crash_t));
+        alive_idx.push(idx);
     }
-    if let Some(&last) = times.last() {
-        sample(last)?;
-        sample(last + 1)?;
-        checked += 2;
+    let durable = history.durable_by(crash_t);
+    let mut merged = usize::MAX;
+    for s in 0..s_count {
+        let owned: Vec<Addr> = data_addrs
+            .iter()
+            .copied()
+            .filter(|&a| map.shard_of(a) == s)
+            .collect();
+        let mut prefixes = Vec::with_capacity(alive_idx[s].len());
+        for &b in &alive_idx[s] {
+            // Adversarial on shard s, optimistic elsewhere: other
+            // shards contribute their healthiest survivor (disjoint
+            // address sets, so the union is conflict-free).
+            let mut img: HashMap<Addr, u64> = HashMap::new();
+            for (o, other) in best_img.iter().enumerate() {
+                if o != s {
+                    img.extend(other.iter().map(|(&k, &v)| (k, v)));
+                }
+            }
+            img.extend(shard_ledgers[s][b].image_at(crash_t));
+            for &log in log_bases {
+                for (addr, old) in rollback_plan(&img, log) {
+                    img.insert(crate::line_of(addr), old);
+                }
+            }
+            let k = (0..history.snapshots.len())
+                .rev()
+                .find(|&k| matches_snapshot(&img, &history.snapshots[k], &owned))
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "shard {s} backup {b}: failure atomicity violated at \
+                         crash t={crash_t}: recovered image matches no \
+                         committed prefix"
+                    )
+                })?;
+            prefixes.push(k);
+        }
+        let eff = effective_required(required, prefixes.len(), on_loss);
+        prefixes.sort_unstable_by(|a, b| b.cmp(a)); // descending
+        merged = merged.min(prefixes[eff - 1]);
     }
-    Ok(checked)
+    if merged < durable {
+        bail!(
+            "cross-shard durability violated at crash t={crash_t}: {durable} \
+             txns durably acked, but the merged shard verdict holds only \
+             prefix {merged}"
+        );
+    }
+    Ok(merged)
+}
+
+/// Sweep crash instants (union of every shard's ledger event times and
+/// timeline transitions, midpoints, and boundaries) through
+/// [`check_sharded_group_crash`]. Returns the number of crash points
+/// verified.
+pub fn check_sharded_group_crashes(
+    shard_ledgers: &[Vec<&DurabilityLog>],
+    timelines: &[FaultTimeline],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    required: usize,
+    on_loss: OnLoss,
+    map: &ShardMap,
+) -> Result<u64> {
+    let times: Vec<Ns> = shard_ledgers
+        .iter()
+        .flatten()
+        .flat_map(|l| l.events().iter().map(|e| e.at))
+        .chain(
+            timelines
+                .iter()
+                .flat_map(|tl| tl.transitions().iter().map(|t| t.0)),
+        )
+        .collect();
+    sweep_crash_points(times, |t| {
+        check_sharded_group_crash(
+            shard_ledgers,
+            timelines,
+            history,
+            log_bases,
+            data_addrs,
+            required,
+            on_loss,
+            map,
+            t,
+        )
+        .map(|_| ())
+    })
 }
 
 /// Epoch-ordering invariant across a whole replica group: each backup's
@@ -470,7 +659,7 @@ mod tests {
                     Mirror::with_replication(Platform::default(), kind, repl, true)
                         .unwrap();
                 let hist = drive_txns(&mut m, 4);
-                let ledgers = m.fabric.ledgers();
+                let ledgers = m.fabric().ledgers();
                 check_group_epoch_ordering(&ledgers)
                     .unwrap_or_else(|e| panic!("{kind:?}/{policy}: {e}"));
                 let checked = check_group_crashes(
@@ -723,6 +912,115 @@ mod tests {
             &tl,
         )
         .expect("dead-then-rejoined ledger must be accepted");
+    }
+
+    #[test]
+    fn sharded_group_crashes_pass_for_real_runs() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::coordinator::{ShardMapSpec, ShardingConfig};
+        use crate::net::{FaultsConfig, OnLoss};
+        for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+            let sharding = ShardingConfig::new(4, ShardMapSpec::Modulo);
+            let mut m = Mirror::try_build_sharded(
+                Platform::default(),
+                kind,
+                None,
+                ReplicationConfig::new(2, AckPolicy::All),
+                FaultsConfig::default(),
+                sharding,
+                true,
+            )
+            .unwrap();
+            let hist = drive_txns(&mut m, 4);
+            let ledgers = m.shard_ledgers();
+            let checked = check_sharded_group_crashes(
+                &ledgers,
+                &m.timelines(),
+                &hist,
+                &[LOG],
+                &[D0, D1],
+                2,
+                OnLoss::Halt,
+                m.shard_map(),
+            )
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            assert!(checked > 10, "{kind:?}: only {checked} crash points");
+        }
+    }
+
+    #[test]
+    fn sharded_check_fails_iff_some_shard_is_inconsistent() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::coordinator::{ShardMapSpec, ShardingConfig};
+        use crate::net::{FaultsConfig, OnLoss};
+        // 2 shards, 1 backup each. LOG/D0 land on shard 0, D1 on
+        // shard 1 (line indices 0x4000, 0x8000 even; 0x8001 odd).
+        let sharding = ShardingConfig::new(2, ShardMapSpec::Modulo);
+        let map = sharding.build_map();
+        assert_eq!(map.shard_of(D0), 0);
+        assert_eq!(map.shard_of(D1), 1);
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(1, AckPolicy::All),
+            FaultsConfig::default(),
+            sharding,
+            true,
+        )
+        .unwrap();
+        let hist = drive_txns(&mut m, 2);
+        let crash = m
+            .shard_ledgers()
+            .iter()
+            .flatten()
+            .map(|l| l.horizon())
+            .max()
+            .unwrap();
+        let tls = m.timelines();
+        let good = m.shard_ledgers();
+        let k = check_sharded_group_crash(
+            &good, &tls, &hist, &[LOG], &[D0, D1], 1, OnLoss::Halt, &map, crash,
+        )
+        .expect("healthy shards must pass");
+        assert_eq!(k, 2);
+        // Replace shard 1's ledger with an empty one: shard 1's prefix
+        // drops to 0 while shard 0 still holds everything, so the
+        // merged verdict must fail even though shard 0 alone passes.
+        let empty = DurabilityLog::new(true);
+        let bad = vec![good[0].clone(), vec![&empty]];
+        let err = check_sharded_group_crash(
+            &bad, &tls, &hist, &[LOG], &[D0, D1], 1, OnLoss::Halt, &map, crash,
+        );
+        assert!(err.is_err(), "lagging shard must sink the merged verdict");
+        // The intact shard alone (its owned addresses only) is fine.
+        check_group_crash(&good[0], &hist, &[LOG], &[D0], 1, crash)
+            .expect("shard 0 in isolation is consistent");
+        // Shape errors are rejected.
+        assert!(check_sharded_group_crash(
+            &good,
+            &tls[..1],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            1,
+            OnLoss::Halt,
+            &map,
+            crash
+        )
+        .is_err());
+        assert!(check_sharded_group_crash(
+            &good,
+            &tls,
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            1,
+            OnLoss::Halt,
+            &ShardMap::single(),
+            crash
+        )
+        .is_err());
     }
 
     #[test]

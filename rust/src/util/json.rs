@@ -1,0 +1,106 @@
+//! Minimal JSON assembly helpers (no `serde` in the offline registry).
+//!
+//! Shared by the bench harness's `BENCH_*.json` emission
+//! ([`crate::bench`]) and the per-shard replica-group report dump
+//! ([`crate::metrics::replica`]), so both speak the same escaping and
+//! number rules and stamp the same [`SCHEMA_VERSION`] that CI's
+//! `python/check_bench_json.py` asserts on.
+
+/// Schema version stamped into every JSON artifact this crate emits.
+/// Bump when a field is renamed/removed or its meaning changes; the CI
+/// checker (`python/check_bench_json.py`) pins this value.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// JSON string rendering with escaping (Rust's `{:?}` Debug escapes are
+/// not JSON). Returns the quoted, escaped string.
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON-safe float rendering (JSON has no NaN/Inf: both collapse to 0).
+pub fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// An `Option<f64>` as a JSON number or `null`.
+pub fn opt_num(x: Option<f64>) -> String {
+    match x {
+        Some(v) => num(v),
+        None => "null".to_string(),
+    }
+}
+
+/// Render `pairs` (key, pre-rendered value) as a JSON object. Values
+/// must already be valid JSON fragments (use [`esc`]/[`num`] for
+/// scalars); keys are escaped here.
+pub fn obj(pairs: &[(&str, String)]) -> String {
+    let body: Vec<String> = pairs
+        .iter()
+        .map(|(k, v)| format!("{}:{v}", esc(k)))
+        .collect();
+    format!("{{{}}}", body.join(","))
+}
+
+/// Render pre-rendered JSON fragments as a JSON array.
+pub fn arr(items: &[String]) -> String {
+    format!("[{}]", items.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_are_escaped_for_json_not_rust() {
+        assert_eq!(esc("plain"), "\"plain\"");
+        assert_eq!(esc("a\"b"), "\"a\\\"b\"");
+        assert_eq!(esc("a\\b"), "\"a\\\\b\"");
+        assert_eq!(esc("a\nb\tc"), "\"a\\nb\\tc\"");
+        // Control chars become \u escapes (valid JSON), not Rust's \u{..}.
+        assert_eq!(esc("\u{7}"), "\"\\u0007\"");
+        assert!(!esc("\u{7}").contains('{'));
+    }
+
+    #[test]
+    fn numbers_never_leak_nan_or_inf() {
+        assert_eq!(num(1234.5678), "1234.568");
+        assert_eq!(num(f64::NAN), "0");
+        assert_eq!(num(f64::INFINITY), "0");
+        assert_eq!(num(f64::NEG_INFINITY), "0");
+        assert_eq!(opt_num(None), "null");
+        assert_eq!(opt_num(Some(2.0)), "2.000");
+    }
+
+    #[test]
+    fn obj_and_arr_compose() {
+        let o = obj(&[
+            ("name", esc("x\"y")),
+            ("n", num(1.0)),
+            ("xs", arr(&[num(1.0), num(2.0)])),
+        ]);
+        assert_eq!(
+            o,
+            "{\"name\":\"x\\\"y\",\"n\":1.000,\"xs\":[1.000,2.000]}"
+        );
+        assert_eq!(arr(&[]), "[]");
+        assert_eq!(obj(&[]), "{}");
+    }
+}

@@ -1,5 +1,7 @@
-//! Small self-contained utilities: PRNG, stable hashing, f64 statistics.
+//! Small self-contained utilities: PRNG, stable hashing, f64 statistics,
+//! and hand-rolled JSON assembly.
 
+pub mod json;
 pub mod prng;
 pub mod stats;
 

@@ -4,5 +4,5 @@
 pub mod transact;
 pub mod whisper;
 
-pub use transact::{run_transact, run_transact_with, TransactConfig};
+pub use transact::{run_transact, run_transact_sharded, run_transact_with, TransactConfig};
 pub use whisper::{run_whisper, run_whisper_with, WhisperApp, WhisperConfig};

@@ -113,6 +113,29 @@ pub fn run_transact_faulted(
     Ok(run_transact_on(&mut mirror, cfg))
 }
 
+/// Run Transact against `sharding.shards` independent replica groups
+/// partitioning the PM line-address space (see
+/// [`crate::coordinator::shard`]); each shard gets the `repl` group
+/// shape. Fails on an invalid replication or sharding config.
+pub fn run_transact_sharded(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    sharding: crate::coordinator::ShardingConfig,
+    cfg: TransactConfig,
+) -> Result<RunOutcome> {
+    let mut mirror = Mirror::try_build_sharded(
+        plat.clone(),
+        kind,
+        None,
+        repl,
+        crate::net::FaultsConfig::default(),
+        sharding,
+        false,
+    )?;
+    Ok(run_transact_on(&mut mirror, cfg))
+}
+
 /// Run Transact on a caller-built mirror (exposes the fabric for
 /// replica-group metrics afterwards).
 pub fn run_transact_on(mirror: &mut Mirror, cfg: TransactConfig) -> RunOutcome {

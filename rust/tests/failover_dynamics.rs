@@ -44,7 +44,7 @@ fn drive_txns(m: &mut Mirror, t: &mut ThreadCtx, n: u64) -> TxnHistory {
         tx.write(m, t, D0, 100 + i);
         tx.write(m, t, D1, 200 + i);
         tx.commit(m, t);
-        if m.fabric.stall().is_some() {
+        if m.stall().is_some() {
             break;
         }
         let mut snap = HashMap::new();
@@ -86,7 +86,7 @@ fn fault_matrix_kill_each_backup_each_phase() {
                 let mut t = ThreadCtx::new(0);
                 let hist = drive_txns(&mut m, &mut t, TXNS);
                 assert!(
-                    m.fabric.stall().is_none(),
+                    m.stall().is_none(),
                     "{policy}/kill {victim}@{num}/{den}: degrade must not stall"
                 );
                 assert_eq!(
@@ -94,8 +94,8 @@ fn fault_matrix_kill_each_backup_each_phase() {
                     TXNS as usize,
                     "{policy}/kill {victim}@{num}/{den}: run must complete"
                 );
-                m.fabric.settle(t.now());
-                let ledgers = m.fabric.ledgers();
+                m.settle(t.now());
+                let ledgers = m.fabric().ledgers();
                 check_group_epoch_ordering(&ledgers).unwrap();
                 let survivors: Vec<_> = (0..3)
                     .filter(|&b| b != victim)
@@ -141,7 +141,7 @@ fn halt_stops_at_kill_point_quorum_completes() {
     let mut m = build(AckPolicy::All, faults(&plan, OnLoss::Halt));
     let mut t = ThreadCtx::new(0);
     let hist = drive_txns(&mut m, &mut t, TXNS);
-    let stall = *m.fabric.stall().expect("all + halt must stall");
+    let stall = *m.stall().expect("all + halt must stall");
     assert!(stall.at >= kill_at, "stalled at {} before the kill", stall.at);
     assert_eq!(stall.required, 3);
     assert_eq!(stall.alive, 2);
@@ -151,7 +151,7 @@ fn halt_stops_at_kill_point_quorum_completes() {
     );
     // Every transaction acked before the stall is durable on EVERY
     // backup (the all-policy never weakened).
-    let ledgers = m.fabric.ledgers();
+    let ledgers = m.fabric().ledgers();
     check_group_crashes(&ledgers, &hist, &[log_base_for(0)], &[D0, D1], 3)
         .expect("acked prefix must be fully replicated");
 
@@ -159,17 +159,17 @@ fn halt_stops_at_kill_point_quorum_completes() {
     let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Halt));
     let mut t = ThreadCtx::new(0);
     let hist = drive_txns(&mut m, &mut t, TXNS);
-    assert!(m.fabric.stall().is_none(), "quorum:2 tolerates one loss");
+    assert!(m.stall().is_none(), "quorum:2 tolerates one loss");
     assert_eq!(hist.committed(), TXNS as usize);
-    m.fabric.settle(t.now());
+    m.settle(t.now());
     let checked = check_faulted_group_crashes(
-        &m.fabric.ledgers(),
+        &m.fabric().ledgers(),
         &hist,
         &[log_base_for(0)],
         &[D0, D1],
         2,
         OnLoss::Halt,
-        &m.fabric.timeline(),
+        &m.fabric().timeline(),
     )
     .expect("two survivors satisfy quorum:2");
     assert!(checked > 10);
@@ -189,19 +189,19 @@ fn rejoin_resyncs_and_reenters_quorum() {
     let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Halt));
     let mut t = ThreadCtx::new(0);
     let hist = drive_txns(&mut m, &mut t, TXNS);
-    assert!(m.fabric.stall().is_none());
+    assert!(m.stall().is_none());
     assert_eq!(hist.committed(), TXNS as usize);
     // Settle beyond any pending resync completion so the backup is back.
-    m.fabric.settle(t.now().max(rejoin_at + 10_000_000));
-    assert_eq!(m.fabric.state(2), BackupState::Alive, "must re-enter");
-    let stats = m.fabric.backup_stats();
+    m.settle(t.now().max(rejoin_at + 10_000_000));
+    assert_eq!(m.fabric().state(2), BackupState::Alive, "must re-enter");
+    let stats = m.fabric().backup_stats();
     assert_eq!(stats[2].resyncs, 1);
     assert!(stats[2].resync_lines > 0, "missed suffix must be streamed");
     assert!(stats[2].dead_ns > 0);
-    assert!(stats[2].last_handoff_ns >= m.fabric.faults().handoff_ns);
+    assert!(stats[2].last_handoff_ns >= m.fabric().faults().handoff_ns);
     assert_eq!(stats[0].resyncs, 0);
     // Ledgers converge to the same event count.
-    let ledgers = m.fabric.ledgers();
+    let ledgers = m.fabric().ledgers();
     assert_eq!(ledgers[2].len(), ledgers[0].len(), "resync must close the gap");
     check_group_epoch_ordering(&ledgers).unwrap();
     let checked = check_faulted_group_crashes(
@@ -211,12 +211,12 @@ fn rejoin_resyncs_and_reenters_quorum() {
         &[D0, D1],
         2,
         OnLoss::Halt,
-        &m.fabric.timeline(),
+        &m.fabric().timeline(),
     )
     .expect("dead-then-rejoined ledger must pass the fault-aware sweep");
     assert!(checked > 10);
     // The timeline recorded the whole round trip: down, then up again.
-    let tl = m.fabric.timeline();
+    let tl = m.fabric().timeline();
     assert_eq!(tl.alive_count_at(kill_at), 2);
     assert_eq!(tl.alive_count_at(u64::MAX), 3);
 }
@@ -232,14 +232,14 @@ fn rejoin_before_any_write_is_a_noop_resync() {
     // Idle past the resync window before touching PM.
     m.compute(&mut t, 1_000);
     let hist = drive_txns(&mut m, &mut t, 3);
-    assert!(m.fabric.stall().is_none(), "backup is back before any write");
+    assert!(m.stall().is_none(), "backup is back before any write");
     assert_eq!(hist.committed(), 3);
-    assert_eq!(m.fabric.state(1), BackupState::Alive);
-    let stats = m.fabric.backup_stats();
+    assert_eq!(m.fabric().state(1), BackupState::Alive);
+    let stats = m.fabric().backup_stats();
     assert_eq!(stats[1].resync_lines, 0, "nothing to stream");
     assert_eq!(stats[1].resyncs, 1);
     // All three ledgers identical: the outage predates every write.
-    let ledgers = m.fabric.ledgers();
+    let ledgers = m.fabric().ledgers();
     assert_eq!(ledgers[1].len(), ledgers[0].len());
     check_group_crashes(&ledgers, &hist, &[log_base_for(0)], &[D0, D1], 3)
         .expect("full group durability holds");
@@ -256,7 +256,7 @@ fn all_backups_dead_stalls_in_any_mode() {
         );
         let mut t = ThreadCtx::new(0);
         let hist = drive_txns(&mut m, &mut t, 3);
-        let stall = m.fabric.stall().unwrap_or_else(|| panic!("{mode}: no stall"));
+        let stall = m.stall().unwrap_or_else(|| panic!("{mode}: no stall"));
         assert_eq!(stall.alive, 0, "{mode}");
         assert_eq!(hist.committed(), 0, "{mode}: nothing durably acked");
     }
@@ -274,15 +274,15 @@ fn degraded_all_keeps_survivor_durability() {
     let mut t = ThreadCtx::new(0);
     let hist = drive_txns(&mut m, &mut t, TXNS);
     assert_eq!(hist.committed(), TXNS as usize);
-    m.fabric.settle(t.now());
+    m.settle(t.now());
     let checked = check_faulted_group_crashes(
-        &m.fabric.ledgers(),
+        &m.fabric().ledgers(),
         &hist,
         &[log_base_for(0)],
         &[D0, D1],
         3,
         OnLoss::Degrade,
-        &m.fabric.timeline(),
+        &m.fabric().timeline(),
     )
     .expect("degraded all must still cover the survivors");
     assert!(checked > 10);

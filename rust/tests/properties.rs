@@ -267,7 +267,7 @@ fn prop_surviving_ledgers_recover_a_committed_prefix() {
                     img.insert(a, v);
                 }
                 tx.commit(m, &mut t);
-                if m.fabric.stall().is_some() {
+                if m.stall().is_some() {
                     break;
                 }
                 hist.commit(img.clone(), t.last_dfence);
@@ -293,9 +293,9 @@ fn prop_surviving_ledgers_recover_a_committed_prefix() {
         )
         .unwrap();
         let (hist, end) = drive(&mut m);
-        m.fabric.settle(end);
-        let timeline = m.fabric.timeline();
-        let ledgers = m.fabric.ledgers();
+        m.settle(end);
+        let timeline = m.fabric().timeline();
+        let ledgers = m.fabric().ledgers();
         // Crash horizon at which every surviving ledger has drained.
         let horizon = ledgers.iter().map(|l| l.horizon()).max().unwrap_or(0);
         let alive = timeline.alive_at(horizon);

@@ -83,7 +83,7 @@ fn full_group_mirroring_and_ordering() {
             tx.write(&mut m, &mut t, 0x4000_0000 + (i % 3) * 64, i);
             tx.commit(&mut m, &mut t);
         }
-        let ledgers = m.fabric.ledgers();
+        let ledgers = m.fabric().ledgers();
         check_group_epoch_ordering(&ledgers).unwrap_or_else(|e| panic!("{kind}: {e}"));
         let len0 = ledgers[0].len();
         assert!(len0 > 0, "{kind}: empty ledger");
@@ -92,10 +92,10 @@ fn full_group_mirroring_and_ordering() {
         }
         // All-policy dfence covers the slowest backup.
         assert!(
-            t.last_dfence >= m.fabric.group_horizon(),
+            t.last_dfence >= m.fabric().group_horizon(),
             "{kind}: dfence {} < group horizon {}",
             t.last_dfence,
-            m.fabric.group_horizon()
+            m.fabric().group_horizon()
         );
     }
 }
@@ -126,7 +126,7 @@ fn group_recovery_under_injected_failures() {
                 snap.insert(d1, 20 + i);
                 hist.commit(snap, t.last_dfence);
             }
-            let ledgers = m.fabric.ledgers();
+            let ledgers = m.fabric().ledgers();
             let checked = check_group_crashes(
                 &ledgers,
                 &hist,
@@ -206,7 +206,7 @@ fn group_metrics_surface() {
         Mirror::with_replication(p.clone(), StrategyKind::SmDd, repl, false).unwrap();
     let out = pmsm::workloads::transact::run_transact_on(&mut m, cfg(4, 1, 50));
     assert_eq!(out.per_backup_horizon.len(), 3);
-    let report = GroupReport::from_fabric(&m.fabric);
+    let report = GroupReport::from_fabric(m.fabric());
     assert_eq!(report.backups(), 3);
     assert_eq!(report.required, 2);
     for (s, &h) in report.stats.iter().zip(&out.per_backup_horizon) {

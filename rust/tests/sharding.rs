@@ -1,0 +1,337 @@
+//! Sharding acceptance tests: the `shards = 1` regression anchor
+//! (event-for-event identical to the pre-shard single-fabric path), the
+//! cross-shard recovery property (merged verdict consistent iff every
+//! shard's prefix is individually consistent), and the shards=4 x
+//! backups=2 end-to-end commit + recover scenario.
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, ShardMapSpec, ShardingConfig, ThreadCtx};
+use pmsm::mem::DurabilityLog;
+use pmsm::net::{FaultsConfig, OnLoss};
+use pmsm::pstore::log_base_for;
+use pmsm::ptest::check;
+use pmsm::recovery::{self, TxnHistory};
+use pmsm::txn::Txn;
+use pmsm::workloads::transact::{run_transact_on, run_transact_sharded};
+use pmsm::workloads::{run_transact_with, TransactConfig};
+use std::collections::HashMap;
+
+fn cfg(txns: u64) -> TransactConfig {
+    TransactConfig {
+        epochs: 4,
+        writes: 2,
+        txns,
+        ..Default::default()
+    }
+}
+
+fn sharded_mirror(
+    kind: StrategyKind,
+    shards: usize,
+    map: ShardMapSpec,
+    backups: usize,
+    policy: AckPolicy,
+    ledger: bool,
+) -> Mirror {
+    Mirror::try_build_sharded(
+        Platform::default(),
+        kind,
+        None,
+        ReplicationConfig::new(backups, policy),
+        FaultsConfig::default(),
+        ShardingConfig::new(shards, map),
+        ledger,
+    )
+    .unwrap()
+}
+
+/// The pinning test: a `shards = 1` mirror — under *any* map spec — is
+/// event-for-event identical to the single-fabric path: same makespan,
+/// same ledger event stream on every backup, same persist horizons.
+#[test]
+fn shards_1_pins_single_fabric_event_stream() {
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let mut single =
+            Mirror::with_replication(Platform::default(), kind, repl, true).unwrap();
+        let base_out = run_transact_on(&mut single, cfg(50));
+        for map in [
+            ShardMapSpec::Modulo,
+            ShardMapSpec::Range { stripe_lines: 128 },
+        ] {
+            let mut m = sharded_mirror(kind, 1, map, 2, AckPolicy::All, true);
+            let out = run_transact_on(&mut m, cfg(50));
+            assert_eq!(out.makespan, base_out.makespan, "{kind:?}/{map}");
+            assert_eq!(out.txns, base_out.txns, "{kind:?}/{map}");
+            assert_eq!(out.shards, 1, "{kind:?}/{map}");
+            assert_eq!(
+                out.per_backup_horizon, base_out.per_backup_horizon,
+                "{kind:?}/{map}"
+            );
+            for b in 0..2 {
+                assert_eq!(
+                    single.backup(b).ledger.events(),
+                    m.backup(b).ledger.events(),
+                    "{kind:?}/{map}: backup {b} event stream diverged"
+                );
+            }
+        }
+    }
+}
+
+/// More shards never lose writes: every line lands on exactly one
+/// shard, and the per-shard ledger totals sum to the full write stream
+/// on every backup index.
+#[test]
+fn shard_partition_conserves_the_write_stream() {
+    let c = cfg(100);
+    let single = run_transact_with(
+        &Platform::default(),
+        StrategyKind::SmOb,
+        None,
+        ReplicationConfig::new(2, AckPolicy::All),
+        c,
+    )
+    .unwrap();
+    for (shards, map) in [
+        (2, ShardMapSpec::Modulo),
+        (4, ShardMapSpec::Modulo),
+        (4, ShardMapSpec::Range { stripe_lines: 64 }),
+    ] {
+        let mut m = sharded_mirror(StrategyKind::SmOb, shards, map, 2, AckPolicy::All, true);
+        let out = run_transact_on(&mut m, c);
+        assert_eq!(out.txns, c.txns, "{shards}/{map}");
+        assert_eq!(out.writes, single.writes, "{shards}/{map}");
+        for b in 0..2 {
+            let total: usize = (0..shards)
+                .map(|s| m.shard_fabric(s).backup(b).ledger.len())
+                .sum();
+            assert_eq!(
+                total as u64, single.writes,
+                "{shards}/{map}: backup {b} lost or duplicated writes"
+            );
+        }
+    }
+}
+
+/// Drive `txns` two-write transactions over a (sharded) mirror,
+/// recording the golden history.
+fn drive(m: &mut Mirror, txns: u64, d0: u64, d1: u64) -> TxnHistory {
+    let mut t = ThreadCtx::new(0);
+    let log = log_base_for(0);
+    let mut hist = TxnHistory::new(HashMap::new());
+    for i in 0..txns {
+        let mut tx = Txn::begin(m, &mut t, log, None);
+        tx.write(m, &mut t, d0, 100 + i);
+        tx.write(m, &mut t, d1, 200 + i);
+        tx.commit(m, &mut t);
+        let mut snap = HashMap::new();
+        snap.insert(d0, 100 + i);
+        snap.insert(d1, 200 + i);
+        hist.commit(snap, t.last_dfence);
+    }
+    m.settle(t.now());
+    hist
+}
+
+/// Acceptance scenario: a `shards = 4, backups = 2` end-to-end run
+/// commits every transaction and the cross-shard recovery sweep holds
+/// at every crash point, for every strategy and both map families.
+#[test]
+fn sharded_end_to_end_commits_and_recovers() {
+    let d0 = 0x20_0000u64;
+    let d1 = 0x20_0040u64;
+    let log = log_base_for(0);
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        for map in [ShardMapSpec::Modulo, ShardMapSpec::Range { stripe_lines: 2 }] {
+            let mut m = sharded_mirror(kind, 4, map, 2, AckPolicy::All, true);
+            let hist = drive(&mut m, 5, d0, d1);
+            assert_eq!(hist.committed(), 5, "{kind:?}/{map}");
+            let ledgers = m.shard_ledgers();
+            for (s, ls) in ledgers.iter().enumerate() {
+                recovery::check_group_epoch_ordering(ls)
+                    .unwrap_or_else(|e| panic!("{kind:?}/{map} shard {s}: {e}"));
+            }
+            let checked = recovery::check_sharded_group_crashes(
+                &ledgers,
+                &m.timelines(),
+                &hist,
+                &[log],
+                &[d0, d1],
+                2,
+                OnLoss::Halt,
+                m.shard_map(),
+            )
+            .unwrap_or_else(|e| panic!("{kind:?}/{map}: {e}"));
+            assert!(checked > 10, "{kind:?}/{map}: only {checked} crash points");
+        }
+    }
+}
+
+/// Property (cross-shard verdict): for random shard counts, maps, and
+/// workloads, the merged verdict is consistent — and corrupting a
+/// single random shard's ledgers (dropping a durable suffix) makes the
+/// merged verdict fail, i.e. the merge is exactly as strong as its
+/// weakest shard.
+#[test]
+fn prop_merged_verdict_iff_every_shard_consistent() {
+    check("sharded-verdict", 12, |g| {
+        let shards = g.u64(2, 5) as usize;
+        let txns = g.u64(2, 5);
+        let stripe = g.u64(1, 8);
+        let map = if g.u64(0, 1) == 0 {
+            ShardMapSpec::Modulo
+        } else {
+            ShardMapSpec::Range { stripe_lines: stripe }
+        };
+        let d0 = 0x20_0000u64;
+        let d1 = 0x20_0040u64 + g.u64(0, 3) * 64;
+        let log = log_base_for(0);
+        let mut m =
+            sharded_mirror(StrategyKind::SmOb, shards, map, 2, AckPolicy::All, true);
+        let hist = drive(&mut m, txns, d0, d1);
+        let ledgers = m.shard_ledgers();
+        let tls = m.timelines();
+        let smap = *m.shard_map();
+        // Forward direction: the real run passes everywhere.
+        recovery::check_sharded_group_crashes(
+            &ledgers,
+            &tls,
+            &hist,
+            &[log],
+            &[d0, d1],
+            2,
+            OnLoss::Halt,
+            &smap,
+        )
+        .unwrap();
+        // Backward direction: blank out the shard owning d1 on every
+        // backup — its prefix collapses below the durable count, so the
+        // merged verdict must fail at the final crash point, while the
+        // other shards' restricted checks still pass.
+        let victim = smap.shard_of(d1);
+        let empty = DurabilityLog::new(true);
+        let corrupted: Vec<Vec<&DurabilityLog>> = ledgers
+            .iter()
+            .enumerate()
+            .map(|(s, ls)| {
+                if s == victim {
+                    ls.iter().map(|_| &empty).collect()
+                } else {
+                    ls.clone()
+                }
+            })
+            .collect();
+        let crash = ledgers
+            .iter()
+            .flatten()
+            .map(|l| l.horizon())
+            .max()
+            .unwrap();
+        assert!(hist.durable_by(crash) > 0, "something must be durable");
+        let err = recovery::check_sharded_group_crash(
+            &corrupted,
+            &tls,
+            &hist,
+            &[log],
+            &[d0, d1],
+            2,
+            OnLoss::Halt,
+            &smap,
+            crash,
+        );
+        assert!(
+            err.is_err(),
+            "an inconsistent shard must sink the merged verdict \
+             (shards={shards}, map={map}, victim={victim})"
+        );
+        // The healthy run's verdict at the same point equals the full
+        // history — nothing is lost by the merge itself.
+        let k = recovery::check_sharded_group_crash(
+            &ledgers,
+            &tls,
+            &hist,
+            &[log],
+            &[d0, d1],
+            2,
+            OnLoss::Halt,
+            &smap,
+            crash,
+        )
+        .unwrap();
+        assert_eq!(k as u64, txns, "merged verdict covers the full history");
+    });
+}
+
+/// Sharding composes with fault injection: killing backup node 1 kills
+/// replica 1 of every shard; degrade completes on the survivors and the
+/// fault-aware sharded sweep accepts the realized timelines.
+#[test]
+fn sharded_run_with_faults_degrades_and_recovers() {
+    let d0 = 0x20_0000u64;
+    let d1 = 0x20_0040u64;
+    let log = log_base_for(0);
+    let mut m = Mirror::try_build_sharded(
+        Platform::default(),
+        StrategyKind::SmOb,
+        None,
+        ReplicationConfig::new(2, AckPolicy::All),
+        FaultsConfig::with_plan("kill:1@20000", OnLoss::Degrade).unwrap(),
+        ShardingConfig::new(2, ShardMapSpec::Modulo),
+        true,
+    )
+    .unwrap();
+    let hist = drive(&mut m, 8, d0, d1);
+    assert!(m.stall().is_none(), "degrade must complete");
+    assert_eq!(hist.committed(), 8);
+    for s in 0..2 {
+        // The kill applies to every shard's replica 1 once its verb
+        // stream reaches the kill instant.
+        assert!(
+            !m.shard_fabric(s).state(1).is_alive(),
+            "shard {s} replica 1 should be dead"
+        );
+    }
+    recovery::check_sharded_group_crashes(
+        &m.shard_ledgers(),
+        &m.timelines(),
+        &hist,
+        &[log],
+        &[d0, d1],
+        2,
+        OnLoss::Degrade,
+        m.shard_map(),
+    )
+    .expect("fault-aware sharded sweep");
+}
+
+/// Sharded throughput sanity at the workload level: the sharded run
+/// commits the full transaction count and, for the All policy, more
+/// shards never reduce the committed count or lose per-backup horizons.
+#[test]
+fn sharded_transact_outcome_shape() {
+    let c = cfg(80);
+    for shards in [1usize, 2, 4] {
+        let out = run_transact_sharded(
+            &Platform::default(),
+            StrategyKind::SmOb,
+            ReplicationConfig::new(2, AckPolicy::All),
+            ShardingConfig::new(shards, ShardMapSpec::Modulo),
+            c,
+        )
+        .unwrap();
+        assert_eq!(out.txns, c.txns, "shards={shards}");
+        assert_eq!(out.shards, shards);
+        assert_eq!(out.per_backup_horizon.len(), shards * 2);
+        assert!(out.stalled.is_none());
+    }
+    // Invalid shapes surface as errors, not panics.
+    assert!(run_transact_sharded(
+        &Platform::default(),
+        StrategyKind::SmOb,
+        ReplicationConfig::new(2, AckPolicy::All),
+        ShardingConfig::new(0, ShardMapSpec::Modulo),
+        c,
+    )
+    .is_err());
+}
