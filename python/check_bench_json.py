@@ -30,13 +30,18 @@ SCHEMA_VERSION = 1
 
 REQUIRED_RESULT_KEYS = ("name", "iters", "mean_ns", "stddev_ns", "min_ns")
 OPTIONAL_NUMBER_KEYS = ("elems_per_iter", "elems_per_sec")
+# Doorbell-batching counters (rust/src/net/wqe.rs): optional everywhere,
+# but whenever both are present the amortization invariant must hold,
+# and the fig9 bench must emit them on every result.
+COUNTER_KEYS = ("doorbells", "posted_wqes")
+BENCHES_REQUIRING_COUNTERS = ("fig9_batching",)
 
 
 def _is_finite_number(x) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool) and math.isfinite(x)
 
 
-def check_result(doc_name: str, i: int, result) -> list[str]:
+def check_result(doc_name: str, i: int, result, require_counters: bool = False) -> list[str]:
     errors = []
     where = f"{doc_name}: results[{i}]"
     if not isinstance(result, dict):
@@ -44,6 +49,10 @@ def check_result(doc_name: str, i: int, result) -> list[str]:
     for key in REQUIRED_RESULT_KEYS:
         if key not in result:
             errors.append(f"{where}: missing key {key!r}")
+    if require_counters:
+        for key in COUNTER_KEYS:
+            if key not in result:
+                errors.append(f"{where}: missing batching counter {key!r}")
     name = result.get("name")
     if "name" in result and (not isinstance(name, str) or not name):
         errors.append(f"{where}: name must be a nonempty string, got {name!r}")
@@ -60,6 +69,17 @@ def check_result(doc_name: str, i: int, result) -> list[str]:
         v = result.get(key)
         if v is not None and (not _is_finite_number(v) or v < 0):
             errors.append(f"{where}: {key} must be null or a finite number >= 0, got {v!r}")
+    for key in COUNTER_KEYS:
+        v = result.get(key)
+        if v is not None and (not isinstance(v, int) or isinstance(v, bool) or v < 0):
+            errors.append(f"{where}: {key} must be a non-negative integer, got {v!r}")
+    doorbells = result.get("doorbells")
+    posted = result.get("posted_wqes")
+    if isinstance(doorbells, int) and isinstance(posted, int) and doorbells > posted:
+        errors.append(
+            f"{where}: doorbells ({doorbells}) exceed posted_wqes ({posted}) — "
+            "a doorbell launches at least one WQE"
+        )
     return errors
 
 
@@ -82,13 +102,14 @@ def check_document(path: Path) -> list[str]:
     elif path.name != f"BENCH_{bench}.json":
         errors.append(f"{path}: bench {bench!r} does not match the file name")
     results = doc.get("results")
+    require_counters = bench in BENCHES_REQUIRING_COUNTERS
     if not isinstance(results, list):
         errors.append(f"{path}: results must be a list, got {type(results).__name__}")
     elif not results:
         errors.append(f"{path}: results is empty — the bench measured nothing")
     else:
         for i, result in enumerate(results):
-            errors.extend(check_result(str(path), i, result))
+            errors.extend(check_result(str(path), i, result, require_counters))
     return errors
 
 

@@ -1,0 +1,196 @@
+//! Figure-9 bench (ours): doorbell batching on the fan-out path — the
+//! Transact microbenchmark swept over flush policy (`eager` = the
+//! pre-batching anchor, `cap:4`, `cap:16`, `fence`) × backups × SM
+//! strategy × shards, reporting the primary-side CPU busy time the
+//! staged WQE pipeline recovers from the `N * post_cost` per-line
+//! overhead (doorbells rung, mean batch size, busy time relative to
+//! eager). Emits `BENCH_fig9_batching.json` with `doorbells` /
+//! `posted_wqes` counters per cell; CI's bench-smoke job validates the
+//! artifact (including `doorbells <= posted_wqes`) with
+//! `python/check_bench_json.py`.
+//!
+//! The bench also *asserts* the tentpole's acceptance shape: at
+//! backups >= 2, SM-RC and SM-OB primary busy time strictly decreases
+//! as the batch cap grows — so a regression in the amortization model
+//! fails the CI gate instead of rotting in a table.
+//!
+//! Run: `cargo bench --bench fig9_batching`
+//! Scale with PMSM_BENCH_TXNS (default 2000 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::{ShardMapSpec, ShardingConfig};
+use pmsm::metrics::report::Table;
+use pmsm::net::FlushPolicy;
+use pmsm::workloads::transact::run_transact_batched;
+use pmsm::workloads::TransactConfig;
+
+/// Flush-policy sweep: eager is the `batch_cap = 1` anchor column.
+const POLICIES: [FlushPolicy; 4] = [
+    FlushPolicy::Eager,
+    FlushPolicy::Cap(4),
+    FlushPolicy::Cap(16),
+    FlushPolicy::Fence,
+];
+
+const BACKUPS: [usize; 3] = [1, 2, 4];
+
+fn cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    backups: usize,
+    policy: FlushPolicy,
+    cfg: TransactConfig,
+) -> RunOutcome {
+    run_transact_batched(
+        plat,
+        kind,
+        ReplicationConfig::new(backups, AckPolicy::All),
+        policy,
+        cfg,
+    )
+    .expect("valid replication config")
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let plat = Platform::default();
+    // Wide epochs (16 writes) so caps 4/16 actually differ before the
+    // epoch fence forces a flush.
+    let cfg = TransactConfig {
+        epochs: 2,
+        writes: 16,
+        txns,
+        ..Default::default()
+    };
+
+    // ---- Busy-time table: primary CPU busy relative to eager posting
+    // of the same (strategy, backups) row — the N * post_cost headroom
+    // the staged pipeline recovers.
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        let mut t = Table::new(&[
+            "backups",
+            "eager",
+            "cap:4",
+            "cap:16",
+            "fence",
+            "doorbells(e->f)",
+            "batch(f)",
+        ]);
+        for &b in &BACKUPS {
+            let outs: Vec<RunOutcome> = POLICIES
+                .iter()
+                .map(|&p| cell(&plat, kind, b, p, cfg))
+                .collect();
+            let eager_busy = outs[0].busy_ns as f64;
+            let mut cells = vec![format!("{b}")];
+            for out in &outs {
+                assert_eq!(out.txns, cfg.txns, "{kind}: every txn must commit");
+                assert!(
+                    out.doorbells <= out.posted_wqes,
+                    "{kind}: doorbells {} > WQEs {}",
+                    out.doorbells,
+                    out.posted_wqes
+                );
+                cells.push(format!("{:.3}x", out.busy_ns as f64 / eager_busy));
+            }
+            cells.push(format!("{}->{}", outs[0].doorbells, outs[3].doorbells));
+            cells.push(format!("{:.1}", outs[3].mean_batch()));
+            t.row(cells);
+            // Acceptance gate: with fan-out (backups >= 2), SM-RC/SM-OB
+            // primary busy time strictly decreases with the batch cap.
+            if b >= 2 && kind != StrategyKind::SmDd {
+                assert!(
+                    outs[0].busy_ns > outs[1].busy_ns
+                        && outs[1].busy_ns > outs[2].busy_ns,
+                    "{kind} backups={b}: busy not strictly decreasing with \
+                     cap: eager {} cap4 {} cap16 {}",
+                    outs[0].busy_ns,
+                    outs[1].busy_ns,
+                    outs[2].busy_ns
+                );
+                assert!(
+                    outs[3].busy_ns <= outs[2].busy_ns,
+                    "{kind} backups={b}: fence busier than cap:16"
+                );
+            }
+        }
+        println!(
+            "Figure 9 — Transact 2-16 doorbell batching, {kind} \
+             (primary busy vs eager; doorbells eager->fence)\n{}",
+            t.render()
+        );
+    }
+
+    // ---- Sharded fan-out: batching composes with sharding (each line
+    // is staged on its owning shard's fabric).
+    {
+        let mut t = Table::new(&["shards", "eager busy", "fence busy", "recovered"]);
+        for shards in [1usize, 2, 4] {
+            let sharding = ShardingConfig::new(shards, ShardMapSpec::Modulo);
+            let repl = ReplicationConfig::new(2, AckPolicy::All);
+            let run = |policy: FlushPolicy| {
+                let mut m = pmsm::coordinator::Mirror::try_build_sharded(
+                    plat.clone(),
+                    StrategyKind::SmOb,
+                    None,
+                    repl,
+                    pmsm::net::FaultsConfig::default(),
+                    sharding,
+                    false,
+                )
+                .expect("valid sharded mirror");
+                m.set_batching(policy);
+                pmsm::workloads::transact::run_transact_on(&mut m, cfg)
+            };
+            let eager = run(FlushPolicy::Eager);
+            let fenced = run(FlushPolicy::Fence);
+            assert_eq!(fenced.posted_wqes, eager.posted_wqes);
+            assert!(fenced.doorbells < eager.doorbells);
+            t.row(vec![
+                format!("{shards}"),
+                format!("{:.3} ms", eager.busy_ns as f64 / 1e6),
+                format!("{:.3} ms", fenced.busy_ns as f64 / 1e6),
+                format!(
+                    "{:.1}%",
+                    100.0 * (1.0 - fenced.busy_ns as f64 / eager.busy_ns as f64)
+                ),
+            ]);
+        }
+        println!(
+            "sharded fan-out at backups=2, SM-OB (fence vs eager)\n{}",
+            t.render()
+        );
+    }
+
+    // ---- Simulator throughput while staging/flushing (perf tracking):
+    // the pipeline choke point the CI bench-smoke gate watches. Each
+    // timing cell carries the doorbell/WQE counters of its simulated
+    // run so the JSON records the amortization directly.
+    let mut b = Bencher::new();
+    for &backups in &[2usize, 4] {
+        for &policy in &POLICIES {
+            let kind = StrategyKind::SmOb;
+            let writes = cfg.txns * (cfg.epochs as u64) * (cfg.writes as u64);
+            // The sim is deterministic: every timed iteration produces
+            // the same counters, so capture them from the last one.
+            let mut counters = (0u64, 0u64);
+            b.bench_elems(
+                &format!("transact/2-16/{kind}/backups-{backups}/{policy}"),
+                (writes * backups as u64) as f64,
+                || {
+                    let out = cell(&plat, kind, backups, policy, cfg);
+                    counters = (out.doorbells, out.posted_wqes);
+                    out
+                },
+            );
+            b.annotate_last(&[("doorbells", counters.0), ("posted_wqes", counters.1)]);
+        }
+    }
+    pmsm::bench::emit_json(&b, "fig9_batching");
+}

@@ -23,6 +23,10 @@ pub struct BenchResult {
     pub min_ns: f64,
     /// Optional throughput denominator (elements per iteration).
     pub elems_per_iter: Option<f64>,
+    /// Extra integer counters attached by the bench (e.g. `doorbells`,
+    /// `posted_wqes` for the batching benches); emitted as additional
+    /// JSON keys that `python/check_bench_json.py` sanity-checks.
+    pub counters: Vec<(String, u64)>,
 }
 
 impl BenchResult {
@@ -32,7 +36,7 @@ impl BenchResult {
             Some(e) if self.mean_ns > 0.0 => Some(e / (self.mean_ns * 1e-9)),
             _ => None,
         };
-        json::obj(&[
+        let mut pairs: Vec<(&str, String)> = vec![
             ("name", json::esc(&self.name)),
             ("iters", self.iters.to_string()),
             ("mean_ns", json::num(self.mean_ns)),
@@ -40,7 +44,11 @@ impl BenchResult {
             ("min_ns", json::num(self.min_ns)),
             ("elems_per_iter", json::opt_num(self.elems_per_iter)),
             ("elems_per_sec", json::opt_num(elems_per_sec)),
-        ])
+        ];
+        for (k, v) in &self.counters {
+            pairs.push((k.as_str(), v.to_string()));
+        }
+        json::obj(&pairs)
     }
 
     pub fn report(&self) -> String {
@@ -149,10 +157,20 @@ impl Bencher {
             stddev_ns: s.stddev(),
             min_ns: s.min(),
             elems_per_iter: elems,
+            counters: Vec::new(),
         };
         println!("{}", r.report());
         self.results.push(r);
         self.results.last().unwrap()
+    }
+
+    /// Attach integer counters to the most recent result (emitted as
+    /// extra `BENCH_*.json` keys — e.g. the doorbell/WQE totals of the
+    /// simulated run a timing cell corresponds to).
+    pub fn annotate_last(&mut self, counters: &[(&str, u64)]) {
+        if let Some(r) = self.results.last_mut() {
+            r.counters.extend(counters.iter().map(|(k, v)| (k.to_string(), *v)));
+        }
     }
 
     pub fn results(&self) -> &[BenchResult] {
@@ -224,6 +242,7 @@ mod tests {
             stddev_ns: f64::NAN, // must not leak NaN into JSON
             min_ns: 1000.0,
             elems_per_iter: Some(2000.0),
+            counters: Vec::new(),
         };
         let j = r.to_json();
         assert!(j.contains("\"name\":\"transact/4-1/sm-ob\""), "{j}");
@@ -233,6 +252,11 @@ mod tests {
         assert!(!j.contains("NaN"), "{j}");
         let mut b = Bencher::new();
         b.results.push(r);
+        // Counters attach to the latest result and emit as extra keys.
+        b.annotate_last(&[("doorbells", 8), ("posted_wqes", 64)]);
+        let j = b.results.last().unwrap().to_json();
+        assert!(j.contains("\"doorbells\":8"), "{j}");
+        assert!(j.contains("\"posted_wqes\":64"), "{j}");
         let doc = b.to_json("fig_test");
         assert!(
             doc.starts_with(&format!(
@@ -254,6 +278,7 @@ mod tests {
             stddev_ns: 0.0,
             min_ns: 1.0,
             elems_per_iter: None,
+            counters: Vec::new(),
         });
         let dir = std::env::temp_dir().join("pmsm_bench_json_test");
         std::fs::create_dir_all(&dir).unwrap();

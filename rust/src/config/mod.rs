@@ -13,6 +13,7 @@ pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 
 use crate::coordinator::shard::ShardingConfig;
 use crate::net::faults::FaultsConfig;
+use crate::net::wqe::{BatchingConfig, FlushPolicy};
 use anyhow::{bail, Context, Result};
 
 /// Workload selection for the CLI / experiment driver.
@@ -40,6 +41,10 @@ pub struct Experiment {
     /// Address-space sharding (`[sharding]` section: shard count +
     /// routing map; defaults to one shard — sharding off).
     pub sharding: ShardingConfig,
+    /// Staged WQE pipeline (`[batching]` section: flush policy /
+    /// batch cap; defaults to eager posting — batching off, the
+    /// pre-batching cost model).
+    pub batching: BatchingConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -59,6 +64,7 @@ impl Default for Experiment {
             replication: ReplicationConfig::default(),
             faults: FaultsConfig::default(),
             sharding: ShardingConfig::default(),
+            batching: BatchingConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -137,6 +143,21 @@ impl Experiment {
         exp.sharding
             .validate()
             .context("invalid [sharding] section")?;
+        if let Some(v) = doc.get("batching.flush_policy") {
+            exp.batching.policy = v.as_str()?.parse().context("batching.flush_policy")?;
+        }
+        if let Some(v) = doc.get("batching.batch_cap") {
+            // Shorthand for flush_policy = "cap:K"; wins when both are
+            // given (it is the more specific knob).
+            let k = v.as_int()?;
+            if k < 1 {
+                bail!("batching.batch_cap must be >= 1, got {k}");
+            }
+            exp.batching.policy = FlushPolicy::Cap(k as usize);
+        }
+        exp.batching
+            .validate()
+            .context("invalid [batching] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -374,6 +395,44 @@ map = "range:2048"
         // Unknown / malformed maps.
         assert!(Experiment::from_str("[sharding]\nmap = \"hash\"").is_err());
         assert!(Experiment::from_str("[sharding]\nmap = \"range:0\"").is_err());
+    }
+
+    #[test]
+    fn batching_section_roundtrip() {
+        let exp = Experiment::from_str("[batching]\nflush_policy = \"fence\"").unwrap();
+        assert_eq!(exp.batching.policy, FlushPolicy::Fence);
+        let exp = Experiment::from_str("[batching]\nflush_policy = \"cap:8\"").unwrap();
+        assert_eq!(exp.batching.policy, FlushPolicy::Cap(8));
+        let exp = Experiment::from_str("[batching]\nbatch_cap = 4").unwrap();
+        assert_eq!(exp.batching.policy, FlushPolicy::Cap(4));
+        // batch_cap is the more specific knob: it wins over flush_policy.
+        let exp = Experiment::from_str(
+            "[batching]\nflush_policy = \"fence\"\nbatch_cap = 16",
+        )
+        .unwrap();
+        assert_eq!(exp.batching.policy, FlushPolicy::Cap(16));
+        // Display round-trips through the parser.
+        let text = format!("[batching]\nflush_policy = \"{}\"", FlushPolicy::Cap(16));
+        assert_eq!(
+            Experiment::from_str(&text).unwrap().batching.policy,
+            FlushPolicy::Cap(16)
+        );
+    }
+
+    #[test]
+    fn batching_defaults_to_eager_when_section_missing() {
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.batching, BatchingConfig::default());
+        assert_eq!(exp.batching.policy, FlushPolicy::Eager);
+        assert!(exp.batching.policy.is_eager());
+    }
+
+    #[test]
+    fn batching_section_rejects_bad_shapes() {
+        assert!(Experiment::from_str("[batching]\nbatch_cap = 0").is_err());
+        assert!(Experiment::from_str("[batching]\nbatch_cap = -4").is_err());
+        assert!(Experiment::from_str("[batching]\nflush_policy = \"cap:0\"").is_err());
+        assert!(Experiment::from_str("[batching]\nflush_policy = \"lazy\"").is_err());
     }
 
     #[test]

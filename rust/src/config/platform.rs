@@ -186,8 +186,13 @@ pub struct Platform {
     pub nqp: usize,
     /// Per-WQE pipeline depth of a QP before posting stalls.
     pub qp_depth: usize,
-    /// CPU cost to post a WQE / ring a doorbell (ns).
-    pub post_cost: Ns,
+    /// CPU cost of the MMIO doorbell launching a chain of staged WQEs
+    /// (ns) — paid once per flush per backup; the former `post_cost`
+    /// split as `doorbell_ns + wqe_stage_ns` (see [`crate::net::wqe`]).
+    pub doorbell_ns: Ns,
+    /// CPU cost to build and stage one WQE in host memory (ns) — paid
+    /// per WQE regardless of batching.
+    pub wqe_stage_ns: Ns,
     /// CPU cost of one CQ poll iteration (ns).
     pub poll_cost: Ns,
 
@@ -243,7 +248,8 @@ impl Default for Platform {
             gap: 150,
             nqp: 4,
             qp_depth: 64,
-            post_cost: 30,
+            doorbell_ns: 20,
+            wqe_stage_ns: 10,
             poll_cost: 20,
             pcie_rt: 200,
             pcie_occ: 25,
@@ -269,6 +275,14 @@ impl Platform {
     /// Lines the DDIO ways can buffer across the whole LLC (paper: ~2 MB).
     pub fn ddio_lines(&self) -> u64 {
         (self.llc_slices * self.llc_sets_per_slice * self.ddio_ways) as u64
+    }
+
+    /// Full CPU cost of one eager (unbatched) WQE post: build + stage
+    /// the WQE and ring its own doorbell. This is the pre-batching
+    /// `post_cost` (30 ns by default); `batch_cap = 1` charges exactly
+    /// this per WQE, which anchors the staged pipeline to the old model.
+    pub fn post_cost(&self) -> Ns {
+        self.doorbell_ns + self.wqe_stage_ns
     }
 
     /// The f32[16] parameter vector consumed by the AOT latency model —
@@ -321,7 +335,15 @@ impl Platform {
         ns_field!("flush", flush);
         ns_field!("sfence", sfence);
         ns_field!("ob_barrier", ob_barrier);
-        ns_field!("post_cost", post_cost);
+        // Legacy alias from before the doorbell/stage split: assign the
+        // whole per-post cost to the doorbell so eager runs reproduce
+        // old configs bit-exactly. The explicit keys below override.
+        if let Some(v) = doc.get("platform.post_cost") {
+            p.doorbell_ns = v.as_int()? as Ns;
+            p.wqe_stage_ns = 0;
+        }
+        ns_field!("doorbell_ns", doorbell_ns);
+        ns_field!("wqe_stage_ns", wqe_stage_ns);
         ns_field!("poll_cost", poll_cost);
         usize_field!("nqp", nqp);
         usize_field!("qp_depth", qp_depth);
@@ -371,7 +393,8 @@ impl Platform {
                pcie/ddio : pcie_rt={}ns nt_serial={}ns ddio_ways={}/{}\n\
                llc       : {} slices x {} sets x {} ways (64B lines)\n\
                memctrl   : queue={} banks={} llc->mc={}ns mc->pm={}ns\n\
-               cpu       : store={}ns flush={}ns sfence={}ns",
+               cpu       : store={}ns flush={}ns sfence={}ns \
+             doorbell={}ns wqe_stage={}ns poll={}ns",
             self.rtt,
             self.gap,
             self.nqp,
@@ -390,6 +413,9 @@ impl Platform {
             self.store,
             self.flush,
             self.sfence,
+            self.doorbell_ns,
+            self.wqe_stage_ns,
+            self.poll_cost,
         )
     }
 }
@@ -437,6 +463,42 @@ mod tests {
         let mut p = Platform::default();
         p.slice_masks = vec![1];
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn post_cost_split_sums_to_legacy_value() {
+        // The staged-pipeline split must reproduce the pre-batching
+        // 30 ns per eager post (the batch_cap = 1 anchor).
+        let p = Platform::default();
+        assert_eq!(p.doorbell_ns, 20);
+        assert_eq!(p.wqe_stage_ns, 10);
+        assert_eq!(p.post_cost(), 30);
+    }
+
+    #[test]
+    fn table2_prints_batching_knobs() {
+        // Bench logs must record the doorbell/stage split (the batching
+        // knobs) alongside the other cpu costs.
+        let t = Platform::default().table2();
+        assert!(t.contains("doorbell=20ns"), "{t}");
+        assert!(t.contains("wqe_stage=10ns"), "{t}");
+        assert!(t.contains("store=10ns"), "{t}");
+    }
+
+    #[test]
+    fn doc_post_cost_alias_and_split_keys() {
+        use crate::config::toml;
+        // Legacy key: whole cost lands on the doorbell (eager-exact).
+        let doc = toml::parse("[platform]\npost_cost = 45").unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!((p.doorbell_ns, p.wqe_stage_ns), (45, 0));
+        assert_eq!(p.post_cost(), 45);
+        // Explicit split keys override the alias.
+        let doc = toml::parse("[platform]\npost_cost = 45\ndoorbell_ns = 25\nwqe_stage_ns = 5")
+            .unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!((p.doorbell_ns, p.wqe_stage_ns), (25, 5));
+        assert_eq!(p.post_cost(), 30);
     }
 
     #[test]

@@ -38,7 +38,7 @@ pub use shard::{ShardMap, ShardMapSpec, ShardingConfig};
 use crate::config::{Platform, ReplicationConfig, StrategyKind};
 use crate::mem::DurabilityLog;
 use crate::net::{
-    Fabric, FaultKind, FaultTimeline, FaultsConfig, RemoteEngine, Stall, WriteMeta,
+    Fabric, FaultKind, FaultTimeline, FaultsConfig, FlushPolicy, RemoteEngine, Stall, WriteMeta,
 };
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
@@ -75,6 +75,9 @@ pub struct ThreadCtx {
     touched_txn: u64,
     /// Virtual time at which stats were last reset (steady-state marker).
     pub stats_zero_at: Ns,
+    /// Busy-time watermark at the last stats reset (steady-state CPU
+    /// cost is `clock.busy_ns - busy_zero`).
+    pub busy_zero: Ns,
 }
 
 impl ThreadCtx {
@@ -93,6 +96,7 @@ impl ThreadCtx {
             touched_epoch: 0,
             touched_txn: 0,
             stats_zero_at: 0,
+            busy_zero: 0,
         }
     }
 
@@ -102,6 +106,7 @@ impl ThreadCtx {
         self.writes_done = 0;
         self.epochs_done = 0;
         self.stats_zero_at = self.clock.now;
+        self.busy_zero = self.clock.busy_ns;
     }
 
     pub fn id(&self) -> usize {
@@ -321,6 +326,33 @@ impl Mirror {
         self.lanes.len()
     }
 
+    /// Set the staged WQE pipeline's flush policy on every shard's
+    /// fabric (see [`crate::net::wqe`]; `cap:1` normalizes to `eager`,
+    /// the anchor). Call before any traffic. Cap accounting is per
+    /// (shard, thread) stage — a line counts toward the cap of the
+    /// shard that owns it.
+    pub fn set_batching(&mut self, policy: FlushPolicy) {
+        for lane in &mut self.lanes {
+            lane.fabric.set_batching(policy);
+        }
+    }
+
+    /// The flush policy the shards' staged pipelines run under.
+    pub fn batching(&self) -> FlushPolicy {
+        self.lanes[0].fabric.batching()
+    }
+
+    /// Data-path doorbells rung across all shards and backups.
+    pub fn doorbells(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.doorbells_total()).sum()
+    }
+
+    /// Data WQEs posted across all shards and backups (the doorbell
+    /// amortization denominator: `doorbells() <= posted_wqes()`).
+    pub fn posted_wqes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.posted_writes()).sum()
+    }
+
     /// Shard 0's fabric — *the* fabric when sharding is off (the common
     /// case for the paper's experiments and the regression anchor).
     pub fn fabric(&self) -> &Fabric {
@@ -481,7 +513,11 @@ impl Mirror {
 
     /// `sfence`: ordering point — wait for local persists, signal the
     /// ordering primitive of every shard written this epoch, and open
-    /// the next epoch.
+    /// the next epoch. The per-shard ordering verbs are staged-pipeline
+    /// flush points (`rofence`/`rcommit` ring any pending doorbells
+    /// before issuing; SM-DD's implicit ordering needs no flush — its
+    /// single QP issues staged writes in program order at the next
+    /// durability point).
     pub fn sfence(&mut self, t: &mut ThreadCtx) {
         t.clock.busy(self.plat.sfence);
         if let Some(&max) = t.pending_local.iter().max() {
@@ -519,7 +555,10 @@ impl Mirror {
 
     /// Transaction end: durability point (local drain + per-shard
     /// strategy fence on every shard the transaction touched; the
-    /// commit instant is the max across those shards). Records both the
+    /// commit instant is the max across those shards). Every shard's
+    /// durability fence flushes its staged WQE pipeline first, so a
+    /// committed transaction never leaves writes parked behind an
+    /// un-rung doorbell. Records both the
     /// ack-policy completion and the per-backup fence completions. A
     /// transaction whose durability fence stalled on any shard (fault
     /// injection under `on_loss = halt`, or a fully dead group) was

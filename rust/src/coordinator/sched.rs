@@ -63,6 +63,16 @@ pub struct RunOutcome {
     pub writes: u64,
     /// Sum of epochs executed.
     pub epochs: u64,
+    /// Sum of primary-side CPU busy time across threads (ns, steady
+    /// state) — excludes blocked waits; the figure doorbell batching
+    /// shrinks (`fig9_batching`).
+    pub busy_ns: Ns,
+    /// Data-path doorbells rung across all shards and backups (steady
+    /// state — load-phase traffic excluded, like `busy_ns`).
+    pub doorbells: u64,
+    /// Data WQEs posted across all shards and backups, steady state
+    /// (`doorbells <= posted_wqes`; equal under eager posting).
+    pub posted_wqes: u64,
     /// Per-thread completion times.
     pub per_thread: Vec<Ns>,
     /// Shards the mirror routed over (1 = sharding off). The
@@ -109,6 +119,12 @@ impl RunOutcome {
         self.epochs as f64 / self.txns as f64
     }
 
+    /// Mean data WQEs launched per doorbell (the staged pipeline's
+    /// amortization factor — see [`crate::net::wqe::mean_batch`]).
+    pub fn mean_batch(&self) -> f64 {
+        crate::net::wqe::mean_batch(self.posted_wqes, self.doorbells)
+    }
+
     /// Replica lag: spread between the slowest and fastest backup's
     /// persist horizon across all shards (0 for a single backup or
     /// NO-SM).
@@ -148,6 +164,11 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
             c.reset_stats();
         }
     }
+    // Watermark the fabric counters too, so the reported doorbell/WQE
+    // totals cover the same steady-state span as busy_ns and txns
+    // (load-phase fan-out traffic is excluded).
+    let doorbells_zero = mirror.doorbells();
+    let posted_wqes_zero = mirror.posted_wqes();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
     // the run at the kill point: remaining transactions are abandoned,
@@ -177,9 +198,12 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
         out.txns += c.txns_done;
         out.writes += c.writes_done;
         out.epochs += c.epochs_done;
+        out.busy_ns += c.clock.busy_ns - c.busy_zero;
         out.per_thread.push(c.now() - c.stats_zero_at);
     }
     out.shards = mirror.shard_count();
+    out.doorbells = mirror.doorbells() - doorbells_zero;
+    out.posted_wqes = mirror.posted_wqes() - posted_wqes_zero;
     out.per_backup_horizon = mirror.persist_horizons();
     out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);
     out.per_backup_resync_lines = mirror.resync_lines();
@@ -330,6 +354,42 @@ mod tests {
             "writes should spread across shards: {:?}",
             out.per_backup_horizon
         );
+    }
+
+    #[test]
+    fn outcome_tracks_busy_and_doorbell_amortization() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::net::FlushPolicy;
+        let run = |policy: FlushPolicy| {
+            let mut m = Mirror::with_replication(
+                Platform::default(),
+                StrategyKind::SmOb,
+                ReplicationConfig::new(2, AckPolicy::All),
+                false,
+            )
+            .unwrap();
+            m.set_batching(policy);
+            let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(10, 2, 8, 0x10000)];
+            run_threads(&mut m, &mut srcs)
+        };
+        let eager = run(FlushPolicy::Eager);
+        let fenced = run(FlushPolicy::Fence);
+        assert!(eager.busy_ns > 0);
+        assert_eq!(
+            eager.doorbells, eager.posted_wqes,
+            "eager rings one doorbell per WQE"
+        );
+        assert!((eager.mean_batch() - 1.0).abs() < 1e-9);
+        assert_eq!(fenced.posted_wqes, eager.posted_wqes);
+        assert!(fenced.doorbells < eager.doorbells);
+        assert!(fenced.mean_batch() > 1.0);
+        assert!(
+            fenced.busy_ns < eager.busy_ns,
+            "batching must cut primary CPU busy: {} vs {}",
+            fenced.busy_ns,
+            eager.busy_ns
+        );
+        assert_eq!(fenced.txns, eager.txns);
     }
 
     #[test]

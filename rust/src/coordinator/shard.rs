@@ -23,6 +23,13 @@
 //! and the coordinator passes verbs through to the single fabric
 //! unchanged — the pre-sharding behaviour, pinned by
 //! `rust/tests/sharding.rs`.
+//!
+//! Doorbell batching composes per shard: each shard's fabric owns its
+//! own staged WQE pipeline (see [`crate::net::wqe`]), a line counts
+//! toward the flush cap of the shard that owns it, and a fence routed
+//! to a shard flushes only that shard's stage — shards a thread never
+//! wrote hold nothing to flush, so the touched-shard fence routing
+//! above is also the complete set of flush points.
 
 use crate::{line_of, Addr, LINE};
 use anyhow::{anyhow, bail, Result};

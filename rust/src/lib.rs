@@ -35,6 +35,17 @@
 //!   ([`coordinator::shard`], `[sharding]` config keys, `--shards` /
 //!   `--shard-map` CLI; `shards = 1` reproduces the single-fabric path
 //!   event-for-event);
+//! * a **staged WQE submission pipeline with doorbell batching** on the
+//!   fan-out path: all data verbs flow through per-thread submit queues
+//!   that chain WQEs in host memory and ring one doorbell per backup
+//!   per flush (`eager` / `cap:k` / `fence` flush policies), splitting
+//!   the old `post_cost` into `doorbell_ns + wqe_stage_ns` to recover
+//!   the `S * N * post_cost` primary-side overhead; every ordering /
+//!   durability fence is a flush point, so semantics are unchanged and
+//!   `batch_cap = 1` reproduces the eager model bit-exactly
+//!   ([`net::wqe`], `[batching]` config keys, `--batch-cap` /
+//!   `--flush-policy` CLI, doorbell/mean-batch metrics, the
+//!   `fig9_batching` bench);
 //! * the mirroring coordinator that binds a primary node's persistency
 //!   traffic to the replica groups over the simulated fabric
 //!   ([`coordinator`]);

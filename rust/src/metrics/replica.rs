@@ -23,11 +23,17 @@ pub struct GroupReport {
     pub required: usize,
     /// Rendered loss mode (`halt` / `degrade`).
     pub on_loss: String,
+    /// Rendered staged-pipeline flush policy (`eager` / `cap:K` /
+    /// `fence`).
+    pub flush_policy: String,
     pub stats: Vec<BackupStats>,
     /// Blocking fences executed (group level).
     pub blocking_waits: u64,
     /// Total ns the workload threads spent blocked on group fences.
     pub blocked_ns: Ns,
+    /// Data WQEs posted across the group (doorbell amortization
+    /// denominator).
+    pub posted_wqes: u64,
     /// The unsatisfiable fence that stopped the run, if any.
     pub stalled: Option<Stall>,
 }
@@ -39,11 +45,23 @@ impl GroupReport {
             policy: fabric.policy().to_string(),
             required: fabric.required(),
             on_loss: fabric.on_loss().to_string(),
+            flush_policy: fabric.batching().to_string(),
             stats: fabric.backup_stats(),
             blocking_waits: fabric.blocking_waits,
             blocked_ns: fabric.blocked_ns,
+            posted_wqes: fabric.posted_writes(),
             stalled: fabric.stall().copied(),
         }
+    }
+
+    /// Data-path doorbells rung across the group.
+    pub fn doorbells(&self) -> u64 {
+        self.stats.iter().map(|s| s.doorbells).sum()
+    }
+
+    /// Mean data WQEs per doorbell (see [`crate::net::wqe::mean_batch`]).
+    pub fn mean_batch(&self) -> f64 {
+        crate::net::wqe::mean_batch(self.posted_wqes, self.doorbells())
     }
 
     /// Number of backups in the group.
@@ -92,6 +110,7 @@ impl GroupReport {
             "writes",
             "persists",
             "barriers",
+            "doorbells",
             "pending",
             "horizon(ns)",
             "fence(ns)",
@@ -107,6 +126,7 @@ impl GroupReport {
                 format!("{}", s.writes),
                 format!("{}", s.persists),
                 format!("{}", s.barriers),
+                format!("{}", s.doorbells),
                 format!("{}", s.pending_lines),
                 format!("{}", s.persist_horizon),
                 format!("{}", s.last_fence),
@@ -118,13 +138,15 @@ impl GroupReport {
         }
         let mut out = format!(
             "Replica group — {} backups, ack policy {} (required {}, \
-             on_loss {})\n{}\
+             on_loss {}, flush {})\n{}\
              group: {} blocking fences, {:.0} ns mean block, \
-             horizon lag {} ns, fence lag {} ns, dead {} ns, resync {} B\n",
+             horizon lag {} ns, fence lag {} ns, dead {} ns, resync {} B, \
+             {} doorbells, mean batch {:.2}\n",
             self.backups(),
             self.policy,
             self.required,
             self.on_loss,
+            self.flush_policy,
             t.render(),
             self.blocking_waits,
             self.mean_block_ns(),
@@ -132,6 +154,8 @@ impl GroupReport {
             self.fence_lag(),
             self.total_dead_ns(),
             self.resync_bytes(),
+            self.doorbells(),
+            self.mean_batch(),
         );
         if let Some(stall) = &self.stalled {
             out.push_str(&format!("group: STALLED — {stall}\n"));
@@ -154,6 +178,7 @@ impl GroupReport {
                     ("last_fence_ns", s.last_fence.to_string()),
                     ("dead_ns", s.dead_ns.to_string()),
                     ("resync_lines", s.resync_lines.to_string()),
+                    ("doorbells", s.doorbells.to_string()),
                 ])
             })
             .collect();
@@ -161,8 +186,12 @@ impl GroupReport {
             ("policy", json::esc(&self.policy)),
             ("required", self.required.to_string()),
             ("on_loss", json::esc(&self.on_loss)),
+            ("flush_policy", json::esc(&self.flush_policy)),
             ("blocking_waits", self.blocking_waits.to_string()),
             ("blocked_ns", self.blocked_ns.to_string()),
+            ("doorbells", self.doorbells().to_string()),
+            ("posted_wqes", self.posted_wqes.to_string()),
+            ("mean_batch", json::num(self.mean_batch())),
             ("stalled", self.stalled.is_some().to_string()),
             ("backups", json::arr(&backups)),
         ])
@@ -201,6 +230,17 @@ impl ShardedReport {
             .sum()
     }
 
+    /// Total data-path doorbells rung across all shards and backups.
+    pub fn total_doorbells(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.doorbells()).sum()
+    }
+
+    /// Mean data WQEs per doorbell across the whole deployment.
+    pub fn mean_batch(&self) -> f64 {
+        let wqes: u64 = self.per_shard.iter().map(|r| r.posted_wqes).sum();
+        crate::net::wqe::mean_batch(wqes, self.total_doorbells())
+    }
+
     /// Shard-imbalance factor: max over mean of per-shard write counts
     /// (1.0 = perfectly balanced; meaningful only for `shards > 1`).
     pub fn write_skew(&self) -> f64 {
@@ -226,11 +266,14 @@ impl ShardedReport {
             out.push_str(&r.render());
         }
         out.push_str(&format!(
-            "shards: {} over map {}, {} total writes, write skew {:.2}x\n",
+            "shards: {} over map {}, {} total writes, write skew {:.2}x, \
+             {} doorbells (mean batch {:.2})\n",
             self.shards(),
             self.map,
             self.total_writes(),
             self.write_skew(),
+            self.total_doorbells(),
+            self.mean_batch(),
         ));
         out
     }
@@ -284,10 +327,17 @@ mod tests {
         assert_eq!(r.resync_bytes(), 0);
         assert_eq!(r.total_dead_ns(), 0);
         assert!(r.stalled.is_none());
+        // Eager posting: one doorbell per WQE, batch factor exactly 1.
+        assert_eq!(r.flush_policy, "eager");
+        assert_eq!(r.doorbells(), 9, "3 writes x 3 backups");
+        assert_eq!(r.posted_wqes, 9);
+        assert!((r.mean_batch() - 1.0).abs() < 1e-9);
         let text = r.render();
         assert!(text.contains("3 backups"));
         assert!(text.contains("quorum:2"));
         assert!(text.contains("alive"));
+        assert!(text.contains("doorbells"), "{text}");
+        assert!(text.contains("mean batch"), "{text}");
         // One line per backup plus header/rule/summary.
         assert!(text.lines().count() >= 6, "{text}");
     }
@@ -340,6 +390,44 @@ mod tests {
         assert!(j.contains("\"map\":\"modulo x2\""), "{j}");
         assert!(j.contains("\"backups\":["), "{j}");
         assert!(j.matches("\"policy\":\"all\"").count() == 2, "{j}");
+        assert!(j.contains("\"doorbells\":"), "{j}");
+        assert!(j.contains("\"mean_batch\":"), "{j}");
+        assert!(j.matches("\"flush_policy\":\"eager\"").count() == 2, "{j}");
+        assert_eq!(r.total_doorbells(), 8, "eager: one doorbell per WQE");
+        assert!((r.mean_batch() - 1.0).abs() < 1e-9);
+        let text = r.render();
+        assert!(text.contains("mean batch"), "{text}");
+    }
+
+    #[test]
+    fn report_shows_doorbell_amortization_under_batching() {
+        use crate::net::FlushPolicy;
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let mut f = Fabric::new(&p, &repl, true).with_batching(FlushPolicy::Fence);
+        let mut t = ThreadClock::new(0);
+        for s in 0..6u64 {
+            f.post_write_wt(
+                &mut t,
+                WriteMeta {
+                    addr: 0x40 * (1 + s),
+                    val: s,
+                    thread: 0,
+                    txn: 0,
+                    epoch: 0,
+                    seq: s,
+                },
+            );
+        }
+        f.rdfence(&mut t);
+        let r = GroupReport::from_fabric(&f);
+        assert_eq!(r.flush_policy, "fence");
+        assert_eq!(r.posted_wqes, 12, "6 lines x 2 backups");
+        assert_eq!(r.doorbells(), 2, "one doorbell per backup per flush");
+        assert!((r.mean_batch() - 6.0).abs() < 1e-9, "{}", r.mean_batch());
+        assert!(r.doorbells() <= r.posted_wqes);
+        let text = r.render();
+        assert!(text.contains("flush fence"), "{text}");
     }
 
     #[test]

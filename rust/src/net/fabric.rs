@@ -28,6 +28,19 @@
 //! cost on the simulated clock) and only re-enters the quorum once the
 //! stream completes.
 //!
+//! **Staged WQE pipeline** (see [`super::wqe`]): all data verbs flow
+//! through one choke point, `Fabric::post_data`'s staged dispatch. With
+//! the default [`FlushPolicy::Eager`] every post rings one doorbell per
+//! live backup — the pre-batching model, bit-exact. Under `cap:k` /
+//! `fence` policies the fan-out *stages* one WQE per live backup in the
+//! calling thread's [`SubmitQueue`] (charging only `wqe_stage_ns` each)
+//! and [`Fabric::flush`] later posts each backup's chain with a single
+//! `doorbell_ns` charge per backup — one logical batch coalesced across
+//! the whole group. Every ordering/durability fence flushes the stage
+//! before issuing, so batches never leak across persistence points, and
+//! a backup killed between stage and doorbell has its staged WQEs
+//! dropped (they never reached the wire — no ghost ledger entries).
+//!
 //! With `backups = 1`, `ack_policy = "all"` and an **empty fault plan**
 //! the fabric is event-for-event identical to driving the single [`Rdma`]
 //! stack directly (the pre-replica-group behaviour); the unit tests below
@@ -38,7 +51,8 @@ use super::faults::{
 };
 use super::rdma::Rdma;
 use super::remote::RemoteEngine;
-use super::verbs::WriteMeta;
+use super::verbs::{Verb, WriteMeta};
+use super::wqe::{FlushPolicy, SubmitQueue, Wqe};
 use crate::config::{AckPolicy, Platform, ReplicationConfig};
 use crate::mem::{DurEvent, DurabilityLog};
 use crate::sim::ThreadClock;
@@ -75,6 +89,9 @@ pub struct BackupStats {
     pub resync_lines: u64,
     /// Hand-off latency of the most recent resync (ns).
     pub last_handoff_ns: Ns,
+    /// Data-path doorbells rung toward this backup (one per WQE when
+    /// eager; one per flushed chain when batching).
+    pub doorbells: u64,
 }
 
 /// N-way mirroring fabric (see module docs).
@@ -110,6 +127,19 @@ pub struct Fabric {
     /// multi-shard run attributes the unsatisfiable fence.
     shard: usize,
     stall: Option<Stall>,
+    // ---- staged WQE pipeline (see `super::wqe`)
+    /// When staged doorbells ring (`Eager` bypasses staging entirely).
+    batching: FlushPolicy,
+    /// Per-thread staging queues (index = thread id; grown on demand).
+    stages: Vec<SubmitQueue>,
+    /// CPU cost split of an eager post (`wqe_stage_ns + doorbell_ns`
+    /// equals the pre-batching `post_cost`).
+    wqe_stage_ns: Ns,
+    doorbell_ns: Ns,
+    /// Data-path doorbells rung, per backup.
+    doorbells: Vec<u64>,
+    /// WQEs that went through the staging queue (vs. eager posts).
+    pub staged_wqes: u64,
     // stats
     pub blocking_waits: u64,
     pub blocked_ns: Ns,
@@ -157,9 +187,34 @@ impl Fabric {
             seen: 0,
             shard: 0,
             stall: None,
+            batching: FlushPolicy::Eager,
+            stages: Vec::new(),
+            wqe_stage_ns: p.wqe_stage_ns,
+            doorbell_ns: p.doorbell_ns,
+            doorbells: vec![0; n],
+            staged_wqes: 0,
             blocking_waits: 0,
             blocked_ns: 0,
         }
+    }
+
+    /// Set the staged pipeline's flush policy (`cap:1` normalizes to
+    /// `eager`, the regression anchor). Must be called before any
+    /// traffic — switching mid-run would strand staged WQEs.
+    pub fn set_batching(&mut self, policy: FlushPolicy) {
+        debug_assert!(self.staged_pending() == 0, "set_batching mid-run");
+        self.batching = policy.normalized();
+    }
+
+    /// Builder form of [`Fabric::set_batching`].
+    pub fn with_batching(mut self, policy: FlushPolicy) -> Self {
+        self.set_batching(policy);
+        self
+    }
+
+    /// The flush policy the staged WQE pipeline runs under.
+    pub fn batching(&self) -> FlushPolicy {
+        self.batching
     }
 
     /// Tag this fabric as serving shard `s` of a sharded coordinator
@@ -267,6 +322,24 @@ impl Fabric {
         self.replicas.iter().map(|r| r.posted_writes).sum()
     }
 
+    /// Data-path doorbells rung across the whole group. Eager posts ring
+    /// one per backup per WQE; staged flushes ring one per backup per
+    /// chain. Fence verbs ring their own doorbells and are not counted,
+    /// so `doorbells_total() <= posted_writes()` always holds.
+    pub fn doorbells_total(&self) -> u64 {
+        self.doorbells.iter().sum()
+    }
+
+    /// Mean data WQEs launched per doorbell (see [`super::wqe::mean_batch`]).
+    pub fn mean_batch(&self) -> f64 {
+        super::wqe::mean_batch(self.posted_writes(), self.doorbells_total())
+    }
+
+    /// Backup WQEs staged and awaiting a doorbell, across all threads.
+    pub fn staged_pending(&self) -> usize {
+        self.stages.iter().map(|q| q.len()).sum()
+    }
+
     /// The realized alive/dead timeline (kills + resync completions) for
     /// fault-aware recovery checks. Call [`Fabric::settle`] first so
     /// events and resyncs up to the end of the run have taken effect.
@@ -318,6 +391,7 @@ impl Fabric {
                 resyncs: self.resyncs[id],
                 resync_lines: self.resync_lines[id],
                 last_handoff_ns: self.last_handoff_ns[id],
+                doorbells: self.doorbells[id],
             })
             .collect()
     }
@@ -466,58 +540,150 @@ impl Fabric {
         t.busy(self.poll_cost);
     }
 
-    /// Posted one-sided DDIO write to every live backup (SM-RC data path).
-    pub fn post_write(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
-        self.apply_faults(t.now);
+    /// Run `f` on every in-quorum backup's requester stack, in backup
+    /// order — the single alive-backup fan-out helper behind every verb
+    /// (the four formerly copy-pasted loops route through here or
+    /// through [`Fabric::post_data`]'s staged dispatch).
+    fn for_each_alive<F: FnMut(usize, &mut Rdma)>(&mut self, mut f: F) {
         for i in 0..self.replicas.len() {
             if self.states[i].is_alive() {
-                self.replicas[i].post_write(t, meta);
+                f(i, &mut self.replicas[i]);
             }
         }
     }
 
-    /// Posted write-through write to every live backup (SM-OB data path).
-    pub fn post_write_wt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
-        self.apply_faults(t.now);
+    /// Ring one data doorbell per in-quorum backup (eager accounting —
+    /// side-effect-free on simulated time; the `busy` charge is paid at
+    /// the post itself).
+    fn ring_alive_doorbells(&mut self) {
         for i in 0..self.replicas.len() {
             if self.states[i].is_alive() {
-                self.replicas[i].post_write_wt(t, meta);
+                self.doorbells[i] += 1;
             }
         }
+    }
+
+    /// The staged data-path dispatch all three write verbs flow through.
+    ///
+    /// * `Eager` (default): one stage+doorbell (`post_cost`) charge and
+    ///   one wire submission per live backup, immediately — event-for-
+    ///   event the pre-batching fan-out.
+    /// * `Cap(k)` / `Fence`: one WQE per live backup is staged in the
+    ///   calling thread's queue at `wqe_stage_ns` each; doorbells ring
+    ///   at [`Fabric::flush`] (cap reached, or the next fence).
+    fn post_data(&mut self, t: &mut ThreadClock, verb: Verb, meta: WriteMeta) {
+        self.apply_faults(t.now);
+        if self.batching.is_eager() {
+            let cost = self.wqe_stage_ns + self.doorbell_ns;
+            self.for_each_alive(|_, r| {
+                t.busy(cost);
+                r.submit_data(t, verb, meta);
+            });
+            self.ring_alive_doorbells();
+            return;
+        }
+        let id = t.id;
+        if self.stages.len() <= id {
+            self.stages.resize_with(id + 1, SubmitQueue::default);
+        }
+        let mut staged = 0u64;
+        for (i, state) in self.states.iter().enumerate() {
+            if state.is_alive() {
+                t.busy(self.wqe_stage_ns);
+                self.stages[id].push(Wqe {
+                    verb,
+                    meta,
+                    backup: i,
+                });
+                staged += 1;
+            }
+        }
+        self.staged_wqes += staged;
+        self.stages[id].note_line();
+        if let FlushPolicy::Cap(cap) = self.batching {
+            if self.stages[id].lines() >= cap {
+                self.flush(t);
+            }
+        }
+    }
+
+    /// Ring the staged pipeline's doorbells for the calling thread:
+    /// fault state advances before every chain launch, so staged WQEs
+    /// whose target died between stage and doorbell are dropped (they
+    /// never reached the wire — no ghost ledger entries, and a later
+    /// resync streams the lines from a peer that did flush); each
+    /// surviving backup's chain is posted under a single `doorbell_ns`
+    /// charge — the amortization the pipeline exists to model. A no-op
+    /// when nothing is staged (always, under eager policies).
+    pub fn flush(&mut self, t: &mut ThreadClock) {
+        let id = t.id;
+        match self.stages.get(id) {
+            Some(q) if !q.is_empty() => {}
+            _ => return,
+        }
+        let wqes = self.stages[id].take();
+        for b in 0..self.replicas.len() {
+            // Each chain launch is a verb boundary: fault state advances
+            // before every doorbell, so a kill crossed while an earlier
+            // backup's chain posted (its window stalls advance the
+            // clock) drops the later chains too. Within ONE chain the
+            // granularity is the eager model's per-verb discretization
+            // — once its doorbell rang, the chain is on the wire.
+            self.apply_faults(t.now);
+            if !self.states[b].is_alive() {
+                continue;
+            }
+            let chain: Vec<Wqe> = wqes.iter().filter(|w| w.backup == b).copied().collect();
+            if chain.is_empty() {
+                continue;
+            }
+            t.busy(self.doorbell_ns);
+            self.doorbells[b] += 1;
+            self.replicas[b].post_batch(t, &chain);
+        }
+    }
+
+    /// Posted one-sided DDIO write to every live backup (SM-RC data path).
+    pub fn post_write(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
+        self.post_data(t, Verb::Write, meta);
+    }
+
+    /// Posted write-through write to every live backup (SM-OB data path).
+    pub fn post_write_wt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
+        self.post_data(t, Verb::WriteWT, meta);
     }
 
     /// Non-temporal write on every live backup's shared QP (SM-DD data
     /// path).
     pub fn post_write_nt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
-        self.apply_faults(t.now);
-        for i in 0..self.replicas.len() {
-            if self.states[i].is_alive() {
-                self.replicas[i].post_write_nt(t, meta);
-            }
-        }
+        self.post_data(t, Verb::WriteNT, meta);
     }
 
     /// Posted remote ordering fence on every live backup (SM-OB epochs).
-    /// Ordering is a per-backup property, so no ack policy applies.
+    /// Ordering is a per-backup property, so no ack policy applies. A
+    /// flush point: the epoch barrier must order after every staged
+    /// write, so the stage's doorbells ring first.
     pub fn rofence(&mut self, t: &mut ThreadClock) {
+        self.flush(t);
         self.apply_faults(t.now);
-        for i in 0..self.replicas.len() {
-            if self.states[i].is_alive() {
-                self.replicas[i].rofence(t);
-            }
-        }
+        self.for_each_alive(|_, r| r.rofence(t));
     }
 
-    /// Shared blocking-fence protocol: issue the verb on every live
+    /// Shared blocking-fence protocol: flush the staged pipeline (the
+    /// writes logically precede the fence), issue the verb on every live
     /// backup, record per-backup completions, then block once per the ack
     /// policy — or record a [`Stall`] when the survivors cannot satisfy
     /// it (halt mode, or nobody left).
     fn fence(&mut self, t: &mut ThreadClock, issue: fn(&mut Rdma, &mut ThreadClock) -> Ns) {
-        self.apply_faults(t.now);
         if self.stall.is_some() {
             // Already stalled: the run is over; let the caller wind down.
             return;
         }
+        // Durability/ordering fences are flush points: staged doorbells
+        // ring before the fence verb issues (no-op under eager). Fault
+        // state advances inside the flush (per chain) or just after.
+        self.flush(t);
+        self.apply_faults(t.now);
         // Decide satisfiability BEFORE issuing: a fence that stalls must
         // leave no trace on the survivors (no drains, no completions).
         let alive = self.alive_count();
@@ -764,6 +930,134 @@ mod tests {
             assert_eq!(s.resyncs, 0);
         }
         assert_eq!(f.blocking_waits, 1);
+    }
+
+    // ---- staged WQE pipeline ---------------------------------------------
+
+    /// The batching anchor: `cap:1` IS the eager model. A fabric built
+    /// with `Cap(1)` must normalize to `Eager` and stay event-for-event
+    /// identical to the default fabric — same thread time after every
+    /// verb, same ledger.
+    #[test]
+    fn cap_one_normalizes_to_the_eager_anchor() {
+        let p = Platform::default();
+        let mut base = Fabric::new(&p, &repl(2, AckPolicy::All), true);
+        let mut anchored =
+            Fabric::new(&p, &repl(2, AckPolicy::All), true).with_batching(FlushPolicy::Cap(1));
+        assert_eq!(anchored.batching(), FlushPolicy::Eager);
+        let mut tb = ThreadClock::new(0);
+        let mut ta = ThreadClock::new(0);
+        for e in 0..4u32 {
+            base.post_write_wt(&mut tb, meta(0x40 * (1 + e as u64), e, e as u64));
+            anchored.post_write_wt(&mut ta, meta(0x40 * (1 + e as u64), e, e as u64));
+            assert_eq!(tb.now, ta.now, "epoch {e} diverged");
+            base.rofence(&mut tb);
+            anchored.rofence(&mut ta);
+        }
+        base.rdfence(&mut tb);
+        anchored.rdfence(&mut ta);
+        assert_eq!(tb.now, ta.now);
+        for b in 0..2 {
+            assert_eq!(
+                base.backup(b).ledger.events(),
+                anchored.backup(b).ledger.events(),
+                "backup {b}"
+            );
+        }
+        assert_eq!(base.doorbells_total(), anchored.doorbells_total());
+    }
+
+    /// Fence-policy batching must reproduce the eager path's per-backup
+    /// ledger order exactly (only instants move) while ringing one
+    /// doorbell per backup per epoch instead of one per WQE.
+    #[test]
+    fn fence_policy_preserves_ledger_order_with_fewer_doorbells() {
+        let p = Platform::default();
+        let drive = |f: &mut Fabric| -> Ns {
+            let mut t = ThreadClock::new(0);
+            for e in 0..3u32 {
+                for w in 0..4u64 {
+                    let s = e as u64 * 4 + w;
+                    f.post_write_wt(&mut t, meta(0x40 * (1 + s), e, s));
+                }
+                f.rofence(&mut t);
+            }
+            f.rdfence(&mut t);
+            t.now
+        };
+        let mut eager = Fabric::new(&p, &repl(2, AckPolicy::All), true);
+        drive(&mut eager);
+        let mut batched =
+            Fabric::new(&p, &repl(2, AckPolicy::All), true).with_batching(FlushPolicy::Fence);
+        drive(&mut batched);
+        let proj = |f: &Fabric, b: usize| -> Vec<(u32, u64, u64)> {
+            f.backup(b).ledger.events().iter().map(|e| (e.thread, e.seq, e.addr)).collect()
+        };
+        for b in 0..2 {
+            assert_eq!(proj(&eager, b), proj(&batched, b), "backup {b}");
+        }
+        // 12 WQEs per backup: eager rings 12 doorbells each, fence-mode
+        // rings one per epoch flush (3 each).
+        assert_eq!(eager.doorbells_total(), 24);
+        assert_eq!(batched.doorbells_total(), 6);
+        assert_eq!(batched.posted_writes(), eager.posted_writes());
+        assert_eq!(batched.staged_wqes, 24);
+        assert_eq!(batched.staged_pending(), 0, "fences must drain the stage");
+        assert!(batched.mean_batch() > eager.mean_batch());
+        assert!(batched.doorbells_total() <= batched.posted_writes());
+    }
+
+    #[test]
+    fn cap_policy_flushes_mid_epoch() {
+        let p = Platform::default();
+        let mut f =
+            Fabric::new(&p, &repl(2, AckPolicy::All), true).with_batching(FlushPolicy::Cap(2));
+        let mut t = ThreadClock::new(0);
+        for s in 0..3u64 {
+            f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+        }
+        // Cap 2: one flush after the second line; the third stays staged.
+        assert_eq!(f.staged_pending(), 2, "one line x 2 backups staged");
+        assert_eq!(f.doorbells_total(), 2);
+        f.rdfence(&mut t);
+        assert_eq!(f.staged_pending(), 0);
+        assert_eq!(f.doorbells_total(), 4);
+        for b in 0..2 {
+            assert_eq!(f.backup(b).ledger.len(), 3, "backup {b}");
+        }
+        assert!((f.mean_batch() - 1.5).abs() < 1e-9, "{}", f.mean_batch());
+    }
+
+    /// A kill landing between stage and doorbell drops only the dead
+    /// backup's staged WQEs: survivors get the full chain, the corpse's
+    /// ledger shows nothing from the batch.
+    #[test]
+    fn kill_between_stage_and_doorbell_drops_only_dead_wqes() {
+        let p = Platform::default();
+        let mut f = Fabric::with_faults(
+            &p,
+            &repl(3, AckPolicy::Quorum(2)),
+            faults("kill:2@5000", OnLoss::Halt),
+            true,
+        )
+        .with_batching(FlushPolicy::Fence);
+        let mut t = ThreadClock::new(0);
+        // Staged before the kill instant...
+        for s in 0..4u64 {
+            f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+        }
+        assert!(t.now < 5_000, "staging must predate the kill, t={}", t.now);
+        assert_eq!(f.staged_pending(), 12, "4 lines x 3 backups");
+        // ...doorbell rung after it: the dead backup's WQEs are dropped.
+        t.wait_until(6_000);
+        f.rdfence(&mut t);
+        assert!(f.stall().is_none(), "quorum:2 tolerates the loss");
+        for b in 0..2 {
+            assert_eq!(f.backup(b).ledger.len(), 4, "survivor {b}");
+        }
+        assert_eq!(f.backup(2).ledger.len(), 0, "dead backup saw a staged WQE");
+        assert_eq!(f.state(2), BackupState::Dead { since: 5_000 });
+        assert_eq!(f.staged_pending(), 0, "dropped WQEs must not linger");
     }
 
     // ---- failure dynamics ------------------------------------------------

@@ -1,7 +1,8 @@
 //! RDMA network models: local queue pairs, the per-backup requester
 //! stack, the remote (backup) NIC engine with its memory subsystem, the
 //! verb layer tying them together with the paper's §6.2 latency
-//! semantics, and the N-way replica-group [`Fabric`] with pluggable
+//! semantics, the staged WQE submission pipeline with doorbell batching
+//! ([`wqe`]), and the N-way replica-group [`Fabric`] with pluggable
 //! ack policies and deterministic failure dynamics ([`faults`]): backups
 //! can be killed and rejoin mid-run, with catch-up resync and
 //! halt/degrade loss handling.
@@ -12,6 +13,7 @@ pub mod qp;
 pub mod rdma;
 pub mod remote;
 pub mod verbs;
+pub mod wqe;
 
 pub use fabric::{BackupStats, Fabric};
 pub use faults::{
@@ -22,3 +24,4 @@ pub use qp::LocalQp;
 pub use rdma::Rdma;
 pub use remote::RemoteEngine;
 pub use verbs::WriteMeta;
+pub use wqe::{BatchingConfig, FlushPolicy, SubmitQueue, Wqe};

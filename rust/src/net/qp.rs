@@ -5,6 +5,12 @@
 //! blocks when `depth` requests are in flight — this is how remote-side
 //! back-pressure (e.g. a full MC write queue under SM-DD) propagates back
 //! to the issuing thread, producing the paper's "frequent pauses".
+//!
+//! Doorbell batching (see [`crate::net::wqe`]) lives *above* this model:
+//! a flushed chain drives [`LocalQp::post`] once per WQE, so the gap,
+//! window and back-pressure semantics are identical whether a WQE was
+//! posted eagerly or launched as part of a coalesced chain — batching
+//! amortizes only the CPU-side doorbell cost, never the wire model.
 
 use crate::sim::FifoResource;
 use crate::Ns;

@@ -16,7 +16,8 @@
 
 use super::qp::LocalQp;
 use super::remote::RemoteEngine;
-use super::verbs::WriteMeta;
+use super::verbs::{Verb, WriteMeta};
+use super::wqe::Wqe;
 use crate::config::Platform;
 use crate::sim::{RateLimiter, ThreadClock};
 use crate::Ns;
@@ -65,7 +66,7 @@ impl Rdma {
             dd_windows: HashMap::new(),
             dd_window_stall_ns: 0,
             half: p.rtt / 2,
-            post_cost: p.post_cost,
+            post_cost: p.post_cost(),
             poll_cost: p.poll_cost,
             remote: RemoteEngine::new(p, ledger),
             posted_writes: 0,
@@ -139,31 +140,64 @@ impl Rdma {
         t.busy(self.poll_cost);
     }
 
+    /// Submit one data WQE through the QP/wire/remote pipeline WITHOUT
+    /// charging any CPU post cost — the caller has already paid the
+    /// staging (and, per chain, doorbell) cost; see [`crate::net::wqe`].
+    /// The per-WQE gap, send window and remote back-pressure model is
+    /// exactly the eager path's.
+    pub fn submit_data(&mut self, t: &mut ThreadClock, verb: Verb, meta: WriteMeta) {
+        let thread = t.id as u32;
+        match verb {
+            Verb::Write => {
+                let lane = self.next_lane(thread);
+                let (ready, iss) = self.post_lane(thread, lane, t.now);
+                t.wait_until(ready);
+                let arrive = iss + self.half;
+                self.remote.write_ddio(lane, arrive, meta);
+                // Posted: the ack returns as soon as the remote NIC
+                // receives it.
+                self.complete_lane(thread, lane, arrive + self.half);
+            }
+            Verb::WriteWT => {
+                let lane = self.next_lane(thread);
+                let (ready, iss) = self.post_lane(thread, lane, t.now);
+                t.wait_until(ready);
+                let arrive = iss + self.half;
+                self.remote.write_wt(lane, arrive, meta);
+                self.complete_lane(thread, lane, arrive + self.half);
+            }
+            Verb::WriteNT => {
+                let (ready, iss) = self.post_dd(thread, t.now);
+                t.wait_until(ready);
+                let arrive = iss + self.half;
+                let (_proc, persist) = self.remote.write_nt(0, arrive, meta);
+                self.complete_dd(thread, persist + self.half);
+            }
+            other => unreachable!("submit_data: {other:?} is not a data verb"),
+        }
+        self.posted_writes += 1;
+    }
+
+    /// Post a doorbell-coalesced chain of staged WQEs in stage (FIFO)
+    /// order. No CPU cost is charged here — the caller rings one
+    /// doorbell for the whole chain (see [`crate::net::Fabric`]); each
+    /// WQE still pays its full gap/window/back-pressure submission cost.
+    pub fn post_batch(&mut self, t: &mut ThreadClock, wqes: &[Wqe]) {
+        for w in wqes {
+            self.submit_data(t, w.verb, w.meta);
+        }
+    }
+
     /// Posted one-sided RDMA write via DDIO (SM-RC's data path).
     pub fn post_write(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
         t.busy(self.post_cost);
-        let thread = t.id as u32;
-        let lane = self.next_lane(thread);
-        let (ready, iss) = self.post_lane(thread, lane, t.now);
-        t.wait_until(ready);
-        let arrive = iss + self.half;
-        self.remote.write_ddio(lane, arrive, meta);
-        // Posted: the ack returns as soon as the remote NIC receives it.
-        self.complete_lane(thread, lane, arrive + self.half);
-        self.posted_writes += 1;
+        self.submit_data(t, Verb::Write, meta);
     }
 
     /// Posted write-through write (SM-OB's data path).
     pub fn post_write_wt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
         t.busy(self.post_cost);
-        let thread = t.id as u32;
-        let lane = self.next_lane(thread);
-        let (ready, iss) = self.post_lane(thread, lane, t.now);
-        t.wait_until(ready);
-        let arrive = iss + self.half;
-        self.remote.write_wt(lane, arrive, meta);
-        self.complete_lane(thread, lane, arrive + self.half);
-        self.posted_writes += 1;
+        self.submit_data(t, Verb::WriteWT, meta);
     }
 
     /// Non-temporal write on the shared QP (SM-DD's data path; the single
@@ -172,13 +206,7 @@ impl Rdma {
     /// remote MC back-pressure.
     pub fn post_write_nt(&mut self, t: &mut ThreadClock, meta: WriteMeta) {
         t.busy(self.post_cost);
-        let thread = t.id as u32;
-        let (ready, iss) = self.post_dd(thread, t.now);
-        t.wait_until(ready);
-        let arrive = iss + self.half;
-        let (_proc, persist) = self.remote.write_nt(0, arrive, meta);
-        self.complete_dd(thread, persist + self.half);
-        self.posted_writes += 1;
+        self.submit_data(t, Verb::WriteNT, meta);
     }
 
     /// Issue a remote commit without blocking the thread; returns the
@@ -370,6 +398,39 @@ mod tests {
         // 8 writes over 4 QPs: 2 per QP. Thread time = 8 posts.
         assert_eq!(t.now, 8 * 30);
         assert_eq!(r.posted_writes, 8);
+    }
+
+    #[test]
+    fn post_batch_submits_like_eager_minus_cpu_cost() {
+        // A doorbell-coalesced chain must drive the QP/wire/remote model
+        // exactly like the eager posts, differing only in the CPU cost
+        // the caller charges (stage/doorbell instead of per-post).
+        let mut eager = rdma();
+        let mut te = ThreadClock::new(0);
+        for i in 0..6u64 {
+            eager.post_write_wt(&mut te, meta(0x40 * (i + 1), i));
+        }
+        let mut batched = rdma();
+        let mut tb = ThreadClock::new(0);
+        // Same start instant as the eager run's first wire submission.
+        tb.busy(30);
+        let wqes: Vec<Wqe> = (0..6u64)
+            .map(|i| Wqe {
+                verb: Verb::WriteWT,
+                meta: meta(0x40 * (i + 1), i),
+                backup: 0,
+            })
+            .collect();
+        batched.post_batch(&mut tb, &wqes);
+        assert_eq!(batched.posted_writes, 6);
+        assert_eq!(batched.remote.ledger.len(), eager.remote.ledger.len());
+        // Same per-thread order of (addr, seq) on the remote side.
+        let proj = |r: &Rdma| -> Vec<(u64, u64)> {
+            r.remote.ledger.events().iter().map(|e| (e.addr, e.seq)).collect()
+        };
+        assert_eq!(proj(&batched), proj(&eager));
+        // The batched thread paid no per-WQE post cost.
+        assert!(tb.now < te.now, "batched {} vs eager {}", tb.now, te.now);
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! Staged WQE submission pipeline with doorbell batching.
+//!
+//! The eager posting model charges the primary a full doorbell
+//! (`post_cost`) per replicated line per backup, so an S-shard, N-backup
+//! deployment pays `S * N * post_cost` of CPU per line — the opposite of
+//! how real RNICs behave, where one MMIO doorbell launches a whole
+//! *chain* of WQEs queued in host memory. This module models that
+//! amortization explicitly:
+//!
+//! * a [`Wqe`] is one staged work-queue entry — a data verb
+//!   ([`Verb::Write`] / [`Verb::WriteWT`] / [`Verb::WriteNT`]), its
+//!   [`WriteMeta`], and the backup it targets;
+//! * a [`SubmitQueue`] is the per-thread staging area: WQEs accumulate
+//!   in host memory (each costing only `wqe_stage_ns` of CPU) until a
+//!   **flush** rings the doorbell — one `doorbell_ns` charge per backup
+//!   with staged work, regardless of how many WQEs its chain holds;
+//! * a [`FlushPolicy`] decides when flushes happen: [`FlushPolicy::Eager`]
+//!   (every post is its own doorbell — the pre-batching model),
+//!   [`FlushPolicy::Cap`]`(k)` (flush once `k` logical line writes are
+//!   staged), or [`FlushPolicy::Fence`] (flush only at ordering /
+//!   durability fences — maximal batching between persistence points).
+//!
+//! Batches never leak across ordering or durability fences: every
+//! `rofence` / `rcommit` / `rdfence` / read-fence (and therefore every
+//! epoch boundary and transaction commit) flushes the stage before the
+//! fence verb issues, so the remote engine observes the exact same
+//! per-thread write/fence order as the eager path and the persistency
+//! semantics are unchanged — only arrival *instants* move. With
+//! `batch_cap = 1` (normalized to `Eager`) the pipeline reproduces the
+//! pre-batching cost model bit-exactly; `rust/tests/batching.rs` pins
+//! the ledger equivalence for caps {1, 4, 16} under all three SM
+//! strategies.
+//!
+//! The fan-out half of the pipeline (staging one logical line as N
+//! backup WQEs, dropping staged WQEs whose target was killed before the
+//! doorbell, per-backup chains) lives in [`crate::net::Fabric`]; the
+//! per-WQE gap/window/back-pressure submission model is unchanged in
+//! [`crate::net::Rdma::post_batch`].
+
+use super::verbs::{Verb, WriteMeta};
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// Mean data WQEs launched per doorbell — the amortization factor the
+/// staged pipeline recovers (1.0 under eager posting; 0 before any
+/// data traffic). The shared convention behind every metrics surface
+/// (fabric, run outcome, group/sharded reports).
+pub fn mean_batch(wqes: u64, doorbells: u64) -> f64 {
+    if doorbells == 0 {
+        return 0.0;
+    }
+    wqes as f64 / doorbells as f64
+}
+
+/// One staged work-queue entry: a data verb bound for one backup.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Wqe {
+    /// The data verb ([`Verb::Write`], [`Verb::WriteWT`] or
+    /// [`Verb::WriteNT`] — fences are flush points, never staged).
+    pub verb: Verb,
+    pub meta: WriteMeta,
+    /// Target backup index within the replica group.
+    pub backup: usize,
+}
+
+/// When the staged pipeline rings its doorbells.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FlushPolicy {
+    /// No staging: every post rings its own per-backup doorbell — the
+    /// pre-batching model, and the regression anchor (`batch_cap = 1`
+    /// normalizes to this).
+    #[default]
+    Eager,
+    /// Flush once `k` logical line writes are staged (each fans out to
+    /// one WQE per live backup but counts once toward the cap). Fences
+    /// still flush early; `Cap(1)` normalizes to [`FlushPolicy::Eager`].
+    Cap(usize),
+    /// Flush only at ordering/durability fences: maximal batching
+    /// between persistence points.
+    Fence,
+}
+
+impl FlushPolicy {
+    /// Reject impossible shapes (`cap:0` never flushes).
+    pub fn validate(&self) -> Result<()> {
+        if let FlushPolicy::Cap(0) = self {
+            bail!("batching cap must be >= 1 line (cap:0 never flushes)");
+        }
+        Ok(())
+    }
+
+    /// Canonical form: `Cap(1)` *is* the eager model (a flush after
+    /// every line, one doorbell per backup), so it normalizes to
+    /// [`FlushPolicy::Eager`] — the `batch_cap = 1` regression anchor.
+    pub fn normalized(self) -> FlushPolicy {
+        match self {
+            FlushPolicy::Cap(1) => FlushPolicy::Eager,
+            other => other,
+        }
+    }
+
+    /// Does this policy bypass the staging queue entirely?
+    pub fn is_eager(&self) -> bool {
+        matches!(self.normalized(), FlushPolicy::Eager)
+    }
+}
+
+impl FromStr for FlushPolicy {
+    type Err = anyhow::Error;
+
+    /// Parse a `--flush-policy` spec: `eager`, `fence`, or `cap:K`
+    /// (K logical line writes per batch, underscores allowed).
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "eager" => return Ok(FlushPolicy::Eager),
+            "fence" => return Ok(FlushPolicy::Fence),
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("cap:") {
+            let k: usize = rest
+                .trim()
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("flush policy {s:?}: bad cap: {e}"))?;
+            let p = FlushPolicy::Cap(k);
+            p.validate()?;
+            return Ok(p);
+        }
+        bail!("unknown flush policy {s:?}; expected eager | cap:K | fence")
+    }
+}
+
+impl fmt::Display for FlushPolicy {
+    /// Round-trips through [`FromStr`]: `eager` / `cap:K` / `fence`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FlushPolicy::Eager => f.write_str("eager"),
+            FlushPolicy::Cap(k) => write!(f, "cap:{k}"),
+            FlushPolicy::Fence => f.write_str("fence"),
+        }
+    }
+}
+
+/// The `[batching]` config table / `--batch-cap` / `--flush-policy`
+/// CLI surface.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatchingConfig {
+    pub policy: FlushPolicy,
+}
+
+impl BatchingConfig {
+    pub fn new(policy: FlushPolicy) -> Self {
+        BatchingConfig { policy }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.policy.validate()
+    }
+}
+
+/// Per-thread staging queue: WQEs chained in host memory awaiting a
+/// doorbell. FIFO — flush submits in stage order, which preserves the
+/// per-thread issue order the eager path would have produced.
+#[derive(Clone, Debug, Default)]
+pub struct SubmitQueue {
+    wqes: Vec<Wqe>,
+    /// Logical line writes staged since the last flush (each fans out
+    /// to one WQE per live backup but counts once toward a cap).
+    lines: usize,
+}
+
+impl SubmitQueue {
+    /// Stage one backup WQE (costs `wqe_stage_ns` of CPU at the caller).
+    pub fn push(&mut self, w: Wqe) {
+        self.wqes.push(w);
+    }
+
+    /// Count one logical line write against the flush cap (call once
+    /// per fan-out, after pushing its per-backup WQEs).
+    pub fn note_line(&mut self) {
+        self.lines += 1;
+    }
+
+    /// Logical line writes staged since the last flush.
+    pub fn lines(&self) -> usize {
+        self.lines
+    }
+
+    /// Staged backup WQEs awaiting a doorbell.
+    pub fn len(&self) -> usize {
+        self.wqes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.wqes.is_empty()
+    }
+
+    /// Drain the stage for a flush: returns the chained WQEs in stage
+    /// order and resets the line count.
+    pub fn take(&mut self) -> Vec<Wqe> {
+        self.lines = 0;
+        std::mem::take(&mut self.wqes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wqe(backup: usize, seq: u64) -> Wqe {
+        Wqe {
+            verb: Verb::WriteWT,
+            meta: WriteMeta {
+                addr: 0x40 * (1 + seq),
+                val: seq,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq,
+            },
+            backup,
+        }
+    }
+
+    #[test]
+    fn flush_policy_parse_roundtrip() {
+        for p in [FlushPolicy::Eager, FlushPolicy::Cap(4), FlushPolicy::Fence] {
+            assert_eq!(p.to_string().parse::<FlushPolicy>().unwrap(), p);
+        }
+        assert_eq!("EAGER".parse::<FlushPolicy>().unwrap(), FlushPolicy::Eager);
+        assert_eq!("cap:1_024".parse::<FlushPolicy>().unwrap(), FlushPolicy::Cap(1024));
+        assert!("cap:0".parse::<FlushPolicy>().is_err());
+        assert!("cap:x".parse::<FlushPolicy>().is_err());
+        assert!("cap".parse::<FlushPolicy>().is_err());
+        assert!("batched".parse::<FlushPolicy>().is_err());
+    }
+
+    #[test]
+    fn cap_one_normalizes_to_eager() {
+        assert_eq!(FlushPolicy::Cap(1).normalized(), FlushPolicy::Eager);
+        assert!(FlushPolicy::Cap(1).is_eager());
+        assert!(FlushPolicy::Eager.is_eager());
+        assert!(!FlushPolicy::Cap(2).is_eager());
+        assert!(!FlushPolicy::Fence.is_eager());
+        assert_eq!(FlushPolicy::Cap(2).normalized(), FlushPolicy::Cap(2));
+    }
+
+    #[test]
+    fn mean_batch_convention() {
+        assert_eq!(mean_batch(0, 0), 0.0);
+        assert_eq!(mean_batch(64, 0), 0.0, "no doorbells: no factor");
+        assert!((mean_batch(64, 64) - 1.0).abs() < 1e-9, "eager");
+        assert!((mean_batch(64, 4) - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batching_config_validates_cap() {
+        assert!(BatchingConfig::default().validate().is_ok());
+        assert!(BatchingConfig::new(FlushPolicy::Cap(0)).validate().is_err());
+        assert!(BatchingConfig::new(FlushPolicy::Fence).validate().is_ok());
+        assert_eq!(BatchingConfig::default().policy, FlushPolicy::Eager);
+    }
+
+    #[test]
+    fn submit_queue_stages_fifo_and_take_resets() {
+        let mut q = SubmitQueue::default();
+        assert!(q.is_empty());
+        // One logical line fanned out to two backups.
+        q.push(wqe(0, 0));
+        q.push(wqe(1, 0));
+        q.note_line();
+        q.push(wqe(0, 1));
+        q.push(wqe(1, 1));
+        q.note_line();
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.lines(), 2);
+        let drained = q.take();
+        assert_eq!(drained.len(), 4);
+        // FIFO: stage order preserved per thread.
+        assert_eq!(drained[0], wqe(0, 0));
+        assert_eq!(drained[3], wqe(1, 1));
+        assert!(q.is_empty());
+        assert_eq!(q.lines(), 0);
+    }
+}

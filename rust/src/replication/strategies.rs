@@ -1,6 +1,15 @@
 //! The four fixed replication strategies of the paper (Table 1), driven
 //! against a replica-group [`Fabric`] (one backup reproduces the paper;
 //! N backups fan out with the group's ack policy at durability points).
+//!
+//! Every strategy's verbs flow through the fabric's staged WQE pipeline
+//! (see [`crate::net::wqe`]): data verbs may be batched behind one
+//! doorbell, and every fence a strategy issues — `rcommit`, `rofence`,
+//! `rdfence`, the sentinel read — is a flush point, so batching never
+//! reorders a strategy's writes across its ordering or durability
+//! boundaries. SM-DD's ordering point is deliberately *not* a flush: its
+//! single shared QP issues staged writes in program order anyway, so the
+//! epoch boundary needs no doorbell of its own.
 
 use super::Strategy;
 use crate::config::StrategyKind;
@@ -76,6 +85,8 @@ impl Strategy for SmDd {
     }
     fn on_ofence(&mut self, _f: &mut Fabric, _t: &mut ThreadClock) {
         // Implicit ordering: single QP + ordered non-posted PCIe writes.
+        // Staged WQEs need no flush here either — the shared QP issues
+        // them in program order at the next flush point (the read fence).
     }
     fn on_dfence(&mut self, f: &mut Fabric, t: &mut ThreadClock) {
         f.read_fence(t);
@@ -235,6 +246,47 @@ mod tests {
             let stall = f.stall().unwrap_or_else(|| panic!("{kind}: must stall"));
             assert_eq!(stall.alive, 1, "{kind}");
             assert_eq!(stall.required, 2, "{kind}");
+        }
+    }
+
+    /// Every strategy's epoch/durability structure must survive
+    /// doorbell batching: under the fence flush policy the full write
+    /// stream still lands on every backup in per-thread epoch order, and
+    /// the fences keep their blocking semantics.
+    #[test]
+    fn strategies_preserve_epoch_order_under_batching() {
+        use crate::net::FlushPolicy;
+        for s in [&mut SmRc as &mut dyn Strategy, &mut SmOb, &mut SmDd] {
+            let kind = s.kind();
+            let p = Platform::default();
+            let repl = ReplicationConfig::new(2, AckPolicy::All);
+            let mut f = Fabric::new(&p, &repl, true).with_batching(FlushPolicy::Fence);
+            let mut t = ThreadClock::new(0);
+            for epoch in 0..4u32 {
+                for wi in 0..3u64 {
+                    let seq = epoch as u64 * 3 + wi;
+                    s.on_clwb(&mut f, &mut t, meta(0x40 * (1 + seq), epoch, seq));
+                }
+                s.on_ofence(&mut f, &mut t);
+            }
+            s.on_dfence(&mut f, &mut t);
+            assert_eq!(f.staged_pending(), 0, "{kind}: dfence must flush");
+            for b in 0..2 {
+                let evs = f.backup(b).ledger.events();
+                assert_eq!(evs.len(), 12, "{kind} backup {b}");
+                for a in evs {
+                    for c in evs {
+                        assert!(
+                            a.epoch >= c.epoch || a.at <= c.at,
+                            "{kind} backup {b}: epoch order violated under batching"
+                        );
+                    }
+                }
+            }
+            assert!(
+                f.doorbells_total() < f.posted_writes(),
+                "{kind}: batching must amortize doorbells"
+            );
         }
     }
 

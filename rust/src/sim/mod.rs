@@ -29,17 +29,26 @@ pub struct ThreadClock {
     pub id: usize,
     /// Current virtual time of this thread (ns).
     pub now: Ns,
+    /// Cumulative local busy work (ns): the thread's CPU cost, excluding
+    /// blocked waits (`wait_until`). The primary-side busy figure the
+    /// doorbell-batching benches track (`fig9_batching`).
+    pub busy_ns: Ns,
 }
 
 impl ThreadClock {
     pub fn new(id: usize) -> Self {
-        ThreadClock { id, now: 0 }
+        ThreadClock {
+            id,
+            now: 0,
+            busy_ns: 0,
+        }
     }
 
     /// Advance the clock by `d` ns of local busy work.
     #[inline]
     pub fn busy(&mut self, d: Ns) {
         self.now += d;
+        self.busy_ns += d;
     }
 
     /// Block until at least `t` (no-op if already past it).
@@ -64,5 +73,15 @@ mod tests {
         assert_eq!(c.now, 10);
         c.wait_until(50);
         assert_eq!(c.now, 50);
+    }
+
+    #[test]
+    fn busy_excludes_blocked_waits() {
+        let mut c = ThreadClock::new(0);
+        c.busy(10);
+        c.wait_until(1_000);
+        c.busy(5);
+        assert_eq!(c.now, 1_005);
+        assert_eq!(c.busy_ns, 15, "waits must not count as CPU work");
     }
 }

@@ -113,6 +113,22 @@ pub fn run_transact_faulted(
     Ok(run_transact_on(&mut mirror, cfg))
 }
 
+/// Run Transact against an N-way replica group with the staged WQE
+/// pipeline under `batching` (see [`crate::net::wqe`]; `eager`
+/// reproduces the unbatched path bit-exactly). Fails on an invalid
+/// replication config.
+pub fn run_transact_batched(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    batching: crate::net::FlushPolicy,
+    cfg: TransactConfig,
+) -> Result<RunOutcome> {
+    let mut mirror = Mirror::try_build(plat.clone(), kind, None, repl, false)?;
+    mirror.set_batching(batching);
+    Ok(run_transact_on(&mut mirror, cfg))
+}
+
 /// Run Transact against `sharding.shards` independent replica groups
 /// partitioning the PM line-address space (see
 /// [`crate::coordinator::shard`]); each shard gets the `repl` group

@@ -1,0 +1,289 @@
+//! Batching-equivalence suite for the staged WQE pipeline
+//! (`net::wqe` / `Fabric::post_data`): property tests asserting that
+//! doorbell batching changes *when* doorbells ring but never *what*
+//! replicates — every backup's durability ledger carries the same
+//! events in the same per-backup order as the eager path — plus the
+//! fault-interaction units (a kill between stage and doorbell drops
+//! only the dead backup's staged WQEs; a rejoin leaves no ghost
+//! entries).
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, ThreadCtx};
+use pmsm::net::{Fabric, FaultsConfig, FlushPolicy, OnLoss, WriteMeta};
+use pmsm::ptest::{check, Gen};
+use pmsm::recovery;
+use pmsm::sim::ThreadClock;
+
+fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
+    WriteMeta {
+        addr,
+        val: seq,
+        thread: 0,
+        txn: 0,
+        epoch,
+        seq,
+    }
+}
+
+/// Per-backup ledger projected to its replication-relevant coordinates
+/// (everything but the durability instant, which batching may move), in
+/// ledger (persist-record) order.
+fn ledger_events(m: &Mirror, backup: usize) -> Vec<(u32, u64, u64, u64, u32)> {
+    m.backup(backup)
+        .ledger
+        .events()
+        .iter()
+        .map(|e| (e.thread, e.seq, e.addr, e.val, e.epoch))
+        .collect()
+}
+
+/// Drive a random single-thread Transact-shaped workload and return the
+/// per-backup ledgers plus the run's doorbell/WQE counters.
+fn drive(
+    kind: StrategyKind,
+    backups: usize,
+    policy: FlushPolicy,
+    shape: &[(u32, u32)], // (epochs, writes) per transaction
+) -> Mirror {
+    let mut m = Mirror::with_replication(
+        Platform::default(),
+        kind,
+        ReplicationConfig::new(backups, AckPolicy::All),
+        true,
+    )
+    .unwrap();
+    m.set_batching(policy);
+    let mut t = ThreadCtx::new(0);
+    for (i, &(epochs, writes)) in shape.iter().enumerate() {
+        m.txn_begin(&mut t, None);
+        for e in 0..epochs {
+            for w in 0..writes {
+                let addr = 0x1000_0000 + ((i as u64 * 7 + e as u64 * 3 + w as u64) % 32) * 64;
+                m.store(&mut t, addr, i as u64);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+        }
+        m.txn_commit(&mut t);
+    }
+    m
+}
+
+/// The tentpole's equivalence property: for random workloads, any batch
+/// cap in {1, 4, 16} and the fence policy, under all three SM
+/// strategies and 1..3 backups, every backup's durability ledger is
+/// identical to the eager path's (same events, same per-backup order —
+/// thread/seq/addr/val/epoch; only instants move) and per-thread epoch
+/// ordering still holds on the batched ledgers.
+#[test]
+fn prop_batched_ledgers_match_eager() {
+    check("batching-ledger-equivalence", 25, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let backups = g.usize(1, 3);
+        let txns = g.u64(1, 4);
+        let shape: Vec<(u32, u32)> = (0..txns)
+            .map(|_| (g.u64(1, 5) as u32, g.u64(1, 8) as u32))
+            .collect();
+        let eager = drive(kind, backups, FlushPolicy::Eager, &shape);
+        for policy in [
+            FlushPolicy::Cap(1),
+            FlushPolicy::Cap(4),
+            FlushPolicy::Cap(16),
+            FlushPolicy::Fence,
+        ] {
+            let batched = drive(kind, backups, policy, &shape);
+            for b in 0..backups {
+                assert_eq!(
+                    ledger_events(&eager, b),
+                    ledger_events(&batched, b),
+                    "{kind:?} backup {b} under {policy}: ledger diverged"
+                );
+                recovery::check_epoch_ordering(&batched.backup(b).ledger)
+                    .unwrap_or_else(|e| panic!("{kind:?} {policy}: {e}"));
+            }
+            assert_eq!(batched.posted_wqes(), eager.posted_wqes(), "{kind:?} {policy}");
+            assert!(
+                batched.doorbells() <= eager.doorbells(),
+                "{kind:?} {policy}: batching rang more doorbells"
+            );
+            if policy == FlushPolicy::Cap(1) {
+                // The anchor: cap 1 IS eager — same doorbell count too.
+                assert_eq!(batched.doorbells(), eager.doorbells(), "{kind:?}");
+            }
+        }
+    });
+}
+
+/// Batching must never change commit accounting or recovery-relevant
+/// durability: the fence-flushed run commits every transaction and its
+/// durability fence still covers every replicated write.
+#[test]
+fn prop_batched_dfence_covers_everything() {
+    check("batching-dfence-coverage", 20, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let epochs = g.u64(1, 6) as u32;
+        let writes = g.u64(1, 8) as u32;
+        let cap = *g.pick(&[4usize, 16]);
+        let mut m = Mirror::with_replication(
+            Platform::default(),
+            kind,
+            ReplicationConfig::new(2, AckPolicy::All),
+            true,
+        )
+        .unwrap();
+        m.set_batching(FlushPolicy::Cap(cap));
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        for e in 0..epochs {
+            for w in 0..writes {
+                let addr = 0x2000_0000 + (e * writes + w) as u64 * 64;
+                m.store(&mut t, addr, 7);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+        }
+        m.txn_commit(&mut t);
+        assert_eq!(t.txns_done, 1);
+        for b in 0..2 {
+            let ledger = &m.backup(b).ledger;
+            assert_eq!(ledger.len() as u64, (epochs * writes) as u64, "backup {b}");
+            for ev in ledger.events() {
+                assert!(
+                    ev.at <= t.last_dfence,
+                    "backup {b}: write at {} after dfence {}",
+                    ev.at,
+                    t.last_dfence
+                );
+            }
+        }
+    });
+}
+
+/// A backup killed between stage and doorbell receives nothing from the
+/// staged batch (the WQEs are dropped, not parked), while survivors get
+/// the full chain.
+#[test]
+fn kill_between_stage_and_doorbell_drops_only_dead_wqes() {
+    let p = Platform::default();
+    let faults = FaultsConfig::with_plan("kill:1@2000", OnLoss::Halt).unwrap();
+    let mut f = Fabric::with_faults(
+        &p,
+        &ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+        faults,
+        true,
+    )
+    .with_batching(FlushPolicy::Fence);
+    let mut t = ThreadClock::new(0);
+    for s in 0..5u64 {
+        f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+    }
+    assert!(t.now < 2_000, "staging must predate the kill");
+    t.wait_until(3_000);
+    f.rdfence(&mut t);
+    assert!(f.stall().is_none());
+    for b in [0usize, 2] {
+        assert_eq!(f.backup(b).ledger.len(), 5, "survivor {b}");
+    }
+    assert_eq!(f.backup(1).ledger.len(), 0, "dead backup got a staged WQE");
+    assert_eq!(f.staged_pending(), 0, "dropped WQEs must not linger");
+}
+
+/// After a kill between stage and doorbell, a rejoin must produce no
+/// ghost ledger entries: everything the dead backup missed arrives only
+/// through the catch-up resync (durability stamped at or after the
+/// resync completes — never backdated into the dead window), and the
+/// rejoined ledger converges to the survivors' event set.
+#[test]
+fn rejoin_after_dropped_batch_has_no_ghost_entries() {
+    let p = Platform::default();
+    let kill_at = 2_000u64;
+    let rejoin_at = 50_000u64;
+    let faults = FaultsConfig::with_plan(
+        &format!("kill:1@{kill_at},rejoin:1@{rejoin_at}"),
+        OnLoss::Halt,
+    )
+    .unwrap();
+    let mut f = Fabric::with_faults(
+        &p,
+        &ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+        faults,
+        true,
+    )
+    .with_batching(FlushPolicy::Fence);
+    let mut t = ThreadClock::new(0);
+    // Epoch 0 staged before the kill, doorbell rung after it: backup 1's
+    // copies are dropped.
+    for s in 0..4u64 {
+        f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+    }
+    assert!(t.now < kill_at);
+    t.wait_until(3_000);
+    f.rdfence(&mut t);
+    assert_eq!(f.backup(1).ledger.len(), 0);
+    // Past the rejoin + resync window: epoch 1 reaches everyone again.
+    t.wait_until(rejoin_at + 100_000);
+    for s in 4..6u64 {
+        f.post_write_wt(&mut t, meta(0x40 * (1 + s), 1, s));
+    }
+    f.rdfence(&mut t);
+    assert!(f.stall().is_none());
+    assert_eq!(f.alive_count(), 3, "backup 1 must be back in the quorum");
+    // Converged: the rejoined backup holds exactly the survivors' events.
+    let proj = |b: usize| -> Vec<(u32, u64)> {
+        let mut evs: Vec<(u32, u64)> = f
+            .backup(b)
+            .ledger
+            .events()
+            .iter()
+            .map(|e| (e.thread, e.seq))
+            .collect();
+        evs.sort_unstable();
+        evs
+    };
+    assert_eq!(proj(1), proj(0), "rejoined backup must converge");
+    // No ghosts: nothing on backup 1 claims durability inside its dead
+    // window — dropped WQEs arrive only via the resync, at/after rejoin.
+    for ev in f.backup(1).ledger.events() {
+        assert!(
+            ev.at < kill_at || ev.at >= rejoin_at,
+            "ghost entry: seq {} stamped {} inside the dead window",
+            ev.seq,
+            ev.at
+        );
+    }
+    recovery::check_epoch_ordering(&f.backup(1).ledger).unwrap();
+}
+
+/// End-to-end anchor at the coordinator level: an eager run and a
+/// `batch_cap = 1` run are event-for-event identical (same thread
+/// timeline, same ledgers, same doorbell count).
+#[test]
+fn cap_one_run_is_event_identical_to_eager() {
+    let run = |policy: FlushPolicy| -> (u64, Vec<(u32, u64, u64, u64, u32)>, u64) {
+        let mut m = Mirror::with_replication(
+            Platform::default(),
+            StrategyKind::SmOb,
+            ReplicationConfig::new(2, AckPolicy::All),
+            true,
+        )
+        .unwrap();
+        m.set_batching(policy);
+        let mut t = ThreadCtx::new(0);
+        for i in 0..5u64 {
+            m.txn_begin(&mut t, None);
+            for e in 0..3u32 {
+                let addr = 0x3000_0000 + (i * 3 + e as u64) * 64;
+                m.store(&mut t, addr, i);
+                m.clwb(&mut t, addr);
+                m.sfence(&mut t);
+            }
+            m.txn_commit(&mut t);
+        }
+        (t.now(), ledger_events(&m, 0), m.doorbells())
+    };
+    let (eager_now, eager_ledger, eager_doorbells) = run(FlushPolicy::Eager);
+    let (cap1_now, cap1_ledger, cap1_doorbells) = run(FlushPolicy::Cap(1));
+    assert_eq!(eager_now, cap1_now, "cap:1 must be the eager anchor");
+    assert_eq!(eager_ledger, cap1_ledger);
+    assert_eq!(eager_doorbells, cap1_doorbells);
+}
