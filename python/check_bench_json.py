@@ -30,18 +30,37 @@ SCHEMA_VERSION = 1
 
 REQUIRED_RESULT_KEYS = ("name", "iters", "mean_ns", "stddev_ns", "min_ns")
 OPTIONAL_NUMBER_KEYS = ("elems_per_iter", "elems_per_sec")
-# Doorbell-batching counters (rust/src/net/wqe.rs): optional everywhere,
-# but whenever both are present the amortization invariant must hold,
-# and the fig9 bench must emit them on every result.
-COUNTER_KEYS = ("doorbells", "posted_wqes")
-BENCHES_REQUIRING_COUNTERS = ("fig9_batching",)
+# Staged-pipeline counters (rust/src/net/wqe.rs): optional everywhere,
+# but whenever present they must be non-negative ints, the amortization
+# lattice must hold (doorbells <= wire_wqes <= posted_wqes, i.e. mean
+# batch and mean span are both >= 1 whenever anything rang), and each
+# bench listed below must emit its counter set on every result.
+COUNTER_KEYS = (
+    "doorbells",
+    "posted_wqes",
+    "wire_wqes",
+    "combined_writes",
+    "busy_ns",
+)
+BENCHES_REQUIRING_COUNTERS = {
+    "fig9_batching": ("doorbells", "posted_wqes", "busy_ns"),
+    "fig10_coalescing": (
+        "doorbells",
+        "posted_wqes",
+        "wire_wqes",
+        "combined_writes",
+        "busy_ns",
+    ),
+}
 
 
 def _is_finite_number(x) -> bool:
     return isinstance(x, (int, float)) and not isinstance(x, bool) and math.isfinite(x)
 
 
-def check_result(doc_name: str, i: int, result, require_counters: bool = False) -> list[str]:
+def check_result(
+    doc_name: str, i: int, result, require_counters: tuple = ()
+) -> list[str]:
     errors = []
     where = f"{doc_name}: results[{i}]"
     if not isinstance(result, dict):
@@ -49,10 +68,9 @@ def check_result(doc_name: str, i: int, result, require_counters: bool = False) 
     for key in REQUIRED_RESULT_KEYS:
         if key not in result:
             errors.append(f"{where}: missing key {key!r}")
-    if require_counters:
-        for key in COUNTER_KEYS:
-            if key not in result:
-                errors.append(f"{where}: missing batching counter {key!r}")
+    for key in require_counters:
+        if key not in result:
+            errors.append(f"{where}: missing batching counter {key!r}")
     name = result.get("name")
     if "name" in result and (not isinstance(name, str) or not name):
         errors.append(f"{where}: name must be a nonempty string, got {name!r}")
@@ -75,10 +93,21 @@ def check_result(doc_name: str, i: int, result, require_counters: bool = False) 
             errors.append(f"{where}: {key} must be a non-negative integer, got {v!r}")
     doorbells = result.get("doorbells")
     posted = result.get("posted_wqes")
+    wire = result.get("wire_wqes")
     if isinstance(doorbells, int) and isinstance(posted, int) and doorbells > posted:
         errors.append(
             f"{where}: doorbells ({doorbells}) exceed posted_wqes ({posted}) — "
-            "a doorbell launches at least one WQE"
+            "a doorbell launches at least one WQE, so mean batch must be >= 1"
+        )
+    if isinstance(wire, int) and isinstance(posted, int) and wire > posted:
+        errors.append(
+            f"{where}: wire_wqes ({wire}) exceed posted_wqes ({posted}) — "
+            "a wire WQE carries at least one line, so mean span must be >= 1"
+        )
+    if isinstance(doorbells, int) and isinstance(wire, int) and doorbells > wire:
+        errors.append(
+            f"{where}: doorbells ({doorbells}) exceed wire_wqes ({wire}) — "
+            "every doorbell launches at least one wire WQE"
         )
     return errors
 
@@ -102,7 +131,7 @@ def check_document(path: Path) -> list[str]:
     elif path.name != f"BENCH_{bench}.json":
         errors.append(f"{path}: bench {bench!r} does not match the file name")
     results = doc.get("results")
-    require_counters = bench in BENCHES_REQUIRING_COUNTERS
+    require_counters = BENCHES_REQUIRING_COUNTERS.get(bench, ())
     if not isinstance(results, list):
         errors.append(f"{path}: results must be a list, got {type(results).__name__}")
     elif not results:

@@ -25,7 +25,8 @@ P_OB_BARRIER = 11  # remote cross-QP ordering barrier bubble for rofence (ns)
 P_QP_DEPTH = 12  # NIC pipeline depth hiding NT serialization (entries)
 P_NT_SERIAL = 13  # serialized per-line cost of an NT write beyond QP_DEPTH (ns)
 P_LLC_DDIO_LINES = 14  # lines the DDIO ways can buffer (2 MB / 64 B)
-P_RESERVED = 15
+P_WIRE_LINE = 15  # serialization of each extra line in a scatter-gather span (ns);
+#                   legacy default = GAP (full per-line issue cost, no SG benefit)
 
 N_PARAMS = 16
 
@@ -56,4 +57,5 @@ def default_params():
     p[P_QP_DEPTH] = 64.0
     p[P_NT_SERIAL] = 210.0  # PCIe_RT + LLC_MC: non-posted ordered NT write
     p[P_LLC_DDIO_LINES] = 32768.0  # 2 MB / 64 B
+    p[P_WIRE_LINE] = 150.0  # = GAP: legacy full per-line wire cost
     return p

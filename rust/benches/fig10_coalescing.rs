@@ -1,0 +1,241 @@
+//! Figure-10 bench (ours): flush-time coalescing — write combining +
+//! scatter-gather WQE merging — on the staged fan-out path, swept over
+//! workload locality (hot-header rewrites × contiguous log appends) ×
+//! backups × shards × SM strategy × coalesce mode, under the `fence`
+//! flush policy (the maximal chains the coalescer operates on).
+//!
+//! The bench *asserts* the tentpole's acceptance shape: on the
+//! locality-heavy append workload at `backups >= 2`, `wire_wqes` is
+//! strictly decreasing from `none` to `sg` (and `full <= sg`), write
+//! combining elides a positive number of superseded line writes, and
+//! the counter lattice `doorbells <= wire_wqes <= posted_wqes` holds in
+//! every cell — so a regression in the coalescer fails the CI gate
+//! instead of rotting in a table. It also shows the sharding
+//! interaction: a modulo map destroys address contiguity within each
+//! shard (spans stay at 1 line) while range striping preserves it.
+//!
+//! Emits `BENCH_fig10_coalescing.json` with `doorbells` / `posted_wqes`
+//! / `wire_wqes` / `combined_writes` / `busy_ns` counters per cell,
+//! validated by `python/check_bench_json.py` in CI's bench-smoke job
+//! (`wire_wqes <= posted_wqes`, `combined_writes >= 0`, mean batch
+//! `>= 1` whenever doorbells rang).
+//!
+//! Run: `cargo bench --bench fig10_coalescing`
+//! Scale with PMSM_BENCH_TXNS (default 1000 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::{Mirror, ShardMapSpec, ShardingConfig};
+use pmsm::metrics::report::Table;
+use pmsm::net::{CoalesceMode, FaultsConfig, FlushPolicy};
+use pmsm::workloads::transact::run_append_on;
+use pmsm::workloads::AppendConfig;
+
+const MODES: [CoalesceMode; 4] = [
+    CoalesceMode::None,
+    CoalesceMode::Combine,
+    CoalesceMode::Sg,
+    CoalesceMode::Full,
+];
+
+const BACKUPS: [usize; 3] = [1, 2, 4];
+
+fn cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    backups: usize,
+    sharding: ShardingConfig,
+    mode: CoalesceMode,
+    cfg: AppendConfig,
+) -> RunOutcome {
+    let mut m = Mirror::try_build_sharded(
+        plat.clone(),
+        kind,
+        None,
+        ReplicationConfig::new(backups, AckPolicy::All),
+        FaultsConfig::default(),
+        sharding,
+        false,
+    )
+    .expect("valid mirror shape");
+    m.set_batching(FlushPolicy::Fence);
+    m.set_coalescing(mode);
+    run_append_on(&mut m, cfg)
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000);
+    // A realistic SG wire model: ~16 ns per extra 64 B line (the legacy
+    // default of wire_line_ns = gap would make spans save NIC slots but
+    // no issue bandwidth — the counters gate either way).
+    let plat = Platform {
+        wire_line_ns: 16,
+        ..Platform::default()
+    };
+    // Locality-heavy: 2 hot-header rewrites + 8 contiguous appends per
+    // epoch — the shape combining and scatter-gather both bite on.
+    let cfg = AppendConfig {
+        epochs: 2,
+        writes: 8,
+        rewrites: 2,
+        txns,
+        threads: 1,
+    };
+    let unsharded = ShardingConfig::default();
+
+    // ---- Wire-footprint table per strategy: wire WQEs relative to the
+    // uncoalesced pipeline, combined writes, mean span, makespan ratio.
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        let mut t = Table::new(&[
+            "backups",
+            "none",
+            "combine",
+            "sg",
+            "full",
+            "combined(f)",
+            "span(f)",
+            "time(f)",
+        ]);
+        for &b in &BACKUPS {
+            let outs: Vec<RunOutcome> = MODES
+                .iter()
+                .map(|&m| cell(&plat, kind, b, unsharded, m, cfg))
+                .collect();
+            let base_wire = outs[0].wire_wqes as f64;
+            let mut cells = vec![format!("{b}")];
+            for out in &outs {
+                assert_eq!(out.txns, cfg.txns, "{kind}: every txn must commit");
+                assert!(
+                    out.doorbells <= out.wire_wqes && out.wire_wqes <= out.posted_wqes,
+                    "{kind}: counter lattice violated: {} doorbells, {} wire, {} lines",
+                    out.doorbells,
+                    out.wire_wqes,
+                    out.posted_wqes
+                );
+                cells.push(format!("{:.3}x", out.wire_wqes as f64 / base_wire));
+            }
+            cells.push(format!("{}", outs[3].combined_writes));
+            cells.push(format!("{:.1}", outs[3].mean_span()));
+            cells.push(format!(
+                "{:.3}x",
+                outs[3].makespan as f64 / outs[0].makespan as f64
+            ));
+            t.row(cells);
+            // The acceptance gate: with fan-out (backups >= 2), the
+            // wire footprint strictly shrinks under scatter-gather and
+            // never grows under any mode; combining elides real writes.
+            let (none, combine, sg, full) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+            assert_eq!(none.wire_wqes, none.posted_wqes, "{kind}: none is 1 line/WQE");
+            assert_eq!(none.combined_writes, 0, "{kind}");
+            if b >= 2 {
+                assert!(
+                    sg.wire_wqes < none.wire_wqes,
+                    "{kind} backups={b}: sg must cut wire WQEs \
+                     ({} vs {})",
+                    sg.wire_wqes,
+                    none.wire_wqes
+                );
+                assert!(
+                    full.wire_wqes <= sg.wire_wqes,
+                    "{kind} backups={b}: full must not exceed sg"
+                );
+                assert!(
+                    combine.wire_wqes < none.wire_wqes,
+                    "{kind} backups={b}: combining must drop wire WQEs"
+                );
+                assert!(
+                    combine.combined_writes > 0 && full.combined_writes > 0,
+                    "{kind} backups={b}: hot-header rewrites must combine"
+                );
+                assert!(
+                    combine.posted_wqes < none.posted_wqes,
+                    "{kind} backups={b}: combined lines must leave the wire"
+                );
+                assert_eq!(
+                    sg.posted_wqes, none.posted_wqes,
+                    "{kind} backups={b}: sg must drop nothing"
+                );
+                assert!(full.mean_span() > 1.0, "{kind} backups={b}");
+            }
+        }
+        println!(
+            "Figure 10 — append 2-8(+2 hot) coalescing, {kind} \
+             (wire WQEs vs none; combined/span/time under full)\n{}",
+            t.render()
+        );
+    }
+
+    // ---- Sharding interaction: modulo interleaving destroys in-shard
+    // contiguity (spans stay single-line), range striping preserves it.
+    {
+        let mut t = Table::new(&["map", "shards", "wire none", "wire full", "span(f)"]);
+        for (map, shards) in [
+            (ShardMapSpec::Modulo, 2usize),
+            (ShardMapSpec::Range { stripe_lines: 1 << 16 }, 2),
+        ] {
+            let sharding = ShardingConfig::new(shards, map);
+            let none = cell(&plat, StrategyKind::SmOb, 2, sharding, CoalesceMode::None, cfg);
+            let full = cell(&plat, StrategyKind::SmOb, 2, sharding, CoalesceMode::Full, cfg);
+            assert_eq!(full.txns, cfg.txns);
+            assert!(full.wire_wqes <= none.wire_wqes);
+            if matches!(map, ShardMapSpec::Range { .. }) {
+                // Contiguity survives range striping: spans must form.
+                assert!(
+                    full.wire_wqes < none.wire_wqes && full.mean_span() > 1.0,
+                    "range striping must preserve span formation"
+                );
+            }
+            t.row(vec![
+                format!("{map}"),
+                format!("{shards}"),
+                format!("{}", none.wire_wqes),
+                format!("{}", full.wire_wqes),
+                format!("{:.2}", full.mean_span()),
+            ]);
+        }
+        println!(
+            "sharding x coalescing at backups=2, SM-OB (full vs none)\n{}",
+            t.render()
+        );
+    }
+
+    // ---- Simulator throughput while coalescing (perf tracking): each
+    // timing cell carries its simulated run's wire counters so the
+    // JSON records the amortization directly.
+    let mut b = Bencher::new();
+    for &backups in &[2usize, 4] {
+        for &mode in &MODES {
+            let kind = StrategyKind::SmOb;
+            let lines = cfg.txns * cfg.epochs as u64 * (cfg.writes + cfg.rewrites) as u64;
+            let mut counters = (0u64, 0u64, 0u64, 0u64, 0u64);
+            b.bench_elems(
+                &format!("append/2-8+2/{kind}/backups-{backups}/{mode}"),
+                (lines * backups as u64) as f64,
+                || {
+                    let out = cell(&plat, kind, backups, unsharded, mode, cfg);
+                    counters = (
+                        out.doorbells,
+                        out.posted_wqes,
+                        out.wire_wqes,
+                        out.combined_writes,
+                        out.busy_ns,
+                    );
+                    out
+                },
+            );
+            b.annotate_last(&[
+                ("doorbells", counters.0),
+                ("posted_wqes", counters.1),
+                ("wire_wqes", counters.2),
+                ("combined_writes", counters.3),
+                ("busy_ns", counters.4),
+            ]);
+        }
+    }
+    pmsm::bench::emit_json(&b, "fig10_coalescing");
+}

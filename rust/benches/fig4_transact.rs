@@ -9,6 +9,8 @@ use pmsm::bench::Bencher;
 use pmsm::cli::fig4_sweep;
 use pmsm::config::{Platform, StrategyKind};
 use pmsm::metrics::report::fig4_table;
+use pmsm::runtime::fallback_predictor;
+use pmsm::workloads::transact::run_transact_adaptive;
 use pmsm::workloads::{run_transact, TransactConfig};
 
 fn main() {
@@ -42,6 +44,9 @@ fn main() {
     );
 
     // ---- Simulator throughput (perf tracking, EXPERIMENTS.md §Perf).
+    // Every strategy in StrategyKind::ALL gets a timing cell: the fixed
+    // TABLE four run as-is, and SM-AD — which the old 4-entry ALL
+    // silently skipped — runs with the closed-form fallback predictor.
     let mut b = Bencher::new();
     for (e, w) in [(4u32, 1u32), (64, 1), (16, 8)] {
         for kind in StrategyKind::ALL {
@@ -52,11 +57,13 @@ fn main() {
                 ..Default::default()
             };
             let writes = cfg.txns * e as u64 * w as u64;
-            b.bench_elems(
-                &format!("transact/{e}-{w}/{kind}"),
-                writes as f64,
-                || run_transact(&plat, kind, cfg).makespan,
-            );
+            b.bench_elems(&format!("transact/{e}-{w}/{kind}"), writes as f64, || {
+                if kind == StrategyKind::SmAd {
+                    run_transact_adaptive(&plat, fallback_predictor(&plat), cfg).makespan
+                } else {
+                    run_transact(&plat, kind, cfg).makespan
+                }
+            });
         }
     }
     pmsm::bench::emit_json(&b, "fig4_transact");

@@ -5,8 +5,10 @@
 //! staged WQE pipeline recovers from the `N * post_cost` per-line
 //! overhead (doorbells rung, mean batch size, busy time relative to
 //! eager). Emits `BENCH_fig9_batching.json` with `doorbells` /
-//! `posted_wqes` counters per cell; CI's bench-smoke job validates the
-//! artifact (including `doorbells <= posted_wqes`) with
+//! `posted_wqes` / `busy_ns` counters per cell — busy_ns is the primary
+//! CPU cost itself, so the perf trajectory captures the amortization,
+//! not just the ratios; CI's bench-smoke job validates the artifact
+//! (including `doorbells <= posted_wqes`) with
 //! `python/check_bench_json.py`.
 //!
 //! The bench also *asserts* the tentpole's acceptance shape: at
@@ -179,17 +181,23 @@ fn main() {
             let writes = cfg.txns * (cfg.epochs as u64) * (cfg.writes as u64);
             // The sim is deterministic: every timed iteration produces
             // the same counters, so capture them from the last one.
-            let mut counters = (0u64, 0u64);
+            // `busy_ns` rides along so the perf trajectory records the
+            // primary CPU cost batching recovers, not just counters.
+            let mut counters = (0u64, 0u64, 0u64);
             b.bench_elems(
                 &format!("transact/2-16/{kind}/backups-{backups}/{policy}"),
                 (writes * backups as u64) as f64,
                 || {
                     let out = cell(&plat, kind, backups, policy, cfg);
-                    counters = (out.doorbells, out.posted_wqes);
+                    counters = (out.doorbells, out.posted_wqes, out.busy_ns);
                     out
                 },
             );
-            b.annotate_last(&[("doorbells", counters.0), ("posted_wqes", counters.1)]);
+            b.annotate_last(&[
+                ("doorbells", counters.0),
+                ("posted_wqes", counters.1),
+                ("busy_ns", counters.2),
+            ]);
         }
     }
     pmsm::bench::emit_json(&b, "fig9_batching");

@@ -16,7 +16,9 @@ use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, Strategy
 use crate::coordinator::{Mirror, ShardingConfig};
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
 use crate::metrics::{GroupReport, ShardedReport};
-use crate::net::{BatchingConfig, FaultsConfig, FlushPolicy, OnLoss};
+use crate::net::{
+    BatchingConfig, CoalesceMode, CoalescingConfig, FaultsConfig, FlushPolicy, OnLoss,
+};
 use crate::recovery;
 use crate::replication::Predictor;
 use crate::runtime::{fallback_predictor, LatencyModel};
@@ -109,12 +111,14 @@ pub fn help_text() -> &'static str {
                  [--handoff-ns N --resync-line-ns N]\n\
                  [--shards S --shard-map modulo|range|range:LINES]\n\
                  [--flush-policy eager|cap:K|fence --batch-cap K]\n\
+                 [--coalesce none|combine|sg|full]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
        recover   failure injection + recovery check [--strategy S --txns N]\n\
                  [--backups N --ack-policy P --fault-plan SPEC --on-loss M]\n\
                  [--shards S --shard-map M --flush-policy P --batch-cap K]\n\
+                 [--coalesce M]\n\
                  (cross-replica ledger check; fault-aware when a plan is\n\
                  set; per-shard checks + cross-shard merge when sharded)\n\
        config    print platform model parameters (Table 2)\n\
@@ -138,6 +142,14 @@ pub fn help_text() -> &'static str {
      --batch-cap K is shorthand for cap:K; cap 1 == eager. Fences always\n\
      flush first, so batching never reorders across persistence points.\n\
      \n\
+     COALESCING: --coalesce runs a coalescing stage over each backup's\n\
+     chain at flush time (requires a staged flush policy). combine =\n\
+     same-line overwrites within one epoch collapse to the last writer;\n\
+     sg = address-contiguous same-verb WQEs merge into one multi-line\n\
+     span (one QP + NIC slot + wire_line_ns per extra line; every line\n\
+     still persists individually on the backup); full = both; none =\n\
+     the plain batching pipeline, event-for-event.\n\
+     \n\
      FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
      backup B at virtual time T (ns). Killed backups leave fan-out and\n\
      ack accounting; --on-loss halt stops at an unsatisfiable fence\n\
@@ -156,11 +168,12 @@ fn platform_from(args: &Args) -> Result<Platform> {
 }
 
 /// Platform + replica-group shape + failure dynamics + sharding +
-/// batching: `--config` supplies all five (via the `[replication]` /
-/// `[faults]` / `[sharding]` / `[batching]` sections); `--backups` /
-/// `--ack-policy` / `--fault-plan` / `--on-loss` / `--handoff-ns` /
-/// `--resync-line-ns` / `--shards` / `--shard-map` / `--flush-policy` /
-/// `--batch-cap` override.
+/// batching + coalescing: `--config` supplies all six (via the
+/// `[replication]` / `[faults]` / `[sharding]` / `[batching]` /
+/// `[coalescing]` sections); `--backups` / `--ack-policy` /
+/// `--fault-plan` / `--on-loss` / `--handoff-ns` / `--resync-line-ns` /
+/// `--shards` / `--shard-map` / `--flush-policy` / `--batch-cap` /
+/// `--coalesce` override.
 #[allow(clippy::type_complexity)]
 fn setup_from(
     args: &Args,
@@ -170,20 +183,30 @@ fn setup_from(
     FaultsConfig,
     ShardingConfig,
     BatchingConfig,
+    CoalescingConfig,
 )> {
-    let (plat, mut repl, mut faults, mut sharding, mut batching) = match args.get("config") {
-        Some(path) => {
-            let e = Experiment::from_file(path)?;
-            (e.platform, e.replication, e.faults, e.sharding, e.batching)
-        }
-        None => (
-            Platform::default(),
-            ReplicationConfig::default(),
-            FaultsConfig::default(),
-            ShardingConfig::default(),
-            BatchingConfig::default(),
-        ),
-    };
+    let (plat, mut repl, mut faults, mut sharding, mut batching, mut coalescing) =
+        match args.get("config") {
+            Some(path) => {
+                let e = Experiment::from_file(path)?;
+                (
+                    e.platform,
+                    e.replication,
+                    e.faults,
+                    e.sharding,
+                    e.batching,
+                    e.coalescing,
+                )
+            }
+            None => (
+                Platform::default(),
+                ReplicationConfig::default(),
+                FaultsConfig::default(),
+                ShardingConfig::default(),
+                BatchingConfig::default(),
+                CoalescingConfig::default(),
+            ),
+        };
     if let Some(b) = args.get("backups") {
         repl.backups = b.parse().with_context(|| format!("--backups {b}"))?;
     }
@@ -216,11 +239,15 @@ fn setup_from(
             .with_context(|| format!("--batch-cap {s} (must be a count >= 1)"))?;
         batching.policy = FlushPolicy::Cap(k);
     }
+    if let Some(s) = args.get("coalesce") {
+        coalescing.mode = s.parse::<CoalesceMode>().context("--coalesce")?;
+    }
     repl.validate()?;
     faults.validate(repl.backups)?;
     sharding.validate()?;
     batching.validate()?;
-    Ok((plat, repl, faults, sharding, batching))
+    coalescing.validate_with(batching.policy)?;
+    Ok((plat, repl, faults, sharding, batching, coalescing))
 }
 
 /// A predictor for `SmAd` (PJRT model if the artifacts load, else the
@@ -239,7 +266,7 @@ fn predictor_for(plat: &Platform, strategy: StrategyKind) -> Result<Option<Predi
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let (plat, repl, faults, sharding, batching) = setup_from(args)?;
+    let (plat, repl, faults, sharding, batching, coalescing) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
     let threads = args.get_usize("threads", 1)?;
@@ -264,6 +291,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             batching.policy, plat.doorbell_ns, plat.wqe_stage_ns
         );
     }
+    if coalescing.mode != CoalesceMode::None {
+        let what = match (coalescing.mode.combining(), coalescing.mode.sg()) {
+            (true, true) => "same-epoch write combining + scatter-gather spans",
+            (true, false) => "same-epoch write combining",
+            _ => "scatter-gather spans",
+        };
+        // wire_line_ns only matters when spans can form.
+        let span_cost = if coalescing.mode.sg() {
+            format!("; extra span lines at {} ns each on the wire", plat.wire_line_ns)
+        } else {
+            String::new()
+        };
+        println!("coalescing: {} ({what}{span_cost})", coalescing.mode);
+    }
     let mut mirror = Mirror::try_build_sharded(
         plat.clone(),
         strategy,
@@ -274,6 +315,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         false,
     )?;
     mirror.set_batching(batching.policy);
+    mirror.set_coalescing(coalescing.mode);
 
     let outcome = if workload == "transact" {
         let cfg = TransactConfig {
@@ -321,10 +363,16 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  throughput    : {:.0} txn/s", outcome.txn_per_sec());
     println!("  cpu busy      : {:.3} ms", outcome.busy_ns as f64 / 1e6);
     println!(
-        "  doorbells     : {} over {} WQEs (mean batch {:.2})",
+        "  doorbells     : {} over {} lines (mean batch {:.2})",
         outcome.doorbells,
         outcome.posted_wqes,
         outcome.mean_batch()
+    );
+    println!(
+        "  wire          : {} WQEs (mean span {:.2}), {} writes combined",
+        outcome.wire_wqes,
+        outcome.mean_span(),
+        outcome.combined_writes
     );
     if let Some(stall) = &outcome.stalled {
         println!("  STALL         : {stall}");
@@ -538,7 +586,7 @@ fn cmd_analytic(args: &Args) -> Result<()> {
 }
 
 fn cmd_recover(args: &Args) -> Result<()> {
-    let (plat, repl, faults, sharding, batching) = setup_from(args)?;
+    let (plat, repl, faults, sharding, batching, coalescing) = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
     use crate::coordinator::ThreadCtx;
@@ -549,6 +597,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
     let mut m =
         Mirror::try_build_sharded(plat, strategy, None, repl, faults, sharding, true)?;
     m.set_batching(batching.policy);
+    m.set_coalescing(coalescing.mode);
     let mut t = ThreadCtx::new(0);
     let log = crate::pstore::log_base_for(0);
     let d0 = 0x20_0000u64;
@@ -815,7 +864,7 @@ mod tests {
         .unwrap();
         let path = path.to_str().unwrap();
         let a = Args::parse(&argv(&["run", "--config", path, "--shards", "4"]));
-        let (_, _, _, sharding, _) = setup_from(&a).unwrap();
+        let (_, _, _, sharding, _, _) = setup_from(&a).unwrap();
         assert_eq!(sharding.shards, 4, "--shards overrides the TOML");
         assert_eq!(
             sharding.map,
@@ -824,11 +873,11 @@ mod tests {
         );
         // No override: the file's shape wins entirely.
         let a = Args::parse(&argv(&["run", "--config", path]));
-        let (_, _, _, sharding, _) = setup_from(&a).unwrap();
+        let (_, _, _, sharding, _, _) = setup_from(&a).unwrap();
         assert_eq!(sharding.shards, 2);
         // `--shard-map` overrides the file's map.
         let a = Args::parse(&argv(&["run", "--config", path, "--shard-map", "modulo"]));
-        let (_, _, _, sharding, _) = setup_from(&a).unwrap();
+        let (_, _, _, sharding, _, _) = setup_from(&a).unwrap();
         assert_eq!(sharding.map, ShardMapSpec::Modulo);
         std::fs::remove_file(path).ok();
     }
@@ -895,8 +944,63 @@ mod tests {
         // --batch-cap is the more specific knob: it wins over
         // --flush-policy, mirroring the TOML precedence.
         let a = Args::parse(&argv(&["run", "--flush-policy", "fence", "--batch-cap", "8"]));
-        let (_, _, _, _, batching) = setup_from(&a).unwrap();
+        let (_, _, _, _, batching, _) = setup_from(&a).unwrap();
         assert_eq!(batching.policy, FlushPolicy::Cap(8));
+    }
+
+    #[test]
+    fn run_command_coalescing_smoke() {
+        // Full coalescing over a staged pipeline completes for every
+        // strategy shape the coalescer touches.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "20", "--backups", "2",
+            "--flush-policy", "fence", "--coalesce", "full",
+        ]))
+        .unwrap();
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-dd", "--txns", "10", "--batch-cap", "4",
+            "--coalesce", "sg",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn cli_rejects_invalid_coalescing() {
+        // Unknown mode.
+        assert!(setup_from(&Args::parse(&argv(&[
+            "run", "--flush-policy", "fence", "--coalesce", "both"
+        ])))
+        .is_err());
+        // Coalescing without a staged flush policy (default = eager).
+        let err = setup_from(&Args::parse(&argv(&["run", "--coalesce", "sg"]))).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("requires a staged flush policy"),
+            "{err:#}"
+        );
+        // A valid pairing parses to the requested mode.
+        let a = Args::parse(&argv(&["run", "--flush-policy", "fence", "--coalesce", "combine"]));
+        let (_, _, _, _, _, coalescing) = setup_from(&a).unwrap();
+        assert_eq!(coalescing.mode, CoalesceMode::Combine);
+    }
+
+    #[test]
+    fn recover_command_coalesced_check() {
+        // The recovery invariants must hold under full coalescing too:
+        // combining keeps the last writer per epoch, sg only merges
+        // transport — the ledger recovery sees is equivalent.
+        for mode in ["combine", "sg", "full"] {
+            main_with_args(&argv(&[
+                "recover", "--strategy", "sm-ob", "--txns", "4", "--backups", "2",
+                "--flush-policy", "fence", "--coalesce", mode,
+            ]))
+            .unwrap_or_else(|e| panic!("{mode}: {e}"));
+        }
+        // Sharded + coalesced.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-dd", "--txns", "3", "--shards", "2",
+            "--shard-map", "range:1", "--flush-policy", "fence", "--coalesce", "full",
+        ]))
+        .unwrap();
     }
 
     #[test]

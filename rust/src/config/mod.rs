@@ -13,7 +13,7 @@ pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 
 use crate::coordinator::shard::ShardingConfig;
 use crate::net::faults::FaultsConfig;
-use crate::net::wqe::{BatchingConfig, FlushPolicy};
+use crate::net::wqe::{BatchingConfig, CoalescingConfig, FlushPolicy};
 use anyhow::{bail, Context, Result};
 
 /// Workload selection for the CLI / experiment driver.
@@ -45,6 +45,11 @@ pub struct Experiment {
     /// batch cap; defaults to eager posting — batching off, the
     /// pre-batching cost model).
     pub batching: BatchingConfig,
+    /// Flush-time chain coalescing (`[coalescing]` section: write
+    /// combining / scatter-gather mode; defaults to `none` — the
+    /// doorbell-batching pipeline untouched. Any other mode requires a
+    /// staged flush policy in `[batching]`).
+    pub coalescing: CoalescingConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -65,6 +70,7 @@ impl Default for Experiment {
             faults: FaultsConfig::default(),
             sharding: ShardingConfig::default(),
             batching: BatchingConfig::default(),
+            coalescing: CoalescingConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -158,6 +164,12 @@ impl Experiment {
         exp.batching
             .validate()
             .context("invalid [batching] section")?;
+        if let Some(v) = doc.get("coalescing.mode") {
+            exp.coalescing.mode = v.as_str()?.parse().context("coalescing.mode")?;
+        }
+        exp.coalescing
+            .validate_with(exp.batching.policy)
+            .context("invalid [coalescing] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -425,6 +437,47 @@ map = "range:2048"
         assert_eq!(exp.batching, BatchingConfig::default());
         assert_eq!(exp.batching.policy, FlushPolicy::Eager);
         assert!(exp.batching.policy.is_eager());
+    }
+
+    #[test]
+    fn coalescing_section_roundtrip() {
+        use crate::net::wqe::CoalesceMode;
+        let text = "[batching]\nflush_policy = \"fence\"\n[coalescing]\nmode = \"full\"";
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.coalescing.mode, CoalesceMode::Full);
+        for mode in ["none", "combine", "sg", "full"] {
+            let text = format!(
+                "[batching]\nbatch_cap = 8\n[coalescing]\nmode = \"{mode}\""
+            );
+            let exp = Experiment::from_str(&text).unwrap();
+            assert_eq!(exp.coalescing.mode.to_string(), mode);
+        }
+        // Default: coalescing off.
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.coalescing.mode, CoalesceMode::None);
+    }
+
+    #[test]
+    fn coalescing_section_rejects_bad_shapes() {
+        // Unknown mode.
+        assert!(Experiment::from_str(
+            "[batching]\nflush_policy = \"fence\"\n[coalescing]\nmode = \"both\""
+        )
+        .is_err());
+        // Coalescing without a staged flush policy is a config error
+        // (eager posting stages nothing to coalesce) — including the
+        // cap:1 == eager normalization.
+        let err = Experiment::from_str("[coalescing]\nmode = \"sg\"").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("requires a staged flush policy"),
+            "{err:#}"
+        );
+        assert!(Experiment::from_str(
+            "[batching]\nbatch_cap = 1\n[coalescing]\nmode = \"combine\""
+        )
+        .is_err());
+        // mode = none composes with anything.
+        assert!(Experiment::from_str("[coalescing]\nmode = \"none\"").is_ok());
     }
 
     #[test]

@@ -24,8 +24,17 @@ pub enum StrategyKind {
 }
 
 impl StrategyKind {
-    pub const ALL: [StrategyKind; 4] =
+    /// The paper's Table-1 strategies: the fixed four that run without a
+    /// predictor (NO-SM baseline + the three SM designs). Sweeps that
+    /// build strategies with `make_strategy(kind, None)` iterate this.
+    pub const TABLE: [StrategyKind; 4] =
         [Self::NoSm, Self::SmRc, Self::SmOb, Self::SmDd];
+    /// Every strategy, *including* the adaptive `SmAd` (which needs a
+    /// predictor — see `runtime::fallback_predictor`). Sweeps iterating
+    /// this must supply one, or they silently skip adaptive runs — the
+    /// bug the old 4-entry `ALL` had.
+    pub const ALL: [StrategyKind; 5] =
+        [Self::NoSm, Self::SmRc, Self::SmOb, Self::SmDd, Self::SmAd];
     pub const SM: [StrategyKind; 3] = [Self::SmRc, Self::SmOb, Self::SmDd];
 
     pub fn name(self) -> &'static str {
@@ -193,6 +202,18 @@ pub struct Platform {
     /// CPU cost to build and stage one WQE in host memory (ns) — paid
     /// per WQE regardless of batching.
     pub wqe_stage_ns: Ns,
+    /// Wire/issue serialization of each *additional* line carried by a
+    /// scatter-gather span WQE (ns) — see [`crate::net::wqe`]. The
+    /// legacy default equals `gap` (each extra line costs a full
+    /// per-WQE issue slot, the pre-coalescing per-line wire cost), so
+    /// enabling `--coalesce sg` on an untouched config saves NIC
+    /// message slots and doorbells without silently changing the wire
+    /// bandwidth model; set it lower (a 64 B line is ~13 ns at 40 Gb/s)
+    /// to model real SG DMA amortization. Note the gap-tracking default
+    /// is enforced by the TOML loader ([`Platform::from_doc`]); code
+    /// that overrides `gap` programmatically via struct-update keeps
+    /// the stock 150 ns here unless it sets this field too.
+    pub wire_line_ns: Ns,
     /// CPU cost of one CQ poll iteration (ns).
     pub poll_cost: Ns,
 
@@ -250,6 +271,7 @@ impl Default for Platform {
             qp_depth: 64,
             doorbell_ns: 20,
             wqe_stage_ns: 10,
+            wire_line_ns: 150, // legacy default: the full per-line cost (= gap)
             poll_cost: 20,
             pcie_rt: 200,
             pcie_occ: 25,
@@ -304,6 +326,7 @@ impl Platform {
         p[12] = self.qp_depth as f32;
         p[13] = self.nt_serial as f32;
         p[14] = self.ddio_lines() as f32;
+        p[15] = self.wire_line_ns as f32;
         p
     }
 
@@ -326,6 +349,11 @@ impl Platform {
         }
         ns_field!("rtt", rtt);
         ns_field!("gap", gap);
+        // Legacy default: a config that never heard of scatter-gather
+        // keeps the full per-line wire cost — `wire_line_ns` tracks the
+        // (possibly overridden) gap unless set explicitly below.
+        p.wire_line_ns = p.gap;
+        ns_field!("wire_line_ns", wire_line_ns);
         ns_field!("pcie_rt", pcie_rt);
         ns_field!("pcie_occ", pcie_occ);
         ns_field!("nt_serial", nt_serial);
@@ -389,7 +417,8 @@ impl Platform {
     pub fn table2(&self) -> String {
         format!(
             "Platform (paper Table 2 analogue)\n\
-               network   : RDMA rtt={}ns gap={}ns nqp={} qp_depth={}\n\
+               network   : RDMA rtt={}ns gap={}ns nqp={} qp_depth={} \
+             wire_line={}ns\n\
                pcie/ddio : pcie_rt={}ns nt_serial={}ns ddio_ways={}/{}\n\
                llc       : {} slices x {} sets x {} ways (64B lines)\n\
                memctrl   : queue={} banks={} llc->mc={}ns mc->pm={}ns\n\
@@ -399,6 +428,7 @@ impl Platform {
             self.gap,
             self.nqp,
             self.qp_depth,
+            self.wire_line_ns,
             self.pcie_rt,
             self.nt_serial,
             self.ddio_ways,
@@ -443,6 +473,7 @@ mod tests {
         assert_eq!(p[12], 64.0); // qp_depth
         assert_eq!(p[13], 210.0); // nt_serial
         assert_eq!(p[14], 32768.0); // ddio lines = 8*2048*2
+        assert_eq!(p[15], 150.0); // wire_line_ns (= gap, legacy per-line)
     }
 
     #[test]
@@ -450,6 +481,38 @@ mod tests {
         assert_eq!("sm-ob".parse::<StrategyKind>().unwrap(), StrategyKind::SmOb);
         assert_eq!("RC".parse::<StrategyKind>().unwrap(), StrategyKind::SmRc);
         assert!("bogus".parse::<StrategyKind>().is_err());
+    }
+
+    #[test]
+    fn strategy_sets_cover_adaptive() {
+        // TABLE is the predictor-free fixed four; ALL adds SM-AD — the
+        // old 4-entry ALL silently skipped adaptive runs in sweeps.
+        assert_eq!(StrategyKind::TABLE.len(), 4);
+        assert!(!StrategyKind::TABLE.contains(&StrategyKind::SmAd));
+        assert_eq!(StrategyKind::ALL.len(), 5);
+        assert!(StrategyKind::ALL.contains(&StrategyKind::SmAd));
+        for k in StrategyKind::TABLE {
+            assert!(StrategyKind::ALL.contains(&k));
+        }
+        for k in StrategyKind::SM {
+            assert!(StrategyKind::TABLE.contains(&k));
+        }
+    }
+
+    #[test]
+    fn wire_line_defaults_follow_gap() {
+        use crate::config::toml;
+        // No keys: the legacy default is the full per-line cost (gap).
+        let p = Platform::default();
+        assert_eq!(p.wire_line_ns, p.gap);
+        // An overridden gap drags the default along...
+        let doc = toml::parse("[platform]\ngap = 200").unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!((p.gap, p.wire_line_ns), (200, 200));
+        // ...until wire_line_ns is set explicitly.
+        let doc = toml::parse("[platform]\ngap = 200\nwire_line_ns = 16").unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!((p.gap, p.wire_line_ns), (200, 16));
     }
 
     #[test]
@@ -482,6 +545,7 @@ mod tests {
         let t = Platform::default().table2();
         assert!(t.contains("doorbell=20ns"), "{t}");
         assert!(t.contains("wqe_stage=10ns"), "{t}");
+        assert!(t.contains("wire_line=150ns"), "{t}");
         assert!(t.contains("store=10ns"), "{t}");
     }
 

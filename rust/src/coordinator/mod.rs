@@ -37,8 +37,10 @@ pub use shard::{ShardMap, ShardMapSpec, ShardingConfig};
 
 use crate::config::{Platform, ReplicationConfig, StrategyKind};
 use crate::mem::DurabilityLog;
+use crate::metrics::LogHistogram;
 use crate::net::{
-    Fabric, FaultKind, FaultTimeline, FaultsConfig, FlushPolicy, RemoteEngine, Stall, WriteMeta,
+    CoalesceMode, Fabric, FaultKind, FaultTimeline, FaultsConfig, FlushPolicy, RemoteEngine,
+    Stall, WriteMeta,
 };
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
@@ -342,15 +344,53 @@ impl Mirror {
         self.lanes[0].fabric.batching()
     }
 
+    /// Set the flush-time coalescing mode (write combining /
+    /// scatter-gather — see [`crate::net::wqe`]) on every shard's
+    /// fabric. Call before any traffic; pair with a staged flush
+    /// policy ([`Mirror::set_batching`]) — the config layer rejects
+    /// coalescing under eager posting.
+    pub fn set_coalescing(&mut self, mode: CoalesceMode) {
+        for lane in &mut self.lanes {
+            lane.fabric.set_coalescing(mode);
+        }
+    }
+
+    /// The coalescing mode flushed chains run through.
+    pub fn coalescing(&self) -> CoalesceMode {
+        self.lanes[0].fabric.coalescing()
+    }
+
     /// Data-path doorbells rung across all shards and backups.
     pub fn doorbells(&self) -> u64 {
         self.lanes.iter().map(|l| l.fabric.doorbells_total()).sum()
     }
 
-    /// Data WQEs posted across all shards and backups (the doorbell
+    /// Data *lines* posted across all shards and backups (the doorbell
     /// amortization denominator: `doorbells() <= posted_wqes()`).
     pub fn posted_wqes(&self) -> u64 {
         self.lanes.iter().map(|l| l.fabric.posted_writes()).sum()
+    }
+
+    /// Data WQEs launched on the wire across all shards and backups (a
+    /// coalesced span counts once): `doorbells() <= wire_wqes() <=
+    /// posted_wqes()`.
+    pub fn wire_wqes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.wire_wqes_total()).sum()
+    }
+
+    /// Line writes elided by write combining across all shards and
+    /// backups.
+    pub fn combined_writes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.combined_writes).sum()
+    }
+
+    /// Lines-per-WQE distribution merged across every shard and backup.
+    pub fn span_hist(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for lane in &self.lanes {
+            h.merge(&lane.fabric.span_hist());
+        }
+        h
     }
 
     /// Shard 0's fabric — *the* fabric when sharding is off (the common
@@ -969,6 +1009,60 @@ mod tests {
             four < one * 2,
             "4-shard fence should overlap: 1 shard {one}, 4 shards {four}"
         );
+    }
+
+    #[test]
+    fn coalescing_applies_per_owning_shard() {
+        use crate::net::CoalesceMode;
+        // 64-line stripes put the hot header (line 1) on shard 0 and
+        // the append run (lines 64..68) on shard 1: combining must fire
+        // on shard 0's fabric, scatter-gather on shard 1's — per-shard
+        // application, not just shard 0 (contiguity survives because
+        // the whole run sits inside one stripe).
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::default(),
+            ShardingConfig::new(2, ShardMapSpec::Range { stripe_lines: 64 }),
+            true,
+        )
+        .unwrap();
+        m.set_batching(FlushPolicy::Fence);
+        m.set_coalescing(CoalesceMode::Full);
+        assert_eq!(m.coalescing(), CoalesceMode::Full);
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        let hot = 0x40u64;
+        // Hot header rewrites first, then a contiguous append run (the
+        // surviving hot write stays at its own chain position, so
+        // interleaving them would split the span).
+        for i in 0..4u64 {
+            m.store(&mut t, hot, i);
+            m.clwb(&mut t, hot);
+        }
+        for i in 0..4u64 {
+            let addr = 0x1000 + i * 64;
+            m.store(&mut t, addr, i);
+            m.clwb(&mut t, addr);
+        }
+        m.sfence(&mut t);
+        m.txn_commit(&mut t);
+        assert_eq!(t.txns_done, 1);
+        assert!(m.combined_writes() > 0, "hot header rewrites must combine");
+        assert!(m.wire_wqes() < m.posted_wqes(), "append run must merge");
+        assert!(m.doorbells() <= m.wire_wqes());
+        assert!(m.span_hist().max() >= 4, "4-line append span expected");
+        // Per-shard placement: combining fired on the hot line's shard,
+        // span formation on the append run's shard — not all on shard 0.
+        assert_eq!(m.shard_fabric(0).combined_writes, 6, "3 dropped x 2 backups");
+        assert_eq!(m.shard_fabric(0).span_hist().max(), 1, "shard 0 has no runs");
+        assert_eq!(m.shard_fabric(1).combined_writes, 0, "no rewrites on shard 1");
+        assert_eq!(m.shard_fabric(1).span_hist().max(), 4, "append span on shard 1");
+        // The hot line's final value survives on its shard's ledger.
+        let img = m.backup(0).ledger.image_at(u64::MAX);
+        assert_eq!(img.get(&hot), Some(&3));
     }
 
     #[test]

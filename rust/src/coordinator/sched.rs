@@ -9,6 +9,7 @@
 //! ordering error is bounded by one transaction's span.
 
 use super::{Mirror, ThreadCtx};
+use crate::metrics::LogHistogram;
 use crate::net::Stall;
 use crate::Ns;
 
@@ -70,9 +71,21 @@ pub struct RunOutcome {
     /// Data-path doorbells rung across all shards and backups (steady
     /// state — load-phase traffic excluded, like `busy_ns`).
     pub doorbells: u64,
-    /// Data WQEs posted across all shards and backups, steady state
+    /// Data lines posted across all shards and backups, steady state
     /// (`doorbells <= posted_wqes`; equal under eager posting).
     pub posted_wqes: u64,
+    /// Data WQEs launched on the wire, steady state — a coalesced
+    /// scatter-gather span counts once, so `wire_wqes <= posted_wqes`
+    /// (equal without coalescing); the figure `fig10_coalescing`
+    /// watches.
+    pub wire_wqes: u64,
+    /// Line writes elided by flush-time write combining, steady state.
+    pub combined_writes: u64,
+    /// Lines-per-WQE distribution of the whole run (including any
+    /// warmup/load phase — unlike the counters above, a histogram
+    /// cannot be watermarked; Transact-style workloads have no load
+    /// traffic, so the two views coincide there).
+    pub span_hist: LogHistogram,
     /// Per-thread completion times.
     pub per_thread: Vec<Ns>,
     /// Shards the mirror routed over (1 = sharding off). The
@@ -125,6 +138,12 @@ impl RunOutcome {
         crate::net::wqe::mean_batch(self.posted_wqes, self.doorbells)
     }
 
+    /// Mean lines per wire WQE (the scatter-gather amortization factor
+    /// — see [`crate::net::wqe::mean_span`]; 1.0 without coalescing).
+    pub fn mean_span(&self) -> f64 {
+        crate::net::wqe::mean_span(self.posted_wqes, self.wire_wqes)
+    }
+
     /// Replica lag: spread between the slowest and fastest backup's
     /// persist horizon across all shards (0 for a single backup or
     /// NO-SM).
@@ -169,6 +188,8 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     // (load-phase fan-out traffic is excluded).
     let doorbells_zero = mirror.doorbells();
     let posted_wqes_zero = mirror.posted_wqes();
+    let wire_wqes_zero = mirror.wire_wqes();
+    let combined_zero = mirror.combined_writes();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
     // the run at the kill point: remaining transactions are abandoned,
@@ -204,6 +225,9 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     out.shards = mirror.shard_count();
     out.doorbells = mirror.doorbells() - doorbells_zero;
     out.posted_wqes = mirror.posted_wqes() - posted_wqes_zero;
+    out.wire_wqes = mirror.wire_wqes() - wire_wqes_zero;
+    out.combined_writes = mirror.combined_writes() - combined_zero;
+    out.span_hist = mirror.span_hist();
     out.per_backup_horizon = mirror.persist_horizons();
     out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);
     out.per_backup_resync_lines = mirror.resync_lines();
@@ -390,6 +414,46 @@ mod tests {
             eager.busy_ns
         );
         assert_eq!(fenced.txns, eager.txns);
+    }
+
+    #[test]
+    fn outcome_tracks_coalescing_counters() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::net::{CoalesceMode, FlushPolicy};
+        use crate::workloads::transact::{run_append_on, AppendConfig};
+        // The shared contiguous-append workload (fig10's) gives
+        // scatter-gather runs to merge — the random transact_source
+        // rarely produces adjacency.
+        let cfg = AppendConfig {
+            epochs: 1,
+            writes: 8,
+            rewrites: 0,
+            txns: 10,
+            threads: 1,
+        };
+        let run = |mode: CoalesceMode| {
+            let mut m = Mirror::with_replication(
+                Platform::default(),
+                StrategyKind::SmOb,
+                ReplicationConfig::new(2, AckPolicy::All),
+                false,
+            )
+            .unwrap();
+            m.set_batching(FlushPolicy::Fence);
+            m.set_coalescing(mode);
+            run_append_on(&mut m, cfg)
+        };
+        let none = run(CoalesceMode::None);
+        let sg = run(CoalesceMode::Sg);
+        assert_eq!(none.wire_wqes, none.posted_wqes, "no coalescing: 1 line/WQE");
+        assert!((none.mean_span() - 1.0).abs() < 1e-9);
+        assert_eq!(none.combined_writes, 0);
+        assert_eq!(sg.posted_wqes, none.posted_wqes, "sg drops nothing");
+        assert!(sg.wire_wqes < none.wire_wqes, "appends must merge into spans");
+        assert!(sg.mean_span() > 1.0);
+        assert!(sg.doorbells <= sg.wire_wqes);
+        assert!(sg.span_hist.max() >= 8, "8-line epoch spans expected");
+        assert_eq!(sg.txns, none.txns);
     }
 
     #[test]

@@ -46,6 +46,16 @@
 //!   ([`net::wqe`], `[batching]` config keys, `--batch-cap` /
 //!   `--flush-policy` CLI, doorbell/mean-batch metrics, the
 //!   `fig9_batching` bench);
+//! * **flush-time coalescing** on the staged pipeline: write combining
+//!   collapses same-line overwrites within an epoch to the last writer
+//!   and scatter-gather merging fuses address-contiguous WQEs into
+//!   multi-line spans that pay one QP/NIC slot plus `wire_line_ns` per
+//!   extra line — amortizing the wire itself, on top of batching's CPU
+//!   amortization — while every line still persists individually on
+//!   the backups, so ledgers and recovery verdicts are unchanged
+//!   (`--coalesce none|combine|sg|full`, `[coalescing]` config key,
+//!   wire-WQE/combined/span metrics, the `fig10_coalescing` bench;
+//!   `none` reproduces the batching pipeline event-for-event);
 //! * the mirroring coordinator that binds a primary node's persistency
 //!   traffic to the replica groups over the simulated fabric
 //!   ([`coordinator`]);

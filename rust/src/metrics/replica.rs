@@ -7,6 +7,7 @@
 //! space shard with group totals and a machine-readable JSON dump.
 
 use crate::coordinator::Mirror;
+use crate::metrics::LogHistogram;
 use crate::net::{BackupStats, Fabric, Stall};
 use crate::util::json;
 use crate::{Ns, LINE};
@@ -26,14 +27,21 @@ pub struct GroupReport {
     /// Rendered staged-pipeline flush policy (`eager` / `cap:K` /
     /// `fence`).
     pub flush_policy: String,
+    /// Rendered flush-time coalescing mode (`none` / `combine` / `sg` /
+    /// `full`).
+    pub coalesce: String,
     pub stats: Vec<BackupStats>,
     /// Blocking fences executed (group level).
     pub blocking_waits: u64,
     /// Total ns the workload threads spent blocked on group fences.
     pub blocked_ns: Ns,
-    /// Data WQEs posted across the group (doorbell amortization
+    /// Data lines posted across the group (doorbell amortization
     /// denominator).
     pub posted_wqes: u64,
+    /// Line writes elided by write combining across the group.
+    pub combined_writes: u64,
+    /// Lines-per-WQE distribution across the group's wire WQEs.
+    pub span_hist: LogHistogram,
     /// The unsatisfiable fence that stopped the run, if any.
     pub stalled: Option<Stall>,
 }
@@ -46,10 +54,13 @@ impl GroupReport {
             required: fabric.required(),
             on_loss: fabric.on_loss().to_string(),
             flush_policy: fabric.batching().to_string(),
+            coalesce: fabric.coalescing().to_string(),
             stats: fabric.backup_stats(),
             blocking_waits: fabric.blocking_waits,
             blocked_ns: fabric.blocked_ns,
             posted_wqes: fabric.posted_writes(),
+            combined_writes: fabric.combined_writes,
+            span_hist: fabric.span_hist(),
             stalled: fabric.stall().copied(),
         }
     }
@@ -59,9 +70,20 @@ impl GroupReport {
         self.stats.iter().map(|s| s.doorbells).sum()
     }
 
+    /// Data WQEs launched on the wire across the group (spans count
+    /// once).
+    pub fn wire_wqes(&self) -> u64 {
+        self.stats.iter().map(|s| s.wire_wqes).sum()
+    }
+
     /// Mean data WQEs per doorbell (see [`crate::net::wqe::mean_batch`]).
     pub fn mean_batch(&self) -> f64 {
         crate::net::wqe::mean_batch(self.posted_wqes, self.doorbells())
+    }
+
+    /// Mean lines per wire WQE (see [`crate::net::wqe::mean_span`]).
+    pub fn mean_span(&self) -> f64 {
+        crate::net::wqe::mean_span(self.posted_wqes, self.wire_wqes())
     }
 
     /// Number of backups in the group.
@@ -111,6 +133,7 @@ impl GroupReport {
             "persists",
             "barriers",
             "doorbells",
+            "wire",
             "pending",
             "horizon(ns)",
             "fence(ns)",
@@ -127,6 +150,7 @@ impl GroupReport {
                 format!("{}", s.persists),
                 format!("{}", s.barriers),
                 format!("{}", s.doorbells),
+                format!("{}", s.wire_wqes),
                 format!("{}", s.pending_lines),
                 format!("{}", s.persist_horizon),
                 format!("{}", s.last_fence),
@@ -138,15 +162,18 @@ impl GroupReport {
         }
         let mut out = format!(
             "Replica group — {} backups, ack policy {} (required {}, \
-             on_loss {}, flush {})\n{}\
+             on_loss {}, flush {}, coalesce {})\n{}\
              group: {} blocking fences, {:.0} ns mean block, \
              horizon lag {} ns, fence lag {} ns, dead {} ns, resync {} B, \
-             {} doorbells, mean batch {:.2}\n",
+             {} doorbells, mean batch {:.2}\n\
+             wire: {} WQEs over {} lines (mean span {:.2}, p99 {}, max {}), \
+             {} combined\n",
             self.backups(),
             self.policy,
             self.required,
             self.on_loss,
             self.flush_policy,
+            self.coalesce,
             t.render(),
             self.blocking_waits,
             self.mean_block_ns(),
@@ -156,6 +183,12 @@ impl GroupReport {
             self.resync_bytes(),
             self.doorbells(),
             self.mean_batch(),
+            self.wire_wqes(),
+            self.posted_wqes,
+            self.mean_span(),
+            self.span_hist.percentile(99.0),
+            self.span_hist.max(),
+            self.combined_writes,
         );
         if let Some(stall) = &self.stalled {
             out.push_str(&format!("group: STALLED — {stall}\n"));
@@ -179,6 +212,7 @@ impl GroupReport {
                     ("dead_ns", s.dead_ns.to_string()),
                     ("resync_lines", s.resync_lines.to_string()),
                     ("doorbells", s.doorbells.to_string()),
+                    ("wire_wqes", s.wire_wqes.to_string()),
                 ])
             })
             .collect();
@@ -187,11 +221,17 @@ impl GroupReport {
             ("required", self.required.to_string()),
             ("on_loss", json::esc(&self.on_loss)),
             ("flush_policy", json::esc(&self.flush_policy)),
+            ("coalesce", json::esc(&self.coalesce)),
             ("blocking_waits", self.blocking_waits.to_string()),
             ("blocked_ns", self.blocked_ns.to_string()),
             ("doorbells", self.doorbells().to_string()),
             ("posted_wqes", self.posted_wqes.to_string()),
+            ("wire_wqes", self.wire_wqes().to_string()),
+            ("combined_writes", self.combined_writes.to_string()),
             ("mean_batch", json::num(self.mean_batch())),
+            ("mean_span", json::num(self.mean_span())),
+            ("span_p99", self.span_hist.percentile(99.0).to_string()),
+            ("span_max", self.span_hist.max().to_string()),
             ("stalled", self.stalled.is_some().to_string()),
             ("backups", json::arr(&backups)),
         ])
@@ -241,6 +281,22 @@ impl ShardedReport {
         crate::net::wqe::mean_batch(wqes, self.total_doorbells())
     }
 
+    /// Total wire WQEs launched across all shards and backups.
+    pub fn total_wire_wqes(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.wire_wqes()).sum()
+    }
+
+    /// Total combined (elided) line writes across all shards.
+    pub fn total_combined_writes(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.combined_writes).sum()
+    }
+
+    /// Mean lines per wire WQE across the whole deployment.
+    pub fn mean_span(&self) -> f64 {
+        let lines: u64 = self.per_shard.iter().map(|r| r.posted_wqes).sum();
+        crate::net::wqe::mean_span(lines, self.total_wire_wqes())
+    }
+
     /// Shard-imbalance factor: max over mean of per-shard write counts
     /// (1.0 = perfectly balanced; meaningful only for `shards > 1`).
     pub fn write_skew(&self) -> f64 {
@@ -267,13 +323,17 @@ impl ShardedReport {
         }
         out.push_str(&format!(
             "shards: {} over map {}, {} total writes, write skew {:.2}x, \
-             {} doorbells (mean batch {:.2})\n",
+             {} doorbells (mean batch {:.2}), {} wire WQEs \
+             (mean span {:.2}), {} combined\n",
             self.shards(),
             self.map,
             self.total_writes(),
             self.write_skew(),
             self.total_doorbells(),
             self.mean_batch(),
+            self.total_wire_wqes(),
+            self.mean_span(),
+            self.total_combined_writes(),
         ));
         out
     }
@@ -327,11 +387,17 @@ mod tests {
         assert_eq!(r.resync_bytes(), 0);
         assert_eq!(r.total_dead_ns(), 0);
         assert!(r.stalled.is_none());
-        // Eager posting: one doorbell per WQE, batch factor exactly 1.
+        // Eager posting: one doorbell per WQE, batch factor exactly 1,
+        // every wire WQE single-line, nothing coalesced.
         assert_eq!(r.flush_policy, "eager");
+        assert_eq!(r.coalesce, "none");
         assert_eq!(r.doorbells(), 9, "3 writes x 3 backups");
         assert_eq!(r.posted_wqes, 9);
+        assert_eq!(r.wire_wqes(), 9);
+        assert_eq!(r.combined_writes, 0);
         assert!((r.mean_batch() - 1.0).abs() < 1e-9);
+        assert!((r.mean_span() - 1.0).abs() < 1e-9);
+        assert_eq!(r.span_hist.max(), 1);
         let text = r.render();
         assert!(text.contains("3 backups"));
         assert!(text.contains("quorum:2"));
@@ -392,9 +458,17 @@ mod tests {
         assert!(j.matches("\"policy\":\"all\"").count() == 2, "{j}");
         assert!(j.contains("\"doorbells\":"), "{j}");
         assert!(j.contains("\"mean_batch\":"), "{j}");
+        assert!(j.contains("\"wire_wqes\":"), "{j}");
+        assert!(j.contains("\"combined_writes\":"), "{j}");
+        assert!(j.contains("\"mean_span\":"), "{j}");
+        assert!(j.contains("\"span_max\":"), "{j}");
         assert!(j.matches("\"flush_policy\":\"eager\"").count() == 2, "{j}");
+        assert!(j.matches("\"coalesce\":\"none\"").count() == 2, "{j}");
         assert_eq!(r.total_doorbells(), 8, "eager: one doorbell per WQE");
         assert!((r.mean_batch() - 1.0).abs() < 1e-9);
+        assert_eq!(r.total_wire_wqes(), 8);
+        assert_eq!(r.total_combined_writes(), 0);
+        assert!((r.mean_span() - 1.0).abs() < 1e-9);
         let text = r.render();
         assert!(text.contains("mean batch"), "{text}");
     }
@@ -428,6 +502,61 @@ mod tests {
         assert!(r.doorbells() <= r.posted_wqes);
         let text = r.render();
         assert!(text.contains("flush fence"), "{text}");
+    }
+
+    #[test]
+    fn report_shows_span_amortization_under_coalescing() {
+        use crate::net::{CoalesceMode, FlushPolicy};
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let mut f = Fabric::new(&p, &repl, true)
+            .with_batching(FlushPolicy::Fence)
+            .with_coalescing(CoalesceMode::Full);
+        let mut t = ThreadClock::new(0);
+        // One hot rewrite + a 4-line contiguous run.
+        for s in 0..2u64 {
+            f.post_write_wt(
+                &mut t,
+                WriteMeta {
+                    addr: 0x40,
+                    val: s,
+                    thread: 0,
+                    txn: 0,
+                    epoch: 0,
+                    seq: s,
+                },
+            );
+        }
+        for s in 0..4u64 {
+            f.post_write_wt(
+                &mut t,
+                WriteMeta {
+                    addr: 0x1000 + 0x40 * s,
+                    val: s,
+                    thread: 0,
+                    txn: 0,
+                    epoch: 0,
+                    seq: 2 + s,
+                },
+            );
+        }
+        f.rdfence(&mut t);
+        let r = GroupReport::from_fabric(&f);
+        assert_eq!(r.coalesce, "full");
+        assert_eq!(r.combined_writes, 2, "1 dead hot write x 2 backups");
+        assert_eq!(r.posted_wqes, 10, "5 surviving lines x 2 backups");
+        assert_eq!(r.wire_wqes(), 4, "(hot + 4-line span) x 2 backups");
+        assert!((r.mean_span() - 2.5).abs() < 1e-9, "{}", r.mean_span());
+        assert_eq!(r.span_hist.max(), 4);
+        assert!(r.wire_wqes() <= r.posted_wqes);
+        assert!(r.doorbells() <= r.wire_wqes());
+        let text = r.render();
+        assert!(text.contains("coalesce full"), "{text}");
+        assert!(text.contains("combined"), "{text}");
+        let j = r.to_json();
+        assert!(j.contains("\"coalesce\":\"full\""), "{j}");
+        assert!(j.contains("\"combined_writes\":2"), "{j}");
+        assert!(j.contains("\"wire_wqes\":4"), "{j}");
     }
 
     #[test]

@@ -41,6 +41,20 @@
 //! a backup killed between stage and doorbell has its staged WQEs
 //! dropped (they never reached the wire — no ghost ledger entries).
 //!
+//! **Flush-time coalescing** (see [`super::wqe::CoalesceMode`]): each
+//! backup's chain runs through [`super::wqe::coalesce_chain`] right
+//! before its doorbell rings — write combining drops same-line
+//! overwrites within an epoch (last writer survives) and scatter-gather
+//! merging fuses address-contiguous runs into multi-line span WQEs.
+//! Fault-drop semantics are per *chain*, and therefore per span: a
+//! backup killed between stage and doorbell loses its whole chain
+//! before coalescing even runs, and once a chain's doorbell rang its
+//! spans are on the wire whole — a span never partially applies across
+//! a kill. [`CoalesceMode::None`] leaves every chain untouched — the
+//! event-for-event anchor against the plain batching pipeline.
+//!
+//! [`CoalesceMode::None`]: super::wqe::CoalesceMode::None
+//!
 //! With `backups = 1`, `ack_policy = "all"` and an **empty fault plan**
 //! the fabric is event-for-event identical to driving the single [`Rdma`]
 //! stack directly (the pre-replica-group behaviour); the unit tests below
@@ -52,9 +66,10 @@ use super::faults::{
 use super::rdma::Rdma;
 use super::remote::RemoteEngine;
 use super::verbs::{Verb, WriteMeta};
-use super::wqe::{FlushPolicy, SubmitQueue, Wqe};
+use super::wqe::{coalesce_chain, CoalesceMode, FlushPolicy, SubmitQueue, Wqe};
 use crate::config::{AckPolicy, Platform, ReplicationConfig};
 use crate::mem::{DurEvent, DurabilityLog};
+use crate::metrics::LogHistogram;
 use crate::sim::ThreadClock;
 use crate::Ns;
 use std::collections::HashSet;
@@ -92,6 +107,9 @@ pub struct BackupStats {
     /// Data-path doorbells rung toward this backup (one per WQE when
     /// eager; one per flushed chain when batching).
     pub doorbells: u64,
+    /// Data WQEs launched on the wire toward this backup (a coalesced
+    /// multi-line span counts once; `doorbells <= wire_wqes <= writes`).
+    pub wire_wqes: u64,
 }
 
 /// N-way mirroring fabric (see module docs).
@@ -130,6 +148,13 @@ pub struct Fabric {
     // ---- staged WQE pipeline (see `super::wqe`)
     /// When staged doorbells ring (`Eager` bypasses staging entirely).
     batching: FlushPolicy,
+    /// Flush-time chain coalescing (write combining / scatter-gather);
+    /// inert under eager policies — nothing is ever staged.
+    coalesce: CoalesceMode,
+    /// Line writes elided by write combining, summed over every
+    /// backup's chains (an overwrite dropped from an N-backup flush
+    /// counts N times, matching the per-backup WQE accounting).
+    pub combined_writes: u64,
     /// Per-thread staging queues (index = thread id; grown on demand).
     stages: Vec<SubmitQueue>,
     /// CPU cost split of an eager post (`wqe_stage_ns + doorbell_ns`
@@ -188,6 +213,8 @@ impl Fabric {
             shard: 0,
             stall: None,
             batching: FlushPolicy::Eager,
+            coalesce: CoalesceMode::None,
+            combined_writes: 0,
             stages: Vec::new(),
             wqe_stage_ns: p.wqe_stage_ns,
             doorbell_ns: p.doorbell_ns,
@@ -215,6 +242,27 @@ impl Fabric {
     /// The flush policy the staged WQE pipeline runs under.
     pub fn batching(&self) -> FlushPolicy {
         self.batching
+    }
+
+    /// Set the flush-time coalescing mode (write combining /
+    /// scatter-gather — see [`super::wqe::CoalesceMode`]). Must be
+    /// called before any traffic, like [`Fabric::set_batching`]; inert
+    /// under an eager flush policy (nothing is staged — the config
+    /// layer rejects that pairing up front).
+    pub fn set_coalescing(&mut self, mode: CoalesceMode) {
+        debug_assert!(self.staged_pending() == 0, "set_coalescing mid-run");
+        self.coalesce = mode;
+    }
+
+    /// Builder form of [`Fabric::set_coalescing`].
+    pub fn with_coalescing(mut self, mode: CoalesceMode) -> Self {
+        self.set_coalescing(mode);
+        self
+    }
+
+    /// The coalescing mode flushed chains run through.
+    pub fn coalescing(&self) -> CoalesceMode {
+        self.coalesce
     }
 
     /// Tag this fabric as serving shard `s` of a sharded coordinator
@@ -335,6 +383,29 @@ impl Fabric {
         super::wqe::mean_batch(self.posted_writes(), self.doorbells_total())
     }
 
+    /// Data WQEs launched on the wire across the whole group (a
+    /// multi-line span counts once): `doorbells_total() <=
+    /// wire_wqes_total() <= posted_writes()`, all three equal under
+    /// eager posting.
+    pub fn wire_wqes_total(&self) -> u64 {
+        self.replicas.iter().map(|r| r.wire_wqes).sum()
+    }
+
+    /// Mean lines per wire WQE across the group (the scatter-gather
+    /// amortization factor; see [`super::wqe::mean_span`]).
+    pub fn mean_span(&self) -> f64 {
+        super::wqe::mean_span(self.posted_writes(), self.wire_wqes_total())
+    }
+
+    /// Lines-per-WQE distribution merged across every backup's stack.
+    pub fn span_hist(&self) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for r in &self.replicas {
+            h.merge(&r.span_hist);
+        }
+        h
+    }
+
     /// Backup WQEs staged and awaiting a doorbell, across all threads.
     pub fn staged_pending(&self) -> usize {
         self.stages.iter().map(|q| q.len()).sum()
@@ -392,6 +463,7 @@ impl Fabric {
                 resync_lines: self.resync_lines[id],
                 last_handoff_ns: self.last_handoff_ns[id],
                 doorbells: self.doorbells[id],
+                wire_wqes: r.wire_wqes,
             })
             .collect()
     }
@@ -590,11 +662,7 @@ impl Fabric {
         for (i, state) in self.states.iter().enumerate() {
             if state.is_alive() {
                 t.busy(self.wqe_stage_ns);
-                self.stages[id].push(Wqe {
-                    verb,
-                    meta,
-                    backup: i,
-                });
+                self.stages[id].push(Wqe::single(verb, meta, i));
                 staged += 1;
             }
         }
@@ -633,10 +701,17 @@ impl Fabric {
             if !self.states[b].is_alive() {
                 continue;
             }
-            let chain: Vec<Wqe> = wqes.iter().filter(|w| w.backup == b).copied().collect();
+            let chain: Vec<Wqe> = wqes.iter().filter(|w| w.backup == b).cloned().collect();
             if chain.is_empty() {
                 continue;
             }
+            // The coalescing stage (no-op under `CoalesceMode::None`,
+            // the anchor): write combining may drop superseded lines,
+            // scatter-gather may fuse contiguous runs into spans. The
+            // chain is already alive-filtered, so a span is launched
+            // whole or not at all.
+            let (chain, combined) = coalesce_chain(self.coalesce, chain);
+            self.combined_writes += combined;
             t.busy(self.doorbell_ns);
             self.doorbells[b] += 1;
             self.replicas[b].post_batch(t, &chain);
@@ -1058,6 +1133,111 @@ mod tests {
         assert_eq!(f.backup(2).ledger.len(), 0, "dead backup saw a staged WQE");
         assert_eq!(f.state(2), BackupState::Dead { since: 5_000 });
         assert_eq!(f.staged_pending(), 0, "dropped WQEs must not linger");
+    }
+
+    // ---- flush-time coalescing -------------------------------------------
+
+    /// Scatter-gather on a contiguous append run: fewer wire WQEs, the
+    /// exact same per-backup ledger events as the uncoalesced chain.
+    #[test]
+    fn sg_coalescing_merges_contiguous_chains() {
+        let p = Platform::default();
+        let drive = |f: &mut Fabric| {
+            let mut t = ThreadClock::new(0);
+            for s in 0..6u64 {
+                f.post_write_wt(&mut t, meta(0x1000 + 0x40 * s, 0, s));
+            }
+            f.rdfence(&mut t);
+        };
+        let mut plain =
+            Fabric::new(&p, &repl(2, AckPolicy::All), true).with_batching(FlushPolicy::Fence);
+        drive(&mut plain);
+        let mut sg = Fabric::new(&p, &repl(2, AckPolicy::All), true)
+            .with_batching(FlushPolicy::Fence)
+            .with_coalescing(CoalesceMode::Sg);
+        assert_eq!(sg.coalescing(), CoalesceMode::Sg);
+        drive(&mut sg);
+        let proj = |f: &Fabric, b: usize| -> Vec<(u64, u64)> {
+            f.backup(b).ledger.events().iter().map(|e| (e.addr, e.seq)).collect()
+        };
+        for b in 0..2 {
+            assert_eq!(proj(&plain, b), proj(&sg, b), "backup {b}: sg changed events");
+        }
+        // 6 contiguous lines x 2 backups: one 6-line span per backup.
+        assert_eq!(plain.wire_wqes_total(), 12);
+        assert_eq!(sg.wire_wqes_total(), 2);
+        assert_eq!(sg.posted_writes(), plain.posted_writes());
+        assert_eq!(sg.combined_writes, 0, "sg drops nothing");
+        assert!((sg.mean_span() - 6.0).abs() < 1e-9, "{}", sg.mean_span());
+        assert_eq!(sg.span_hist().max(), 6);
+        assert!(sg.doorbells_total() <= sg.wire_wqes_total());
+    }
+
+    /// Write combining on a hot line: the superseded overwrites never
+    /// reach the wire, the last writer's ledger entry survives.
+    #[test]
+    fn combine_coalescing_drops_superseded_overwrites() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &repl(2, AckPolicy::All), true)
+            .with_batching(FlushPolicy::Fence)
+            .with_coalescing(CoalesceMode::Combine);
+        let mut t = ThreadClock::new(0);
+        // Hot line 0x40 rewritten 3x in the epoch, one cold line.
+        for s in 0..3u64 {
+            f.post_write_wt(&mut t, meta(0x40, 0, s));
+        }
+        f.post_write_wt(&mut t, meta(0x200, 0, 3));
+        f.rdfence(&mut t);
+        for b in 0..2 {
+            let evs = f.backup(b).ledger.events();
+            assert_eq!(evs.len(), 2, "backup {b}");
+            let hot = evs.iter().find(|e| e.addr == 0x40).unwrap();
+            assert_eq!((hot.seq, hot.val), (2, 2), "last writer must survive");
+        }
+        assert_eq!(f.combined_writes, 4, "2 dropped lines x 2 backups");
+        assert_eq!(f.posted_writes(), 4, "2 surviving lines x 2 backups");
+        assert_eq!(f.staged_wqes, 8, "staging saw all 4 lines x 2 backups");
+    }
+
+    /// The anchor: `CoalesceMode::None` under any staged policy is
+    /// event-for-event the plain batching pipeline — identical thread
+    /// timeline, ledger, and counters.
+    #[test]
+    fn coalesce_none_is_bit_exact_with_plain_batching() {
+        let p = Platform::default();
+        let drive = |f: &mut Fabric| -> Ns {
+            let mut t = ThreadClock::new(0);
+            for e in 0..3u32 {
+                for w in 0..4u64 {
+                    let s = e as u64 * 4 + w;
+                    // A mix of contiguous and hot-line traffic: the
+                    // None mode must not touch any of it.
+                    let addr = if w == 3 { 0x40 } else { 0x1000 + 0x40 * s };
+                    f.post_write_wt(&mut t, meta(addr, e, s));
+                }
+                f.rofence(&mut t);
+            }
+            f.rdfence(&mut t);
+            t.now
+        };
+        let mut plain =
+            Fabric::new(&p, &repl(2, AckPolicy::All), true).with_batching(FlushPolicy::Fence);
+        let t_plain = drive(&mut plain);
+        let mut none = Fabric::new(&p, &repl(2, AckPolicy::All), true)
+            .with_batching(FlushPolicy::Fence)
+            .with_coalescing(CoalesceMode::None);
+        let t_none = drive(&mut none);
+        assert_eq!(t_plain, t_none, "None mode moved the thread timeline");
+        for b in 0..2 {
+            assert_eq!(
+                plain.backup(b).ledger.events(),
+                none.backup(b).ledger.events(),
+                "backup {b}"
+            );
+        }
+        assert_eq!(plain.wire_wqes_total(), none.wire_wqes_total());
+        assert_eq!(plain.doorbells_total(), none.doorbells_total());
+        assert_eq!(none.combined_writes, 0);
     }
 
     // ---- failure dynamics ------------------------------------------------

@@ -2,7 +2,8 @@
 //! stack, the remote (backup) NIC engine with its memory subsystem, the
 //! verb layer tying them together with the paper's §6.2 latency
 //! semantics, the staged WQE submission pipeline with doorbell batching
-//! ([`wqe`]), and the N-way replica-group [`Fabric`] with pluggable
+//! and flush-time coalescing — write combining + scatter-gather spans
+//! ([`wqe`]) — and the N-way replica-group [`Fabric`] with pluggable
 //! ack policies and deterministic failure dynamics ([`faults`]): backups
 //! can be killed and rejoin mid-run, with catch-up resync and
 //! halt/degrade loss handling.
@@ -24,4 +25,6 @@ pub use qp::LocalQp;
 pub use rdma::Rdma;
 pub use remote::RemoteEngine;
 pub use verbs::WriteMeta;
-pub use wqe::{BatchingConfig, FlushPolicy, SubmitQueue, Wqe};
+pub use wqe::{
+    BatchingConfig, CoalesceMode, CoalescingConfig, FlushPolicy, SubmitQueue, Wqe,
+};

@@ -11,6 +11,11 @@
 //! window and back-pressure semantics are identical whether a WQE was
 //! posted eagerly or launched as part of a coalesced chain — batching
 //! amortizes only the CPU-side doorbell cost, never the wire model.
+//! A scatter-gather *span* (one WQE carrying several contiguous lines)
+//! posts through [`LocalQp::post_with`]: it takes one window slot and
+//! one issue-pipeline slot like any WQE, but occupies the issue stage
+//! for `gap + extra` where `extra` is the span's additional per-line
+//! serialization — the amortization the coalescer buys on the wire.
 
 use crate::sim::FifoResource;
 use crate::Ns;
@@ -50,6 +55,16 @@ impl LocalQp {
     /// wire. The caller must later call [`LocalQp::complete`] with the
     /// WQE's completion time.
     pub fn post(&mut self, at: Ns) -> (Ns, Ns) {
+        self.post_with(at, 0)
+    }
+
+    /// Post a WQE whose issue stage is occupied `extra` ns beyond the
+    /// per-WQE gap — a scatter-gather span serializing its additional
+    /// lines onto the wire. The window cost is identical to [`post`]:
+    /// one slot per WQE, regardless of span size.
+    ///
+    /// [`post`]: LocalQp::post
+    pub fn post_with(&mut self, at: Ns, extra: Ns) -> (Ns, Ns) {
         // Retire completions that have already arrived.
         while let Some(&head) = self.inflight.front() {
             if head <= at {
@@ -65,7 +80,7 @@ impl LocalQp {
             self.window_stall_ns += head.saturating_sub(at);
             ready = ready.max(head);
         }
-        let (start, _done) = self.issue.submit(ready, self.gap);
+        let (start, _done) = self.issue.submit(ready, self.gap + extra);
         self.posted += 1;
         (ready, start)
     }
@@ -137,6 +152,27 @@ mod tests {
         qp.post(0);
         qp.complete(300); // out of order: clamped up to 500
         assert_eq!(qp.last_completion(), 500);
+    }
+
+    #[test]
+    fn span_occupies_issue_stage_longer() {
+        let mut qp = LocalQp::new(150, 64);
+        // A 4-line span (3 extra lines x 20 ns) holds the issue stage
+        // for 150 + 60 ns; the next WQE issues after it.
+        let (_, s1) = qp.post_with(0, 60);
+        qp.complete(10_000);
+        let (_, s2) = qp.post(0);
+        qp.complete(10_000);
+        assert_eq!(s1, 0);
+        assert_eq!(s2, 210);
+        // post() is exactly post_with(extra = 0).
+        let mut a = LocalQp::new(150, 2);
+        let mut b = LocalQp::new(150, 2);
+        for t in [0u64, 10, 400] {
+            assert_eq!(a.post(t), b.post_with(t, 0));
+            a.complete(t + 500);
+            b.complete(t + 500);
+        }
     }
 
     #[test]

@@ -19,6 +19,7 @@ use super::remote::RemoteEngine;
 use super::verbs::{Verb, WriteMeta};
 use super::wqe::Wqe;
 use crate::config::Platform;
+use crate::metrics::LogHistogram;
 use crate::sim::{RateLimiter, ThreadClock};
 use crate::Ns;
 use std::collections::HashMap;
@@ -44,9 +45,19 @@ pub struct Rdma {
     half: Ns,
     post_cost: Ns,
     poll_cost: Ns,
+    /// Wire/issue serialization of each extra line in a scatter-gather
+    /// span (see [`crate::net::wqe`] and `Platform::wire_line_ns`).
+    wire_line_ns: Ns,
     pub remote: RemoteEngine,
     // stats
+    /// Data *lines* submitted to the wire (a span counts once per line).
     pub posted_writes: u64,
+    /// Data WQEs launched on the wire (a span counts once) —
+    /// `wire_wqes <= posted_writes`, equal without scatter-gather.
+    pub wire_wqes: u64,
+    /// Lines-per-WQE distribution of everything launched (all 1s
+    /// without scatter-gather).
+    pub span_hist: LogHistogram,
     pub posted_fences: u64,
     pub blocking_waits: u64,
     pub blocked_ns: Ns,
@@ -68,8 +79,11 @@ impl Rdma {
             half: p.rtt / 2,
             post_cost: p.post_cost(),
             poll_cost: p.poll_cost,
+            wire_line_ns: p.wire_line_ns,
             remote: RemoteEngine::new(p, ledger),
             posted_writes: 0,
+            wire_wqes: 0,
+            span_hist: LogHistogram::new(),
             posted_fences: 0,
             blocking_waits: 0,
             blocked_ns: 0,
@@ -85,15 +99,17 @@ impl Rdma {
     }
 
     /// Post on a per-thread lane QP: per-lane gap + NIC-wide rate.
-    /// Returns `(ready, issue)`.
-    fn post_lane(&mut self, thread: u32, lane: usize, at: Ns) -> (Ns, Ns) {
+    /// `extra` is a scatter-gather span's additional issue-stage
+    /// serialization (0 for the ordinary single-line WQE). Returns
+    /// `(ready, issue)`.
+    fn post_lane(&mut self, thread: u32, lane: usize, at: Ns, extra: Ns) -> (Ns, Ns) {
         let gap = self.gap;
         let depth = self.qp_depth;
         let qp = self
             .lanes
             .entry((thread, lane))
             .or_insert_with(|| LocalQp::new(gap, depth));
-        let (ready, start) = qp.post(at);
+        let (ready, start) = qp.post_with(at, extra);
         let issue = self.nic.submit(start);
         (ready, issue)
     }
@@ -105,7 +121,13 @@ impl Rdma {
     }
 
     /// Post on the shared SM-DD QP: per-thread window + shared rate.
-    fn post_dd(&mut self, thread: u32, at: Ns) -> (Ns, Ns) {
+    /// `extra` is a scatter-gather span's additional issue-stage
+    /// serialization (0 for a single-line WQE): the ordered QP keeps
+    /// serializing the span's extra lines after its issue start, so a
+    /// time-filtered floor — anchored at this WQE's *arrival*, like the
+    /// rofence floors — charges every later-arriving WQE the same
+    /// per-extra-line cost the lane QPs charge via FIFO occupancy.
+    fn post_dd(&mut self, thread: u32, at: Ns, extra: Ns) -> (Ns, Ns) {
         let win = self.dd_windows.entry(thread).or_default();
         while let Some(&head) = win.front() {
             if head <= at {
@@ -122,8 +144,11 @@ impl Rdma {
             self.dd_window_stall_ns += head.saturating_sub(at);
             ready = ready.max(head);
         }
-        let issue = self.dd_issue.submit(ready);
-        let issue = self.nic.submit(issue);
+        let start = self.dd_issue.submit(ready);
+        if extra > 0 {
+            self.dd_issue.add_floor(ready, start + extra);
+        }
+        let issue = self.nic.submit(start);
         (ready, issue)
     }
 
@@ -140,17 +165,17 @@ impl Rdma {
         t.busy(self.poll_cost);
     }
 
-    /// Submit one data WQE through the QP/wire/remote pipeline WITHOUT
-    /// charging any CPU post cost — the caller has already paid the
-    /// staging (and, per chain, doorbell) cost; see [`crate::net::wqe`].
-    /// The per-WQE gap, send window and remote back-pressure model is
-    /// exactly the eager path's.
+    /// Submit one single-line data WQE through the QP/wire/remote
+    /// pipeline WITHOUT charging any CPU post cost — the caller has
+    /// already paid the staging (and, per chain, doorbell) cost; see
+    /// [`crate::net::wqe`]. The per-WQE gap, send window and remote
+    /// back-pressure model is exactly the eager path's.
     pub fn submit_data(&mut self, t: &mut ThreadClock, verb: Verb, meta: WriteMeta) {
         let thread = t.id as u32;
         match verb {
             Verb::Write => {
                 let lane = self.next_lane(thread);
-                let (ready, iss) = self.post_lane(thread, lane, t.now);
+                let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
                 t.wait_until(ready);
                 let arrive = iss + self.half;
                 self.remote.write_ddio(lane, arrive, meta);
@@ -160,14 +185,14 @@ impl Rdma {
             }
             Verb::WriteWT => {
                 let lane = self.next_lane(thread);
-                let (ready, iss) = self.post_lane(thread, lane, t.now);
+                let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
                 t.wait_until(ready);
                 let arrive = iss + self.half;
                 self.remote.write_wt(lane, arrive, meta);
                 self.complete_lane(thread, lane, arrive + self.half);
             }
             Verb::WriteNT => {
-                let (ready, iss) = self.post_dd(thread, t.now);
+                let (ready, iss) = self.post_dd(thread, t.now, 0);
                 t.wait_until(ready);
                 let arrive = iss + self.half;
                 let (_proc, persist) = self.remote.write_nt(0, arrive, meta);
@@ -176,15 +201,71 @@ impl Rdma {
             other => unreachable!("submit_data: {other:?} is not a data verb"),
         }
         self.posted_writes += 1;
+        self.wire_wqes += 1;
+        self.span_hist.record(1);
+    }
+
+    /// Submit one staged WQE — a multi-line scatter-gather span pays a
+    /// single QP window slot, a single NIC message slot, and occupies
+    /// the QP issue stage `wire_line_ns` per *extra* line; every line
+    /// still persists individually on the remote, under one completion
+    /// (last line in, one ack out). A single-line WQE takes exactly the
+    /// [`Rdma::submit_data`] path.
+    pub fn submit_wqe(&mut self, t: &mut ThreadClock, w: &Wqe) {
+        if w.tail.is_empty() {
+            return self.submit_data(t, w.verb, w.meta);
+        }
+        let thread = t.id as u32;
+        let lines = w.lines() as Ns;
+        let extra = (lines - 1) * self.wire_line_ns;
+        match w.verb {
+            Verb::Write => {
+                let lane = self.next_lane(thread);
+                let (ready, iss) = self.post_lane(thread, lane, t.now, extra);
+                t.wait_until(ready);
+                let arrive = iss + self.half;
+                self.remote
+                    .write_ddio_span(lane, arrive, self.wire_line_ns, w.meta, &w.tail);
+                // Posted span: one ack once the last line is received.
+                self.complete_lane(thread, lane, arrive + extra + self.half);
+            }
+            Verb::WriteWT => {
+                let lane = self.next_lane(thread);
+                let (ready, iss) = self.post_lane(thread, lane, t.now, extra);
+                t.wait_until(ready);
+                let arrive = iss + self.half;
+                self.remote
+                    .write_wt_span(lane, arrive, self.wire_line_ns, w.meta, &w.tail);
+                self.complete_lane(thread, lane, arrive + extra + self.half);
+            }
+            Verb::WriteNT => {
+                // `post_dd` floors the shared QP's issue stage for the
+                // span's extra serialization (see its doc comment).
+                let (ready, iss) = self.post_dd(thread, t.now, extra);
+                t.wait_until(ready);
+                let arrive = iss + self.half;
+                let (_proc, last_persist) =
+                    self.remote
+                        .write_nt_span(0, arrive, self.wire_line_ns, w.meta, &w.tail);
+                // Non-posted span: the single completion carries the
+                // persistence of every line (window slot freed then).
+                self.complete_dd(thread, last_persist + self.half);
+            }
+            other => unreachable!("submit_wqe: {other:?} is not a data verb"),
+        }
+        self.posted_writes += lines;
+        self.wire_wqes += 1;
+        self.span_hist.record(lines);
     }
 
     /// Post a doorbell-coalesced chain of staged WQEs in stage (FIFO)
     /// order. No CPU cost is charged here — the caller rings one
     /// doorbell for the whole chain (see [`crate::net::Fabric`]); each
-    /// WQE still pays its full gap/window/back-pressure submission cost.
+    /// WQE still pays its full gap/window/back-pressure submission cost
+    /// (spans pay it once per WQE plus `wire_line_ns` per extra line).
     pub fn post_batch(&mut self, t: &mut ThreadClock, wqes: &[Wqe]) {
         for w in wqes {
-            self.submit_data(t, w.verb, w.meta);
+            self.submit_wqe(t, w);
         }
     }
 
@@ -217,7 +298,7 @@ impl Rdma {
         t.busy(self.post_cost);
         let thread = t.id as u32;
         let lane = self.next_lane(thread);
-        let (ready, iss) = self.post_lane(thread, lane, t.now);
+        let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
         t.wait_until(ready);
         let arrive = iss + self.half;
         let done_remote = self.remote.rcommit(lane, arrive, thread);
@@ -237,7 +318,7 @@ impl Rdma {
         t.busy(self.post_cost);
         let thread = t.id as u32;
         let lane = self.next_lane(thread);
-        let (ready, iss) = self.post_lane(thread, lane, t.now);
+        let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
         t.wait_until(ready);
         let arrive = iss + self.half;
         self.remote.rofence(arrive, thread);
@@ -251,7 +332,7 @@ impl Rdma {
         t.busy(self.post_cost);
         let thread = t.id as u32;
         let lane = self.next_lane(thread);
-        let (ready, iss) = self.post_lane(thread, lane, t.now);
+        let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
         t.wait_until(ready);
         let arrive = iss + self.half;
         let done_remote = self.remote.rdfence(lane, arrive, thread);
@@ -271,7 +352,7 @@ impl Rdma {
     pub fn read_fence_issue(&mut self, t: &mut ThreadClock) -> Ns {
         t.busy(self.post_cost);
         let thread = t.id as u32;
-        let (ready, iss) = self.post_dd(thread, t.now);
+        let (ready, iss) = self.post_dd(thread, t.now, 0);
         t.wait_until(ready);
         let arrive = iss + self.half;
         let done_remote = self.remote.read(0, arrive, thread);
@@ -415,11 +496,7 @@ mod tests {
         // Same start instant as the eager run's first wire submission.
         tb.busy(30);
         let wqes: Vec<Wqe> = (0..6u64)
-            .map(|i| Wqe {
-                verb: Verb::WriteWT,
-                meta: meta(0x40 * (i + 1), i),
-                backup: 0,
-            })
+            .map(|i| Wqe::single(Verb::WriteWT, meta(0x40 * (i + 1), i), 0))
             .collect();
         batched.post_batch(&mut tb, &wqes);
         assert_eq!(batched.posted_writes, 6);
@@ -431,6 +508,73 @@ mod tests {
         assert_eq!(proj(&batched), proj(&eager));
         // The batched thread paid no per-WQE post cost.
         assert!(tb.now < te.now, "batched {} vs eager {}", tb.now, te.now);
+    }
+
+    #[test]
+    fn span_submits_per_line_persists_under_one_wqe() {
+        // A 4-line WT span: one wire WQE, one QP slot, per-line ledger
+        // entries arriving wire_line_ns apart — vs 4 single-line WQEs.
+        let p = Platform {
+            wire_line_ns: 20,
+            ..Platform::default()
+        };
+        let span = {
+            let mut r = Rdma::new(&p, true);
+            let mut t = ThreadClock::new(0);
+            let mut w = Wqe::single(Verb::WriteWT, meta(0x40, 0), 0);
+            for i in 1..4u64 {
+                w.tail.push(meta(0x40 * (1 + i), i));
+            }
+            r.submit_wqe(&mut t, &w);
+            assert_eq!(r.wire_wqes, 1);
+            assert_eq!(r.posted_writes, 4);
+            assert_eq!(r.span_hist.max(), 4);
+            assert_eq!(r.remote.ledger.len(), 4);
+            // Arrival spacing on the remote: wire_line_ns apart, in
+            // span order.
+            let evs = r.remote.ledger.events().to_vec();
+            for w in evs.windows(2) {
+                assert!(w[1].at >= w[0].at, "span persists out of order");
+            }
+            r
+        };
+        let singles = {
+            let mut r = Rdma::new(&p, true);
+            let mut t = ThreadClock::new(0);
+            for i in 0..4u64 {
+                r.submit_data(&mut t, Verb::WriteWT, meta(0x40 * (1 + i), i));
+            }
+            assert_eq!(r.wire_wqes, 4);
+            r
+        };
+        // Same lines persisted either way; the span's wire footprint is
+        // smaller (1 WQE, and 150 + 3*20 ns of issue occupancy instead
+        // of 4 * 150 ns).
+        let proj = |r: &Rdma| -> Vec<u64> {
+            r.remote.ledger.events().iter().map(|e| e.addr).collect()
+        };
+        assert_eq!(proj(&span), proj(&singles));
+        assert!(span.wire_wqes < singles.wire_wqes);
+        assert_eq!(span.posted_writes, singles.posted_writes);
+    }
+
+    #[test]
+    fn nt_span_completes_at_last_persist() {
+        let p = Platform::default();
+        let mut r = Rdma::new(&p, true);
+        let mut t = ThreadClock::new(0);
+        let mut w = Wqe::single(Verb::WriteNT, meta(0x40, 0), 0);
+        w.tail.push(meta(0x80, 1));
+        w.tail.push(meta(0xc0, 2));
+        r.submit_wqe(&mut t, &w);
+        assert_eq!(r.remote.ledger.len(), 3);
+        // Every line persisted; the single completion (registered in the
+        // shared-QP window) covers the last persist.
+        let horizon = r.remote.persist_horizon();
+        let evs = r.remote.ledger.events();
+        assert!(evs.iter().all(|e| e.at <= horizon));
+        assert_eq!(r.wire_wqes, 1);
+        assert_eq!(r.posted_writes, 3);
     }
 
     #[test]

@@ -190,6 +190,81 @@ impl RemoteEngine {
         (proc, persist)
     }
 
+    // ---- scatter-gather spans -------------------------------------------
+    //
+    // A multi-line span WQE (see `crate::net::wqe`) is ONE message on
+    // the wire but lands as per-line persists: each line arrives
+    // `line_ns` after its predecessor (the span's wire serialization),
+    // pays its own PCIe/LLC/MC occupancy, and records its own ledger
+    // entry — only the requester-side completion is shared. The span
+    // helpers below are thin per-line loops over the single-line verbs,
+    // so every ordering/floor/back-pressure rule applies unchanged.
+
+    /// The one span-stagger rule: apply `verb` to the head at `arrive`
+    /// and to each tail line `line_ns` after its predecessor, folding
+    /// the per-line `(proc, persist)` with a component-wise max.
+    fn span_fold(
+        &mut self,
+        qp: usize,
+        arrive: Ns,
+        line_ns: Ns,
+        head: WriteMeta,
+        tail: &[WriteMeta],
+        verb: fn(&mut Self, usize, Ns, WriteMeta) -> (Ns, Ns),
+    ) -> (Ns, Ns) {
+        let (mut proc, mut persist) = verb(self, qp, arrive, head);
+        for (i, m) in tail.iter().enumerate() {
+            let at = arrive + (i as Ns + 1) * line_ns;
+            let (p, d) = verb(self, qp, at, *m);
+            proc = proc.max(p);
+            persist = persist.max(d);
+        }
+        (proc, persist)
+    }
+
+    /// Apply a DDIO write span; returns the last line's processing
+    /// instant (DDIO lands volatile — nothing persists here).
+    pub fn write_ddio_span(
+        &mut self,
+        qp: usize,
+        arrive: Ns,
+        line_ns: Ns,
+        head: WriteMeta,
+        tail: &[WriteMeta],
+    ) -> Ns {
+        let (proc, _) = self.span_fold(qp, arrive, line_ns, head, tail, |e, qp, at, m| {
+            (e.write_ddio(qp, at, m), 0)
+        });
+        proc
+    }
+
+    /// Apply a write-through span; returns the last line's
+    /// `(proc, persist)` (both clamped monotone over the span).
+    pub fn write_wt_span(
+        &mut self,
+        qp: usize,
+        arrive: Ns,
+        line_ns: Ns,
+        head: WriteMeta,
+        tail: &[WriteMeta],
+    ) -> (Ns, Ns) {
+        self.span_fold(qp, arrive, line_ns, head, tail, Self::write_wt)
+    }
+
+    /// Apply a non-temporal span; returns the last line's
+    /// `(proc, persist)` — the non-posted completion the shared QP
+    /// reports for the whole span.
+    pub fn write_nt_span(
+        &mut self,
+        qp: usize,
+        arrive: Ns,
+        line_ns: Ns,
+        head: WriteMeta,
+        tail: &[WriteMeta],
+    ) -> (Ns, Ns) {
+        self.span_fold(qp, arrive, line_ns, head, tail, Self::write_nt)
+    }
+
     /// Remote ordering fence (paper Fig. 3b): cross-QP barrier in the
     /// remote NIC's ordered FIFO. Writes on *any* QP arriving after the
     /// fence process after the barrier (time-filtered floor on the shared
@@ -393,6 +468,33 @@ mod tests {
         let (_, p1) = e.write_nt(0, 0, meta(0x40, 0));
         let (_, p2) = e.write_nt(0, 0, meta(0x80, 1));
         assert!(p2 >= p1 + 210 - 10, "NT writes must serialize: {p1} {p2}");
+    }
+
+    #[test]
+    fn spans_apply_per_line_with_staggered_arrivals() {
+        // A 3-line WT span at line_ns = 20: three ledger entries, each
+        // arriving (and thus persisting) no earlier than its
+        // predecessor, all carrying their own metas.
+        let mut e = engine();
+        let tail = [meta(0x80, 1), meta(0xc0, 2)];
+        let (_, last) = e.write_wt_span(0, 1_000, 20, meta(0x40, 0), &tail);
+        assert_eq!(e.ledger.len(), 3);
+        let evs = e.ledger.events();
+        assert_eq!(evs.iter().map(|ev| ev.addr).collect::<Vec<_>>(), vec![0x40, 0x80, 0xc0]);
+        for w in evs.windows(2) {
+            assert!(w[0].at <= w[1].at, "span persists out of order");
+        }
+        assert!(evs.iter().all(|ev| ev.at <= last));
+        // DDIO span: per-line pending entries, nothing durable yet.
+        let mut e = engine();
+        e.write_ddio_span(0, 1_000, 20, meta(0x40, 0), &tail);
+        assert_eq!(e.pending_lines(), 3);
+        assert_eq!(e.ledger.len(), 0);
+        // NT span: per-line persists, completion covers them all.
+        let mut e = engine();
+        let (_, persist) = e.write_nt_span(0, 1_000, 20, meta(0x40, 0), &tail);
+        assert_eq!(e.ledger.len(), 3);
+        assert_eq!(e.persist_horizon(), persist);
     }
 
     #[test]

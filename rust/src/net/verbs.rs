@@ -24,7 +24,7 @@ pub struct WriteMeta {
 }
 
 /// RDMA verbs modeled by the framework (paper §2.3, §5, §6.2).
-#[derive(Clone, Copy, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Verb {
     /// One-sided RDMA write; lands in the remote LLC via DDIO (posted).
     Write,

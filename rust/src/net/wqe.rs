@@ -31,6 +31,40 @@
 //! the ledger equivalence for caps {1, 4, 16} under all three SM
 //! strategies.
 //!
+//! **Flush-time coalescing** (see [`CoalesceMode`]): because a flushed
+//! chain sits strictly between two flush points — and every ordering /
+//! durability fence is a flush point — no fence ever separates the WQEs
+//! of one chain, which makes the chain a legal coalescing window. The
+//! [`coalesce_chain`] stage runs per backup chain at flush time and
+//! applies, per the configured mode:
+//!
+//! * **write combining** ([`CoalesceMode::Combine`]) — same-line
+//!   overwrites *within the same transaction epoch* collapse to the
+//!   last writer (keyed on `(line, txn, epoch, verb)`; the survivor's
+//!   `WriteMeta`, with the highest `seq`, is kept), so hot lines
+//!   rewritten inside an epoch pay one wire round instead of N. The
+//!   epoch restriction is load-bearing: an SM-DD chain spans
+//!   epochs (its ordering fence is not a flush point), and collapsing a
+//!   cross-epoch rewrite — e.g. an undo-log status word bumped once per
+//!   log append — would let a crash observe a mutation without the log
+//!   state that guards it. Within one epoch the persistency contract
+//!   orders nothing, so the intermediate value was never observable at
+//!   a fence and dropping it is sound;
+//! * **scatter-gather merging** ([`CoalesceMode::Sg`]) — runs of
+//!   address-contiguous, same-verb WQEs that are adjacent in the chain
+//!   merge into one multi-line [`Wqe`] span (the extra lines ride in
+//!   [`Wqe::tail`]), which pays one QP slot + one NIC message slot +
+//!   `wire_line_ns` per extra line instead of a full per-WQE round.
+//!   Nothing is dropped: every line still persists individually on the
+//!   remote ([`crate::net::RemoteEngine`] applies a span as per-line
+//!   persists under one completion), so the ledger is event-identical
+//!   to the unmerged chain — only arrival instants move.
+//!
+//! [`CoalesceMode::None`] is the regression anchor: the chain passes
+//! through untouched and the pipeline is event-for-event the doorbell-
+//! batching pipeline. `rust/tests/coalescing.rs` pins the anchor and the
+//! ledger/recovery equivalence of all four modes.
+//!
 //! The fan-out half of the pipeline (staging one logical line as N
 //! backup WQEs, dropping staged WQEs whose target was killed before the
 //! doorbell, per-backup chains) lives in [`crate::net::Fabric`]; the
@@ -38,6 +72,7 @@
 //! [`crate::net::Rdma::post_batch`].
 
 use super::verbs::{Verb, WriteMeta};
+use crate::{line_of, LINE};
 use anyhow::{anyhow, bail, Result};
 use std::fmt;
 use std::str::FromStr;
@@ -53,15 +88,211 @@ pub fn mean_batch(wqes: u64, doorbells: u64) -> f64 {
     wqes as f64 / doorbells as f64
 }
 
-/// One staged work-queue entry: a data verb bound for one backup.
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Mean lines carried per wire WQE — the scatter-gather amortization
+/// factor (1.0 when every WQE is single-line; 0 before any traffic).
+pub fn mean_span(lines: u64, wire_wqes: u64) -> f64 {
+    if wire_wqes == 0 {
+        return 0.0;
+    }
+    lines as f64 / wire_wqes as f64
+}
+
+/// One staged work-queue entry: a data verb bound for one backup —
+/// single-line as staged, possibly a multi-line scatter-gather span
+/// after [`coalesce_chain`] merged address-contiguous neighbours into
+/// its [`Wqe::tail`].
+#[derive(Clone, Debug, PartialEq)]
 pub struct Wqe {
     /// The data verb ([`Verb::Write`], [`Verb::WriteWT`] or
     /// [`Verb::WriteNT`] — fences are flush points, never staged).
     pub verb: Verb,
+    /// The head (lowest-addressed) line of the span.
     pub meta: WriteMeta,
     /// Target backup index within the replica group.
     pub backup: usize,
+    /// Additional address-contiguous lines merged into this WQE by the
+    /// scatter-gather coalescer, in ascending line order (empty for the
+    /// common single-line WQE — `Vec::new()` does not allocate).
+    pub tail: Vec<WriteMeta>,
+}
+
+impl Wqe {
+    /// A single-line WQE (the shape the staging queue holds).
+    pub fn single(verb: Verb, meta: WriteMeta, backup: usize) -> Self {
+        Wqe {
+            verb,
+            meta,
+            backup,
+            tail: Vec::new(),
+        }
+    }
+
+    /// Lines this WQE carries (1 for an unmerged WQE).
+    pub fn lines(&self) -> usize {
+        1 + self.tail.len()
+    }
+
+    /// All line metas of the span, head first.
+    pub fn metas(&self) -> impl Iterator<Item = &WriteMeta> {
+        std::iter::once(&self.meta).chain(self.tail.iter())
+    }
+
+    /// First line address past the span (the contiguity frontier).
+    fn frontier(&self) -> u64 {
+        line_of(self.meta.addr) + self.lines() as u64 * LINE
+    }
+}
+
+/// Flush-time coalescing mode of the staged pipeline (see module docs
+/// for the semantics argument; `--coalesce` / `[coalescing] mode`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CoalesceMode {
+    /// Chains pass through untouched — event-for-event the plain
+    /// doorbell-batching pipeline, and the regression anchor.
+    #[default]
+    None,
+    /// Write combining only: same-line overwrites within one epoch of a
+    /// chain collapse to the last writer.
+    Combine,
+    /// Scatter-gather merging only: adjacent address-contiguous
+    /// same-verb WQEs merge into multi-line spans.
+    Sg,
+    /// Both: combine first (drop dead overwrites), then merge the
+    /// surviving chain into spans.
+    Full,
+}
+
+impl CoalesceMode {
+    /// Does this mode drop superseded same-line overwrites?
+    pub fn combining(&self) -> bool {
+        matches!(self, CoalesceMode::Combine | CoalesceMode::Full)
+    }
+
+    /// Does this mode merge contiguous WQEs into spans?
+    pub fn sg(&self) -> bool {
+        matches!(self, CoalesceMode::Sg | CoalesceMode::Full)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CoalesceMode::None => "none",
+            CoalesceMode::Combine => "combine",
+            CoalesceMode::Sg => "sg",
+            CoalesceMode::Full => "full",
+        }
+    }
+}
+
+impl FromStr for CoalesceMode {
+    type Err = anyhow::Error;
+
+    /// Parse a `--coalesce` spec: `none | combine | sg | full`.
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "off" => CoalesceMode::None,
+            "combine" | "wc" => CoalesceMode::Combine,
+            "sg" | "scatter-gather" => CoalesceMode::Sg,
+            "full" | "combine+sg" => CoalesceMode::Full,
+            other => bail!("unknown coalesce mode {other:?}; expected none | combine | sg | full"),
+        })
+    }
+}
+
+impl fmt::Display for CoalesceMode {
+    /// Round-trips through [`FromStr`].
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The `[coalescing]` config table / `--coalesce` CLI surface.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoalescingConfig {
+    pub mode: CoalesceMode,
+}
+
+impl CoalescingConfig {
+    pub fn new(mode: CoalesceMode) -> Self {
+        CoalescingConfig { mode }
+    }
+
+    /// Coalescing operates on flushed chains, so it needs the staged
+    /// pipeline: under an eager flush policy every chain is a single
+    /// WQE and the coalescer could never fire — reject the shape
+    /// instead of silently doing nothing.
+    pub fn validate_with(&self, policy: FlushPolicy) -> Result<()> {
+        if self.mode != CoalesceMode::None && policy.is_eager() {
+            bail!(
+                "coalescing.mode = {} requires a staged flush policy \
+                 (batching.flush_policy = cap:K | fence); eager posting \
+                 stages nothing to coalesce",
+                self.mode
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Run the flush-time coalescing stage over one backup's chain (stage
+/// order in, submission order out). Returns the coalesced chain and the
+/// number of line writes elided by write combining. The chain must be
+/// single-thread (per-thread stages guarantee it) and fence-free (flush
+/// boundaries guarantee it); under [`CoalesceMode::None`] the chain is
+/// returned untouched — the anchor path allocates and reorders nothing.
+pub fn coalesce_chain(mode: CoalesceMode, chain: Vec<Wqe>) -> (Vec<Wqe>, u64) {
+    if mode == CoalesceMode::None || chain.len() <= 1 {
+        return (chain, 0);
+    }
+    let mut combined = 0u64;
+    let chain = if mode.combining() {
+        // Walk back-to-front: a write is dead iff a later write in the
+        // chain targets the same line within the same (txn, epoch) with
+        // the same verb. The survivor keeps its own (last-writer) meta
+        // and position, so per-thread order of surviving events — and
+        // the ledger entry at every fence point — is unchanged. Chains
+        // are short (bounded by the flush cap or one fence window), so
+        // a linear scan over the survivors beats hashing on this hot
+        // per-flush path.
+        let mut kept: Vec<Wqe> = Vec::with_capacity(chain.len());
+        for w in chain.into_iter().rev() {
+            let superseded = kept.iter().any(|k| {
+                k.verb == w.verb
+                    && line_of(k.meta.addr) == line_of(w.meta.addr)
+                    && k.meta.txn == w.meta.txn
+                    && k.meta.epoch == w.meta.epoch
+            });
+            if superseded {
+                combined += 1;
+            } else {
+                kept.push(w);
+            }
+        }
+        kept.reverse();
+        kept
+    } else {
+        chain
+    };
+    if !mode.sg() {
+        return (chain, combined);
+    }
+    // Scatter-gather: merge runs of chain-adjacent, address-contiguous,
+    // same-verb WQEs into one span. Only adjacent WQEs merge, so the
+    // submission order (and therefore every per-line arrival order) is
+    // exactly the unmerged chain's.
+    let mut merged: Vec<Wqe> = Vec::with_capacity(chain.len());
+    for w in chain {
+        match merged.last_mut() {
+            Some(prev)
+                if prev.verb == w.verb
+                    && w.tail.is_empty()
+                    && line_of(w.meta.addr) == prev.frontier() =>
+            {
+                prev.tail.push(w.meta);
+            }
+            _ => merged.push(w),
+        }
+    }
+    (merged, combined)
 }
 
 /// When the staged pipeline rings its doorbells.
@@ -210,9 +441,9 @@ mod tests {
     use super::*;
 
     fn wqe(backup: usize, seq: u64) -> Wqe {
-        Wqe {
-            verb: Verb::WriteWT,
-            meta: WriteMeta {
+        Wqe::single(
+            Verb::WriteWT,
+            WriteMeta {
                 addr: 0x40 * (1 + seq),
                 val: seq,
                 thread: 0,
@@ -221,7 +452,23 @@ mod tests {
                 seq,
             },
             backup,
-        }
+        )
+    }
+
+    /// A single-line WQE at an explicit line address / epoch.
+    fn at(verb: Verb, addr: u64, epoch: u32, seq: u64) -> Wqe {
+        Wqe::single(
+            verb,
+            WriteMeta {
+                addr,
+                val: seq,
+                thread: 0,
+                txn: 0,
+                epoch,
+                seq,
+            },
+            0,
+        )
     }
 
     #[test]
@@ -283,5 +530,155 @@ mod tests {
         assert_eq!(drained[3], wqe(1, 1));
         assert!(q.is_empty());
         assert_eq!(q.lines(), 0);
+    }
+
+    // ---- coalescing ------------------------------------------------------
+
+    #[test]
+    fn coalesce_mode_parse_roundtrip() {
+        for m in [
+            CoalesceMode::None,
+            CoalesceMode::Combine,
+            CoalesceMode::Sg,
+            CoalesceMode::Full,
+        ] {
+            assert_eq!(m.to_string().parse::<CoalesceMode>().unwrap(), m);
+        }
+        assert_eq!("SG".parse::<CoalesceMode>().unwrap(), CoalesceMode::Sg);
+        assert_eq!("off".parse::<CoalesceMode>().unwrap(), CoalesceMode::None);
+        assert!("both".parse::<CoalesceMode>().is_err());
+        assert!(CoalesceMode::Full.combining() && CoalesceMode::Full.sg());
+        assert!(!CoalesceMode::Combine.sg());
+        assert!(!CoalesceMode::Sg.combining());
+    }
+
+    #[test]
+    fn coalescing_config_requires_staged_policy() {
+        let c = CoalescingConfig::new(CoalesceMode::Full);
+        assert!(c.validate_with(FlushPolicy::Fence).is_ok());
+        assert!(c.validate_with(FlushPolicy::Cap(4)).is_ok());
+        assert!(c.validate_with(FlushPolicy::Eager).is_err());
+        assert!(c.validate_with(FlushPolicy::Cap(1)).is_err(), "cap:1 IS eager");
+        let none = CoalescingConfig::default();
+        assert!(none.validate_with(FlushPolicy::Eager).is_ok());
+    }
+
+    #[test]
+    fn none_mode_passes_chains_through_untouched() {
+        let chain = vec![at(Verb::WriteWT, 0x40, 0, 0), at(Verb::WriteWT, 0x40, 0, 1)];
+        let (out, combined) = coalesce_chain(CoalesceMode::None, chain.clone());
+        assert_eq!(out, chain);
+        assert_eq!(combined, 0);
+    }
+
+    #[test]
+    fn combine_collapses_same_epoch_rewrites_to_last_writer() {
+        // A, B, A' in one epoch: the first A is dead; B and A' survive in
+        // chain order with A' keeping the last writer's meta.
+        let chain = vec![
+            at(Verb::WriteWT, 0x40, 0, 0),
+            at(Verb::WriteWT, 0x80, 0, 1),
+            at(Verb::WriteWT, 0x40, 0, 2),
+        ];
+        let (out, combined) = coalesce_chain(CoalesceMode::Combine, chain);
+        assert_eq!(combined, 1);
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].meta.addr, out[0].meta.seq), (0x80, 1));
+        assert_eq!((out[1].meta.addr, out[1].meta.seq), (0x40, 2));
+    }
+
+    #[test]
+    fn combine_never_crosses_epoch_boundaries() {
+        // The same line rewritten in a LATER epoch of the same chain
+        // (an SM-DD chain spans epochs) must keep both copies: dropping
+        // the earlier one would let a crash observe epoch-1 state
+        // without its epoch-0 prefix.
+        let chain = vec![at(Verb::WriteNT, 0x40, 0, 0), at(Verb::WriteNT, 0x40, 1, 1)];
+        let (out, combined) = coalesce_chain(CoalesceMode::Full, chain.clone());
+        assert_eq!(combined, 0);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].meta.epoch, 0);
+        assert_eq!(out[1].meta.epoch, 1);
+        // Different transactions are likewise never combined.
+        let mut cross_txn = chain;
+        cross_txn[1].meta.epoch = 0;
+        cross_txn[1].meta.txn = 1;
+        let (out, combined) = coalesce_chain(CoalesceMode::Combine, cross_txn);
+        assert_eq!((out.len(), combined), (2, 0));
+    }
+
+    #[test]
+    fn sg_merges_adjacent_contiguous_runs() {
+        // [0x40, 0x80, 0xc0] contiguous; 0x200 breaks the run; 0x240
+        // starts a new 2-line span.
+        let chain = vec![
+            at(Verb::WriteWT, 0x40, 0, 0),
+            at(Verb::WriteWT, 0x80, 0, 1),
+            at(Verb::WriteWT, 0xc0, 0, 2),
+            at(Verb::WriteWT, 0x200, 0, 3),
+            at(Verb::WriteWT, 0x240, 0, 4),
+        ];
+        let (out, combined) = coalesce_chain(CoalesceMode::Sg, chain);
+        assert_eq!(combined, 0, "sg drops nothing");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].lines(), 3);
+        assert_eq!(out[0].meta.addr, 0x40);
+        assert_eq!(out[0].tail[1].addr, 0xc0);
+        assert_eq!(out[1].lines(), 2);
+        assert_eq!(out[1].meta.addr, 0x200);
+        // Total lines conserved.
+        assert_eq!(out.iter().map(Wqe::lines).sum::<usize>(), 5);
+    }
+
+    #[test]
+    fn sg_respects_verb_and_adjacency_boundaries() {
+        // Contiguous addresses but a verb change (or a non-adjacent
+        // position in the chain) must not merge.
+        let chain = vec![
+            at(Verb::WriteWT, 0x40, 0, 0),
+            at(Verb::Write, 0x80, 0, 1),
+            at(Verb::WriteWT, 0xc0, 0, 2),
+        ];
+        let (out, _) = coalesce_chain(CoalesceMode::Sg, chain);
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|w| w.lines() == 1));
+        // Same line twice is NOT contiguous (next line != same line).
+        let chain = vec![at(Verb::WriteWT, 0x40, 0, 0), at(Verb::WriteWT, 0x40, 0, 1)];
+        let (out, _) = coalesce_chain(CoalesceMode::Sg, chain);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn full_combines_then_merges() {
+        // Hot header 0x40 rewritten around a contiguous append run:
+        // combine drops the first header write, then sg merges the
+        // append run [0x1000, 0x1040, 0x1080] into one span.
+        let chain = vec![
+            at(Verb::WriteWT, 0x40, 0, 0),
+            at(Verb::WriteWT, 0x1000, 0, 1),
+            at(Verb::WriteWT, 0x1040, 0, 2),
+            at(Verb::WriteWT, 0x1080, 0, 3),
+            at(Verb::WriteWT, 0x40, 0, 4),
+        ];
+        let (out, combined) = coalesce_chain(CoalesceMode::Full, chain);
+        assert_eq!(combined, 1);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].lines(), 3, "append run merged");
+        assert_eq!(out[0].meta.addr, 0x1000);
+        assert_eq!(out[1].meta.addr, 0x40);
+        assert_eq!(out[1].meta.seq, 4, "last writer survives");
+    }
+
+    #[test]
+    fn span_accessors_and_mean_span() {
+        let mut w = at(Verb::WriteNT, 0x40, 0, 0);
+        assert_eq!(w.lines(), 1);
+        w.tail.push(WriteMeta { addr: 0x80, ..w.meta });
+        assert_eq!(w.lines(), 2);
+        let metas: Vec<u64> = w.metas().map(|m| m.addr).collect();
+        assert_eq!(metas, vec![0x40, 0x80]);
+        assert_eq!(mean_span(0, 0), 0.0);
+        assert!((mean_span(6, 6) - 1.0).abs() < 1e-9);
+        assert!((mean_span(6, 2) - 3.0).abs() < 1e-9);
     }
 }

@@ -86,9 +86,17 @@ mod tests {
 
     #[test]
     fn factory_builds_all_fixed_strategies() {
-        for kind in StrategyKind::ALL {
+        // TABLE = the predictor-free fixed strategies; the full ALL set
+        // additionally carries SmAd, which the factory rejects without
+        // a predictor (covered below).
+        for kind in StrategyKind::TABLE {
             let s = make_strategy(kind, None).unwrap();
             assert_eq!(s.kind(), kind);
+        }
+        assert_eq!(StrategyKind::ALL.len(), StrategyKind::TABLE.len() + 1);
+        for kind in StrategyKind::ALL {
+            let s = make_strategy(kind, Some(Box::new(|_, _| (1.0, 2.0)))).unwrap();
+            assert_eq!(s.kind(), kind, "ALL must build with a predictor supplied");
         }
     }
 

@@ -129,6 +129,25 @@ pub fn run_transact_batched(
     Ok(run_transact_on(&mut mirror, cfg))
 }
 
+/// Run Transact with the staged pipeline under `batching` AND the
+/// flush-time coalescer under `mode` (see
+/// [`crate::net::wqe::CoalesceMode`]). Fails on an invalid replication
+/// config or a coalescing mode paired with an eager flush policy.
+pub fn run_transact_coalesced(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    batching: crate::net::FlushPolicy,
+    mode: crate::net::CoalesceMode,
+    cfg: TransactConfig,
+) -> Result<RunOutcome> {
+    crate::net::CoalescingConfig::new(mode).validate_with(batching)?;
+    let mut mirror = Mirror::try_build(plat.clone(), kind, None, repl, false)?;
+    mirror.set_batching(batching);
+    mirror.set_coalescing(mode);
+    Ok(run_transact_on(&mut mirror, cfg))
+}
+
 /// Run Transact against `sharding.shards` independent replica groups
 /// partitioning the PM line-address space (see
 /// [`crate::coordinator::shard`]); each shard gets the `repl` group
@@ -157,6 +176,73 @@ pub fn run_transact_sharded(
 pub fn run_transact_on(mirror: &mut Mirror, cfg: TransactConfig) -> RunOutcome {
     let mut sources: Vec<Box<dyn TxnSource>> = (0..cfg.threads)
         .map(|i| transact_source(cfg, i))
+        .collect();
+    run_threads(mirror, &mut sources)
+}
+
+/// Locality-heavy Transact variant: each epoch rewrites a hot header
+/// line `rewrites` times (same line, same epoch — the write-combining
+/// target) and then appends `writes` address-contiguous lines advancing
+/// through a per-thread region (the scatter-gather target) — the
+/// log-append-plus-header shape real PM logs produce, and the workload
+/// `fig10_coalescing` sweeps. Deterministic; no RNG.
+#[derive(Clone, Copy, Debug)]
+pub struct AppendConfig {
+    pub epochs: u32,
+    /// Contiguous lines appended per epoch.
+    pub writes: u32,
+    /// Hot header-line rewrites per epoch.
+    pub rewrites: u32,
+    pub txns: u64,
+    pub threads: usize,
+}
+
+impl Default for AppendConfig {
+    fn default() -> Self {
+        AppendConfig {
+            epochs: 2,
+            writes: 8,
+            rewrites: 2,
+            txns: 1_000,
+            threads: 1,
+        }
+    }
+}
+
+fn append_source(cfg: AppendConfig, thread: usize) -> Box<dyn TxnSource> {
+    let base: Addr = 0x6000_0000_0000 + thread as Addr * 0x1_0000_0000;
+    let header: Addr = base; // the hot line
+    let mut cursor: Addr = base + LINE; // append frontier
+    let mut done = 0u64;
+    Box::new(move |m: &mut Mirror, t: &mut crate::coordinator::ThreadCtx| {
+        if done >= cfg.txns {
+            return false;
+        }
+        m.txn_begin(t, None);
+        for _ in 0..cfg.epochs {
+            for r in 0..cfg.rewrites {
+                // The header tracks the frontier (last writer wins).
+                m.store(t, header, cursor + r as Addr);
+                m.clwb(t, header);
+            }
+            for _ in 0..cfg.writes {
+                m.store(t, cursor, done);
+                m.clwb(t, cursor);
+                cursor += LINE;
+            }
+            m.sfence(t);
+        }
+        m.txn_commit(t);
+        done += 1;
+        true
+    })
+}
+
+/// Run the append workload on a caller-built mirror (set batching /
+/// coalescing on it first).
+pub fn run_append_on(mirror: &mut Mirror, cfg: AppendConfig) -> RunOutcome {
+    let mut sources: Vec<Box<dyn TxnSource>> = (0..cfg.threads.max(1))
+        .map(|i| append_source(cfg, i))
         .collect();
     run_threads(mirror, &mut sources)
 }
@@ -338,6 +424,63 @@ mod tests {
         let stall = halted.stalled.expect("all + halt must stall");
         assert!(stall.at >= kill_at);
         assert!(halted.txns < cfg.txns, "halted run must stop early");
+    }
+
+    #[test]
+    fn append_workload_is_locality_heavy_and_coalesces() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::net::{CoalesceMode, FlushPolicy};
+        let p = Platform::default();
+        let cfg = AppendConfig {
+            epochs: 2,
+            writes: 8,
+            rewrites: 2,
+            txns: 20,
+            threads: 1,
+        };
+        let run = |mode: CoalesceMode| {
+            let mut m = Mirror::with_replication(
+                p.clone(),
+                StrategyKind::SmOb,
+                ReplicationConfig::new(2, AckPolicy::All),
+                false,
+            )
+            .unwrap();
+            m.set_batching(FlushPolicy::Fence);
+            m.set_coalescing(mode);
+            run_append_on(&mut m, cfg)
+        };
+        let none = run(CoalesceMode::None);
+        let full = run(CoalesceMode::Full);
+        assert_eq!(none.txns, 20);
+        // (8 appends + 2 rewrites) x 2 epochs x 20 txns x 2 backups.
+        assert_eq!(none.posted_wqes, 20 * 2 * 10 * 2);
+        assert_eq!(none.wire_wqes, none.posted_wqes);
+        assert_eq!(full.txns, none.txns);
+        assert!(full.wire_wqes < none.wire_wqes, "appends must merge");
+        assert!(full.combined_writes > 0, "header rewrites must combine");
+        assert!(full.mean_span() > 1.0);
+        // The coalesced-runner convenience rejects eager pairings.
+        assert!(run_transact_coalesced(
+            &p,
+            StrategyKind::SmOb,
+            ReplicationConfig::default(),
+            FlushPolicy::Eager,
+            CoalesceMode::Sg,
+            small(2, 1),
+        )
+        .is_err());
+        // ...and runs clean ones.
+        let out = run_transact_coalesced(
+            &p,
+            StrategyKind::SmOb,
+            ReplicationConfig::default(),
+            FlushPolicy::Fence,
+            CoalesceMode::Full,
+            small(2, 1),
+        )
+        .unwrap();
+        assert_eq!(out.txns, 200);
     }
 
     #[test]

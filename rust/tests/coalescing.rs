@@ -1,0 +1,494 @@
+//! Coalescing-equivalence suite for the flush-time coalescer
+//! (`net::wqe::coalesce_chain` / `Fabric::flush`): property tests
+//! asserting that scatter-gather merging changes *how* lines travel but
+//! never *what* persists (ledger event-identity vs `none`), that write
+//! combining preserves durable fence-point state, last-writer ledger
+//! entries and recovery verdicts while eliding only superseded
+//! same-epoch overwrites, and that `--coalesce none` is the bit-exact
+//! anchor of the PR-4 batching pipeline — plus the fault-interaction
+//! unit (a kill between stage and doorbell drops the whole chain, so a
+//! span never partially applies).
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, ShardMapSpec, ShardingConfig, ThreadCtx};
+use pmsm::net::{CoalesceMode, Fabric, FaultsConfig, FlushPolicy, OnLoss, WriteMeta};
+use pmsm::ptest::{check, Gen};
+use pmsm::recovery::{self, TxnHistory};
+use pmsm::sim::ThreadClock;
+use pmsm::txn::Txn;
+use pmsm::{Addr, Ns, LINE};
+use std::collections::HashMap;
+
+const MODES: [CoalesceMode; 4] = [
+    CoalesceMode::None,
+    CoalesceMode::Combine,
+    CoalesceMode::Sg,
+    CoalesceMode::Full,
+];
+
+/// One epoch of the randomized locality workload: `rewrites` hot-header
+/// writes, then `appends` contiguous lines, then `scatter` strided
+/// lines.
+#[derive(Clone, Copy, Debug)]
+struct Epoch {
+    rewrites: u32,
+    appends: u32,
+    scatter: u32,
+}
+
+/// Per-backup ledger projected to its replication-relevant coordinates
+/// (everything but the durability instant, which coalescing may move),
+/// in ledger (persist-record) order.
+fn ledger_events(m: &Mirror, backup: usize) -> Vec<(u32, u64, u64, u64, u32)> {
+    m.backup(backup)
+        .ledger
+        .events()
+        .iter()
+        .map(|e| (e.thread, e.seq, e.addr, e.val, e.epoch))
+        .collect()
+}
+
+/// Drive a deterministic locality-heavy workload (shape fixed by the
+/// caller, identical across modes) and return the mirror.
+fn drive(
+    kind: StrategyKind,
+    backups: usize,
+    policy: FlushPolicy,
+    mode: CoalesceMode,
+    txns: &[Vec<Epoch>],
+) -> Mirror {
+    let mut m = Mirror::with_replication(
+        Platform::default(),
+        kind,
+        ReplicationConfig::new(backups, AckPolicy::All),
+        true,
+    )
+    .unwrap();
+    m.set_batching(policy);
+    m.set_coalescing(mode);
+    let hot: Addr = 0x5000_0000;
+    let mut cursor: Addr = 0x5001_0000;
+    let mut t = ThreadCtx::new(0);
+    for (i, epochs) in txns.iter().enumerate() {
+        m.txn_begin(&mut t, None);
+        for e in epochs {
+            for r in 0..e.rewrites {
+                m.store(&mut t, hot, i as u64 * 100 + r as u64);
+                m.clwb(&mut t, hot);
+            }
+            for _ in 0..e.appends {
+                m.store(&mut t, cursor, i as u64);
+                m.clwb(&mut t, cursor);
+                cursor += LINE;
+            }
+            for s in 0..e.scatter {
+                // Stride-3 lines: never contiguous, never repeated.
+                let addr = 0x7000_0000 + (i as Addr * 16 + s as Addr) * 3 * LINE;
+                m.store(&mut t, addr, s as u64);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+        }
+        m.txn_commit(&mut t);
+    }
+    m
+}
+
+fn random_shape(g: &mut Gen) -> Vec<Vec<Epoch>> {
+    let txns = g.u64(1, 4);
+    (0..txns)
+        .map(|_| {
+            let epochs = g.u64(1, 4);
+            (0..epochs)
+                .map(|_| Epoch {
+                    rewrites: g.u64(0, 3) as u32,
+                    appends: g.u64(0, 5) as u32,
+                    scatter: g.u64(0, 2) as u32,
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Scatter-gather is transport-only: for random workloads under all
+/// three SM strategies, 1..3 backups and both staged policies, the
+/// per-backup ledgers are event-identical to the uncoalesced run —
+/// same events, same order, same coordinates; only instants (not
+/// checked here) and the wire-WQE count may change.
+#[test]
+fn prop_sg_ledgers_identical_to_none() {
+    check("coalescing-sg-identity", 25, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let backups = g.usize(1, 3);
+        let policy = *g.pick(&[FlushPolicy::Fence, FlushPolicy::Cap(4)]);
+        let shape = random_shape(g);
+        let none = drive(kind, backups, policy, CoalesceMode::None, &shape);
+        let sg = drive(kind, backups, policy, CoalesceMode::Sg, &shape);
+        for b in 0..backups {
+            assert_eq!(
+                ledger_events(&none, b),
+                ledger_events(&sg, b),
+                "{kind:?} backup {b}: sg changed ledger events"
+            );
+            recovery::check_epoch_ordering(&sg.backup(b).ledger)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        }
+        assert_eq!(sg.posted_wqes(), none.posted_wqes(), "sg drops nothing");
+        assert!(sg.wire_wqes() <= none.wire_wqes());
+        assert_eq!(sg.combined_writes(), 0);
+        assert!(sg.doorbells() <= sg.wire_wqes());
+    });
+}
+
+/// Write combining preserves everything recovery can see: the combined
+/// ledger is an ordered subsequence of the uncoalesced one, the final
+/// durable image per backup is identical, each line's last (highest
+/// seq) entry survives verbatim, per-thread epoch ordering holds, and
+/// the elided count exactly accounts for the posted-line delta.
+#[test]
+fn prop_combine_is_last_writer_subsequence() {
+    check("coalescing-combine-soundness", 25, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let backups = g.usize(1, 3);
+        let policy = *g.pick(&[FlushPolicy::Fence, FlushPolicy::Cap(4)]);
+        let mode = *g.pick(&[CoalesceMode::Combine, CoalesceMode::Full]);
+        let shape = random_shape(g);
+        let none = drive(kind, backups, policy, CoalesceMode::None, &shape);
+        let comb = drive(kind, backups, policy, mode, &shape);
+        for b in 0..backups {
+            let eager = ledger_events(&none, b);
+            let batched = ledger_events(&comb, b);
+            if kind == StrategyKind::SmRc {
+                // SM-RC's remote already coalesces pending same-line
+                // writes (keeping the FIRST insert's drain slot), so
+                // combining may legally permute the rcommit drain's
+                // record order within an epoch: assert set inclusion.
+                for ev in &batched {
+                    assert!(
+                        eager.contains(ev),
+                        "{kind:?} {mode} backup {b}: event {ev:?} absent \
+                         from the uncoalesced ledger"
+                    );
+                }
+            } else {
+                // Write-through strategies record in arrival order:
+                // batched is eager with some events elided, nothing
+                // reordered or invented (ordered subsequence).
+                let mut it = eager.iter();
+                for ev in &batched {
+                    assert!(
+                        it.any(|e| e == ev),
+                        "{kind:?} {mode} backup {b}: event {ev:?} missing or \
+                         out of order vs the uncoalesced ledger"
+                    );
+                }
+            }
+            // Identical final durable image.
+            assert_eq!(
+                none.backup(b).ledger.image_at(Ns::MAX),
+                comb.backup(b).ledger.image_at(Ns::MAX),
+                "{kind:?} {mode} backup {b}: durable image diverged"
+            );
+            // The last writer of every line survives verbatim.
+            let last = |evs: &[(u32, u64, u64, u64, u32)]| -> HashMap<u64, (u32, u64, u64)> {
+                let mut m = HashMap::new();
+                for &(th, seq, addr, val, _) in evs {
+                    m.insert(addr, (th, seq, val));
+                }
+                m
+            };
+            assert_eq!(last(&eager), last(&batched), "{kind:?} backup {b}");
+            recovery::check_epoch_ordering(&comb.backup(b).ledger)
+                .unwrap_or_else(|e| panic!("{kind:?} {mode}: {e}"));
+        }
+        // Elided lines account exactly for the wire delta.
+        assert_eq!(
+            none.posted_wqes() - comb.posted_wqes(),
+            comb.combined_writes(),
+            "{kind:?} {mode}: combined_writes must equal the posted delta"
+        );
+        assert!(comb.wire_wqes() <= comb.posted_wqes());
+    });
+}
+
+/// Run the undo-log transaction runtime and return (mirror, history).
+fn run_txn_workload(
+    kind: StrategyKind,
+    backups: usize,
+    mode: CoalesceMode,
+    faults: FaultsConfig,
+    sharding: ShardingConfig,
+    writes: &[Vec<(Addr, u64)>],
+) -> (Mirror, TxnHistory) {
+    let repl = ReplicationConfig::new(
+        backups,
+        if backups >= 3 { AckPolicy::Quorum(2) } else { AckPolicy::All },
+    );
+    let mut m = Mirror::try_build_sharded(
+        Platform::default(),
+        kind,
+        None,
+        repl,
+        faults,
+        sharding,
+        true,
+    )
+    .unwrap();
+    m.set_batching(FlushPolicy::Fence);
+    m.set_coalescing(mode);
+    let log = pmsm::pstore::log_base_for(0);
+    let mut t = ThreadCtx::new(0);
+    let mut hist = TxnHistory::new(Default::default());
+    let mut image: HashMap<Addr, u64> = HashMap::new();
+    for txn in writes {
+        let mut tx = Txn::begin(&mut m, &mut t, log, None);
+        for &(addr, val) in txn {
+            tx.write(&mut m, &mut t, addr, val);
+            image.insert(addr, val);
+        }
+        tx.commit(&mut m, &mut t);
+        if m.stall().is_some() {
+            break;
+        }
+        hist.commit(image.clone(), t.last_dfence);
+    }
+    m.settle(t.now());
+    (m, hist)
+}
+
+/// The recovery-verdict property: for random undo-log workloads under
+/// all three SM strategies and 1..3 backups, the full crash-point sweep
+/// (`check_group_crashes` — Guarantee-1 + group Guarantee-2) passes
+/// under every coalesce mode, commits the same transactions, and
+/// reaches the same durable data state.
+#[test]
+fn prop_recovery_verdicts_hold_across_modes() {
+    check("coalescing-recovery-verdicts", 12, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let backups = g.usize(1, 3);
+        let d0: Addr = 0x20_0000;
+        let data = [d0, d0 + 64, d0 + 128];
+        let txns = g.u64(2, 4);
+        let writes: Vec<Vec<(Addr, u64)>> = (0..txns)
+            .map(|i| {
+                let n = g.u64(1, 3);
+                (0..n)
+                    .map(|j| (*g.pick(&data), i * 10 + j))
+                    .collect()
+            })
+            .collect();
+        let log = pmsm::pstore::log_base_for(0);
+        let required = if backups >= 3 { 2 } else { backups };
+        let mut committed = None;
+        for mode in MODES {
+            let (m, hist) = run_txn_workload(
+                kind,
+                backups,
+                mode,
+                FaultsConfig::default(),
+                ShardingConfig::default(),
+                &writes,
+            );
+            assert!(m.stall().is_none());
+            // Same committed prefix in every mode.
+            let c = committed.get_or_insert(hist.committed());
+            assert_eq!(*c, hist.committed(), "{kind:?} {mode}");
+            assert_eq!(hist.committed() as u64, txns, "{kind:?} {mode}");
+            recovery::check_group_epoch_ordering(&m.fabric().ledgers())
+                .unwrap_or_else(|e| panic!("{kind:?} {mode}: {e}"));
+            recovery::check_group_crashes(
+                &m.fabric().ledgers(),
+                &hist,
+                &[log],
+                &data,
+                required,
+            )
+            .unwrap_or_else(|e| panic!("{kind:?} {mode} backups={backups}: {e}"));
+        }
+    });
+}
+
+/// Fault-aware + sharded variants of the verdict property: a mid-run
+/// backup kill (tolerated by quorum:2/degrade) and a 2-shard range
+/// split both keep `check_faulted_group_crashes` /
+/// `check_sharded_group_crashes` green under every coalesce mode.
+#[test]
+fn prop_recovery_verdicts_hold_faulted_and_sharded() {
+    check("coalescing-faulted-sharded-verdicts", 8, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let d0: Addr = 0x20_0000;
+        let data = [d0, d0 + 64];
+        let txns = g.u64(2, 4);
+        let writes: Vec<Vec<(Addr, u64)>> = (0..txns)
+            .map(|i| vec![(d0, 100 + i), (d0 + 64, 200 + i)])
+            .collect();
+        let log = pmsm::pstore::log_base_for(0);
+        let kill_at = g.u64(1_000, 80_000);
+        for mode in MODES {
+            // Faulted: 3 backups, quorum:2, one kill mid-run, degrade.
+            let faults = FaultsConfig::with_plan(
+                &format!("kill:2@{kill_at}"),
+                OnLoss::Degrade,
+            )
+            .unwrap();
+            let (m, hist) = run_txn_workload(
+                kind,
+                3,
+                mode,
+                faults,
+                ShardingConfig::default(),
+                &writes,
+            );
+            assert!(m.stall().is_none(), "{kind:?} {mode}: quorum:2 tolerates it");
+            assert_eq!(hist.committed() as u64, txns);
+            recovery::check_faulted_group_crashes(
+                &m.fabric().ledgers(),
+                &hist,
+                &[log],
+                &data,
+                2,
+                OnLoss::Degrade,
+                &m.fabric().timeline(),
+            )
+            .unwrap_or_else(|e| panic!("{kind:?} {mode} faulted: {e}"));
+            // Sharded: adjacent data lines split across 2 range shards.
+            let sharding = ShardingConfig::new(2, ShardMapSpec::Range { stripe_lines: 1 });
+            let (m, hist) = run_txn_workload(
+                kind,
+                2,
+                mode,
+                FaultsConfig::default(),
+                sharding,
+                &writes,
+            );
+            assert!(m.stall().is_none());
+            recovery::check_sharded_group_crashes(
+                &m.shard_ledgers(),
+                &m.timelines(),
+                &hist,
+                &[log],
+                &data,
+                2,
+                OnLoss::Halt,
+                m.shard_map(),
+            )
+            .unwrap_or_else(|e| panic!("{kind:?} {mode} sharded: {e}"));
+        }
+    });
+}
+
+/// The anchor, end-to-end: a fence-batched run with `--coalesce none`
+/// is event-for-event identical to one that never touched the
+/// coalescing API — same thread timeline, ledgers and counters. And a
+/// workload with no adjacency and no rewrites is a fixpoint of every
+/// mode: even `full` reproduces the anchor timeline bit-exactly.
+#[test]
+fn coalesce_none_and_fixpoint_workloads_are_bit_exact() {
+    let shape = vec![vec![
+        Epoch { rewrites: 0, appends: 0, scatter: 4 },
+        Epoch { rewrites: 0, appends: 0, scatter: 3 },
+    ]];
+    let run = |mode: Option<CoalesceMode>| -> (Ns, Vec<(u32, u64, u64, u64, u32)>, u64, u64) {
+        let mut m = Mirror::with_replication(
+            Platform::default(),
+            StrategyKind::SmOb,
+            ReplicationConfig::new(2, AckPolicy::All),
+            true,
+        )
+        .unwrap();
+        m.set_batching(FlushPolicy::Fence);
+        if let Some(mode) = mode {
+            m.set_coalescing(mode);
+        }
+        let hot: Addr = 0x5000_0000;
+        let mut cursor: Addr = 0x5001_0000;
+        let mut t = ThreadCtx::new(0);
+        for epochs in &shape {
+            m.txn_begin(&mut t, None);
+            for e in epochs {
+                for r in 0..e.rewrites {
+                    m.store(&mut t, hot, r as u64);
+                    m.clwb(&mut t, hot);
+                }
+                for _ in 0..e.appends {
+                    m.store(&mut t, cursor, 1);
+                    m.clwb(&mut t, cursor);
+                    cursor += LINE;
+                }
+                for s in 0..e.scatter {
+                    let addr = 0x7000_0000 + s as Addr * 3 * LINE;
+                    m.store(&mut t, addr, s as u64);
+                    m.clwb(&mut t, addr);
+                }
+                m.sfence(&mut t);
+            }
+            m.txn_commit(&mut t);
+        }
+        (t.now(), ledger_events(&m, 0), m.wire_wqes(), m.doorbells())
+    };
+    let plain = run(None);
+    let none = run(Some(CoalesceMode::None));
+    assert_eq!(plain, none, "None must be the untouched batching pipeline");
+    for mode in [CoalesceMode::Combine, CoalesceMode::Sg, CoalesceMode::Full] {
+        let out = run(Some(mode));
+        assert_eq!(
+            plain, out,
+            "{mode}: a rewrite-free, adjacency-free workload must be a \
+             fixpoint — bit-exact timeline included"
+        );
+    }
+}
+
+/// A backup killed between stage and doorbell loses its whole chain
+/// before coalescing runs: survivors receive their full coalesced
+/// chains (spans intact), the corpse's ledger shows nothing — a span
+/// never partially applies across a kill.
+#[test]
+fn kill_between_stage_and_doorbell_drops_whole_coalesced_chain() {
+    let p = Platform::default();
+    let faults = FaultsConfig::with_plan("kill:1@2000", OnLoss::Halt).unwrap();
+    let mut f = Fabric::with_faults(
+        &p,
+        &ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+        faults,
+        true,
+    )
+    .with_batching(FlushPolicy::Fence)
+    .with_coalescing(CoalesceMode::Full);
+    let mut t = ThreadClock::new(0);
+    // A hot rewrite + a contiguous run, staged before the kill instant.
+    for s in 0..2u64 {
+        f.post_write_wt(
+            &mut t,
+            WriteMeta { addr: 0x40, val: s, thread: 0, txn: 0, epoch: 0, seq: s },
+        );
+    }
+    for s in 0..4u64 {
+        f.post_write_wt(
+            &mut t,
+            WriteMeta {
+                addr: 0x1000 + 0x40 * s,
+                val: s,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: 2 + s,
+            },
+        );
+    }
+    assert!(t.now < 2_000, "staging must predate the kill, t={}", t.now);
+    t.wait_until(3_000);
+    f.rdfence(&mut t);
+    assert!(f.stall().is_none(), "quorum:2 tolerates the loss");
+    for b in [0usize, 2] {
+        // 1 surviving hot line + 4 appends per survivor.
+        assert_eq!(f.backup(b).ledger.len(), 5, "survivor {b}");
+    }
+    assert_eq!(f.backup(1).ledger.len(), 0, "dead backup saw a staged WQE");
+    assert_eq!(f.staged_pending(), 0, "dropped WQEs must not linger");
+    // Survivors' chains coalesced: 2 wire WQEs each (hot + 4-line span)
+    // and one elided hot overwrite each.
+    assert_eq!(f.wire_wqes_total(), 4);
+    assert_eq!(f.combined_writes, 2);
+    assert_eq!(f.span_hist().max(), 4);
+}

@@ -34,7 +34,10 @@ fn backups1_all_reproduces_single_backup_for_all_strategies() {
     let repl = ReplicationConfig::default();
     assert_eq!(repl.backups, 1);
     assert_eq!(repl.ack_policy, AckPolicy::All);
-    for kind in StrategyKind::ALL {
+    // TABLE = the predictor-free fixed strategies; SM-AD (the fifth
+    // member of StrategyKind::ALL) runs right after with an explicit
+    // predictor on both paths.
+    for kind in StrategyKind::TABLE {
         let c = cfg(4, 2, 100);
         let classic = run_transact(&p, kind, c);
         let grouped = run_transact_with(&p, kind, None, repl, c).unwrap();
