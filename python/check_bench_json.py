@@ -10,11 +10,16 @@ in stdout.
 
 Usage:
     python3 python/check_bench_json.py DIR_OR_FILE [...]
-        [--expect name1,name2,...]
+        [--expect name1,name2,...] [--compare BASELINE_DIR]
 
 Exit code 0 when every document passes; 1 otherwise, with one line per
 problem. --expect asserts that BENCH_<name>.json exists for each listed
-bench (catching a bench that silently failed to emit).
+bench (catching a bench that silently failed to emit). --compare checks
+the run's counters against checked-in baseline artifacts (same file
+names, results matched by name) and fails on a >10% regression in
+busy_ns or wire_wqes; benches or results with no baseline counterpart
+are skipped, so freshly added benches don't block until their baseline
+lands.
 """
 
 from __future__ import annotations
@@ -41,6 +46,9 @@ COUNTER_KEYS = (
     "wire_wqes",
     "combined_writes",
     "busy_ns",
+    "fences_issued",
+    "fence_piggybacks",
+    "txns_committed",
 )
 BENCHES_REQUIRING_COUNTERS = {
     "fig9_batching": ("doorbells", "posted_wqes", "busy_ns"),
@@ -51,7 +59,18 @@ BENCHES_REQUIRING_COUNTERS = {
         "combined_writes",
         "busy_ns",
     ),
+    "fig11_concurrency": (
+        "fences_issued",
+        "fence_piggybacks",
+        "txns_committed",
+        "busy_ns",
+    ),
 }
+
+# Counters compared against checked-in baselines under --compare; a
+# current value more than REGRESSION_TOLERANCE above the baseline fails.
+REGRESSION_KEYS = ("busy_ns", "wire_wqes")
+REGRESSION_TOLERANCE = 0.10
 
 
 def _is_finite_number(x) -> bool:
@@ -109,6 +128,14 @@ def check_result(
             f"{where}: doorbells ({doorbells}) exceed wire_wqes ({wire}) — "
             "every doorbell launches at least one wire WQE"
         )
+    fences = result.get("fences_issued")
+    txns = result.get("txns_committed")
+    if isinstance(fences, int) and isinstance(txns, int) and fences > txns:
+        errors.append(
+            f"{where}: fences_issued ({fences}) exceed txns_committed ({txns}) — "
+            "a commit blocks on at most one issued fence, so group fencing "
+            "can only push fences/txn below 1"
+        )
     return errors
 
 
@@ -142,6 +169,61 @@ def check_document(path: Path) -> list[str]:
     return errors
 
 
+def compare_against_baseline(files: list[Path], baseline_dir: str) -> list[str]:
+    """Flag >REGRESSION_TOLERANCE regressions in REGRESSION_KEYS against
+    the checked-in baseline artifacts. Results are matched by (file
+    name, result name); anything without a baseline counterpart is
+    skipped so a new bench doesn't fail until its baseline is committed.
+    """
+    base = Path(baseline_dir)
+    if not base.is_dir():
+        return [f"--compare: baseline directory {baseline_dir!r} does not exist"]
+    errors: list[str] = []
+    compared = 0
+    for f in files:
+        bpath = base / f.name
+        if not bpath.exists():
+            continue
+        try:
+            cur = json.loads(f.read_text())
+            old = json.loads(bpath.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"--compare: unreadable baseline pair for {f.name}: {e}")
+            continue
+        old_results = {
+            r.get("name"): r
+            for r in old.get("results", [])
+            if isinstance(r, dict) and isinstance(r.get("name"), str)
+        }
+        for r in cur.get("results", []):
+            if not isinstance(r, dict):
+                continue
+            o = old_results.get(r.get("name"))
+            if not isinstance(o, dict):
+                continue
+            for key in REGRESSION_KEYS:
+                cv, ov = r.get(key), o.get(key)
+                if not (isinstance(cv, int) and not isinstance(cv, bool)):
+                    continue
+                if not (isinstance(ov, int) and not isinstance(ov, bool)) or ov <= 0:
+                    continue
+                compared += 1
+                if cv > ov * (1.0 + REGRESSION_TOLERANCE):
+                    errors.append(
+                        f"{f}: {r['name']}: {key} regressed {ov} -> {cv} "
+                        f"(+{(cv / ov - 1.0) * 100.0:.1f}%, limit "
+                        f"{REGRESSION_TOLERANCE * 100.0:.0f}%) vs {bpath}"
+                    )
+    if compared == 0 and not errors:
+        # Informational only: until the first real bench run commits its
+        # baselines, there is nothing to regress against.
+        print(
+            f"check_bench_json: --compare found no overlapping counters "
+            f"under {baseline_dir!r}; skipping regression gate"
+        )
+    return errors
+
+
 def collect(paths: list[str]) -> list[Path]:
     files: list[Path] = []
     for raw in paths:
@@ -162,6 +244,14 @@ def main(argv: list[str]) -> int:
         help="comma-separated bench names that must be present (e.g. "
         "fig4_transact,fig8_shards)",
     )
+    parser.add_argument(
+        "--compare",
+        default="",
+        metavar="BASELINE_DIR",
+        help="directory of checked-in baseline BENCH_*.json artifacts; "
+        f"fail on a >{REGRESSION_TOLERANCE:.0%} regression in "
+        f"{'/'.join(REGRESSION_KEYS)} (results matched by name)",
+    )
     args = parser.parse_args(argv)
 
     files = collect(args.paths)
@@ -177,6 +267,9 @@ def main(argv: list[str]) -> int:
 
     for f in files:
         errors.extend(check_document(f))
+
+    if args.compare:
+        errors.extend(compare_against_baseline(files, args.compare))
 
     if errors:
         for e in errors:

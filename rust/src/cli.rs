@@ -13,7 +13,7 @@
 //!   * `selftest` — Table 1 + quick invariant checks.
 
 use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, StrategyKind};
-use crate::coordinator::{Mirror, ShardingConfig};
+use crate::coordinator::{ConcurrencyConfig, Mirror, ShardingConfig};
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
 use crate::metrics::{GroupReport, ShardedReport};
 use crate::net::{
@@ -112,13 +112,14 @@ pub fn help_text() -> &'static str {
                  [--shards S --shard-map modulo|range|range:LINES]\n\
                  [--flush-policy eager|cap:K|fence --batch-cap K]\n\
                  [--coalesce none|combine|sg|full]\n\
+                 [--commit-pipelines N --group-fence-ns N]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
        recover   failure injection + recovery check [--strategy S --txns N]\n\
                  [--backups N --ack-policy P --fault-plan SPEC --on-loss M]\n\
                  [--shards S --shard-map M --flush-policy P --batch-cap K]\n\
-                 [--coalesce M]\n\
+                 [--coalesce M --commit-pipelines N --group-fence-ns N]\n\
                  (cross-replica ledger check; fault-aware when a plan is\n\
                  set; per-shard checks + cross-shard merge when sharded)\n\
        config    print platform model parameters (Table 2)\n\
@@ -150,6 +151,17 @@ pub fn help_text() -> &'static str {
      still persists individually on the backup); full = both; none =\n\
      the plain batching pipeline, event-for-event.\n\
      \n\
+     CONCURRENCY: --commit-pipelines P runs P concurrent commit\n\
+     pipelines per shard; threads are admitted pipeline id % P and\n\
+     queue (blocked, not busy) while their pipeline drains. P=1 with a\n\
+     group-fence window models the serial primary under the gated\n\
+     path; P=1 with window 0 is the legacy loop, event-for-event.\n\
+     --group-fence-ns W lets a durability fence issued within W ns of\n\
+     the previous one piggyback on it: the requester skips the post\n\
+     cost and issue slots but the responder still drains and persists,\n\
+     and the ack policy applies unchanged, so per-txn durability acks\n\
+     are never weakened. CLI flags override [concurrency] config.\n\
+     \n\
      FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
      backup B at virtual time T (ns). Killed backups leave fan-out and\n\
      ack accounting; --on-loss halt stops at an unsatisfiable fence\n\
@@ -167,87 +179,101 @@ fn platform_from(args: &Args) -> Result<Platform> {
     }
 }
 
+/// Everything a run-style command needs from `--config` + CLI
+/// overrides, as one named bundle (it was a 6-tuple once; new knobs
+/// land here instead of rippling through every call site).
+#[derive(Clone, Debug)]
+pub struct RunSetup {
+    pub plat: Platform,
+    pub repl: ReplicationConfig,
+    pub faults: FaultsConfig,
+    pub sharding: ShardingConfig,
+    pub batching: BatchingConfig,
+    pub coalescing: CoalescingConfig,
+    pub concurrency: ConcurrencyConfig,
+}
+
 /// Platform + replica-group shape + failure dynamics + sharding +
-/// batching + coalescing: `--config` supplies all six (via the
-/// `[replication]` / `[faults]` / `[sharding]` / `[batching]` /
-/// `[coalescing]` sections); `--backups` / `--ack-policy` /
-/// `--fault-plan` / `--on-loss` / `--handoff-ns` / `--resync-line-ns` /
-/// `--shards` / `--shard-map` / `--flush-policy` / `--batch-cap` /
-/// `--coalesce` override.
-#[allow(clippy::type_complexity)]
-fn setup_from(
-    args: &Args,
-) -> Result<(
-    Platform,
-    ReplicationConfig,
-    FaultsConfig,
-    ShardingConfig,
-    BatchingConfig,
-    CoalescingConfig,
-)> {
-    let (plat, mut repl, mut faults, mut sharding, mut batching, mut coalescing) =
-        match args.get("config") {
-            Some(path) => {
-                let e = Experiment::from_file(path)?;
-                (
-                    e.platform,
-                    e.replication,
-                    e.faults,
-                    e.sharding,
-                    e.batching,
-                    e.coalescing,
-                )
+/// batching + coalescing + concurrency: `--config` supplies all seven
+/// (via the `[replication]` / `[faults]` / `[sharding]` / `[batching]`
+/// / `[coalescing]` / `[concurrency]` sections); `--backups` /
+/// `--ack-policy` / `--fault-plan` / `--on-loss` / `--handoff-ns` /
+/// `--resync-line-ns` / `--shards` / `--shard-map` / `--flush-policy`
+/// / `--batch-cap` / `--coalesce` / `--commit-pipelines` /
+/// `--group-fence-ns` override.
+fn setup_from(args: &Args) -> Result<RunSetup> {
+    let mut s = match args.get("config") {
+        Some(path) => {
+            let e = Experiment::from_file(path)?;
+            RunSetup {
+                plat: e.platform,
+                repl: e.replication,
+                faults: e.faults,
+                sharding: e.sharding,
+                batching: e.batching,
+                coalescing: e.coalescing,
+                concurrency: e.concurrency,
             }
-            None => (
-                Platform::default(),
-                ReplicationConfig::default(),
-                FaultsConfig::default(),
-                ShardingConfig::default(),
-                BatchingConfig::default(),
-                CoalescingConfig::default(),
-            ),
-        };
+        }
+        None => RunSetup {
+            plat: Platform::default(),
+            repl: ReplicationConfig::default(),
+            faults: FaultsConfig::default(),
+            sharding: ShardingConfig::default(),
+            batching: BatchingConfig::default(),
+            coalescing: CoalescingConfig::default(),
+            concurrency: ConcurrencyConfig::default(),
+        },
+    };
     if let Some(b) = args.get("backups") {
-        repl.backups = b.parse().with_context(|| format!("--backups {b}"))?;
+        s.repl.backups = b.parse().with_context(|| format!("--backups {b}"))?;
     }
-    if let Some(s) = args.get("ack-policy") {
-        repl.ack_policy = s.parse::<AckPolicy>().context("--ack-policy")?;
+    if let Some(v) = args.get("ack-policy") {
+        s.repl.ack_policy = v.parse::<AckPolicy>().context("--ack-policy")?;
     }
-    if let Some(s) = args.get("fault-plan") {
-        faults.plan = s.parse().context("--fault-plan")?;
+    if let Some(v) = args.get("fault-plan") {
+        s.faults.plan = v.parse().context("--fault-plan")?;
     }
-    if let Some(s) = args.get("on-loss") {
-        faults.on_loss = s.parse().context("--on-loss")?;
+    if let Some(v) = args.get("on-loss") {
+        s.faults.on_loss = v.parse().context("--on-loss")?;
     }
-    faults.handoff_ns = args.get_u64("handoff-ns", faults.handoff_ns)?;
-    faults.resync_line_ns = args.get_u64("resync-line-ns", faults.resync_line_ns)?;
-    if let Some(s) = args.get("shards") {
-        sharding.shards = s
+    s.faults.handoff_ns = args.get_u64("handoff-ns", s.faults.handoff_ns)?;
+    s.faults.resync_line_ns = args.get_u64("resync-line-ns", s.faults.resync_line_ns)?;
+    if let Some(v) = args.get("shards") {
+        s.sharding.shards = v
             .parse()
-            .with_context(|| format!("--shards {s} (must be a count >= 1)"))?;
+            .with_context(|| format!("--shards {v} (must be a count >= 1)"))?;
     }
-    if let Some(s) = args.get("shard-map") {
-        sharding.map = s.parse().context("--shard-map")?;
+    if let Some(v) = args.get("shard-map") {
+        s.sharding.map = v.parse().context("--shard-map")?;
     }
-    if let Some(s) = args.get("flush-policy") {
-        batching.policy = s.parse::<FlushPolicy>().context("--flush-policy")?;
+    if let Some(v) = args.get("flush-policy") {
+        s.batching.policy = v.parse::<FlushPolicy>().context("--flush-policy")?;
     }
-    if let Some(s) = args.get("batch-cap") {
+    if let Some(v) = args.get("batch-cap") {
         // Shorthand for --flush-policy cap:K (wins when both are given).
-        let k: usize = s
+        let k: usize = v
             .parse()
-            .with_context(|| format!("--batch-cap {s} (must be a count >= 1)"))?;
-        batching.policy = FlushPolicy::Cap(k);
+            .with_context(|| format!("--batch-cap {v} (must be a count >= 1)"))?;
+        s.batching.policy = FlushPolicy::Cap(k);
     }
-    if let Some(s) = args.get("coalesce") {
-        coalescing.mode = s.parse::<CoalesceMode>().context("--coalesce")?;
+    if let Some(v) = args.get("coalesce") {
+        s.coalescing.mode = v.parse::<CoalesceMode>().context("--coalesce")?;
     }
-    repl.validate()?;
-    faults.validate(repl.backups)?;
-    sharding.validate()?;
-    batching.validate()?;
-    coalescing.validate_with(batching.policy)?;
-    Ok((plat, repl, faults, sharding, batching, coalescing))
+    if let Some(v) = args.get("commit-pipelines") {
+        s.concurrency.commit_pipelines = v
+            .parse()
+            .with_context(|| format!("--commit-pipelines {v} (must be a count >= 1)"))?;
+    }
+    s.concurrency.group_fence_ns =
+        args.get_u64("group-fence-ns", s.concurrency.group_fence_ns)?;
+    s.repl.validate()?;
+    s.faults.validate(s.repl.backups)?;
+    s.sharding.validate()?;
+    s.batching.validate()?;
+    s.coalescing.validate_with(s.batching.policy)?;
+    s.concurrency.validate()?;
+    Ok(s)
 }
 
 /// A predictor for `SmAd` (PJRT model if the artifacts load, else the
@@ -266,7 +292,15 @@ fn predictor_for(plat: &Platform, strategy: StrategyKind) -> Result<Option<Predi
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let (plat, repl, faults, sharding, batching, coalescing) = setup_from(args)?;
+    let RunSetup {
+        plat,
+        repl,
+        faults,
+        sharding,
+        batching,
+        coalescing,
+        concurrency,
+    } = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
     let threads = args.get_usize("threads", 1)?;
@@ -305,6 +339,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         };
         println!("coalescing: {} ({what}{span_cost})", coalescing.mode);
     }
+    if concurrency.enabled() {
+        println!(
+            "concurrency: {} commit pipeline(s) per shard, group-fence \
+             window {} ns",
+            concurrency.commit_pipelines, concurrency.group_fence_ns
+        );
+    }
     let mut mirror = Mirror::try_build_sharded(
         plat.clone(),
         strategy,
@@ -316,6 +357,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     )?;
     mirror.set_batching(batching.policy);
     mirror.set_coalescing(coalescing.mode);
+    mirror.set_concurrency(concurrency);
 
     let outcome = if workload == "transact" {
         let cfg = TransactConfig {
@@ -374,6 +416,22 @@ fn cmd_run(args: &Args) -> Result<()> {
         outcome.mean_span(),
         outcome.combined_writes
     );
+    if concurrency.enabled() {
+        println!(
+            "  fences        : {} issued + {} piggybacked ({:.2}/txn)",
+            outcome.fences_issued,
+            outcome.fence_piggybacks,
+            outcome.fences_per_txn()
+        );
+        println!(
+            "  pipelines     : {} per shard, {} waits ({:.3} ms queued, \
+             occupancy {:.3})",
+            outcome.commit_pipelines,
+            outcome.pipeline_waits,
+            outcome.pipeline_wait_ns as f64 / 1e6,
+            outcome.pipeline_occupancy()
+        );
+    }
     if let Some(stall) = &outcome.stalled {
         println!("  STALL         : {stall}");
         if stall.on_loss == OnLoss::Halt {
@@ -586,7 +644,15 @@ fn cmd_analytic(args: &Args) -> Result<()> {
 }
 
 fn cmd_recover(args: &Args) -> Result<()> {
-    let (plat, repl, faults, sharding, batching, coalescing) = setup_from(args)?;
+    let RunSetup {
+        plat,
+        repl,
+        faults,
+        sharding,
+        batching,
+        coalescing,
+        concurrency,
+    } = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
     use crate::coordinator::ThreadCtx;
@@ -598,6 +664,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
         Mirror::try_build_sharded(plat, strategy, None, repl, faults, sharding, true)?;
     m.set_batching(batching.policy);
     m.set_coalescing(coalescing.mode);
+    m.set_concurrency(concurrency);
     let mut t = ThreadCtx::new(0);
     let log = crate::pstore::log_base_for(0);
     let d0 = 0x20_0000u64;
@@ -864,7 +931,7 @@ mod tests {
         .unwrap();
         let path = path.to_str().unwrap();
         let a = Args::parse(&argv(&["run", "--config", path, "--shards", "4"]));
-        let (_, _, _, sharding, _, _) = setup_from(&a).unwrap();
+        let sharding = setup_from(&a).unwrap().sharding;
         assert_eq!(sharding.shards, 4, "--shards overrides the TOML");
         assert_eq!(
             sharding.map,
@@ -873,11 +940,11 @@ mod tests {
         );
         // No override: the file's shape wins entirely.
         let a = Args::parse(&argv(&["run", "--config", path]));
-        let (_, _, _, sharding, _, _) = setup_from(&a).unwrap();
+        let sharding = setup_from(&a).unwrap().sharding;
         assert_eq!(sharding.shards, 2);
         // `--shard-map` overrides the file's map.
         let a = Args::parse(&argv(&["run", "--config", path, "--shard-map", "modulo"]));
-        let (_, _, _, sharding, _, _) = setup_from(&a).unwrap();
+        let sharding = setup_from(&a).unwrap().sharding;
         assert_eq!(sharding.map, ShardMapSpec::Modulo);
         std::fs::remove_file(path).ok();
     }
@@ -944,7 +1011,7 @@ mod tests {
         // --batch-cap is the more specific knob: it wins over
         // --flush-policy, mirroring the TOML precedence.
         let a = Args::parse(&argv(&["run", "--flush-policy", "fence", "--batch-cap", "8"]));
-        let (_, _, _, _, batching, _) = setup_from(&a).unwrap();
+        let batching = setup_from(&a).unwrap().batching;
         assert_eq!(batching.policy, FlushPolicy::Cap(8));
     }
 
@@ -979,7 +1046,7 @@ mod tests {
         );
         // A valid pairing parses to the requested mode.
         let a = Args::parse(&argv(&["run", "--flush-policy", "fence", "--coalesce", "combine"]));
-        let (_, _, _, _, _, coalescing) = setup_from(&a).unwrap();
+        let coalescing = setup_from(&a).unwrap().coalescing;
         assert_eq!(coalescing.mode, CoalesceMode::Combine);
     }
 
@@ -999,6 +1066,75 @@ mod tests {
         main_with_args(&argv(&[
             "recover", "--strategy", "sm-dd", "--txns", "3", "--shards", "2",
             "--shard-map", "range:1", "--flush-policy", "fence", "--coalesce", "full",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn cli_concurrency_flags_roundtrip() {
+        // Flags land in the RunSetup bundle.
+        let a = Args::parse(&argv(&[
+            "run", "--commit-pipelines", "4", "--group-fence-ns", "2600",
+        ]));
+        let conc = setup_from(&a).unwrap().concurrency;
+        assert_eq!(conc.commit_pipelines, 4);
+        assert_eq!(conc.group_fence_ns, 2600);
+        assert!(conc.enabled());
+        // Defaults are the serial primary: disabled.
+        let conc = setup_from(&Args::parse(&argv(&["run"]))).unwrap().concurrency;
+        assert_eq!(conc, ConcurrencyConfig::default());
+        assert!(!conc.enabled());
+        // CLI overrides the [concurrency] config table.
+        let dir = std::env::temp_dir().join("pmsm_cli_concurrency_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[concurrency]\ncommit_pipelines = 2\ngroup_fence_ns = 500\n",
+        )
+        .unwrap();
+        let path = path.to_str().unwrap();
+        let a = Args::parse(&argv(&["run", "--config", path, "--commit-pipelines", "8"]));
+        let conc = setup_from(&a).unwrap().concurrency;
+        assert_eq!(conc.commit_pipelines, 8, "--commit-pipelines overrides the TOML");
+        assert_eq!(conc.group_fence_ns, 500, "window keeps the TOML value");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_rejects_invalid_concurrency() {
+        let err = setup_from(&Args::parse(&argv(&["run", "--commit-pipelines", "0"])))
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("commit_pipelines must be >= 1"),
+            "{err:#}"
+        );
+        assert!(
+            setup_from(&Args::parse(&argv(&["run", "--commit-pipelines", "-2"]))).is_err()
+        );
+        assert!(
+            setup_from(&Args::parse(&argv(&["run", "--group-fence-ns", "-1"]))).is_err()
+        );
+    }
+
+    #[test]
+    fn run_command_concurrency_smoke() {
+        // Pipelined + group-fenced commit completes across threads,
+        // backups and shards.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "40", "--threads", "4",
+            "--commit-pipelines", "2", "--group-fence-ns", "2600", "--backups", "2",
+        ]))
+        .unwrap();
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "20", "--threads", "2",
+            "--shards", "2", "--commit-pipelines", "2",
+        ]))
+        .unwrap();
+        // recover path applies the knobs too.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-ob", "--txns", "4", "--backups", "2",
+            "--group-fence-ns", "2600",
         ]))
         .unwrap();
     }

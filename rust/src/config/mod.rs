@@ -11,6 +11,7 @@ pub mod toml;
 
 pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 
+use crate::coordinator::pipeline::ConcurrencyConfig;
 use crate::coordinator::shard::ShardingConfig;
 use crate::net::faults::FaultsConfig;
 use crate::net::wqe::{BatchingConfig, CoalescingConfig, FlushPolicy};
@@ -50,6 +51,10 @@ pub struct Experiment {
     /// doorbell-batching pipeline untouched. Any other mode requires a
     /// staged flush policy in `[batching]`).
     pub coalescing: CoalescingConfig,
+    /// Concurrent-primary shape (`[concurrency]` section: commit
+    /// pipelines per shard + cross-thread group-fence window; defaults
+    /// to one pipeline and no window — the serial commit path).
+    pub concurrency: ConcurrencyConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -71,6 +76,7 @@ impl Default for Experiment {
             sharding: ShardingConfig::default(),
             batching: BatchingConfig::default(),
             coalescing: CoalescingConfig::default(),
+            concurrency: ConcurrencyConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -170,6 +176,23 @@ impl Experiment {
         exp.coalescing
             .validate_with(exp.batching.policy)
             .context("invalid [coalescing] section")?;
+        if let Some(v) = doc.get("concurrency.commit_pipelines") {
+            let n = v.as_int()?;
+            if n < 1 {
+                bail!("concurrency.commit_pipelines must be >= 1, got {n}");
+            }
+            exp.concurrency.commit_pipelines = n as usize;
+        }
+        if let Some(v) = doc.get("concurrency.group_fence_ns") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("concurrency.group_fence_ns must be >= 0, got {n}");
+            }
+            exp.concurrency.group_fence_ns = n as u64;
+        }
+        exp.concurrency
+            .validate()
+            .context("invalid [concurrency] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -478,6 +501,38 @@ map = "range:2048"
         .is_err());
         // mode = none composes with anything.
         assert!(Experiment::from_str("[coalescing]\nmode = \"none\"").is_ok());
+    }
+
+    #[test]
+    fn concurrency_section_roundtrip() {
+        let text = r#"
+[concurrency]
+commit_pipelines = 4
+group_fence_ns = 2600
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.concurrency, ConcurrencyConfig::new(4, 2600));
+        assert!(exp.concurrency.enabled());
+    }
+
+    #[test]
+    fn concurrency_defaults_to_serial_when_section_missing() {
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.concurrency, ConcurrencyConfig::default());
+        assert!(!exp.concurrency.enabled());
+    }
+
+    #[test]
+    fn concurrency_section_rejects_bad_shapes() {
+        let err =
+            Experiment::from_str("[concurrency]\ncommit_pipelines = 0").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("commit_pipelines must be >= 1"),
+            "{err:#}"
+        );
+        assert!(Experiment::from_str("[concurrency]\ncommit_pipelines = -2").is_err());
+        assert!(Experiment::from_str("[concurrency]\ncommit_pipelines = 65").is_err());
+        assert!(Experiment::from_str("[concurrency]\ngroup_fence_ns = -1").is_err());
     }
 
     #[test]

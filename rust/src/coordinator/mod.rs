@@ -30,9 +30,11 @@
 //! across shards (DESIGN.md §Sharding). Multi-threaded workloads are
 //! executed by the conservative min-clock scheduler in [`sched`].
 
+pub mod pipeline;
 pub mod sched;
 pub mod shard;
 
+pub use pipeline::{ConcurrencyConfig, MAX_PIPELINES};
 pub use shard::{ShardMap, ShardMapSpec, ShardingConfig};
 
 use crate::config::{Platform, ReplicationConfig, StrategyKind};
@@ -142,6 +144,21 @@ pub struct Mirror {
     kind: StrategyKind,
     repl: ReplicationConfig,
     sharding: ShardingConfig,
+    /// Concurrent-primary shape (commit pipelines + group-fence window;
+    /// the default is the serial anchor — see [`pipeline`]).
+    conc: ConcurrencyConfig,
+    /// Per-shard, per-pipeline free-at instants (`pipes[shard][p]`):
+    /// a committing thread is admitted to pipeline `id % P` of each
+    /// touched shard and waits until it frees (wait time only — never
+    /// CPU busy time).
+    pipes: Vec<Vec<Ns>>,
+    /// Commits that found their pipeline occupied.
+    pipe_waits: u64,
+    /// Total virtual time commits spent waiting for a pipeline slot.
+    pipe_wait_ns: Ns,
+    /// Total virtual time pipelines spent occupied by commit fences
+    /// (the occupancy numerator).
+    pipe_busy_ns: Ns,
     /// Load latency from the primary image (ns).
     load_cost: Ns,
 }
@@ -290,6 +307,7 @@ impl Mirror {
         }
         let local_mc = RateLimiter::new(plat.llc_mc);
         let local_mc_lat = plat.llc_mc;
+        let shards = sharding.shards;
         Ok(Mirror {
             plat,
             local_mc,
@@ -300,6 +318,11 @@ impl Mirror {
             kind,
             repl,
             sharding,
+            conc: ConcurrencyConfig::default(),
+            pipes: vec![vec![0; 1]; shards],
+            pipe_waits: 0,
+            pipe_wait_ns: 0,
+            pipe_busy_ns: 0,
             load_cost: 5,
         })
     }
@@ -358,6 +381,52 @@ impl Mirror {
     /// The coalescing mode flushed chains run through.
     pub fn coalescing(&self) -> CoalesceMode {
         self.lanes[0].fabric.coalescing()
+    }
+
+    /// Set the concurrent-primary shape: `commit_pipelines` per shard
+    /// and the cross-thread group-fence window (pushed to every shard's
+    /// fabric). Call before any traffic, like [`Mirror::set_batching`].
+    /// The default shape (`1`, `0`) keeps the serial commit path
+    /// structurally untouched (pinned by `rust/tests/concurrency.rs`).
+    pub fn set_concurrency(&mut self, conc: ConcurrencyConfig) {
+        conc.validate()
+            .expect("ConcurrencyConfig must be validated before set_concurrency");
+        self.conc = conc;
+        for lane in &mut self.lanes {
+            lane.fabric.set_group_fence(conc.group_fence_ns);
+        }
+        self.pipes = vec![vec![0; conc.commit_pipelines]; self.lanes.len()];
+    }
+
+    /// The concurrent-primary shape this mirror commits under.
+    pub fn concurrency(&self) -> ConcurrencyConfig {
+        self.conc
+    }
+
+    /// Blocking fences that issued their own verb, across all shards.
+    pub fn fences_issued(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.fences_issued).sum()
+    }
+
+    /// Blocking fences that piggybacked on another in-flight fence,
+    /// across all shards (0 unless a group-fence window is set).
+    pub fn fence_piggybacks(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.fence_piggybacks).sum()
+    }
+
+    /// Commits that found their pipeline slot occupied.
+    pub fn pipeline_waits(&self) -> u64 {
+        self.pipe_waits
+    }
+
+    /// Total virtual time commits spent queued for a pipeline slot.
+    pub fn pipeline_wait_ns(&self) -> Ns {
+        self.pipe_wait_ns
+    }
+
+    /// Total virtual time pipelines were occupied by commit fences.
+    pub fn pipeline_busy_ns(&self) -> Ns {
+        self.pipe_busy_ns
     }
 
     /// Data-path doorbells rung across all shards and backups.
@@ -540,6 +609,39 @@ impl Mirror {
         t.clock.now = done;
     }
 
+    /// Durability-fence fan-out through the per-shard commit pipelines
+    /// (the concurrent-primary model, active when
+    /// [`ConcurrencyConfig::enabled`]). Identical to [`Mirror::fan_fence`]
+    /// except each touched shard admits the commit to pipeline
+    /// `thread % P` first: if that pipeline is still occupied by an
+    /// earlier commit, the thread *waits* (virtual time only — a queued
+    /// commit burns no CPU, so pipeline contention never inflates
+    /// `busy_ns`). `P = 1` models the serial primary — every commit on
+    /// a shard funnels through one pipeline; raising `P` is the tentpole
+    /// scaling axis measured by `fig11_concurrency`.
+    fn fan_dfence_piped(&mut self, t: &mut ThreadCtx, mask: u64) {
+        let p = t.id() % self.conc.commit_pipelines;
+        let start = t.clock.now;
+        let mut done = start;
+        for (s, lane) in self.lanes.iter_mut().enumerate() {
+            if mask & (1 << s) == 0 {
+                continue;
+            }
+            let free = self.pipes[s][p];
+            let begin = start.max(free);
+            if free > start {
+                self.pipe_waits += 1;
+                self.pipe_wait_ns += free - start;
+            }
+            t.clock.now = begin;
+            lane.strategy.on_dfence(&mut lane.fabric, &mut t.clock);
+            self.pipes[s][p] = t.clock.now;
+            self.pipe_busy_ns += t.clock.now - begin;
+            done = done.max(t.clock.now);
+        }
+        t.clock.now = done;
+    }
+
     /// Shards a fence must reach: the touched set, or shard 0 when the
     /// window saw no writes (preserving the pre-sharding behaviour of
     /// unconditional fence issue; with `shards = 1` the two coincide).
@@ -610,7 +712,11 @@ impl Mirror {
         }
         t.pending_local.clear();
         let mask = self.fence_mask(t.touched_txn);
-        self.fan_fence(t, mask, |s, f, c| s.on_dfence(f, c));
+        if self.conc.enabled() {
+            self.fan_dfence_piped(t, mask);
+        } else {
+            self.fan_fence(t, mask, |s, f, c| s.on_dfence(f, c));
+        }
         t.touched_txn = 0;
         t.touched_epoch = 0;
         if self.stall().is_some() {
@@ -1063,6 +1169,59 @@ mod tests {
         // The hot line's final value survives on its shard's ledger.
         let img = m.backup(0).ledger.image_at(u64::MAX);
         assert_eq!(img.get(&hot), Some(&3));
+    }
+
+    // ---- concurrent primary ----------------------------------------------
+
+    /// The serial anchor shape (`pipelines = 1`, `window = 0`) must not
+    /// route commits through the piped path at all — event-for-event
+    /// identity with a mirror that never heard of concurrency.
+    #[test]
+    fn serial_shape_bypasses_the_piped_path() {
+        let mut base = Mirror::new(Platform::default(), StrategyKind::SmOb, true);
+        let mut gated = Mirror::new(Platform::default(), StrategyKind::SmOb, true);
+        gated.set_concurrency(ConcurrencyConfig::default());
+        let mut tb = ThreadCtx::new(0);
+        let mut tg = ThreadCtx::new(0);
+        for _ in 0..5 {
+            run_transact_txn(&mut base, &mut tb, 4, 1);
+            run_transact_txn(&mut gated, &mut tg, 4, 1);
+        }
+        assert_eq!(tb.now(), tg.now());
+        assert_eq!(tb.clock.busy_ns, tg.clock.busy_ns);
+        assert_eq!(
+            base.backup(0).ledger.events(),
+            gated.backup(0).ledger.events()
+        );
+        assert_eq!(gated.pipeline_waits(), 0);
+        // One blocking dfence per commit on the SM-OB path.
+        assert_eq!(gated.fences_issued(), 5);
+        assert_eq!(gated.fence_piggybacks(), 0);
+    }
+
+    /// Pipeline contention is queueing, not CPU: a commit that finds
+    /// its pipeline occupied waits in virtual time (visible in
+    /// `pipeline_wait_ns`) but burns no `busy_ns`.
+    #[test]
+    fn shared_pipeline_serializes_commits_without_burning_cpu() {
+        let mut m = Mirror::new(Platform::default(), StrategyKind::SmOb, false);
+        m.set_concurrency(ConcurrencyConfig::new(2, 0));
+        // Threads 0 and 2 share pipeline 0; thread 1 owns pipeline 1.
+        let mut ts: Vec<ThreadCtx> = (0..3).map(ThreadCtx::new).collect();
+        for _ in 0..3 {
+            for t in &mut ts {
+                run_transact_txn(&mut m, t, 2, 1);
+            }
+        }
+        assert!(m.pipeline_waits() > 0, "colliding commits must queue");
+        assert!(m.pipeline_wait_ns() > 0);
+        assert!(m.pipeline_busy_ns() > 0);
+        assert_eq!(
+            ts[0].clock.busy_ns, ts[2].clock.busy_ns,
+            "queued thread must not burn CPU waiting"
+        );
+        assert_eq!(m.fences_issued(), 9, "one dfence per commit");
+        assert_eq!(m.fence_piggybacks(), 0, "no window, no piggybacks");
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Concurrent commit pipelines + cross-thread group fencing config.
+//!
+//! PR 6 replaces the primary's single global txn loop with per-shard
+//! concurrent commit pipelines: each shard's fabric accepts durability
+//! fences from up to `commit_pipelines` threads concurrently, modeling a
+//! primary whose commit path is no longer one global critical section.
+//! Orthogonally, `group_fence_ns` opens a piggyback window per shard:
+//! a thread closing its transaction within the window of another
+//! thread's in-flight remote fence rides that fence's completion instead
+//! of issuing its own (requester-side post elided; responder-side drain
+//! semantics still run — see `net::fabric`).
+//!
+//! The default shape (`commit_pipelines = 1`, `group_fence_ns = 0`)
+//! structurally bypasses every new code path, so the serial coordinator
+//! is preserved event-for-event (pinned by `rust/tests/concurrency.rs`).
+
+use crate::Ns;
+use anyhow::{bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// Upper bound on commit pipelines per shard (same cap as shards: the
+/// occupancy vectors stay small and a bitmask-free loop suffices).
+pub const MAX_PIPELINES: usize = 64;
+
+/// `[concurrency]` section / `--commit-pipelines` + `--group-fence-ns`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConcurrencyConfig {
+    /// Concurrent commit pipelines per shard (1 = the serial txn loop,
+    /// the regression anchor).
+    pub commit_pipelines: usize,
+    /// Group-fence piggyback window (ns); 0 = every thread issues its
+    /// own remote fence (the pre-PR-6 model).
+    pub group_fence_ns: Ns,
+}
+
+impl Default for ConcurrencyConfig {
+    fn default() -> Self {
+        ConcurrencyConfig {
+            commit_pipelines: 1,
+            group_fence_ns: 0,
+        }
+    }
+}
+
+impl ConcurrencyConfig {
+    pub fn new(commit_pipelines: usize, group_fence_ns: Ns) -> Self {
+        ConcurrencyConfig {
+            commit_pipelines,
+            group_fence_ns,
+        }
+    }
+
+    /// Shape check: pipelines in `1..=MAX_PIPELINES`.
+    pub fn validate(&self) -> Result<()> {
+        if self.commit_pipelines == 0 {
+            bail!("concurrency.commit_pipelines must be >= 1, got 0");
+        }
+        if self.commit_pipelines > MAX_PIPELINES {
+            bail!(
+                "concurrency.commit_pipelines must be <= {MAX_PIPELINES}, \
+                 got {}",
+                self.commit_pipelines
+            );
+        }
+        Ok(())
+    }
+
+    /// True when any concurrent path is active (pipeline gating or a
+    /// group-fence window); false = the serial anchor shape.
+    pub fn enabled(&self) -> bool {
+        self.commit_pipelines > 1 || self.group_fence_ns > 0
+    }
+}
+
+impl fmt::Display for ConcurrencyConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "pipelines:{},window:{}",
+            self.commit_pipelines, self.group_fence_ns
+        )
+    }
+}
+
+impl FromStr for ConcurrencyConfig {
+    type Err = anyhow::Error;
+
+    /// Parse `"pipelines:P,window:W"` (either part optional).
+    fn from_str(s: &str) -> Result<Self> {
+        let mut cfg = ConcurrencyConfig::default();
+        for part in s.split(',').filter(|p| !p.is_empty()) {
+            match part.split_once(':') {
+                Some(("pipelines", v)) => {
+                    cfg.commit_pipelines = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad pipelines count {v:?}"))?;
+                }
+                Some(("window", v)) => {
+                    cfg.group_fence_ns = v
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad window ns {v:?}"))?;
+                }
+                _ => bail!("unknown concurrency part {part:?} (want pipelines:P,window:W)"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_serial_anchor() {
+        let c = ConcurrencyConfig::default();
+        assert_eq!(c.commit_pipelines, 1);
+        assert_eq!(c.group_fence_ns, 0);
+        assert!(!c.enabled());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn enabled_when_either_knob_moves() {
+        assert!(ConcurrencyConfig::new(2, 0).enabled());
+        assert!(ConcurrencyConfig::new(1, 500).enabled());
+        assert!(!ConcurrencyConfig::new(1, 0).enabled());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        assert!(ConcurrencyConfig::new(0, 0).validate().is_err());
+        assert!(ConcurrencyConfig::new(MAX_PIPELINES + 1, 0).validate().is_err());
+        ConcurrencyConfig::new(MAX_PIPELINES, 0).validate().unwrap();
+    }
+
+    #[test]
+    fn display_roundtrips_through_fromstr() {
+        for c in [
+            ConcurrencyConfig::default(),
+            ConcurrencyConfig::new(4, 2600),
+            ConcurrencyConfig::new(64, 0),
+        ] {
+            let s = c.to_string();
+            assert_eq!(s.parse::<ConcurrencyConfig>().unwrap(), c, "{s}");
+        }
+        assert!("pipelines:0".parse::<ConcurrencyConfig>().is_err());
+        assert!("pipes:2".parse::<ConcurrencyConfig>().is_err());
+        assert!("window:abc".parse::<ConcurrencyConfig>().is_err());
+    }
+}

@@ -81,6 +81,24 @@ pub struct RunOutcome {
     pub wire_wqes: u64,
     /// Line writes elided by flush-time write combining, steady state.
     pub combined_writes: u64,
+    /// Blocking fences that issued their own remote verb, steady state
+    /// (with a zero group-fence window this is simply the blocking-fence
+    /// count; the figure `fig11_concurrency` watches it shrink).
+    pub fences_issued: u64,
+    /// Blocking fences that piggybacked on another thread's in-flight
+    /// fence, steady state (0 unless a group-fence window is set).
+    pub fence_piggybacks: u64,
+    /// Commit pipelines per shard the run was configured with (1 = the
+    /// serial anchor; the occupancy denominator).
+    pub commit_pipelines: usize,
+    /// Commits that found their pipeline slot occupied, steady state.
+    pub pipeline_waits: u64,
+    /// Total virtual time commits spent queued for a pipeline slot,
+    /// steady state (queueing only — never part of `busy_ns`).
+    pub pipeline_wait_ns: Ns,
+    /// Total virtual time pipelines were occupied by commit fences,
+    /// steady state (the occupancy numerator).
+    pub pipeline_busy_ns: Ns,
     /// Lines-per-WQE distribution of the whole run (including any
     /// warmup/load phase — unlike the counters above, a histogram
     /// cannot be watermarked; Transact-style workloads have no load
@@ -144,6 +162,31 @@ impl RunOutcome {
         crate::net::wqe::mean_span(self.posted_wqes, self.wire_wqes)
     }
 
+    /// Mean remote fences actually issued per committed transaction —
+    /// 1.0 for a single-shard blocking-fence strategy without group
+    /// fencing; a piggyback window pushes it below 1.0
+    /// (`fig11_concurrency`'s amortization factor).
+    pub fn fences_per_txn(&self) -> f64 {
+        if self.txns == 0 {
+            return 0.0;
+        }
+        self.fences_issued as f64 / self.txns as f64
+    }
+
+    /// Mean fraction of pipeline capacity (makespan x pipelines x
+    /// shards) occupied by commit fences — the pipeline-occupancy
+    /// counter the tentpole surfaces (0.0 on the serial anchor, whose
+    /// commits bypass the piped path).
+    pub fn pipeline_occupancy(&self) -> f64 {
+        let cap = self.makespan as f64
+            * self.commit_pipelines.max(1) as f64
+            * self.shards.max(1) as f64;
+        if cap == 0.0 {
+            return 0.0;
+        }
+        self.pipeline_busy_ns as f64 / cap
+    }
+
     /// Replica lag: spread between the slowest and fastest backup's
     /// persist horizon across all shards (0 for a single backup or
     /// NO-SM).
@@ -190,6 +233,11 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     let posted_wqes_zero = mirror.posted_wqes();
     let wire_wqes_zero = mirror.wire_wqes();
     let combined_zero = mirror.combined_writes();
+    let fences_zero = mirror.fences_issued();
+    let piggybacks_zero = mirror.fence_piggybacks();
+    let pipe_waits_zero = mirror.pipeline_waits();
+    let pipe_wait_ns_zero = mirror.pipeline_wait_ns();
+    let pipe_busy_ns_zero = mirror.pipeline_busy_ns();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
     // the run at the kill point: remaining transactions are abandoned,
@@ -227,6 +275,12 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     out.posted_wqes = mirror.posted_wqes() - posted_wqes_zero;
     out.wire_wqes = mirror.wire_wqes() - wire_wqes_zero;
     out.combined_writes = mirror.combined_writes() - combined_zero;
+    out.fences_issued = mirror.fences_issued() - fences_zero;
+    out.fence_piggybacks = mirror.fence_piggybacks() - piggybacks_zero;
+    out.commit_pipelines = mirror.concurrency().commit_pipelines;
+    out.pipeline_waits = mirror.pipeline_waits() - pipe_waits_zero;
+    out.pipeline_wait_ns = mirror.pipeline_wait_ns() - pipe_wait_ns_zero;
+    out.pipeline_busy_ns = mirror.pipeline_busy_ns() - pipe_busy_ns_zero;
     out.span_hist = mirror.span_hist();
     out.per_backup_horizon = mirror.persist_horizons();
     out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);

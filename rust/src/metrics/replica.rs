@@ -31,6 +31,13 @@ pub struct GroupReport {
     /// `full`).
     pub coalesce: String,
     pub stats: Vec<BackupStats>,
+    /// Cross-thread group-fence piggyback window (ns; 0 = disabled).
+    pub group_fence_ns: Ns,
+    /// Blocking fences that issued their own remote verb.
+    pub fences_issued: u64,
+    /// Blocking fences that piggybacked on another thread's in-flight
+    /// fence (0 unless a window is set).
+    pub fence_piggybacks: u64,
     /// Blocking fences executed (group level).
     pub blocking_waits: u64,
     /// Total ns the workload threads spent blocked on group fences.
@@ -56,6 +63,9 @@ impl GroupReport {
             flush_policy: fabric.batching().to_string(),
             coalesce: fabric.coalescing().to_string(),
             stats: fabric.backup_stats(),
+            group_fence_ns: fabric.group_fence(),
+            fences_issued: fabric.fences_issued,
+            fence_piggybacks: fabric.fence_piggybacks,
             blocking_waits: fabric.blocking_waits,
             blocked_ns: fabric.blocked_ns,
             posted_wqes: fabric.posted_writes(),
@@ -104,6 +114,16 @@ impl GroupReport {
         let max = self.stats.iter().map(|s| s.last_fence).max().unwrap_or(0);
         let min = self.stats.iter().map(|s| s.last_fence).min().unwrap_or(0);
         max - min
+    }
+
+    /// Fraction of blocking fences that piggybacked instead of issuing
+    /// (0.0 without a group-fence window).
+    pub fn piggyback_ratio(&self) -> f64 {
+        let total = self.fences_issued + self.fence_piggybacks;
+        if total == 0 {
+            return 0.0;
+        }
+        self.fence_piggybacks as f64 / total as f64
     }
 
     /// Mean blocked time per fence (ns).
@@ -164,6 +184,7 @@ impl GroupReport {
             "Replica group — {} backups, ack policy {} (required {}, \
              on_loss {}, flush {}, coalesce {})\n{}\
              group: {} blocking fences, {:.0} ns mean block, \
+             {} issued + {} piggybacked ({:.2} ratio), \
              horizon lag {} ns, fence lag {} ns, dead {} ns, resync {} B, \
              {} doorbells, mean batch {:.2}\n\
              wire: {} WQEs over {} lines (mean span {:.2}, p99 {}, max {}), \
@@ -177,6 +198,9 @@ impl GroupReport {
             t.render(),
             self.blocking_waits,
             self.mean_block_ns(),
+            self.fences_issued,
+            self.fence_piggybacks,
+            self.piggyback_ratio(),
             self.horizon_lag(),
             self.fence_lag(),
             self.total_dead_ns(),
@@ -222,6 +246,9 @@ impl GroupReport {
             ("on_loss", json::esc(&self.on_loss)),
             ("flush_policy", json::esc(&self.flush_policy)),
             ("coalesce", json::esc(&self.coalesce)),
+            ("group_fence_ns", self.group_fence_ns.to_string()),
+            ("fences_issued", self.fences_issued.to_string()),
+            ("fence_piggybacks", self.fence_piggybacks.to_string()),
             ("blocking_waits", self.blocking_waits.to_string()),
             ("blocked_ns", self.blocked_ns.to_string()),
             ("doorbells", self.doorbells().to_string()),
@@ -289,6 +316,16 @@ impl ShardedReport {
     /// Total combined (elided) line writes across all shards.
     pub fn total_combined_writes(&self) -> u64 {
         self.per_shard.iter().map(|r| r.combined_writes).sum()
+    }
+
+    /// Total blocking fences issued across all shards.
+    pub fn total_fences_issued(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.fences_issued).sum()
+    }
+
+    /// Total piggybacked blocking fences across all shards.
+    pub fn total_fence_piggybacks(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.fence_piggybacks).sum()
     }
 
     /// Mean lines per wire WQE across the whole deployment.
@@ -383,6 +420,10 @@ mod tests {
         assert_eq!(r.required, 2);
         assert_eq!(r.policy, "quorum:2");
         assert_eq!(r.blocking_waits, 1);
+        assert_eq!(r.group_fence_ns, 0);
+        assert_eq!(r.fences_issued, 1, "the rdfence issued its own verb");
+        assert_eq!(r.fence_piggybacks, 0);
+        assert_eq!(r.piggyback_ratio(), 0.0);
         assert!(r.mean_block_ns() >= 0.0);
         assert_eq!(r.resync_bytes(), 0);
         assert_eq!(r.total_dead_ns(), 0);
@@ -457,6 +498,11 @@ mod tests {
         assert!(j.contains("\"backups\":["), "{j}");
         assert!(j.matches("\"policy\":\"all\"").count() == 2, "{j}");
         assert!(j.contains("\"doorbells\":"), "{j}");
+        assert!(j.contains("\"group_fence_ns\":0"), "{j}");
+        assert!(j.contains("\"fences_issued\":"), "{j}");
+        assert!(j.contains("\"fence_piggybacks\":0"), "{j}");
+        assert_eq!(r.total_fences_issued(), 2, "one commit rdfence per touched shard");
+        assert_eq!(r.total_fence_piggybacks(), 0);
         assert!(j.contains("\"mean_batch\":"), "{j}");
         assert!(j.contains("\"wire_wqes\":"), "{j}");
         assert!(j.contains("\"combined_writes\":"), "{j}");

@@ -165,7 +165,23 @@ pub struct Fabric {
     doorbells: Vec<u64>,
     /// WQEs that went through the staging queue (vs. eager posts).
     pub staged_wqes: u64,
+    // ---- cross-thread group fencing (see `coordinator::pipeline`)
+    /// Piggyback window (ns); 0 = every blocking fence issues its own
+    /// verb (the pre-PR-6 model, event-for-event).
+    group_fence_ns: Ns,
+    /// Virtual instant the most recent *issued* blocking fence opened
+    /// the piggyback window.
+    gf_open_at: Ns,
+    /// An issued fence has opened a window at least once.
+    gf_armed: bool,
     // stats
+    /// Blocking fences that issued their own verb (counted in every
+    /// mode; with `group_fence_ns = 0` this is simply the blocking-fence
+    /// count).
+    pub fences_issued: u64,
+    /// Blocking fences that piggybacked on another thread's in-flight
+    /// fence instead of issuing (0 unless `group_fence_ns > 0`).
+    pub fence_piggybacks: u64,
     pub blocking_waits: u64,
     pub blocked_ns: Ns,
 }
@@ -220,6 +236,11 @@ impl Fabric {
             doorbell_ns: p.doorbell_ns,
             doorbells: vec![0; n],
             staged_wqes: 0,
+            group_fence_ns: 0,
+            gf_open_at: 0,
+            gf_armed: false,
+            fences_issued: 0,
+            fence_piggybacks: 0,
             blocking_waits: 0,
             blocked_ns: 0,
         }
@@ -263,6 +284,26 @@ impl Fabric {
     /// The coalescing mode flushed chains run through.
     pub fn coalescing(&self) -> CoalesceMode {
         self.coalesce
+    }
+
+    /// Set the cross-thread group-fence piggyback window (0 disables —
+    /// the regression anchor: every blocking fence issues its own
+    /// verb, event-for-event with the pre-window model). Must be
+    /// called before any traffic, like [`Fabric::set_batching`].
+    pub fn set_group_fence(&mut self, window: Ns) {
+        debug_assert!(self.staged_pending() == 0, "set_group_fence mid-run");
+        self.group_fence_ns = window;
+    }
+
+    /// Builder form of [`Fabric::set_group_fence`].
+    pub fn with_group_fence(mut self, window: Ns) -> Self {
+        self.set_group_fence(window);
+        self
+    }
+
+    /// The group-fence piggyback window (ns; 0 = disabled).
+    pub fn group_fence(&self) -> Ns {
+        self.group_fence_ns
     }
 
     /// Tag this fabric as serving shard `s` of a sharded coordinator
@@ -749,7 +790,12 @@ impl Fabric {
     /// backup, record per-backup completions, then block once per the ack
     /// policy — or record a [`Stall`] when the survivors cannot satisfy
     /// it (halt mode, or nobody left).
-    fn fence(&mut self, t: &mut ThreadClock, issue: fn(&mut Rdma, &mut ThreadClock) -> Ns) {
+    fn fence(
+        &mut self,
+        t: &mut ThreadClock,
+        issue: fn(&mut Rdma, &mut ThreadClock) -> Ns,
+        join: fn(&mut Rdma, &mut ThreadClock) -> Ns,
+    ) {
         if self.stall.is_some() {
             // Already stalled: the run is over; let the caller wind down.
             return;
@@ -774,10 +820,30 @@ impl Fabric {
             });
             return;
         }
+        // Cross-thread group fencing: a thread reaching its durability
+        // point within `group_fence_ns` of the last *issued* fence rides
+        // that fence instead of posting its own — requester-side issue
+        // cost (post + QP/NIC slots) is elided, but the responder-side
+        // verb semantics (DDIO drain, persist waits, ledger) still run
+        // for THIS thread's lines, and the ack policy below is applied
+        // unchanged, so per-txn durability acks are never weakened.
+        let piggyback = self.group_fence_ns > 0
+            && self.gf_armed
+            && t.now <= self.gf_open_at.saturating_add(self.group_fence_ns);
+        if piggyback {
+            self.fence_piggybacks += 1;
+        } else {
+            self.fences_issued += 1;
+            if self.group_fence_ns > 0 {
+                self.gf_open_at = t.now;
+                self.gf_armed = true;
+            }
+        }
+        let verb = if piggyback { join } else { issue };
         let mut times = Vec::with_capacity(alive);
         for i in 0..self.replicas.len() {
             if self.states[i].is_alive() {
-                let c = issue(&mut self.replicas[i], t);
+                let c = verb(&mut self.replicas[i], t);
                 self.last_fence[i] = c;
                 times.push(c);
             }
@@ -789,17 +855,17 @@ impl Fabric {
 
     /// Blocking remote commit across the group (SM-RC fence).
     pub fn rcommit(&mut self, t: &mut ThreadClock) {
-        self.fence(t, Rdma::rcommit_issue);
+        self.fence(t, Rdma::rcommit_issue, Rdma::rcommit_piggyback);
     }
 
     /// Blocking remote durability fence across the group (SM-OB).
     pub fn rdfence(&mut self, t: &mut ThreadClock) {
-        self.fence(t, Rdma::rdfence_issue);
+        self.fence(t, Rdma::rdfence_issue, Rdma::rdfence_piggyback);
     }
 
     /// Blocking sentinel read across the group (SM-DD durability point).
     pub fn read_fence(&mut self, t: &mut ThreadClock) {
-        self.fence(t, Rdma::read_fence_issue);
+        self.fence(t, Rdma::read_fence_issue, Rdma::read_fence_piggyback);
     }
 }
 
@@ -1005,6 +1071,98 @@ mod tests {
             assert_eq!(s.resyncs, 0);
         }
         assert_eq!(f.blocking_waits, 1);
+    }
+
+    // ---- cross-thread group fencing --------------------------------------
+
+    /// With a zero window the fence path is the pre-window model
+    /// event-for-event; `fences_issued` simply counts blocking fences
+    /// (the CI invariant `fences_issued <= txns_committed` reduces to
+    /// one fence per commit on the serial path).
+    #[test]
+    fn zero_window_counts_fences_without_changing_events() {
+        let p = Platform::default();
+        let mut base = Fabric::new(&p, &repl(2, AckPolicy::All), true);
+        let mut gated = Fabric::new(&p, &repl(2, AckPolicy::All), true).with_group_fence(0);
+        let mut tb = ThreadClock::new(0);
+        let mut tg = ThreadClock::new(0);
+        for e in 0..3u32 {
+            base.post_write_wt(&mut tb, meta(0x40 * (1 + e as u64), e, e as u64));
+            gated.post_write_wt(&mut tg, meta(0x40 * (1 + e as u64), e, e as u64));
+            base.rdfence(&mut tb);
+            gated.rdfence(&mut tg);
+            assert_eq!(tb.now, tg.now, "epoch {e} diverged");
+            assert_eq!(tb.busy_ns, tg.busy_ns, "epoch {e} busy diverged");
+        }
+        for b in 0..2 {
+            assert_eq!(
+                base.backup(b).ledger.events(),
+                gated.backup(b).ledger.events(),
+                "backup {b}"
+            );
+        }
+        assert_eq!(gated.fences_issued, 3);
+        assert_eq!(gated.fence_piggybacks, 0);
+        assert_eq!(base.fences_issued, 3);
+    }
+
+    /// A second thread fencing within the window piggybacks: requester
+    /// side issue cost is elided (busy drops vs. the serial run), but
+    /// its own lines still drain and persist on every backup before it
+    /// unblocks — the ack policy is applied to the joined completion
+    /// unchanged.
+    #[test]
+    fn group_fence_window_piggybacks_across_threads() {
+        let mt = |addr: u64, thread: u32, seq: u64| WriteMeta {
+            addr,
+            val: seq,
+            thread,
+            txn: 0,
+            epoch: 0,
+            seq,
+        };
+        let run = |window: Ns| {
+            let p = Platform::default();
+            let mut f = Fabric::new(&p, &repl(2, AckPolicy::All), true).with_group_fence(window);
+            let mut t0 = ThreadClock::new(0);
+            let mut t1 = ThreadClock::new(1);
+            f.post_write_wt(&mut t0, mt(0x40, 0, 0));
+            f.rdfence(&mut t0);
+            f.post_write_wt(&mut t1, mt(0x80, 1, 1));
+            f.rdfence(&mut t1);
+            (f, t1)
+        };
+        let (serial, s1) = run(0);
+        let (grouped, g1) = run(100_000);
+        assert_eq!(serial.fences_issued, 2);
+        assert_eq!(serial.fence_piggybacks, 0);
+        assert_eq!(grouped.fences_issued, 1);
+        assert_eq!(grouped.fence_piggybacks, 1);
+        // Requester-side post cost elided on the piggybacked fence.
+        assert!(
+            g1.busy_ns < s1.busy_ns,
+            "piggyback busy {} !< serial busy {}",
+            g1.busy_ns,
+            s1.busy_ns
+        );
+        // Durability never weakened: both threads' lines are persistent
+        // on both backups no later than thread 1's unblock instant.
+        for s in grouped.backup_stats() {
+            assert_eq!(s.persists, 2);
+            assert!(
+                s.persist_horizon <= g1.now,
+                "horizon {} past unblock {}",
+                s.persist_horizon,
+                g1.now
+            );
+        }
+        // A fence landing beyond the window opens a fresh one.
+        let (mut grouped, mut g1) = run(100_000);
+        g1.wait_until(1_000_000);
+        grouped.post_write_wt(&mut g1, mt(0xC0, 1, 2));
+        grouped.rdfence(&mut g1);
+        assert_eq!(grouped.fences_issued, 2);
+        assert_eq!(grouped.fence_piggybacks, 1);
     }
 
     // ---- staged WQE pipeline ---------------------------------------------

@@ -367,6 +367,34 @@ impl Rdma {
         self.block(t, completion);
     }
 
+    // ---- group-fence piggyback issue paths ------------------------------
+    //
+    // A piggybacked fence rides another thread's in-flight fence WQE: no
+    // CPU post cost, no QP lane slot, no NIC message slot — the caller's
+    // request is carried in the already-issued verb. The responder-side
+    // semantics still run via the remote `*_join` verbs (the caller's
+    // lines drain / its persists are waited on), anchored at the same
+    // one-way fabric latency, so the returned completion is a true
+    // durability instant — never weaker than an issued fence's.
+
+    /// Piggybacked remote commit: responder drain without an issue slot.
+    pub fn rcommit_piggyback(&mut self, t: &mut ThreadClock) -> Ns {
+        let arrive = t.now + self.half;
+        self.remote.rcommit_join(arrive, t.id as u32) + self.half
+    }
+
+    /// Piggybacked remote durability fence.
+    pub fn rdfence_piggyback(&mut self, t: &mut ThreadClock) -> Ns {
+        let arrive = t.now + self.half;
+        self.remote.rdfence_join(arrive, t.id as u32) + self.half
+    }
+
+    /// Piggybacked sentinel-read fence.
+    pub fn read_fence_piggyback(&mut self, t: &mut ThreadClock) -> Ns {
+        let arrive = t.now + self.half;
+        self.remote.read_join(arrive, t.id as u32) + self.half
+    }
+
     /// Aggregate window-stall across QPs (back-pressure exposure metric).
     pub fn window_stall_ns(&self) -> Ns {
         self.dd_window_stall_ns
@@ -575,6 +603,34 @@ mod tests {
         assert!(evs.iter().all(|e| e.at <= horizon));
         assert_eq!(r.wire_wqes, 1);
         assert_eq!(r.posted_writes, 3);
+    }
+
+    #[test]
+    fn piggyback_fences_skip_issue_cost_but_keep_durability() {
+        // rcommit_piggyback drains the caller's lines (real durability)
+        // without CPU post cost, QP slot, or NIC slot.
+        let mut r = rdma();
+        let mut t = ThreadClock::new(0);
+        r.post_write(&mut t, meta(0x40, 0));
+        let busy_before = t.busy_ns;
+        let now_before = t.now;
+        let completion = r.rcommit_piggyback(&mut t);
+        assert_eq!(t.busy_ns, busy_before, "piggyback must not charge CPU");
+        assert_eq!(t.now, now_before, "piggyback must not advance the clock");
+        assert_eq!(r.remote.ledger.len(), 1, "caller's line still drains");
+        assert!(completion > t.now, "completion covers a full RTT");
+        // rdfence_piggyback covers the caller's write-through persists.
+        let mut r = rdma();
+        let mut t = ThreadClock::new(0);
+        r.post_write_wt(&mut t, meta(0x40, 0));
+        let c = r.rdfence_piggyback(&mut t);
+        assert!(c >= r.remote.persist_horizon(), "durability not weakened");
+        // read_fence_piggyback likewise for the NT path.
+        let mut r = rdma();
+        let mut t = ThreadClock::new(0);
+        r.post_write_nt(&mut t, meta(0x40, 0));
+        let c = r.read_fence_piggyback(&mut t);
+        assert!(c >= r.remote.persist_horizon());
     }
 
     #[test]

@@ -286,14 +286,16 @@ impl RemoteEngine {
         barrier
     }
 
-    /// Remote commit (SM-RC): drain the *caller's* pending (dirty)
-    /// RDMA-written lines from the LLC into the MC queue (the rcommit
-    /// draft scopes the commit to an address range — the caller's own
-    /// replication region). Returns the drain-complete instant.
-    pub fn rcommit(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
-        let mut start = self.process(qp, thread, arrive);
+    /// rcommit's drain semantics: flush the *caller's* pending (dirty)
+    /// RDMA-written lines from the LLC into the MC queue starting at
+    /// `start`, recording each line's ledger persist. Shared by the
+    /// issued verb ([`RemoteEngine::rcommit`]) and the group-fence
+    /// piggyback ([`RemoteEngine::rcommit_join`]) — a joined fence still
+    /// makes the caller's lines durable; only the requester-side issue
+    /// path is elided.
+    fn drain_pending(&mut self, start: Ns, thread: u32) -> Ns {
         // The caller's prior writes must have been processed remotely.
-        start = start.max(self.per_thread_proc.get(&thread).copied().unwrap_or(0));
+        let start = start.max(self.per_thread_proc.get(&thread).copied().unwrap_or(0));
         let mut done = start;
         let all: Vec<(Addr, WriteMeta)> = std::mem::take(&mut self.pending);
         self.pending_idx.clear();
@@ -308,23 +310,36 @@ impl RemoteEngine {
                 done = done.max(persist);
             }
         }
-        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(done);
         let e = self.per_thread_persist.entry(thread).or_insert(0);
         *e = (*e).max(done);
         self.max_persist = self.max_persist.max(done);
         done
     }
 
+    /// rdfence's wait semantics: all the caller's write-throughs
+    /// persistent, cross-QP sync bubble, last line's PM landing.
+    fn dfence_wait(&mut self, start: Ns, thread: u32) -> Ns {
+        start.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
+            + self.ob_barrier
+            + self.mc_pm
+    }
+
+    /// Remote commit (SM-RC): drain the *caller's* pending (dirty)
+    /// RDMA-written lines from the LLC into the MC queue (the rcommit
+    /// draft scopes the commit to an address range — the caller's own
+    /// replication region). Returns the drain-complete instant.
+    pub fn rcommit(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
+        let start = self.process(qp, thread, arrive);
+        let done = self.drain_pending(start, thread);
+        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(done);
+        done
+    }
+
     /// Remote durability fence (SM-OB): completes once all prior writes
     /// (already written-through) are persistent and all barriers executed.
     pub fn rdfence(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
-        let mut done = self.process(qp, thread, arrive);
-        // The caller's write-through persists must all have landed;
-        // cross-QP sync bubble + the last line's PM landing.
-        done = done
-            .max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
-            + self.ob_barrier
-            + self.mc_pm;
+        let start = self.process(qp, thread, arrive);
+        let done = self.dfence_wait(start, thread);
         self.per_qp_persist[qp] = self.per_qp_persist[qp].max(done);
         done
     }
@@ -335,6 +350,33 @@ impl RemoteEngine {
     pub fn read(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
         let proc = self.process(qp, thread, arrive);
         proc.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
+    }
+
+    // ---- group-fence piggyback verbs ------------------------------------
+    //
+    // A thread whose durability fence lands inside another thread's
+    // group-fence window does not issue its own verb: no QP stream slot,
+    // no shared-PCIe `process()` slot, no per-QP persist update. The
+    // responder-side *semantics* still run — the caller's lines drain /
+    // its persists are waited on — so durability is never weakened; only
+    // the duplicated issue cost is amortized away (paper §6.2 applied to
+    // the fence path the way doorbell batching applied to the post path).
+
+    /// Piggybacked rcommit: drain the caller's pending lines as of
+    /// `arrive` without consuming an issue slot.
+    pub fn rcommit_join(&mut self, arrive: Ns, thread: u32) -> Ns {
+        self.drain_pending(arrive, thread)
+    }
+
+    /// Piggybacked rdfence: wait for the caller's persists as of
+    /// `arrive` without consuming an issue slot.
+    pub fn rdfence_join(&mut self, arrive: Ns, thread: u32) -> Ns {
+        self.dfence_wait(arrive, thread)
+    }
+
+    /// Piggybacked read-fence: the caller's persists as of `arrive`.
+    pub fn read_join(&mut self, arrive: Ns, thread: u32) -> Ns {
+        arrive.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
     }
 
     fn insert_pending(&mut self, line: Addr, meta: WriteMeta) {
@@ -627,6 +669,35 @@ mod tests {
         // A later rcommit has nothing stale to drain.
         e.rcommit(0, 1_000, 0);
         assert_eq!(e.ledger.len(), 0);
+    }
+
+    #[test]
+    fn join_verbs_run_responder_semantics_without_issue_slots() {
+        // rcommit_join drains the caller's pending lines (durability is
+        // real), but consumes no QP-stream or shared-PCIe slot: a
+        // subsequent write's processing instant is unaffected.
+        let mut e = engine();
+        e.write_ddio(0, 1000, meta(0x40, 0));
+        let mut probe = engine();
+        probe.write_ddio(0, 1000, meta(0x40, 0));
+        let done = e.rcommit_join(2000, 0);
+        assert_eq!(e.pending_lines(), 0);
+        assert_eq!(e.ledger.len(), 1);
+        assert!(done >= 2000);
+        // Same follow-up write in both engines: identical proc instant
+        // (the join took no process() slot); the issued variant would
+        // have shifted it.
+        let p_join = e.write_ddio(0, 3000, meta(0x80, 1));
+        let p_base = probe.write_ddio(0, 3000, meta(0x80, 1));
+        assert_eq!(p_join, p_base, "join must not consume an issue slot");
+        // rdfence_join covers the caller's persists.
+        let mut e = engine();
+        let (_, p1) = e.write_wt(0, 1000, meta(0x40, 0));
+        assert!(e.rdfence_join(900, 0) >= p1);
+        // read_join fences prior persists too.
+        let mut e = engine();
+        let (_, p1) = e.write_nt(0, 1000, meta(0x40, 0));
+        assert!(e.read_join(1001, 0) >= p1);
     }
 
     #[test]

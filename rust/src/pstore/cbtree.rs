@@ -89,15 +89,43 @@ impl CritBitTree {
         log: Addr,
         hint: Option<TxnShape>,
     ) -> bool {
+        self.insert_inner(m, t, heap, key, val, log, hint, None)
+    }
+
+    /// Insert with an optional detectable-op stamp: `Some((slot, seq))`
+    /// appends one extra write to the mutation transaction setting
+    /// `slot = seq`, so op completion is atomic with the commit (see
+    /// [`super::detect`]). `None` is the plain path, event-for-event.
+    /// Stamped inserts allocate bump-only ([`PmHeap::alloc_seq`]) so a
+    /// replay from the checkpointed mark is address-deterministic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn insert_inner(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        key: u64,
+        val: u64,
+        log: Addr,
+        hint: Option<TxnShape>,
+        stamp: Option<(Addr, u64)>,
+    ) -> bool {
         let nearest = self.walk(m, t, key);
         if nearest == 0 {
             // Empty tree: install a leaf as root.
-            let leaf = heap.alloc(3);
+            let leaf = if stamp.is_some() {
+                heap.alloc_seq(3)
+            } else {
+                heap.alloc(3)
+            };
             let mut tx = Txn::begin(m, t, log, hint);
             tx.write(m, t, leaf, TAG_LEAF);
             tx.write(m, t, leaf + LINE, key);
             tx.write(m, t, leaf + 2 * LINE, val);
             tx.write(m, t, self.root_ptr, leaf);
+            if let Some((slot, seq)) = stamp {
+                tx.write(m, t, slot, seq);
+            }
             tx.commit(m, t);
             self.len = 1;
             return true;
@@ -107,6 +135,9 @@ impl CritBitTree {
             // Update in place.
             let mut tx = Txn::begin(m, t, log, hint);
             tx.write(m, t, nearest + 2 * LINE, val);
+            if let Some((slot, seq)) = stamp {
+                tx.write(m, t, slot, seq);
+            }
             tx.commit(m, t);
             return false;
         }
@@ -128,8 +159,11 @@ impl CritBitTree {
             node = m.load(t, parent_slot);
         }
 
-        let leaf = heap.alloc(3);
-        let inner = heap.alloc(3);
+        let (leaf, inner) = if stamp.is_some() {
+            (heap.alloc_seq(3), heap.alloc_seq(3))
+        } else {
+            (heap.alloc(3), heap.alloc(3))
+        };
         let mut tx = Txn::begin(m, t, log, hint);
         tx.write(m, t, leaf, TAG_LEAF);
         tx.write(m, t, leaf + LINE, key);
@@ -143,6 +177,9 @@ impl CritBitTree {
         tx.write(m, t, inner + LINE, l);
         tx.write(m, t, inner + 2 * LINE, r);
         tx.write(m, t, parent_slot, inner); // atomic splice-in
+        if let Some((slot, seq)) = stamp {
+            tx.write(m, t, slot, seq);
+        }
         tx.commit(m, t);
         self.len += 1;
         true

@@ -1,0 +1,355 @@
+//! Detectable (persistent lock-free) pstore operations.
+//!
+//! The serial pstore model assumed one global lock per structure: a
+//! crash mid-operation left the structure to whoever replayed the undo
+//! log. The concurrent-primary model instead makes each mutation a
+//! *detectable operation* (memento-style): before mutating, the thread
+//! persists a per-thread **checkpoint** describing the op (sequence
+//! number, opcode, arguments, heap watermark), and the mutation
+//! transaction's final write stamps `done = seq` — atomic with the
+//! commit because it rides the same undo log. A recovering thread can
+//! then always decide, from PM alone, whether its in-flight op
+//! completed, and if not, replay it deterministically:
+//!
+//! 1. roll back the active undo log (if any) — this also restores the
+//!    `done` stamp of a torn commit ([`rollback_in_image`]);
+//! 2. read the checkpoint: `done == seq` means the op committed —
+//!    nothing to do; otherwise re-execute the op from the checkpointed
+//!    arguments.
+//!
+//! Two orderings make the decision sound:
+//! * the checkpoint payload persists in an epoch **before** the `seq`
+//!   publication line, so a persisted `seq` implies complete arguments
+//!   (a crash before `seq` persists leaves the previous op's record —
+//!   the new op never started, like a client request lost pre-ack);
+//! * the `done` stamp is a transactional write, so it is visible iff
+//!   the mutation committed.
+//!
+//! Replay determinism also needs address-deterministic allocation:
+//! detectable ops allocate bump-only ([`super::PmHeap::alloc_seq`]) and
+//! checkpoint the watermark, so a replay from [`super::PmHeap::at_mark`]
+//! lands every node at the original address (free lists are volatile
+//! and cannot survive a crash).
+//!
+//! Contention is modeled, not simulated: a detectable op charges
+//! [`CAS_RETRY_NS`] of CPU per *other* contending thread, relieved
+//! proportionally by the commit-pipeline count (more pipelines — fewer
+//! threads colliding on any one structure's publish CAS).
+
+use super::{ckpt_base_for, CritBitTree, KvStore, PHashMap, PmHeap};
+use crate::coordinator::{Mirror, ThreadCtx};
+use crate::txn::{rollback_plan, LOG_INVALID};
+use crate::{Addr, Ns, LINE};
+use std::collections::HashMap;
+
+/// Checkpoint line offsets within a thread's area ([`ckpt_base_for`]).
+const SLOT_SEQ: u64 = 0;
+const SLOT_OPCODE: u64 = 1;
+const SLOT_KEY: u64 = 2;
+const SLOT_VAL: u64 = 3;
+const SLOT_MARK: u64 = 4;
+const SLOT_DONE: u64 = 5;
+/// Batch payload starts here: pair `i` at lines `SLOT_ARGS + 2i` (key)
+/// and `SLOT_ARGS + 2i + 1` (value).
+const SLOT_ARGS: u64 = 6;
+
+/// Operation codes recorded in the checkpoint.
+pub const OP_TREE_INSERT: u64 = 1;
+pub const OP_MAP_PUT: u64 = 2;
+pub const OP_KV_BATCH: u64 = 3;
+
+/// CPU cost of one failed publish-CAS retry (volatile work: reread +
+/// recompute the splice). Charged per other contending thread.
+pub const CAS_RETRY_NS: Ns = 18;
+
+/// Per-thread detectable-operation context: owns the thread's
+/// checkpoint area and sequence numbering.
+#[derive(Clone, Debug)]
+pub struct DetectCtx {
+    base: Addr,
+    seq: u64,
+    /// Threads contending on the same structure (including this one);
+    /// drives the CAS-retry contention charge.
+    pub contenders: usize,
+}
+
+impl DetectCtx {
+    pub fn new(thread: usize, contenders: usize) -> Self {
+        Self::resume(thread, contenders, 0)
+    }
+
+    /// Rebuild a context after recovery: `completed_seq` is the highest
+    /// sequence number the recovered checkpoint accounts for (a replay
+    /// of op `S` resumes from `S - 1` so the re-announce reuses `S`).
+    pub fn resume(thread: usize, contenders: usize, completed_seq: u64) -> Self {
+        DetectCtx {
+            base: ckpt_base_for(thread),
+            seq: completed_seq,
+            contenders: contenders.max(1),
+        }
+    }
+
+    /// Line holding the completion stamp.
+    pub fn done_slot(&self) -> Addr {
+        self.base + SLOT_DONE * LINE
+    }
+
+    fn slot(&self, s: u64) -> Addr {
+        self.base + s * LINE
+    }
+
+    /// Modeled CAS-retry burn for one op: every other contender costs
+    /// one retry, relieved by the commit-pipeline fan-out.
+    fn contention_ns(&self, m: &Mirror) -> Ns {
+        CAS_RETRY_NS * (self.contenders as Ns - 1) / m.concurrency().commit_pipelines as Ns
+    }
+
+    /// Persist the op record. Payload epoch first, then the `seq`
+    /// publication epoch — see the module docs for why this order is
+    /// what makes the recovery decision sound. Returns the op's seq.
+    fn announce(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        opcode: u64,
+        key: u64,
+        val: u64,
+        mark: Addr,
+        batch: &[(u64, u64)],
+    ) -> u64 {
+        for (s, v) in [
+            (SLOT_OPCODE, opcode),
+            (SLOT_KEY, key),
+            (SLOT_VAL, val),
+            (SLOT_MARK, mark),
+        ] {
+            m.store(t, self.slot(s), v);
+            m.clwb(t, self.slot(s));
+        }
+        for (i, &(k, v)) in batch.iter().enumerate() {
+            let ks = self.slot(SLOT_ARGS + 2 * i as u64);
+            m.store(t, ks, k);
+            m.clwb(t, ks);
+            m.store(t, ks + LINE, v);
+            m.clwb(t, ks + LINE);
+        }
+        m.sfence(t);
+        self.seq += 1;
+        m.store(t, self.slot(SLOT_SEQ), self.seq);
+        m.clwb(t, self.slot(SLOT_SEQ));
+        m.sfence(t);
+        self.seq
+    }
+}
+
+/// Detectable crit-bit insert (checkpoint + stamped transaction).
+#[allow(clippy::too_many_arguments)]
+pub fn tree_insert(
+    tree: &mut CritBitTree,
+    m: &mut Mirror,
+    t: &mut ThreadCtx,
+    heap: &mut PmHeap,
+    ctx: &mut DetectCtx,
+    key: u64,
+    val: u64,
+    log: Addr,
+) -> bool {
+    m.compute(t, ctx.contention_ns(m));
+    let mark = heap.mark();
+    let seq = ctx.announce(m, t, OP_TREE_INSERT, key, val, mark, &[]);
+    tree.insert_inner(m, t, heap, key, val, log, None, Some((ctx.done_slot(), seq)))
+}
+
+/// Detectable hashmap put.
+#[allow(clippy::too_many_arguments)]
+pub fn map_put(
+    map: &mut PHashMap,
+    m: &mut Mirror,
+    t: &mut ThreadCtx,
+    heap: &mut PmHeap,
+    ctx: &mut DetectCtx,
+    key: u64,
+    val: u64,
+    log: Addr,
+) -> bool {
+    m.compute(t, ctx.contention_ns(m));
+    let mark = heap.mark();
+    let seq = ctx.announce(m, t, OP_MAP_PUT, key, val, mark, &[]);
+    map.put_inner(m, t, heap, key, val, log, None, Some((ctx.done_slot(), seq)))
+}
+
+/// Detectable echo batch apply: the whole batch is the op payload, so
+/// a replay re-applies exactly the checkpointed client updates.
+pub fn kv_apply_batch(
+    kv: &mut KvStore,
+    m: &mut Mirror,
+    t: &mut ThreadCtx,
+    heap: &mut PmHeap,
+    ctx: &mut DetectCtx,
+    batch: &[(u64, u64)],
+    log: Addr,
+) {
+    m.compute(t, ctx.contention_ns(m));
+    let mark = heap.mark();
+    let seq = ctx.announce(m, t, OP_KV_BATCH, batch.len() as u64, 0, mark, batch);
+    kv.apply_batch_inner(m, t, heap, batch, log, Some((ctx.done_slot(), seq)))
+}
+
+/// A thread's checkpoint record as read from a (crash) image.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub seq: u64,
+    pub opcode: u64,
+    pub key: u64,
+    pub val: u64,
+    pub mark: Addr,
+    pub done: u64,
+    /// Batch payload (populated for [`OP_KV_BATCH`]; `key` is its len).
+    pub batch: Vec<(u64, u64)>,
+}
+
+impl Checkpoint {
+    /// True when the announced op did not complete: recovery must
+    /// re-execute it from this record (after [`rollback_in_image`]).
+    pub fn needs_replay(&self) -> bool {
+        self.seq != 0 && self.done != self.seq
+    }
+}
+
+/// Read `thread`'s checkpoint out of a reconstructed PM image.
+pub fn read_checkpoint(image: &HashMap<Addr, u64>, thread: usize) -> Checkpoint {
+    let base = ckpt_base_for(thread);
+    let get = |s: u64| image.get(&(base + s * LINE)).copied().unwrap_or(0);
+    let opcode = get(SLOT_OPCODE);
+    let key = get(SLOT_KEY);
+    let batch = if opcode == OP_KV_BATCH {
+        (0..key)
+            .map(|i| (get(SLOT_ARGS + 2 * i), get(SLOT_ARGS + 2 * i + 1)))
+            .collect()
+    } else {
+        Vec::new()
+    };
+    Checkpoint {
+        seq: get(SLOT_SEQ),
+        opcode,
+        key,
+        val: get(SLOT_VAL),
+        mark: get(SLOT_MARK),
+        done: get(SLOT_DONE),
+        batch,
+    }
+}
+
+/// Undo an active transaction inside a crash image: restore the logged
+/// old values newest-first and invalidate the log — the first recovery
+/// step, run *before* reading the checkpoint so a torn commit's `done`
+/// stamp is rolled back with the rest of the transaction. Returns the
+/// number of restored writes (0 when the log was not active).
+pub fn rollback_in_image(image: &mut HashMap<Addr, u64>, log_base: Addr) -> usize {
+    let plan = rollback_plan(image, log_base);
+    for &(addr, old) in &plan {
+        image.insert(addr, old);
+    }
+    image.insert(log_base, LOG_INVALID);
+    plan.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Platform, StrategyKind};
+    use crate::coordinator::ConcurrencyConfig;
+    use crate::pstore::log_base_for;
+
+    fn mirror() -> Mirror {
+        Mirror::new(Platform::default(), StrategyKind::NoSm, false)
+    }
+
+    #[test]
+    fn completed_op_is_detectable_from_pm() {
+        let mut m = mirror();
+        let mut t = ThreadCtx::new(0);
+        let mut h = PmHeap::new();
+        let mut tree = CritBitTree::new(0);
+        let mut ctx = DetectCtx::new(0, 1);
+        let log = log_base_for(0);
+        assert!(tree_insert(&mut tree, &mut m, &mut t, &mut h, &mut ctx, 7, 70, log));
+        // Checkpoint and stamp are in PM: done == seq == 1.
+        assert_eq!(m.peek(ckpt_base_for(0)), 1, "published seq");
+        assert_eq!(m.peek(ctx.done_slot()), 1, "stamped done");
+        assert_eq!(m.peek(ckpt_base_for(0) + SLOT_OPCODE * LINE), OP_TREE_INSERT);
+        let mut t2 = ThreadCtx::new(0);
+        assert_eq!(tree.get(&mut m, &mut t2, 7), Some(70));
+        // A second op bumps both.
+        assert!(!tree_insert(&mut tree, &mut m, &mut t, &mut h, &mut ctx, 7, 71, log));
+        assert_eq!(m.peek(ckpt_base_for(0)), 2);
+        assert_eq!(m.peek(ctx.done_slot()), 2);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_through_an_image() {
+        let mut m = mirror();
+        let mut t = ThreadCtx::new(0);
+        let mut h = PmHeap::new();
+        let mut kv = KvStore::create(&mut h, 16, 0);
+        let mut ctx = DetectCtx::new(0, 1);
+        let log = log_base_for(0);
+        let batch = [(1u64, 10u64), (2, 20)];
+        kv_apply_batch(&mut kv, &mut m, &mut t, &mut h, &mut ctx, &batch, log);
+        // Model "image" = primary PM contents.
+        let img: HashMap<Addr, u64> =
+            m.image().iter().map(|(&a, &v)| (a, v)).collect();
+        let ck = read_checkpoint(&img, 0);
+        assert_eq!(ck.seq, 1);
+        assert_eq!(ck.opcode, OP_KV_BATCH);
+        assert_eq!(ck.batch, vec![(1, 10), (2, 20)]);
+        assert!(!ck.needs_replay(), "done stamp covers the batch");
+    }
+
+    #[test]
+    fn rollback_undoes_a_torn_commit_stamp() {
+        // Build an image where op 2's txn logged-and-stamped but never
+        // invalidated its log: rollback must restore done = 1 and the
+        // data write, flipping needs_replay on.
+        use crate::txn::LOG_ACTIVE;
+        let base = ckpt_base_for(0);
+        let log = log_base_for(0);
+        let data = 0x0100_0000_0040u64;
+        let mut img: HashMap<Addr, u64> = HashMap::new();
+        img.insert(base + SLOT_SEQ * LINE, 2);
+        img.insert(base + SLOT_OPCODE * LINE, OP_MAP_PUT);
+        img.insert(base + SLOT_DONE * LINE, 2); // torn: stamped...
+        img.insert(log, LOG_ACTIVE | 2); // ...but log still active
+        img.insert(log + LINE, data);
+        img.insert(log + 2 * LINE, 5); // old data value
+        img.insert(log + 3 * LINE, base + SLOT_DONE * LINE);
+        img.insert(log + 4 * LINE, 1); // old done value
+        img.insert(data, 6);
+        assert_eq!(rollback_in_image(&mut img, log), 2);
+        assert_eq!(img[&data], 5);
+        assert_eq!(img[&log], LOG_INVALID);
+        let ck = read_checkpoint(&img, 0);
+        assert_eq!(ck.done, 1);
+        assert!(ck.needs_replay(), "rolled-back op must be re-executed");
+    }
+
+    #[test]
+    fn contention_burns_cpu_scaled_by_pipelines() {
+        let cost = |contenders, pipelines| {
+            let mut m = mirror();
+            m.set_concurrency(ConcurrencyConfig::new(pipelines, 0));
+            let mut t = ThreadCtx::new(0);
+            let mut h = PmHeap::new();
+            let mut tree = CritBitTree::new(0);
+            let mut ctx = DetectCtx::new(0, contenders);
+            tree_insert(&mut tree, &mut m, &mut t, &mut h, &mut ctx, 1, 1, log_base_for(0));
+            t.clock.busy_ns
+        };
+        let solo = cost(1, 1);
+        let contended = cost(4, 1);
+        assert_eq!(contended - solo, 3 * CAS_RETRY_NS, "one retry per rival");
+        let piped = cost(4, 4);
+        assert!(piped < contended, "pipelines relieve publish contention");
+        assert_eq!(piped, solo + 3 * CAS_RETRY_NS / 4);
+    }
+}

@@ -94,21 +94,50 @@ impl PHashMap {
         log: Addr,
         hint: Option<TxnShape>,
     ) -> bool {
+        self.put_inner(m, t, heap, key, val, log, hint, None)
+    }
+
+    /// Put with an optional detectable-op stamp: `Some((slot, seq))`
+    /// appends one extra write to the mutation transaction setting
+    /// `slot = seq`, so op completion is atomic with the commit (see
+    /// [`super::detect`]). `None` is the plain path, event-for-event.
+    #[allow(clippy::too_many_arguments)]
+    pub fn put_inner(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        key: u64,
+        val: u64,
+        log: Addr,
+        hint: Option<TxnShape>,
+        stamp: Option<(Addr, u64)>,
+    ) -> bool {
         let (_, node) = self.find(m, t, key);
         if node != 0 {
             let mut tx = Txn::begin(m, t, log, hint);
             tx.write(m, t, node + LINE, val);
+            if let Some((slot, seq)) = stamp {
+                tx.write(m, t, slot, seq);
+            }
             tx.commit(m, t);
             return false;
         }
         let head_slot = self.bucket_slot(key);
         let head = m.load(t, head_slot);
-        let new = heap.alloc(3);
+        let new = if stamp.is_some() {
+            heap.alloc_seq(3)
+        } else {
+            heap.alloc(3)
+        };
         let mut tx = Txn::begin(m, t, log, hint);
         tx.write(m, t, new, key);
         tx.write(m, t, new + LINE, val);
         tx.write(m, t, new + 2 * LINE, head);
         tx.write(m, t, head_slot, new); // atomic publish
+        if let Some((slot, seq)) = stamp {
+            tx.write(m, t, slot, seq);
+        }
         tx.commit(m, t);
         self.len += 1;
         true

@@ -37,6 +37,22 @@ impl PmHeap {
         }
     }
 
+    /// Rebuild a heap at a recorded bump watermark — the post-crash
+    /// rescan model: the bump pointer is recovered from a detectable-op
+    /// checkpoint ([`super::detect`]) and the volatile free lists start
+    /// empty, so a replayed op re-allocates at the same addresses.
+    pub fn at_mark(mark: Addr) -> Self {
+        let mut h = Self::new();
+        assert!(mark >= h.next && mark <= h.end, "mark outside the heap");
+        h.next = mark;
+        h
+    }
+
+    /// Current bump watermark (detectable-op checkpoints persist this).
+    pub fn mark(&self) -> Addr {
+        self.next
+    }
+
     /// Allocate `lines` consecutive cache lines; returns the base address.
     pub fn alloc(&mut self, lines: usize) -> Addr {
         assert!(lines > 0);
@@ -46,6 +62,21 @@ impl PmHeap {
                 return a;
             }
         }
+        self.bump(lines)
+    }
+
+    /// Bump-only allocation: skips free-list reuse so the address
+    /// depends only on the watermark. Detectable ops allocate through
+    /// this — replaying a crashed op from its checkpointed mark then
+    /// lands every node at the original address (free lists are
+    /// volatile, so their contents cannot survive into a replay).
+    pub fn alloc_seq(&mut self, lines: usize) -> Addr {
+        assert!(lines > 0);
+        self.allocated_lines += lines as u64;
+        self.bump(lines)
+    }
+
+    fn bump(&mut self, lines: usize) -> Addr {
         let a = self.next;
         self.next += (lines as Addr) * LINE;
         assert!(self.next <= self.end, "PM heap exhausted");

@@ -54,6 +54,22 @@ impl KvStore {
         batch: &[(u64, u64)],
         log: Addr,
     ) {
+        self.apply_batch_inner(m, t, heap, batch, log, None)
+    }
+
+    /// Batch apply with an optional detectable-op stamp: `Some((slot,
+    /// seq))` appends one extra write to the batch transaction setting
+    /// `slot = seq`, so batch completion is atomic with the commit (see
+    /// [`super::detect`]). `None` is the plain path, event-for-event.
+    pub fn apply_batch_inner(
+        &mut self,
+        m: &mut Mirror,
+        t: &mut ThreadCtx,
+        heap: &mut PmHeap,
+        batch: &[(u64, u64)],
+        log: Addr,
+        stamp: Option<(Addr, u64)>,
+    ) {
         // Shape hint: each put is ~2 epochs (log+mutate), + generation.
         let hint = TxnShape {
             epochs: (batch.len() as f32) * 2.0 + 3.0,
@@ -68,7 +84,11 @@ impl KvStore {
             } else {
                 let head_slot = self.map_bucket_slot(key);
                 let head = m.load(t, head_slot);
-                let new = heap.alloc(3);
+                let new = if stamp.is_some() {
+                    heap.alloc_seq(3)
+                } else {
+                    heap.alloc(3)
+                };
                 tx.write(m, t, new, key);
                 tx.write(m, t, new + LINE, val);
                 tx.write(m, t, new + 2 * LINE, head);
@@ -78,6 +98,9 @@ impl KvStore {
         }
         let gen = m.peek(self.gen_addr);
         tx.write(m, t, self.gen_addr, gen + 1);
+        if let Some((slot, seq)) = stamp {
+            tx.write(m, t, slot, seq);
+        }
         tx.commit(m, t);
         self.batches_applied += 1;
     }

@@ -13,12 +13,14 @@
 //! observes).
 
 pub mod cbtree;
+pub mod detect;
 pub mod hashmap;
 pub mod heap;
 pub mod kvstore;
 pub mod nstore;
 
 pub use cbtree::CritBitTree;
+pub use detect::DetectCtx;
 pub use hashmap::PHashMap;
 pub use heap::PmHeap;
 pub use kvstore::KvStore;
@@ -31,8 +33,15 @@ use crate::Addr;
 pub const REGION_HEAP: Addr = 0x0100_0000_0000;
 pub const REGION_LOGS: Addr = 0x0200_0000_0000;
 pub const REGION_ROOTS: Addr = 0x0300_0000_0000;
+/// Per-thread detectable-operation checkpoints (see [`detect`]).
+pub const REGION_CKPT: Addr = 0x0400_0000_0000;
 
 /// Per-thread undo-log base (disjoint 1 MiB log areas).
 pub fn log_base_for(thread: usize) -> Addr {
     REGION_LOGS + (thread as Addr) * 0x10_0000
+}
+
+/// Per-thread detectable-op checkpoint base (disjoint 1 MiB areas).
+pub fn ckpt_base_for(thread: usize) -> Addr {
+    REGION_CKPT + (thread as Addr) * 0x10_0000
 }

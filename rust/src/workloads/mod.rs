@@ -5,7 +5,7 @@ pub mod transact;
 pub mod whisper;
 
 pub use transact::{
-    run_append_on, run_transact, run_transact_coalesced, run_transact_sharded,
-    run_transact_with, AppendConfig, TransactConfig,
+    run_append_on, run_transact, run_transact_coalesced, run_transact_concurrent,
+    run_transact_sharded, run_transact_with, AppendConfig, TransactConfig,
 };
 pub use whisper::{run_whisper, run_whisper_with, WhisperApp, WhisperConfig};

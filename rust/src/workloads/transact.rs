@@ -148,6 +148,25 @@ pub fn run_transact_coalesced(
     Ok(run_transact_on(&mut mirror, cfg))
 }
 
+/// Run Transact under the concurrent-primary model: per-shard commit
+/// pipelines plus cross-thread group fencing (see
+/// [`crate::coordinator::pipeline`] and the group-fence window on
+/// [`crate::net::Fabric`]). The default config is the serial anchor —
+/// event-for-event the plain group path. Fails on an invalid
+/// replication or concurrency config.
+pub fn run_transact_concurrent(
+    plat: &Platform,
+    kind: StrategyKind,
+    repl: ReplicationConfig,
+    conc: crate::coordinator::ConcurrencyConfig,
+    cfg: TransactConfig,
+) -> Result<RunOutcome> {
+    conc.validate()?;
+    let mut mirror = Mirror::try_build(plat.clone(), kind, None, repl, false)?;
+    mirror.set_concurrency(conc);
+    Ok(run_transact_on(&mut mirror, cfg))
+}
+
 /// Run Transact against `sharding.shards` independent replica groups
 /// partitioning the PM line-address space (see
 /// [`crate::coordinator::shard`]); each shard gets the `repl` group
@@ -481,6 +500,61 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out.txns, 200);
+    }
+
+    #[test]
+    fn concurrent_runner_piggybacks_and_anchors() {
+        use crate::config::ReplicationConfig;
+        use crate::coordinator::ConcurrencyConfig;
+        let p = Platform::default();
+        let cfg = TransactConfig {
+            threads: 2,
+            txns: 100,
+            ..small(4, 1)
+        };
+        // Default concurrency = the serial anchor, event-for-event.
+        let serial =
+            run_transact_with(&p, StrategyKind::SmOb, None, ReplicationConfig::default(), cfg)
+                .unwrap();
+        let anchored = run_transact_concurrent(
+            &p,
+            StrategyKind::SmOb,
+            ReplicationConfig::default(),
+            ConcurrencyConfig::default(),
+            cfg,
+        )
+        .unwrap();
+        assert_eq!(anchored.makespan, serial.makespan);
+        assert_eq!(anchored.busy_ns, serial.busy_ns);
+        assert_eq!(anchored.fences_issued, serial.fences_issued);
+        assert_eq!(anchored.fence_piggybacks, 0);
+        // A group-fence window lets the second thread's commits ride the
+        // first's: fewer issued fences, strictly less CPU.
+        let grouped = run_transact_concurrent(
+            &p,
+            StrategyKind::SmOb,
+            ReplicationConfig::default(),
+            ConcurrencyConfig::new(2, 2_600),
+            cfg,
+        )
+        .unwrap();
+        assert!(grouped.fence_piggybacks > 0, "window must piggyback");
+        assert!(grouped.fences_issued < serial.fences_issued);
+        assert!(grouped.busy_ns < serial.busy_ns, "piggybacks save post cost");
+        assert_eq!(
+            grouped.fences_issued + grouped.fence_piggybacks,
+            serial.fences_issued,
+            "every commit still fences — some just share the issue"
+        );
+        // Invalid shapes surface as errors.
+        assert!(run_transact_concurrent(
+            &p,
+            StrategyKind::SmOb,
+            ReplicationConfig::default(),
+            ConcurrencyConfig::new(0, 0),
+            cfg,
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,485 @@
+//! Integration: the concurrent primary — commit pipelines, cross-thread
+//! group fencing, and detectable pstore operations.
+//!
+//! Three layers of guarantees are pinned here:
+//!
+//! 1. **The serial anchor.** The default concurrency shape
+//!    (`--commit-pipelines 1 --group-fence-ns 0`) must be *event-for-event*
+//!    identical to the pre-concurrency replica-group path: every
+//!    `RunOutcome` counter and every backup ledger event, across
+//!    strategies and thread counts.
+//! 2. **Group-fence soundness.** A piggybacked fence skips the requester's
+//!    verb post, but the responder-side drain still persists everything —
+//!    so backup ledgers, persist horizons, and per-txn durability acks
+//!    are unchanged; only issued-fence count and primary busy time drop.
+//! 3. **Detectable-op crash recovery.** For every possible crash instant
+//!    in a run of detectable operations (every durable-event time in the
+//!    backup ledger), recovering the image — rollback, checkpoint read,
+//!    and (when needed) deterministic replay — must land on exactly the
+//!    durable image and replicated write sequence of the uninterrupted
+//!    run. Exercised for all three stamped structures (crit-bit tree,
+//!    hashmap, echo KV batches).
+
+use std::collections::HashMap;
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{ConcurrencyConfig, Mirror, ThreadCtx};
+use pmsm::mem::{DurEvent, DurabilityLog};
+use pmsm::pstore::detect::{
+    kv_apply_batch, map_put, read_checkpoint, rollback_in_image, tree_insert, Checkpoint,
+    OP_KV_BATCH, OP_MAP_PUT, OP_TREE_INSERT,
+};
+use pmsm::pstore::{
+    log_base_for, CritBitTree, DetectCtx, KvStore, PHashMap, PmHeap, REGION_CKPT, REGION_HEAP,
+    REGION_LOGS, REGION_ROOTS,
+};
+use pmsm::workloads::transact::{run_transact_concurrent, run_transact_on, run_transact_with};
+use pmsm::workloads::TransactConfig;
+use pmsm::{Addr, Ns};
+
+fn repl2() -> ReplicationConfig {
+    ReplicationConfig::new(2, AckPolicy::All)
+}
+
+fn cfg(threads: usize, txns: u64) -> TransactConfig {
+    TransactConfig {
+        epochs: 4,
+        writes: 1,
+        txns,
+        threads,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. The serial anchor: default concurrency shape == the legacy path.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn default_concurrency_pins_the_serial_path_event_for_event() {
+    let plat = Platform::default();
+    for kind in [StrategyKind::SmOb, StrategyKind::SmRc] {
+        for threads in [1usize, 4] {
+            let base = run_transact_with(&plat, kind, None, repl2(), cfg(threads, 60)).unwrap();
+            let anchored = run_transact_concurrent(
+                &plat,
+                kind,
+                repl2(),
+                ConcurrencyConfig::default(),
+                cfg(threads, 60),
+            )
+            .unwrap();
+            let tag = format!("{kind:?} threads={threads}");
+            assert_eq!(base.makespan, anchored.makespan, "{tag}: makespan");
+            assert_eq!(base.txns, anchored.txns, "{tag}: txns");
+            assert_eq!(base.writes, anchored.writes, "{tag}: writes");
+            assert_eq!(base.epochs, anchored.epochs, "{tag}: epochs");
+            assert_eq!(base.busy_ns, anchored.busy_ns, "{tag}: busy_ns");
+            assert_eq!(base.doorbells, anchored.doorbells, "{tag}: doorbells");
+            assert_eq!(base.posted_wqes, anchored.posted_wqes, "{tag}: posted_wqes");
+            assert_eq!(base.wire_wqes, anchored.wire_wqes, "{tag}: wire_wqes");
+            assert_eq!(base.per_thread, anchored.per_thread, "{tag}: per-thread times");
+            assert_eq!(
+                base.per_backup_horizon, anchored.per_backup_horizon,
+                "{tag}: persist horizons"
+            );
+            // The counters count in both paths (window 0 = counter-only).
+            assert_eq!(base.fences_issued, anchored.fences_issued, "{tag}: fences");
+            assert_eq!(anchored.fence_piggybacks, 0, "{tag}: no window, no piggybacks");
+            assert_eq!(anchored.pipeline_waits, 0, "{tag}: anchor bypasses pipelines");
+            assert_eq!(anchored.pipeline_wait_ns, 0, "{tag}");
+            assert_eq!(anchored.pipeline_occupancy(), 0.0, "{tag}");
+        }
+    }
+}
+
+#[test]
+fn default_concurrency_pins_the_backup_ledgers() {
+    // Ledger-level identity: the anchored mirror's replicated write
+    // stream matches the legacy mirror's on every backup, event for
+    // event (addresses, values, durability instants, coordinates).
+    let plat = Platform::default();
+    let mut base =
+        Mirror::try_build(plat.clone(), StrategyKind::SmOb, None, repl2(), true).unwrap();
+    let mut anchored =
+        Mirror::try_build(plat.clone(), StrategyKind::SmOb, None, repl2(), true).unwrap();
+    anchored.set_concurrency(ConcurrencyConfig::default());
+    let c = cfg(4, 40);
+    let ob = run_transact_on(&mut base, c);
+    let oa = run_transact_on(&mut anchored, c);
+    assert_eq!(ob.makespan, oa.makespan);
+    for b in 0..2 {
+        assert_eq!(
+            base.backup(b).ledger.events(),
+            anchored.backup(b).ledger.events(),
+            "backup {b} ledger diverged"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Group-fence soundness: piggybacking saves work, never durability.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn piggybacked_fences_conserve_commit_count_and_cut_busy() {
+    let plat = Platform::default();
+    let serial = run_transact_concurrent(
+        &plat,
+        StrategyKind::SmOb,
+        repl2(),
+        ConcurrencyConfig::default(),
+        cfg(4, 80),
+    )
+    .unwrap();
+    let grouped = run_transact_concurrent(
+        &plat,
+        StrategyKind::SmOb,
+        repl2(),
+        ConcurrencyConfig::new(4, 2_600),
+        cfg(4, 80),
+    )
+    .unwrap();
+    assert_eq!(grouped.txns, serial.txns, "every txn must still commit");
+    assert!(grouped.fence_piggybacks > 0, "contending threads must share fences");
+    // SM-OB blocks exactly one fence per commit: piggybacks account for
+    // every fence the grouped run did not issue.
+    assert_eq!(
+        grouped.fences_issued + grouped.fence_piggybacks,
+        serial.fences_issued,
+        "fence conservation"
+    );
+    assert!(grouped.fences_issued < serial.fences_issued);
+    assert!(grouped.fences_per_txn() < serial.fences_per_txn());
+    assert!(
+        grouped.busy_ns < serial.busy_ns,
+        "skipped verb posts must show up as saved CPU: {} vs {}",
+        grouped.busy_ns,
+        serial.busy_ns
+    );
+    // fences_issued <= txns_committed — the CI-gated counter invariant.
+    assert!(grouped.fences_issued <= grouped.txns);
+}
+
+#[test]
+fn piggybacked_fences_do_not_weaken_durability() {
+    // A grouped run must replicate the same number of line writes to
+    // every backup, and the backup images at their persist horizons must
+    // cover the primary image — piggybacking elides requester verbs,
+    // not responder persistence.
+    let plat = Platform::default();
+    let drive = |conc: ConcurrencyConfig| {
+        let mut m =
+            Mirror::try_build(plat.clone(), StrategyKind::SmOb, None, repl2(), true).unwrap();
+        m.set_concurrency(conc);
+        let out = run_transact_on(&mut m, cfg(4, 40));
+        (m, out)
+    };
+    let (serial_m, serial_out) = drive(ConcurrencyConfig::default());
+    let (grouped_m, grouped_out) = drive(ConcurrencyConfig::new(4, 2_600));
+    assert!(grouped_out.fence_piggybacks > 0);
+    for b in 0..2 {
+        let s = &serial_m.backup(b).ledger;
+        let g = &grouped_m.backup(b).ledger;
+        assert_eq!(s.len(), g.len(), "backup {b}: replicated write count changed");
+        // Same data stream: identical (addr, val) multiset per thread
+        // order; only durability instants may shift.
+        let key = |l: &DurabilityLog| {
+            let mut v: Vec<(u32, u64, Addr, u64)> = l
+                .events()
+                .iter()
+                .map(|e| (e.thread, e.seq, e.addr, e.val))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(key(s), key(g), "backup {b}: data stream diverged");
+        // The backup image at its horizon covers the primary image.
+        let img = g.image_at(g.horizon());
+        for (a, v) in grouped_m.image().iter() {
+            assert_eq!(img.get(a), Some(v), "backup {b}: line {a:#x} lost");
+        }
+    }
+    // Per-txn durability acks still cover every backup's horizon.
+    for (b, &h) in grouped_out.per_backup_horizon.iter().enumerate() {
+        assert!(h > 0, "backup {b} never persisted");
+    }
+}
+
+#[test]
+fn pipeline_counters_track_commit_fan_out() {
+    let plat = Platform::default();
+    let at = |p: usize| {
+        run_transact_concurrent(
+            &plat,
+            StrategyKind::SmOb,
+            repl2(),
+            ConcurrencyConfig::new(p, 2_600),
+            cfg(4, 60),
+        )
+        .unwrap()
+    };
+    let narrow = at(1);
+    let wide = at(4);
+    assert_eq!(narrow.commit_pipelines, 1);
+    assert_eq!(wide.commit_pipelines, 4);
+    assert!(narrow.pipeline_waits > 0, "P=1 must queue contending commits");
+    assert!(
+        wide.pipeline_wait_ns < narrow.pipeline_wait_ns,
+        "widening the fan-out must cut queueing: {} vs {}",
+        wide.pipeline_wait_ns,
+        narrow.pipeline_wait_ns
+    );
+    assert!(narrow.pipeline_occupancy() > 0.0 && narrow.pipeline_occupancy() <= 1.0);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Detectable-op crash recovery: kill at every durable instant, replay,
+//    and land on the uninterrupted run's image + replicated sequence.
+// ---------------------------------------------------------------------------
+
+/// Durable data regions the recovery comparison covers: heap + roots.
+/// The log region (consumed by rollback) and the checkpoint region
+/// (partially-announced ops are *expected* to differ pre-replay) are
+/// bookkeeping, not payload.
+fn data_region(addr: Addr) -> bool {
+    (REGION_HEAP..REGION_LOGS).contains(&addr) || (REGION_ROOTS..REGION_CKPT).contains(&addr)
+}
+
+/// PM images compare with absent-means-zero semantics (a rolled-back
+/// first write restores the line to 0; the golden image simply never
+/// mentions it).
+fn assert_images_match(got: &HashMap<Addr, u64>, want: &HashMap<Addr, u64>, tag: &str) {
+    for addr in got.keys().chain(want.keys()) {
+        if !data_region(*addr) {
+            continue;
+        }
+        let g = got.get(addr).copied().unwrap_or(0);
+        let w = want.get(addr).copied().unwrap_or(0);
+        assert_eq!(g, w, "{tag}: line {addr:#x} diverged (got {g}, want {w})");
+    }
+}
+
+/// Drive `golden` (a sequence of detectable ops on a ledgered mirror,
+/// returning the per-op completion instants), then for EVERY durable
+/// event time in the backup ledger: reconstruct the crash image, run
+/// recovery (rollback -> checkpoint -> optional `replay`), and check the
+/// result against the uninterrupted run — both the durable data image
+/// and, for re-executed ops, the exact replicated (addr, val) sequence.
+fn check_crash_replay(
+    golden: impl Fn(&mut Mirror, &mut ThreadCtx) -> Vec<Ns>,
+    replay: impl Fn(&mut Mirror, &mut ThreadCtx, &Checkpoint),
+) {
+    let plat = Platform::default();
+    let mut gm = Mirror::new(plat.clone(), StrategyKind::SmOb, true);
+    let mut gt = ThreadCtx::new(0);
+    let boundaries = golden(&mut gm, &mut gt);
+    let ledger = gm.backup(0).ledger.clone();
+    assert!(ledger.horizon() > 0, "golden run replicated nothing");
+
+    // bounds[s] = instant op `s` was complete (s = 0: before any op);
+    // expected[s] = the durable data image at that instant.
+    let mut bounds: Vec<Ns> = vec![0];
+    bounds.extend(&boundaries);
+    let expected: Vec<HashMap<Addr, u64>> =
+        bounds.iter().map(|&b| ledger.image_at(b)).collect();
+    let log = log_base_for(0);
+
+    let mut crash_times: Vec<Ns> = ledger.events().iter().map(|e| e.at).collect();
+    crash_times.push(0);
+    crash_times.sort_unstable();
+    crash_times.dedup();
+
+    let mut replays = 0usize;
+    let mut completes = 0usize;
+    for &t_crash in &crash_times {
+        let mut img = ledger.image_at(t_crash);
+        // Recovery step 1: roll back the active undo log FIRST, so a
+        // torn commit's done stamp reverts with the rest of its txn.
+        rollback_in_image(&mut img, log);
+        // Recovery step 2: the checkpoint now decides.
+        let ck = read_checkpoint(&img, 0);
+        assert!(
+            (ck.seq as usize) < expected.len(),
+            "crash@{t_crash}: checkpoint seq {} out of range",
+            ck.seq
+        );
+        if !ck.needs_replay() {
+            completes += 1;
+            assert_images_match(
+                &img,
+                &expected[ck.seq as usize],
+                &format!("crash@{t_crash} (complete, seq {})", ck.seq),
+            );
+            continue;
+        }
+        replays += 1;
+        let s = ck.seq as usize;
+        // Recovery step 3: re-execute op `seq` from the checkpointed
+        // arguments on a fresh mirror preloaded with the crash image.
+        let mut rm = Mirror::new(plat.clone(), StrategyKind::SmOb, true);
+        let mut rt = ThreadCtx::new(0);
+        for (&a, &v) in &img {
+            rm.store(&mut rt, a, v);
+        }
+        replay(&mut rm, &mut rt, &ck);
+        let final_img: HashMap<Addr, u64> =
+            rm.image().iter().map(|(&a, &v)| (a, v)).collect();
+        assert_images_match(
+            &final_img,
+            &expected[s],
+            &format!("crash@{t_crash} (replayed seq {})", ck.seq),
+        );
+        // The replayed op must replicate exactly the golden op's write
+        // sequence: same (addr, val) lines in the same issue order.
+        let mut want: Vec<&DurEvent> = ledger
+            .events()
+            .iter()
+            .filter(|e| e.at > bounds[s - 1] && e.at <= bounds[s])
+            .collect();
+        want.sort_unstable_by_key(|e| e.seq);
+        let mut got: Vec<&DurEvent> = rm.backup(0).ledger.events().iter().collect();
+        got.sort_unstable_by_key(|e| e.seq);
+        assert_eq!(
+            want.len(),
+            got.len(),
+            "crash@{t_crash}: replay of seq {} replicated {} writes, golden did {}",
+            ck.seq,
+            got.len(),
+            want.len()
+        );
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(
+                (w.addr, w.val),
+                (g.addr, g.val),
+                "crash@{t_crash}: replay of seq {} diverged at write #{}",
+                ck.seq,
+                w.seq
+            );
+        }
+    }
+    assert!(replays > 0, "no crash instant exercised a replay");
+    assert!(completes > 0, "no crash instant found a completed op");
+}
+
+#[test]
+fn cbtree_replays_to_the_same_image_from_any_crash_point() {
+    // Mix of fresh keys (empty-root install + splice paths) and repeats
+    // (update-in-place path).
+    const OPS: [(u64, u64); 12] = [
+        (5, 50),
+        (9, 90),
+        (5, 51),
+        (12, 120),
+        (3, 30),
+        (9, 91),
+        (7, 70),
+        (1, 10),
+        (5, 52),
+        (30, 300),
+        (2, 20),
+        (12, 121),
+    ];
+    check_crash_replay(
+        |m, t| {
+            let mut heap = PmHeap::new();
+            let mut tree = CritBitTree::new(0);
+            let mut ctx = DetectCtx::new(0, 1);
+            let log = log_base_for(0);
+            OPS.iter()
+                .map(|&(k, v)| {
+                    tree_insert(&mut tree, m, t, &mut heap, &mut ctx, k, v, log);
+                    t.now()
+                })
+                .collect()
+        },
+        |m, t, ck| {
+            assert_eq!(ck.opcode, OP_TREE_INSERT);
+            // Bump-only allocation from the checkpointed watermark makes
+            // the replay address-deterministic.
+            let mut heap = PmHeap::at_mark(ck.mark);
+            let mut tree = CritBitTree::new(0);
+            let mut ctx = DetectCtx::resume(0, 1, ck.seq - 1);
+            tree_insert(&mut tree, m, t, &mut heap, &mut ctx, ck.key, ck.val, log_base_for(0));
+        },
+    );
+}
+
+#[test]
+fn hashmap_replays_to_the_same_image_from_any_crash_point() {
+    const OPS: [(u64, u64); 10] = [
+        (1, 100),
+        (2, 200),
+        (17, 170), // collides with 1 mod 16
+        (1, 101),
+        (4, 400),
+        (33, 330),
+        (2, 201),
+        (8, 800),
+        (17, 171),
+        (6, 600),
+    ];
+    check_crash_replay(
+        |m, t| {
+            let mut heap = PmHeap::new();
+            let mut map = PHashMap::create(&mut heap, 16);
+            let mut ctx = DetectCtx::new(0, 1);
+            let log = log_base_for(0);
+            OPS.iter()
+                .map(|&(k, v)| {
+                    map_put(&mut map, m, t, &mut heap, &mut ctx, k, v, log);
+                    t.now()
+                })
+                .collect()
+        },
+        |m, t, ck| {
+            assert_eq!(ck.opcode, OP_MAP_PUT);
+            // Recreate the handle the way the golden run did — the
+            // bucket-array alloc is the heap's first, so the address is
+            // deterministic — THEN jump the heap to the checkpointed
+            // watermark for the replayed op's node allocations.
+            let mut heap = PmHeap::new();
+            let mut map = PHashMap::create(&mut heap, 16);
+            let mut heap = PmHeap::at_mark(ck.mark);
+            let mut ctx = DetectCtx::resume(0, 1, ck.seq - 1);
+            map_put(&mut map, m, t, &mut heap, &mut ctx, ck.key, ck.val, log_base_for(0));
+        },
+    );
+}
+
+#[test]
+fn kvstore_batches_replay_to_the_same_image_from_any_crash_point() {
+    // Echo batches: the whole batch is the checkpointed payload, so a
+    // replay re-applies exactly the lost client updates.
+    let batches: Vec<Vec<(u64, u64)>> = vec![
+        vec![(1, 10), (2, 20), (3, 30)],
+        vec![(1, 11), (4, 40)],
+        vec![(5, 50), (2, 21), (6, 60)],
+        vec![(7, 70)],
+    ];
+    let golden_batches = batches.clone();
+    check_crash_replay(
+        move |m, t| {
+            let mut heap = PmHeap::new();
+            let mut kv = KvStore::create(&mut heap, 16, 0);
+            let mut ctx = DetectCtx::new(0, 1);
+            let log = log_base_for(0);
+            golden_batches
+                .iter()
+                .map(|b| {
+                    kv_apply_batch(&mut kv, m, t, &mut heap, &mut ctx, b, log);
+                    t.now()
+                })
+                .collect()
+        },
+        |m, t, ck| {
+            assert_eq!(ck.opcode, OP_KV_BATCH);
+            assert_eq!(ck.batch.len(), ck.key as usize, "payload length stamp");
+            let mut heap = PmHeap::new();
+            let mut kv = KvStore::create(&mut heap, 16, 0);
+            let mut heap = PmHeap::at_mark(ck.mark);
+            let mut ctx = DetectCtx::resume(0, 1, ck.seq - 1);
+            kv_apply_batch(&mut kv, m, t, &mut heap, &mut ctx, &ck.batch, log_base_for(0));
+        },
+    );
+}
