@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import sys
 from pathlib import Path
 
@@ -35,11 +36,12 @@ SCHEMA_VERSION = 1
 
 REQUIRED_RESULT_KEYS = ("name", "iters", "mean_ns", "stddev_ns", "min_ns")
 OPTIONAL_NUMBER_KEYS = ("elems_per_iter", "elems_per_sec")
-# Staged-pipeline counters (rust/src/net/wqe.rs): optional everywhere,
-# but whenever present they must be non-negative ints, the amortization
-# lattice must hold (doorbells <= wire_wqes <= posted_wqes, i.e. mean
-# batch and mean span are both >= 1 whenever anything rang), and each
-# bench listed below must emit its counter set on every result.
+# Staged-pipeline and membership counters (rust/src/net/wqe.rs and
+# rust/src/net/membership.rs): optional everywhere, but whenever present
+# they must be non-negative ints, the amortization lattice must hold
+# (doorbells <= wire_wqes <= posted_wqes, i.e. mean batch and mean span
+# are both >= 1 whenever anything rang), and each bench listed below
+# must emit its counter set on every result.
 COUNTER_KEYS = (
     "doorbells",
     "posted_wqes",
@@ -49,6 +51,10 @@ COUNTER_KEYS = (
     "fences_issued",
     "fence_piggybacks",
     "txns_committed",
+    "membership_epochs",
+    "failover_downtime_ns",
+    "rereplicated_lines",
+    "revoked_wqes",
 )
 BENCHES_REQUIRING_COUNTERS = {
     "fig9_batching": ("doorbells", "posted_wqes", "busy_ns"),
@@ -62,6 +68,14 @@ BENCHES_REQUIRING_COUNTERS = {
     "fig11_concurrency": (
         "fences_issued",
         "fence_piggybacks",
+        "txns_committed",
+        "busy_ns",
+    ),
+    "fig12_failover_primary": (
+        "membership_epochs",
+        "failover_downtime_ns",
+        "rereplicated_lines",
+        "revoked_wqes",
         "txns_committed",
         "busy_ns",
     ),
@@ -215,12 +229,20 @@ def compare_against_baseline(files: list[Path], baseline_dir: str) -> list[str]:
                         f"{REGRESSION_TOLERANCE * 100.0:.0f}%) vs {bpath}"
                     )
     if compared == 0 and not errors:
-        # Informational only: until the first real bench run commits its
-        # baselines, there is nothing to regress against.
-        print(
-            f"check_bench_json: --compare found no overlapping counters "
-            f"under {baseline_dir!r}; skipping regression gate"
+        # Not a failure — until the first real bench run commits its
+        # baselines there is nothing to regress against — but it MUST be
+        # loud: a silently skipped gate reads as a passing gate. Shout on
+        # stderr and, when running under GitHub Actions, surface a
+        # workflow warning annotation so the skip is visible on the run
+        # summary instead of buried in the job log.
+        msg = (
+            f"--compare found no overlapping counters under "
+            f"{baseline_dir!r}; the regression gate DID NOT RUN "
+            f"(commit baseline BENCH_*.json artifacts to arm it)"
         )
+        print(f"check_bench_json: WARNING: {msg}", file=sys.stderr)
+        if os.environ.get("GITHUB_ACTIONS") == "true":
+            print(f"::warning title=bench regression gate skipped::{msg}")
     return errors
 
 

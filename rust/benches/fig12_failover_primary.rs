@@ -1,0 +1,173 @@
+//! Figure-12 bench (ours): primary failover — the Transact
+//! microbenchmark swept over kill-time × ack-policy × shard count at
+//! `backups = 3`, with the *primary* killed mid-run so the membership
+//! layer must elect a successor (longest certified ledger prefix, ties
+//! to the lowest replica id), fence the old primary's staged WQE
+//! chains, re-replicate the winner's suffix, and re-admit writes.
+//! Reports completion (or the stall point when no successor can be
+//! seated), election downtime, revoked WQEs and re-replicated lines,
+//! plus simulator throughput while failing over. Emits
+//! `BENCH_fig12_failover_primary.json` for run-over-run perf tracking.
+//!
+//! Run: `cargo bench --bench fig12_failover_primary`
+//! Scale with PMSM_BENCH_TXNS (default 2000 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::{Mirror, ShardMapSpec, ShardingConfig};
+use pmsm::metrics::report::Table;
+use pmsm::net::{FaultsConfig, OnLoss};
+use pmsm::workloads::transact::{run_transact_faulted, run_transact_on};
+use pmsm::workloads::TransactConfig;
+
+/// Kill instants as fractions of the fault-free makespan.
+const KILL_FRACS: [(u64, u64); 3] = [(1, 4), (1, 2), (3, 4)];
+
+fn faults(plan: &str, on_loss: OnLoss) -> FaultsConfig {
+    FaultsConfig::with_plan(plan, on_loss).expect("valid plan")
+}
+
+/// `run_transact_sharded` pins a fault-free plan, so the faulted
+/// sharded cells build the mirror directly: `shards` lanes that must
+/// fail over as one node when the primary dies.
+fn run_cell(
+    plat: &Platform,
+    repl: ReplicationConfig,
+    faults: FaultsConfig,
+    shards: usize,
+    cfg: TransactConfig,
+) -> RunOutcome {
+    let mut mirror = Mirror::try_build_sharded(
+        plat.clone(),
+        StrategyKind::SmOb,
+        None,
+        repl,
+        faults,
+        ShardingConfig::new(shards, ShardMapSpec::Modulo),
+        false,
+    )
+    .expect("valid fault config");
+    run_transact_on(&mut mirror, cfg)
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2_000);
+    let plat = Platform::default();
+    let cfg = TransactConfig {
+        epochs: 4,
+        writes: 1,
+        txns,
+        ..Default::default()
+    };
+    let repl = |policy| ReplicationConfig::new(3, policy);
+
+    // Fault-free baseline places the kill instants.
+    let base = run_transact_faulted(
+        &plat,
+        StrategyKind::SmOb,
+        repl(AckPolicy::All),
+        FaultsConfig::default(),
+        cfg,
+    )
+    .expect("baseline")
+    .makespan;
+
+    // ---- Kill-time x ack-policy x shards matrix: kill the primary;
+    // the surviving backup with the longest certified prefix takes
+    // over (all shards as one node) and the run continues — or stalls
+    // under all-halt, which needs every one of the 3 original backups
+    // acking after failover leaves only 2.
+    let cells: [(AckPolicy, OnLoss); 4] = [
+        (AckPolicy::All, OnLoss::Halt),
+        (AckPolicy::All, OnLoss::Degrade),
+        (AckPolicy::Majority, OnLoss::Halt),
+        (AckPolicy::Quorum(2), OnLoss::Halt),
+    ];
+    let mut t = Table::new(&[
+        "kill@",
+        "policy",
+        "on_loss",
+        "shards",
+        "outcome",
+        "time",
+        "txns",
+        "epochs",
+        "downtime(ns)",
+        "rerepl",
+        "revoked",
+    ]);
+    for &(num, den) in &KILL_FRACS {
+        let kill_at = base * num / den;
+        let plan = format!("kill:p@{kill_at}");
+        for &(policy, on_loss) in &cells {
+            for shards in [1usize, 4] {
+                let out = run_cell(&plat, repl(policy), faults(&plan, on_loss), shards, cfg);
+                let outcome = match &out.stalled {
+                    Some(s) => format!("STALL@{}", s.at),
+                    None => "completed".to_string(),
+                };
+                t.row(vec![
+                    format!("{num}/{den}"),
+                    policy.to_string(),
+                    on_loss.to_string(),
+                    format!("{shards}"),
+                    outcome,
+                    format!("{:.2}x", out.makespan as f64 / base as f64),
+                    format!("{}", out.txns),
+                    format!("{}", out.membership_epochs),
+                    format!("{}", out.failover_downtime_ns),
+                    format!("{}", out.rereplicated_lines),
+                    format!("{}", out.revoked_wqes),
+                ]);
+            }
+        }
+    }
+    println!(
+        "Figure 12 — Transact 4-1 primary failover at backups=3 \
+         (kill the primary; longest certified prefix wins, all shards \
+         fail over as one node; time vs fault-free)\n{}",
+        t.render()
+    );
+
+    // ---- Simulator throughput while failing over (perf tracking).
+    // Each timed cell re-runs its failover end to end; the counters of
+    // the last run are annotated onto the result so the JSON artifact
+    // carries the membership-epoch dimension per cell.
+    let mut b = Bencher::new();
+    let kill_at = base / 2;
+    let plan = format!("kill:p@{kill_at}");
+    for (name, policy, on_loss, shards) in [
+        ("all-degrade/1", AckPolicy::All, OnLoss::Degrade, 1usize),
+        ("majority-halt/1", AckPolicy::Majority, OnLoss::Halt, 1),
+        ("quorum2-halt/1", AckPolicy::Quorum(2), OnLoss::Halt, 1),
+        ("quorum2-halt/4", AckPolicy::Quorum(2), OnLoss::Halt, 4),
+    ] {
+        let writes = cfg.txns * 4;
+        let mut last = None;
+        b.bench_elems(
+            &format!("transact/4-1/sm-ob/failover-primary/{name}"),
+            (writes * 3) as f64,
+            || {
+                let out = run_cell(&plat, repl(policy), faults(&plan, on_loss), shards, cfg);
+                let makespan = out.makespan;
+                last = Some(out);
+                makespan
+            },
+        );
+        let out = last.expect("bench ran at least once");
+        b.annotate_last(&[
+            ("membership_epochs", out.membership_epochs),
+            ("failover_downtime_ns", out.failover_downtime_ns),
+            ("rereplicated_lines", out.rereplicated_lines),
+            ("revoked_wqes", out.revoked_wqes),
+            ("txns_committed", out.txns),
+            ("busy_ns", out.busy_ns),
+        ]);
+    }
+    pmsm::bench::emit_json(&b, "fig12_failover_primary");
+}

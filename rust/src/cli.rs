@@ -109,6 +109,7 @@ pub fn help_text() -> &'static str {
                  [--backups N --ack-policy all|majority|quorum:K]\n\
                  [--fault-plan SPEC --on-loss halt|degrade]\n\
                  [--handoff-ns N --resync-line-ns N]\n\
+                 [--election-handoff-ns N --election-line-ns N]\n\
                  [--shards S --shard-map modulo|range|range:LINES]\n\
                  [--flush-policy eager|cap:K|fence --batch-cap K]\n\
                  [--coalesce none|combine|sg|full]\n\
@@ -120,6 +121,7 @@ pub fn help_text() -> &'static str {
                  [--backups N --ack-policy P --fault-plan SPEC --on-loss M]\n\
                  [--shards S --shard-map M --flush-policy P --batch-cap K]\n\
                  [--coalesce M --commit-pipelines N --group-fence-ns N]\n\
+                 [--election-handoff-ns N --election-line-ns N]\n\
                  (cross-replica ledger check; fault-aware when a plan is\n\
                  set; per-shard checks + cross-shard merge when sharded)\n\
        config    print platform model parameters (Table 2)\n\
@@ -169,7 +171,20 @@ pub fn help_text() -> &'static str {
      A rejoining backup resyncs the missed ledger suffix from the\n\
      healthiest peer (--handoff-ns + lines x --resync-line-ns) before\n\
      re-entering the quorum. Under sharding a kill models the loss of\n\
-     a backup node: replica B of every shard dies at T.\n"
+     a backup node: replica B of every shard dies at T.\n\
+     \n\
+     PRIMARY FAILOVER: kill:p@T kills the primary itself. The fabric\n\
+     revokes its write permission (fencing in-flight staged WQE\n\
+     chains), runs a deterministic leader election — the surviving\n\
+     backup with the longest certified ledger prefix wins, ties to the\n\
+     lowest replica id — re-replicates the winner's certified suffix\n\
+     to lagging peers, and only then admits new writes (downtime =\n\
+     --election-handoff-ns + lines x --election-line-ns). Under\n\
+     sharding all S shards fail over as one node. rejoin:p@T brings\n\
+     the deposed primary back as a backup via the ordinary catch-up\n\
+     resync. A kill:p with no surviving candidate records a stall;\n\
+     rejoin:p is rejected under SM-RC (volatile backup state cannot\n\
+     host a demoted primary's catch-up resync).\n"
 }
 
 fn platform_from(args: &Args) -> Result<Platform> {
@@ -198,9 +213,11 @@ pub struct RunSetup {
 /// (via the `[replication]` / `[faults]` / `[sharding]` / `[batching]`
 /// / `[coalescing]` / `[concurrency]` sections); `--backups` /
 /// `--ack-policy` / `--fault-plan` / `--on-loss` / `--handoff-ns` /
-/// `--resync-line-ns` / `--shards` / `--shard-map` / `--flush-policy`
-/// / `--batch-cap` / `--coalesce` / `--commit-pipelines` /
-/// `--group-fence-ns` override.
+/// `--resync-line-ns` / `--election-handoff-ns` / `--election-line-ns`
+/// / `--shards` / `--shard-map` / `--flush-policy` / `--batch-cap` /
+/// `--coalesce` / `--commit-pipelines` / `--group-fence-ns` override
+/// (the election flags land in the `[election]` table's slots inside
+/// the faults bundle).
 fn setup_from(args: &Args) -> Result<RunSetup> {
     let mut s = match args.get("config") {
         Some(path) => {
@@ -239,6 +256,16 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
     }
     s.faults.handoff_ns = args.get_u64("handoff-ns", s.faults.handoff_ns)?;
     s.faults.resync_line_ns = args.get_u64("resync-line-ns", s.faults.resync_line_ns)?;
+    if let Some(v) = args.get("election-handoff-ns") {
+        s.faults.election.handoff_ns = v.parse().with_context(|| {
+            format!("--election-handoff-ns {v} (must be a duration in ns >= 0)")
+        })?;
+    }
+    if let Some(v) = args.get("election-line-ns") {
+        s.faults.election.line_ns = v.parse().with_context(|| {
+            format!("--election-line-ns {v} (must be a duration in ns >= 0)")
+        })?;
+    }
     if let Some(v) = args.get("shards") {
         s.sharding.shards = v
             .parse()
@@ -265,8 +292,14 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
             .parse()
             .with_context(|| format!("--commit-pipelines {v} (must be a count >= 1)"))?;
     }
-    s.concurrency.group_fence_ns =
-        args.get_u64("group-fence-ns", s.concurrency.group_fence_ns)?;
+    if let Some(v) = args.get("group-fence-ns") {
+        s.concurrency.group_fence_ns = v.parse().with_context(|| {
+            format!(
+                "--group-fence-ns {v} (must be a window in ns, >= 0 and \
+                 fitting in 64 bits)"
+            )
+        })?;
+    }
     s.repl.validate()?;
     s.faults.validate(s.repl.backups)?;
     s.sharding.validate()?;
@@ -310,6 +343,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!(
             "fault plan: {} (on_loss = {}, handoff {} ns, resync {} ns/line)",
             faults.plan, faults.on_loss, faults.handoff_ns, faults.resync_line_ns
+        );
+    }
+    if faults.plan.has_primary_faults() {
+        println!(
+            "election: handoff {} ns, re-replication {} ns/line (longest \
+             certified prefix wins, ties to lowest id)",
+            faults.election.handoff_ns, faults.election.line_ns
         );
     }
     if sharding.shards > 1 {
@@ -430,6 +470,16 @@ fn cmd_run(args: &Args) -> Result<()> {
             outcome.pipeline_waits,
             outcome.pipeline_wait_ns as f64 / 1e6,
             outcome.pipeline_occupancy()
+        );
+    }
+    if outcome.membership_epochs > 0 {
+        println!(
+            "  failover      : {} epoch(s), downtime {:.3} ms, {} line(s) \
+             re-replicated, {} staged WQE(s) revoked",
+            outcome.membership_epochs,
+            outcome.failover_downtime_ns as f64 / 1e6,
+            outcome.rereplicated_lines,
+            outcome.revoked_wqes
         );
     }
     if let Some(stall) = &outcome.stalled {
@@ -659,6 +709,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
     use crate::txn::Txn;
 
     let injecting = !faults.plan.is_empty();
+    let primary_faults = faults.plan.has_primary_faults();
     let on_loss = faults.on_loss;
     let mut m =
         Mirror::try_build_sharded(plat, strategy, None, repl, faults, sharding, true)?;
@@ -735,6 +786,26 @@ fn cmd_recover(args: &Args) -> Result<()> {
             repl.required(),
         )?
     };
+    if primary_faults {
+        // Leader completeness: each elected primary's certified state —
+        // merged across shards, which fail over as one node — covers
+        // every transaction durably acked by the failover instant.
+        let epochs = recovery::check_sharded_leader_completeness(
+            &shard_ledgers,
+            &m.timelines(),
+            &hist,
+            &[log],
+            &[d0, d1],
+        )?;
+        println!(
+            "leader completeness: {epochs} membership epoch(s) verified \
+             (downtime {:.3} ms, {} line(s) re-replicated, {} staged WQE(s) \
+             revoked)",
+            m.failover_downtime_ns() as f64 / 1e6,
+            m.rereplicated_lines(),
+            m.revoked_wqes()
+        );
+    }
     let events: Vec<Vec<usize>> = shard_ledgers
         .iter()
         .map(|ls| ls.iter().map(|l| l.len()).collect())
@@ -1135,6 +1206,91 @@ mod tests {
         main_with_args(&argv(&[
             "recover", "--strategy", "sm-ob", "--txns", "4", "--backups", "2",
             "--group-fence-ns", "2600",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn cli_election_flags_roundtrip() {
+        let a = Args::parse(&argv(&[
+            "run", "--election-handoff-ns", "12000", "--election-line-ns", "40",
+        ]));
+        let f = setup_from(&a).unwrap().faults;
+        assert_eq!(f.election.handoff_ns, 12_000);
+        assert_eq!(f.election.line_ns, 40);
+        // CLI overrides the [election] config table; the other knob keeps
+        // the file's value.
+        let dir = std::env::temp_dir().join("pmsm_cli_election_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(&path, "[election]\nhandoff_ns = 9000\nline_ns = 70\n").unwrap();
+        let path = path.to_str().unwrap();
+        let a = Args::parse(&argv(&[
+            "run", "--config", path, "--election-handoff-ns", "4000",
+        ]));
+        let f = setup_from(&a).unwrap().faults;
+        assert_eq!(f.election.handoff_ns, 4000, "flag overrides the TOML");
+        assert_eq!(f.election.line_ns, 70, "line cost keeps the TOML value");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_rejects_degenerate_duration_knobs() {
+        // Negative and u64-overflowing --group-fence-ns fail with the
+        // flag and constraint named (not a bare parse error).
+        for bad in ["-1", "99999999999999999999999"] {
+            let err = setup_from(&Args::parse(&argv(&[
+                "run", "--group-fence-ns", bad,
+            ])))
+            .unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("--group-fence-ns"), "{msg}");
+            assert!(msg.contains("must be a window in ns"), "{msg}");
+        }
+        // The election knobs reject the same degenerate shapes.
+        let err = setup_from(&Args::parse(&argv(&[
+            "run", "--election-handoff-ns", "-5",
+        ])))
+        .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("--election-handoff-ns"),
+            "{err:#}"
+        );
+        assert!(setup_from(&Args::parse(&argv(&[
+            "run", "--election-line-ns", "99999999999999999999999",
+        ])))
+        .is_err());
+    }
+
+    #[test]
+    fn run_command_primary_failover_smoke() {
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "80", "--backups", "3",
+            "--ack-policy", "majority", "--fault-plan", "kill:p@40000",
+        ]))
+        .unwrap();
+        // Sharded: all shards fail over as one node.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "40", "--shards", "2",
+            "--backups", "3", "--ack-policy", "quorum:2", "--fault-plan",
+            "kill:p@40000",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn recover_command_primary_failover_check() {
+        // Failover mid-run: crash sweep + leader completeness both pass.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-ob", "--txns", "6", "--backups", "3",
+            "--ack-policy", "quorum:2", "--fault-plan", "kill:p@20000",
+        ]))
+        .unwrap();
+        // Deposed primary rejoining as a backup passes too.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-ob", "--txns", "8", "--backups", "3",
+            "--ack-policy", "majority", "--fault-plan",
+            "kill:p@20000,rejoin:p@60000",
         ]))
         .unwrap();
     }

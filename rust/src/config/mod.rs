@@ -36,8 +36,10 @@ pub struct Experiment {
     /// paper's single fully-synchronous backup).
     pub replication: ReplicationConfig,
     /// Failure dynamics (`[faults]` section: a deterministic kill/rejoin
-    /// plan plus the on-loss mode and resync cost knobs; defaults to no
-    /// faults, `on_loss = halt`).
+    /// plan — backups and, via `kill:p`/`rejoin:p`, the primary — plus
+    /// the on-loss mode and resync cost knobs; defaults to no faults,
+    /// `on_loss = halt`). The `[election]` section's failover knobs
+    /// (`handoff_ns`, `line_ns`) land in `faults.election`.
     pub faults: FaultsConfig,
     /// Address-space sharding (`[sharding]` section: shard count +
     /// routing map; defaults to one shard — sharding off).
@@ -138,6 +140,20 @@ impl Experiment {
                 bail!("faults.resync_line_ns must be >= 0, got {n}");
             }
             exp.faults.resync_line_ns = n as u64;
+        }
+        if let Some(v) = doc.get("election.handoff_ns") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("election.handoff_ns must be >= 0, got {n}");
+            }
+            exp.faults.election.handoff_ns = n as u64;
+        }
+        if let Some(v) = doc.get("election.line_ns") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("election.line_ns must be >= 0, got {n}");
+            }
+            exp.faults.election.line_ns = n as u64;
         }
         exp.faults
             .validate(exp.replication.backups)
@@ -389,6 +405,69 @@ resync_line_ns = 50
         // Negative knobs.
         assert!(Experiment::from_str("[faults]\nhandoff_ns = -1").is_err());
         assert!(Experiment::from_str("[faults]\nresync_line_ns = -1").is_err());
+    }
+
+    #[test]
+    fn election_section_roundtrip() {
+        use crate::net::faults::ElectionConfig;
+        let text = r#"
+[replication]
+backups = 3
+ack_policy = "majority"
+
+[faults]
+plan = "kill:p@40000"
+
+[election]
+handoff_ns = 12000
+line_ns = 40
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert!(exp.faults.plan.has_primary_faults());
+        assert_eq!(exp.faults.election.handoff_ns, 12_000);
+        assert_eq!(exp.faults.election.line_ns, 40);
+        // Defaults when the section is missing.
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.faults.election, ElectionConfig::default());
+    }
+
+    #[test]
+    fn election_section_rejects_negative_knobs() {
+        let err = Experiment::from_str("[election]\nhandoff_ns = -1").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("election.handoff_ns must be >= 0"),
+            "{err:#}"
+        );
+        let err = Experiment::from_str("[election]\nline_ns = -5").unwrap_err();
+        assert!(
+            format!("{err:#}").contains("election.line_ns must be >= 0"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn primary_fault_plan_parses_through_config() {
+        let text = r#"
+[replication]
+backups = 3
+ack_policy = "quorum:2"
+
+[faults]
+plan = "kill:1@2000,kill:p@40000,rejoin:p@90000"
+on_loss = "degrade"
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.faults.plan.primary_events().len(), 2);
+        assert_eq!(
+            exp.faults.plan.to_string(),
+            "kill:1@2000,kill:p@40000,rejoin:p@90000"
+        );
+        // Contradictory primary plans are parse-time errors.
+        assert!(Experiment::from_str(
+            "[faults]\nplan = \"kill:p@100,kill:p@200\""
+        )
+        .is_err());
+        assert!(Experiment::from_str("[faults]\nplan = \"rejoin:p@100\"").is_err());
     }
 
     #[test]

@@ -41,8 +41,8 @@ use crate::config::{Platform, ReplicationConfig, StrategyKind};
 use crate::mem::DurabilityLog;
 use crate::metrics::LogHistogram;
 use crate::net::{
-    CoalesceMode, Fabric, FaultKind, FaultTimeline, FaultsConfig, FlushPolicy, RemoteEngine,
-    Stall, WriteMeta,
+    elect, Candidate, CoalesceMode, Fabric, FaultKind, FaultTimeline, FaultsConfig,
+    FlushPolicy, RemoteEngine, Stall, WriteMeta,
 };
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
@@ -159,6 +159,10 @@ pub struct Mirror {
     /// Total virtual time pipelines spent occupied by commit fences
     /// (the occupancy numerator).
     pipe_busy_ns: Ns,
+    /// The fault plan schedules primary kills/rejoins — gates the
+    /// membership poll on the hot paths (false = guard-clause
+    /// pass-through, event-for-event the pre-failover coordinator).
+    primary_faults: bool,
     /// Load latency from the primary image (ns).
     load_cost: Ns,
 }
@@ -264,11 +268,16 @@ impl Mirror {
         faults.validate(repl.backups)?;
         sharding.validate()?;
         if kind == StrategyKind::SmRc
-            && faults
+            && (faults
                 .plan
                 .events()
                 .iter()
                 .any(|e| e.kind == FaultKind::Rejoin)
+                || faults
+                    .plan
+                    .primary_events()
+                    .iter()
+                    .any(|e| e.kind == FaultKind::Rejoin))
         {
             // SM-RC replicates into volatile backup state (dirty DDIO
             // lines drained by rcommit); a killed backup loses that
@@ -301,10 +310,16 @@ impl Mirror {
                 None => predictor.take(),
             };
             let strategy = replication::make_strategy(kind, pred)?;
-            let fabric =
+            let mut fabric =
                 Fabric::with_faults(&plat, &repl, faults.clone(), ledger).with_shard(s);
+            // Primary events are coordinator business: all S shards must
+            // fail over to ONE cross-shard winner, so each lane's fabric
+            // treats them as barriers and the mirror consumes them in
+            // `poll_membership`.
+            fabric.set_coordinated(true);
             lanes.push(ShardLane { fabric, strategy });
         }
+        let primary_faults = faults.plan.has_primary_faults();
         let local_mc = RateLimiter::new(plat.llc_mc);
         let local_mc_lat = plat.llc_mc;
         let shards = sharding.shards;
@@ -323,8 +338,64 @@ impl Mirror {
             pipe_waits: 0,
             pipe_wait_ns: 0,
             pipe_busy_ns: 0,
+            primary_faults,
             load_cost: 5,
         })
+    }
+
+    /// Consume primary plan events due by `now` (see
+    /// [`crate::net::membership`]): backup events and resyncs settle
+    /// first, then a kill elects ONE winner across all shards — each
+    /// candidate node campaigns with the *sum* of its per-shard certified
+    /// prefixes and must be in quorum on every shard — and every lane
+    /// fails over to it; a rejoin returns the deposed primary on every
+    /// lane. The node admits writes only when its slowest shard finishes
+    /// re-replicating. A no-op without primary faults in the plan — the
+    /// guard-clause anchor pinned by `rust/tests/failover_primary.rs`.
+    fn poll_membership(&mut self, now: Ns) {
+        if !self.primary_faults {
+            return;
+        }
+        while let Some((at, kind)) = self.lanes[0].fabric.pending_primary_event(now) {
+            for lane in &mut self.lanes {
+                lane.fabric.settle(at);
+            }
+            match kind {
+                FaultKind::Kill => {
+                    let field: Vec<Candidate> = (0..self.repl.backups)
+                        .filter(|&i| {
+                            self.lanes.iter().all(|l| l.fabric.state(i).is_alive())
+                        })
+                        .map(|i| Candidate {
+                            id: i,
+                            certified: self
+                                .lanes
+                                .iter()
+                                .map(|l| l.fabric.certified_prefix(i))
+                                .sum(),
+                        })
+                        .collect();
+                    let winner = elect(&field);
+                    for lane in &mut self.lanes {
+                        lane.fabric.failover_to(winner, at);
+                    }
+                    let admit = self
+                        .lanes
+                        .iter()
+                        .map(|l| l.fabric.admit_at())
+                        .max()
+                        .unwrap_or(0);
+                    for lane in &mut self.lanes {
+                        lane.fabric.hold_admission(admit);
+                    }
+                }
+                FaultKind::Rejoin => {
+                    for lane in &mut self.lanes {
+                        lane.fabric.primary_rejoin_at(at);
+                    }
+                }
+            }
+        }
     }
 
     pub fn kind(&self) -> StrategyKind {
@@ -453,6 +524,39 @@ impl Mirror {
         self.lanes.iter().map(|l| l.fabric.combined_writes).sum()
     }
 
+    /// Completed membership-epoch changes. All shards fail over together,
+    /// so this is the max (= every lane's count), not a sum.
+    pub fn membership_epochs(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.fabric.membership_epochs)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Write-admission downtime across failovers. The node admits when
+    /// its slowest shard does ([`Fabric::hold_admission`] syncs the
+    /// lanes), so this is the max over lanes, not a sum.
+    pub fn failover_downtime_ns(&self) -> Ns {
+        self.lanes
+            .iter()
+            .map(|l| l.fabric.failover_downtime_ns)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Certified-suffix lines re-replicated by elected primaries, summed
+    /// across shards.
+    pub fn rereplicated_lines(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.rereplicated_lines).sum()
+    }
+
+    /// Staged WQEs fenced by permission revocation at failovers, summed
+    /// across shards.
+    pub fn revoked_wqes(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.revoked_wqes).sum()
+    }
+
     /// Lines-per-WQE distribution merged across every shard and backup.
     pub fn span_hist(&self) -> LogHistogram {
         let mut h = LogHistogram::new();
@@ -489,8 +593,11 @@ impl Mirror {
     }
 
     /// Advance every shard's fault state to `now` without issuing any
-    /// verb (end-of-run bookkeeping before metrics/recovery).
+    /// verb (end-of-run bookkeeping before metrics/recovery). Pending
+    /// primary events due by `now` are consumed first so the realized
+    /// epoch log is complete.
     pub fn settle(&mut self, now: Ns) {
+        self.poll_membership(now);
         for lane in &mut self.lanes {
             lane.fabric.settle(now);
         }
@@ -558,6 +665,7 @@ impl Mirror {
     /// `clwb`: persist the line locally (eager write-back into the local
     /// MC queue) and replicate it per the owning shard's strategy.
     pub fn clwb(&mut self, t: &mut ThreadCtx, addr: Addr) {
+        self.poll_membership(t.clock.now);
         let line = line_of(addr);
         t.clock.busy(self.plat.flush);
         let persist = self.local_mc.submit(t.clock.now) + self.local_mc_lat;
@@ -661,6 +769,7 @@ impl Mirror {
     /// single QP issues staged writes in program order at the next
     /// durability point).
     pub fn sfence(&mut self, t: &mut ThreadCtx) {
+        self.poll_membership(t.clock.now);
         t.clock.busy(self.plat.sfence);
         if let Some(&max) = t.pending_local.iter().max() {
             t.clock.wait_until(max);
@@ -706,6 +815,7 @@ impl Mirror {
     /// injection under `on_loss = halt`, or a fully dead group) was
     /// never durably acked and is NOT counted as committed.
     pub fn txn_commit(&mut self, t: &mut ThreadCtx) {
+        self.poll_membership(t.clock.now);
         t.clock.busy(self.plat.sfence);
         if let Some(&max) = t.pending_local.iter().max() {
             t.clock.wait_until(max);
@@ -1242,5 +1352,46 @@ mod tests {
         let stall = m.stall().expect("both shards lost backup node 0");
         assert_eq!(stall.required, 2);
         assert_eq!(t.txns_done, 0, "stalled commit not counted");
+    }
+
+    // ---- primary failover ------------------------------------------------
+
+    /// All S shards fail over as one node: same winner, same epoch log,
+    /// and a single admission instant synced to the slowest shard.
+    #[test]
+    fn primary_failover_spans_all_shards_as_one_node() {
+        use crate::net::{FaultsConfig, OnLoss};
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+            FaultsConfig::with_plan("kill:p@40000", OnLoss::Halt).unwrap(),
+            ShardingConfig::new(2, ShardMapSpec::Modulo),
+            true,
+        )
+        .unwrap();
+        let mut t = ThreadCtx::new(0);
+        while t.now() < 60_000 {
+            run_transact_txn(&mut m, &mut t, 2, 4);
+        }
+        m.settle(t.now());
+        assert!(m.stall().is_none(), "quorum:2 survives the promotion");
+        assert_eq!(m.membership_epochs(), 1);
+        let w0 = m.shard_fabric(0).primary_slot();
+        assert_eq!(w0, Some(0), "equal summed prefixes tie to the lowest id");
+        assert_eq!(m.shard_fabric(1).primary_slot(), w0, "one winner, all shards");
+        assert_eq!(
+            m.shard_fabric(0).epoch_log(),
+            m.shard_fabric(1).epoch_log(),
+            "epoch transitions must agree across shards"
+        );
+        assert_eq!(
+            m.shard_fabric(0).admit_at(),
+            m.shard_fabric(1).admit_at(),
+            "the node admits writes as one"
+        );
+        assert!(m.failover_downtime_ns() > 0);
+        assert!(t.txns_done > 0, "the run continues after failover");
     }
 }

@@ -99,6 +99,20 @@ pub struct RunOutcome {
     /// Total virtual time pipelines were occupied by commit fences,
     /// steady state (the occupancy numerator).
     pub pipeline_busy_ns: Ns,
+    /// Completed membership-epoch changes (primary failovers won; 0
+    /// without primary faults in the plan).
+    pub membership_epochs: u64,
+    /// Write-admission downtime across failovers: kill instant to the
+    /// instant the elected primary admitted writes, maxed over shards
+    /// (all S shards fail over as one node). The figure
+    /// `fig12_failover_primary` sweeps.
+    pub failover_downtime_ns: Ns,
+    /// Certified-suffix lines elected primaries re-replicated to lagging
+    /// peers before admitting writes, summed over shards.
+    pub rereplicated_lines: u64,
+    /// Staged WQEs fenced by permission revocation at failovers (they
+    /// retry through the new primary), summed over shards.
+    pub revoked_wqes: u64,
     /// Lines-per-WQE distribution of the whole run (including any
     /// warmup/load phase — unlike the counters above, a histogram
     /// cannot be watermarked; Transact-style workloads have no load
@@ -238,6 +252,10 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     let pipe_waits_zero = mirror.pipeline_waits();
     let pipe_wait_ns_zero = mirror.pipeline_wait_ns();
     let pipe_busy_ns_zero = mirror.pipeline_busy_ns();
+    let epochs_zero = mirror.membership_epochs();
+    let downtime_zero = mirror.failover_downtime_ns();
+    let rerepl_zero = mirror.rereplicated_lines();
+    let revoked_zero = mirror.revoked_wqes();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
     // the run at the kill point: remaining transactions are abandoned,
@@ -281,6 +299,10 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     out.pipeline_waits = mirror.pipeline_waits() - pipe_waits_zero;
     out.pipeline_wait_ns = mirror.pipeline_wait_ns() - pipe_wait_ns_zero;
     out.pipeline_busy_ns = mirror.pipeline_busy_ns() - pipe_busy_ns_zero;
+    out.membership_epochs = mirror.membership_epochs() - epochs_zero;
+    out.failover_downtime_ns = mirror.failover_downtime_ns() - downtime_zero;
+    out.rereplicated_lines = mirror.rereplicated_lines() - rerepl_zero;
+    out.revoked_wqes = mirror.revoked_wqes() - revoked_zero;
     out.span_hist = mirror.span_hist();
     out.per_backup_horizon = mirror.persist_horizons();
     out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);
@@ -403,6 +425,49 @@ mod tests {
         assert_eq!(out.per_backup_dead_ns.len(), 2);
         assert!(out.per_backup_dead_ns[0] > 0, "killed backup accrues dead time");
         assert_eq!(out.per_backup_dead_ns[1], 0);
+    }
+
+    #[test]
+    fn failover_counters_surface_through_run_outcome() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::net::{FaultsConfig, OnLoss};
+        let repl = ReplicationConfig::new(3, AckPolicy::Majority);
+        let faults = FaultsConfig::with_plan("kill:p@20000", OnLoss::Halt).unwrap();
+        let mut m = Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            repl,
+            faults,
+            true,
+        )
+        .unwrap();
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(400, 2, 2, 0x10000)];
+        let out = run_threads(&mut m, &mut srcs);
+        assert!(out.stalled.is_none(), "majority survives a primary kill");
+        assert_eq!(out.membership_epochs, 1, "one failover must be recorded");
+        assert!(
+            out.failover_downtime_ns > 0,
+            "handoff must accrue write-admission downtime"
+        );
+        assert!(out.txns > 0, "run continues under the elected primary");
+
+        // Fault-free control: every failover counter stays zero.
+        let mut quiet = Mirror::try_build_faulted(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(3, AckPolicy::Majority),
+            FaultsConfig::default(),
+            true,
+        )
+        .unwrap();
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(50, 2, 2, 0x10000)];
+        let out = run_threads(&mut quiet, &mut srcs);
+        assert_eq!(out.membership_epochs, 0);
+        assert_eq!(out.failover_downtime_ns, 0);
+        assert_eq!(out.rereplicated_lines, 0);
+        assert_eq!(out.revoked_wqes, 0);
     }
 
     #[test]

@@ -49,6 +49,14 @@ pub struct GroupReport {
     pub combined_writes: u64,
     /// Lines-per-WQE distribution across the group's wire WQEs.
     pub span_hist: LogHistogram,
+    /// Completed membership-epoch changes (primary failovers won).
+    pub membership_epochs: u64,
+    /// Write-admission downtime accumulated across failovers (ns).
+    pub failover_downtime_ns: Ns,
+    /// Certified-suffix lines re-replicated by elected primaries.
+    pub rereplicated_lines: u64,
+    /// Staged WQEs fenced by permission revocation at failovers.
+    pub revoked_wqes: u64,
     /// The unsatisfiable fence that stopped the run, if any.
     pub stalled: Option<Stall>,
 }
@@ -71,6 +79,10 @@ impl GroupReport {
             posted_wqes: fabric.posted_writes(),
             combined_writes: fabric.combined_writes,
             span_hist: fabric.span_hist(),
+            membership_epochs: fabric.membership_epochs,
+            failover_downtime_ns: fabric.failover_downtime_ns,
+            rereplicated_lines: fabric.rereplicated_lines,
+            revoked_wqes: fabric.revoked_wqes,
             stalled: fabric.stall().copied(),
         }
     }
@@ -214,6 +226,16 @@ impl GroupReport {
             self.span_hist.max(),
             self.combined_writes,
         );
+        if self.membership_epochs > 0 {
+            out.push_str(&format!(
+                "group: failover — {} membership epoch(s), downtime {} ns, \
+                 {} line(s) re-replicated, {} staged WQE(s) revoked\n",
+                self.membership_epochs,
+                self.failover_downtime_ns,
+                self.rereplicated_lines,
+                self.revoked_wqes,
+            ));
+        }
         if let Some(stall) = &self.stalled {
             out.push_str(&format!("group: STALLED — {stall}\n"));
         }
@@ -259,6 +281,13 @@ impl GroupReport {
             ("mean_span", json::num(self.mean_span())),
             ("span_p99", self.span_hist.percentile(99.0).to_string()),
             ("span_max", self.span_hist.max().to_string()),
+            ("membership_epochs", self.membership_epochs.to_string()),
+            (
+                "failover_downtime_ns",
+                self.failover_downtime_ns.to_string(),
+            ),
+            ("rereplicated_lines", self.rereplicated_lines.to_string()),
+            ("revoked_wqes", self.revoked_wqes.to_string()),
             ("stalled", self.stalled.is_some().to_string()),
             ("backups", json::arr(&backups)),
         ])
@@ -328,6 +357,36 @@ impl ShardedReport {
         self.per_shard.iter().map(|r| r.fence_piggybacks).sum()
     }
 
+    /// Membership epochs of the node (shards fail over as one unit, so
+    /// this is the max — normally every shard agrees — not a sum).
+    pub fn membership_epochs(&self) -> u64 {
+        self.per_shard
+            .iter()
+            .map(|r| r.membership_epochs)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Node-level failover downtime (max over shards: lanes synchronize
+    /// their write admission to the slowest shard's instant).
+    pub fn failover_downtime_ns(&self) -> Ns {
+        self.per_shard
+            .iter()
+            .map(|r| r.failover_downtime_ns)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total certified-suffix lines re-replicated across all shards.
+    pub fn total_rereplicated_lines(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.rereplicated_lines).sum()
+    }
+
+    /// Total staged WQEs revoked at failovers across all shards.
+    pub fn total_revoked_wqes(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.revoked_wqes).sum()
+    }
+
     /// Mean lines per wire WQE across the whole deployment.
     pub fn mean_span(&self) -> f64 {
         let lines: u64 = self.per_shard.iter().map(|r| r.posted_wqes).sum();
@@ -372,6 +431,17 @@ impl ShardedReport {
             self.mean_span(),
             self.total_combined_writes(),
         ));
+        if self.membership_epochs() > 0 {
+            out.push_str(&format!(
+                "shards: failover — {} membership epoch(s) as one node, \
+                 downtime {} ns, {} line(s) re-replicated, {} staged \
+                 WQE(s) revoked\n",
+                self.membership_epochs(),
+                self.failover_downtime_ns(),
+                self.total_rereplicated_lines(),
+                self.total_revoked_wqes(),
+            ));
+        }
         out
     }
 
@@ -603,6 +673,58 @@ mod tests {
         assert!(j.contains("\"coalesce\":\"full\""), "{j}");
         assert!(j.contains("\"combined_writes\":2"), "{j}");
         assert!(j.contains("\"wire_wqes\":4"), "{j}");
+    }
+
+    #[test]
+    fn report_surfaces_failover_counters() {
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+        let faults = FaultsConfig::with_plan("kill:p@1000", OnLoss::Halt).unwrap();
+        let mut f = Fabric::with_faults(&p, &repl, faults, true);
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(
+            &mut t,
+            WriteMeta {
+                addr: 0x40,
+                val: 0,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: 0,
+            },
+        );
+        f.rdfence(&mut t);
+        // Drive past the kill so the (direct-driven) fabric self-elects.
+        t.wait_until(5_000);
+        f.post_write_wt(
+            &mut t,
+            WriteMeta {
+                addr: 0x80,
+                val: 1,
+                thread: 0,
+                txn: 0,
+                epoch: 1,
+                seq: 1,
+            },
+        );
+        f.rdfence(&mut t);
+        let r = GroupReport::from_fabric(&f);
+        assert_eq!(r.membership_epochs, 1);
+        assert!(r.failover_downtime_ns > 0);
+        assert!(r.stalled.is_none(), "quorum:2 survives a primary kill");
+        let text = r.render();
+        assert!(text.contains("membership epoch(s)"), "{text}");
+        let j = r.to_json();
+        assert!(j.contains("\"membership_epochs\":1"), "{j}");
+        assert!(j.contains("\"failover_downtime_ns\":"), "{j}");
+        assert!(j.contains("\"rereplicated_lines\":"), "{j}");
+        assert!(j.contains("\"revoked_wqes\":"), "{j}");
+        // Fault-free groups report zeros and stay silent in render.
+        let quiet = Fabric::new(&p, &repl, true);
+        let r = GroupReport::from_fabric(&quiet);
+        assert_eq!(r.membership_epochs, 0);
+        assert_eq!(r.failover_downtime_ns, 0);
+        assert!(!r.render().contains("failover"), "{}", r.render());
     }
 
     #[test]

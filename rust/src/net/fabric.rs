@@ -55,6 +55,20 @@
 //!
 //! [`CoalesceMode::None`]: super::wqe::CoalesceMode::None
 //!
+//! **Primary failover** (see [`super::membership`]): `kill:p@T` in the
+//! fault plan kills the *primary*. The fabric (or, sharded, the
+//! coordinator — all S shards fail over as one node) elects the
+//! surviving backup with the longest certified ledger prefix (ties to
+//! the lowest id), revokes the old primary's write permission — staged
+//! WQE chains in flight at the flush choke point are fenced and counted
+//! in [`Fabric::revoked_wqes`]; they retry through the new primary —
+//! re-replicates the winner's certified suffix to the lagging peers, and
+//! only then admits new writes (`admit_at`). The winner's slot leaves
+//! the backup group (it *is* the primary now), and the deposed primary
+//! may take that slot back as a backup via `rejoin:p@T`, riding the
+//! PR 2 resync path unchanged. Epoch transitions are recorded for the
+//! fault-aware recovery checks ([`FaultTimeline::epochs`]).
+//!
 //! With `backups = 1`, `ack_policy = "all"` and an **empty fault plan**
 //! the fabric is event-for-event identical to driving the single [`Rdma`]
 //! stack directly (the pre-replica-group behaviour); the unit tests below
@@ -63,6 +77,7 @@
 use super::faults::{
     effective_required, BackupState, FaultKind, FaultTimeline, FaultsConfig, OnLoss, Stall,
 };
+use super::membership::{elect, Candidate};
 use super::rdma::Rdma;
 use super::remote::RemoteEngine;
 use super::verbs::{Verb, WriteMeta};
@@ -184,6 +199,36 @@ pub struct Fabric {
     pub fence_piggybacks: u64,
     pub blocking_waits: u64,
     pub blocked_ns: Ns,
+    // ---- primary failover (see `super::membership`)
+    /// Next unprocessed primary plan event.
+    p_cursor: usize,
+    /// When true, primary events are *barriers*: [`Fabric::apply_faults`]
+    /// leaves them pending and the coordinator drives
+    /// [`Fabric::failover_to`] / [`Fabric::primary_rejoin_at`] itself so
+    /// all S shards fail over to one cross-shard winner.
+    coordinated: bool,
+    /// Slot whose machine currently serves as primary (`None` = the
+    /// original, unelected primary). The slot itself is `Dead` while its
+    /// machine holds the primary role.
+    primary_slot: Option<usize>,
+    /// Instant before which no new work is admitted to the wire: the
+    /// election + re-replication window of the latest failover (0 = no
+    /// failover yet — the clamp is a no-op, the anchor).
+    admit_at: Ns,
+    /// Realized epoch transitions `(at, epoch-after, winner-slot)`.
+    epoch_log: Vec<(Ns, u64, usize)>,
+    /// Completed membership-epoch changes (elections won).
+    pub membership_epochs: u64,
+    /// Total write-admission downtime across failovers (kill instant to
+    /// `admit_at`).
+    pub failover_downtime_ns: Ns,
+    /// Certified-suffix lines the elected primaries streamed to lagging
+    /// peers before admitting writes.
+    pub rereplicated_lines: u64,
+    /// Staged WQEs fenced by permission revocation at failover. Counted,
+    /// not dropped: the lines were never on the wire under the old
+    /// permission and retry through the new primary after `admit_at`.
+    pub revoked_wqes: u64,
 }
 
 impl Fabric {
@@ -243,6 +288,15 @@ impl Fabric {
             fence_piggybacks: 0,
             blocking_waits: 0,
             blocked_ns: 0,
+            p_cursor: 0,
+            coordinated: false,
+            primary_slot: None,
+            admit_at: 0,
+            epoch_log: Vec::new(),
+            membership_epochs: 0,
+            failover_downtime_ns: 0,
+            rereplicated_lines: 0,
+            revoked_wqes: 0,
         }
     }
 
@@ -457,6 +511,42 @@ impl Fabric {
     /// events and resyncs up to the end of the run have taken effect.
     pub fn timeline(&self) -> FaultTimeline {
         FaultTimeline::new(self.replicas.len(), self.transitions.clone())
+            .with_epochs(self.epoch_log.clone())
+    }
+
+    /// Slot whose machine currently serves as primary (`None` until the
+    /// first failover — the original primary has no backup slot).
+    pub fn primary_slot(&self) -> Option<usize> {
+        self.primary_slot
+    }
+
+    /// Instant the latest failover admitted writes again (0 = none).
+    pub fn admit_at(&self) -> Ns {
+        self.admit_at
+    }
+
+    /// Extend the admission barrier to `until` (coordinated mode: all S
+    /// shards fail over as one node, so the node admits writes only when
+    /// its slowest shard finishes re-replicating). The extension counts
+    /// toward this fabric's failover downtime so every lane reports the
+    /// realized node-level figure.
+    pub fn hold_admission(&mut self, until: Ns) {
+        if until > self.admit_at {
+            self.failover_downtime_ns += until - self.admit_at;
+            self.admit_at = until;
+        }
+    }
+
+    /// Realized membership-epoch transitions `(at, epoch-after, winner)`.
+    pub fn epoch_log(&self) -> &[(Ns, u64, usize)] {
+        &self.epoch_log
+    }
+
+    /// Backup `i`'s certified prefix: the durably persisted lines it can
+    /// prove at an election — ledger length, or the persist counter when
+    /// ledgers are off.
+    pub fn certified_prefix(&self, i: usize) -> u64 {
+        self.replicas[i].remote.certified_lines()
     }
 
     /// Advance fault state to `now` without issuing any verb (end-of-run
@@ -515,12 +605,18 @@ impl Fabric {
     /// time has come take effect and resyncs whose catch-up stream has
     /// finished return their backup to the quorum — merged in
     /// chronological order so the realized timeline is well-defined.
+    /// Primary events join the merge too (ties: resync completions, then
+    /// backup events, then primary events), except in coordinated mode
+    /// where they are barriers the coordinator consumes itself.
     fn apply_faults(&mut self, now: Ns) {
         // `seen` (host-side bookkeeping only — no simulated time) must
         // advance even once the plan is exhausted, so open dead
         // intervals in snapshots stay fresh up to the last verb.
         self.seen = self.seen.max(now);
-        if self.cursor >= self.faults.plan.events().len() && self.resyncing == 0 {
+        if self.cursor >= self.faults.plan.events().len()
+            && self.resyncing == 0
+            && (self.coordinated || self.p_cursor >= self.faults.plan.primary_events().len())
+        {
             return;
         }
         loop {
@@ -530,7 +626,17 @@ impl Fabric {
                 .events()
                 .get(self.cursor)
                 .filter(|e| e.at <= now)
-                .map(|e| e.at);
+                .map_or(Ns::MAX, |e| e.at);
+            let next_primary = if self.coordinated {
+                Ns::MAX
+            } else {
+                self.faults
+                    .plan
+                    .primary_events()
+                    .get(self.p_cursor)
+                    .filter(|e| e.at <= now)
+                    .map_or(Ns::MAX, |e| e.at)
+            };
             let next_ready = (0..self.replicas.len())
                 .filter_map(|b| match self.states[b] {
                     BackupState::Resyncing { ready_at, .. } if ready_at <= now => {
@@ -539,17 +645,26 @@ impl Fabric {
                     _ => None,
                 })
                 .min();
-            match (next_event, next_ready) {
-                (None, None) => break,
-                (Some(ea), Some((ra, b))) if ra <= ea => self.finish_resync(b),
-                (None, Some((_, b))) => self.finish_resync(b),
-                (Some(_), _) => {
-                    let ev = self.faults.plan.events()[self.cursor];
-                    self.cursor += 1;
-                    match ev.kind {
-                        FaultKind::Kill => self.kill(ev.backup, ev.at),
-                        FaultKind::Rejoin => self.begin_rejoin(ev.backup, ev.at),
-                    }
+            let ready_at = next_ready.map_or(Ns::MAX, |(ra, _)| ra);
+            if next_event == Ns::MAX && next_primary == Ns::MAX && ready_at == Ns::MAX {
+                break;
+            }
+            if ready_at <= next_event && ready_at <= next_primary {
+                let (_, b) = next_ready.expect("ready_at < MAX implies a resyncing backup");
+                self.finish_resync(b);
+            } else if next_event <= next_primary {
+                let ev = self.faults.plan.events()[self.cursor];
+                self.cursor += 1;
+                match ev.kind {
+                    FaultKind::Kill => self.kill(ev.backup, ev.at),
+                    FaultKind::Rejoin => self.begin_rejoin(ev.backup, ev.at),
+                }
+            } else {
+                let ev = self.faults.plan.primary_events()[self.p_cursor];
+                self.p_cursor += 1;
+                match ev.kind {
+                    FaultKind::Kill => self.fail_over(None, ev.at),
+                    FaultKind::Rejoin => self.primary_rejoin(ev.at),
                 }
             }
         }
@@ -578,16 +693,28 @@ impl Fabric {
     /// The ledger suffix `b` is missing relative to the healthiest
     /// fully-alive peer (`(events, lines)`; events empty but lines
     /// counted when ledgers are disabled; nothing when no peer survives —
-    /// the backup rejoins with only its own pre-kill state).
+    /// the backup rejoins with only its own pre-kill state). An elected
+    /// primary's image (its slot is `Dead` while it serves) is a valid
+    /// source too — the leader certifies every acked line, so resyncs
+    /// stream from it even when no backup peer survives.
     fn missed(&self, b: usize) -> (Vec<DurEvent>, u64) {
         let src = (0..self.replicas.len())
-            .filter(|&i| i != b && self.states[i].is_alive())
+            .filter(|&i| {
+                i != b && (self.states[i].is_alive() || Some(i) == self.primary_slot)
+            })
             .max_by_key(|&i| (self.replicas[i].remote.persists, std::cmp::Reverse(i)));
         let Some(src) = src else {
             return (Vec::new(), 0);
         };
+        self.missing_from(src, b)
+    }
+
+    /// The ledger suffix `dst` is missing relative to `src` (`(events,
+    /// lines)`; events empty but lines counted when ledgers are
+    /// disabled).
+    fn missing_from(&self, src: usize, dst: usize) -> (Vec<DurEvent>, u64) {
         let src_r = &self.replicas[src].remote;
-        let own = &self.replicas[b].remote;
+        let own = &self.replicas[dst].remote;
         if !own.ledger.enabled() || !src_r.ledger.enabled() {
             return (Vec::new(), src_r.persists.saturating_sub(own.persists));
         }
@@ -642,6 +769,145 @@ impl Fabric {
         self.transitions.push((ready_at, b, true));
     }
 
+    // ---- primary failover (see `super::membership`) ----------------------
+
+    /// The primary died at `at`: revoke its permission, elect a successor
+    /// (`winner` pre-elected by a sharded coordinator, or `None` to run
+    /// the per-fabric election among alive slots), re-replicate the
+    /// winner's certified suffix, and open the admission barrier.
+    fn fail_over(&mut self, winner: Option<usize>, at: Ns) {
+        // Permission revocation: the dead primary's staged-but-unrung WQE
+        // chains are fenced at the flush choke point. The lines are not
+        // lost — they stay staged and flush through the new primary once
+        // it admits writes — but they could not have reached the wire
+        // under the revoked permission, which is what the counter records.
+        self.revoked_wqes += self.staged_pending() as u64;
+        let winner = winner.or_else(|| {
+            let field: Vec<Candidate> = (0..self.replicas.len())
+                .filter(|&i| self.states[i].is_alive())
+                .map(|i| Candidate {
+                    id: i,
+                    certified: self.certified_prefix(i),
+                })
+                .collect();
+            elect(&field)
+        });
+        let Some(w) = winner else {
+            // Nobody can campaign: the group is unrecoverable here.
+            if self.stall.is_none() {
+                self.stall = Some(Stall {
+                    at,
+                    alive: 0,
+                    required: self.required,
+                    policy: self.policy,
+                    on_loss: self.faults.on_loss,
+                    shard: self.shard,
+                });
+            }
+            return;
+        };
+        // Re-replication: the winner streams the certified suffix each
+        // lagging peer is missing before admitting writes. Streams run in
+        // parallel, so the admission point tracks the largest gap.
+        let mut max_lines = 0u64;
+        for i in 0..self.replicas.len() {
+            if i == w || !self.states[i].is_alive() {
+                continue;
+            }
+            let (missing, lines) = self.missing_from(w, i);
+            let land_at =
+                at + self.faults.election.handoff_ns + lines * self.faults.election.line_ns;
+            self.replicas[i].remote.absorb_resync(&missing, lines, land_at);
+            self.rereplicated_lines += lines;
+            max_lines = max_lines.max(lines);
+        }
+        let admit =
+            at + self.faults.election.handoff_ns + max_lines * self.faults.election.line_ns;
+        self.failover_downtime_ns += admit.saturating_sub(at);
+        self.admit_at = self.admit_at.max(admit);
+        // The winner's machine leaves the backup group to serve as
+        // primary. No `drop_volatile`: nothing crashed — its replicated
+        // state *becomes* the new primary's local image. The deposed
+        // primary may take this slot back via `rejoin:p@T`.
+        self.membership_epochs += 1;
+        self.epoch_log.push((at, self.membership_epochs, w));
+        self.primary_slot = Some(w);
+        self.states[w] = BackupState::Dead { since: at };
+        self.transitions.push((at, w, false));
+    }
+
+    /// The deposed primary returns as a backup, taking the slot the
+    /// current primary vacated at its election; from there it rides the
+    /// PR 2 resync path unchanged (hand-off + per-line catch-up stream).
+    fn primary_rejoin(&mut self, at: Ns) {
+        // Validated at parse time: `rejoin:p` requires a prior `kill:p`,
+        // so a failover has happened and the slot exists (unless the
+        // election itself found no candidate — then there is nothing to
+        // rejoin into and the run is already stalled). Once the deposed
+        // machine takes the slot back, the serving primary holds no slot
+        // in the backup group at all (`primary_slot = None`, like the
+        // original primary) — the slot's image seeds the rejoiner with
+        // the group state certified at the failover instant, and the
+        // PR 2 resync streams everything since.
+        if let Some(w) = self.primary_slot.take() {
+            self.begin_rejoin(w, at);
+        }
+    }
+
+    /// When true, [`Fabric::apply_faults`] leaves primary events pending
+    /// for the coordinator to consume via [`Fabric::failover_to`] /
+    /// [`Fabric::primary_rejoin_at`] (one election across all shards).
+    pub fn set_coordinated(&mut self, on: bool) {
+        self.coordinated = on;
+    }
+
+    /// The next primary plan event due at or before `now`, if any — the
+    /// coordinator polls this at op boundaries in coordinated mode.
+    pub fn pending_primary_event(&self, now: Ns) -> Option<(Ns, FaultKind)> {
+        self.faults
+            .plan
+            .primary_events()
+            .get(self.p_cursor)
+            .filter(|e| e.at <= now)
+            .map(|e| (e.at, e.kind))
+    }
+
+    /// Consume a pending `kill:p` with a pre-elected winner (`None` when
+    /// no candidate survived anywhere — records the stall). Backup events
+    /// and resync completions due by `at` take effect first.
+    pub fn failover_to(&mut self, winner: Option<usize>, at: Ns) {
+        debug_assert!(self.coordinated, "failover_to outside coordinated mode");
+        debug_assert!(
+            matches!(
+                self.faults.plan.primary_events().get(self.p_cursor),
+                Some(e) if e.kind == FaultKind::Kill && e.at <= at
+            ),
+            "failover_to without a pending primary kill"
+        );
+        self.apply_faults(at);
+        self.p_cursor += 1;
+        self.fail_over(winner, at);
+    }
+
+    /// Consume a pending `rejoin:p` (coordinated mode).
+    pub fn primary_rejoin_at(&mut self, at: Ns) {
+        debug_assert!(self.coordinated, "primary_rejoin_at outside coordinated mode");
+        self.apply_faults(at);
+        self.p_cursor += 1;
+        self.primary_rejoin(at);
+    }
+
+    /// Hold the calling thread at the failover admission barrier: during
+    /// an election + re-replication window no new work reaches the wire
+    /// (the old permission is revoked; the new primary admits writes only
+    /// once its suffix is re-replicated). A no-op until a failover
+    /// happens — the guard-clause anchor.
+    fn admit(&self, t: &mut ThreadClock) {
+        if t.now < self.admit_at {
+            t.wait_until(self.admit_at);
+        }
+    }
+
     // ---- verb fan-out ----------------------------------------------------
 
     /// Block the calling thread until `completion` (same cost model as
@@ -686,6 +952,7 @@ impl Fabric {
     ///   at [`Fabric::flush`] (cap reached, or the next fence).
     fn post_data(&mut self, t: &mut ThreadClock, verb: Verb, meta: WriteMeta) {
         self.apply_faults(t.now);
+        self.admit(t);
         if self.batching.is_eager() {
             let cost = self.wqe_stage_ns + self.doorbell_ns;
             self.for_each_alive(|_, r| {
@@ -730,6 +997,12 @@ impl Fabric {
             Some(q) if !q.is_empty() => {}
             _ => return,
         }
+        // A pending failover revokes the old primary's permission before
+        // any of these chains can ring: advance fault state first, then
+        // hold at the admission barrier (both no-ops without primary
+        // faults — `apply_faults` is idempotent and costs no sim time).
+        self.apply_faults(t.now);
+        self.admit(t);
         let wqes = self.stages[id].take();
         for b in 0..self.replicas.len() {
             // Each chain launch is a verb boundary: fault state advances
@@ -782,6 +1055,7 @@ impl Fabric {
     pub fn rofence(&mut self, t: &mut ThreadClock) {
         self.flush(t);
         self.apply_faults(t.now);
+        self.admit(t);
         self.for_each_alive(|_, r| r.rofence(t));
     }
 
@@ -805,6 +1079,7 @@ impl Fabric {
         // state advances inside the flush (per chain) or just after.
         self.flush(t);
         self.apply_faults(t.now);
+        self.admit(t);
         // Decide satisfiability BEFORE issuing: a fence that stalls must
         // leave no trace on the survivors (no drains, no completions).
         let alive = self.alive_count();
@@ -1588,5 +1863,230 @@ mod tests {
         assert!(f.stall().is_none());
         assert!(f.timeline().transitions().is_empty());
         assert_eq!(f.accrued_dead_ns(t.now), vec![0, 0, 0]);
+        assert_eq!(f.membership_epochs, 0);
+        assert_eq!(f.primary_slot(), None);
+        assert_eq!(f.admit_at(), 0, "no failover: the admission clamp is inert");
+    }
+
+    // ---- primary failover ------------------------------------------------
+
+    #[test]
+    fn primary_kill_elects_and_holds_writes_until_admission() {
+        let p = Platform::default();
+        let mut f = Fabric::with_faults(
+            &p,
+            &repl(3, AckPolicy::Quorum(2)),
+            faults("kill:p@10000", OnLoss::Halt),
+            true,
+        );
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(&mut t, meta(0x40, 0, 0));
+        f.post_write_wt(&mut t, meta(0x80, 0, 1));
+        f.rdfence(&mut t);
+        assert_eq!(f.alive_count(), 3);
+        // Cross the kill: the next verb runs the election. All three
+        // candidates hold equal certified prefixes (the synchronous
+        // fan-out keeps live peers converged), so the tie breaks to the
+        // lowest id.
+        t.wait_until(10_001);
+        f.post_write_wt(&mut t, meta(0xc0, 1, 2));
+        assert_eq!(f.membership_epochs, 1);
+        assert_eq!(f.primary_slot(), Some(0));
+        assert_eq!(f.state(0), BackupState::Dead { since: 10_000 });
+        assert_eq!(f.epoch_log(), &[(10_000, 1, 0)]);
+        // Converged peers: nothing to re-replicate, so the admission
+        // barrier is the bare election hand-off.
+        assert_eq!(f.rereplicated_lines, 0);
+        assert_eq!(f.admit_at(), 10_000 + f.faults().election.handoff_ns);
+        assert_eq!(f.failover_downtime_ns, f.faults().election.handoff_ns);
+        assert!(
+            t.now >= f.admit_at(),
+            "the write must wait out the admission barrier: t={} admit={}",
+            t.now,
+            f.admit_at()
+        );
+        f.rdfence(&mut t);
+        assert!(f.stall().is_none(), "2 surviving backups satisfy quorum:2");
+        // Survivors carry the post-failover write; the promoted slot's
+        // image stays at the failover instant.
+        assert_eq!(f.backup(1).ledger.len(), 3);
+        assert_eq!(f.backup(2).ledger.len(), 3);
+        assert_eq!(f.backup(0).ledger.len(), 2);
+        let tl = f.timeline();
+        assert_eq!(tl.epoch_at(9_999), 0);
+        assert_eq!(tl.epoch_at(10_000), 1);
+        assert_eq!(tl.primary_at(9_999), None);
+        assert_eq!(tl.primary_at(10_000), Some(0));
+        assert_eq!(tl.alive_count_at(10_000), 2);
+    }
+
+    #[test]
+    fn primary_kill_with_no_candidates_stalls() {
+        let p = Platform::default();
+        let mut f = Fabric::with_faults(
+            &p,
+            &repl(2, AckPolicy::Quorum(1)),
+            faults("kill:0@0,kill:1@0,kill:p@100", OnLoss::Degrade),
+            false,
+        );
+        let mut t = ThreadClock::new(0);
+        t.wait_until(200);
+        f.post_write_wt(&mut t, meta(0x40, 0, 0));
+        let s = *f.stall().expect("no candidate can campaign: must stall");
+        assert_eq!(s.at, 100, "the stall sits at the kill instant");
+        assert_eq!(s.alive, 0);
+        assert_eq!(f.membership_epochs, 0, "no election completed");
+        assert_eq!(f.primary_slot(), None);
+        f.rdfence(&mut t);
+        assert_eq!(f.stall().unwrap().at, 100, "the stall is stable");
+    }
+
+    /// Permission revocation at the flush choke point: WQE chains staged
+    /// by the old primary are fenced (counted) at the failover and flush
+    /// through the new primary only after the admission barrier; the
+    /// promoted slot, dead to the fan-out, never sees them.
+    #[test]
+    fn revocation_fences_staged_chains_until_admission() {
+        let p = Platform::default();
+        let mut f = Fabric::with_faults(
+            &p,
+            &repl(3, AckPolicy::Quorum(2)),
+            faults("kill:p@5000", OnLoss::Halt),
+            true,
+        )
+        .with_batching(FlushPolicy::Fence);
+        let mut t = ThreadClock::new(0);
+        for s in 0..4u64 {
+            f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+        }
+        assert!(t.now < 5_000, "staging must predate the kill, t={}", t.now);
+        assert_eq!(f.staged_pending(), 12, "4 lines x 3 backups");
+        t.wait_until(6_000);
+        f.rdfence(&mut t);
+        assert_eq!(f.revoked_wqes, 12, "the staged chains were fenced");
+        assert_eq!(f.staged_pending(), 0, "and retried after admission");
+        assert!(f.stall().is_none());
+        let admit = 5_000 + f.faults().election.handoff_ns;
+        assert_eq!(f.admit_at(), admit);
+        assert!(t.now >= admit, "the fence waited out the barrier");
+        // The retried chains landed on the surviving backups only.
+        assert_eq!(f.backup(1).ledger.len(), 4);
+        assert_eq!(f.backup(2).ledger.len(), 4);
+        assert_eq!(f.backup(0).ledger.len(), 0, "promoted slot left the fan-out");
+    }
+
+    /// Driving the election through the coordinated-mode API
+    /// ([`Fabric::pending_primary_event`] + [`Fabric::failover_to`], the
+    /// sharded coordinator's path) must land event-for-event where the
+    /// fabric's own in-band election does.
+    #[test]
+    fn coordinated_failover_matches_self_election() {
+        let p = Platform::default();
+        let drive = |f: &mut Fabric, coordinate: bool| -> Ns {
+            let mut t = ThreadClock::new(0);
+            f.post_write_wt(&mut t, meta(0x40, 0, 0));
+            f.rdfence(&mut t);
+            t.wait_until(10_001);
+            if coordinate {
+                if let Some((at, FaultKind::Kill)) = f.pending_primary_event(t.now) {
+                    f.settle(at);
+                    let field: Vec<Candidate> = (0..f.backups())
+                        .filter(|&i| f.state(i).is_alive())
+                        .map(|i| Candidate { id: i, certified: f.certified_prefix(i) })
+                        .collect();
+                    f.failover_to(elect(&field), at);
+                }
+            }
+            f.post_write_wt(&mut t, meta(0x80, 1, 1));
+            f.rdfence(&mut t);
+            t.now
+        };
+        let plan = || faults("kill:p@10000", OnLoss::Halt);
+        let mut auto = Fabric::with_faults(&p, &repl(3, AckPolicy::Quorum(2)), plan(), true);
+        let t_auto = drive(&mut auto, false);
+        let mut coord = Fabric::with_faults(&p, &repl(3, AckPolicy::Quorum(2)), plan(), true);
+        coord.set_coordinated(true);
+        let t_coord = drive(&mut coord, true);
+        assert_eq!(t_auto, t_coord, "coordinated election moved the timeline");
+        assert_eq!(auto.epoch_log(), coord.epoch_log());
+        assert_eq!(auto.admit_at(), coord.admit_at());
+        assert_eq!(auto.failover_downtime_ns, coord.failover_downtime_ns);
+        for b in 0..3 {
+            assert_eq!(
+                auto.backup(b).ledger.events(),
+                coord.backup(b).ledger.events(),
+                "backup {b}"
+            );
+        }
+    }
+
+    /// `rejoin:p@T`: the deposed primary takes the vacated slot back as
+    /// a backup, seeded with the image certified at the failover, and
+    /// rides the PR 2 resync path to catch up.
+    #[test]
+    fn deposed_primary_rejoins_via_resync_path() {
+        let p = Platform::default();
+        let mut f = Fabric::with_faults(
+            &p,
+            &repl(3, AckPolicy::Quorum(2)),
+            faults("kill:p@10000,rejoin:p@50000", OnLoss::Halt),
+            true,
+        );
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(&mut t, meta(0x40, 0, 0));
+        f.rdfence(&mut t);
+        t.wait_until(10_001);
+        f.post_write_wt(&mut t, meta(0x80, 1, 1)); // waits out the barrier
+        f.rdfence(&mut t);
+        assert_eq!(f.primary_slot(), Some(0));
+        t.wait_until(50_001);
+        f.post_write_wt(&mut t, meta(0xc0, 2, 2));
+        assert!(
+            matches!(f.state(0), BackupState::Resyncing { .. }),
+            "deposed primary must be resyncing, got {:?}",
+            f.state(0)
+        );
+        assert_eq!(f.primary_slot(), None, "the serving primary holds no slot");
+        t.wait_until(300_000);
+        f.post_write_wt(&mut t, meta(0x100, 3, 3));
+        f.rdfence(&mut t);
+        assert_eq!(f.state(0), BackupState::Alive);
+        assert_eq!(f.alive_count(), 3);
+        assert_eq!(f.backup(0).ledger.len(), 4, "resync closed the gap");
+        let stats = f.backup_stats();
+        assert_eq!(stats[0].resyncs, 1);
+        assert!(stats[0].resync_lines >= 2, "missed lines streamed back");
+        crate::recovery::check_epoch_ordering(&f.backup(0).ledger).unwrap();
+        assert_eq!(f.membership_epochs, 1, "one election, one epoch");
+    }
+
+    /// Leader completeness at the fabric level: whoever wins holds every
+    /// line a quorum fence acked before the kill.
+    #[test]
+    fn elected_primary_covers_all_acked_lines() {
+        let p = Platform::default();
+        let mut f = Fabric::with_faults(
+            &p,
+            &repl(3, AckPolicy::Quorum(2)),
+            faults("kill:1@2000,kill:p@20000", OnLoss::Degrade),
+            true,
+        );
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(&mut t, meta(0x40, 0, 0));
+        f.rdfence(&mut t); // acked by backups 0 and 2 at least
+        t.wait_until(2_001);
+        f.post_write_wt(&mut t, meta(0x80, 1, 1));
+        f.rdfence(&mut t); // backup 1 dead: acked by 0 and 2
+        let acked = 2u64;
+        t.wait_until(20_001);
+        f.post_write_wt(&mut t, meta(0xc0, 2, 2));
+        let w = f.primary_slot().expect("election must complete");
+        assert_eq!(w, 0, "equal prefixes tie to the lowest alive id");
+        assert!(
+            f.certified_prefix(w) >= acked,
+            "leader completeness: winner certifies {} < {} acked",
+            f.certified_prefix(w),
+            acked
+        );
     }
 }

@@ -20,10 +20,23 @@
 //!   surviving backups (`required` clamps to the alive count), durability
 //!   is temporarily weakened, and the run continues.
 //!
+//! The *primary* can die too: `kill:p@T` / `rejoin:p@T` events target
+//! the primary instead of a backup index. On a primary kill the fabric
+//! runs a deterministic leader election (see [`crate::net::membership`])
+//! — the surviving backup with the longest certified ledger prefix wins,
+//! ties broken by the lowest replica id — revokes the old primary's
+//! write permission at the staged-WQE flush choke point, re-replicates
+//! the winner's certified suffix to its peers, and only then admits new
+//! writes; the old primary may come back later as a backup through the
+//! ordinary catch-up resync. Election costs are governed by
+//! [`ElectionConfig`].
+//!
 //! The fabric records the *realized* alive/dead transitions (kills, and
 //! resync completions whose instants are only known at run time) as a
 //! [`FaultTimeline`], which the fault-aware recovery checks consume to
-//! know which backups can serve a crash at a given instant.
+//! know which backups can serve a crash at a given instant; the timeline
+//! also carries the membership-epoch transitions (one per completed
+//! failover) so recovery verdicts can be scoped to a primary epoch.
 
 use crate::config::AckPolicy;
 use crate::Ns;
@@ -51,10 +64,24 @@ pub struct FaultEvent {
     pub kind: FaultKind,
 }
 
-/// A deterministic, time-sorted fault schedule.
+/// One scheduled fault event targeting the *primary* (`kill:p@T` /
+/// `rejoin:p@T`): a kill triggers leader election and failover, a rejoin
+/// brings the deposed primary back as a backup through the ordinary
+/// catch-up resync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrimaryEvent {
+    /// Virtual instant at which the event takes effect (ns).
+    pub at: Ns,
+    pub kind: FaultKind,
+}
+
+/// A deterministic, time-sorted fault schedule: backup events plus
+/// primary events, kept in separate streams (backups are addressed by
+/// index, the primary by role).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct FaultPlan {
     events: Vec<FaultEvent>,
+    primary_events: Vec<PrimaryEvent>,
 }
 
 impl FaultPlan {
@@ -62,53 +89,74 @@ impl FaultPlan {
     /// checked by [`FaultPlan::validate`]).
     pub fn new(mut events: Vec<FaultEvent>) -> Self {
         events.sort_by_key(|e| e.at);
-        FaultPlan { events }
+        FaultPlan {
+            events,
+            primary_events: Vec::new(),
+        }
     }
 
+    /// Attach primary kill/rejoin events (sorted by time; shape is
+    /// checked by [`FaultPlan::validate`]).
+    pub fn with_primary(mut self, mut events: Vec<PrimaryEvent>) -> Self {
+        events.sort_by_key(|e| e.at);
+        self.primary_events = events;
+        self
+    }
+
+    /// Backup (index-addressed) events only.
     pub fn events(&self) -> &[FaultEvent] {
         &self.events
     }
 
+    /// Primary (role-addressed) events only.
+    pub fn primary_events(&self) -> &[PrimaryEvent] {
+        &self.primary_events
+    }
+
+    /// Whether any event targets the primary (the failover guard clause:
+    /// plans without primary faults take the pre-election path
+    /// unchanged).
+    pub fn has_primary_faults(&self) -> bool {
+        !self.primary_events.is_empty()
+    }
+
     pub fn len(&self) -> usize {
-        self.events.len()
+        self.events.len() + self.primary_events.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.events.is_empty()
+        self.events.is_empty() && self.primary_events.is_empty()
     }
 
-    /// Check the plan against a group of `backups` replicas: indices in
-    /// range, and each backup's events strictly increasing in time,
-    /// alternating kill → rejoin → kill → …, starting with a kill.
-    pub fn validate(&self, backups: usize) -> Result<()> {
-        for b in 0..backups {
-            let mut last_at: Option<Ns> = None;
-            let mut expect = FaultKind::Kill;
-            for ev in self.events.iter().filter(|e| e.backup == b) {
-                if let Some(prev) = last_at {
-                    if ev.at <= prev {
-                        bail!(
-                            "fault plan: backup {b} has non-increasing event \
-                             times ({prev} then {})",
-                            ev.at
-                        );
-                    }
-                }
-                if ev.kind != expect {
-                    bail!(
-                        "fault plan: backup {b} events must alternate \
-                         kill/rejoin starting with kill (got {:?} at t={})",
-                        ev.kind,
-                        ev.at
-                    );
-                }
-                expect = match ev.kind {
-                    FaultKind::Kill => FaultKind::Rejoin,
-                    FaultKind::Rejoin => FaultKind::Kill,
-                };
-                last_at = Some(ev.at);
-            }
+    /// Shape check that needs no group size: each target's events must be
+    /// strictly increasing in time and alternate kill → rejoin → kill →
+    /// …, starting with a kill. Contradictory plans (a kill and rejoin at
+    /// the same tick, a double kill of an already-dead target) are
+    /// rejected here — and therefore already at parse time.
+    pub fn validate_shape(&self) -> Result<()> {
+        let mut targets: Vec<usize> = self.events.iter().map(|e| e.backup).collect();
+        targets.sort_unstable();
+        targets.dedup();
+        for b in targets {
+            check_alternation(
+                &format!("backup {b}"),
+                self.events
+                    .iter()
+                    .filter(|e| e.backup == b)
+                    .map(|e| (e.at, e.kind)),
+            )?;
         }
+        check_alternation(
+            "the primary",
+            self.primary_events.iter().map(|e| (e.at, e.kind)),
+        )?;
+        Ok(())
+    }
+
+    /// Check the plan against a group of `backups` replicas: the shape
+    /// rules of [`FaultPlan::validate_shape`] plus indices in range.
+    pub fn validate(&self, backups: usize) -> Result<()> {
+        self.validate_shape()?;
         if let Some(ev) = self.events.iter().find(|e| e.backup >= backups) {
             bail!(
                 "fault plan names backup {} but the group only has {backups}",
@@ -119,14 +167,54 @@ impl FaultPlan {
     }
 }
 
+/// The per-target shape rule shared by backups and the primary: strictly
+/// increasing times, kill/rejoin alternation starting with a kill.
+fn check_alternation(
+    who: &str,
+    events: impl Iterator<Item = (Ns, FaultKind)>,
+) -> Result<()> {
+    let mut last_at: Option<Ns> = None;
+    let mut expect = FaultKind::Kill;
+    for (at, kind) in events {
+        if let Some(prev) = last_at {
+            if at <= prev {
+                bail!(
+                    "fault plan: {who} has contradictory events at the same \
+                     or non-increasing times ({prev} then {at})"
+                );
+            }
+        }
+        if kind != expect {
+            match kind {
+                FaultKind::Kill => bail!(
+                    "fault plan: {who} is killed at t={at} while already dead \
+                     (no rejoin since the previous kill)"
+                ),
+                FaultKind::Rejoin => bail!(
+                    "fault plan: {who} rejoins at t={at} without a prior kill"
+                ),
+            }
+        }
+        expect = match kind {
+            FaultKind::Kill => FaultKind::Rejoin,
+            FaultKind::Rejoin => FaultKind::Kill,
+        };
+        last_at = Some(at);
+    }
+    Ok(())
+}
+
 impl FromStr for FaultPlan {
     type Err = anyhow::Error;
 
     /// Parse a `--fault-plan` spec: comma-separated `kill:B@T` /
-    /// `rejoin:B@T` entries (`T` in ns, underscores allowed). The empty
-    /// string is the empty plan.
+    /// `rejoin:B@T` entries (`T` in ns, underscores allowed), where `B`
+    /// is a backup index or the literal `p` for the primary. The empty
+    /// string is the empty plan. Contradictory shapes (same-tick
+    /// kill+rejoin, double kill) are rejected here at parse time.
     fn from_str(s: &str) -> Result<Self> {
         let mut events = Vec::new();
+        let mut primary = Vec::new();
         for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
             let (kind_s, rest) = tok
                 .split_once(':')
@@ -139,32 +227,49 @@ impl FromStr for FaultPlan {
             let (backup_s, at_s) = rest
                 .split_once('@')
                 .ok_or_else(|| anyhow!("fault event {tok:?}: missing @time"))?;
-            let backup: usize = backup_s
-                .trim()
-                .parse()
-                .map_err(|e| anyhow!("fault event {tok:?}: bad backup index: {e}"))?;
             let at: Ns = at_s
                 .trim()
                 .replace('_', "")
                 .parse()
                 .map_err(|e| anyhow!("fault event {tok:?}: bad time: {e}"))?;
-            events.push(FaultEvent { at, backup, kind });
+            if backup_s.trim().eq_ignore_ascii_case("p") {
+                primary.push(PrimaryEvent { at, kind });
+            } else {
+                let backup: usize = backup_s
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow!("fault event {tok:?}: bad backup index: {e}"))?;
+                events.push(FaultEvent { at, backup, kind });
+            }
         }
-        Ok(FaultPlan::new(events))
+        let plan = FaultPlan::new(events).with_primary(primary);
+        plan.validate_shape()?;
+        Ok(plan)
     }
 }
 
 impl fmt::Display for FaultPlan {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        for (i, ev) in self.events.iter().enumerate() {
+        let kind_str = |k: FaultKind| match k {
+            FaultKind::Kill => "kill",
+            FaultKind::Rejoin => "rejoin",
+        };
+        let mut items: Vec<(Ns, String)> = self
+            .events
+            .iter()
+            .map(|ev| (ev.at, format!("{}:{}@{}", kind_str(ev.kind), ev.backup, ev.at)))
+            .collect();
+        items.extend(
+            self.primary_events
+                .iter()
+                .map(|ev| (ev.at, format!("{}:p@{}", kind_str(ev.kind), ev.at))),
+        );
+        items.sort_by_key(|(at, _)| *at);
+        for (i, (_, item)) in items.iter().enumerate() {
             if i > 0 {
                 f.write_str(",")?;
             }
-            let kind = match ev.kind {
-                FaultKind::Kill => "kill",
-                FaultKind::Rejoin => "rejoin",
-            };
-            write!(f, "{kind}:{}@{}", ev.backup, ev.at)?;
+            f.write_str(item)?;
         }
         Ok(())
     }
@@ -222,6 +327,35 @@ pub fn effective_required(required: usize, alive: usize, on_loss: OnLoss) -> usi
 pub const DEFAULT_HANDOFF_NS: Ns = 10_000;
 /// Default per-line streaming cost of the catch-up resync (ns/line).
 pub const DEFAULT_RESYNC_LINE_NS: Ns = 100;
+/// Default fixed latency of a primary failover (ns): failure detection,
+/// the one-sided CAS election round, and permission revocation across
+/// the surviving replicas (arXiv:1905.12143-style agreement — cheaper
+/// than message-passing consensus but not free).
+pub const DEFAULT_ELECTION_HANDOFF_NS: Ns = 25_000;
+/// Default per-line cost of the elected primary re-replicating its
+/// certified ledger suffix to a lagging peer before admitting writes
+/// (ns/line).
+pub const DEFAULT_ELECTION_LINE_NS: Ns = 100;
+
+/// Leader-election cost knobs (`[election]` table / `--election-*`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElectionConfig {
+    /// Fixed detection + election + permission-revocation latency charged
+    /// at a primary kill (ns).
+    pub handoff_ns: Ns,
+    /// Re-replication streaming cost per certified-suffix line the winner
+    /// pushes to a lagging peer (ns/line).
+    pub line_ns: Ns,
+}
+
+impl Default for ElectionConfig {
+    fn default() -> Self {
+        ElectionConfig {
+            handoff_ns: DEFAULT_ELECTION_HANDOFF_NS,
+            line_ns: DEFAULT_ELECTION_LINE_NS,
+        }
+    }
+}
 
 /// Failure-dynamics configuration (`[faults]` table / `--fault-plan`).
 #[derive(Clone, Debug, PartialEq)]
@@ -232,6 +366,8 @@ pub struct FaultsConfig {
     pub handoff_ns: Ns,
     /// Streaming cost per missed line during resync (ns/line).
     pub resync_line_ns: Ns,
+    /// Primary-failover election costs (used only by `kill:p@T` plans).
+    pub election: ElectionConfig,
 }
 
 impl Default for FaultsConfig {
@@ -241,6 +377,7 @@ impl Default for FaultsConfig {
             on_loss: OnLoss::default(),
             handoff_ns: DEFAULT_HANDOFF_NS,
             resync_line_ns: DEFAULT_RESYNC_LINE_NS,
+            election: ElectionConfig::default(),
         }
     }
 }
@@ -336,6 +473,12 @@ pub struct FaultTimeline {
     backups: usize,
     /// `(instant, backup, alive-after)`, time-sorted.
     transitions: Vec<(Ns, usize, bool)>,
+    /// `(instant, epoch-after, winner-slot)` membership-epoch
+    /// transitions, time-sorted: one per completed primary failover. The
+    /// winner slot is the backup index that was promoted (and therefore
+    /// left the backup group at the same instant). Empty for runs without
+    /// primary faults — epoch 0 throughout.
+    epochs: Vec<(Ns, u64, usize)>,
 }
 
 impl FaultTimeline {
@@ -344,7 +487,16 @@ impl FaultTimeline {
         FaultTimeline {
             backups,
             transitions,
+            epochs: Vec::new(),
         }
+    }
+
+    /// Attach the realized membership-epoch transitions (builder so the
+    /// epoch-free `new` call sites stay valid).
+    pub fn with_epochs(mut self, mut epochs: Vec<(Ns, u64, usize)>) -> Self {
+        epochs.sort_by_key(|e| e.0);
+        self.epochs = epochs;
+        self
     }
 
     pub fn backups(&self) -> usize {
@@ -353,6 +505,37 @@ impl FaultTimeline {
 
     pub fn transitions(&self) -> &[(Ns, usize, bool)] {
         &self.transitions
+    }
+
+    /// The realized membership-epoch transitions (empty without primary
+    /// faults).
+    pub fn epochs(&self) -> &[(Ns, u64, usize)] {
+        &self.epochs
+    }
+
+    /// Membership epoch in force at `t` (0 before any failover).
+    pub fn epoch_at(&self, t: Ns) -> u64 {
+        let mut epoch = 0;
+        for &(at, e, _) in &self.epochs {
+            if at > t {
+                break;
+            }
+            epoch = e;
+        }
+        epoch
+    }
+
+    /// Slot acting as primary at `t`: `None` is the original primary,
+    /// `Some(w)` the backup slot promoted by the latest failover.
+    pub fn primary_at(&self, t: Ns) -> Option<usize> {
+        let mut primary = None;
+        for &(at, _, w) in &self.epochs {
+            if at > t {
+                break;
+            }
+            primary = Some(w);
+        }
+        primary
     }
 
     /// Which backups are in the quorum (alive, fully resynced) at `t`.
@@ -398,9 +581,70 @@ mod tests {
             "kill:1@abc",
             "explode:1@100",
             "kill:1@-5",
+            "kill:p",
+            "rejoin:p@abc",
         ] {
             assert!(bad.parse::<FaultPlan>().is_err(), "{bad:?} should fail");
         }
+    }
+
+    #[test]
+    fn plan_parse_rejects_contradictory_shapes() {
+        // Same-tick kill + rejoin of one backup.
+        let err = "kill:0@100,rejoin:0@100".parse::<FaultPlan>().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("contradictory"),
+            "want a contradiction error, got: {err:#}"
+        );
+        // Double kill of an already-dead backup.
+        let err = "kill:0@100,kill:0@200".parse::<FaultPlan>().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("already dead"),
+            "want an already-dead error, got: {err:#}"
+        );
+        // Rejoin with no prior kill.
+        let err = "rejoin:1@100".parse::<FaultPlan>().unwrap_err();
+        assert!(
+            format!("{err:#}").contains("without a prior kill"),
+            "{err:#}"
+        );
+        // The same shape rules bind the primary stream.
+        assert!("kill:p@100,kill:p@200".parse::<FaultPlan>().is_err());
+        assert!("kill:p@100,rejoin:p@100".parse::<FaultPlan>().is_err());
+        assert!("rejoin:p@100".parse::<FaultPlan>().is_err());
+        // Well-shaped plans still parse.
+        assert!("kill:0@100,rejoin:0@200,kill:0@300".parse::<FaultPlan>().is_ok());
+        assert!("kill:p@100,rejoin:p@200".parse::<FaultPlan>().is_ok());
+    }
+
+    #[test]
+    fn primary_events_parse_and_round_trip() {
+        let plan: FaultPlan = "kill:1@5000,kill:P@8_000,rejoin:p@20000".parse().unwrap();
+        assert_eq!(plan.events().len(), 1);
+        assert_eq!(plan.primary_events().len(), 2);
+        assert!(plan.has_primary_faults());
+        assert_eq!(plan.len(), 3);
+        assert_eq!(
+            plan.primary_events(),
+            &[
+                PrimaryEvent {
+                    at: 8_000,
+                    kind: FaultKind::Kill
+                },
+                PrimaryEvent {
+                    at: 20_000,
+                    kind: FaultKind::Rejoin
+                },
+            ]
+        );
+        // Display merges both streams chronologically and re-parses to
+        // the same plan.
+        assert_eq!(plan.to_string(), "kill:1@5000,kill:p@8000,rejoin:p@20000");
+        let again: FaultPlan = plan.to_string().parse().unwrap();
+        assert_eq!(plan, again);
+        // Backup-only plans don't see the primary stream.
+        let plain: FaultPlan = "kill:1@100".parse().unwrap();
+        assert!(!plain.has_primary_faults());
     }
 
     #[test]
@@ -418,13 +662,29 @@ mod tests {
         let oob: FaultPlan = "kill:3@100".parse().unwrap();
         assert!(oob.validate(3).is_err());
         oob.validate(4).unwrap();
-        // Rejoin before any kill.
-        let rj: FaultPlan = "rejoin:0@100".parse().unwrap();
+        // Contradictory shapes no longer survive parsing (see
+        // plan_parse_rejects_contradictory_shapes), but plans built
+        // programmatically through `new` are still caught by validate:
+        // rejoin before any kill, double kill, equal times.
+        let rj = FaultPlan::new(vec![FaultEvent {
+            at: 100,
+            backup: 0,
+            kind: FaultKind::Rejoin,
+        }]);
         assert!(rj.validate(1).is_err());
-        // Double kill.
-        let dk: FaultPlan = "kill:0@100,kill:0@200".parse().unwrap();
+        let dk = FaultPlan::new(vec![
+            FaultEvent {
+                at: 100,
+                backup: 0,
+                kind: FaultKind::Kill,
+            },
+            FaultEvent {
+                at: 200,
+                backup: 0,
+                kind: FaultKind::Kill,
+            },
+        ]);
         assert!(dk.validate(1).is_err());
-        // Equal times on one backup.
         let eq = FaultPlan::new(vec![
             FaultEvent {
                 at: 100,
@@ -438,8 +698,23 @@ mod tests {
             },
         ]);
         assert!(eq.validate(1).is_err());
-        // Distinct backups may share instants.
+        // A contradictory primary stream is caught the same way.
+        let pk = FaultPlan::new(Vec::new()).with_primary(vec![
+            PrimaryEvent {
+                at: 100,
+                kind: FaultKind::Kill,
+            },
+            PrimaryEvent {
+                at: 200,
+                kind: FaultKind::Kill,
+            },
+        ]);
+        assert!(pk.validate(1).is_err());
+        // Distinct backups may share instants; so may a backup and the
+        // primary.
         let share: FaultPlan = "kill:0@100,kill:1@100".parse().unwrap();
+        share.validate(2).unwrap();
+        let share: FaultPlan = "kill:0@100,kill:p@100".parse().unwrap();
         share.validate(2).unwrap();
     }
 
@@ -472,6 +747,9 @@ mod tests {
         let f = FaultsConfig::default();
         assert!(f.plan.is_empty());
         assert_eq!(f.on_loss, OnLoss::Halt);
+        assert_eq!(f.election, ElectionConfig::default());
+        assert_eq!(f.election.handoff_ns, DEFAULT_ELECTION_HANDOFF_NS);
+        assert_eq!(f.election.line_ns, DEFAULT_ELECTION_LINE_NS);
         f.validate(1).unwrap();
     }
 
@@ -487,6 +765,25 @@ mod tests {
         assert_eq!(tl.alive_at(500), vec![true, true, false]);
         assert_eq!(tl.alive_count_at(350), 1);
         assert_eq!(tl.alive_count_at(10_000), 2);
+        // Epoch-free timelines stay at epoch 0 under the original
+        // primary.
+        assert_eq!(tl.epoch_at(10_000), 0);
+        assert_eq!(tl.primary_at(10_000), None);
+        assert!(tl.epochs().is_empty());
+    }
+
+    #[test]
+    fn timeline_epoch_tracking() {
+        let tl = FaultTimeline::new(2, vec![(400, 0, false)])
+            .with_epochs(vec![(400, 1, 0), (900, 2, 1)]);
+        assert_eq!(tl.epoch_at(0), 0);
+        assert_eq!(tl.primary_at(0), None);
+        assert_eq!(tl.epoch_at(400), 1);
+        assert_eq!(tl.primary_at(400), Some(0));
+        assert_eq!(tl.epoch_at(899), 1);
+        assert_eq!(tl.epoch_at(900), 2);
+        assert_eq!(tl.primary_at(900), Some(1));
+        assert_eq!(tl.epochs().len(), 2);
     }
 
     #[test]

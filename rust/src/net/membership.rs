@@ -1,0 +1,82 @@
+//! Deterministic leader election over certified durability ledgers.
+//!
+//! When the primary dies (`kill:p@T` in a [`crate::net::FaultPlan`]),
+//! the surviving backups elect a new primary with the one-sided
+//! CAS-and-permissions protocol of *The Impact of RDMA on Agreement*
+//! (arXiv:1905.12143): each candidate campaigns with its **certified
+//! prefix** — the number of lines its durability ledger has made
+//! persistent — and the longest prefix wins, ties broken by the lowest
+//! replica id. Because every durably-acked transaction reached at least
+//! the ack policy's `required` backups before its commit returned, the
+//! longest certified prefix necessarily covers every acked transaction
+//! (leader completeness; checked end-to-end by
+//! [`crate::recovery::check_leader_completeness`]).
+//!
+//! This module is the pure decision rule; the fabric drives it at the
+//! kill instant and charges the election/revocation/re-replication costs
+//! ([`crate::net::faults::ElectionConfig`]). A sharded mirror sums each
+//! node's per-shard prefixes first so all S shards fail over to the same
+//! winner as one node (see `coordinator`).
+
+/// One election candidate: a surviving backup and the length of its
+/// certified ledger prefix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    /// Replica id (backup slot index).
+    pub id: usize,
+    /// Certified prefix length: durably persisted lines this replica can
+    /// prove (ledger length, or the persist counter when ledgers are
+    /// off).
+    pub certified: u64,
+}
+
+/// Elect a leader: the candidate with the longest certified prefix wins,
+/// ties broken by the lowest id. Returns `None` when no candidate
+/// survives (the group is unrecoverable — the caller stalls).
+pub fn elect(candidates: &[Candidate]) -> Option<usize> {
+    candidates
+        .iter()
+        .max_by(|a, b| {
+            a.certified
+                .cmp(&b.certified)
+                // Reverse the id order so max_by prefers the LOWEST id on
+                // equal prefixes.
+                .then(b.id.cmp(&a.id))
+        })
+        .map(|c| c.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(id: usize, certified: u64) -> Candidate {
+        Candidate { id, certified }
+    }
+
+    #[test]
+    fn longest_certified_prefix_wins() {
+        assert_eq!(elect(&[c(0, 10), c(1, 25), c(2, 7)]), Some(1));
+        assert_eq!(elect(&[c(2, 3), c(0, 9)]), Some(0));
+    }
+
+    #[test]
+    fn ties_break_to_the_lowest_id() {
+        assert_eq!(elect(&[c(2, 10), c(0, 10), c(1, 10)]), Some(0));
+        assert_eq!(elect(&[c(2, 10), c(1, 10), c(0, 3)]), Some(1));
+    }
+
+    #[test]
+    fn empty_field_elects_nobody() {
+        assert_eq!(elect(&[]), None);
+    }
+
+    #[test]
+    fn order_of_candidates_is_irrelevant() {
+        let mut field = vec![c(3, 5), c(1, 9), c(2, 9), c(0, 1)];
+        let winner = elect(&field);
+        field.reverse();
+        assert_eq!(elect(&field), winner);
+        assert_eq!(winner, Some(1));
+    }
+}

@@ -6,10 +6,15 @@
 //! ([`wqe`]) — and the N-way replica-group [`Fabric`] with pluggable
 //! ack policies and deterministic failure dynamics ([`faults`]): backups
 //! can be killed and rejoin mid-run, with catch-up resync and
-//! halt/degrade loss handling.
+//! halt/degrade loss handling. The primary can die too: [`membership`]
+//! holds the deterministic leader-election rule (longest certified
+//! ledger prefix, ties to the lowest id) the fabric runs on `kill:p@T`,
+//! fencing the old primary's staged WQE chains via permission revocation
+//! and re-replicating the winner's suffix before admitting writes.
 
 pub mod fabric;
 pub mod faults;
+pub mod membership;
 pub mod qp;
 pub mod rdma;
 pub mod remote;
@@ -18,9 +23,10 @@ pub mod wqe;
 
 pub use fabric::{BackupStats, Fabric};
 pub use faults::{
-    effective_required, BackupState, FaultEvent, FaultKind, FaultPlan, FaultTimeline,
-    FaultsConfig, OnLoss, Stall,
+    effective_required, BackupState, ElectionConfig, FaultEvent, FaultKind, FaultPlan,
+    FaultTimeline, FaultsConfig, OnLoss, PrimaryEvent, Stall,
 };
+pub use membership::{elect, Candidate};
 pub use qp::LocalQp;
 pub use rdma::Rdma;
 pub use remote::RemoteEngine;

@@ -442,6 +442,18 @@ impl RemoteEngine {
     pub fn persist_horizon(&self) -> Ns {
         self.max_persist
     }
+
+    /// Certified prefix length this engine can campaign with in a leader
+    /// election (see [`crate::net::membership`]): the lines its
+    /// durability ledger proves persistent, or the raw persist counter
+    /// when ledgers are off.
+    pub fn certified_lines(&self) -> u64 {
+        if self.ledger.enabled() {
+            self.ledger.len() as u64
+        } else {
+            self.persists
+        }
+    }
 }
 
 #[cfg(test)]

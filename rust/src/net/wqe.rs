@@ -70,6 +70,14 @@
 //! doorbell, per-backup chains) lives in [`crate::net::Fabric`]; the
 //! per-WQE gap/window/back-pressure submission model is unchanged in
 //! [`crate::net::Rdma::post_batch`].
+//!
+//! The flush point doubles as the **permission-revocation barrier** of
+//! a primary failover (see [`crate::net::membership`]): every staged
+//! WQE must pass a doorbell to reach the wire, so revoking the dying
+//! primary's write permission at the flush choke point provably fences
+//! its in-flight chains — they are counted
+//! ([`crate::net::Fabric::revoked_wqes`]) and retried through the new
+//! primary once it admits writes.
 
 use super::verbs::{Verb, WriteMeta};
 use crate::{line_of, LINE};

@@ -18,6 +18,13 @@
 //! partitioning the PM space — [`crate::coordinator::shard`]), the
 //! group checks run per shard and merge into a cross-shard verdict:
 //! see [`check_sharded_group_crash`].
+//!
+//! Runs with **primary faults** ([`crate::net::membership`]) add a
+//! membership-epoch dimension: every faulted verdict reports the epoch
+//! in force at the crash instant, and [`check_leader_completeness`]
+//! verifies the election rule's defining property — each elected
+//! primary's certified ledger covered every transaction durably acked
+//! by its failover instant.
 
 use crate::coordinator::ShardMap;
 use crate::mem::DurabilityLog;
@@ -261,20 +268,22 @@ pub fn check_faulted_group_crash(
         );
     }
     let alive = timeline.alive_at(crash_t);
+    let epoch = timeline.epoch_at(crash_t);
     let mut prefixes = Vec::with_capacity(n);
     for (b, ledger) in ledgers.iter().enumerate() {
         if !alive[b] {
             continue;
         }
         let k = best_prefix(ledger, history, log_bases, data_addrs, crash_t)
-            .map_err(|e| anyhow::anyhow!("backup {b}: {e}"))?;
+            .map_err(|e| anyhow::anyhow!("backup {b} (membership epoch {epoch}): {e}"))?;
         prefixes.push(k);
     }
     let eff = effective_required(required, prefixes.len(), on_loss);
     if eff == 0 {
         bail!(
-            "no ack-satisfying survivor set at crash t={crash_t}: {} of {n} \
-             backups alive, policy requires {required} (on_loss = {on_loss})",
+            "no ack-satisfying survivor set at crash t={crash_t} (membership \
+             epoch {epoch}): {} of {n} backups alive, policy requires \
+             {required} (on_loss = {on_loss})",
             prefixes.len()
         );
     }
@@ -283,10 +292,10 @@ pub fn check_faulted_group_crash(
     let durable = history.durable_by(crash_t);
     if survivor_best < durable {
         bail!(
-            "group durability violated at crash t={crash_t}: {durable} txns \
-             durably acked, but after losing {} further backups the best \
-             survivor holds only prefix {survivor_best} (survivor prefixes, \
-             desc: {prefixes:?})",
+            "group durability violated at crash t={crash_t} (membership epoch \
+             {epoch}): {durable} txns durably acked, but after losing {} \
+             further backups the best survivor holds only prefix \
+             {survivor_best} (survivor prefixes, desc: {prefixes:?})",
             eff - 1
         );
     }
@@ -398,8 +407,9 @@ pub fn check_sharded_group_crash(
         if effective_required(required, idx.len(), on_loss) == 0 {
             bail!(
                 "shard {s}: no ack-satisfying survivor set at crash \
-                 t={crash_t}: {} of {n} backups alive, policy requires \
-                 {required} (on_loss = {on_loss})",
+                 t={crash_t} (membership epoch {}): {} of {n} backups alive, \
+                 policy requires {required} (on_loss = {on_loss})",
+                timelines[s].epoch_at(crash_t),
                 idx.len()
             );
         }
@@ -461,9 +471,13 @@ pub fn check_sharded_group_crash(
     }
     if merged < durable {
         bail!(
-            "cross-shard durability violated at crash t={crash_t}: {durable} \
-             txns durably acked, but the merged shard verdict holds only \
-             prefix {merged}"
+            "cross-shard durability violated at crash t={crash_t} (per-shard \
+             membership epochs {:?}): {durable} txns durably acked, but the \
+             merged shard verdict holds only prefix {merged}",
+            timelines
+                .iter()
+                .map(|tl| tl.epoch_at(crash_t))
+                .collect::<Vec<_>>()
         );
     }
     Ok(merged)
@@ -507,6 +521,122 @@ pub fn check_sharded_group_crashes(
         )
         .map(|_| ())
     })
+}
+
+/// Leader completeness across every membership epoch of a realized
+/// [`FaultTimeline`]: for each failover transition `(at, epoch, winner)`
+/// the elected primary's ledger — certified line by line before the
+/// election ([`crate::net::membership`]) — must recover, at the election
+/// instant, to a committed prefix covering every transaction durably
+/// acked by `at`. This is the property the election rule (longest
+/// certified prefix wins) exists to guarantee: promoting any candidate
+/// that fails it would silently drop acked transactions even though no
+/// quorum was lost. Returns the number of epoch transitions checked
+/// (0 for a fault-free timeline — trivially complete).
+pub fn check_leader_completeness(
+    ledgers: &[&DurabilityLog],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+    timeline: &FaultTimeline,
+) -> Result<u64> {
+    for &(at, epoch, winner) in timeline.epochs() {
+        if winner >= ledgers.len() {
+            bail!(
+                "epoch {epoch} elected slot {winner} but the group has only \
+                 {} backups",
+                ledgers.len()
+            );
+        }
+        let k = best_prefix(ledgers[winner], history, log_bases, data_addrs, at)
+            .map_err(|e| {
+                anyhow::anyhow!("epoch {epoch} leader (slot {winner}): {e}")
+            })?;
+        let durable = history.durable_by(at);
+        if k < durable {
+            bail!(
+                "leader completeness violated at epoch {epoch} (t={at}): \
+                 {durable} txns durably acked by the failover instant, but \
+                 the elected primary (slot {winner}) recovers only prefix {k}"
+            );
+        }
+    }
+    Ok(timeline.epochs().len() as u64)
+}
+
+/// Leader completeness for a sharded coordinator: all `S` shards of a
+/// replica node fail over as one unit, so every shard must realize the
+/// **same** epoch log, and the elected node's recovered state is the
+/// union of the winner slot's per-shard images (disjoint address sets —
+/// the [`ShardMap`] is a partition). That merged image, rolled back
+/// through any active undo logs, must cover every transaction durably
+/// acked by each failover instant. Returns the number of epoch
+/// transitions checked.
+pub fn check_sharded_leader_completeness(
+    shard_ledgers: &[Vec<&DurabilityLog>],
+    timelines: &[FaultTimeline],
+    history: &TxnHistory,
+    log_bases: &[Addr],
+    data_addrs: &[Addr],
+) -> Result<u64> {
+    let Some(first) = timelines.first() else {
+        bail!("sharded leader completeness needs at least one shard");
+    };
+    if shard_ledgers.len() != timelines.len() {
+        bail!(
+            "{} ledger groups for {} timelines",
+            shard_ledgers.len(),
+            timelines.len()
+        );
+    }
+    let eps = first.epochs();
+    for (s, tl) in timelines.iter().enumerate().skip(1) {
+        if tl.epochs() != eps {
+            bail!(
+                "shard {s} epoch log {:?} diverges from shard 0 {eps:?}: all \
+                 shards of a node must fail over as one unit",
+                tl.epochs()
+            );
+        }
+    }
+    for &(at, epoch, winner) in eps {
+        let mut img: HashMap<Addr, u64> = HashMap::new();
+        for (s, ledgers) in shard_ledgers.iter().enumerate() {
+            if winner >= ledgers.len() {
+                bail!(
+                    "epoch {epoch} elected slot {winner} but shard {s} has \
+                     only {} backups",
+                    ledgers.len()
+                );
+            }
+            img.extend(ledgers[winner].image_at(at));
+        }
+        for &log in log_bases {
+            for (addr, old) in rollback_plan(&img, log) {
+                img.insert(crate::line_of(addr), old);
+            }
+        }
+        let k = (0..history.snapshots.len())
+            .rev()
+            .find(|&k| matches_snapshot(&img, &history.snapshots[k], data_addrs))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "epoch {epoch} leader (slot {winner}): merged recovered \
+                     image matches no committed prefix at t={at}"
+                )
+            })?;
+        let durable = history.durable_by(at);
+        if k < durable {
+            bail!(
+                "leader completeness violated at epoch {epoch} (t={at}): \
+                 {durable} txns durably acked by the failover instant, but \
+                 the elected primary (slot {winner}) recovers only prefix {k} \
+                 across {} shards",
+                shard_ledgers.len()
+            );
+        }
+    }
+    Ok(eps.len() as u64)
 }
 
 /// Epoch-ordering invariant across a whole replica group: each backup's
@@ -1021,6 +1151,157 @@ mod tests {
             crash
         )
         .is_err());
+    }
+
+    #[test]
+    fn leader_completeness_checks_the_elected_prefix() {
+        use crate::net::FaultTimeline;
+        let (m, hist) = run_workload(StrategyKind::SmOb, 3);
+        let full = &m.backup(0).ledger;
+        let at = hist.dfences[1]; // failover right after txn 1 acked
+        // A winner holding the full certified ledger is complete.
+        let tl = FaultTimeline::new(2, Vec::new()).with_epochs(vec![(at, 1, 0)]);
+        let checked =
+            check_leader_completeness(&[full, full], &hist, &[LOG], &[D0, D1], &tl)
+                .unwrap();
+        assert_eq!(checked, 1);
+        // An empty ledger promoted to leader cannot cover the acked txns.
+        let empty = DurabilityLog::new(true);
+        let tl_bad =
+            FaultTimeline::new(2, Vec::new()).with_epochs(vec![(at, 1, 1)]);
+        let err = check_leader_completeness(
+            &[full, &empty],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            &tl_bad,
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("leader completeness violated"),
+            "unexpected error: {err}"
+        );
+        // A winner slot outside the group is a shape error.
+        let tl_oob =
+            FaultTimeline::new(2, Vec::new()).with_epochs(vec![(at, 1, 5)]);
+        assert!(check_leader_completeness(
+            &[full, full],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            &tl_oob
+        )
+        .is_err());
+        // No epoch transitions: trivially complete, zero checks.
+        let tl_none = FaultTimeline::new(2, Vec::new());
+        let checked = check_leader_completeness(
+            &[full, full],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            &tl_none,
+        )
+        .unwrap();
+        assert_eq!(checked, 0);
+    }
+
+    #[test]
+    fn sharded_leader_completeness_merges_the_winner_images() {
+        use crate::mem::DurEvent;
+        use crate::net::FaultTimeline;
+        // One txn writing D0 (shard 0) and D1 (shard 1); the winner's
+        // state only covers the acked txn when both shard images merge.
+        let mut hist = TxnHistory::new(HashMap::new());
+        let mut snap = HashMap::new();
+        snap.insert(D0, 7u64);
+        snap.insert(D1, 9u64);
+        hist.commit(snap, 100);
+        let mk = |addr, val| {
+            let mut l = DurabilityLog::new(true);
+            l.record(DurEvent {
+                addr,
+                val,
+                at: 90,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: 0,
+            });
+            l
+        };
+        let s0 = mk(D0, 7);
+        let s1 = mk(D1, 9);
+        let epochs = vec![(200u64, 1u64, 0usize)];
+        let tls = vec![
+            FaultTimeline::new(1, Vec::new()).with_epochs(epochs.clone()),
+            FaultTimeline::new(1, Vec::new()).with_epochs(epochs.clone()),
+        ];
+        let groups = vec![vec![&s0], vec![&s1]];
+        let checked = check_sharded_leader_completeness(
+            &groups,
+            &tls,
+            &hist,
+            &[],
+            &[D0, D1],
+        )
+        .unwrap();
+        assert_eq!(checked, 1);
+        // A shard whose winner image is missing sinks completeness.
+        let empty = DurabilityLog::new(true);
+        let groups_bad = vec![vec![&s0], vec![&empty]];
+        assert!(check_sharded_leader_completeness(
+            &groups_bad,
+            &tls,
+            &hist,
+            &[],
+            &[D0, D1]
+        )
+        .is_err());
+        // Diverging per-shard epoch logs are a shape error.
+        let tls_bad = vec![
+            FaultTimeline::new(1, Vec::new()).with_epochs(epochs),
+            FaultTimeline::new(1, Vec::new()),
+        ];
+        let err = check_sharded_leader_completeness(
+            &groups,
+            &tls_bad,
+            &hist,
+            &[],
+            &[D0, D1],
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("fail over as one unit"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn faulted_verdicts_carry_the_membership_epoch() {
+        use crate::net::FaultTimeline;
+        // A lagging required backup under epoch 1: the durability verdict
+        // must name the epoch in force at the crash instant.
+        let (m, hist) = run_workload(StrategyKind::SmOb, 2);
+        let full = &m.backup(0).ledger;
+        let empty = DurabilityLog::new(true);
+        let crash = full.horizon();
+        let tl = FaultTimeline::new(2, Vec::new())
+            .with_epochs(vec![(0, 1, 0)]);
+        let err = check_faulted_group_crash(
+            &[full, &empty],
+            &hist,
+            &[LOG],
+            &[D0, D1],
+            2,
+            OnLoss::Halt,
+            &tl,
+            crash,
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("membership epoch 1"),
+            "verdict lacks the epoch dimension: {err}"
+        );
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! Primary failover acceptance tests: the kill-time x ack-policy x
+//! shard-count matrix (the primary dies early/mid/late and the
+//! membership layer must seat a successor), leader completeness of the
+//! elected primary at every membership epoch, the demoted primary's
+//! rejoin-as-backup path, the SM-RC rejection of `rejoin:p`, and the
+//! anchor: a plan with no primary faults leaves the membership
+//! machinery a guard-clause pass-through, event-for-event identical to
+//! the pre-membership path.
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, ShardMapSpec, ShardingConfig, ThreadCtx};
+use pmsm::net::{BackupState, FaultsConfig, OnLoss};
+use pmsm::pstore::log_base_for;
+use pmsm::recovery::{self, TxnHistory};
+use pmsm::txn::Txn;
+use pmsm::workloads::transact::run_transact_on;
+use pmsm::workloads::TransactConfig;
+use std::collections::HashMap;
+
+// Two adjacent data lines: under the modulo map they land on different
+// shards, so every multi-shard run exercises cross-shard failover.
+const D0: u64 = 0x20_0000;
+const D1: u64 = 0x20_0040;
+
+fn faults(plan: &str, on_loss: OnLoss) -> FaultsConfig {
+    FaultsConfig::with_plan(plan, on_loss).expect("valid plan")
+}
+
+fn build(policy: AckPolicy, f: FaultsConfig, shards: usize) -> Mirror {
+    Mirror::try_build_sharded(
+        Platform::default(),
+        StrategyKind::SmOb,
+        None,
+        ReplicationConfig::new(3, policy),
+        f,
+        ShardingConfig::new(shards, ShardMapSpec::Modulo),
+        true,
+    )
+    .expect("valid build")
+}
+
+/// Drive `n` two-write txns, recording history; stops early (returning
+/// the partial history) if the fabric stalls.
+fn drive_txns(m: &mut Mirror, t: &mut ThreadCtx, n: u64) -> TxnHistory {
+    let log = log_base_for(0);
+    let mut hist = TxnHistory::new(HashMap::new());
+    for i in 0..n {
+        let mut tx = Txn::begin(m, t, log, None);
+        tx.write(m, t, D0, 100 + i);
+        tx.write(m, t, D1, 200 + i);
+        tx.commit(m, t);
+        if m.stall().is_some() {
+            break;
+        }
+        let mut snap = HashMap::new();
+        snap.insert(D0, 100 + i);
+        snap.insert(D1, 200 + i);
+        hist.commit(snap, t.last_dfence);
+    }
+    hist
+}
+
+/// Fault-free span of the standard workload under a given shape, used
+/// to place kill points.
+fn baseline_span(policy: AckPolicy, shards: usize, n: u64) -> u64 {
+    let mut m = build(policy, FaultsConfig::default(), shards);
+    let mut t = ThreadCtx::new(0);
+    drive_txns(&mut m, &mut t, n);
+    t.now()
+}
+
+/// The matrix: kill the primary at an early/mid/late point under each
+/// ack policy, on 1 and 4 shards. Policies that tolerate the loss of
+/// one group member complete through the failover and satisfy leader
+/// completeness at the recorded epoch; `all + halt` fails over and then
+/// stalls at the next durability fence — the elected winner left the
+/// backup group, so only 2 of the 3 required acks remain.
+#[test]
+fn primary_fault_matrix_kill_each_phase() {
+    const TXNS: u64 = 8;
+    let log = log_base_for(0);
+    for (policy, on_loss, survives) in [
+        (AckPolicy::All, OnLoss::Degrade, true),
+        (AckPolicy::All, OnLoss::Halt, false),
+        (AckPolicy::Majority, OnLoss::Halt, true),
+        (AckPolicy::Quorum(2), OnLoss::Halt, true),
+    ] {
+        for shards in [1usize, 4] {
+            let span = baseline_span(policy, shards, TXNS);
+            for (num, den) in [(1u64, 8u64), (1, 2), (3, 4)] {
+                let kill_at = span * num / den;
+                let plan = format!("kill:p@{kill_at}");
+                let mut m = build(policy, faults(&plan, on_loss), shards);
+                let mut t = ThreadCtx::new(0);
+                let hist = drive_txns(&mut m, &mut t, TXNS);
+                m.settle(t.now());
+                let tag = format!("{policy}/{on_loss}/shards={shards}/kill@{num}/{den}");
+                assert_eq!(m.membership_epochs(), 1, "{tag}: exactly one failover");
+                assert!(m.failover_downtime_ns() > 0, "{tag}: handoff is never free");
+                // Synchronous fan-out keeps the alive peers' certified
+                // prefixes in lockstep, so the election is a tie broken
+                // to the lowest id and the winner has nothing to stream.
+                assert_eq!(
+                    m.rereplicated_lines(),
+                    0,
+                    "{tag}: converged peers need no re-replication"
+                );
+                for s in 0..shards {
+                    assert_eq!(
+                        m.shard_fabric(s).primary_slot(),
+                        Some(0),
+                        "{tag}: shard {s} must seat the one cross-shard winner"
+                    );
+                }
+                if survives {
+                    assert!(m.stall().is_none(), "{tag}: must ride through");
+                    assert_eq!(hist.committed(), TXNS as usize, "{tag}: full run");
+                    let checked = recovery::check_sharded_leader_completeness(
+                        &m.shard_ledgers(),
+                        &m.timelines(),
+                        &hist,
+                        &[log],
+                        &[D0, D1],
+                    )
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                    assert_eq!(checked, 1, "{tag}: one epoch verified");
+                    recovery::check_sharded_group_crashes(
+                        &m.shard_ledgers(),
+                        &m.timelines(),
+                        &hist,
+                        &[log],
+                        &[D0, D1],
+                        ReplicationConfig::new(3, policy).required(),
+                        on_loss,
+                        m.shard_map(),
+                    )
+                    .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                } else {
+                    let stall = *m
+                        .stall()
+                        .unwrap_or_else(|| panic!("{tag}: all+halt must stall"));
+                    assert!(stall.at >= kill_at, "{tag}: stalled before the kill");
+                    assert_eq!(stall.alive, 2, "{tag}: the winner left the group");
+                    assert_eq!(stall.required, 3, "{tag}");
+                    assert!(
+                        (hist.committed() as u64) < TXNS,
+                        "{tag}: the halted run must abandon transactions"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A prior backup kill shapes the electorate: with slot 0 already dead
+/// when the primary dies, the tie among the remaining converged peers
+/// breaks to the lowest *surviving* id.
+#[test]
+fn backup_loss_shapes_the_electorate() {
+    const TXNS: u64 = 8;
+    let span = baseline_span(AckPolicy::Quorum(2), 1, TXNS);
+    let plan = format!("kill:0@{},kill:p@{}", span / 8, span / 2);
+    let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Degrade), 1);
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, TXNS);
+    m.settle(t.now());
+    assert!(m.stall().is_none(), "degrade rides through both losses");
+    assert_eq!(hist.committed(), TXNS as usize);
+    assert_eq!(m.membership_epochs(), 1);
+    assert_eq!(
+        m.fabric().primary_slot(),
+        Some(1),
+        "slot 0 is dead, so the tie breaks to slot 1"
+    );
+    let tl = m.fabric().timeline();
+    assert_eq!(tl.epochs().len(), 1);
+    assert_eq!(tl.primary_at(u64::MAX), Some(1));
+}
+
+/// The deposed primary rejoins as a backup: it takes over the winner's
+/// vacated slot (seeded with the group state certified at the failover
+/// instant) and the PR 2 catch-up resync streams everything since; the
+/// serving primary then holds no backup slot at all.
+#[test]
+fn old_primary_rejoins_as_backup() {
+    const TXNS: u64 = 10;
+    let span = baseline_span(AckPolicy::Quorum(2), 1, TXNS);
+    let kill_at = span / 4;
+    let rejoin_at = span / 2;
+    let plan = format!("kill:p@{kill_at},rejoin:p@{rejoin_at}");
+    let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Halt), 1);
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, TXNS);
+    assert!(m.stall().is_none());
+    assert_eq!(hist.committed(), TXNS as usize);
+    // Settle beyond any pending resync completion so the rejoiner is in.
+    m.settle(t.now().max(rejoin_at + 10_000_000));
+    assert_eq!(m.membership_epochs(), 1, "a rejoin is not a leadership change");
+    assert_eq!(
+        m.fabric().primary_slot(),
+        None,
+        "the serving primary holds no backup slot after the rejoin"
+    );
+    assert_eq!(m.fabric().state(0), BackupState::Alive, "slot 0 re-entered");
+    let stats = m.fabric().backup_stats();
+    assert_eq!(stats[0].resyncs, 1, "the rejoiner resynced through PR 2");
+    // The slot's ledger froze while its machine served as primary; the
+    // rejoiner's catch-up closes the gap with its peers.
+    let ledgers = m.fabric().ledgers();
+    assert_eq!(ledgers[0].len(), ledgers[1].len(), "resync must close the gap");
+    let checked = recovery::check_leader_completeness(
+        &ledgers,
+        &hist,
+        &[log_base_for(0)],
+        &[D0, D1],
+        &m.fabric().timeline(),
+    )
+    .expect("leader completeness across the round trip");
+    assert_eq!(checked, 1);
+}
+
+/// SM-RC cannot host a demoted primary's catch-up resync (its
+/// replicated-but-undrained lines are volatile), so `rejoin:p` is a
+/// checked build error — while a kill-only primary plan builds fine.
+#[test]
+fn sm_rc_rejects_primary_rejoin() {
+    let err = Mirror::try_build_faulted(
+        Platform::default(),
+        StrategyKind::SmRc,
+        None,
+        ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+        faults("kill:p@1000,rejoin:p@2000", OnLoss::Halt),
+        true,
+    )
+    .expect_err("sm-rc must reject rejoin:p");
+    assert!(err.to_string().contains("sm-rc"), "unexpected error: {err}");
+    Mirror::try_build_faulted(
+        Platform::default(),
+        StrategyKind::SmRc,
+        None,
+        ReplicationConfig::new(3, AckPolicy::Quorum(2)),
+        faults("kill:p@1000", OnLoss::Degrade),
+        true,
+    )
+    .expect("a kill-only primary plan is fine under sm-rc");
+}
+
+/// The anchor: with no primary fault due, the membership machinery —
+/// the per-op polls and the admission clamp — is a guard-clause
+/// pass-through. An armed-but-never-due `kill:p` run is event-for-event
+/// identical to the fault-free path, and a backup-only plan keeps every
+/// membership counter at zero and the epoch log empty.
+#[test]
+fn no_primary_faults_is_a_guard_clause_pass_through() {
+    let plat = Platform::default();
+    let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+    let c = TransactConfig {
+        epochs: 4,
+        writes: 2,
+        txns: 40,
+        ..Default::default()
+    };
+    let mut plain =
+        Mirror::try_build(plat.clone(), StrategyKind::SmOb, None, repl, true).unwrap();
+    let base = run_transact_on(&mut plain, c);
+    // The kill instant is far past the run's end, so the machinery is
+    // armed on every op but never fires.
+    let mut armed = Mirror::try_build_faulted(
+        plat.clone(),
+        StrategyKind::SmOb,
+        None,
+        repl,
+        faults(&format!("kill:p@{}", 1u64 << 40), OnLoss::Halt),
+        true,
+    )
+    .unwrap();
+    let out = run_transact_on(&mut armed, c);
+    assert_eq!(out.makespan, base.makespan, "makespan diverged");
+    assert_eq!(out.txns, base.txns);
+    assert_eq!(out.per_backup_horizon, base.per_backup_horizon);
+    for b in 0..3 {
+        assert_eq!(
+            plain.backup(b).ledger.events(),
+            armed.backup(b).ledger.events(),
+            "backup {b} event stream diverged"
+        );
+    }
+    assert_eq!(out.membership_epochs, 0);
+    assert_eq!(out.failover_downtime_ns, 0);
+    assert_eq!(out.rereplicated_lines, 0);
+    assert_eq!(out.revoked_wqes, 0);
+    assert!(armed.fabric().timeline().epochs().is_empty());
+    assert_eq!(armed.fabric().primary_slot(), None);
+
+    // Backup-only plan: the membership-epoch dimension stays degenerate.
+    let span = baseline_span(AckPolicy::Quorum(2), 1, 8);
+    let plan = format!("kill:1@{},rejoin:1@{}", span / 4, span / 2);
+    let mut m = build(AckPolicy::Quorum(2), faults(&plan, OnLoss::Halt), 1);
+    let mut t = ThreadCtx::new(0);
+    let hist = drive_txns(&mut m, &mut t, 8);
+    assert!(m.stall().is_none());
+    assert_eq!(hist.committed(), 8);
+    m.settle(t.now());
+    assert_eq!(m.membership_epochs(), 0);
+    assert_eq!(m.failover_downtime_ns(), 0);
+    assert_eq!(m.revoked_wqes(), 0);
+    assert!(m.fabric().timeline().epochs().is_empty());
+}
