@@ -55,6 +55,9 @@ COUNTER_KEYS = (
     "failover_downtime_ns",
     "rereplicated_lines",
     "revoked_wqes",
+    "flush_verbs",
+    "compaction_lines",
+    "volatile_window_ns",
 )
 BENCHES_REQUIRING_COUNTERS = {
     "fig9_batching": ("doorbells", "posted_wqes", "busy_ns"),
@@ -78,6 +81,13 @@ BENCHES_REQUIRING_COUNTERS = {
         "revoked_wqes",
         "txns_committed",
         "busy_ns",
+    ),
+    "fig13_persist_domains": (
+        "flush_verbs",
+        "compaction_lines",
+        "volatile_window_ns",
+        "doorbells",
+        "txns_committed",
     ),
 }
 
@@ -149,6 +159,13 @@ def check_result(
             f"{where}: fences_issued ({fences}) exceed txns_committed ({txns}) — "
             "a commit blocks on at most one issued fence, so group fencing "
             "can only push fences/txn below 1"
+        )
+    flush_verbs = result.get("flush_verbs")
+    if isinstance(flush_verbs, int) and isinstance(doorbells, int) and flush_verbs > doorbells:
+        errors.append(
+            f"{where}: flush_verbs ({flush_verbs}) exceed doorbells ({doorbells}) — "
+            "a flush verb only counts when it drains staged volatile lines, "
+            "so every flush rides a rung doorbell"
         )
     return errors
 

@@ -1,0 +1,218 @@
+//! Figure-13 bench (ours): remote persistence domains — Transact swept
+//! over persist domain × SM strategy × backups, reporting makespan
+//! slowdown vs NO-SM plus the per-domain artifacts (flush verbs,
+//! compacted lines, volatile-window exposure). Emits
+//! `BENCH_fig13_persist_domains.json` with `flush_verbs` /
+//! `compaction_lines` / `volatile_window_ns` / `doorbells` /
+//! `txns_committed` counters per cell; CI's bench-smoke job validates
+//! the artifact (including `flush_verbs <= doorbells` on every cell)
+//! with `python/check_bench_json.py`.
+//!
+//! The bench *asserts* the tentpole's acceptance shape:
+//!   * the adr anchor emits none of the new-domain artifacts
+//!     (`flush_verbs == compaction_lines == 0`) — the guard-clause
+//!     pass-through never pays for the redesign;
+//!   * eADR is never slower than adr for the same cell (completion
+//!     implies persistence; rcommit drains collapse), and strictly
+//!     faster for SM-RC, the drain-heavy strategy;
+//!   * rpmem-flush issues flush verbs (bounded by doorbells) and
+//!     accrues a volatile window; eADR accrues none;
+//!   * at least one strategy pair RE-RANKS between two domains — the
+//!     domain is a first-class axis of the strategy choice, not a
+//!     constant offset (the paper's Figure-4 ranking is adr-specific).
+//!
+//! Run: `cargo bench --bench fig13_persist_domains`
+//! Scale with PMSM_BENCH_TXNS (default 400 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::MirrorBuilder;
+use pmsm::metrics::report::Table;
+use pmsm::net::PersistDomain;
+use pmsm::workloads::transact::run_transact_on;
+use pmsm::workloads::TransactConfig;
+
+const STRATEGIES: [StrategyKind; 3] =
+    [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd];
+const BACKUPS: [usize; 2] = [1, 2];
+
+fn cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    domain: PersistDomain,
+    backups: usize,
+    txns: u64,
+) -> RunOutcome {
+    let mut m = MirrorBuilder::new(plat.clone(), kind)
+        .replication(ReplicationConfig::new(backups, AckPolicy::All))
+        .persist_domain(domain)
+        .build()
+        .expect("valid domain cell");
+    let cfg = TransactConfig {
+        epochs: 4,
+        writes: 1,
+        txns,
+        threads: 1,
+        ..Default::default()
+    };
+    run_transact_on(&mut m, cfg)
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let plat = Platform::default();
+
+    // ---- Makespan table: strategy x domain at each backup count, plus
+    // the per-cell artifact assertions and the cross-domain re-ranking
+    // check.
+    let mut inversions: Vec<String> = Vec::new();
+    for &backups in &BACKUPS {
+        let mut t = Table::new(&[
+            "strategy",
+            "adr",
+            "eadr",
+            "rpmem-flush",
+            "log-structured",
+            "flush verbs (rpmem)",
+            "compacted (log)",
+        ]);
+        // makespans[s][d] for the re-ranking scan.
+        let mut makespans: Vec<Vec<u64>> = Vec::new();
+        for &kind in &STRATEGIES {
+            let outs: Vec<RunOutcome> = PersistDomain::ALL
+                .iter()
+                .map(|&d| cell(&plat, kind, d, backups, txns))
+                .collect();
+            for (d, out) in PersistDomain::ALL.iter().zip(&outs) {
+                assert_eq!(out.txns, txns, "{kind:?}/{d}: every txn must commit");
+                assert_eq!(out.persist_domain, d.name(), "{kind:?}: domain label");
+                assert!(
+                    out.flush_verbs <= out.doorbells,
+                    "{kind:?}/{d}: flush_verbs {} > doorbells {}",
+                    out.flush_verbs,
+                    out.doorbells
+                );
+                match d {
+                    PersistDomain::Adr => {
+                        assert_eq!(out.flush_verbs, 0, "{kind:?}: adr flushed");
+                        assert_eq!(out.compaction_lines, 0, "{kind:?}: adr compacted");
+                    }
+                    PersistDomain::Eadr => {
+                        assert_eq!(out.flush_verbs, 0, "{kind:?}: eadr flushed");
+                        assert_eq!(
+                            out.volatile_window_ns, 0,
+                            "{kind:?}: eadr left acked writes volatile"
+                        );
+                    }
+                    PersistDomain::RpmemFlush => {
+                        assert!(out.flush_verbs > 0, "{kind:?}: rpmem never flushed");
+                        assert!(
+                            out.volatile_window_ns > 0,
+                            "{kind:?}: rpmem shows no volatile window"
+                        );
+                    }
+                    PersistDomain::LogStructured => {
+                        assert!(
+                            out.compaction_lines > 0,
+                            "{kind:?}: log-structured never compacted a rewrite"
+                        );
+                    }
+                }
+            }
+            let adr = outs[0].makespan;
+            let eadr = outs[1].makespan;
+            assert!(
+                eadr <= adr,
+                "{kind:?} backups={backups}: eadr slower than adr ({eadr} > {adr})"
+            );
+            if kind == StrategyKind::SmRc {
+                assert!(
+                    eadr < adr,
+                    "{kind:?} backups={backups}: eadr must collapse the rcommit drain"
+                );
+            }
+            t.row(vec![
+                format!("{kind}"),
+                format!("{:.3} ms", outs[0].makespan as f64 / 1e6),
+                format!("{:.3} ms", outs[1].makespan as f64 / 1e6),
+                format!("{:.3} ms", outs[2].makespan as f64 / 1e6),
+                format!("{:.3} ms", outs[3].makespan as f64 / 1e6),
+                format!("{}", outs[2].flush_verbs),
+                format!("{}", outs[3].compaction_lines),
+            ]);
+            makespans.push(outs.iter().map(|o| o.makespan).collect());
+        }
+        // Re-ranking scan: a strategy pair whose order flips between two
+        // domains (the acceptance gate aggregates across backup counts).
+        for a in 0..STRATEGIES.len() {
+            for b in (a + 1)..STRATEGIES.len() {
+                for d1 in 0..PersistDomain::ALL.len() {
+                    for d2 in (d1 + 1)..PersistDomain::ALL.len() {
+                        let under_d1 = makespans[a][d1] < makespans[b][d1];
+                        let under_d2 = makespans[a][d2] < makespans[b][d2];
+                        if under_d1 != under_d2 {
+                            inversions.push(format!(
+                                "backups={backups}: {} vs {} re-rank between {} and {}",
+                                STRATEGIES[a],
+                                STRATEGIES[b],
+                                PersistDomain::ALL[d1],
+                                PersistDomain::ALL[d2]
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        println!(
+            "Figure 13 — Transact 4-1 persist domains, backups={backups} \
+             (makespan by strategy x domain)\n{}",
+            t.render()
+        );
+    }
+    assert!(
+        !inversions.is_empty(),
+        "no strategy pair re-ranked across domains — the domain axis is inert"
+    );
+    println!("strategy re-rankings across domains:");
+    for inv in &inversions {
+        println!("  {inv}");
+    }
+
+    // ---- Simulator throughput per domain cell (perf tracking): each
+    // timing cell carries its run's persistence counters so the JSON
+    // records `flush_verbs <= doorbells` directly.
+    let mut b = Bencher::new();
+    for &kind in &STRATEGIES {
+        for &d in &PersistDomain::ALL {
+            let mut counters = (0u64, 0u64, 0u64, 0u64, 0u64);
+            b.bench_elems(
+                &format!("transact/4-1/{kind}/{}/backups-2", d.name()),
+                txns as f64,
+                || {
+                    let out = cell(&plat, kind, d, 2, txns);
+                    counters = (
+                        out.flush_verbs,
+                        out.compaction_lines,
+                        out.volatile_window_ns,
+                        out.doorbells,
+                        out.txns,
+                    );
+                    out
+                },
+            );
+            b.annotate_last(&[
+                ("flush_verbs", counters.0),
+                ("compaction_lines", counters.1),
+                ("volatile_window_ns", counters.2),
+                ("doorbells", counters.3),
+                ("txns_committed", counters.4),
+            ]);
+        }
+    }
+    pmsm::bench::emit_json(&b, "fig13_persist_domains");
+}

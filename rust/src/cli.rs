@@ -13,11 +13,12 @@
 //!   * `selftest` — Table 1 + quick invariant checks.
 
 use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, StrategyKind};
-use crate::coordinator::{ConcurrencyConfig, Mirror, ShardingConfig};
+use crate::coordinator::{ConcurrencyConfig, MirrorBuilder, ShardingConfig};
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
 use crate::metrics::{GroupReport, ShardedReport};
 use crate::net::{
     BatchingConfig, CoalesceMode, CoalescingConfig, FaultsConfig, FlushPolicy, OnLoss,
+    PersistDomain,
 };
 use crate::recovery;
 use crate::replication::Predictor;
@@ -114,6 +115,7 @@ pub fn help_text() -> &'static str {
                  [--flush-policy eager|cap:K|fence --batch-cap K]\n\
                  [--coalesce none|combine|sg|full]\n\
                  [--commit-pipelines N --group-fence-ns N]\n\
+                 [--persist-domain adr|eadr|rpmem-flush|log-structured]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
@@ -122,6 +124,7 @@ pub fn help_text() -> &'static str {
                  [--shards S --shard-map M --flush-policy P --batch-cap K]\n\
                  [--coalesce M --commit-pipelines N --group-fence-ns N]\n\
                  [--election-handoff-ns N --election-line-ns N]\n\
+                 [--persist-domain D]\n\
                  (cross-replica ledger check; fault-aware when a plan is\n\
                  set; per-shard checks + cross-shard merge when sharded)\n\
        config    print platform model parameters (Table 2)\n\
@@ -163,6 +166,21 @@ pub fn help_text() -> &'static str {
      cost and issue slots but the responder still drains and persists,\n\
      and the ack policy applies unchanged, so per-txn durability acks\n\
      are never weakened. CLI flags override [concurrency] config.\n\
+     \n\
+     PERSIST DOMAINS: --persist-domain picks what a completed RDMA\n\
+     write means for the backup's persistence (overrides the [remote]\n\
+     config table). adr = the paper's platform, event-for-event the\n\
+     pre-domain model: writes persist once the memory controller\n\
+     admits them, so SM-RC still drains via rcommit. eadr =\n\
+     battery-backed caches; completion implies persistent, rcommit\n\
+     drains collapse and durability verdicts widen. rpmem-flush =\n\
+     completions leave lines volatile until an explicit flush verb\n\
+     rides the WQE flush choke point (verdicts narrow; flush_verbs <=\n\
+     doorbells by construction). log-structured = the backup appends\n\
+     sequentially and compacts same-line rewrites in the background\n\
+     (compaction_lines). Per-domain counters (flush verbs, compacted\n\
+     lines, volatile-window ns) surface in run stats, group reports\n\
+     and bench JSON.\n\
      \n\
      FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
      backup B at virtual time T (ns). Killed backups leave fan-out and\n\
@@ -215,9 +233,10 @@ pub struct RunSetup {
 /// `--ack-policy` / `--fault-plan` / `--on-loss` / `--handoff-ns` /
 /// `--resync-line-ns` / `--election-handoff-ns` / `--election-line-ns`
 /// / `--shards` / `--shard-map` / `--flush-policy` / `--batch-cap` /
-/// `--coalesce` / `--commit-pipelines` / `--group-fence-ns` override
-/// (the election flags land in the `[election]` table's slots inside
-/// the faults bundle).
+/// `--coalesce` / `--commit-pipelines` / `--group-fence-ns` /
+/// `--persist-domain` override (the election flags land in the
+/// `[election]` table's slots inside the faults bundle; the persist
+/// domain lands in the platform's `[remote]` slot).
 fn setup_from(args: &Args) -> Result<RunSetup> {
     let mut s = match args.get("config") {
         Some(path) => {
@@ -286,6 +305,11 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
     }
     if let Some(v) = args.get("coalesce") {
         s.coalescing.mode = v.parse::<CoalesceMode>().context("--coalesce")?;
+    }
+    if let Some(v) = args.get("persist-domain") {
+        s.plat.persist_domain = v
+            .parse::<PersistDomain>()
+            .map_err(|e| anyhow::anyhow!("--persist-domain {v}: {e}"))?;
     }
     if let Some(v) = args.get("commit-pipelines") {
         s.concurrency.commit_pipelines = v
@@ -386,18 +410,20 @@ fn cmd_run(args: &Args) -> Result<()> {
             concurrency.commit_pipelines, concurrency.group_fence_ns
         );
     }
-    let mut mirror = Mirror::try_build_sharded(
-        plat.clone(),
-        strategy,
-        predictor,
-        repl,
-        faults,
-        sharding,
-        false,
-    )?;
-    mirror.set_batching(batching.policy);
-    mirror.set_coalescing(coalescing.mode);
-    mirror.set_concurrency(concurrency);
+    if plat.persist_domain != PersistDomain::Adr {
+        println!("persist domain: {} (adr is the paper's anchor)", plat.persist_domain);
+    }
+    let mut builder = MirrorBuilder::new(plat, strategy)
+        .replication(repl)
+        .faults(faults)
+        .sharding(sharding)
+        .batching(batching.policy)
+        .coalescing(coalescing.mode)
+        .concurrency(concurrency);
+    if let Some(p) = predictor {
+        builder = builder.predictor(p);
+    }
+    let mut mirror = builder.build()?;
 
     let outcome = if workload == "transact" {
         let cfg = TransactConfig {
@@ -456,6 +482,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         outcome.mean_span(),
         outcome.combined_writes
     );
+    if outcome.flush_verbs > 0
+        || outcome.compaction_lines > 0
+        || outcome.volatile_window_ns > 0
+    {
+        println!(
+            "  persistence   : domain {}, {} flush verb(s), {} compacted \
+             line(s), {} ns-line volatile window",
+            outcome.persist_domain,
+            outcome.flush_verbs,
+            outcome.compaction_lines,
+            outcome.volatile_window_ns
+        );
+    }
     if concurrency.enabled() {
         println!(
             "  fences        : {} issued + {} piggybacked ({:.2}/txn)",
@@ -711,11 +750,16 @@ fn cmd_recover(args: &Args) -> Result<()> {
     let injecting = !faults.plan.is_empty();
     let primary_faults = faults.plan.has_primary_faults();
     let on_loss = faults.on_loss;
-    let mut m =
-        Mirror::try_build_sharded(plat, strategy, None, repl, faults, sharding, true)?;
-    m.set_batching(batching.policy);
-    m.set_coalescing(coalescing.mode);
-    m.set_concurrency(concurrency);
+    let domain = plat.persist_domain;
+    let mut m = MirrorBuilder::new(plat, strategy)
+        .replication(repl)
+        .faults(faults)
+        .sharding(sharding)
+        .batching(batching.policy)
+        .coalescing(coalescing.mode)
+        .concurrency(concurrency)
+        .ledger(true)
+        .build()?;
     let mut t = ThreadCtx::new(0);
     let log = crate::pstore::log_base_for(0);
     let d0 = 0x20_0000u64;
@@ -754,37 +798,24 @@ fn cmd_recover(args: &Args) -> Result<()> {
     for ledgers in &shard_ledgers {
         recovery::check_group_epoch_ordering(ledgers)?;
     }
+    // One builder covers all three shapes (plain / fault-aware /
+    // sharded); the persist domain annotates any verdict failure.
+    let timelines = m.timelines();
+    let timeline = m.fabric().timeline();
+    let log_bases = [log];
+    let data_addrs = [d0, d1];
+    let check = recovery::CrashCheck::new(&hist, &log_bases, &data_addrs)
+        .required(repl.required())
+        .on_loss(on_loss)
+        .persist_domain(domain);
     let checked = if sharding.shards > 1 {
         // Per-shard group checks merged into the cross-shard verdict
         // (fault-aware by construction: the realized timelines feed in).
-        recovery::check_sharded_group_crashes(
-            &shard_ledgers,
-            &m.timelines(),
-            &hist,
-            &[log],
-            &[d0, d1],
-            repl.required(),
-            on_loss,
-            m.shard_map(),
-        )?
+        check.shards(&shard_ledgers, &timelines, m.shard_map()).sweep()?
     } else if injecting {
-        recovery::check_faulted_group_crashes(
-            &shard_ledgers[0],
-            &hist,
-            &[log],
-            &[d0, d1],
-            repl.required(),
-            on_loss,
-            &m.fabric().timeline(),
-        )?
+        check.ledgers(&shard_ledgers[0]).faults(&timeline).sweep()?
     } else {
-        recovery::check_group_crashes(
-            &shard_ledgers[0],
-            &hist,
-            &[log],
-            &[d0, d1],
-            repl.required(),
-        )?
+        check.ledgers(&shard_ledgers[0]).sweep()?
     };
     if primary_faults {
         // Leader completeness: each elected primary's certified state —
@@ -1291,6 +1322,79 @@ mod tests {
             "recover", "--strategy", "sm-ob", "--txns", "8", "--backups", "3",
             "--ack-policy", "majority", "--fault-plan",
             "kill:p@20000,rejoin:p@60000",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn cli_persist_domain_flag_roundtrip() {
+        let a = Args::parse(&argv(&["run", "--persist-domain", "eadr"]));
+        assert_eq!(setup_from(&a).unwrap().plat.persist_domain, PersistDomain::Eadr);
+        // Default stays the paper's anchor.
+        assert_eq!(
+            setup_from(&Args::parse(&argv(&["run"]))).unwrap().plat.persist_domain,
+            PersistDomain::Adr
+        );
+        // CLI overrides the [remote] config table.
+        let dir = std::env::temp_dir().join("pmsm_cli_persist_domain_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(&path, "[remote]\npersist_domain = \"rpmem-flush\"\n").unwrap();
+        let path = path.to_str().unwrap();
+        let a = Args::parse(&argv(&["run", "--config", path]));
+        assert_eq!(
+            setup_from(&a).unwrap().plat.persist_domain,
+            PersistDomain::RpmemFlush
+        );
+        let a = Args::parse(&argv(&[
+            "run", "--config", path, "--persist-domain", "log-structured",
+        ]));
+        assert_eq!(
+            setup_from(&a).unwrap().plat.persist_domain,
+            PersistDomain::LogStructured,
+            "--persist-domain overrides the TOML"
+        );
+        std::fs::remove_file(path).ok();
+        // Unknown domain fails naming the flag.
+        let err = setup_from(&Args::parse(&argv(&["run", "--persist-domain", "nvdimm"])))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--persist-domain"), "{err:#}");
+    }
+
+    #[test]
+    fn run_command_persist_domain_smoke() {
+        // Every non-anchor domain completes under the drain-heavy
+        // strategy (SM-RC exercises rcommit collapse and flush verbs).
+        for d in ["eadr", "rpmem-flush", "log-structured"] {
+            main_with_args(&argv(&[
+                "run", "--strategy", "sm-rc", "--txns", "20", "--backups", "2",
+                "--persist-domain", d,
+            ]))
+            .unwrap_or_else(|e| panic!("{d}: {e}"));
+        }
+    }
+
+    #[test]
+    fn recover_command_persist_domain_check() {
+        // The crash sweep holds under every domain: fences force the
+        // domain's persistence verb, so acked == durable throughout.
+        for d in ["adr", "eadr", "rpmem-flush", "log-structured"] {
+            main_with_args(&argv(&[
+                "recover", "--strategy", "sm-ob", "--txns", "4", "--backups", "2",
+                "--persist-domain", d,
+            ]))
+            .unwrap_or_else(|e| panic!("{d}: {e}"));
+        }
+        // Sharded and fault-injected shapes hold off-anchor too.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-dd", "--txns", "3", "--shards", "2",
+            "--persist-domain", "eadr",
+        ]))
+        .unwrap();
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-ob", "--txns", "4", "--backups", "3",
+            "--ack-policy", "quorum:2", "--fault-plan", "kill:2@20000",
+            "--persist-domain", "rpmem-flush",
         ]))
         .unwrap();
     }

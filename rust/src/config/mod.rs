@@ -10,6 +10,7 @@ pub mod platform;
 pub mod toml;
 
 pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+pub use crate::net::PersistDomain;
 
 use crate::coordinator::pipeline::ConcurrencyConfig;
 use crate::coordinator::shard::ShardingConfig;
@@ -620,6 +621,21 @@ group_fence_ns = 2600
         assert!(Experiment::from_str("[batching]\nbatch_cap = -4").is_err());
         assert!(Experiment::from_str("[batching]\nflush_policy = \"cap:0\"").is_err());
         assert!(Experiment::from_str("[batching]\nflush_policy = \"lazy\"").is_err());
+    }
+
+    #[test]
+    fn remote_section_roundtrip() {
+        // The `[remote]` table flows through Platform::from_doc into the
+        // experiment's platform.
+        let exp =
+            Experiment::from_str("[remote]\npersist_domain = \"log-structured\"").unwrap();
+        assert_eq!(exp.platform.persist_domain, PersistDomain::LogStructured);
+        // Default: the ADR anchor.
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.platform.persist_domain, PersistDomain::Adr);
+        // Malformed values are experiment-load errors.
+        assert!(Experiment::from_str("[remote]\npersist_domain = \"dax\"").is_err());
+        assert!(Experiment::from_str("[remote]\npersist_domain = 3").is_err());
     }
 
     #[test]

@@ -260,6 +260,13 @@ pub struct Platform {
     // ---- strategy model constants
     /// Remote cross-QP ordering barrier bubble charged per rofence (ns).
     pub ob_barrier: Ns,
+
+    // ---- remote persistence
+    /// Persistence discipline of the backup PM (`[remote] persist_domain`
+    /// TOML key / `--persist-domain` CLI) — see
+    /// [`crate::net::PersistDomain`]. Default `adr` is the paper's model
+    /// and the bit-exact pre-domain anchor.
+    pub persist_domain: crate::net::PersistDomain,
 }
 
 impl Default for Platform {
@@ -289,6 +296,7 @@ impl Default for Platform {
             flush: 25,
             sfence: 20,
             ob_barrier: 75,
+            persist_domain: crate::net::PersistDomain::Adr,
         }
     }
 }
@@ -384,6 +392,15 @@ impl Platform {
         if let Some(v) = doc.get("platform.slice_masks") {
             p.slice_masks = v.as_u64_array()?;
         }
+        // The `[remote]` table holds the backup-side persistence
+        // discipline (its cost constants live under `[platform]` with
+        // the rest of the memory subsystem).
+        if let Some(v) = doc.get("remote.persist_domain") {
+            p.persist_domain = v
+                .as_str()?
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!("remote.persist_domain: {e}"))?;
+        }
         p.validate()?;
         Ok(p)
     }
@@ -421,7 +438,8 @@ impl Platform {
              wire_line={}ns\n\
                pcie/ddio : pcie_rt={}ns nt_serial={}ns ddio_ways={}/{}\n\
                llc       : {} slices x {} sets x {} ways (64B lines)\n\
-               memctrl   : queue={} banks={} llc->mc={}ns mc->pm={}ns\n\
+               memctrl   : queue={} banks={} llc->mc={}ns mc->pm={}ns \
+             persist_domain={}\n\
                cpu       : store={}ns flush={}ns sfence={}ns \
              doorbell={}ns wqe_stage={}ns poll={}ns",
             self.rtt,
@@ -440,6 +458,7 @@ impl Platform {
             self.mc_banks,
             self.llc_mc,
             self.mc_pm,
+            self.persist_domain,
             self.store,
             self.flush,
             self.sfence,
@@ -563,6 +582,32 @@ mod tests {
         let p = Platform::from_doc(&doc).unwrap();
         assert_eq!((p.doorbell_ns, p.wqe_stage_ns), (25, 5));
         assert_eq!(p.post_cost(), 30);
+    }
+
+    #[test]
+    fn remote_persist_domain_key() {
+        use crate::config::toml;
+        use crate::net::PersistDomain;
+        // Absent: the ADR anchor.
+        assert_eq!(Platform::default().persist_domain, PersistDomain::Adr);
+        let doc = toml::parse("[platform]\nrtt = 2600").unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!(p.persist_domain, PersistDomain::Adr);
+        // The `[remote]` table selects the discipline.
+        let doc = toml::parse("[remote]\npersist_domain = \"eadr\"").unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!(p.persist_domain, PersistDomain::Eadr);
+        let doc = toml::parse("[remote]\npersist_domain = \"rpmem-flush\"").unwrap();
+        let p = Platform::from_doc(&doc).unwrap();
+        assert_eq!(p.persist_domain, PersistDomain::RpmemFlush);
+        // Malformed values are rejected with the key in the error.
+        let doc = toml::parse("[remote]\npersist_domain = \"bogus\"").unwrap();
+        let err = Platform::from_doc(&doc).unwrap_err().to_string();
+        assert!(err.contains("persist_domain"), "{err}");
+        // Table-2 output records the discipline.
+        let mut p = Platform::default();
+        p.persist_domain = PersistDomain::LogStructured;
+        assert!(p.table2().contains("persist_domain=log-structured"));
     }
 
     #[test]

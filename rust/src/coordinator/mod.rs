@@ -41,8 +41,9 @@ use crate::config::{Platform, ReplicationConfig, StrategyKind};
 use crate::mem::DurabilityLog;
 use crate::metrics::LogHistogram;
 use crate::net::{
-    elect, Candidate, CoalesceMode, Fabric, FaultKind, FaultTimeline, FaultsConfig,
-    FlushPolicy, RemoteEngine, Stall, WriteMeta,
+    elect, BatchingConfig, Candidate, CoalesceMode, CoalescingConfig, Fabric, FaultKind,
+    FaultTimeline, FaultsConfig, FlushPolicy, PersistDomain, RemoteEngine, Stall,
+    WriteMeta,
 };
 use crate::replication::{self, Predictor, Strategy, TxnShape};
 use crate::sim::{RateLimiter, ThreadClock};
@@ -524,6 +525,39 @@ impl Mirror {
         self.lanes.iter().map(|l| l.fabric.combined_writes).sum()
     }
 
+    /// The remote persistence domain every backup engine runs under
+    /// (uniform across shards — it comes from one [`Platform`]).
+    pub fn persist_domain(&self) -> PersistDomain {
+        self.plat.persist_domain
+    }
+
+    /// Explicit flush verbs emitted by the fence path across all shards
+    /// and backups (0 outside [`PersistDomain::RpmemFlush`]; bounded by
+    /// [`Mirror::doorbells`] — a counted flush always trails staged
+    /// data).
+    pub fn flush_verbs(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.flush_verbs_total()).sum()
+    }
+
+    /// Lines rewritten into the log and later compacted, across all
+    /// shards and backups (0 outside [`PersistDomain::LogStructured`]).
+    pub fn compaction_lines(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.fabric.compaction_lines_total())
+            .sum()
+    }
+
+    /// Accumulated completion-to-persistence exposure across all shards
+    /// and backups (ns·line): how long acknowledged writes sat volatile
+    /// before their persist instant.
+    pub fn volatile_window_ns(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.fabric.volatile_window_ns_total())
+            .sum()
+    }
+
     /// Completed membership-epoch changes. All shards fail over together,
     /// so this is the max (= every lane's count), not a sum.
     pub fn membership_epochs(&self) -> u64 {
@@ -845,6 +879,133 @@ impl Mirror {
     /// The primary PM image (golden state for recovery comparison).
     pub fn image(&self) -> &FastMap<Addr, u64> {
         &self.image
+    }
+}
+
+/// One-validated-step [`Mirror`] construction: collect the full run
+/// shape — strategy, replica group, fault plan, sharding, staged-WQE
+/// knobs (batching / coalescing / concurrency) and the remote
+/// persistence domain — then validate it *as a whole* in
+/// [`MirrorBuilder::build`]. Cross-knob rules the old
+/// `set_batching`/`set_coalescing`/`set_concurrency` setter chain could
+/// only catch at apply time (or never) are rejected up front: eager
+/// posting + coalescing is a build error here, not a runtime surprise.
+/// `cli::RunSetup` consumes one of these; the individual setters remain
+/// on [`Mirror`] for incremental reconfiguration (pinned to stay
+/// equivalent by `serial_shape_bypasses_the_piped_path` and the
+/// builder tests below).
+///
+/// Every knob defaults to the regression anchor: single backup, no
+/// faults, one shard, eager posting, no coalescing, serial commits,
+/// ADR persistence, no ledger.
+pub struct MirrorBuilder {
+    plat: Platform,
+    kind: StrategyKind,
+    predictor: Option<Predictor>,
+    repl: ReplicationConfig,
+    faults: FaultsConfig,
+    sharding: ShardingConfig,
+    batching: FlushPolicy,
+    coalescing: CoalesceMode,
+    concurrency: ConcurrencyConfig,
+    ledger: bool,
+}
+
+impl MirrorBuilder {
+    pub fn new(plat: Platform, kind: StrategyKind) -> Self {
+        MirrorBuilder {
+            plat,
+            kind,
+            predictor: None,
+            repl: ReplicationConfig::default(),
+            faults: FaultsConfig::default(),
+            sharding: ShardingConfig::default(),
+            batching: FlushPolicy::Eager,
+            coalescing: CoalesceMode::None,
+            concurrency: ConcurrencyConfig::default(),
+            ledger: false,
+        }
+    }
+
+    /// Wire the adaptive strategy's predictor (required for `SmAd`).
+    pub fn predictor(mut self, p: Predictor) -> Self {
+        self.predictor = Some(p);
+        self
+    }
+
+    /// Replica-group shape every shard drives.
+    pub fn replication(mut self, repl: ReplicationConfig) -> Self {
+        self.repl = repl;
+        self
+    }
+
+    /// Deterministic failure dynamics (backup kills/rejoins, primary
+    /// failover).
+    pub fn faults(mut self, faults: FaultsConfig) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    /// Address-space sharding shape.
+    pub fn sharding(mut self, sharding: ShardingConfig) -> Self {
+        self.sharding = sharding;
+        self
+    }
+
+    /// Staged WQE pipeline flush policy (`cap:1` normalizes to eager).
+    pub fn batching(mut self, policy: FlushPolicy) -> Self {
+        self.batching = policy;
+        self
+    }
+
+    /// Flush-time coalescing mode; requires a staged flush policy —
+    /// [`MirrorBuilder::build`] rejects coalescing under eager posting.
+    pub fn coalescing(mut self, mode: CoalesceMode) -> Self {
+        self.coalescing = mode;
+        self
+    }
+
+    /// Concurrent-primary shape (commit pipelines + group-fence window).
+    pub fn concurrency(mut self, conc: ConcurrencyConfig) -> Self {
+        self.concurrency = conc;
+        self
+    }
+
+    /// Remote persistence domain the backup engines run under
+    /// (overrides the platform's `[remote] persist_domain`).
+    pub fn persist_domain(mut self, d: PersistDomain) -> Self {
+        self.plat.persist_domain = d;
+        self
+    }
+
+    /// Record per-backup durability ledgers (needed for recovery
+    /// checks; costs memory proportional to the write count).
+    pub fn ledger(mut self, on: bool) -> Self {
+        self.ledger = on;
+        self
+    }
+
+    /// Validate the whole shape, then construct. Fails on any invalid
+    /// component config, on cross-knob conflicts (eager + coalescing,
+    /// SM-RC + rejoin, `SmAd` without a predictor), never panics on
+    /// config input.
+    pub fn build(self) -> Result<Mirror> {
+        BatchingConfig::new(self.batching).validate()?;
+        CoalescingConfig::new(self.coalescing).validate_with(self.batching)?;
+        self.concurrency.validate()?;
+        let mut m = Mirror::try_build_sharded(
+            self.plat,
+            self.kind,
+            self.predictor,
+            self.repl,
+            self.faults,
+            self.sharding,
+            self.ledger,
+        )?;
+        m.set_batching(self.batching);
+        m.set_coalescing(self.coalescing);
+        m.set_concurrency(self.concurrency);
+        Ok(m)
     }
 }
 
@@ -1352,6 +1513,111 @@ mod tests {
         let stall = m.stall().expect("both shards lost backup node 0");
         assert_eq!(stall.required, 2);
         assert_eq!(t.txns_done, 0, "stalled commit not counted");
+    }
+
+    // ---- builder ---------------------------------------------------------
+
+    /// The builder's default shape is the setter path's default shape:
+    /// event-for-event identity with `Mirror::new` + no setter calls.
+    #[test]
+    fn builder_defaults_match_the_setter_path() {
+        let mut base = Mirror::new(Platform::default(), StrategyKind::SmOb, true);
+        let mut built = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .ledger(true)
+            .build()
+            .unwrap();
+        let mut tb = ThreadCtx::new(0);
+        let mut tg = ThreadCtx::new(0);
+        for _ in 0..5 {
+            run_transact_txn(&mut base, &mut tb, 4, 2);
+            run_transact_txn(&mut built, &mut tg, 4, 2);
+        }
+        assert_eq!(tb.now(), tg.now());
+        assert_eq!(tb.clock.busy_ns, tg.clock.busy_ns);
+        assert_eq!(
+            base.backup(0).ledger.events(),
+            built.backup(0).ledger.events()
+        );
+        assert_eq!(built.persist_domain(), PersistDomain::Adr);
+    }
+
+    /// A fully loaded builder applies every knob exactly as the setter
+    /// chain would.
+    #[test]
+    fn builder_applies_every_knob() {
+        let mut setters = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::default(),
+            ShardingConfig::new(2, ShardMapSpec::Modulo),
+            true,
+        )
+        .unwrap();
+        setters.set_batching(FlushPolicy::Fence);
+        setters.set_coalescing(CoalesceMode::Full);
+        setters.set_concurrency(ConcurrencyConfig::new(2, 0));
+        let mut built = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .replication(ReplicationConfig::new(2, AckPolicy::All))
+            .sharding(ShardingConfig::new(2, ShardMapSpec::Modulo))
+            .batching(FlushPolicy::Fence)
+            .coalescing(CoalesceMode::Full)
+            .concurrency(ConcurrencyConfig::new(2, 0))
+            .ledger(true)
+            .build()
+            .unwrap();
+        assert_eq!(built.batching(), setters.batching());
+        assert_eq!(built.coalescing(), setters.coalescing());
+        assert_eq!(built.concurrency(), setters.concurrency());
+        assert_eq!(built.shard_count(), 2);
+        let mut ts = ThreadCtx::new(0);
+        let mut tg = ThreadCtx::new(0);
+        for _ in 0..4 {
+            run_transact_txn(&mut setters, &mut ts, 2, 4);
+            run_transact_txn(&mut built, &mut tg, 2, 4);
+        }
+        assert_eq!(ts.now(), tg.now());
+        assert_eq!(setters.doorbells(), built.doorbells());
+        assert_eq!(setters.combined_writes(), built.combined_writes());
+    }
+
+    /// The cross-knob rule the setter chain never enforced: coalescing
+    /// needs a staged flush policy, and the builder rejects the eager
+    /// pairing before any fabric exists.
+    #[test]
+    fn builder_rejects_eager_plus_coalescing() {
+        let err = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .coalescing(CoalesceMode::Full)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("eager"), "{err}");
+        // cap:1 is the eager model and must be rejected identically.
+        let err = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .batching(FlushPolicy::Cap(1))
+            .coalescing(CoalesceMode::Combine)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("eager"), "{err}");
+    }
+
+    /// `.persist_domain` overrides the platform key, and the domain +
+    /// per-domain counters surface through the mirror aggregators.
+    #[test]
+    fn builder_persist_domain_reaches_every_backup() {
+        let mut m = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .replication(ReplicationConfig::new(2, AckPolicy::All))
+            .persist_domain(PersistDomain::RpmemFlush)
+            .build()
+            .unwrap();
+        assert_eq!(m.persist_domain(), PersistDomain::RpmemFlush);
+        assert_eq!(m.fabric().persist_domain(), PersistDomain::RpmemFlush);
+        let mut t = ThreadCtx::new(0);
+        run_transact_txn(&mut m, &mut t, 2, 2);
+        assert!(m.flush_verbs() > 0, "rpmem fences must emit flush verbs");
+        assert!(m.flush_verbs() <= m.doorbells());
+        assert!(m.volatile_window_ns() > 0);
+        assert_eq!(m.compaction_lines(), 0, "no log, no compaction");
     }
 
     // ---- primary failover ------------------------------------------------

@@ -113,6 +113,23 @@ pub struct RunOutcome {
     /// Staged WQEs fenced by permission revocation at failovers (they
     /// retry through the new primary), summed over shards.
     pub revoked_wqes: u64,
+    /// The remote persistence domain the run's backups operated under
+    /// (name string, e.g. `"adr"` — see
+    /// [`crate::net::PersistDomain`]).
+    pub persist_domain: &'static str,
+    /// Explicit flush verbs emitted by the fence path, steady state
+    /// (0 outside the `rpmem-flush` domain; `flush_verbs <=
+    /// doorbells`).
+    pub flush_verbs: u64,
+    /// Log-structured rewrites compacted in the background, steady
+    /// state (0 outside the `log-structured` domain).
+    pub compaction_lines: u64,
+    /// Accumulated completion-to-persistence exposure (ns·line),
+    /// steady state: how long replicated lines sat volatile before
+    /// their persist instant (SM-RC's DDIO-to-drain gap under ADR,
+    /// the write-to-flush gap under `rpmem-flush`; 0 under eADR
+    /// where completion implies persistence).
+    pub volatile_window_ns: u64,
     /// Lines-per-WQE distribution of the whole run (including any
     /// warmup/load phase — unlike the counters above, a histogram
     /// cannot be watermarked; Transact-style workloads have no load
@@ -256,6 +273,9 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     let downtime_zero = mirror.failover_downtime_ns();
     let rerepl_zero = mirror.rereplicated_lines();
     let revoked_zero = mirror.revoked_wqes();
+    let flush_verbs_zero = mirror.flush_verbs();
+    let compaction_zero = mirror.compaction_lines();
+    let volatile_zero = mirror.volatile_window_ns();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
     // the run at the kill point: remaining transactions are abandoned,
@@ -303,6 +323,10 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     out.failover_downtime_ns = mirror.failover_downtime_ns() - downtime_zero;
     out.rereplicated_lines = mirror.rereplicated_lines() - rerepl_zero;
     out.revoked_wqes = mirror.revoked_wqes() - revoked_zero;
+    out.persist_domain = mirror.persist_domain().name();
+    out.flush_verbs = mirror.flush_verbs() - flush_verbs_zero;
+    out.compaction_lines = mirror.compaction_lines() - compaction_zero;
+    out.volatile_window_ns = mirror.volatile_window_ns() - volatile_zero;
     out.span_hist = mirror.span_hist();
     out.per_backup_horizon = mirror.persist_horizons();
     out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);
@@ -573,6 +597,31 @@ mod tests {
         assert!(sg.doorbells <= sg.wire_wqes);
         assert!(sg.span_hist.max() >= 8, "8-line epoch spans expected");
         assert_eq!(sg.txns, none.txns);
+    }
+
+    #[test]
+    fn outcome_reports_persist_domain_counters() {
+        use crate::coordinator::MirrorBuilder;
+        use crate::net::PersistDomain;
+        let mut m = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .persist_domain(PersistDomain::RpmemFlush)
+            .build()
+            .unwrap();
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(10, 2, 2, 0x10000)];
+        let out = run_threads(&mut m, &mut srcs);
+        assert_eq!(out.persist_domain, "rpmem-flush");
+        assert!(out.flush_verbs > 0, "rpmem commits must emit flush verbs");
+        assert!(out.flush_verbs <= out.doorbells);
+        assert!(out.volatile_window_ns > 0);
+        assert_eq!(out.compaction_lines, 0);
+
+        // The default domain reports quiet counters.
+        let mut m = Mirror::new(Platform::default(), StrategyKind::SmOb, false);
+        let mut srcs: Vec<Box<dyn TxnSource>> = vec![transact_source(5, 2, 2, 0x10000)];
+        let out = run_threads(&mut m, &mut srcs);
+        assert_eq!(out.persist_domain, "adr");
+        assert_eq!(out.flush_verbs, 0, "adr has no explicit flush verb");
+        assert_eq!(out.compaction_lines, 0);
     }
 
     #[test]

@@ -30,6 +30,9 @@ pub struct GroupReport {
     /// Rendered flush-time coalescing mode (`none` / `combine` / `sg` /
     /// `full`).
     pub coalesce: String,
+    /// Rendered remote persistence domain (`adr` / `eadr` /
+    /// `rpmem-flush` / `log-structured`).
+    pub persist_domain: String,
     pub stats: Vec<BackupStats>,
     /// Cross-thread group-fence piggyback window (ns; 0 = disabled).
     pub group_fence_ns: Ns,
@@ -70,6 +73,7 @@ impl GroupReport {
             on_loss: fabric.on_loss().to_string(),
             flush_policy: fabric.batching().to_string(),
             coalesce: fabric.coalescing().to_string(),
+            persist_domain: fabric.persist_domain().to_string(),
             stats: fabric.backup_stats(),
             group_fence_ns: fabric.group_fence(),
             fences_issued: fabric.fences_issued,
@@ -96,6 +100,24 @@ impl GroupReport {
     /// once).
     pub fn wire_wqes(&self) -> u64 {
         self.stats.iter().map(|s| s.wire_wqes).sum()
+    }
+
+    /// Explicit flush verbs emitted across the group (0 outside the
+    /// `rpmem-flush` domain; bounded by [`GroupReport::doorbells`]).
+    pub fn flush_verbs(&self) -> u64 {
+        self.stats.iter().map(|s| s.flush_verbs).sum()
+    }
+
+    /// Log-structured compaction volume across the group (lines; 0
+    /// outside the `log-structured` domain).
+    pub fn compaction_lines(&self) -> u64 {
+        self.stats.iter().map(|s| s.compaction_lines).sum()
+    }
+
+    /// Accumulated replicated-but-volatile exposure across the group
+    /// (ns·line).
+    pub fn volatile_window_ns(&self) -> u64 {
+        self.stats.iter().map(|s| s.volatile_window_ns).sum()
     }
 
     /// Mean data WQEs per doorbell (see [`crate::net::wqe::mean_batch`]).
@@ -194,7 +216,7 @@ impl GroupReport {
         }
         let mut out = format!(
             "Replica group — {} backups, ack policy {} (required {}, \
-             on_loss {}, flush {}, coalesce {})\n{}\
+             on_loss {}, flush {}, coalesce {}, domain {})\n{}\
              group: {} blocking fences, {:.0} ns mean block, \
              {} issued + {} piggybacked ({:.2} ratio), \
              horizon lag {} ns, fence lag {} ns, dead {} ns, resync {} B, \
@@ -207,6 +229,7 @@ impl GroupReport {
             self.on_loss,
             self.flush_policy,
             self.coalesce,
+            self.persist_domain,
             t.render(),
             self.blocking_waits,
             self.mean_block_ns(),
@@ -236,6 +259,18 @@ impl GroupReport {
                 self.revoked_wqes,
             ));
         }
+        if self.flush_verbs() > 0
+            || self.compaction_lines() > 0
+            || self.volatile_window_ns() > 0
+        {
+            out.push_str(&format!(
+                "group: persistence — {} flush verb(s), {} compacted \
+                 line(s), {} ns·line volatile window\n",
+                self.flush_verbs(),
+                self.compaction_lines(),
+                self.volatile_window_ns(),
+            ));
+        }
         if let Some(stall) = &self.stalled {
             out.push_str(&format!("group: STALLED — {stall}\n"));
         }
@@ -259,6 +294,9 @@ impl GroupReport {
                     ("resync_lines", s.resync_lines.to_string()),
                     ("doorbells", s.doorbells.to_string()),
                     ("wire_wqes", s.wire_wqes.to_string()),
+                    ("flush_verbs", s.flush_verbs.to_string()),
+                    ("compaction_lines", s.compaction_lines.to_string()),
+                    ("volatile_window_ns", s.volatile_window_ns.to_string()),
                 ])
             })
             .collect();
@@ -268,6 +306,7 @@ impl GroupReport {
             ("on_loss", json::esc(&self.on_loss)),
             ("flush_policy", json::esc(&self.flush_policy)),
             ("coalesce", json::esc(&self.coalesce)),
+            ("persist_domain", json::esc(&self.persist_domain)),
             ("group_fence_ns", self.group_fence_ns.to_string()),
             ("fences_issued", self.fences_issued.to_string()),
             ("fence_piggybacks", self.fence_piggybacks.to_string()),
@@ -288,6 +327,9 @@ impl GroupReport {
             ),
             ("rereplicated_lines", self.rereplicated_lines.to_string()),
             ("revoked_wqes", self.revoked_wqes.to_string()),
+            ("flush_verbs", self.flush_verbs().to_string()),
+            ("compaction_lines", self.compaction_lines().to_string()),
+            ("volatile_window_ns", self.volatile_window_ns().to_string()),
             ("stalled", self.stalled.is_some().to_string()),
             ("backups", json::arr(&backups)),
         ])
@@ -385,6 +427,22 @@ impl ShardedReport {
     /// Total staged WQEs revoked at failovers across all shards.
     pub fn total_revoked_wqes(&self) -> u64 {
         self.per_shard.iter().map(|r| r.revoked_wqes).sum()
+    }
+
+    /// Total explicit flush verbs across all shards and backups.
+    pub fn total_flush_verbs(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.flush_verbs()).sum()
+    }
+
+    /// Total log-compaction volume across all shards and backups.
+    pub fn total_compaction_lines(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.compaction_lines()).sum()
+    }
+
+    /// Total replicated-but-volatile exposure across all shards and
+    /// backups (ns·line).
+    pub fn total_volatile_window_ns(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.volatile_window_ns()).sum()
     }
 
     /// Mean lines per wire WQE across the whole deployment.
@@ -725,6 +783,50 @@ mod tests {
         assert_eq!(r.membership_epochs, 0);
         assert_eq!(r.failover_downtime_ns, 0);
         assert!(!r.render().contains("failover"), "{}", r.render());
+    }
+
+    #[test]
+    fn report_surfaces_persist_domain_counters() {
+        use crate::config::StrategyKind;
+        use crate::coordinator::{MirrorBuilder, ThreadCtx};
+        use crate::net::PersistDomain;
+        let mut m = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+            .replication(ReplicationConfig::new(2, AckPolicy::All))
+            .persist_domain(PersistDomain::RpmemFlush)
+            .build()
+            .unwrap();
+        let mut t = ThreadCtx::new(0);
+        m.txn_begin(&mut t, None);
+        for i in 0..4u64 {
+            let addr = 0x1000 + i * 64;
+            m.store(&mut t, addr, i);
+            m.clwb(&mut t, addr);
+        }
+        m.sfence(&mut t);
+        m.txn_commit(&mut t);
+        let r = GroupReport::from_fabric(m.fabric());
+        assert_eq!(r.persist_domain, "rpmem-flush");
+        assert!(r.flush_verbs() > 0, "the commit fence must flush");
+        assert!(r.flush_verbs() <= r.doorbells());
+        assert!(r.volatile_window_ns() > 0);
+        assert_eq!(r.compaction_lines(), 0);
+        let text = r.render();
+        assert!(text.contains("domain rpmem-flush"), "{text}");
+        assert!(text.contains("flush verb(s)"), "{text}");
+        let j = r.to_json();
+        assert!(j.contains("\"persist_domain\":\"rpmem-flush\""), "{j}");
+        assert!(j.contains("\"flush_verbs\":"), "{j}");
+        assert!(j.contains("\"compaction_lines\":"), "{j}");
+        assert!(j.contains("\"volatile_window_ns\":"), "{j}");
+
+        // The default domain renders quietly: header names it, no
+        // counter line appears.
+        let quiet = Fabric::new(&Platform::default(), &ReplicationConfig::default(), false);
+        let r = GroupReport::from_fabric(&quiet);
+        assert_eq!(r.persist_domain, "adr");
+        assert_eq!(r.flush_verbs(), 0);
+        assert!(r.render().contains("domain adr"), "{}", r.render());
+        assert!(!r.render().contains("flush verb"), "{}", r.render());
     }
 
     #[test]

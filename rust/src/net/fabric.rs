@@ -125,6 +125,15 @@ pub struct BackupStats {
     /// Data WQEs launched on the wire toward this backup (a coalesced
     /// multi-line span counts once; `doorbells <= wire_wqes <= writes`).
     pub wire_wqes: u64,
+    /// Explicit flush verbs that drained volatile lines on this backup
+    /// (RpmemFlush domain only; `flush_verbs <= doorbells` — a non-empty
+    /// drain implies at least one prior data doorbell here).
+    pub flush_verbs: u64,
+    /// Superseded log versions queued for background compaction
+    /// (LogStructured domain only).
+    pub compaction_lines: u64,
+    /// Total replicated-but-volatile ns accumulated by drained lines.
+    pub volatile_window_ns: u64,
 }
 
 /// N-way mirroring fabric (see module docs).
@@ -492,6 +501,33 @@ impl Fabric {
         super::wqe::mean_span(self.posted_writes(), self.wire_wqes_total())
     }
 
+    /// The persistence discipline the backup group runs under (uniform
+    /// across the group — every replica is built from one Platform).
+    pub fn persist_domain(&self) -> super::remote::PersistDomain {
+        self.replicas
+            .first()
+            .map(|r| r.persist_domain())
+            .unwrap_or_default()
+    }
+
+    /// Explicit flush verbs across the group (RpmemFlush domain; each
+    /// counted verb drained at least one volatile line, so
+    /// `flush_verbs_total() <= doorbells_total()` holds per run).
+    pub fn flush_verbs_total(&self) -> u64 {
+        self.replicas.iter().map(|r| r.remote.flush_verbs).sum()
+    }
+
+    /// Superseded log versions queued for compaction across the group
+    /// (LogStructured domain).
+    pub fn compaction_lines_total(&self) -> u64 {
+        self.replicas.iter().map(|r| r.remote.compaction_lines).sum()
+    }
+
+    /// Total replicated-but-volatile ns across the group's drained lines.
+    pub fn volatile_window_ns_total(&self) -> u64 {
+        self.replicas.iter().map(|r| r.remote.volatile_window_ns).sum()
+    }
+
     /// Lines-per-WQE distribution merged across every backup's stack.
     pub fn span_hist(&self) -> LogHistogram {
         let mut h = LogHistogram::new();
@@ -595,6 +631,9 @@ impl Fabric {
                 last_handoff_ns: self.last_handoff_ns[id],
                 doorbells: self.doorbells[id],
                 wire_wqes: r.wire_wqes,
+                flush_verbs: r.remote.flush_verbs,
+                compaction_lines: r.remote.compaction_lines,
+                volatile_window_ns: r.remote.volatile_window_ns,
             })
             .collect()
     }

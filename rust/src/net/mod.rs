@@ -29,7 +29,7 @@ pub use faults::{
 pub use membership::{elect, Candidate};
 pub use qp::LocalQp;
 pub use rdma::Rdma;
-pub use remote::RemoteEngine;
+pub use remote::{PersistDomain, RemoteEngine};
 pub use verbs::WriteMeta;
 pub use wqe::{
     BatchingConfig, CoalesceMode, CoalescingConfig, FlushPolicy, SubmitQueue, Wqe,

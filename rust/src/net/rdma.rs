@@ -405,6 +405,15 @@ impl Rdma {
                 .sum::<Ns>()
     }
 
+    /// Persistence discipline of this stack's remote engine. Note the
+    /// domain changes requester-visible timing too: under eADR an NT
+    /// completion arrives at `persist + rtt/2` with `persist = proc`,
+    /// while RpmemFlush defers durability to the fence path entirely —
+    /// see [`super::remote::PersistDomain`].
+    pub fn persist_domain(&self) -> super::remote::PersistDomain {
+        self.remote.persist_domain()
+    }
+
     pub fn nqp(&self) -> usize {
         self.nqp
     }

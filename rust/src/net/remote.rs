@@ -12,7 +12,87 @@ use super::verbs::WriteMeta;
 use crate::mem::{llc::DdioWrite, DurEvent, DurabilityLog, Llc, MemCtrl};
 use crate::sim::RateLimiter;
 use crate::{config::Platform, line_of, Addr, Ns};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+
+/// Remote persistence domain: what hardware boundary a mirror write must
+/// cross before it is durable on the backup. The paper's §6.2 model is
+/// ADR (persistence at MC write-queue admission); *Correct, Fast Remote
+/// Persistence* (arXiv:1909.02092) and *Write-Optimized and Consistent
+/// RDMA-based NVM Systems* (arXiv:1906.08173) catalogue the rest. The
+/// domain owns the persist-instant computation for every write verb and
+/// the drain/wait semantics of every fence verb — see the per-variant
+/// notes and DESIGN.md §Remote persistence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PersistDomain {
+    /// ADR: the MC write queue is inside the persistence domain, the LLC
+    /// is not. DDIO writes land volatile and drain on rcommit;
+    /// write-throughs persist at queue admission. Bit-exact anchor for
+    /// the pre-domain remote path.
+    Adr,
+    /// eADR: the LLC is inside the persistence domain. Remote processing
+    /// completion implies persistence; rcommit drains collapse to a
+    /// no-op and rdfence loses its PM-landing tail.
+    Eadr,
+    /// RPMEM-style explicit flush: nothing — not even the MC queue — is
+    /// persistent until an explicit flush verb, which the fence path
+    /// emits at the WQE flush choke point. Writes buffer volatile;
+    /// rcommit/rdfence/read-fence all carry flush semantics.
+    RpmemFlush,
+    /// Log-structured remote PM: every mirror write becomes a sequential
+    /// append at `wire_line_ns`-friendly addresses (no MC bank
+    /// conflicts, no queue wait); superseded versions are rewritten by a
+    /// background compactor that steals MC drain bandwidth off the
+    /// critical path.
+    LogStructured,
+}
+
+impl Default for PersistDomain {
+    fn default() -> Self {
+        PersistDomain::Adr
+    }
+}
+
+impl PersistDomain {
+    pub const ALL: [PersistDomain; 4] = [
+        PersistDomain::Adr,
+        PersistDomain::Eadr,
+        PersistDomain::RpmemFlush,
+        PersistDomain::LogStructured,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PersistDomain::Adr => "adr",
+            PersistDomain::Eadr => "eadr",
+            PersistDomain::RpmemFlush => "rpmem-flush",
+            PersistDomain::LogStructured => "log-structured",
+        }
+    }
+}
+
+impl std::str::FromStr for PersistDomain {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "adr" => Ok(PersistDomain::Adr),
+            "eadr" => Ok(PersistDomain::Eadr),
+            "rpmem-flush" | "rpmem_flush" | "rpmem" | "flush" => Ok(PersistDomain::RpmemFlush),
+            "log-structured" | "log_structured" | "logstructured" | "log" => {
+                Ok(PersistDomain::LogStructured)
+            }
+            other => Err(format!(
+                "unknown persist domain {other:?} (expected adr, eadr, rpmem-flush or log-structured)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for PersistDomain {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
 
 /// Remote engine: one backup node.
 #[derive(Clone, Debug)]
@@ -39,10 +119,20 @@ pub struct RemoteEngine {
     /// Backup LLC + memory controller.
     pub llc: Llc,
     pub mc: MemCtrl,
-    /// Lines written via plain `Write` that are dirty in the LLC and not
-    /// yet persistent — drained by `rcommit` (insertion-ordered).
-    pending: Vec<(Addr, WriteMeta)>,
+    /// Persistence discipline of this backup's PM (see [`PersistDomain`]).
+    domain: PersistDomain,
+    /// Lines replicated but not yet persistent, with the remote
+    /// processing instant each became volatile at — under ADR these are
+    /// dirty DDIO lines drained by `rcommit`; under RpmemFlush *every*
+    /// write buffers here until a flush verb (insertion-ordered).
+    pending: Vec<(Addr, WriteMeta, Ns)>,
     pending_idx: crate::util::FastMap<Addr, usize>,
+    /// Log-structured append state: line addresses already live in the
+    /// log — a re-append supersedes and queues a compaction rewrite.
+    log_seen: HashSet<Addr>,
+    /// Latency of one sequential log append (ingress + one bank slot; a
+    /// `wire_line_ns`-friendly append never waits on the write queue).
+    log_append_ns: Ns,
     /// SM-OB per-thread ordering floor: none of the thread's later-epoch
     /// WTs may persist before its floor.
     persist_floor: HashMap<u32, Ns>,
@@ -61,6 +151,15 @@ pub struct RemoteEngine {
     pub writes: u64,
     pub persists: u64,
     pub barriers: u64,
+    /// Explicit flush verbs that drained at least one volatile line
+    /// (RpmemFlush only — an empty drain emits no verb on the wire).
+    pub flush_verbs: u64,
+    /// Superseded log versions queued for background compaction
+    /// (LogStructured only).
+    pub compaction_lines: u64,
+    /// Total ns lines spent replicated-but-volatile before persisting
+    /// (Σ persist_at − proc_at over drained/flushed lines).
+    pub volatile_window_ns: u64,
 }
 
 impl RemoteEngine {
@@ -75,8 +174,11 @@ impl RemoteEngine {
             mc_pm: p.mc_pm,
             llc: Llc::from_platform(p),
             mc: MemCtrl::from_platform(p),
+            domain: p.persist_domain,
             pending: Vec::new(),
             pending_idx: crate::util::FastMap::default(),
+            log_seen: HashSet::new(),
+            log_append_ns: p.llc_mc + (p.mc_pm / p.mc_banks as Ns).max(1),
             persist_floor: HashMap::new(),
             max_persist: 0,
             per_qp_persist: vec![0; p.nqp],
@@ -86,7 +188,15 @@ impl RemoteEngine {
             writes: 0,
             persists: 0,
             barriers: 0,
+            flush_verbs: 0,
+            compaction_lines: 0,
+            volatile_window_ns: 0,
         }
+    }
+
+    /// This backup's persistence discipline.
+    pub fn persist_domain(&self) -> PersistDomain {
+        self.domain
     }
 
     fn record_persist(&mut self, meta: &WriteMeta, at: Ns) {
@@ -116,26 +226,65 @@ impl RemoteEngine {
     }
 
     /// Posted one-sided write via DDIO (paper Fig. 3a left). Returns the
-    /// remote processing instant. The line lands dirty in the LLC; a dirty
-    /// DDIO-way eviction pushes the *evicted* line into the MC queue.
+    /// remote processing instant. Under ADR the line lands dirty in the
+    /// LLC and a dirty DDIO-way eviction pushes the *evicted* line into
+    /// the MC queue; the other domains reroute the persist instant (see
+    /// [`PersistDomain`]).
     pub fn write_ddio(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> Ns {
         self.writes += 1;
         let proc = self.process(qp, meta.thread, arrive);
         let line = line_of(meta.addr);
-        match self.llc.ddio_write(line, proc) {
-            DdioWrite::EvictDirty(old) => {
-                // The evicted (older) line persists now.
-                let (persist, _) = self.mc.push(proc);
-                if let Some(old_meta) = self.remove_pending(old) {
-                    self.record_persist(&old_meta, persist);
-                    self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+        if self.domain == PersistDomain::Adr {
+            // Bit-exact pre-domain path: volatile in the LLC until
+            // rcommit; evicting a dirty DDIO way persists the old line.
+            match self.llc.ddio_write(line, proc) {
+                DdioWrite::EvictDirty(old) => {
+                    // The evicted (older) line persists now.
+                    let (persist, _) = self.mc.push(proc);
+                    if let Some((old_meta, was_volatile_at)) = self.remove_pending(old) {
+                        self.record_persist(&old_meta, persist);
+                        self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+                        self.volatile_window_ns += persist.saturating_sub(was_volatile_at);
+                    }
                 }
+                DdioWrite::Hit | DdioWrite::Fill | DdioWrite::EvictClean => {}
             }
-            DdioWrite::Hit | DdioWrite::Fill | DdioWrite::EvictClean => {}
+            let e = self.per_thread_proc.entry(meta.thread).or_insert(0);
+            *e = (*e).max(proc);
+            self.insert_pending(line, meta, proc);
+            return proc;
+        }
+        match self.domain {
+            PersistDomain::Eadr => {
+                // The LLC is inside the persistence domain: landing
+                // dirty in it *is* the durability instant. Evictions
+                // need no persist — the victim was already durable.
+                self.llc.ddio_write(line, proc);
+                self.record_persist(&meta, proc);
+                self.per_qp_persist[qp] = self.per_qp_persist[qp].max(proc);
+                let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
+                *e = (*e).max(proc);
+            }
+            PersistDomain::RpmemFlush => {
+                // Nothing persists without an explicit flush: the line
+                // stays in the volatile buffer even when evicted from
+                // the LLC into the (volatile) MC queue.
+                self.llc.ddio_write(line, proc);
+                self.insert_pending(line, meta, proc);
+            }
+            PersistDomain::LogStructured => {
+                // Mirror write becomes a sequential log append — durable
+                // after the append latency, no LLC residency, no queue.
+                let persist = self.log_append(line, proc);
+                self.record_persist(&meta, persist);
+                self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+                let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
+                *e = (*e).max(persist);
+            }
+            PersistDomain::Adr => unreachable!("handled by the guard clause above"),
         }
         let e = self.per_thread_proc.entry(meta.thread).or_insert(0);
         *e = (*e).max(proc);
-        self.insert_pending(line, meta);
         proc
     }
 
@@ -146,22 +295,54 @@ impl RemoteEngine {
         self.writes += 1;
         let proc = self.process(qp, meta.thread, arrive);
         let line = line_of(meta.addr);
-        match self.llc.ddio_write(line, proc) {
-            DdioWrite::EvictDirty(old) => {
-                let (persist, _) = self.mc.push(proc);
-                if let Some(old_meta) = self.remove_pending(old) {
-                    self.record_persist(&old_meta, persist);
+        if self.domain == PersistDomain::Adr {
+            // Bit-exact pre-domain path: persist at MC-queue admission.
+            match self.llc.ddio_write(line, proc) {
+                DdioWrite::EvictDirty(old) => {
+                    let (persist, _) = self.mc.push(proc);
+                    if let Some((old_meta, was_volatile_at)) = self.remove_pending(old) {
+                        self.record_persist(&old_meta, persist);
+                        self.volatile_window_ns += persist.saturating_sub(was_volatile_at);
+                    }
                 }
+                _ => {}
             }
-            _ => {}
+            // Write through: push this line now; the ordering floor from
+            // the issuing thread's prior rofence epochs applies (the
+            // NIC's ordered FIFO delays the WT).
+            let floor = self.persist_floor.get(&meta.thread).copied().unwrap_or(0);
+            let (raw_persist, _) = self.mc.push(proc.max(floor));
+            let persist = raw_persist.max(floor);
+            self.llc.writeback(line, persist); // LLC copy now clean
+            self.record_persist(&meta, persist);
+            self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+            let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
+            *e = (*e).max(persist);
+            return (proc, persist);
         }
-        // Write through: push this line now; the ordering floor from the
-        // issuing thread's prior rofence epochs applies (the NIC's
-        // ordered FIFO delays the WT).
         let floor = self.persist_floor.get(&meta.thread).copied().unwrap_or(0);
-        let (raw_persist, _) = self.mc.push(proc.max(floor));
-        let persist = raw_persist.max(floor);
-        self.llc.writeback(line, persist); // LLC copy now clean
+        let persist = match self.domain {
+            PersistDomain::Eadr => {
+                // Acceptance into the (persistent) cache hierarchy is the
+                // durability instant — no MC-queue wait, only the
+                // ordering floor applies.
+                self.llc.ddio_write(line, proc);
+                self.llc.writeback(line, proc);
+                proc.max(floor)
+            }
+            PersistDomain::RpmemFlush => {
+                // The write-through reaches the (volatile) MC queue but
+                // is not durable until an explicit flush verb.
+                self.llc.ddio_write(line, proc);
+                self.llc.writeback(line, proc);
+                self.insert_pending(line, meta, proc);
+                let e = self.per_thread_proc.entry(meta.thread).or_insert(0);
+                *e = (*e).max(proc);
+                return (proc, proc);
+            }
+            PersistDomain::LogStructured => self.log_append(line, proc.max(floor)),
+            PersistDomain::Adr => unreachable!("handled by the guard clause above"),
+        };
         self.record_persist(&meta, persist);
         self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
         let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
@@ -182,7 +363,31 @@ impl RemoteEngine {
         let start = self.nt_proc.submit(ordered);
         *slot = start;
         let proc = start + self.nt_latency;
-        let (persist, _) = self.mc.push(proc);
+        if self.domain == PersistDomain::Adr {
+            // Bit-exact pre-domain path: straight into the MC queue.
+            let (persist, _) = self.mc.push(proc);
+            self.record_persist(&meta, persist);
+            self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
+            let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
+            *e = (*e).max(persist);
+            return (proc, persist);
+        }
+        let line = line_of(meta.addr);
+        let persist = match self.domain {
+            // Non-posted completion implies persistence the instant the
+            // write is processed — the whole path is in the domain.
+            PersistDomain::Eadr => proc,
+            PersistDomain::RpmemFlush => {
+                // The non-posted ack only means "received": the line
+                // buffers volatile until the read fence flushes it.
+                self.insert_pending(line, meta, proc);
+                let e = self.per_thread_proc.entry(meta.thread).or_insert(0);
+                *e = (*e).max(proc);
+                return (proc, proc);
+            }
+            PersistDomain::LogStructured => self.log_append(line, proc),
+            PersistDomain::Adr => unreachable!("handled by the guard clause above"),
+        };
         self.record_persist(&meta, persist);
         self.per_qp_persist[qp] = self.per_qp_persist[qp].max(persist);
         let e = self.per_thread_persist.entry(meta.thread).or_insert(0);
@@ -297,16 +502,17 @@ impl RemoteEngine {
         // The caller's prior writes must have been processed remotely.
         let start = start.max(self.per_thread_proc.get(&thread).copied().unwrap_or(0));
         let mut done = start;
-        let all: Vec<(Addr, WriteMeta)> = std::mem::take(&mut self.pending);
+        let all: Vec<(Addr, WriteMeta, Ns)> = std::mem::take(&mut self.pending);
         self.pending_idx.clear();
-        for (line, meta) in all {
+        for (line, meta, proc_at) in all {
             if meta.thread != thread {
-                self.insert_pending(line, meta); // keep others' lines
+                self.insert_pending(line, meta, proc_at); // keep others' lines
                 continue;
             }
             if self.llc.writeback(line, start) {
                 let (persist, _) = self.mc.push(start);
                 self.record_persist(&meta, persist);
+                self.volatile_window_ns += persist.saturating_sub(proc_at);
                 done = done.max(persist);
             }
         }
@@ -316,12 +522,87 @@ impl RemoteEngine {
         done
     }
 
+    /// RpmemFlush's explicit flush verb: persist every volatile line of
+    /// the caller, regardless of LLC residency — unlike
+    /// [`RemoteEngine::drain_pending`] it must not skip lines whose
+    /// cached copy is gone (NT writes never had one, evicted DDIO lines
+    /// lost theirs), because under this domain the volatile buffer *is*
+    /// the authority on what has not yet persisted. Counted in
+    /// `flush_verbs` only when it drains at least one line (an empty
+    /// flush is elided from the wire).
+    fn flush_volatile(&mut self, start: Ns, thread: u32) -> Ns {
+        let start = start.max(self.per_thread_proc.get(&thread).copied().unwrap_or(0));
+        let floor = self.persist_floor.get(&thread).copied().unwrap_or(0);
+        let mut done = start;
+        let mut flushed = 0u64;
+        let all: Vec<(Addr, WriteMeta, Ns)> = std::mem::take(&mut self.pending);
+        self.pending_idx.clear();
+        for (line, meta, proc_at) in all {
+            if meta.thread != thread {
+                self.insert_pending(line, meta, proc_at); // keep others' lines
+                continue;
+            }
+            self.llc.writeback(line, start); // cache-state bookkeeping only
+            let (raw_persist, _) = self.mc.push(start.max(floor));
+            let persist = raw_persist.max(floor);
+            self.record_persist(&meta, persist);
+            self.volatile_window_ns += persist.saturating_sub(proc_at);
+            done = done.max(persist);
+            flushed += 1;
+        }
+        if flushed > 0 {
+            self.flush_verbs += 1;
+        }
+        let e = self.per_thread_persist.entry(thread).or_insert(0);
+        *e = (*e).max(done);
+        done = *e;
+        self.max_persist = self.max_persist.max(done);
+        done
+    }
+
+    /// Sequential log append: one superseded-version check, then the
+    /// fixed append latency. A re-appended line queues a background
+    /// compaction rewrite that consumes MC drain bandwidth without
+    /// delaying this append.
+    fn log_append(&mut self, line: Addr, at: Ns) -> Ns {
+        if !self.log_seen.insert(line) {
+            self.compaction_lines += 1;
+            let _ = self.mc.push(at); // compactor steals a drain slot
+        }
+        at + self.log_append_ns
+    }
+
+    /// Domain dispatch for rcommit's responder semantics: under
+    /// RpmemFlush the drain *is* the explicit flush verb; elsewhere it
+    /// is the ADR LLC drain (which degenerates to a floor wait under
+    /// eADR/log-structured, where nothing ever buffers).
+    fn drain_or_flush(&mut self, start: Ns, thread: u32) -> Ns {
+        match self.domain {
+            PersistDomain::RpmemFlush => self.flush_volatile(start, thread),
+            _ => self.drain_pending(start, thread),
+        }
+    }
+
     /// rdfence's wait semantics: all the caller's write-throughs
-    /// persistent, cross-QP sync bubble, last line's PM landing.
+    /// persistent, cross-QP sync bubble, last line's PM landing. eADR
+    /// drops the PM-landing tail (the queue is already persistent);
+    /// RpmemFlush must first flush the caller's volatile lines.
     fn dfence_wait(&mut self, start: Ns, thread: u32) -> Ns {
-        start.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
-            + self.ob_barrier
-            + self.mc_pm
+        match self.domain {
+            PersistDomain::Adr | PersistDomain::LogStructured => {
+                start.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
+                    + self.ob_barrier
+                    + self.mc_pm
+            }
+            PersistDomain::Eadr => {
+                start.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
+                    + self.ob_barrier
+            }
+            PersistDomain::RpmemFlush => {
+                let flushed = self.flush_volatile(start, thread);
+                flushed + self.ob_barrier + self.mc_pm
+            }
+        }
     }
 
     /// Remote commit (SM-RC): drain the *caller's* pending (dirty)
@@ -330,7 +611,7 @@ impl RemoteEngine {
     /// replication region). Returns the drain-complete instant.
     pub fn rcommit(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
         let start = self.process(qp, thread, arrive);
-        let done = self.drain_pending(start, thread);
+        let done = self.drain_or_flush(start, thread);
         self.per_qp_persist[qp] = self.per_qp_persist[qp].max(done);
         done
     }
@@ -349,6 +630,12 @@ impl RemoteEngine {
     /// completion implies persistence (SM-DD's durability point).
     pub fn read(&mut self, qp: usize, arrive: Ns, thread: u32) -> Ns {
         let proc = self.process(qp, thread, arrive);
+        if self.domain == PersistDomain::RpmemFlush {
+            // SM-DD's durability point: the read fence carries the
+            // explicit flush, since NT completions only mean "received".
+            let done = self.flush_volatile(proc, thread);
+            return proc.max(done);
+        }
         proc.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
     }
 
@@ -365,7 +652,7 @@ impl RemoteEngine {
     /// Piggybacked rcommit: drain the caller's pending lines as of
     /// `arrive` without consuming an issue slot.
     pub fn rcommit_join(&mut self, arrive: Ns, thread: u32) -> Ns {
-        self.drain_pending(arrive, thread)
+        self.drain_or_flush(arrive, thread)
     }
 
     /// Piggybacked rdfence: wait for the caller's persists as of
@@ -374,24 +661,31 @@ impl RemoteEngine {
         self.dfence_wait(arrive, thread)
     }
 
-    /// Piggybacked read-fence: the caller's persists as of `arrive`.
+    /// Piggybacked read-fence: the caller's persists as of `arrive`
+    /// (flush semantics under RpmemFlush, like the issued variant).
     pub fn read_join(&mut self, arrive: Ns, thread: u32) -> Ns {
+        if self.domain == PersistDomain::RpmemFlush {
+            let done = self.flush_volatile(arrive, thread);
+            return arrive.max(done);
+        }
         arrive.max(self.per_thread_persist.get(&thread).copied().unwrap_or(0))
     }
 
-    fn insert_pending(&mut self, line: Addr, meta: WriteMeta) {
+    fn insert_pending(&mut self, line: Addr, meta: WriteMeta, proc_at: Ns) {
         match self.pending_idx.get(&line) {
-            Some(&i) => self.pending[i].1 = meta, // coalesce in place
+            // Coalesce in place: newest value wins, but the line has
+            // been volatile since its first unflushed write.
+            Some(&i) => self.pending[i].1 = meta,
             None => {
                 self.pending_idx.insert(line, self.pending.len());
-                self.pending.push((line, meta));
+                self.pending.push((line, meta, proc_at));
             }
         }
     }
 
-    fn remove_pending(&mut self, line: Addr) -> Option<WriteMeta> {
+    fn remove_pending(&mut self, line: Addr) -> Option<(WriteMeta, Ns)> {
         let i = self.pending_idx.remove(&line)?;
-        let (_, meta) = self.pending[i];
+        let (_, meta, proc_at) = self.pending[i];
         // O(1) removal: swap with the tail and fix the moved index.
         let last = self.pending.len() - 1;
         self.pending.swap(i, last);
@@ -400,7 +694,7 @@ impl RemoteEngine {
             let moved = self.pending[i].0;
             self.pending_idx.insert(moved, i);
         }
-        Some(meta)
+        Some((meta, proc_at))
     }
 
     /// Install a failover catch-up stream from a peer: `events` (empty
@@ -722,5 +1016,167 @@ mod tests {
         // Only the newest value persists.
         assert_eq!(e.ledger.len(), 1);
         assert_eq!(e.ledger.events()[0].val, 1);
+    }
+
+    fn engine_with(d: PersistDomain) -> RemoteEngine {
+        let mut p = Platform::default();
+        p.persist_domain = d;
+        RemoteEngine::new(&p, true)
+    }
+
+    #[test]
+    fn persist_domain_parses_and_displays() {
+        for d in PersistDomain::ALL {
+            assert_eq!(d.name().parse::<PersistDomain>().unwrap(), d);
+            assert_eq!(format!("{d}"), d.name());
+        }
+        assert_eq!("rpmem".parse::<PersistDomain>().unwrap(), PersistDomain::RpmemFlush);
+        assert_eq!("log".parse::<PersistDomain>().unwrap(), PersistDomain::LogStructured);
+        assert_eq!(" EADR ".parse::<PersistDomain>().unwrap(), PersistDomain::Eadr);
+        assert!("pmem".parse::<PersistDomain>().is_err());
+        assert_eq!(PersistDomain::default(), PersistDomain::Adr);
+    }
+
+    #[test]
+    fn explicit_adr_is_the_default_engine_bit_for_bit() {
+        // The guard-clause pass-through: an engine with the domain set
+        // to Adr explicitly runs the identical event sequence as the
+        // default-platform engine.
+        let mut a = engine();
+        let mut b = engine_with(PersistDomain::Adr);
+        for (i, &(qp, at)) in [(0usize, 100), (1, 150), (0, 160)].iter().enumerate() {
+            let pa = a.write_ddio(qp, at, meta(0x40 * (i as Addr + 1), i as u64));
+            let pb = b.write_ddio(qp, at, meta(0x40 * (i as Addr + 1), i as u64));
+            assert_eq!(pa, pb);
+        }
+        assert_eq!(a.write_wt(2, 400, meta(0x400, 9)), b.write_wt(2, 400, meta(0x400, 9)));
+        assert_eq!(a.write_nt(0, 500, meta(0x440, 10)), b.write_nt(0, 500, meta(0x440, 10)));
+        assert_eq!(a.rcommit(1, 900, 0), b.rcommit(1, 900, 0));
+        assert_eq!(a.rdfence(1, 950, 0), b.rdfence(1, 950, 0));
+        assert_eq!(a.ledger.events(), b.ledger.events());
+        assert_eq!(a.flush_verbs, 0);
+        assert_eq!(a.compaction_lines, 0);
+    }
+
+    #[test]
+    fn eadr_completion_implies_persistence() {
+        let mut e = engine_with(PersistDomain::Eadr);
+        let proc = e.write_ddio(0, 1000, meta(0x40, 0));
+        // Durable at the processing instant — nothing buffers.
+        assert_eq!(e.ledger.len(), 1);
+        assert_eq!(e.ledger.events()[0].at, proc);
+        assert_eq!(e.pending_lines(), 0);
+        // The rcommit drain collapses: nothing new persists.
+        e.rcommit(1, 2000, 0);
+        assert_eq!(e.ledger.len(), 1);
+    }
+
+    #[test]
+    fn eadr_rdfence_drops_the_pm_tail() {
+        let mut adr = engine();
+        let mut eadr = engine_with(PersistDomain::Eadr);
+        adr.write_wt(0, 1000, meta(0x40, 0));
+        eadr.write_wt(0, 1000, meta(0x40, 0));
+        let d_adr = adr.rdfence(1, 1100, 0);
+        let d_eadr = eadr.rdfence(1, 1100, 0);
+        assert!(d_eadr < d_adr, "eADR fence {d_eadr} not faster than ADR {d_adr}");
+    }
+
+    #[test]
+    fn rpmem_flush_buffers_every_write_until_the_flush_verb() {
+        let mut e = engine_with(PersistDomain::RpmemFlush);
+        e.write_ddio(0, 1000, meta(0x40, 0));
+        let (proc_wt, p_wt) = e.write_wt(1, 1010, meta(0x80, 1));
+        let (proc_nt, p_nt) = e.write_nt(0, 1020, meta(0xc0, 2));
+        // Completions mean "received", not "durable".
+        assert_eq!(p_wt, proc_wt);
+        assert_eq!(p_nt, proc_nt);
+        assert_eq!(e.ledger.len(), 0, "nothing durable before the flush verb");
+        assert_eq!(e.pending_lines(), 3);
+        assert_eq!(e.flush_verbs, 0);
+        // The fence-path flush persists all three, in one verb.
+        let done = e.rcommit(2, 5000, 0);
+        assert_eq!(e.ledger.len(), 3);
+        assert_eq!(e.pending_lines(), 0);
+        assert_eq!(e.flush_verbs, 1);
+        assert!(e.ledger.events().iter().all(|ev| ev.at <= done));
+        assert!(e.volatile_window_ns > 0);
+        // An empty flush is elided from the wire — no verb counted.
+        e.rcommit(2, 6000, 0);
+        assert_eq!(e.flush_verbs, 1);
+    }
+
+    #[test]
+    fn rpmem_eviction_keeps_the_line_volatile() {
+        // Same tiny-LLC geometry as the ADR eviction test: under
+        // RpmemFlush the evicted dirty line must NOT persist — it stays
+        // in the volatile buffer until the flush verb covers it.
+        let mut p = Platform::default();
+        p.llc_slices = 1;
+        p.llc_sets_per_slice = 2;
+        p.llc_ways = 2;
+        p.ddio_ways = 1;
+        p.slice_masks = vec![0];
+        p.persist_domain = PersistDomain::RpmemFlush;
+        let mut e = RemoteEngine::new(&p, true);
+        let stride = 2 * 64; // same set
+        e.write_ddio(0, 100, meta(0, 0));
+        e.write_ddio(0, 200, meta(stride, 1)); // evicts line 0
+        assert_eq!(e.ledger.len(), 0, "eviction must not persist without ADR");
+        assert_eq!(e.pending_lines(), 2);
+        e.rcommit(0, 1000, 0);
+        assert_eq!(e.ledger.len(), 2, "flush covers evicted lines too");
+    }
+
+    #[test]
+    fn rpmem_read_fence_carries_the_flush() {
+        let mut e = engine_with(PersistDomain::RpmemFlush);
+        let (_, p_nt) = e.write_nt(0, 1000, meta(0x40, 0));
+        assert_eq!(e.ledger.len(), 0);
+        let done = e.read(0, 2000, 0);
+        assert_eq!(e.ledger.len(), 1);
+        assert_eq!(e.flush_verbs, 1);
+        assert!(done >= p_nt);
+        // The piggybacked variant carries the same semantics.
+        let mut e = engine_with(PersistDomain::RpmemFlush);
+        e.write_ddio(0, 1000, meta(0x40, 0));
+        let done = e.read_join(2000, 0);
+        assert_eq!(e.ledger.len(), 1);
+        assert!(done >= 2000);
+    }
+
+    #[test]
+    fn log_structured_appends_sequentially_and_compacts_rewrites() {
+        let mut e = engine_with(PersistDomain::LogStructured);
+        let (_, p1) = e.write_wt(0, 1000, meta(0x40, 0));
+        let (_, p2) = e.write_wt(0, 1000, meta(0x80, 1));
+        // Fresh lines: durable one append-latency after processing,
+        // no compaction debt, nothing buffered.
+        assert_eq!(e.ledger.len(), 2);
+        assert_eq!(e.pending_lines(), 0);
+        assert_eq!(e.compaction_lines, 0);
+        assert!(p2 >= p1);
+        // Rewriting a live line supersedes it: compaction queued.
+        e.write_wt(0, 2000, meta(0x40, 2));
+        assert_eq!(e.compaction_lines, 1);
+        assert_eq!(e.ledger.len(), 3);
+        // NT and DDIO paths append too.
+        e.write_nt(0, 3000, meta(0x40, 3));
+        e.write_ddio(0, 4000, meta(0x40, 4));
+        assert_eq!(e.compaction_lines, 3);
+        assert_eq!(e.ledger.len(), 5);
+    }
+
+    #[test]
+    fn drop_volatile_covers_rpmem_buffered_writes() {
+        let mut e = engine_with(PersistDomain::RpmemFlush);
+        e.write_wt(0, 100, meta(0x40, 0));
+        e.write_nt(0, 200, meta(0x80, 1));
+        assert_eq!(e.pending_lines(), 2);
+        e.drop_volatile();
+        assert_eq!(e.pending_lines(), 0);
+        e.rcommit(0, 1000, 0);
+        assert_eq!(e.ledger.len(), 0, "dropped lines must not flush later");
+        assert_eq!(e.flush_verbs, 0);
     }
 }

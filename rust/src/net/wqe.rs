@@ -78,6 +78,15 @@
 //! its in-flight chains — they are counted
 //! ([`crate::net::Fabric::revoked_wqes`]) and retried through the new
 //! primary once it admits writes.
+//!
+//! It is also where the **explicit flush verb** of the
+//! [`crate::net::PersistDomain::RpmemFlush`] persistence domain rides:
+//! every blocking fence flushes the staged chains here first, then its
+//! fence verb (issued or group-fence-joined) carries flush semantics on
+//! the responder — so by construction no flush verb can overtake data
+//! still staged in host memory, and a counted flush verb always trails
+//! at least one data doorbell to that backup (the
+//! `flush_verbs <= doorbells` invariant CI enforces).
 
 use super::verbs::{Verb, WriteMeta};
 use crate::{line_of, LINE};

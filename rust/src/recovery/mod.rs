@@ -28,10 +28,10 @@
 
 use crate::coordinator::ShardMap;
 use crate::mem::DurabilityLog;
-use crate::net::{effective_required, FaultTimeline, OnLoss};
+use crate::net::{effective_required, FaultTimeline, OnLoss, PersistDomain};
 use crate::txn::undo::rollback_plan;
 use crate::{Addr, Ns};
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 /// Golden transaction history recorded by a (single-threaded) workload:
@@ -182,6 +182,227 @@ pub fn check_all_crashes(
     })
 }
 
+/// Unified entry point for the group crash-consistency checks: one
+/// builder collecting the workload's golden history, the ledger set,
+/// the ack-policy requirement, and the optional fault / sharding /
+/// persistence-domain dimensions, replacing the six positional
+/// `check_*_group_crash(es)` functions (kept below as thin shims that
+/// pin their historical behavior).
+///
+/// ```text
+/// let k = CrashCheck::new(&history, &log_bases, &data_addrs)
+///     .ledgers(&ledgers)        // unsharded: the replica group
+///     .required(2)              // ack policy (default: all backups)
+///     .on_loss(OnLoss::Degrade) // loss handling under faults
+///     .faults(&timeline)        // realized alive/dead membership
+///     .persist_domain(d)        // annotates verdicts with the domain
+///     .at(crash_t)?;            // one instant; .sweep() for all
+/// ```
+///
+/// Exactly one of `.ledgers(..)` (unsharded) or `.shards(..)` (per-
+/// shard ledger groups + timelines over a [`ShardMap`]) must be set.
+/// The persistence domain is informational: verdict widths already
+/// arise from the domain-realized ledger stamps (eADR stamps at
+/// completion widen durable sets; `rpmem-flush` stamps at the flush
+/// verb narrow them), so the builder threads it into failure context
+/// rather than into the decision procedure.
+pub struct CrashCheck<'a> {
+    history: &'a TxnHistory,
+    log_bases: &'a [Addr],
+    data_addrs: &'a [Addr],
+    required: usize,
+    on_loss: OnLoss,
+    domain: PersistDomain,
+    ledgers: &'a [&'a DurabilityLog],
+    faults: Option<&'a FaultTimeline>,
+    sharded: Option<ShardedCheck<'a>>,
+}
+
+/// The sharded dimension of a [`CrashCheck`]: per-shard ledger groups
+/// and realized timelines over the routing map.
+struct ShardedCheck<'a> {
+    ledgers: &'a [Vec<&'a DurabilityLog>],
+    timelines: &'a [FaultTimeline],
+    map: &'a ShardMap,
+}
+
+impl<'a> CrashCheck<'a> {
+    pub fn new(
+        history: &'a TxnHistory,
+        log_bases: &'a [Addr],
+        data_addrs: &'a [Addr],
+    ) -> Self {
+        CrashCheck {
+            history,
+            log_bases,
+            data_addrs,
+            required: 0,
+            on_loss: OnLoss::Halt,
+            domain: PersistDomain::Adr,
+            ledgers: &[],
+            faults: None,
+            sharded: None,
+        }
+    }
+
+    /// The unsharded replica group's durability ledgers.
+    pub fn ledgers(mut self, ledgers: &'a [&'a DurabilityLog]) -> Self {
+        self.ledgers = ledgers;
+        self
+    }
+
+    /// Durable backups the ack policy required at each fence
+    /// (per shard, in sharded mode). Default: the whole group (`all`).
+    pub fn required(mut self, required: usize) -> Self {
+        self.required = required;
+        self
+    }
+
+    /// Loss handling the run used ([`OnLoss::Halt`] default).
+    pub fn on_loss(mut self, on_loss: OnLoss) -> Self {
+        self.on_loss = on_loss;
+        self
+    }
+
+    /// Fault-aware membership: verdicts consult the realized alive/dead
+    /// timeline (unsharded mode; sharded mode carries its own per-shard
+    /// timelines).
+    pub fn faults(mut self, timeline: &'a FaultTimeline) -> Self {
+        self.faults = Some(timeline);
+        self
+    }
+
+    /// Sharded mode: per-shard ledger groups (`[shard][backup]`) and
+    /// realized timelines over the routing `map`.
+    pub fn shards(
+        mut self,
+        ledgers: &'a [Vec<&'a DurabilityLog>],
+        timelines: &'a [FaultTimeline],
+        map: &'a ShardMap,
+    ) -> Self {
+        self.sharded = Some(ShardedCheck {
+            ledgers,
+            timelines,
+            map,
+        });
+        self
+    }
+
+    /// The remote persistence domain the run's backups operated under.
+    /// Annotates failure context; the durable-set widths themselves are
+    /// already encoded in the ledger stamps the domain produced.
+    pub fn persist_domain(mut self, d: PersistDomain) -> Self {
+        self.domain = d;
+        self
+    }
+
+    fn required_for(&self, group: usize) -> usize {
+        if self.required == 0 {
+            group
+        } else {
+            self.required
+        }
+    }
+
+    fn wrap(&self, e: anyhow::Error) -> anyhow::Error {
+        if self.domain == PersistDomain::Adr {
+            e
+        } else {
+            anyhow!("under persist domain {}: {e}", self.domain)
+        }
+    }
+
+    /// Check one crash instant; returns the worst-case surviving prefix
+    /// length (see [`check_faulted_group_crash`] /
+    /// [`check_sharded_group_crash`] for the decision procedure).
+    pub fn at(&self, crash_t: Ns) -> Result<usize> {
+        if let Some(sh) = &self.sharded {
+            if self.faults.is_some() {
+                bail!(
+                    "CrashCheck: .faults() is the unsharded timeline — \
+                     sharded mode takes per-shard timelines via .shards()"
+                );
+            }
+            let group = sh.ledgers.first().map_or(0, |g| g.len());
+            return check_sharded_group_crash(
+                sh.ledgers,
+                sh.timelines,
+                self.history,
+                self.log_bases,
+                self.data_addrs,
+                self.required_for(group),
+                self.on_loss,
+                sh.map,
+                crash_t,
+            )
+            .map_err(|e| self.wrap(e));
+        }
+        let empty;
+        let timeline = match self.faults {
+            Some(t) => t,
+            None => {
+                empty = FaultTimeline::new(self.ledgers.len(), Vec::new());
+                &empty
+            }
+        };
+        check_faulted_group_crash(
+            self.ledgers,
+            self.history,
+            self.log_bases,
+            self.data_addrs,
+            self.required_for(self.ledgers.len()),
+            self.on_loss,
+            timeline,
+            crash_t,
+        )
+        .map_err(|e| self.wrap(e))
+    }
+
+    /// Sweep every interesting crash instant (ledger event times,
+    /// midpoints, boundaries, timeline transitions); returns the number
+    /// of crash points verified.
+    pub fn sweep(&self) -> Result<u64> {
+        if let Some(sh) = &self.sharded {
+            if self.faults.is_some() {
+                bail!(
+                    "CrashCheck: .faults() is the unsharded timeline — \
+                     sharded mode takes per-shard timelines via .shards()"
+                );
+            }
+            let group = sh.ledgers.first().map_or(0, |g| g.len());
+            return check_sharded_group_crashes(
+                sh.ledgers,
+                sh.timelines,
+                self.history,
+                self.log_bases,
+                self.data_addrs,
+                self.required_for(group),
+                self.on_loss,
+                sh.map,
+            )
+            .map_err(|e| self.wrap(e));
+        }
+        let empty;
+        let timeline = match self.faults {
+            Some(t) => t,
+            None => {
+                empty = FaultTimeline::new(self.ledgers.len(), Vec::new());
+                &empty
+            }
+        };
+        check_faulted_group_crashes(
+            self.ledgers,
+            self.history,
+            self.log_bases,
+            self.data_addrs,
+            self.required_for(self.ledgers.len()),
+            self.on_loss,
+            timeline,
+        )
+        .map_err(|e| self.wrap(e))
+    }
+}
+
 /// Cross-replica consistency for one crash instant: Guarantee-1 must
 /// hold on **every** backup individually (each receives the same ordered
 /// verb stream, so each image is some committed prefix), and the
@@ -190,6 +411,9 @@ pub fn check_all_crashes(
 /// after losing any `required - 1` backups some survivor still holds
 /// every durably-acked transaction. Returns that worst-case surviving
 /// prefix length.
+///
+/// Deprecated shim — prefer [`CrashCheck`]; this pins the historical
+/// positional signature (static membership, halt loss handling).
 pub fn check_group_crash(
     ledgers: &[&DurabilityLog],
     history: &TxnHistory,
@@ -198,24 +422,18 @@ pub fn check_group_crash(
     required: usize,
     crash_t: Ns,
 ) -> Result<usize> {
-    // The static-membership check is the fault-aware check under an
-    // empty timeline: everyone is alive and `required` never degrades.
-    check_faulted_group_crash(
-        ledgers,
-        history,
-        log_bases,
-        data_addrs,
-        required,
-        OnLoss::Halt,
-        &FaultTimeline::new(ledgers.len(), Vec::new()),
-        crash_t,
-    )
+    CrashCheck::new(history, log_bases, data_addrs)
+        .ledgers(ledgers)
+        .required(required)
+        .at(crash_t)
 }
 
 /// Sweep crash instants across the union of all backup ledgers (every
 /// event time, midpoints, and the boundaries) and run
 /// [`check_group_crash`] at each. Returns the number of crash points
 /// verified.
+///
+/// Deprecated shim — prefer [`CrashCheck`] with `.sweep()`.
 pub fn check_group_crashes(
     ledgers: &[&DurabilityLog],
     history: &TxnHistory,
@@ -223,15 +441,10 @@ pub fn check_group_crashes(
     data_addrs: &[Addr],
     required: usize,
 ) -> Result<u64> {
-    check_faulted_group_crashes(
-        ledgers,
-        history,
-        log_bases,
-        data_addrs,
-        required,
-        OnLoss::Halt,
-        &FaultTimeline::new(ledgers.len(), Vec::new()),
-    )
+    CrashCheck::new(history, log_bases, data_addrs)
+        .ledgers(ledgers)
+        .required(required)
+        .sweep()
 }
 
 /// Fault-aware cross-replica consistency for one crash instant: only
@@ -246,6 +459,9 @@ pub fn check_group_crashes(
 /// acked by only `required - d` survivors, so the adversary argument is
 /// run with `effective_required(required, alive_at_crash, on_loss)`.
 /// Returns the worst-case surviving prefix length.
+///
+/// Prefer the [`CrashCheck`] builder; this positional form remains as
+/// the decision procedure it delegates to.
 #[allow(clippy::too_many_arguments)]
 pub fn check_faulted_group_crash(
     ledgers: &[&DurabilityLog],
@@ -352,6 +568,9 @@ pub fn check_faulted_group_crashes(
 ///   shard acked, so the min is the right merge).
 ///
 /// Returns the merged worst-case surviving prefix length.
+///
+/// Prefer the [`CrashCheck`] builder (`.shards(..)`); this positional
+/// form remains as the decision procedure it delegates to.
 #[allow(clippy::too_many_arguments)]
 pub fn check_sharded_group_crash(
     shard_ledgers: &[Vec<&DurabilityLog>],
@@ -952,6 +1171,140 @@ mod tests {
             crash,
         )
         .is_err());
+    }
+
+    #[test]
+    fn crash_check_builder_matches_positional_forms() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+        let mut m =
+            Mirror::with_replication(Platform::default(), StrategyKind::SmOb, repl, true)
+                .unwrap();
+        let hist = drive_txns(&mut m, 4);
+        let ledgers = m.fabric().ledgers();
+        let logs = [LOG];
+        let data = [D0, D1];
+        let crash = hist.dfences[1] + 1;
+        // Single instant and full sweep agree with the positional forms.
+        let old = check_group_crash(&ledgers, &hist, &logs, &data, 2, crash).unwrap();
+        let new = CrashCheck::new(&hist, &logs, &data)
+            .ledgers(&ledgers)
+            .required(2)
+            .at(crash)
+            .unwrap();
+        assert_eq!(old, new);
+        let old_n = check_group_crashes(&ledgers, &hist, &logs, &data, 2).unwrap();
+        let new_n = CrashCheck::new(&hist, &logs, &data)
+            .ledgers(&ledgers)
+            .required(2)
+            .sweep()
+            .unwrap();
+        assert_eq!(old_n, new_n);
+        // Default `required` is the whole group (ack policy `all`).
+        let all_default = CrashCheck::new(&hist, &logs, &data)
+            .ledgers(&ledgers)
+            .at(crash)
+            .unwrap();
+        let all_explicit =
+            check_group_crash(&ledgers, &hist, &logs, &data, 3, crash).unwrap();
+        assert_eq!(all_default, all_explicit);
+    }
+
+    #[test]
+    fn crash_check_builder_matches_faulted_and_sharded_forms() {
+        use crate::config::{AckPolicy, ReplicationConfig};
+        use crate::coordinator::{ShardMapSpec, ShardingConfig};
+        use crate::net::{FaultTimeline, FaultsConfig};
+        let logs = [LOG];
+        let data = [D0, D1];
+        // Faulted: dead backup excluded under degrade, same verdicts.
+        let (m, hist) = run_workload(StrategyKind::SmOb, 2);
+        let full = &m.backup(0).ledger;
+        let empty = DurabilityLog::new(true);
+        let crash = full.horizon();
+        let tl = FaultTimeline::new(2, vec![(0, 1, false)]);
+        let pair = [full, &empty];
+        let old = check_faulted_group_crash(
+            &pair,
+            &hist,
+            &logs,
+            &data,
+            2,
+            OnLoss::Degrade,
+            &tl,
+            crash,
+        )
+        .unwrap();
+        let new = CrashCheck::new(&hist, &logs, &data)
+            .ledgers(&pair)
+            .required(2)
+            .on_loss(OnLoss::Degrade)
+            .faults(&tl)
+            .at(crash)
+            .unwrap();
+        assert_eq!(old, new);
+        // Sharded: per-shard ledger groups over the routing map.
+        let sharding = ShardingConfig::new(2, ShardMapSpec::Modulo);
+        let mut m = Mirror::try_build_sharded(
+            Platform::default(),
+            StrategyKind::SmOb,
+            None,
+            ReplicationConfig::new(2, AckPolicy::All),
+            FaultsConfig::default(),
+            sharding,
+            true,
+        )
+        .unwrap();
+        let hist = drive_txns(&mut m, 3);
+        let shard_ledgers = m.shard_ledgers();
+        let tls = m.timelines();
+        let old_n = check_sharded_group_crashes(
+            &shard_ledgers,
+            &tls,
+            &hist,
+            &logs,
+            &data,
+            2,
+            OnLoss::Halt,
+            m.shard_map(),
+        )
+        .unwrap();
+        let new_n = CrashCheck::new(&hist, &logs, &data)
+            .shards(&shard_ledgers, &tls, m.shard_map())
+            .required(2)
+            .sweep()
+            .unwrap();
+        assert_eq!(old_n, new_n);
+        // The unsharded timeline knob conflicts with sharded mode.
+        assert!(CrashCheck::new(&hist, &logs, &data)
+            .shards(&shard_ledgers, &tls, m.shard_map())
+            .faults(&tl)
+            .sweep()
+            .is_err());
+    }
+
+    #[test]
+    fn crash_check_annotates_failures_with_the_persist_domain() {
+        use crate::net::PersistDomain;
+        // A fabricated durability violation (dfence claimed before any
+        // write persisted) fails under any domain; a non-default domain
+        // must show up in the error context.
+        let (m, mut hist) = run_workload(StrategyKind::SmOb, 1);
+        hist.dfences[0] = 50;
+        let ledgers = [&m.backup(0).ledger];
+        let logs = [LOG];
+        let data = [D0, D1];
+        let err = CrashCheck::new(&hist, &logs, &data)
+            .ledgers(&ledgers)
+            .persist_domain(PersistDomain::Eadr)
+            .at(50)
+            .unwrap_err();
+        assert!(err.to_string().contains("eadr"), "{err}");
+        let err = CrashCheck::new(&hist, &logs, &data)
+            .ledgers(&ledgers)
+            .at(50)
+            .unwrap_err();
+        assert!(!err.to_string().contains("eadr"), "{err}");
     }
 
     #[test]

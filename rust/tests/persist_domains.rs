@@ -1,0 +1,235 @@
+//! Persist-domain suite (`net::remote::PersistDomain`): the ADR
+//! regression anchor — an explicitly configured `adr` domain is
+//! event-for-event identical (instants included) to the default
+//! construction path, across replica groups, sharded construction and
+//! a faulted plan — plus the verdict-nesting property: at every crash
+//! instant the durable event set under eADR contains ADR's, which
+//! contains RpmemFlush's (completion-implies-persistent widens
+//! verdicts; explicit-flush narrows them).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, MirrorBuilder, ShardingConfig, ThreadCtx};
+use pmsm::net::{FaultsConfig, OnLoss, PersistDomain};
+use pmsm::ptest::{check, Gen};
+
+/// Drive a deterministic single-thread Transact-shaped workload;
+/// returns the thread's final virtual time.
+fn drive(m: &mut Mirror, shape: &[(u32, u32)]) -> u64 {
+    let mut t = ThreadCtx::new(0);
+    for (i, &(epochs, writes)) in shape.iter().enumerate() {
+        m.txn_begin(&mut t, None);
+        for e in 0..epochs {
+            for w in 0..writes {
+                let addr =
+                    0x1000_0000 + ((i as u64 * 7 + e as u64 * 3 + w as u64) % 32) * 64;
+                m.store(&mut t, addr, i as u64);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+        }
+        m.txn_commit(&mut t);
+    }
+    t.now()
+}
+
+/// Per-backup ledger with every coordinate INCLUDING the durability
+/// instant — the full event-for-event projection.
+fn full_events(m: &Mirror, backup: usize) -> Vec<(u32, u64, u64, u64, u32, u64)> {
+    m.backup(backup)
+        .ledger
+        .events()
+        .iter()
+        .map(|e| (e.thread, e.seq, e.addr, e.val, e.epoch, e.at))
+        .collect()
+}
+
+/// The acceptance anchor: `--persist-domain adr` is a guard-clause
+/// pass-through — building with the explicit domain produces the same
+/// thread timeline, the same ledger (instants included) and the same
+/// doorbell count as the pre-domain default path, for every SM
+/// strategy on a single backup.
+#[test]
+fn explicit_adr_is_event_identical_to_the_default_path() {
+    let shape = [(3u32, 2u32), (1, 4), (5, 1)];
+    for kind in [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd] {
+        let mut legacy = Mirror::with_replication(
+            Platform::default(),
+            kind,
+            ReplicationConfig::new(1, AckPolicy::All),
+            true,
+        )
+        .unwrap();
+        let legacy_now = drive(&mut legacy, &shape);
+        let mut pinned = MirrorBuilder::new(Platform::default(), kind)
+            .replication(ReplicationConfig::new(1, AckPolicy::All))
+            .persist_domain(PersistDomain::Adr)
+            .ledger(true)
+            .build()
+            .unwrap();
+        let pinned_now = drive(&mut pinned, &shape);
+        assert_eq!(legacy_now, pinned_now, "{kind:?}: thread timeline diverged");
+        assert_eq!(
+            full_events(&legacy, 0),
+            full_events(&pinned, 0),
+            "{kind:?}: ledger diverged under the explicit adr domain"
+        );
+        assert_eq!(legacy.doorbells(), pinned.doorbells(), "{kind:?}");
+        assert_eq!(legacy.posted_wqes(), pinned.posted_wqes(), "{kind:?}");
+        // The anchor domain never emits the new-domain artifacts.
+        assert_eq!(pinned.flush_verbs(), 0, "{kind:?}: adr issued flush verbs");
+        assert_eq!(pinned.compaction_lines(), 0, "{kind:?}: adr compacted");
+    }
+}
+
+/// The same pin through the sharded constructor (shards = 1, the
+/// default map): explicit adr == default, instants included.
+#[test]
+fn explicit_adr_pins_the_sharded_construction_path() {
+    let shape = [(2u32, 3u32), (4, 1)];
+    let repl = ReplicationConfig::new(2, AckPolicy::All);
+    let mut legacy = Mirror::try_build_sharded(
+        Platform::default(),
+        StrategyKind::SmOb,
+        None,
+        repl,
+        FaultsConfig::default(),
+        ShardingConfig::default(),
+        true,
+    )
+    .unwrap();
+    let legacy_now = drive(&mut legacy, &shape);
+    let mut pinned = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(repl)
+        .sharding(ShardingConfig::default())
+        .persist_domain(PersistDomain::Adr)
+        .ledger(true)
+        .build()
+        .unwrap();
+    let pinned_now = drive(&mut pinned, &shape);
+    assert_eq!(legacy_now, pinned_now, "thread timeline diverged");
+    for b in 0..2 {
+        assert_eq!(
+            full_events(&legacy, b),
+            full_events(&pinned, b),
+            "backup {b}: ledger diverged"
+        );
+    }
+    assert_eq!(legacy.doorbells(), pinned.doorbells());
+}
+
+/// The pin under failure dynamics: one kill mid-run on a quorum group
+/// behaves identically with the domain spelled out — survivors' and the
+/// dead backup's ledgers match event-for-event, instants included.
+#[test]
+fn explicit_adr_pins_a_faulted_plan() {
+    let shape = [(3u32, 2u32), (3, 2), (3, 2), (3, 2)];
+    let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+    let faults = FaultsConfig::with_plan("kill:1@40000", OnLoss::Degrade).unwrap();
+    let mut legacy = Mirror::try_build_sharded(
+        Platform::default(),
+        StrategyKind::SmOb,
+        None,
+        repl,
+        faults.clone(),
+        ShardingConfig::default(),
+        true,
+    )
+    .unwrap();
+    let legacy_now = drive(&mut legacy, &shape);
+    let mut pinned = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(repl)
+        .faults(faults)
+        .persist_domain(PersistDomain::Adr)
+        .ledger(true)
+        .build()
+        .unwrap();
+    let pinned_now = drive(&mut pinned, &shape);
+    assert_eq!(legacy_now, pinned_now, "thread timeline diverged");
+    for b in 0..3 {
+        assert_eq!(
+            full_events(&legacy, b),
+            full_events(&pinned, b),
+            "backup {b}: ledger diverged under the faulted plan"
+        );
+    }
+    assert_eq!(legacy.doorbells(), pinned.doorbells());
+}
+
+/// Verdict nesting: run the same workload under each domain and compare
+/// the durable event set at crash instants. Per replicated event the
+/// persist instants order eADR <= ADR <= RpmemFlush, so at EVERY crash
+/// point the verdict sets nest eADR >= ADR >= RpmemFlush; random crash
+/// points spot-check the set statement itself.
+#[test]
+fn prop_verdict_sets_nest_eadr_adr_rpmem() {
+    check("persist-domain-verdict-nesting", 15, |g: &mut Gen| {
+        let kind = *g.pick(&[StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd]);
+        let backups = g.usize(1, 2);
+        let txns = g.u64(1, 4);
+        let shape: Vec<(u32, u32)> = (0..txns)
+            .map(|_| (g.u64(1, 5) as u32, g.u64(1, 6) as u32))
+            .collect();
+        let run = |domain: PersistDomain| -> Mirror {
+            let mut m = MirrorBuilder::new(Platform::default(), kind)
+                .replication(ReplicationConfig::new(backups, AckPolicy::All))
+                .persist_domain(domain)
+                .ledger(true)
+                .build()
+                .unwrap();
+            drive(&mut m, &shape);
+            m
+        };
+        let eadr = run(PersistDomain::Eadr);
+        let adr = run(PersistDomain::Adr);
+        let rpmem = run(PersistDomain::RpmemFlush);
+        for b in 0..backups {
+            let key_at = |m: &Mirror| -> BTreeMap<(u32, u64), u64> {
+                m.backup(b)
+                    .ledger
+                    .events()
+                    .iter()
+                    .map(|e| ((e.thread, e.seq), e.at))
+                    .collect()
+            };
+            let (we, wa, wr) = (key_at(&eadr), key_at(&adr), key_at(&rpmem));
+            // Every domain replicates the same committed event set —
+            // only the persist instants move.
+            let keys: BTreeSet<_> = wa.keys().copied().collect();
+            assert_eq!(keys, we.keys().copied().collect(), "{kind:?} backup {b}");
+            assert_eq!(keys, wr.keys().copied().collect(), "{kind:?} backup {b}");
+            // Instant ordering — the strong form that implies nesting at
+            // every conceivable crash point.
+            for (k, &at_adr) in &wa {
+                assert!(
+                    we[k] <= at_adr,
+                    "{kind:?} backup {b} {k:?}: eadr persisted later ({} > {at_adr})",
+                    we[k]
+                );
+                assert!(
+                    at_adr <= wr[k],
+                    "{kind:?} backup {b} {k:?}: rpmem persisted earlier ({} < {at_adr})",
+                    wr[k]
+                );
+            }
+            // And the verdict-set statement at random crash instants.
+            let horizon = wr.values().max().copied().unwrap_or(0) + 1_000;
+            for _ in 0..8 {
+                let crash = g.u64(0, horizon);
+                let durable = |w: &BTreeMap<(u32, u64), u64>| -> BTreeSet<(u32, u64)> {
+                    w.iter().filter(|&(_, &at)| at <= crash).map(|(&k, _)| k).collect()
+                };
+                let (se, sa, sr) = (durable(&we), durable(&wa), durable(&wr));
+                assert!(
+                    sr.is_subset(&sa),
+                    "{kind:?} backup {b} crash {crash}: rpmem verdicts escape adr's"
+                );
+                assert!(
+                    sa.is_subset(&se),
+                    "{kind:?} backup {b} crash {crash}: adr verdicts escape eadr's"
+                );
+            }
+        }
+    });
+}
