@@ -58,6 +58,10 @@ COUNTER_KEYS = (
     "flush_verbs",
     "compaction_lines",
     "volatile_window_ns",
+    "chose_ob",
+    "chose_dd",
+    "adaptive_switches",
+    "feedback_samples",
 )
 BENCHES_REQUIRING_COUNTERS = {
     "fig9_batching": ("doorbells", "posted_wqes", "busy_ns"),
@@ -88,6 +92,13 @@ BENCHES_REQUIRING_COUNTERS = {
         "volatile_window_ns",
         "doorbells",
         "txns_committed",
+    ),
+    "fig14_adaptive": (
+        "chose_ob",
+        "chose_dd",
+        "adaptive_switches",
+        "txns_committed",
+        "busy_ns",
     ),
 }
 
@@ -166,6 +177,13 @@ def check_result(
             f"{where}: flush_verbs ({flush_verbs}) exceed doorbells ({doorbells}) — "
             "a flush verb only counts when it drains staged volatile lines, "
             "so every flush rides a rung doorbell"
+        )
+    switches = result.get("adaptive_switches")
+    if isinstance(switches, int) and isinstance(txns, int) and switches > txns:
+        errors.append(
+            f"{where}: adaptive_switches ({switches}) exceed txns_committed "
+            f"({txns}) — the controller applies at most one knob-vector "
+            "change per transaction begin"
         )
     return errors
 

@@ -30,6 +30,16 @@ P_WIRE_LINE = 15  # serialization of each extra line in a scatter-gather span (n
 
 N_PARAMS = 16
 
+# Extended parameter vector (f32[18]) for the knob-aware adaptive model
+# `predict(epochs, writes, backups, quorum, batch_cap)` — the legacy 16
+# slots plus the staged-pipeline CPU cost split the batch-cap knob
+# amortizes (rust/src/config/platform.rs::to_param_vec_ext mirrors the
+# same indices; see latency_knob_ref in ref.py).
+P_DOORBELL = 16  # MMIO doorbell CPU cost per flushed chain (ns)
+P_WQE_STAGE = 17  # CPU cost to build/stage one WQE in host memory (ns)
+
+N_PARAMS_EXT = 18
+
 # Strategy indices in the kernel output lat[n, 4].
 S_NOSM = 0
 S_RC = 1
@@ -58,4 +68,13 @@ def default_params():
     p[P_NT_SERIAL] = 210.0  # PCIe_RT + LLC_MC: non-posted ordered NT write
     p[P_LLC_DDIO_LINES] = 32768.0  # 2 MB / 64 B
     p[P_WIRE_LINE] = 150.0  # = GAP: legacy full per-line wire cost
+    return p
+
+
+def default_params_ext():
+    """Extended f32[18] defaults: the legacy vector plus the doorbell /
+    WQE-stage CPU split (lock-step with Platform::to_param_vec_ext)."""
+    p = default_params() + [0.0] * (N_PARAMS_EXT - N_PARAMS)
+    p[P_DOORBELL] = 20.0
+    p[P_WQE_STAGE] = 10.0
     return p

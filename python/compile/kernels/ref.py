@@ -88,6 +88,56 @@ def latency_ref(e, w, p):
     return jnp.stack([lat_nosm, lat_rc, lat_ob, lat_dd], axis=-1)
 
 
+def latency_knob_ref(e, w, backups, quorum, batch_cap, p):
+    """Knob-aware extension of `latency_ref` for the adaptive control
+    plane: per (epochs, writes, backups, quorum, batch_cap) it predicts
+    the OB/DD per-transaction latency (ns). At `backups = quorum =
+    batch_cap = 1` it reduces *exactly* to the SM-OB/SM-DD columns of
+    `latency_ref` — the legacy model is the calibration baseline and the
+    extension adds only the marginal knob terms (mirrors
+    rust/src/runtime/mod.rs::fallback_knob_predictor):
+
+    * fan-out CPU: each line charges `b*(stage + doorbell/c)` of primary
+      CPU against the 1-backup eager baseline `stage + doorbell` the
+      legacy model folds into its calibration;
+    * staging deferral: lines still staged when the blocking fence
+      flushes serialize their wire issue into the fence wait (one `gap`
+      each); SM-OB's per-epoch ordering fences flush, so only the last
+      epoch's residual defers, while SM-DD stages across the whole txn;
+    * quorum tail: the fence verb fans out serially, so waiting for the
+      k-th completion adds ~(k-1) issue gaps.
+
+    Args:
+      e, w: f32[n] — epochs per transaction, writes per epoch.
+      backups, quorum, batch_cap: f32[n] or scalar — the knob vector.
+      p: f32[18] — extended parameter vector (see params.py).
+
+    Returns:
+      f32[n, 2] — latency for [SM-OB, SM-DD] at the given knobs.
+    """
+    e = jnp.asarray(e, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    p = jnp.asarray(p, jnp.float32)
+    b = jnp.maximum(jnp.asarray(backups, jnp.float32), 1.0)
+    n_back = jnp.broadcast_to(b, e.shape)
+    k = jnp.clip(jnp.asarray(quorum, jnp.float32), 1.0, n_back)
+    c = jnp.maximum(jnp.asarray(batch_cap, jnp.float32), 1.0)
+
+    gap = p[P.P_GAP]
+    doorbell = p[P.P_DOORBELL]
+    stage = p[P.P_WQE_STAGE]
+
+    base = latency_ref(e, w, p[: P.N_PARAMS])
+    n = e * w
+    fan_cpu = n * (n_back * (stage + doorbell / c) - (stage + doorbell))
+    q_tail = (k - 1.0) * gap
+    resid_ob = (w - c * jnp.floor(w / c)) * gap
+    resid_dd = (n - c * jnp.floor(n / c)) * gap
+    lat_ob = base[..., P.S_OB] + fan_cpu + resid_ob + q_tail
+    lat_dd = base[..., P.S_DD] + fan_cpu + resid_dd + q_tail
+    return jnp.stack([lat_ob, lat_dd], axis=-1)
+
+
 def slowdowns_ref(e, w, p):
     """Slowdown of each SM strategy over NO-SM. Returns f32[n, 3] ordered
     [SM-RC, SM-OB, SM-DD] (paper Figure 4 series)."""

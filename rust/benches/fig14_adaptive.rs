@@ -1,0 +1,288 @@
+//! Figure-14 bench (ours): the online adaptive mirroring control plane
+//! over a phase-mixed workload — bulk appends (1 epoch x 64 writes),
+//! small update transactions (4 x 1) and hot-line transactions (64 x 2)
+//! back to back. The adaptive cell (`sm-ad` + `[adaptive]` enabled,
+//! backups=2, ack floor quorum:1) re-tunes mode / ack quorum / batch
+//! cap per transaction class; the static grid sweeps every fixed
+//! {SM-OB, SM-DD} x cap {1, 8, 32} x quorum {1, 2} combination over the
+//! same phase mix. Emits `BENCH_fig14_adaptive.json` with `chose_ob` /
+//! `chose_dd` / `adaptive_switches` / `txns_committed` / `busy_ns`
+//! counters per cell; CI's bench-smoke job validates the artifact
+//! (including `adaptive_switches <= txns_committed` on every cell) with
+//! `python/check_bench_json.py`.
+//!
+//! The bench *asserts* the tentpole's acceptance shape:
+//!   * the adaptive cell's makespan tracks EVERY static knob vector
+//!     (within a 5% transient allowance) and strictly beats the worst
+//!     one — no single static config matches per-class tuning over a
+//!     phase-mixed workload;
+//!   * the controller actually mixes modes across the phases (both
+//!     `chose_ob` and `chose_dd` are nonzero) and re-tunes at the phase
+//!     boundaries: the mix's knob vectors are OB/c32 -> DD/c1 -> OB/c32,
+//!     so `2 <= adaptive_switches <= txns_committed`;
+//!   * the quorum axis never undercuts the configured floor, and with
+//!     headroom (floor 1 of 2 backups) the controller settles on the
+//!     floor — the model's quorum tail penalty is monotone in k;
+//!   * phase-pure runs converge per class: (4,1) -> SM-DD at cap 1,
+//!     (1,64) and (64,2) -> SM-OB at cap 32. Convergence asserts are
+//!     dominance-based (>= 90% of decisions) — the first decisions of a
+//!     class ride the uncorrected model, and the class-correction EWMA
+//!     allows a short exploration transient before feedback pins the
+//!     steady-state cell.
+//!
+//! Run: `cargo bench --bench fig14_adaptive`
+//! Scale with PMSM_BENCH_TXNS (default 400 phase-1 transactions per
+//! cell) and PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, AdaptiveConfig, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::MirrorBuilder;
+use pmsm::metrics::report::Table;
+use pmsm::net::FlushPolicy;
+use pmsm::runtime::{fallback_knob_predictor, fallback_predictor};
+use pmsm::workloads::transact::{run_phased_on, Phase};
+
+const BACKUPS: usize = 2;
+const FLOOR: usize = 1;
+const MODES: [StrategyKind; 2] = [StrategyKind::SmOb, StrategyKind::SmDd];
+const CAPS: [usize; 3] = [1, 8, 32];
+const QUORUMS: [usize; 2] = [1, 2];
+const SEED: u64 = 42;
+
+/// The phase mix: writes/txn differ by 30x across phases, so the
+/// per-phase txn counts are scaled to keep each phase's wall share
+/// comparable. Ordered so consecutive phases want distinct knob
+/// vectors (OB/c32 -> DD/c1 -> OB/c32): each boundary is a real
+/// applied-knob switch.
+fn phases(txns: u64) -> [Phase; 3] {
+    [
+        Phase { epochs: 1, writes: 64, txns: (txns / 8).max(20) },
+        Phase { epochs: 4, writes: 1, txns },
+        Phase { epochs: 64, writes: 2, txns: (txns / 16).max(10) },
+    ]
+}
+
+/// One fixed knob vector over the full phase mix.
+fn static_cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    quorum: usize,
+    cap: usize,
+    mix: &[Phase],
+) -> RunOutcome {
+    let mut m = MirrorBuilder::new(plat.clone(), kind)
+        .replication(ReplicationConfig::new(BACKUPS, AckPolicy::Quorum(quorum)))
+        .batching(FlushPolicy::Cap(cap))
+        .build()
+        .expect("valid static cell");
+    run_phased_on(&mut m, mix, 1, SEED)
+}
+
+/// The adaptive control plane over the same phases (quorum floor 1).
+fn adaptive_cell(plat: &Platform, mix: &[Phase]) -> RunOutcome {
+    let mut m = MirrorBuilder::new(plat.clone(), StrategyKind::SmAd)
+        .replication(ReplicationConfig::new(BACKUPS, AckPolicy::Quorum(FLOOR)))
+        .predictor(fallback_predictor(plat))
+        .knob_predictor(fallback_knob_predictor(plat))
+        .adaptive(AdaptiveConfig::enabled())
+        .build()
+        .expect("valid adaptive cell");
+    run_phased_on(&mut m, mix, 1, SEED)
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let plat = Platform::default();
+    let mix = phases(txns);
+    let total_txns: u64 = mix.iter().map(|p| p.txns).sum();
+
+    // ---- The static grid vs the adaptive cell over the phase mix.
+    let mut t = Table::new(&["config", "makespan", "vs adaptive"]);
+    let adapt = adaptive_cell(&plat, &mix);
+    assert_eq!(adapt.txns, total_txns, "every phase's txns must commit");
+    let d = &adapt.decisions;
+    assert!(d.chose_ob > 0, "the mix must route some txns to OB");
+    assert!(d.chose_dd > 0, "the mix must route some txns to DD");
+    assert!(
+        d.adaptive_switches >= 2,
+        "phase boundaries with distinct knob vectors need >= 2 switches, got {}",
+        d.adaptive_switches
+    );
+    assert!(
+        d.adaptive_switches <= adapt.txns,
+        "switches {} exceed committed txns {}",
+        d.adaptive_switches,
+        adapt.txns
+    );
+    assert!(
+        d.feedback_samples > 0,
+        "feedback is enabled: measured commit latencies must land"
+    );
+    // Quorum floor: never undercut (hard invariant), and k=1 has
+    // strictly less model tail than k=2, so the controller settles on
+    // the floor (dominance — early feedback may explore briefly).
+    assert!(
+        d.quorum_hist.iter().take(FLOOR).all(|&n| n == 0),
+        "decisions below the quorum floor: {:?}",
+        d.quorum_hist
+    );
+    let decisions_total = d.chose_ob + d.chose_dd;
+    assert!(
+        d.quorum_hist.get(FLOOR).copied().unwrap_or(0) * 10 >= decisions_total * 9,
+        "quorum headroom never beats the floor's tail: {:?}",
+        d.quorum_hist
+    );
+    t.row(vec![
+        "sm-ad adaptive".to_string(),
+        format!("{:.3} ms", adapt.makespan as f64 / 1e6),
+        "1.00x".to_string(),
+    ]);
+
+    let mut worst: Option<u64> = None;
+    for &kind in &MODES {
+        for &quorum in &QUORUMS {
+            for &cap in &CAPS {
+                let out = static_cell(&plat, kind, quorum, cap, &mix);
+                assert_eq!(out.txns, total_txns, "{kind}/k{quorum}/c{cap}");
+                assert_eq!(
+                    out.decisions.adaptive_switches, 0,
+                    "{kind}: static cells never switch"
+                );
+                // The acceptance gate: adaptive tracks every static
+                // config (5% transient allowance for the first txn of
+                // each class, decided before any feedback).
+                assert!(
+                    adapt.makespan as f64 <= out.makespan as f64 * 1.05,
+                    "adaptive {} > static {kind}/k{quorum}/c{cap} {} + 5%",
+                    adapt.makespan,
+                    out.makespan
+                );
+                worst = Some(worst.map_or(out.makespan, |w| w.max(out.makespan)));
+                t.row(vec![
+                    format!("{kind} k={quorum} cap={cap}"),
+                    format!("{:.3} ms", out.makespan as f64 / 1e6),
+                    format!("{:.2}x", out.makespan as f64 / adapt.makespan as f64),
+                ]);
+            }
+        }
+    }
+    let worst = worst.expect("static grid is nonempty");
+    assert!(
+        adapt.makespan < worst,
+        "adaptive {} must strictly beat the worst static {}",
+        adapt.makespan,
+        worst
+    );
+    println!(
+        "Figure 14 — adaptive control plane over a phase-mixed workload \
+         ({} txns: 4x1 / 1x64 / 64x2, backups={BACKUPS}, floor quorum:{FLOOR})\n{}",
+        total_txns,
+        t.render()
+    );
+    println!(
+        "adaptive decisions: {} ob / {} dd, {} switches, quorum hist {:?}, \
+         cap hist {:?}, {} feedback samples, mean model err {:.1}%",
+        d.chose_ob,
+        d.chose_dd,
+        d.adaptive_switches,
+        d.quorum_hist,
+        d.cap_hist,
+        d.feedback_samples,
+        d.mean_err_pct()
+    );
+
+    // ---- Per-phase convergence: a phase-pure run settles on that
+    // class's knob vector. Dominance (>= 90%) rather than exactness:
+    // the class-correction EWMA lags for the first samples, which can
+    // admit a short exploration transient before feedback pins the
+    // steady-state cell.
+    for (phase, want_dd, want_cap) in [
+        (Phase { epochs: 4, writes: 1, txns: 60 }, true, 1usize),
+        (Phase { epochs: 1, writes: 64, txns: 30 }, false, 32),
+        (Phase { epochs: 64, writes: 2, txns: 20 }, false, 32),
+    ] {
+        let out = adaptive_cell(&plat, &[phase]);
+        let d = &out.decisions;
+        let (chosen, other) = if want_dd {
+            (d.chose_dd, d.chose_ob)
+        } else {
+            (d.chose_ob, d.chose_dd)
+        };
+        assert_eq!(
+            chosen + other,
+            phase.txns,
+            "{}x{}: one decision per txn",
+            phase.epochs, phase.writes
+        );
+        assert!(
+            chosen * 10 >= phase.txns * 9,
+            "{}x{}: class optimum must dominate (ob {} dd {})",
+            phase.epochs, phase.writes, d.chose_ob, d.chose_dd
+        );
+        assert!(
+            d.adaptive_switches <= 4,
+            "{}x{}: a pure class re-tunes at most transiently, got {} switches",
+            phase.epochs, phase.writes, d.adaptive_switches
+        );
+        let on_cap = d
+            .cap_hist
+            .iter()
+            .find(|(c, _)| *c == want_cap)
+            .map(|&(_, n)| n)
+            .unwrap_or(0);
+        assert!(
+            on_cap * 10 >= phase.txns * 9,
+            "{}x{}: batch cap converges to {} (hist {:?})",
+            phase.epochs, phase.writes, want_cap, d.cap_hist
+        );
+    }
+    println!("per-phase convergence: 4x1 -> dd/c1, 1x64 -> ob/c32, 64x2 -> ob/c32");
+
+    // ---- Simulator throughput (perf tracking): the adaptive cell plus
+    // two static anchors, each annotated with its decision counters.
+    let mut b = Bencher::new();
+    let mut counters = (0u64, 0u64, 0u64, 0u64, 0u64);
+    b.bench_elems(&format!("phased/{total_txns}/sm-ad/adaptive"), total_txns as f64, || {
+        let out = adaptive_cell(&plat, &mix);
+        counters = (
+            out.decisions.chose_ob,
+            out.decisions.chose_dd,
+            out.decisions.adaptive_switches,
+            out.txns,
+            out.busy_ns,
+        );
+        out
+    });
+    b.annotate_last(&[
+        ("chose_ob", counters.0),
+        ("chose_dd", counters.1),
+        ("adaptive_switches", counters.2),
+        ("txns_committed", counters.3),
+        ("busy_ns", counters.4),
+        ("feedback_samples", adapt.decisions.feedback_samples),
+    ]);
+    for &(kind, cap) in &[(StrategyKind::SmOb, 32usize), (StrategyKind::SmDd, 1)] {
+        let mut counters = (0u64, 0u64);
+        b.bench_elems(
+            &format!("phased/{total_txns}/{kind}/k1-cap{cap}"),
+            total_txns as f64,
+            || {
+                let out = static_cell(&plat, kind, 1, cap, &mix);
+                counters = (out.txns, out.busy_ns);
+                out
+            },
+        );
+        b.annotate_last(&[
+            ("chose_ob", 0),
+            ("chose_dd", 0),
+            ("adaptive_switches", 0),
+            ("txns_committed", counters.0),
+            ("busy_ns", counters.1),
+        ]);
+    }
+    pmsm::bench::emit_json(&b, "fig14_adaptive");
+}

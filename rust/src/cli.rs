@@ -12,7 +12,9 @@
 //!   * `config`   — print the platform (Table 2).
 //!   * `selftest` — Table 1 + quick invariant checks.
 
-use crate::config::{AckPolicy, Experiment, Platform, ReplicationConfig, StrategyKind};
+use crate::config::{
+    AckPolicy, AdaptiveConfig, Experiment, Platform, ReplicationConfig, StrategyKind,
+};
 use crate::coordinator::{ConcurrencyConfig, MirrorBuilder, ShardingConfig};
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
 use crate::metrics::{GroupReport, ShardedReport};
@@ -21,8 +23,8 @@ use crate::net::{
     PersistDomain,
 };
 use crate::recovery;
-use crate::replication::Predictor;
-use crate::runtime::{fallback_predictor, LatencyModel};
+use crate::replication::{KnobPredictor, Predictor};
+use crate::runtime::{fallback_knob_predictor, fallback_predictor, LatencyModel};
 use crate::workloads::transact::run_transact_on;
 use crate::workloads::whisper::run_whisper_on;
 use crate::workloads::{run_transact, run_whisper, TransactConfig, WhisperApp, WhisperConfig};
@@ -116,6 +118,8 @@ pub fn help_text() -> &'static str {
                  [--coalesce none|combine|sg|full]\n\
                  [--commit-pipelines N --group-fence-ns N]\n\
                  [--persist-domain adr|eadr|rpmem-flush|log-structured]\n\
+                 [--adaptive [on|off] --adaptive-quorum on|off]\n\
+                 [--adaptive-batch on|off --adaptive-feedback on|off]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
@@ -182,6 +186,17 @@ pub fn help_text() -> &'static str {
      lines, volatile-window ns) surface in run stats, group reports\n\
      and bench JSON.\n\
      \n\
+     ADAPTIVE CONTROL: with --strategy sm-ad, --adaptive turns on the\n\
+     online per-class control plane: at each transaction begin the\n\
+     controller picks a knob vector — replication mode (SM-OB/SM-DD),\n\
+     ack quorum k (never below the configured --ack-policy floor) and\n\
+     doorbell batch cap — from the 5-input latency model plus per-class\n\
+     EWMAs of measured commit latency (hysteresis suppresses thrash).\n\
+     --adaptive-quorum / --adaptive-batch / --adaptive-feedback toggle\n\
+     one axis (each implies --adaptive); [adaptive] in --config sets\n\
+     ewma_pct / hysteresis_pct. Disabled (the default), sm-ad is the\n\
+     static per-txn OB/DD pick, event-for-event.\n\
+     \n\
      FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
      backup B at virtual time T (ns). Killed backups leave fan-out and\n\
      ack accounting; --on-loss halt stops at an unsatisfiable fence\n\
@@ -224,12 +239,14 @@ pub struct RunSetup {
     pub batching: BatchingConfig,
     pub coalescing: CoalescingConfig,
     pub concurrency: ConcurrencyConfig,
+    pub adaptive: AdaptiveConfig,
 }
 
 /// Platform + replica-group shape + failure dynamics + sharding +
-/// batching + coalescing + concurrency: `--config` supplies all seven
-/// (via the `[replication]` / `[faults]` / `[sharding]` / `[batching]`
-/// / `[coalescing]` / `[concurrency]` sections); `--backups` /
+/// batching + coalescing + concurrency + adaptive control: `--config`
+/// supplies all eight (via the `[replication]` / `[faults]` /
+/// `[sharding]` / `[batching]` / `[coalescing]` / `[concurrency]` /
+/// `[adaptive]` sections); `--backups` /
 /// `--ack-policy` / `--fault-plan` / `--on-loss` / `--handoff-ns` /
 /// `--resync-line-ns` / `--election-handoff-ns` / `--election-line-ns`
 /// / `--shards` / `--shard-map` / `--flush-policy` / `--batch-cap` /
@@ -249,6 +266,7 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
                 batching: e.batching,
                 coalescing: e.coalescing,
                 concurrency: e.concurrency,
+                adaptive: e.adaptive,
             }
         }
         None => RunSetup {
@@ -259,6 +277,7 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
             batching: BatchingConfig::default(),
             coalescing: CoalescingConfig::default(),
             concurrency: ConcurrencyConfig::default(),
+            adaptive: AdaptiveConfig::default(),
         },
     };
     if let Some(b) = args.get("backups") {
@@ -324,13 +343,44 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
             )
         })?;
     }
+    // `--adaptive` turns the control plane on; the per-axis flags
+    // enable it implicitly (asking for an axis means asking for the
+    // controller) and accept on/off to disable one axis of an
+    // [adaptive] config table.
+    if args.get("adaptive").is_some() {
+        s.adaptive.enabled = parse_switch(args, "adaptive")?;
+    }
+    if args.get("adaptive-quorum").is_some() {
+        s.adaptive.quorum = parse_switch(args, "adaptive-quorum")?;
+        s.adaptive.enabled |= s.adaptive.quorum;
+    }
+    if args.get("adaptive-feedback").is_some() {
+        s.adaptive.feedback = parse_switch(args, "adaptive-feedback")?;
+        s.adaptive.enabled |= s.adaptive.feedback;
+    }
+    if args.get("adaptive-batch").is_some() {
+        s.adaptive.batch = parse_switch(args, "adaptive-batch")?;
+        s.adaptive.enabled |= s.adaptive.batch;
+    }
     s.repl.validate()?;
     s.faults.validate(s.repl.backups)?;
     s.sharding.validate()?;
     s.batching.validate()?;
     s.coalescing.validate_with(s.batching.policy)?;
     s.concurrency.validate()?;
+    s.adaptive.validate()?;
     Ok(s)
+}
+
+/// Parse an on/off CLI switch: bare `--flag` means on; `--flag on|off`
+/// (or true/false) picks a side explicitly.
+fn parse_switch(args: &Args, key: &str) -> Result<bool> {
+    match args.get(key) {
+        None => Ok(false),
+        Some("true") | Some("on") | Some("1") => Ok(true),
+        Some("false") | Some("off") | Some("0") => Ok(false),
+        Some(v) => bail!("--{key} {v}: expected on/off"),
+    }
 }
 
 /// A predictor for `SmAd` (PJRT model if the artifacts load, else the
@@ -348,6 +398,24 @@ fn predictor_for(plat: &Platform, strategy: StrategyKind) -> Result<Option<Predi
     }))
 }
 
+/// The 5-input knob model for the adaptive control plane (PJRT base
+/// curve + analytic quorum/batch margins when the artifacts load, else
+/// the fully closed-form fallback). `None` unless `sm-ad` runs with
+/// `[adaptive]` enabled.
+fn knob_predictor_for(
+    plat: &Platform,
+    strategy: StrategyKind,
+    adaptive: AdaptiveConfig,
+) -> Result<Option<KnobPredictor>> {
+    if strategy != StrategyKind::SmAd || !adaptive.enabled {
+        return Ok(None);
+    }
+    Ok(Some(match LatencyModel::load(plat) {
+        Ok(m) => m.knob_predictor(plat)?,
+        Err(_) => fallback_knob_predictor(plat),
+    }))
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let RunSetup {
         plat,
@@ -357,11 +425,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         batching,
         coalescing,
         concurrency,
+        adaptive,
     } = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
     let threads = args.get_usize("threads", 1)?;
     let predictor = predictor_for(&plat, strategy)?;
+    let knob_predictor = knob_predictor_for(&plat, strategy, adaptive)?;
     let injecting = !faults.plan.is_empty();
     if injecting {
         println!(
@@ -413,15 +483,30 @@ fn cmd_run(args: &Args) -> Result<()> {
     if plat.persist_domain != PersistDomain::Adr {
         println!("persist domain: {} (adr is the paper's anchor)", plat.persist_domain);
     }
+    if adaptive.enabled && strategy == StrategyKind::SmAd {
+        println!(
+            "adaptive: per-class control plane (quorum {}, batch {}, \
+             feedback {}; ewma {}%, hysteresis {}%)",
+            if adaptive.quorum { "on" } else { "off" },
+            if adaptive.batch { "on" } else { "off" },
+            if adaptive.feedback { "on" } else { "off" },
+            adaptive.ewma_pct,
+            adaptive.hysteresis_pct
+        );
+    }
     let mut builder = MirrorBuilder::new(plat, strategy)
         .replication(repl)
         .faults(faults)
         .sharding(sharding)
         .batching(batching.policy)
         .coalescing(coalescing.mode)
-        .concurrency(concurrency);
+        .concurrency(concurrency)
+        .adaptive(adaptive);
     if let Some(p) = predictor {
         builder = builder.predictor(p);
+    }
+    if let Some(p) = knob_predictor {
+        builder = builder.knob_predictor(p);
     }
     let mut mirror = builder.build()?;
 
@@ -495,6 +580,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             outcome.volatile_window_ns
         );
     }
+    if outcome.decisions.chose_ob + outcome.decisions.chose_dd > 0 {
+        let d = &outcome.decisions;
+        println!(
+            "  adaptive      : {} ob / {} dd, {} switch(es), {} feedback \
+             sample(s), mean model err {:.1}%",
+            d.chose_ob,
+            d.chose_dd,
+            d.adaptive_switches,
+            d.feedback_samples,
+            d.mean_err_pct()
+        );
+    }
     if concurrency.enabled() {
         println!(
             "  fences        : {} issued + {} piggybacked ({:.2}/txn)",
@@ -533,7 +630,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if sharding.shards > 1 {
         print!("{}", ShardedReport::from_mirror(&mirror).render());
     } else if repl.backups > 1 || injecting {
-        print!("{}", GroupReport::from_fabric(mirror.fabric()).render());
+        let mut r = GroupReport::from_fabric(mirror.fabric());
+        r.set_decisions(&mirror.decision_stats());
+        print!("{}", r.render());
     }
     Ok(())
 }
@@ -741,6 +840,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
         batching,
         coalescing,
         concurrency,
+        adaptive,
     } = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
@@ -758,6 +858,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
         .batching(batching.policy)
         .coalescing(coalescing.mode)
         .concurrency(concurrency)
+        .adaptive(adaptive)
         .ledger(true)
         .build()?;
     let mut t = ThreadCtx::new(0);
@@ -1395,6 +1496,70 @@ mod tests {
             "recover", "--strategy", "sm-ob", "--txns", "4", "--backups", "3",
             "--ack-policy", "quorum:2", "--fault-plan", "kill:2@20000",
             "--persist-domain", "rpmem-flush",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn cli_adaptive_flags_roundtrip() {
+        // Off by default.
+        let a = setup_from(&Args::parse(&argv(&["run"]))).unwrap().adaptive;
+        assert_eq!(a, AdaptiveConfig::default());
+        assert!(!a.enabled);
+        // Bare --adaptive enables with all axes on.
+        let a = setup_from(&Args::parse(&argv(&["run", "--adaptive"]))).unwrap().adaptive;
+        assert!(a.enabled && a.quorum && a.batch && a.feedback);
+        // A per-axis off survives; asking for an axis implies enabled.
+        let a = setup_from(&Args::parse(&argv(&[
+            "run", "--adaptive", "--adaptive-quorum", "off",
+        ])))
+        .unwrap()
+        .adaptive;
+        assert!(a.enabled && !a.quorum && a.batch);
+        let a = setup_from(&Args::parse(&argv(&["run", "--adaptive-feedback", "on"])))
+            .unwrap()
+            .adaptive;
+        assert!(a.enabled && a.feedback);
+        // Junk values fail naming the flag.
+        let err = setup_from(&Args::parse(&argv(&["run", "--adaptive", "maybe"])))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("--adaptive maybe"), "{err:#}");
+        // CLI overrides the [adaptive] config table; tuning knobs keep
+        // the file's values.
+        let dir = std::env::temp_dir().join("pmsm_cli_adaptive_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[adaptive]\nenabled = true\newma_pct = 35\nhysteresis_pct = 5\n",
+        )
+        .unwrap();
+        let path = path.to_str().unwrap();
+        let a = setup_from(&Args::parse(&argv(&["run", "--config", path])))
+            .unwrap()
+            .adaptive;
+        assert!(a.enabled);
+        assert_eq!(a.ewma_pct, 35);
+        let a = setup_from(&Args::parse(&argv(&["run", "--config", path, "--adaptive", "off"])))
+            .unwrap()
+            .adaptive;
+        assert!(!a.enabled, "--adaptive off overrides the TOML");
+        assert_eq!(a.hysteresis_pct, 5, "tuning keeps the TOML value");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn run_command_adaptive_smoke() {
+        // The full control plane (quorum + batch + feedback) completes
+        // end-to-end over a replica group with quorum headroom.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ad", "--txns", "40", "--backups", "2",
+            "--ack-policy", "quorum:1", "--adaptive",
+        ]))
+        .unwrap();
+        // Disabled default: sm-ad still runs the static path.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ad", "--txns", "20", "--backups", "2",
         ]))
         .unwrap();
     }

@@ -1,0 +1,128 @@
+//! `[adaptive]` section: the online adaptive mirroring control plane.
+//!
+//! When enabled, SM-AD grows from a static two-way OB/DD switch into a
+//! per-transaction-class controller that picks a full knob vector —
+//! replication mode, ack quorum, doorbell batch cap — from the extended
+//! analytic cost model ([`crate::runtime::fallback_knob_predictor`]),
+//! corrected online by per-class EWMAs of *measured* commit latency.
+//! Disabled (the default) is the regression anchor: SM-AD runs the
+//! original static predictor path event-for-event.
+
+use anyhow::{bail, Result};
+
+/// Online adaptive control-plane knobs (`[adaptive]` TOML section).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdaptiveConfig {
+    /// Master switch. `false` (default) keeps SM-AD on the static
+    /// two-input predictor path — the event-for-event anchor.
+    pub enabled: bool,
+    /// Tune the per-transaction ack quorum within
+    /// `[configured policy, all]`. The configured policy is a floor:
+    /// the controller can only *raise* the acks a commit waits for,
+    /// never weaken the user's durability contract.
+    pub quorum: bool,
+    /// Tune the per-transaction doorbell batch cap (overrides the
+    /// `[batching]` flush policy for the transaction's duration).
+    pub batch: bool,
+    /// Online feedback: per-(class, knob-cell) EWMAs of measured
+    /// commit latency replace the model's prediction for cells with
+    /// data, and a per-class scale correction transfers the observed
+    /// model error to unmeasured cells.
+    pub feedback: bool,
+    /// EWMA weight of a new measurement, percent (1..=100).
+    pub ewma_pct: u32,
+    /// Hysteresis guard band, percent (0..=100): the controller leaves
+    /// a class's current knob vector only when the best candidate's
+    /// corrected score improves on it by more than this margin, so
+    /// borderline classes don't thrash between near-tied cells.
+    pub hysteresis_pct: u32,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: false,
+            quorum: true,
+            batch: true,
+            feedback: true,
+            ewma_pct: 20,
+            hysteresis_pct: 10,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// An enabled config with the default tuning knobs.
+    pub fn enabled() -> Self {
+        AdaptiveConfig {
+            enabled: true,
+            ..Default::default()
+        }
+    }
+
+    /// EWMA weight as a fraction.
+    pub fn alpha(&self) -> f32 {
+        self.ewma_pct as f32 / 100.0
+    }
+
+    /// Hysteresis guard band as a fraction.
+    pub fn guard(&self) -> f32 {
+        self.hysteresis_pct as f32 / 100.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.ewma_pct < 1 || self.ewma_pct > 100 {
+            bail!(
+                "adaptive.ewma_pct must be in 1..=100, got {}",
+                self.ewma_pct
+            );
+        }
+        if self.hysteresis_pct > 100 {
+            bail!(
+                "adaptive.hysteresis_pct must be in 0..=100, got {}",
+                self.hysteresis_pct
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_disabled_anchor() {
+        let cfg = AdaptiveConfig::default();
+        assert!(!cfg.enabled);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn enabled_turns_all_knobs_on() {
+        let cfg = AdaptiveConfig::enabled();
+        assert!(cfg.enabled && cfg.quorum && cfg.batch && cfg.feedback);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn fractions() {
+        let cfg = AdaptiveConfig::default();
+        assert!((cfg.alpha() - 0.20).abs() < 1e-6);
+        assert!((cfg.guard() - 0.10).abs() < 1e-6);
+    }
+
+    #[test]
+    fn validate_rejects_bad_percentages() {
+        let mut cfg = AdaptiveConfig::default();
+        cfg.ewma_pct = 0;
+        assert!(cfg.validate().is_err());
+        cfg.ewma_pct = 101;
+        assert!(cfg.validate().is_err());
+        cfg.ewma_pct = 100;
+        cfg.hysteresis_pct = 101;
+        assert!(cfg.validate().is_err());
+        cfg.hysteresis_pct = 0;
+        cfg.validate().unwrap();
+    }
+}

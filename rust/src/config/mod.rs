@@ -6,9 +6,11 @@
 //! parameters and Table 2 platform, and are kept in lock-step with
 //! `python/compile/kernels/params.py` (the AOT model's parameter vector).
 
+pub mod adaptive;
 pub mod platform;
 pub mod toml;
 
+pub use adaptive::AdaptiveConfig;
 pub use platform::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
 pub use crate::net::PersistDomain;
 
@@ -58,6 +60,10 @@ pub struct Experiment {
     /// pipelines per shard + cross-thread group-fence window; defaults
     /// to one pipeline and no window — the serial commit path).
     pub concurrency: ConcurrencyConfig,
+    /// Online adaptive control plane (`[adaptive]` section: per-class
+    /// mode/quorum/batch tuning with measured-latency feedback;
+    /// defaults to disabled — the static SM-AD predictor path).
+    pub adaptive: AdaptiveConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -80,6 +86,7 @@ impl Default for Experiment {
             batching: BatchingConfig::default(),
             coalescing: CoalescingConfig::default(),
             concurrency: ConcurrencyConfig::default(),
+            adaptive: AdaptiveConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -210,6 +217,35 @@ impl Experiment {
         exp.concurrency
             .validate()
             .context("invalid [concurrency] section")?;
+        if let Some(v) = doc.get("adaptive.enabled") {
+            exp.adaptive.enabled = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("adaptive.quorum") {
+            exp.adaptive.quorum = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("adaptive.batch") {
+            exp.adaptive.batch = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("adaptive.feedback") {
+            exp.adaptive.feedback = v.as_bool()?;
+        }
+        if let Some(v) = doc.get("adaptive.ewma_pct") {
+            let n = v.as_int()?;
+            if n < 1 || n > 100 {
+                bail!("adaptive.ewma_pct must be in 1..=100, got {n}");
+            }
+            exp.adaptive.ewma_pct = n as u32;
+        }
+        if let Some(v) = doc.get("adaptive.hysteresis_pct") {
+            let n = v.as_int()?;
+            if n < 0 || n > 100 {
+                bail!("adaptive.hysteresis_pct must be in 0..=100, got {n}");
+            }
+            exp.adaptive.hysteresis_pct = n as u32;
+        }
+        exp.adaptive
+            .validate()
+            .context("invalid [adaptive] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -613,6 +649,41 @@ group_fence_ns = 2600
         assert!(Experiment::from_str("[concurrency]\ncommit_pipelines = -2").is_err());
         assert!(Experiment::from_str("[concurrency]\ncommit_pipelines = 65").is_err());
         assert!(Experiment::from_str("[concurrency]\ngroup_fence_ns = -1").is_err());
+    }
+
+    #[test]
+    fn adaptive_section_roundtrip() {
+        let text = r#"
+[adaptive]
+enabled = true
+quorum = false
+feedback = true
+ewma_pct = 35
+hysteresis_pct = 5
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert!(exp.adaptive.enabled);
+        assert!(!exp.adaptive.quorum);
+        assert!(exp.adaptive.batch, "batch keeps its default");
+        assert!(exp.adaptive.feedback);
+        assert_eq!(exp.adaptive.ewma_pct, 35);
+        assert_eq!(exp.adaptive.hysteresis_pct, 5);
+    }
+
+    #[test]
+    fn adaptive_defaults_to_disabled_when_section_missing() {
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.adaptive, AdaptiveConfig::default());
+        assert!(!exp.adaptive.enabled);
+    }
+
+    #[test]
+    fn adaptive_section_rejects_bad_shapes() {
+        assert!(Experiment::from_str("[adaptive]\newma_pct = 0").is_err());
+        assert!(Experiment::from_str("[adaptive]\newma_pct = 101").is_err());
+        assert!(Experiment::from_str("[adaptive]\nhysteresis_pct = -1").is_err());
+        assert!(Experiment::from_str("[adaptive]\nhysteresis_pct = 200").is_err());
+        assert!(Experiment::from_str("[adaptive]\nenabled = 3").is_err());
     }
 
     #[test]

@@ -338,6 +338,22 @@ impl Platform {
         p
     }
 
+    /// The extended f32[18] parameter vector for the knob-aware latency
+    /// model (`predict(epochs, writes, backups, quorum, batch_cap)` —
+    /// see [`crate::runtime::fallback_knob_predictor`]): the legacy 16
+    /// slots followed by the staged-pipeline CPU cost split the batching
+    /// knob amortizes. Indices must match
+    /// `python/compile/kernels/params.py` (`P_DOORBELL` /
+    /// `P_WQE_STAGE`).
+    pub fn to_param_vec_ext(&self) -> [f32; 18] {
+        let base = self.to_param_vec();
+        let mut p = [0f32; 18];
+        p[..16].copy_from_slice(&base);
+        p[16] = self.doorbell_ns as f32;
+        p[17] = self.wqe_stage_ns as f32;
+        p
+    }
+
     /// Override fields from a parsed config document (`[platform]` table).
     pub fn from_doc(doc: &Doc) -> Result<Self> {
         let mut p = Platform::default();
@@ -545,6 +561,19 @@ mod tests {
         let mut p = Platform::default();
         p.slice_masks = vec![1];
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn ext_param_vec_extends_the_legacy_vector() {
+        // Lock-step with python/compile/kernels/params.py: the first 16
+        // slots are the legacy vector unchanged, then the doorbell /
+        // stage split (P_DOORBELL = 16, P_WQE_STAGE = 17).
+        let plat = Platform::default();
+        let base = plat.to_param_vec();
+        let ext = plat.to_param_vec_ext();
+        assert_eq!(&ext[..16], &base[..]);
+        assert_eq!(ext[16], 20.0); // doorbell_ns
+        assert_eq!(ext[17], 10.0); // wqe_stage_ns
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod shard;
 pub use pipeline::{ConcurrencyConfig, MAX_PIPELINES};
 pub use shard::{ShardMap, ShardMapSpec, ShardingConfig};
 
-use crate::config::{Platform, ReplicationConfig, StrategyKind};
+use crate::config::{AdaptiveConfig, Platform, ReplicationConfig, StrategyKind};
 use crate::mem::DurabilityLog;
 use crate::metrics::LogHistogram;
 use crate::net::{
@@ -45,7 +45,9 @@ use crate::net::{
     FaultTimeline, FaultsConfig, FlushPolicy, PersistDomain, RemoteEngine, Stall,
     WriteMeta,
 };
-use crate::replication::{self, Predictor, Strategy, TxnShape};
+use crate::replication::{
+    self, ControlPlane, DecisionStats, KnobPredictor, Predictor, SmAd, Strategy, TxnShape,
+};
 use crate::sim::{RateLimiter, ThreadClock};
 use crate::util::FastMap;
 use crate::{line_of, Addr, Ns};
@@ -83,6 +85,13 @@ pub struct ThreadCtx {
     /// Busy-time watermark at the last stats reset (steady-state CPU
     /// cost is `clock.busy_ns - busy_zero`).
     pub busy_zero: Ns,
+    /// Instant the current transaction began (commit-latency feedback
+    /// for the adaptive control plane).
+    txn_begin_at: Ns,
+    /// The (shard-scaled) shape hint of the current transaction, echoed
+    /// back to the strategies at commit so feedback lands on the same
+    /// class the decision was made for.
+    txn_hint: Option<TxnShape>,
 }
 
 impl ThreadCtx {
@@ -102,6 +111,8 @@ impl ThreadCtx {
             touched_txn: 0,
             stats_zero_at: 0,
             busy_zero: 0,
+            txn_begin_at: 0,
+            txn_hint: None,
         }
     }
 
@@ -164,6 +175,9 @@ pub struct Mirror {
     /// membership poll on the hot paths (false = guard-clause
     /// pass-through, event-for-event the pre-failover coordinator).
     primary_faults: bool,
+    /// Online adaptive control-plane shape (disabled by default — the
+    /// static SM-AD anchor; see [`crate::replication::adaptive`]).
+    adaptive: AdaptiveConfig,
     /// Load latency from the primary image (ns).
     load_cost: Ns,
 }
@@ -265,6 +279,38 @@ impl Mirror {
         sharding: ShardingConfig,
         ledger: bool,
     ) -> Result<Self> {
+        Self::build_full(
+            plat,
+            kind,
+            predictor,
+            repl,
+            faults,
+            sharding,
+            ledger,
+            AdaptiveConfig::default(),
+            None,
+        )
+    }
+
+    /// The real constructor behind [`Mirror::try_build_sharded`] and
+    /// [`MirrorBuilder::build`]: additionally wires the SM-AD online
+    /// control plane when `[adaptive]` is enabled. `knob_predictor` is
+    /// the knob-aware model (AOT or fallback); `None` with adaptive
+    /// enabled uses [`crate::runtime::fallback_knob_predictor`]. With
+    /// adaptive disabled (the default) both extra arguments are inert
+    /// and the constructor is event-for-event the pre-adaptive path.
+    #[allow(clippy::too_many_arguments)]
+    fn build_full(
+        plat: Platform,
+        kind: StrategyKind,
+        predictor: Option<Predictor>,
+        repl: ReplicationConfig,
+        faults: FaultsConfig,
+        sharding: ShardingConfig,
+        ledger: bool,
+        adaptive: AdaptiveConfig,
+        knob_predictor: Option<KnobPredictor>,
+    ) -> Result<Self> {
         repl.validate()?;
         faults.validate(repl.backups)?;
         sharding.validate()?;
@@ -291,13 +337,23 @@ impl Mirror {
                  plan or sm-ob / sm-dd"
             );
         }
+        adaptive.validate()?;
         // The predictor is a boxed closure; with several shards it is
         // shared behind an Rc so every shard-local SmAd instance
-        // consults the same model.
+        // consults the same model. The knob-aware model of the adaptive
+        // control plane is shared the same way.
         let mut predictor = predictor;
         let shared: Option<Rc<dyn Fn(f32, f32) -> (f32, f32)>> =
             if kind == StrategyKind::SmAd && sharding.shards > 1 {
                 predictor.take().map(Rc::from)
+            } else {
+                None
+            };
+        let wire_control = kind == StrategyKind::SmAd && adaptive.enabled;
+        let mut knob_predictor = knob_predictor;
+        let shared_knob: Option<Rc<dyn Fn(f32, f32, f32, f32, f32) -> (f32, f32)>> =
+            if wire_control && sharding.shards > 1 {
+                knob_predictor.take().map(Rc::from)
             } else {
                 None
             };
@@ -310,7 +366,26 @@ impl Mirror {
                 }
                 None => predictor.take(),
             };
-            let strategy = replication::make_strategy(kind, pred)?;
+            let strategy: Box<dyn Strategy> = if wire_control {
+                let Some(legacy) = pred else {
+                    bail!("SmAd requires a predictor; see runtime::model");
+                };
+                let model: KnobPredictor = match &shared_knob {
+                    Some(rc) => {
+                        let rc = Rc::clone(rc);
+                        Box::new(move |e, w, b, k, c| (*rc)(e, w, b, k, c))
+                    }
+                    None => knob_predictor
+                        .take()
+                        .unwrap_or_else(|| crate::runtime::fallback_knob_predictor(&plat)),
+                };
+                Box::new(SmAd::with_control(
+                    legacy,
+                    ControlPlane::new(adaptive, model, repl.backups, repl.required()),
+                ))
+            } else {
+                replication::make_strategy(kind, pred)?
+            };
             let mut fabric =
                 Fabric::with_faults(&plat, &repl, faults.clone(), ledger).with_shard(s);
             // Primary events are coordinator business: all S shards must
@@ -340,6 +415,7 @@ impl Mirror {
             pipe_wait_ns: 0,
             pipe_busy_ns: 0,
             primary_faults,
+            adaptive,
             load_cost: 5,
         })
     }
@@ -473,6 +549,23 @@ impl Mirror {
     /// The concurrent-primary shape this mirror commits under.
     pub fn concurrency(&self) -> ConcurrencyConfig {
         self.conc
+    }
+
+    /// The adaptive control-plane shape this mirror runs under
+    /// (disabled by default).
+    pub fn adaptive(&self) -> AdaptiveConfig {
+        self.adaptive
+    }
+
+    /// Controller decision/feedback counters aggregated across shards
+    /// (all zeros for fixed strategies and for SM-AD with the control
+    /// plane off, except SM-AD's mode-dwell counts).
+    pub fn decision_stats(&self) -> DecisionStats {
+        let mut d = DecisionStats::default();
+        for lane in &self.lanes {
+            d.add(&lane.strategy.decision_stats());
+        }
+        d
     }
 
     /// Blocking fences that issued their own verb, across all shards.
@@ -832,6 +925,8 @@ impl Mirror {
             epochs: h.epochs,
             writes: h.writes / self.lanes.len() as f32,
         });
+        t.txn_begin_at = t.clock.now;
+        t.txn_hint = hint;
         for lane in &mut self.lanes {
             lane.strategy
                 .on_txn_begin(&mut lane.fabric, &mut t.clock, hint);
@@ -874,6 +969,15 @@ impl Mirror {
         }
         t.txn += 1;
         t.txns_done += 1;
+        // Measured commit latency feedback for the adaptive control
+        // plane (a default no-op on fixed strategies and on SM-AD with
+        // the control plane off): begin-to-durable, the steady-state
+        // signal the controller's EWMAs absorb.
+        let commit_ns = t.clock.now.saturating_sub(t.txn_begin_at);
+        let hint = t.txn_hint;
+        for lane in &mut self.lanes {
+            lane.strategy.on_txn_end(hint, commit_ns);
+        }
     }
 
     /// The primary PM image (golden state for recovery comparison).
@@ -908,6 +1012,8 @@ pub struct MirrorBuilder {
     batching: FlushPolicy,
     coalescing: CoalesceMode,
     concurrency: ConcurrencyConfig,
+    adaptive: AdaptiveConfig,
+    knob_predictor: Option<KnobPredictor>,
     ledger: bool,
 }
 
@@ -923,6 +1029,8 @@ impl MirrorBuilder {
             batching: FlushPolicy::Eager,
             coalescing: CoalesceMode::None,
             concurrency: ConcurrencyConfig::default(),
+            adaptive: AdaptiveConfig::default(),
+            knob_predictor: None,
             ledger: false,
         }
     }
@@ -930,6 +1038,23 @@ impl MirrorBuilder {
     /// Wire the adaptive strategy's predictor (required for `SmAd`).
     pub fn predictor(mut self, p: Predictor) -> Self {
         self.predictor = Some(p);
+        self
+    }
+
+    /// Online adaptive control-plane shape (`[adaptive]`; disabled by
+    /// default — the static SM-AD anchor). Only meaningful with
+    /// `StrategyKind::SmAd`.
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = cfg;
+        self
+    }
+
+    /// Knob-aware latency model for the adaptive control plane
+    /// (`predict(epochs, writes, backups, quorum, batch_cap)`). When
+    /// adaptive is enabled and none is supplied, the closed-form
+    /// [`crate::runtime::fallback_knob_predictor`] is used.
+    pub fn knob_predictor(mut self, p: KnobPredictor) -> Self {
+        self.knob_predictor = Some(p);
         self
     }
 
@@ -993,7 +1118,8 @@ impl MirrorBuilder {
         BatchingConfig::new(self.batching).validate()?;
         CoalescingConfig::new(self.coalescing).validate_with(self.batching)?;
         self.concurrency.validate()?;
-        let mut m = Mirror::try_build_sharded(
+        self.adaptive.validate()?;
+        let mut m = Mirror::build_full(
             self.plat,
             self.kind,
             self.predictor,
@@ -1001,6 +1127,8 @@ impl MirrorBuilder {
             self.faults,
             self.sharding,
             self.ledger,
+            self.adaptive,
+            self.knob_predictor,
         )?;
         m.set_batching(self.batching);
         m.set_coalescing(self.coalescing);

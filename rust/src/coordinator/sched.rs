@@ -11,6 +11,7 @@
 use super::{Mirror, ThreadCtx};
 use crate::metrics::LogHistogram;
 use crate::net::Stall;
+use crate::replication::DecisionStats;
 use crate::Ns;
 
 /// A per-thread transaction source: executes ONE transaction per call and
@@ -154,6 +155,11 @@ pub struct RunOutcome {
     /// fully dead group). When set, the workload did NOT run to
     /// completion.
     pub stalled: Option<Stall>,
+    /// Adaptive control-plane decision/feedback counters, steady state
+    /// (mode dwells, knob-vector switches, per-quorum/per-cap decision
+    /// histograms, model-vs-measured feedback error). All zeros for
+    /// fixed strategies; SM-AD always reports its OB/DD dwells.
+    pub decisions: DecisionStats,
 }
 
 impl RunOutcome {
@@ -276,6 +282,7 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     let flush_verbs_zero = mirror.flush_verbs();
     let compaction_zero = mirror.compaction_lines();
     let volatile_zero = mirror.volatile_window_ns();
+    let decisions_zero = mirror.decision_stats();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
     // the run at the kill point: remaining transactions are abandoned,
@@ -327,6 +334,7 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     out.flush_verbs = mirror.flush_verbs() - flush_verbs_zero;
     out.compaction_lines = mirror.compaction_lines() - compaction_zero;
     out.volatile_window_ns = mirror.volatile_window_ns() - volatile_zero;
+    out.decisions = mirror.decision_stats().minus(&decisions_zero);
     out.span_hist = mirror.span_hist();
     out.per_backup_horizon = mirror.persist_horizons();
     out.per_backup_dead_ns = mirror.accrued_dead_ns(wall);

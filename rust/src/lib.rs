@@ -56,6 +56,16 @@
 //!   (`--coalesce none|combine|sg|full`, `[coalescing]` config key,
 //!   wire-WQE/combined/span metrics, the `fig10_coalescing` bench;
 //!   `none` reproduces the batching pipeline event-for-event);
+//! * an **online adaptive mirroring control plane** growing SM-AD from
+//!   a binary OB/DD chooser into a per-transaction-class controller:
+//!   at each txn begin it picks replication mode, ack quorum (clamped
+//!   to `[configured floor, backups]` — the fence blocks on the k-th
+//!   ack, stragglers complete async) and doorbell batch cap from the
+//!   knob-aware analytic model plus per-class EWMAs of measured commit
+//!   latency with a hysteresis guard ([`replication::adaptive`],
+//!   `[adaptive]` config keys, `--adaptive*` CLI, decision histograms
+//!   in reports and the `fig14_adaptive` bench; disabled — the
+//!   default — reproduces the legacy SM-AD path event-for-event);
 //! * the mirroring coordinator that binds a primary node's persistency
 //!   traffic to the replica groups over the simulated fabric
 //!   ([`coordinator`]);

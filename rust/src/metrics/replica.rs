@@ -9,6 +9,7 @@
 use crate::coordinator::Mirror;
 use crate::metrics::LogHistogram;
 use crate::net::{BackupStats, Fabric, Stall};
+use crate::replication::DecisionStats;
 use crate::util::json;
 use crate::{Ns, LINE};
 
@@ -62,6 +63,10 @@ pub struct GroupReport {
     pub revoked_wqes: u64,
     /// The unsatisfiable fence that stopped the run, if any.
     pub stalled: Option<Stall>,
+    /// Adaptive-controller decision/feedback counters (all zeros unless
+    /// attached via [`GroupReport::set_decisions`]; the fabric does not
+    /// carry them — strategies do).
+    pub decisions: DecisionStats,
 }
 
 impl GroupReport {
@@ -88,7 +93,14 @@ impl GroupReport {
             rereplicated_lines: fabric.rereplicated_lines,
             revoked_wqes: fabric.revoked_wqes,
             stalled: fabric.stall().copied(),
+            decisions: DecisionStats::default(),
         }
+    }
+
+    /// Attach adaptive-controller counters (they live on the strategy
+    /// lanes, not the fabric, so the coordinator supplies them).
+    pub fn set_decisions(&mut self, d: &DecisionStats) {
+        self.decisions = d.clone();
     }
 
     /// Data-path doorbells rung across the group.
@@ -271,6 +283,12 @@ impl GroupReport {
                 self.volatile_window_ns(),
             ));
         }
+        if self.decisions.chose_ob + self.decisions.chose_dd > 0 {
+            out.push_str(&format!(
+                "group: adaptive — {}\n",
+                adaptive_summary(&self.decisions)
+            ));
+        }
         if let Some(stall) = &self.stalled {
             out.push_str(&format!("group: STALLED — {stall}\n"));
         }
@@ -331,9 +349,76 @@ impl GroupReport {
             ("compaction_lines", self.compaction_lines().to_string()),
             ("volatile_window_ns", self.volatile_window_ns().to_string()),
             ("stalled", self.stalled.is_some().to_string()),
+            ("chose_ob", self.decisions.chose_ob.to_string()),
+            ("chose_dd", self.decisions.chose_dd.to_string()),
+            (
+                "adaptive_switches",
+                self.decisions.adaptive_switches.to_string(),
+            ),
+            (
+                "quorum_hist",
+                json::arr(
+                    &self
+                        .decisions
+                        .quorum_hist
+                        .iter()
+                        .map(|n| n.to_string())
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "cap_hist",
+                json::arr(
+                    &self
+                        .decisions
+                        .cap_hist
+                        .iter()
+                        .map(|&(cap, n)| {
+                            json::obj(&[
+                                ("cap", cap.to_string()),
+                                ("count", n.to_string()),
+                            ])
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "feedback_samples",
+                self.decisions.feedback_samples.to_string(),
+            ),
+            ("mean_err_pct", json::num(self.decisions.mean_err_pct())),
             ("backups", json::arr(&backups)),
         ])
     }
+}
+
+/// One-line prose summary of adaptive-controller counters (shared by
+/// the group and sharded renderers).
+fn adaptive_summary(d: &DecisionStats) -> String {
+    let quorums: Vec<String> = d
+        .quorum_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| **n > 0)
+        .map(|(k, n)| format!("k={k}:{n}"))
+        .collect();
+    let caps: Vec<String> = d
+        .cap_hist
+        .iter()
+        .filter(|(_, n)| *n > 0)
+        .map(|(c, n)| format!("c={c}:{n}"))
+        .collect();
+    format!(
+        "{} ob / {} dd, {} switch(es), quorum [{}], cap [{}], \
+         {} feedback sample(s), mean model err {:.1}%",
+        d.chose_ob,
+        d.chose_dd,
+        d.adaptive_switches,
+        quorums.join(" "),
+        caps.join(" "),
+        d.feedback_samples,
+        d.mean_err_pct(),
+    )
 }
 
 /// Sharded rollup: one [`GroupReport`] per shard of a sharded
@@ -343,6 +428,10 @@ pub struct ShardedReport {
     /// Rendered shard map (e.g. `modulo x4`).
     pub map: String,
     pub per_shard: Vec<GroupReport>,
+    /// Node-level adaptive-controller counters (decisions live on the
+    /// strategy lanes, which span shards — so this is captured once per
+    /// mirror, not per shard).
+    pub decisions: DecisionStats,
 }
 
 impl ShardedReport {
@@ -353,6 +442,7 @@ impl ShardedReport {
             per_shard: (0..m.shard_count())
                 .map(|s| GroupReport::from_fabric(m.shard_fabric(s)))
                 .collect(),
+            decisions: m.decision_stats(),
         }
     }
 
@@ -500,6 +590,12 @@ impl ShardedReport {
                 self.total_revoked_wqes(),
             ));
         }
+        if self.decisions.chose_ob + self.decisions.chose_dd > 0 {
+            out.push_str(&format!(
+                "shards: adaptive — {}\n",
+                adaptive_summary(&self.decisions)
+            ));
+        }
         out
     }
 
@@ -507,9 +603,38 @@ impl ShardedReport {
     /// see [`json::SCHEMA_VERSION`]).
     pub fn to_json(&self) -> String {
         let shards: Vec<String> = self.per_shard.iter().map(|r| r.to_json()).collect();
+        let d = &self.decisions;
+        let decisions = json::obj(&[
+            ("chose_ob", d.chose_ob.to_string()),
+            ("chose_dd", d.chose_dd.to_string()),
+            ("adaptive_switches", d.adaptive_switches.to_string()),
+            (
+                "quorum_hist",
+                json::arr(
+                    &d.quorum_hist.iter().map(|n| n.to_string()).collect::<Vec<_>>(),
+                ),
+            ),
+            (
+                "cap_hist",
+                json::arr(
+                    &d.cap_hist
+                        .iter()
+                        .map(|&(cap, n)| {
+                            json::obj(&[
+                                ("cap", cap.to_string()),
+                                ("count", n.to_string()),
+                            ])
+                        })
+                        .collect::<Vec<_>>(),
+                ),
+            ),
+            ("feedback_samples", d.feedback_samples.to_string()),
+            ("mean_err_pct", json::num(d.mean_err_pct())),
+        ]);
         let doc = json::obj(&[
             ("schema_version", json::SCHEMA_VERSION.to_string()),
             ("map", json::esc(&self.map)),
+            ("decisions", decisions),
             ("shards", json::arr(&shards)),
         ]);
         format!("{doc}\n")
@@ -827,6 +952,48 @@ mod tests {
         assert_eq!(r.flush_verbs(), 0);
         assert!(r.render().contains("domain adr"), "{}", r.render());
         assert!(!r.render().contains("flush verb"), "{}", r.render());
+    }
+
+    #[test]
+    fn report_surfaces_adaptive_decisions() {
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        let f = Fabric::new(&p, &repl, true);
+        let mut r = GroupReport::from_fabric(&f);
+        // Fixed strategies leave the counters at zero: JSON carries the
+        // keys, render stays silent.
+        assert_eq!(r.decisions, DecisionStats::default());
+        assert!(!r.render().contains("adaptive"), "{}", r.render());
+        let j = r.to_json();
+        assert!(j.contains("\"chose_ob\":0"), "{j}");
+        assert!(j.contains("\"chose_dd\":0"), "{j}");
+        assert!(j.contains("\"adaptive_switches\":0"), "{j}");
+        assert!(j.contains("\"feedback_samples\":0"), "{j}");
+
+        let d = DecisionStats {
+            chose_ob: 5,
+            chose_dd: 7,
+            adaptive_switches: 2,
+            quorum_hist: vec![0, 10, 2],
+            cap_hist: vec![(1, 7), (32, 5)],
+            feedback_samples: 12,
+            err_pct_sum: 120.0,
+        };
+        r.set_decisions(&d);
+        assert_eq!(r.decisions, d);
+        let text = r.render();
+        assert!(text.contains("adaptive — 5 ob / 7 dd, 2 switch(es)"), "{text}");
+        assert!(text.contains("k=1:10"), "{text}");
+        assert!(text.contains("c=32:5"), "{text}");
+        assert!(text.contains("mean model err 10.0%"), "{text}");
+        let j = r.to_json();
+        assert!(j.contains("\"chose_ob\":5"), "{j}");
+        assert!(j.contains("\"chose_dd\":7"), "{j}");
+        assert!(j.contains("\"adaptive_switches\":2"), "{j}");
+        assert!(j.contains("\"quorum_hist\":[0,10,2]"), "{j}");
+        assert!(j.contains("\"cap\":32"), "{j}");
+        assert!(j.contains("\"feedback_samples\":12"), "{j}");
+        assert!(j.contains("\"mean_err_pct\":"), "{j}");
     }
 
     #[test]

@@ -185,6 +185,15 @@ pub struct Fabric {
     /// equals the pre-batching `post_cost`).
     wqe_stage_ns: Ns,
     doorbell_ns: Ns,
+    // ---- per-transaction adaptive overrides (see `replication::adaptive`)
+    /// Ack-quorum override for blocking fences, clamped at set time to
+    /// `[required, backups]`: the configured policy is a durability
+    /// floor the controller can only raise. `None` = the static policy,
+    /// event-for-event (the anchor).
+    txn_quorum: Option<usize>,
+    /// Doorbell batch-cap override for the staged pipeline (`Some(1)` =
+    /// eager). `None` = the configured [`FlushPolicy`], event-for-event.
+    txn_cap: Option<usize>,
     /// Data-path doorbells rung, per backup.
     doorbells: Vec<u64>,
     /// WQEs that went through the staging queue (vs. eager posts).
@@ -288,6 +297,8 @@ impl Fabric {
             stages: Vec::new(),
             wqe_stage_ns: p.wqe_stage_ns,
             doorbell_ns: p.doorbell_ns,
+            txn_quorum: None,
+            txn_cap: None,
             doorbells: vec![0; n],
             staged_wqes: 0,
             group_fence_ns: 0,
@@ -367,6 +378,63 @@ impl Fabric {
     /// The group-fence piggyback window (ns; 0 = disabled).
     pub fn group_fence(&self) -> Ns {
         self.group_fence_ns
+    }
+
+    /// Per-transaction ack-quorum override (adaptive control plane).
+    /// Clamped to `[required, backups]` at set time: the configured
+    /// policy is a durability floor the controller may only raise.
+    /// Unlike the `set_batching` family this is a per-transaction knob —
+    /// it may change while other threads have staged WQEs in flight
+    /// (staged lines flush under whatever policy is live at flush time;
+    /// fences always cover them).
+    pub fn set_txn_quorum(&mut self, k: Option<usize>) {
+        self.txn_quorum = k.map(|k| k.clamp(self.required, self.replicas.len()));
+    }
+
+    /// The live per-transaction quorum override, if any.
+    pub fn txn_quorum(&self) -> Option<usize> {
+        self.txn_quorum
+    }
+
+    /// Per-transaction doorbell batch-cap override (adaptive control
+    /// plane). `Some(1)` behaves as an eager post; under a coalescing
+    /// mode the cap is clamped to >= 2 (a chain of one cannot combine —
+    /// mirrors the config-layer pairing rule).
+    pub fn set_txn_batch_cap(&mut self, cap: Option<usize>) {
+        self.txn_cap = cap.map(|c| {
+            if self.coalesce == CoalesceMode::None {
+                c.max(1)
+            } else {
+                c.max(2)
+            }
+        });
+    }
+
+    /// The live per-transaction batch-cap override, if any.
+    pub fn txn_batch_cap(&self) -> Option<usize> {
+        self.txn_cap
+    }
+
+    /// The flush policy the data path runs under right now: the
+    /// per-transaction override when one is live, else the configured
+    /// policy (the anchor).
+    fn effective_batching(&self) -> FlushPolicy {
+        match self.txn_cap {
+            Some(c) => FlushPolicy::Cap(c).normalized(),
+            None => self.batching,
+        }
+    }
+
+    /// The batch cap the analytic knob model should assume for this
+    /// fabric's *configured* policy (used when the controller's batch
+    /// knob is off): eager posts ring per line, `Fence` defers the whole
+    /// epoch's writes.
+    pub fn model_batch_cap(&self, writes_per_epoch: f32) -> f32 {
+        match self.batching {
+            FlushPolicy::Eager => 1.0,
+            FlushPolicy::Cap(k) => k as f32,
+            FlushPolicy::Fence => writes_per_epoch.max(1.0),
+        }
     }
 
     /// Tag this fabric as serving shard `s` of a sharded coordinator
@@ -992,7 +1060,11 @@ impl Fabric {
     fn post_data(&mut self, t: &mut ThreadClock, verb: Verb, meta: WriteMeta) {
         self.apply_faults(t.now);
         self.admit(t);
-        if self.batching.is_eager() {
+        // The adaptive per-txn cap (when live) substitutes for the
+        // configured policy on both the eager check and the cap
+        // threshold; `None` is the event-for-event anchor.
+        let policy = self.effective_batching();
+        if policy.is_eager() {
             let cost = self.wqe_stage_ns + self.doorbell_ns;
             self.for_each_alive(|_, r| {
                 t.busy(cost);
@@ -1015,7 +1087,7 @@ impl Fabric {
         }
         self.staged_wqes += staged;
         self.stages[id].note_line();
-        if let FlushPolicy::Cap(cap) = self.batching {
+        if let FlushPolicy::Cap(cap) = policy {
             if self.stages[id].lines() >= cap {
                 self.flush(t);
             }
@@ -1122,7 +1194,16 @@ impl Fabric {
         // Decide satisfiability BEFORE issuing: a fence that stalls must
         // leave no trace on the survivors (no drains, no completions).
         let alive = self.alive_count();
-        let eff = effective_required(self.required, alive, self.faults.on_loss);
+        // Per-txn adaptive quorum: raise the ack requirement above the
+        // configured floor, never below it, and never beyond the current
+        // survivor count the static policy would tolerate — so the
+        // override cannot introduce a stall the static run wouldn't hit
+        // (when `alive < required` the clamp collapses to `required` and
+        // the fence behaves exactly as configured).
+        let required = self
+            .txn_quorum
+            .map_or(self.required, |k| k.clamp(self.required, alive.max(self.required)));
+        let eff = effective_required(required, alive, self.faults.on_loss);
         if eff == 0 {
             self.stall = Some(Stall {
                 at: t.now,
@@ -2127,5 +2208,97 @@ mod tests {
             f.certified_prefix(w),
             acked
         );
+    }
+
+    // ---- per-transaction adaptive overrides ----
+
+    /// The quorum override is clamped to the configured floor at set
+    /// time: the control plane can raise durability, never weaken it.
+    #[test]
+    fn txn_quorum_clamps_to_the_policy_floor() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &repl(3, AckPolicy::Quorum(2)), true);
+        f.set_txn_quorum(Some(1));
+        assert_eq!(f.txn_quorum(), Some(2), "cannot undercut the floor");
+        f.set_txn_quorum(Some(5));
+        assert_eq!(f.txn_quorum(), Some(3), "cannot exceed the group");
+        f.set_txn_quorum(None);
+        assert_eq!(f.txn_quorum(), None);
+    }
+
+    /// Raising the quorum makes the fence wait for the k-th completion:
+    /// with identical backups the completion instants tie, so drive the
+    /// point with `Quorum(1)` vs an override of all 3 after one backup
+    /// lags (more acks can only move the fence later or equal).
+    #[test]
+    fn txn_quorum_override_waits_for_more_acks() {
+        let p = Platform::default();
+        let drive = |q: Option<usize>| {
+            let mut f = Fabric::new(&p, &repl(3, AckPolicy::Quorum(1)), true);
+            f.set_txn_quorum(q);
+            let mut t = ThreadClock::new(0);
+            for s in 0..4u64 {
+                f.post_write_wt(&mut t, meta(0x40 * (1 + s), 0, s));
+            }
+            f.rdfence(&mut t);
+            t.now
+        };
+        let base = drive(None);
+        assert_eq!(drive(Some(1)), base, "k=floor is the static fence");
+        assert!(drive(Some(3)) >= base, "k=all cannot finish earlier");
+        // Ledger contents are identical either way: stragglers still
+        // complete, only the block point moves.
+        let mut f = Fabric::new(&p, &repl(3, AckPolicy::Quorum(1)), true);
+        f.set_txn_quorum(Some(3));
+        let mut t = ThreadClock::new(0);
+        f.post_write_wt(&mut t, meta(0x40, 0, 0));
+        f.rdfence(&mut t);
+        for b in 0..3 {
+            assert_eq!(f.backup(b).ledger.len(), 1, "backup {b}");
+        }
+    }
+
+    /// The batch-cap override substitutes for the configured flush
+    /// policy: `Some(1)` turns a capped fabric eager, `Some(k)` stages
+    /// on an eager fabric; `None` restores the configured policy.
+    #[test]
+    fn txn_batch_cap_overrides_the_flush_policy() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &ReplicationConfig::default(), true);
+        let mut t = ThreadClock::new(0);
+        // Configured eager; override stages 4 lines, fence flushes them.
+        f.set_txn_batch_cap(Some(8));
+        for s in 0..4u64 {
+            f.post_write_nt(&mut t, meta(0x40 * (1 + s), 0, s));
+        }
+        assert_eq!(f.staged_wqes, 4, "override must stage");
+        assert_eq!(f.staged_pending(), 4);
+        f.read_fence(&mut t);
+        assert_eq!(f.staged_pending(), 0, "fence is a flush point");
+        assert_eq!(f.backup(0).ledger.len(), 4);
+        // Back to None: eager again, nothing staged.
+        f.set_txn_batch_cap(None);
+        f.post_write_nt(&mut t, meta(0x400, 1, 4));
+        assert_eq!(f.staged_wqes, 4, "anchor: eager posts bypass staging");
+        // Some(1) normalizes to eager even on a capped fabric.
+        let mut g = Fabric::new(&p, &ReplicationConfig::default(), true)
+            .with_batching(FlushPolicy::Cap(8));
+        g.set_txn_batch_cap(Some(1));
+        let mut t2 = ThreadClock::new(0);
+        g.post_write_nt(&mut t2, meta(0x40, 0, 0));
+        assert_eq!(g.staged_wqes, 0, "cap=1 override is an eager post");
+        assert_eq!(g.backup(0).ledger.len(), 1);
+    }
+
+    /// Under a coalescing mode the override clamps to >= 2 (a chain of
+    /// one cannot combine), mirroring the config-layer pairing rule.
+    #[test]
+    fn txn_batch_cap_respects_coalescing_minimum() {
+        let p = Platform::default();
+        let mut f = Fabric::new(&p, &ReplicationConfig::default(), true)
+            .with_batching(FlushPolicy::Cap(8))
+            .with_coalescing(CoalesceMode::Combine);
+        f.set_txn_batch_cap(Some(1));
+        assert_eq!(f.txn_batch_cap(), Some(2), "coalescing needs chains");
     }
 }

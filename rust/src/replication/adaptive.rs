@@ -9,20 +9,158 @@
 //! whole transaction. Mixing per transaction is safe: both strategies'
 //! durability fences cover all prior writes of the thread regardless of
 //! the path each write took.
+//!
+//! # Online adaptive control plane
+//!
+//! With an attached [`ControlPlane`] (opt-in via the `[adaptive]` config
+//! section), SM-AD grows from a binary OB/DD chooser into a per-class
+//! knob-vector controller. At every transaction begin it picks, per
+//! transaction class `(epochs, writes)`:
+//!
+//! * the replication **mode** (OB or DD),
+//! * the **ack quorum** `k` — clamped to `[configured policy, backups]`
+//!   so the user's durability floor can only be raised, never weakened,
+//! * the doorbell **batch cap** for the staged WQE pipeline.
+//!
+//! Candidates are scored with the knob-aware analytic model
+//! `predict(epochs, writes, backups, quorum, batch_cap)`
+//! ([`crate::runtime::fallback_knob_predictor`]). Online feedback
+//! corrects the model: per `(class, knob-cell)` EWMAs of measured
+//! steady-state commit latency replace the model's prediction for cells
+//! that have samples, and a per-class scalar correction (EWMA of
+//! measured/predicted) transfers the observed scale error to unmeasured
+//! cells. A hysteresis guard keeps the current cell unless a challenger
+//! is better by more than `hysteresis_pct`, so decisions do not thrash
+//! on noise.
+//!
+//! The chosen knobs are applied through the fabric's per-transaction
+//! overrides ([`Fabric::set_txn_quorum`], [`Fabric::set_txn_batch_cap`]);
+//! both are clamped at the fabric so no decision can violate the
+//! configured durability floor or the coalescing invariants. With the
+//! control plane absent (`[adaptive]` disabled — the default), the
+//! legacy two-input predictor path runs unchanged, event for event.
 
-use super::{Strategy, TxnShape};
-use crate::config::StrategyKind;
+use super::{DecisionStats, Strategy, TxnShape};
+use crate::config::{AdaptiveConfig, StrategyKind};
 use crate::net::{Fabric, WriteMeta};
 use crate::sim::ThreadClock;
+use crate::Ns;
 
 /// Latency predictor: `(epochs, writes) -> (lat_ob_ns, lat_dd_ns)`.
 pub type Predictor = Box<dyn Fn(f32, f32) -> (f32, f32)>;
+
+/// Knob-aware latency predictor for the adaptive control plane:
+/// `(epochs, writes, backups, quorum, batch_cap) -> (lat_ob_ns, lat_dd_ns)`.
+pub type KnobPredictor = Box<dyn Fn(f32, f32, f32, f32, f32) -> (f32, f32)>;
+
+/// Doorbell batch caps the controller considers. Ascending so score ties
+/// break toward the smallest cap (staging defers wire issue; when the
+/// model sees no benefit, prefer the eager-most choice).
+const CAP_CANDIDATES: [usize; 3] = [1, 8, 32];
 
 /// Behaviour adopted for the current transaction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Mode {
     Ob,
     Dd,
+}
+
+/// One point of the per-transaction knob grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Knobs {
+    mode: Mode,
+    quorum: usize,
+    cap: usize,
+}
+
+/// Per-(class, knob-cell) feedback state: the model's latest prediction
+/// and the EWMA of measured commit latency when this cell was live.
+#[derive(Clone, Debug)]
+struct Cell {
+    knobs: Knobs,
+    pred: f32,
+    ewma: f32,
+    samples: u64,
+}
+
+/// Per-transaction-class controller state. Classes are keyed by the
+/// rounded shape hint and stored in a Vec (a workload has a handful of
+/// classes; linear scan keeps iteration order deterministic).
+#[derive(Clone, Debug)]
+struct ClassState {
+    key: (u32, u32),
+    cells: Vec<Cell>,
+    /// Scalar model correction: EWMA of measured/predicted over this
+    /// class's feedback. Applied to cells with no samples of their own
+    /// so a consistently optimistic model is corrected everywhere, not
+    /// only where the controller already dwelled.
+    corr: f32,
+    current: Option<Knobs>,
+}
+
+impl ClassState {
+    fn new(key: (u32, u32)) -> Self {
+        ClassState {
+            key,
+            cells: Vec::new(),
+            corr: 1.0,
+            current: None,
+        }
+    }
+
+    /// Score a candidate cell: measured EWMA when the cell has samples,
+    /// otherwise the model prediction scaled by the class correction.
+    fn score(&self, knobs: Knobs, pred: f32, feedback: bool) -> f32 {
+        if !feedback {
+            return pred;
+        }
+        if let Some(cell) = self.cells.iter().find(|c| c.knobs == knobs) {
+            if cell.samples > 0 {
+                return cell.ewma;
+            }
+        }
+        pred * self.corr
+    }
+
+    /// Record a decision: remember the chosen cell's latest prediction
+    /// (the denominator for feedback error accounting).
+    fn note_decision(&mut self, knobs: Knobs, pred: f32) {
+        match self.cells.iter_mut().find(|c| c.knobs == knobs) {
+            Some(cell) => cell.pred = pred,
+            None => self.cells.push(Cell {
+                knobs,
+                pred,
+                ewma: 0.0,
+                samples: 0,
+            }),
+        }
+        self.current = Some(knobs);
+    }
+}
+
+/// Everything the online controller needs beyond the legacy predictor:
+/// the adaptive config, the knob-aware model, and the replica-group
+/// shape (backup count + configured ack floor).
+pub struct ControlPlane {
+    pub cfg: AdaptiveConfig,
+    pub model: KnobPredictor,
+    /// Replica-group size the controller tunes for.
+    pub backups: usize,
+    /// Configured ack-policy requirement: the durability floor. Quorum
+    /// candidates range over `floor..=backups`.
+    pub floor: usize,
+}
+
+impl ControlPlane {
+    pub fn new(cfg: AdaptiveConfig, model: KnobPredictor, backups: usize, floor: usize) -> Self {
+        let backups = backups.max(1);
+        ControlPlane {
+            cfg,
+            model,
+            backups,
+            floor: floor.clamp(1, backups),
+        }
+    }
 }
 
 /// Model-driven adaptive OB/DD strategy.
@@ -32,6 +170,21 @@ pub struct SmAd {
     /// Stats: transactions routed to each mode.
     pub chose_ob: u64,
     pub chose_dd: u64,
+    /// Online control plane (None = legacy binary chooser, the anchor).
+    ctl: Option<ControlPlane>,
+    classes: Vec<ClassState>,
+    /// Knob vector most recently applied to the fabric (across classes);
+    /// a decision that changes it counts as one adaptive switch.
+    applied: Option<Knobs>,
+    adaptive_switches: u64,
+    /// Decision histogram over the chosen ack quorum (index = k).
+    quorum_hist: Vec<u64>,
+    /// Decision histogram over the chosen batch cap, sorted by cap.
+    cap_hist: Vec<(usize, u64)>,
+    feedback_samples: u64,
+    /// Sum over feedback samples of |measured - predicted|/predicted in
+    /// percent: the model-vs-measured error the reports surface.
+    err_pct_sum: f64,
 }
 
 impl SmAd {
@@ -41,7 +194,128 @@ impl SmAd {
             mode: Mode::Dd,
             chose_ob: 0,
             chose_dd: 0,
+            ctl: None,
+            classes: Vec::new(),
+            applied: None,
+            adaptive_switches: 0,
+            quorum_hist: Vec::new(),
+            cap_hist: Vec::new(),
+            feedback_samples: 0,
+            err_pct_sum: 0.0,
         }
+    }
+
+    /// Attach the online control plane (callers gate on
+    /// `AdaptiveConfig::enabled`; attaching a disabled config is
+    /// equivalent to [`SmAd::new`] except decisions re-derive the mode
+    /// from the knob model).
+    pub fn with_control(predictor: Predictor, ctl: ControlPlane) -> Self {
+        let mut s = SmAd::new(predictor);
+        s.ctl = Some(ctl);
+        s
+    }
+
+    fn class_index(&mut self, key: (u32, u32)) -> usize {
+        match self.classes.iter().position(|c| c.key == key) {
+            Some(i) => i,
+            None => {
+                self.classes.push(ClassState::new(key));
+                self.classes.len() - 1
+            }
+        }
+    }
+
+    fn count_decision(&mut self, knobs: Knobs) {
+        match knobs.mode {
+            Mode::Ob => self.chose_ob += 1,
+            Mode::Dd => self.chose_dd += 1,
+        }
+        if self.quorum_hist.len() <= knobs.quorum {
+            self.quorum_hist.resize(knobs.quorum + 1, 0);
+        }
+        self.quorum_hist[knobs.quorum] += 1;
+        match self.cap_hist.iter_mut().find(|(c, _)| *c == knobs.cap) {
+            Some((_, n)) => *n += 1,
+            None => {
+                self.cap_hist.push((knobs.cap, 1));
+                self.cap_hist.sort_unstable_by_key(|(c, _)| *c);
+            }
+        }
+    }
+
+    /// The full adaptive decision for one transaction begin.
+    fn decide(&mut self, fabric: &mut Fabric, shape: TxnShape) {
+        let (e, w) = (shape.epochs, shape.writes);
+        let key = (e.round() as u32, w.round() as u32);
+        let ci = self.class_index(key);
+
+        let ctl = self.ctl.as_ref().expect("decide requires a control plane");
+        let quorums: Vec<usize> = if ctl.cfg.quorum && ctl.backups > ctl.floor {
+            (ctl.floor..=ctl.backups).collect()
+        } else {
+            vec![ctl.floor]
+        };
+        let caps: Vec<usize> = if ctl.cfg.batch {
+            CAP_CANDIDATES.to_vec()
+        } else {
+            vec![fabric.model_batch_cap(w).round().max(1.0) as usize]
+        };
+
+        let class = &self.classes[ci];
+        // Enumerate the grid; strict `<` means the first of a tie wins,
+        // so ordering (quorum asc, cap asc, DD before OB) encodes the
+        // tie-breaks: lowest quorum, lowest cap, DD (matching the legacy
+        // `ob < dd` comparison).
+        let mut best: Option<(Knobs, f32, f32)> = None;
+        let mut cur: Option<(f32, f32)> = None;
+        for &k in &quorums {
+            for &c in &caps {
+                let (ob, dd) = (ctl.model)(e, w, ctl.backups as f32, k as f32, c as f32);
+                for (mode, pred) in [(Mode::Dd, dd), (Mode::Ob, ob)] {
+                    let knobs = Knobs { mode, quorum: k, cap: c };
+                    let score = class.score(knobs, pred, ctl.cfg.feedback);
+                    if class.current == Some(knobs) {
+                        cur = Some((score, pred));
+                    }
+                    if best.as_ref().map_or(true, |b| score < b.1) {
+                        best = Some((knobs, score, pred));
+                    }
+                }
+            }
+        }
+        let (best_knobs, best_score, best_pred) =
+            best.expect("knob grid is never empty");
+
+        // Hysteresis: abandon the incumbent cell only when the best
+        // challenger beats its score by more than the guard band.
+        let (chosen, chosen_pred) = match (class.current, cur) {
+            (Some(inc), Some((inc_score, inc_pred)))
+                if best_knobs != inc
+                    && best_score >= inc_score * (1.0 - ctl.cfg.guard()) =>
+            {
+                (inc, inc_pred)
+            }
+            _ => (best_knobs, best_pred),
+        };
+
+        let apply_quorum = ctl.cfg.quorum;
+        let apply_cap = ctl.cfg.batch;
+        self.classes[ci].note_decision(chosen, chosen_pred);
+        if self.applied != Some(chosen) {
+            if self.applied.is_some() {
+                self.adaptive_switches += 1;
+            }
+            self.applied = Some(chosen);
+        }
+
+        self.mode = chosen.mode;
+        if apply_quorum {
+            fabric.set_txn_quorum(Some(chosen.quorum));
+        }
+        if apply_cap {
+            fabric.set_txn_batch_cap(Some(chosen.cap));
+        }
+        self.count_decision(chosen);
     }
 }
 
@@ -52,17 +326,74 @@ impl Strategy for SmAd {
 
     fn on_txn_begin(
         &mut self,
-        _fabric: &mut Fabric,
+        fabric: &mut Fabric,
         _t: &mut ThreadClock,
         hint: Option<TxnShape>,
     ) {
-        if let Some(shape) = hint {
-            let (ob, dd) = (self.predictor)(shape.epochs, shape.writes);
-            self.mode = if ob < dd { Mode::Ob } else { Mode::Dd };
+        if self.ctl.is_none() {
+            // Legacy binary chooser — the `[adaptive]`-disabled anchor.
+            if let Some(shape) = hint {
+                let (ob, dd) = (self.predictor)(shape.epochs, shape.writes);
+                self.mode = if ob < dd { Mode::Ob } else { Mode::Dd };
+            }
+            match self.mode {
+                Mode::Ob => self.chose_ob += 1,
+                Mode::Dd => self.chose_dd += 1,
+            }
+            return;
         }
-        match self.mode {
-            Mode::Ob => self.chose_ob += 1,
-            Mode::Dd => self.chose_dd += 1,
+        match hint {
+            Some(shape) => self.decide(fabric, shape),
+            None => {
+                // No shape: keep the previous knob vector (overrides are
+                // sticky on the fabric) and count the mode dwell.
+                match self.mode {
+                    Mode::Ob => self.chose_ob += 1,
+                    Mode::Dd => self.chose_dd += 1,
+                }
+            }
+        }
+    }
+
+    fn on_txn_end(&mut self, hint: Option<TxnShape>, commit_ns: Ns) {
+        let Some(ctl) = self.ctl.as_ref() else { return };
+        if !ctl.cfg.feedback {
+            return;
+        }
+        let Some(shape) = hint else { return };
+        let alpha = ctl.cfg.alpha();
+        let key = (shape.epochs.round() as u32, shape.writes.round() as u32);
+        let Some(class) = self.classes.iter_mut().find(|c| c.key == key) else {
+            return;
+        };
+        let Some(current) = class.current else { return };
+        let Some(cell) = class.cells.iter_mut().find(|c| c.knobs == current) else {
+            return;
+        };
+        let measured = commit_ns as f32;
+        if cell.samples == 0 {
+            cell.ewma = measured;
+        } else {
+            cell.ewma += alpha * (measured - cell.ewma);
+        }
+        cell.samples += 1;
+        if cell.pred > 0.0 {
+            let ratio = measured / cell.pred;
+            class.corr += alpha * (ratio - class.corr);
+            self.err_pct_sum += ((measured - cell.pred).abs() / cell.pred * 100.0) as f64;
+        }
+        self.feedback_samples += 1;
+    }
+
+    fn decision_stats(&self) -> DecisionStats {
+        DecisionStats {
+            chose_ob: self.chose_ob,
+            chose_dd: self.chose_dd,
+            adaptive_switches: self.adaptive_switches,
+            quorum_hist: self.quorum_hist.clone(),
+            cap_hist: self.cap_hist.clone(),
+            feedback_samples: self.feedback_samples,
+            err_pct_sum: self.err_pct_sum,
         }
     }
 
@@ -90,7 +421,8 @@ impl Strategy for SmAd {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Platform;
+    use crate::config::{AckPolicy, Platform, ReplicationConfig};
+    use crate::runtime::fallback_knob_predictor;
 
     fn meta(addr: u64, epoch: u32, seq: u64) -> WriteMeta {
         WriteMeta {
@@ -153,5 +485,164 @@ mod tests {
             s.on_dfence(&mut r, &mut t);
         }
         assert_eq!(r.backup(0).ledger.len(), 4);
+    }
+
+    // --- control-plane tests ---
+
+    fn group(backups: usize, ack_policy: AckPolicy) -> Fabric {
+        let repl = ReplicationConfig { backups, ack_policy };
+        Fabric::new(&Platform::default(), &repl, true)
+    }
+
+    fn ctl_for(fabric: &Fabric, cfg: AdaptiveConfig) -> ControlPlane {
+        ControlPlane::new(
+            cfg,
+            fallback_knob_predictor(&Platform::default()),
+            fabric.backups(),
+            fabric.required(),
+        )
+    }
+
+    #[test]
+    fn control_plane_converges_per_class() {
+        // Phase-pure classes at backups=2: latency-sensitive small txns
+        // want DD/cap=1, bulk appends and hot-line streams want OB with a
+        // large cap (the staged pipeline amortizes doorbells).
+        let mut r = group(2, AckPolicy::Quorum(1));
+        let mut t = ThreadClock::new(0);
+        let mut s = SmAd::with_control(
+            Box::new(|_, _| (0.0, 0.0)),
+            ctl_for(&r, AdaptiveConfig::enabled()),
+        );
+
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 4.0, writes: 1.0 }));
+        assert_eq!(s.mode, Mode::Dd, "small txns: DD (RTT-dominated OB tail)");
+        assert_eq!(r.txn_batch_cap(), Some(1), "small txns: eager flush");
+
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 1.0, writes: 64.0 }));
+        assert_eq!(s.mode, Mode::Ob, "bulk append: OB");
+        assert_eq!(r.txn_batch_cap(), Some(32), "bulk append: batch doorbells");
+
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 64.0, writes: 2.0 }));
+        assert_eq!(s.mode, Mode::Ob, "hot-line stream: OB");
+        assert_eq!(r.txn_batch_cap(), Some(32));
+
+        let stats = s.decision_stats();
+        assert_eq!(stats.chose_ob + stats.chose_dd, 3);
+        // Bulk append and hot-line stream share the same knob vector
+        // (OB / floor quorum / cap 32), so only the DD -> OB boundary
+        // counts as an applied switch.
+        assert_eq!(stats.adaptive_switches, 1, "one knob-vector change");
+    }
+
+    #[test]
+    fn quorum_candidates_never_undercut_the_floor() {
+        // Policy requires 2 of 3: the controller may only pick k in 2..=3.
+        let mut r = group(3, AckPolicy::Quorum(2));
+        let mut t = ThreadClock::new(0);
+        let mut s = SmAd::with_control(
+            Box::new(|_, _| (0.0, 0.0)),
+            ctl_for(&r, AdaptiveConfig::enabled()),
+        );
+        for shape in [
+            TxnShape { epochs: 4.0, writes: 1.0 },
+            TxnShape { epochs: 1.0, writes: 64.0 },
+            TxnShape { epochs: 64.0, writes: 2.0 },
+        ] {
+            s.on_txn_begin(&mut r, &mut t, Some(shape));
+            let k = r.txn_quorum().expect("quorum override applied");
+            assert!(k >= 2 && k <= 3, "quorum {k} outside [floor, backups]");
+        }
+        let stats = s.decision_stats();
+        for (k, n) in stats.quorum_hist.iter().enumerate() {
+            assert!(k >= 2 || *n == 0, "decision below the floor: k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn feedback_overrides_a_wrong_model() {
+        // Model claims OB is far cheaper for this class; measured latency
+        // says the DD cell (which the controller must first be steered
+        // into) is 10x better. Steer via measured feedback on the OB cell.
+        let mut r = group(2, AckPolicy::All);
+        let mut t = ThreadClock::new(0);
+        let cfg = AdaptiveConfig {
+            quorum: false,
+            batch: false,
+            ..AdaptiveConfig::enabled()
+        };
+        let shape = TxnShape { epochs: 8.0, writes: 8.0 };
+        let mut s = SmAd::with_control(
+            Box::new(|_, _| (0.0, 0.0)),
+            ControlPlane::new(
+                cfg,
+                Box::new(|_, _, _, _, _| (1_000.0, 1_100.0)),
+                r.backups(),
+                r.required(),
+            ),
+        );
+        s.on_txn_begin(&mut r, &mut t, Some(shape));
+        assert_eq!(s.mode, Mode::Ob, "model routes to OB");
+        // Measured commit latency is terrible: the OB cell's EWMA grows
+        // past the (corrected) DD prediction and the controller flips.
+        for _ in 0..8 {
+            s.on_txn_end(Some(shape), 50_000);
+            s.on_txn_begin(&mut r, &mut t, Some(shape));
+        }
+        assert_eq!(s.mode, Mode::Dd, "feedback overrode the wrong model");
+        assert!(s.decision_stats().adaptive_switches >= 1);
+        assert!(s.decision_stats().feedback_samples == 8);
+    }
+
+    #[test]
+    fn hysteresis_holds_near_ties() {
+        // Two cells within the 10% guard band: the incumbent must hold
+        // even when the challenger's model score is slightly lower.
+        let mut r = group(1, AckPolicy::All);
+        let mut t = ThreadClock::new(0);
+        let cfg = AdaptiveConfig {
+            quorum: false,
+            batch: false,
+            feedback: false,
+            ..AdaptiveConfig::enabled()
+        };
+        let shape = TxnShape { epochs: 2.0, writes: 2.0 };
+        // First decision: DD wins (999 > 1000 is false: dd=999 < ob=1000).
+        // Every later decision sees OB at 950 — 4.9% better, inside the
+        // 10% band — so DD must hold.
+        let calls = std::cell::Cell::new(0u32);
+        let mut s = SmAd::with_control(
+            Box::new(|_, _| (0.0, 0.0)),
+            ControlPlane::new(
+                cfg,
+                Box::new(move |_, _, _, _, _| {
+                    let n = calls.get();
+                    calls.set(n + 1);
+                    if n == 0 { (1_000.0, 999.0) } else { (950.0, 999.0) }
+                }),
+                1,
+                1,
+            ),
+        );
+        s.on_txn_begin(&mut r, &mut t, Some(shape));
+        assert_eq!(s.mode, Mode::Dd);
+        for _ in 0..4 {
+            s.on_txn_begin(&mut r, &mut t, Some(shape));
+            assert_eq!(s.mode, Mode::Dd, "hysteresis must hold inside the band");
+        }
+        assert_eq!(s.decision_stats().adaptive_switches, 0);
+    }
+
+    #[test]
+    fn disabled_control_plane_touches_no_overrides() {
+        let mut r = group(2, AckPolicy::All);
+        let mut t = ThreadClock::new(0);
+        let mut s = SmAd::new(Box::new(|_, _| (1.0, 2.0)));
+        s.on_txn_begin(&mut r, &mut t, Some(TxnShape { epochs: 4.0, writes: 4.0 }));
+        assert_eq!(r.txn_quorum(), None);
+        assert_eq!(r.txn_batch_cap(), None);
+        let stats = s.decision_stats();
+        assert!(stats.quorum_hist.is_empty() && stats.cap_hist.is_empty());
+        assert_eq!(stats.adaptive_switches, 0);
     }
 }

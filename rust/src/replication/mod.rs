@@ -21,12 +21,13 @@
 pub mod adaptive;
 pub mod strategies;
 
-pub use adaptive::{Predictor, SmAd};
+pub use adaptive::{ControlPlane, KnobPredictor, Predictor, SmAd};
 pub use strategies::{NoSm, SmDd, SmOb, SmRc};
 
 use crate::config::StrategyKind;
 use crate::net::{Fabric, WriteMeta};
 use crate::sim::ThreadClock;
+use crate::Ns;
 use anyhow::{bail, Result};
 
 /// Hint describing the shape of an upcoming transaction (adaptive use).
@@ -36,6 +37,87 @@ pub struct TxnShape {
     pub epochs: f32,
     /// Expected writes per epoch.
     pub writes: f32,
+}
+
+/// Decision/feedback counters an adaptive strategy exposes; all zeros
+/// for fixed strategies. Flows RunOutcome -> GroupReport so benches and
+/// reports can assert on controller behaviour.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DecisionStats {
+    /// Transactions routed to SM-OB / SM-DD behaviour.
+    pub chose_ob: u64,
+    pub chose_dd: u64,
+    /// Times the applied knob vector (mode, quorum, cap) changed.
+    pub adaptive_switches: u64,
+    /// Decision histogram over the chosen ack quorum (index = k).
+    pub quorum_hist: Vec<u64>,
+    /// Decision histogram over the chosen batch cap, sorted by cap.
+    pub cap_hist: Vec<(usize, u64)>,
+    /// Measured-latency feedback samples absorbed.
+    pub feedback_samples: u64,
+    /// Sum of per-sample |measured - predicted| / predicted * 100.
+    pub err_pct_sum: f64,
+}
+
+impl DecisionStats {
+    /// Mean model-vs-measured relative error over the feedback samples.
+    pub fn mean_err_pct(&self) -> f64 {
+        if self.feedback_samples == 0 {
+            0.0
+        } else {
+            self.err_pct_sum / self.feedback_samples as f64
+        }
+    }
+
+    /// Merge another lane's counters into this one (sharded groups).
+    pub fn add(&mut self, other: &DecisionStats) {
+        self.chose_ob += other.chose_ob;
+        self.chose_dd += other.chose_dd;
+        self.adaptive_switches += other.adaptive_switches;
+        if self.quorum_hist.len() < other.quorum_hist.len() {
+            self.quorum_hist.resize(other.quorum_hist.len(), 0);
+        }
+        for (k, n) in other.quorum_hist.iter().enumerate() {
+            self.quorum_hist[k] += n;
+        }
+        for &(cap, n) in &other.cap_hist {
+            match self.cap_hist.iter_mut().find(|(c, _)| *c == cap) {
+                Some((_, m)) => *m += n,
+                None => self.cap_hist.push((cap, n)),
+            }
+        }
+        self.cap_hist.sort_unstable_by_key(|(c, _)| *c);
+        self.feedback_samples += other.feedback_samples;
+        self.err_pct_sum += other.err_pct_sum;
+    }
+
+    /// Subtract a warmup watermark (steady-state accounting, mirroring
+    /// the scalar counter `_zero` snapshots in the scheduler).
+    pub fn minus(&self, zero: &DecisionStats) -> DecisionStats {
+        let at = |v: &[u64], i: usize| v.get(i).copied().unwrap_or(0);
+        DecisionStats {
+            chose_ob: self.chose_ob - zero.chose_ob,
+            chose_dd: self.chose_dd - zero.chose_dd,
+            adaptive_switches: self.adaptive_switches - zero.adaptive_switches,
+            quorum_hist: (0..self.quorum_hist.len())
+                .map(|k| self.quorum_hist[k] - at(&zero.quorum_hist, k))
+                .collect(),
+            cap_hist: self
+                .cap_hist
+                .iter()
+                .map(|&(cap, n)| {
+                    let z = zero
+                        .cap_hist
+                        .iter()
+                        .find(|(c, _)| *c == cap)
+                        .map_or(0, |&(_, m)| m);
+                    (cap, n - z)
+                })
+                .collect(),
+            feedback_samples: self.feedback_samples - zero.feedback_samples,
+            err_pct_sum: self.err_pct_sum - zero.err_pct_sum,
+        }
+    }
 }
 
 /// A replication strategy: reacts to the primary's persistency events.
@@ -58,6 +140,15 @@ pub trait Strategy {
         _t: &mut ThreadClock,
         _hint: Option<TxnShape>,
     ) {
+    }
+
+    /// Transaction committed: measured commit latency feedback for the
+    /// adaptive control plane (`hint` is the shape passed at begin).
+    fn on_txn_end(&mut self, _hint: Option<TxnShape>, _commit_ns: Ns) {}
+
+    /// Controller decision counters (all-zero for fixed strategies).
+    fn decision_stats(&self) -> DecisionStats {
+        DecisionStats::default()
     }
 }
 

@@ -20,7 +20,7 @@
 //! once here and invoked as pure functions.
 
 use crate::config::Platform;
-use crate::replication::Predictor;
+use crate::replication::{KnobPredictor, Predictor};
 use anyhow::{anyhow, Context, Result};
 
 /// Static batch shape of the latency model artifact.
@@ -135,6 +135,24 @@ impl LatencyModel {
             table[ei * 8 + wi]
         }))
     }
+
+    /// Knob-aware predictor backed by the AOT model: the `(epochs,
+    /// writes)` base latency comes from the compiled lookup table (one
+    /// batched PJRT call) and the marginal knob terms are the same
+    /// closed forms as [`fallback_knob_predictor`]. The extension is
+    /// calibrated to vanish at `(backups, quorum, cap) = (1, 1, 1)`, so
+    /// the artifact keeps its `f32[16]` signature; the extended
+    /// `f32[18]` vector ([`Platform::to_param_vec_ext`], mirrored in
+    /// `python/compile/kernels/params.py`) feeds only the margins.
+    pub fn knob_predictor(&self, platform: &Platform) -> Result<KnobPredictor> {
+        let base = self.predictor()?;
+        let p = platform.to_param_vec_ext();
+        Ok(Box::new(move |e, w, backups, quorum, cap| {
+            let (ob, dd) = base(e, w);
+            let (ob_m, dd_m) = knob_margins(&p, e, w, backups, quorum, cap);
+            ((ob + ob_m).max(0.0), (dd + dd_m).max(0.0))
+        }))
+    }
 }
 
 /// The compiled cache-index kernel.
@@ -187,28 +205,82 @@ impl CacheIndexModel {
     }
 }
 
-/// Closed-form fallback predictor (no artifacts needed) — mirrors the
-/// python `ref.py` formulas so SM-AD remains usable without
-/// `make artifacts`; kept in sync via the pjrt_model integration test.
+/// Legacy closed-form OB/DD latency at the calibration baseline (one
+/// backup, quorum 1, eager posting) — mirrors the python `ref.py`
+/// formulas; kept in sync via the pjrt_model integration test.
+fn closed_form_base(p: &[f32; 18], e: f32, w: f32) -> (f32, f32) {
+    let (rtt, gap, nqp) = (p[0], p[1], p[2]);
+    let (llc_mc, mc_pm) = (p[4], p[5]);
+    let (store, flush, sfence) = (p[7], p[8], p[9]);
+    let (banks, ob_barrier) = (p[10], p[11]);
+    let (qp_depth, nt_serial, ddio_lines) = (p[12], p[13], p[14]);
+    let n = e * w;
+    let local_epoch = w * (store + flush) + sfence + w * llc_mc;
+    let ob_issue = n * (gap / nqp) + e * (gap / nqp + ob_barrier);
+    let ob_drain = n * (mc_pm / banks);
+    let ob_overflow = (n - ddio_lines).max(0.0) * (mc_pm / banks);
+    let lat_ob = ob_issue.max(e * local_epoch).max(ob_drain) + ob_overflow + rtt + mc_pm;
+    let dd_issue = n * gap;
+    let dd_serial = (n - qp_depth).max(0.0) * (nt_serial - gap).max(0.0);
+    let lat_dd = (e * local_epoch).max(dd_issue + dd_serial) + rtt;
+    (lat_ob, lat_dd)
+}
+
+/// Marginal latency of the adaptive knob vector over the calibration
+/// baseline — zero at `(backups, quorum, cap) = (1, 1, 1)` by
+/// construction, so composing these margins with either base model
+/// (closed form or AOT table) reduces exactly to the legacy predictor
+/// (mirrors `latency_knob_ref` in python/compile/kernels/ref.py):
+///
+/// * **fan-out CPU**: each of the `n = e*w` lines charges
+///   `b*(stage + doorbell/c)` of primary CPU; the 1-backup eager cost
+///   `stage + doorbell` is what the legacy model folds into its
+///   calibration, so only the difference enters. Batching (`c > 1`)
+///   amortizes the doorbell and is a *saving* even at one backup.
+/// * **staging deferral**: lines still staged when the blocking fence
+///   flushes serialize their wire issue into the fence wait (one `gap`
+///   each). SM-OB's per-epoch ordering fences are flush points, so only
+///   the last epoch's residual (`w mod c`) defers; SM-DD has no
+///   ordering verbs and stages across the whole transaction
+///   (`n mod c`).
+/// * **quorum tail**: the fence verb fans out to the backups serially,
+///   so blocking on the k-th completion lands ~`(k-1)` issue gaps after
+///   the first.
+fn knob_margins(p: &[f32; 18], e: f32, w: f32, backups: f32, quorum: f32, cap: f32) -> (f32, f32) {
+    let gap = p[1];
+    let (doorbell, stage) = (p[16], p[17]);
+    let b = backups.max(1.0);
+    let k = quorum.clamp(1.0, b);
+    let c = cap.max(1.0);
+    let n = e * w;
+    let fan_cpu = n * (b * (stage + doorbell / c) - (stage + doorbell));
+    let q_tail = (k - 1.0) * gap;
+    let resid_ob = (w - c * (w / c).floor()) * gap;
+    let resid_dd = (n - c * (n / c).floor()) * gap;
+    (fan_cpu + resid_ob + q_tail, fan_cpu + resid_dd + q_tail)
+}
+
+/// Closed-form fallback predictor (no artifacts needed) — the thin
+/// 2-input legacy shim over [`fallback_knob_predictor`], evaluated at
+/// the calibration baseline `(backups, quorum, cap) = (1, 1, 1)` where
+/// the knob margins vanish, so its outputs are bit-identical to the
+/// pre-extension closed form (pinned by the pjrt_model cross-check).
 pub fn fallback_predictor(platform: &Platform) -> Predictor {
-    let p = platform.to_param_vec();
-    Box::new(move |e: f32, w: f32| {
-        let (rtt, gap, nqp) = (p[0], p[1], p[2]);
-        let (llc_mc, mc_pm) = (p[4], p[5]);
-        let (store, flush, sfence) = (p[7], p[8], p[9]);
-        let (banks, ob_barrier) = (p[10], p[11]);
-        let (qp_depth, nt_serial, ddio_lines) = (p[12], p[13], p[14]);
-        let n = e * w;
-        let local_epoch = w * (store + flush) + sfence + w * llc_mc;
-        let ob_issue = n * (gap / nqp) + e * (gap / nqp + ob_barrier);
-        let ob_drain = n * (mc_pm / banks);
-        let ob_overflow = (n - ddio_lines).max(0.0) * (mc_pm / banks);
-        let lat_ob =
-            ob_issue.max(e * local_epoch).max(ob_drain) + ob_overflow + rtt + mc_pm;
-        let dd_issue = n * gap;
-        let dd_serial = (n - qp_depth).max(0.0) * (nt_serial - gap).max(0.0);
-        let lat_dd = (e * local_epoch).max(dd_issue + dd_serial) + rtt;
-        (lat_ob, lat_dd)
+    let p = platform.to_param_vec_ext();
+    Box::new(move |e: f32, w: f32| closed_form_base(&p, e, w))
+}
+
+/// Knob-aware closed-form predictor for the adaptive control plane:
+/// `(epochs, writes, backups, quorum, batch_cap) -> (lat_ob, lat_dd)`.
+/// Base latencies from the legacy closed form plus the marginal knob
+/// terms of [`knob_margins`]; reduces exactly to
+/// [`fallback_predictor`] at `(1, 1, 1)`.
+pub fn fallback_knob_predictor(platform: &Platform) -> KnobPredictor {
+    let p = platform.to_param_vec_ext();
+    Box::new(move |e, w, backups, quorum, cap| {
+        let (ob, dd) = closed_form_base(&p, e, w);
+        let (ob_m, dd_m) = knob_margins(&p, e, w, backups, quorum, cap);
+        ((ob + ob_m).max(0.0), (dd + dd_m).max(0.0))
     })
 }
 
@@ -224,6 +296,48 @@ mod tests {
         assert!(dd_small < ob_small, "DD should win at 4-1");
         let (ob_big, dd_big) = f(256.0, 1.0);
         assert!(ob_big < dd_big, "OB should win at 256-1");
+    }
+
+    #[test]
+    fn knob_predictor_reduces_to_legacy_at_baseline() {
+        // The 5-input extension at (backups, quorum, cap) = (1, 1, 1)
+        // must be bit-identical to the 2-input legacy shim — the
+        // calibration-baseline anchor.
+        let p = Platform::default();
+        let legacy = fallback_predictor(&p);
+        let ext = fallback_knob_predictor(&p);
+        for (e, w) in [(1.0, 1.0), (4.0, 1.0), (16.0, 4.0), (256.0, 1.0), (64.0, 8.0)] {
+            let (ob0, dd0) = legacy(e, w);
+            let (ob1, dd1) = ext(e, w, 1.0, 1.0, 1.0);
+            assert_eq!((ob0, dd0), (ob1, dd1), "baseline mismatch at {e}-{w}");
+        }
+    }
+
+    #[test]
+    fn knob_margins_move_in_the_right_directions() {
+        let p = Platform::default();
+        let ext = fallback_knob_predictor(&p);
+        // More backups cost fan-out CPU.
+        let (ob1, dd1) = ext(4.0, 1.0, 1.0, 1.0, 1.0);
+        let (ob2, dd2) = ext(4.0, 1.0, 2.0, 1.0, 1.0);
+        assert!(ob2 > ob1 && dd2 > dd1, "extra backup must not be free");
+        // A larger quorum waits longer.
+        let (obq1, ddq1) = ext(4.0, 1.0, 2.0, 1.0, 1.0);
+        let (obq2, ddq2) = ext(4.0, 1.0, 2.0, 2.0, 1.0);
+        assert!(obq2 > obq1 && ddq2 > ddq1, "k=2 must cost a fence tail");
+        // Batching amortizes doorbell CPU on bulk writes with no
+        // residual (w divisible by cap).
+        let (ob_e, _) = ext(1.0, 64.0, 2.0, 1.0, 1.0);
+        let (ob_c, _) = ext(1.0, 64.0, 2.0, 1.0, 32.0);
+        assert!(ob_c < ob_e, "cap=32 must amortize doorbells on bulk writes");
+        // ...but defers wire issue into the fence for small txns whose
+        // lines never reach the cap.
+        let (_, dd_e) = ext(4.0, 1.0, 2.0, 1.0, 1.0);
+        let (_, dd_c) = ext(4.0, 1.0, 2.0, 1.0, 32.0);
+        assert!(
+            dd_c > dd_e,
+            "a 4-line DD txn staged under cap=32 must pay the deferral"
+        );
     }
 
     #[test]

@@ -266,6 +266,67 @@ pub fn run_append_on(mirror: &mut Mirror, cfg: AppendConfig) -> RunOutcome {
     run_threads(mirror, &mut sources)
 }
 
+/// One phase of a phase-mixed Transact run: `txns` transactions of
+/// shape `epochs` x `writes`. The adaptive bench (`fig14_adaptive`)
+/// drives the controller through distinct per-class regimes by chaining
+/// phases; each transaction carries its phase's [`TxnShape`] hint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Phase {
+    pub epochs: u32,
+    pub writes: u32,
+    pub txns: u64,
+}
+
+fn phased_source(phases: Vec<Phase>, seed: u64, thread: usize) -> Box<dyn TxnSource> {
+    let mut rng = Pcg64::with_stream(seed, thread as u64);
+    let base: Addr = 0x7000_0000_0000 + (thread as Addr) * 0x1_0000_0000;
+    let working_set: u64 = 1 << 16;
+    let mut phase = 0usize;
+    let mut done_in_phase = 0u64;
+    let mut val = 0u64;
+    Box::new(move |m: &mut Mirror, t: &mut crate::coordinator::ThreadCtx| {
+        while phase < phases.len() && done_in_phase >= phases[phase].txns {
+            phase += 1;
+            done_in_phase = 0;
+        }
+        let Some(p) = phases.get(phase).copied() else {
+            return false;
+        };
+        let hint = TxnShape {
+            epochs: p.epochs as f32,
+            writes: p.writes as f32,
+        };
+        m.txn_begin(t, Some(hint));
+        for _ in 0..p.epochs {
+            for _ in 0..p.writes {
+                let addr = base + rng.next_below(working_set) * LINE;
+                m.store(t, addr, val);
+                m.clwb(t, addr);
+            }
+            m.sfence(t);
+        }
+        m.txn_commit(t);
+        val += 1;
+        done_in_phase += 1;
+        true
+    })
+}
+
+/// Run a phase-mixed Transact workload on a caller-built mirror: each
+/// thread executes every phase in order (phase boundaries are
+/// per-thread, not barriers).
+pub fn run_phased_on(
+    mirror: &mut Mirror,
+    phases: &[Phase],
+    threads: usize,
+    seed: u64,
+) -> RunOutcome {
+    let mut sources: Vec<Box<dyn TxnSource>> = (0..threads.max(1))
+        .map(|i| phased_source(phases.to_vec(), seed, i))
+        .collect();
+    run_threads(mirror, &mut sources)
+}
+
 /// Slowdown of `kind` over NO-SM for one Transact configuration
 /// (a single Figure-4 cell).
 pub fn slowdown(plat: &Platform, kind: StrategyKind, cfg: TransactConfig) -> f64 {
@@ -555,6 +616,25 @@ mod tests {
             cfg,
         )
         .is_err());
+    }
+
+    #[test]
+    fn phased_workload_runs_every_phase_in_order() {
+        let p = Platform::default();
+        let phases = [
+            Phase { epochs: 4, writes: 1, txns: 10 },
+            Phase { epochs: 1, writes: 8, txns: 5 },
+            Phase { epochs: 16, writes: 2, txns: 3 },
+        ];
+        let mut m = Mirror::new(p.clone(), StrategyKind::SmOb, false);
+        let out = run_phased_on(&mut m, &phases, 1, 42);
+        assert_eq!(out.txns, 18, "every phase's txns commit");
+        assert_eq!(out.epochs, 4 * 10 + 5 + 16 * 3);
+        assert_eq!(out.writes, 4 * 10 + 8 * 5 + 32 * 3);
+        // Deterministic per seed.
+        let mut m2 = Mirror::new(p, StrategyKind::SmOb, false);
+        let out2 = run_phased_on(&mut m2, &phases, 1, 42);
+        assert_eq!(out.makespan, out2.makespan);
     }
 
     #[test]

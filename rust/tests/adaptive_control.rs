@@ -1,0 +1,182 @@
+//! Integration tests for the online adaptive mirroring control plane:
+//! the disabled-default anchor (event-identity with legacy SM-AD), the
+//! static-equivalence of phase-pure convergence, decision-replay
+//! determinism, and the quorum-floor invariant under fault plans.
+
+use pmsm::config::{AckPolicy, AdaptiveConfig, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::{Mirror, MirrorBuilder};
+use pmsm::net::{FaultsConfig, FlushPolicy, OnLoss};
+use pmsm::ptest::check;
+use pmsm::runtime::{fallback_knob_predictor, fallback_predictor};
+use pmsm::workloads::transact::{run_phased_on, Phase};
+
+const SEED: u64 = 7;
+
+fn mix() -> [Phase; 3] {
+    [
+        Phase { epochs: 1, writes: 64, txns: 12 },
+        Phase { epochs: 4, writes: 1, txns: 40 },
+        Phase { epochs: 64, writes: 2, txns: 8 },
+    ]
+}
+
+/// SM-AD with the control plane attached (quorum floor = the configured
+/// ack policy).
+fn adaptive_mirror(repl: ReplicationConfig, cfg: AdaptiveConfig) -> Mirror {
+    let plat = Platform::default();
+    MirrorBuilder::new(plat.clone(), StrategyKind::SmAd)
+        .replication(repl)
+        .predictor(fallback_predictor(&plat))
+        .knob_predictor(fallback_knob_predictor(&plat))
+        .adaptive(cfg)
+        .build()
+        .expect("valid adaptive mirror")
+}
+
+fn assert_same_events(a: &RunOutcome, b: &RunOutcome, what: &str) {
+    assert_eq!(a.makespan, b.makespan, "{what}: makespan");
+    assert_eq!(a.busy_ns, b.busy_ns, "{what}: busy_ns");
+    assert_eq!(a.txns, b.txns, "{what}: txns");
+    assert_eq!(a.writes, b.writes, "{what}: writes");
+    assert_eq!(a.epochs, b.epochs, "{what}: epochs");
+    assert_eq!(a.doorbells, b.doorbells, "{what}: doorbells");
+    assert_eq!(a.posted_wqes, b.posted_wqes, "{what}: posted_wqes");
+    assert_eq!(a.wire_wqes, b.wire_wqes, "{what}: wire_wqes");
+    assert_eq!(a.fences_issued, b.fences_issued, "{what}: fences_issued");
+}
+
+/// The anchor: `[adaptive]` disabled (the default) keeps SM-AD on the
+/// legacy binary-chooser path, event for event — attaching a disabled
+/// config must not perturb a single timestamp or counter.
+#[test]
+fn disabled_adaptive_is_event_identical_to_legacy_sm_ad() {
+    let plat = Platform::default();
+    let repl = ReplicationConfig::new(2, AckPolicy::All);
+    let mut legacy = MirrorBuilder::new(plat.clone(), StrategyKind::SmAd)
+        .replication(repl)
+        .predictor(fallback_predictor(&plat))
+        .build()
+        .expect("legacy sm-ad");
+    let mut anchored = adaptive_mirror(repl, AdaptiveConfig::default());
+    assert!(!anchored.adaptive().enabled, "default config is disabled");
+
+    let a = run_phased_on(&mut legacy, &mix(), 2, SEED);
+    let b = run_phased_on(&mut anchored, &mix(), 2, SEED);
+    assert_same_events(&a, &b, "disabled anchor");
+    // Same mode routing, and the disabled plane applies no knob vector.
+    assert_eq!(a.decisions.chose_ob, b.decisions.chose_ob);
+    assert_eq!(a.decisions.chose_dd, b.decisions.chose_dd);
+    assert_eq!(b.decisions.adaptive_switches, 0);
+    assert!(b.decisions.quorum_hist.is_empty());
+    assert!(b.decisions.cap_hist.is_empty());
+    assert_eq!(b.decisions.feedback_samples, 0);
+}
+
+/// Phase-pure convergence is exact: with feedback off (pure model
+/// drive), the controller pins each class's knob vector from txn 1, so
+/// the run is event-identical to the static strategy configured with
+/// that same vector.
+#[test]
+fn phase_pure_adaptive_matches_its_static_equivalent() {
+    let plat = Platform::default();
+    let repl = ReplicationConfig::new(2, AckPolicy::Quorum(1));
+    let model_only = AdaptiveConfig {
+        feedback: false,
+        ..AdaptiveConfig::enabled()
+    };
+    // (class, static mode, static cap) — the model's per-class optima
+    // at backups=2 (pinned by the unit tests in replication::adaptive).
+    for (phase, kind, cap) in [
+        (Phase { epochs: 4, writes: 1, txns: 30 }, StrategyKind::SmDd, 1usize),
+        (Phase { epochs: 1, writes: 64, txns: 15 }, StrategyKind::SmOb, 32),
+    ] {
+        let mut adaptive = adaptive_mirror(repl, model_only);
+        let got = run_phased_on(&mut adaptive, &[phase], 1, SEED);
+
+        let mut fixed = MirrorBuilder::new(plat.clone(), kind)
+            .replication(repl)
+            .batching(FlushPolicy::Cap(cap))
+            .build()
+            .expect("static equivalent");
+        let want = run_phased_on(&mut fixed, &[phase], 1, SEED);
+
+        let what = format!("{}x{} vs {kind}/cap{cap}", phase.epochs, phase.writes);
+        assert_same_events(&got, &want, &what);
+        assert_eq!(got.decisions.adaptive_switches, 0, "{what}: no re-tuning");
+        assert_eq!(got.decisions.cap_hist, vec![(cap, phase.txns)], "{what}");
+    }
+}
+
+/// Decision replay: the controller is a pure function of the (seeded)
+/// event stream — two identical runs produce identical outcomes AND
+/// identical decision statistics, including the feedback accumulators.
+#[test]
+fn decision_replay_is_deterministic() {
+    let repl = ReplicationConfig::new(2, AckPolicy::Quorum(1));
+    let run = || {
+        let mut m = adaptive_mirror(repl, AdaptiveConfig::enabled());
+        run_phased_on(&mut m, &mix(), 2, SEED)
+    };
+    let a = run();
+    let b = run();
+    assert_same_events(&a, &b, "replay");
+    assert_eq!(a.decisions.chose_ob, b.decisions.chose_ob);
+    assert_eq!(a.decisions.chose_dd, b.decisions.chose_dd);
+    assert_eq!(a.decisions.adaptive_switches, b.decisions.adaptive_switches);
+    assert_eq!(a.decisions.quorum_hist, b.decisions.quorum_hist);
+    assert_eq!(a.decisions.cap_hist, b.decisions.cap_hist);
+    assert_eq!(a.decisions.feedback_samples, b.decisions.feedback_samples);
+    assert!(
+        a.decisions.err_pct_sum.to_bits() == b.decisions.err_pct_sum.to_bits(),
+        "feedback error accumulator must replay bit-identically"
+    );
+    assert!(a.decisions.feedback_samples > 0, "feedback must engage");
+}
+
+/// The durability floor is inviolable: under randomized backup kill /
+/// rejoin plans (degrade mode, so every run completes), the controller
+/// never picks an ack quorum below the configured policy requirement.
+#[test]
+fn prop_quorum_never_undercuts_floor_under_faults() {
+    let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+    let floor = repl.required();
+    // Fault-free span bounds the kill placement.
+    let span = {
+        let mut m = adaptive_mirror(repl, AdaptiveConfig::enabled());
+        run_phased_on(&mut m, &mix(), 1, SEED).makespan
+    };
+    check("adaptive-quorum-floor", 12, |g| {
+        let victim = g.usize(0, 2);
+        let kill_at = g.u64(span / 10, span);
+        let plan = if g.bool() {
+            format!("kill:{victim}@{kill_at},rejoin:{victim}@{}", kill_at + span / 4)
+        } else {
+            format!("kill:{victim}@{kill_at}")
+        };
+        let plat = Platform::default();
+        let mut m = MirrorBuilder::new(plat.clone(), StrategyKind::SmAd)
+            .replication(repl)
+            .predictor(fallback_predictor(&plat))
+            .knob_predictor(fallback_knob_predictor(&plat))
+            .adaptive(AdaptiveConfig::enabled())
+            .faults(FaultsConfig::with_plan(&plan, OnLoss::Degrade).unwrap())
+            .build()
+            .expect("adaptive + faults");
+        let out = run_phased_on(&mut m, &mix(), 1, g.u64(1, 1 << 30));
+        assert!(out.stalled.is_none(), "degrade must complete ({plan})");
+        assert_eq!(out.txns, mix().iter().map(|p| p.txns).sum::<u64>());
+        let d = &out.decisions;
+        assert_eq!(
+            d.chose_ob + d.chose_dd,
+            out.txns,
+            "one decision per txn ({plan})"
+        );
+        for (k, n) in d.quorum_hist.iter().enumerate() {
+            assert!(
+                k >= floor || *n == 0,
+                "decision below the floor: k={k} n={n} ({plan})"
+            );
+        }
+    });
+}
