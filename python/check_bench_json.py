@@ -62,6 +62,12 @@ COUNTER_KEYS = (
     "chose_dd",
     "adaptive_switches",
     "feedback_samples",
+    "retransmits",
+    "timeouts",
+    "rnr_naks",
+    "qp_resets",
+    "dup_drops",
+    "dups_injected",
 )
 BENCHES_REQUIRING_COUNTERS = {
     "fig9_batching": ("doorbells", "posted_wqes", "busy_ns"),
@@ -99,6 +105,14 @@ BENCHES_REQUIRING_COUNTERS = {
         "adaptive_switches",
         "txns_committed",
         "busy_ns",
+    ),
+    "fig15_lossy_links": (
+        "retransmits",
+        "timeouts",
+        "rnr_naks",
+        "qp_resets",
+        "dup_drops",
+        "txns_committed",
     ),
 }
 
@@ -184,6 +198,27 @@ def check_result(
             f"{where}: adaptive_switches ({switches}) exceed txns_committed "
             f"({txns}) — the controller applies at most one knob-vector "
             "change per transaction begin"
+        )
+    retransmits = result.get("retransmits")
+    timeouts = result.get("timeouts")
+    if isinstance(retransmits, int) and isinstance(timeouts, int) and timeouts > retransmits:
+        errors.append(
+            f"{where}: timeouts ({timeouts}) exceed retransmits ({retransmits}) — "
+            "every ACK-timeout expiry re-sends, while RNR NAK retries re-send "
+            "without a timeout, so retransmits >= timeouts always"
+        )
+    dup_drops = result.get("dup_drops")
+    dups_injected = result.get("dups_injected")
+    if (
+        isinstance(dup_drops, int)
+        and isinstance(retransmits, int)
+        and isinstance(dups_injected, int)
+        and dup_drops > retransmits + dups_injected
+    ):
+        errors.append(
+            f"{where}: dup_drops ({dup_drops}) exceed retransmits "
+            f"({retransmits}) + dups_injected ({dups_injected}) — the PSN "
+            "dedup can only drop deliveries some re-send or dup event created"
         )
     return errors
 

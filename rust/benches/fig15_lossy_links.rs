@@ -1,0 +1,271 @@
+//! Figure-15 bench (ours): lossy links — Transact swept over loss rate
+//! × ack policy × SM strategy with the RC retry machinery masking the
+//! wire, reporting makespan plus the transport counters (retransmits,
+//! timeouts, RNR NAKs, QP resets, dedup drops). Emits
+//! `BENCH_fig15_lossy_links.json` with `retransmits` / `timeouts` /
+//! `rnr_naks` / `qp_resets` / `dup_drops` / `txns_committed` counters
+//! per cell; CI's bench-smoke job validates the artifact (including
+//! `timeouts <= retransmits` on every cell) with
+//! `python/check_bench_json.py`.
+//!
+//! The bench *asserts* the tentpole's acceptance shape:
+//!   * the 0%-loss cell is event-for-event the reliable-wire anchor
+//!     (identical makespan, zero transport counters) — the link layer
+//!     never taxes a clean wire;
+//!   * makespan is monotone non-decreasing in the loss rate for every
+//!     strategy × policy cell — the common-random-numbers hash makes
+//!     the drop set at `p1` a subset of the drop set at `p2 > p1`;
+//!   * `retransmits >= timeouts` and
+//!     `dup_drops <= retransmits + dups_injected` everywhere;
+//!   * a sustained 100% loss window on one of two links exhausts the
+//!     retry budget into a QP reset, which *stalls* `all` under halt
+//!     but is fully masked by `quorum:1` (every txn commits) — the
+//!     quorum machinery tolerates link failure exactly as it tolerates
+//!     node failure;
+//!   * a bounded receiver (`rnr_depth 1`) answers RNR NAKs, which count
+//!     as retransmits but never as ACK timeouts.
+//!
+//! Run: `cargo bench --bench fig15_lossy_links`
+//! Scale with PMSM_BENCH_TXNS (default 400 transactions per cell) and
+//! PMSM_BENCH_ITERS (wall-clock repetitions per timing).
+
+use pmsm::bench::Bencher;
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::sched::RunOutcome;
+use pmsm::coordinator::MirrorBuilder;
+use pmsm::metrics::report::Table;
+use pmsm::net::{FaultsConfig, LinkConfig, OnLoss};
+use pmsm::workloads::transact::run_transact_on;
+use pmsm::workloads::TransactConfig;
+
+const STRATEGIES: [StrategyKind; 3] =
+    [StrategyKind::SmRc, StrategyKind::SmOb, StrategyKind::SmDd];
+/// Run-long loss rates on backup 1's link (percent strings — parsed
+/// exactly, displayed verbatim in the table header).
+const RATES: [&str; 4] = ["0%", "0.5%", "2%", "5%"];
+const POLICIES: [(AckPolicy, &str); 2] =
+    [(AckPolicy::All, "all"), (AckPolicy::Quorum(1), "quorum:1")];
+
+fn cell(
+    plat: &Platform,
+    kind: StrategyKind,
+    policy: AckPolicy,
+    on_loss: OnLoss,
+    link: Option<LinkConfig>,
+    txns: u64,
+) -> RunOutcome {
+    let mut b = MirrorBuilder::new(plat.clone(), kind)
+        .replication(ReplicationConfig::new(2, policy))
+        .faults(FaultsConfig::with_plan("", on_loss).expect("empty plan"));
+    if let Some(link) = link {
+        b = b.link(link);
+    }
+    let mut m = b.build().expect("valid lossy cell");
+    let cfg = TransactConfig {
+        epochs: 4,
+        writes: 1,
+        txns,
+        threads: 1,
+        ..Default::default()
+    };
+    run_transact_on(&mut m, cfg)
+}
+
+/// A run-long loss config on backup 1's link with a fixed seed.
+fn loss_link(rate: &str) -> LinkConfig {
+    let mut l = LinkConfig::with_plan(&format!("loss:1:{rate}")).expect("valid rate");
+    l.seed = 42;
+    l
+}
+
+fn check_invariants(label: &str, out: &RunOutcome) {
+    assert!(
+        out.retransmits >= out.transport_timeouts,
+        "{label}: retransmits {} < timeouts {}",
+        out.retransmits,
+        out.transport_timeouts
+    );
+    assert!(
+        out.dup_drops <= out.retransmits + out.dups_injected,
+        "{label}: dup_drops {} > retransmits {} + dups_injected {}",
+        out.dup_drops,
+        out.retransmits,
+        out.dups_injected
+    );
+}
+
+fn main() {
+    let txns: u64 = std::env::var("PMSM_BENCH_TXNS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let plat = Platform::default();
+
+    // ---- Loss-rate sweep: strategy x rate at each ack policy, with the
+    // anchor, monotonicity and counter invariants checked per cell.
+    for &(policy, pname) in &POLICIES {
+        let mut t = Table::new(&["strategy", "0%", "0.5%", "2%", "5%", "retransmits @5%"]);
+        for &kind in &STRATEGIES {
+            let baseline = cell(&plat, kind, policy, OnLoss::Degrade, None, txns);
+            assert_eq!(baseline.retransmits, 0, "{kind:?}/{pname}: reliable wire resent");
+            let outs: Vec<RunOutcome> = RATES
+                .iter()
+                .map(|r| {
+                    cell(&plat, kind, policy, OnLoss::Degrade, Some(loss_link(r)), txns)
+                })
+                .collect();
+            for (rate, out) in RATES.iter().zip(&outs) {
+                let label = format!("{kind:?}/{pname}/loss-{rate}");
+                assert_eq!(out.txns, txns, "{label}: every txn must commit");
+                check_invariants(&label, out);
+            }
+            // 0% loss through an *enabled* link is the anchor bit for bit.
+            assert_eq!(
+                outs[0].makespan, baseline.makespan,
+                "{kind:?}/{pname}: a 0%-loss link must cost nothing"
+            );
+            assert_eq!(outs[0].retransmits, 0, "{kind:?}/{pname}: 0% loss resent");
+            assert_eq!(outs[0].dup_drops, 0, "{kind:?}/{pname}: 0% loss deduped");
+            // Common random numbers: makespan monotone in the loss rate.
+            for w in outs.windows(2) {
+                assert!(
+                    w[0].makespan <= w[1].makespan,
+                    "{kind:?}/{pname}: makespan not monotone in loss rate \
+                     ({} > {})",
+                    w[0].makespan,
+                    w[1].makespan
+                );
+                assert!(
+                    w[0].retransmits <= w[1].retransmits,
+                    "{kind:?}/{pname}: retransmits not monotone in loss rate"
+                );
+            }
+            assert!(
+                outs.last().unwrap().retransmits > 0,
+                "{kind:?}/{pname}: 5% loss never retransmitted"
+            );
+            t.row(vec![
+                format!("{kind}"),
+                format!("{:.3} ms", outs[0].makespan as f64 / 1e6),
+                format!("{:.3} ms", outs[1].makespan as f64 / 1e6),
+                format!("{:.3} ms", outs[2].makespan as f64 / 1e6),
+                format!("{:.3} ms", outs[3].makespan as f64 / 1e6),
+                format!("{}", outs[3].retransmits),
+            ]);
+        }
+        println!(
+            "Figure 15 — Transact 4-1 lossy links, backups=2, ack {pname} \
+             (makespan by strategy x loss rate on backup 1's link)\n{}",
+            t.render()
+        );
+    }
+
+    // ---- Retry exhaustion: a sustained 100% loss window outlasts the
+    // retry budget (3 retries x 8 us timeout with exponential backoff
+    // spans 56 us << the 360 us window), forcing a QP reset. Under
+    // `all` + halt the lost link stalls the run; `quorum:1` masks it
+    // completely — link failure degrades into the node-failure path.
+    let exhaust = || {
+        let mut l =
+            LinkConfig::with_plan("drop:1@40000..400000:100%").expect("valid window");
+        l.retry_count = 3;
+        l
+    };
+    let stalled = cell(
+        &plat,
+        StrategyKind::SmOb,
+        AckPolicy::All,
+        OnLoss::Halt,
+        Some(exhaust()),
+        txns,
+    );
+    assert!(stalled.qp_resets >= 1, "the loss window never exhausted the QP");
+    assert!(
+        stalled.stalled.is_some(),
+        "ack all + halt must stall when one link dies"
+    );
+    let masked = cell(
+        &plat,
+        StrategyKind::SmOb,
+        AckPolicy::Quorum(1),
+        OnLoss::Halt,
+        Some(exhaust()),
+        txns,
+    );
+    assert!(masked.qp_resets >= 1, "the loss window never exhausted the QP");
+    assert!(masked.stalled.is_none(), "quorum:1 must mask a single lost link");
+    assert_eq!(masked.txns, txns, "quorum:1 must commit every txn");
+    check_invariants("exhaustion/quorum:1", &masked);
+    println!(
+        "exhaustion: ack all stalls ({} qp reset(s)); quorum:1 masks the \
+         dead link ({} qp reset(s), {} retransmits, all {} txns committed)",
+        stalled.qp_resets, masked.qp_resets, masked.retransmits, masked.txns
+    );
+
+    // ---- RNR: a depth-1 receiver buffer NAKs bursts; NAK retries are
+    // retransmits without ACK timeouts.
+    let rnr = {
+        let mut l = LinkConfig::default();
+        l.rnr_depth = 1;
+        cell(
+            &plat,
+            StrategyKind::SmOb,
+            AckPolicy::All,
+            OnLoss::Degrade,
+            Some(l),
+            txns,
+        )
+    };
+    assert!(rnr.rnr_naks > 0, "a depth-1 receiver never NAKed");
+    assert_eq!(rnr.transport_timeouts, 0, "an RNR NAK is not an ACK timeout");
+    assert_eq!(rnr.txns, txns, "RNR backpressure must not lose txns");
+    check_invariants("rnr", &rnr);
+    println!(
+        "rnr: depth-1 receiver — {} NAK(s), {} retransmit(s), 0 timeouts",
+        rnr.rnr_naks, rnr.retransmits
+    );
+
+    // ---- Simulator throughput per cell (perf tracking): each timing
+    // cell carries its run's transport counters so the JSON records the
+    // `timeouts <= retransmits` invariant directly.
+    let mut b = Bencher::new();
+    for &kind in &STRATEGIES {
+        for &(policy, pname) in &POLICIES {
+            for rate in &RATES {
+                let mut counters = (0u64, 0u64, 0u64, 0u64, 0u64, 0u64);
+                b.bench_elems(
+                    &format!("transact/4-1/{kind}/{pname}/loss-{rate}"),
+                    txns as f64,
+                    || {
+                        let out = cell(
+                            &plat,
+                            kind,
+                            policy,
+                            OnLoss::Degrade,
+                            Some(loss_link(rate)),
+                            txns,
+                        );
+                        counters = (
+                            out.retransmits,
+                            out.transport_timeouts,
+                            out.rnr_naks,
+                            out.qp_resets,
+                            out.dup_drops,
+                            out.txns,
+                        );
+                        out
+                    },
+                );
+                b.annotate_last(&[
+                    ("retransmits", counters.0),
+                    ("timeouts", counters.1),
+                    ("rnr_naks", counters.2),
+                    ("qp_resets", counters.3),
+                    ("dup_drops", counters.4),
+                    ("txns_committed", counters.5),
+                ]);
+            }
+        }
+    }
+    pmsm::bench::emit_json(&b, "fig15_lossy_links");
+}

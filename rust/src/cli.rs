@@ -19,8 +19,8 @@ use crate::coordinator::{ConcurrencyConfig, MirrorBuilder, ShardingConfig};
 use crate::metrics::report::{fig4_table, fig5_tables, Fig4Row, Fig5Row};
 use crate::metrics::{GroupReport, ShardedReport};
 use crate::net::{
-    BatchingConfig, CoalesceMode, CoalescingConfig, FaultsConfig, FlushPolicy, OnLoss,
-    PersistDomain,
+    BatchingConfig, CoalesceMode, CoalescingConfig, FaultsConfig, FlushPolicy, LinkConfig,
+    OnLoss, PersistDomain,
 };
 use crate::recovery;
 use crate::replication::{KnobPredictor, Predictor};
@@ -120,6 +120,8 @@ pub fn help_text() -> &'static str {
                  [--persist-domain adr|eadr|rpmem-flush|log-structured]\n\
                  [--adaptive [on|off] --adaptive-quorum on|off]\n\
                  [--adaptive-batch on|off --adaptive-feedback on|off]\n\
+                 [--link-plan SPEC --transport-timeout-ns N]\n\
+                 [--retry-count N --rnr-depth N --link-seed N]\n\
        sweep     Figure-4 Transact sweep  [--txns N] [--crossover] [--ablate]\n\
        whisper   Figure-5 WHISPER suite   [--ops N --threads N --app NAME]\n\
        analytic  AOT latency model via PJRT [--validate]\n\
@@ -128,7 +130,8 @@ pub fn help_text() -> &'static str {
                  [--shards S --shard-map M --flush-policy P --batch-cap K]\n\
                  [--coalesce M --commit-pipelines N --group-fence-ns N]\n\
                  [--election-handoff-ns N --election-line-ns N]\n\
-                 [--persist-domain D]\n\
+                 [--persist-domain D --link-plan SPEC]\n\
+                 [--transport-timeout-ns N --retry-count N --rnr-depth N]\n\
                  (cross-replica ledger check; fault-aware when a plan is\n\
                  set; per-shard checks + cross-shard merge when sharded)\n\
        config    print platform model parameters (Table 2)\n\
@@ -197,6 +200,26 @@ pub fn help_text() -> &'static str {
      ewma_pct / hysteresis_pct. Disabled (the default), sm-ad is the\n\
      static per-txn OB/DD pick, event-for-event.\n\
      \n\
+     LOSSY LINKS: --link-plan injects wire faults on the primary->backup\n\
+     links (overrides the [link] config table). Tokens: drop:B@T loses\n\
+     the message in flight at T; drop:B@T1..T2[:P] loses every (or a\n\
+     P-fraction of) messages issued in the window; delay:B@T:D delivers\n\
+     D ns late (D past the ack timeout also triggers a spurious\n\
+     retransmit); dup:B@T delivers twice; loss:B:P drops a seeded-random\n\
+     P-fraction for the whole run (P like 0.5% or 10%). Lost and\n\
+     unacked messages arm a per-QP ack timeout\n\
+     (--transport-timeout-ns) and retransmit with exponential backoff\n\
+     up to --retry-count times; --rnr-depth N makes a backup whose\n\
+     remote engine holds >= N pending lines answer RNR NAK (one extra\n\
+     round trip, never a timeout). Retry exhaustion moves the QP to an\n\
+     error state; the fabric heals it by re-establishing the\n\
+     connection and replaying from the last remotely-acked sequence\n\
+     number — the same resync path a killed backup rejoins through, so\n\
+     --on-loss halt/degrade apply unchanged. Backups deduplicate\n\
+     replayed (thread, seq) pairs, so retransmits never double-apply\n\
+     and the ledger stays truthful. The durability verdict is\n\
+     unchanged: a fence completes only on real remote acks.\n\
+     \n\
      FAULT PLANS: --fault-plan \"kill:B@T,rejoin:B@T,...\" kills/rejoins\n\
      backup B at virtual time T (ns). Killed backups leave fan-out and\n\
      ack accounting; --on-loss halt stops at an unsatisfiable fence\n\
@@ -240,20 +263,23 @@ pub struct RunSetup {
     pub coalescing: CoalescingConfig,
     pub concurrency: ConcurrencyConfig,
     pub adaptive: AdaptiveConfig,
+    pub link: LinkConfig,
 }
 
 /// Platform + replica-group shape + failure dynamics + sharding +
-/// batching + coalescing + concurrency + adaptive control: `--config`
-/// supplies all eight (via the `[replication]` / `[faults]` /
-/// `[sharding]` / `[batching]` / `[coalescing]` / `[concurrency]` /
-/// `[adaptive]` sections); `--backups` /
+/// batching + coalescing + concurrency + adaptive control + link
+/// shape: `--config` supplies all nine (via the `[replication]` /
+/// `[faults]` / `[sharding]` / `[batching]` / `[coalescing]` /
+/// `[concurrency]` / `[adaptive]` / `[link]` sections); `--backups` /
 /// `--ack-policy` / `--fault-plan` / `--on-loss` / `--handoff-ns` /
 /// `--resync-line-ns` / `--election-handoff-ns` / `--election-line-ns`
 /// / `--shards` / `--shard-map` / `--flush-policy` / `--batch-cap` /
 /// `--coalesce` / `--commit-pipelines` / `--group-fence-ns` /
-/// `--persist-domain` override (the election flags land in the
-/// `[election]` table's slots inside the faults bundle; the persist
-/// domain lands in the platform's `[remote]` slot).
+/// `--persist-domain` / `--link-plan` / `--transport-timeout-ns` /
+/// `--retry-count` / `--rnr-depth` / `--link-seed` override (the
+/// election flags land in the `[election]` table's slots inside the
+/// faults bundle; the persist domain lands in the platform's
+/// `[remote]` slot).
 fn setup_from(args: &Args) -> Result<RunSetup> {
     let mut s = match args.get("config") {
         Some(path) => {
@@ -267,6 +293,7 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
                 coalescing: e.coalescing,
                 concurrency: e.concurrency,
                 adaptive: e.adaptive,
+                link: e.link,
             }
         }
         None => RunSetup {
@@ -278,6 +305,7 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
             coalescing: CoalescingConfig::default(),
             concurrency: ConcurrencyConfig::default(),
             adaptive: AdaptiveConfig::default(),
+            link: LinkConfig::default(),
         },
     };
     if let Some(b) = args.get("backups") {
@@ -343,6 +371,29 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
             )
         })?;
     }
+    if let Some(v) = args.get("link-plan") {
+        s.link.plan = v.parse().context("--link-plan")?;
+    }
+    if let Some(v) = args.get("transport-timeout-ns") {
+        s.link.transport_timeout_ns = v.parse().with_context(|| {
+            format!("--transport-timeout-ns {v} (must be a duration in ns >= 1)")
+        })?;
+    }
+    if let Some(v) = args.get("retry-count") {
+        s.link.retry_count = v
+            .parse()
+            .with_context(|| format!("--retry-count {v} (must be a count >= 0)"))?;
+    }
+    if let Some(v) = args.get("rnr-depth") {
+        s.link.rnr_depth = v
+            .parse()
+            .with_context(|| format!("--rnr-depth {v} (must be a line count >= 0)"))?;
+    }
+    if let Some(v) = args.get("link-seed") {
+        s.link.seed = v
+            .parse()
+            .with_context(|| format!("--link-seed {v} (must be a u64 seed)"))?;
+    }
     // `--adaptive` turns the control plane on; the per-axis flags
     // enable it implicitly (asking for an axis means asking for the
     // controller) and accept on/off to disable one axis of an
@@ -369,6 +420,7 @@ fn setup_from(args: &Args) -> Result<RunSetup> {
     s.coalescing.validate_with(s.batching.policy)?;
     s.concurrency.validate()?;
     s.adaptive.validate()?;
+    s.link.validate(s.repl.backups)?;
     Ok(s)
 }
 
@@ -426,6 +478,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         coalescing,
         concurrency,
         adaptive,
+        link,
     } = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let workload = args.get("workload").unwrap_or("transact");
@@ -483,6 +536,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     if plat.persist_domain != PersistDomain::Adr {
         println!("persist domain: {} (adr is the paper's anchor)", plat.persist_domain);
     }
+    if link.enabled() {
+        println!(
+            "lossy link: plan {} (ack timeout {} ns, retry {}, rnr depth {}, \
+             seed {})",
+            link.plan, link.transport_timeout_ns, link.retry_count, link.rnr_depth,
+            link.seed
+        );
+    }
     if adaptive.enabled && strategy == StrategyKind::SmAd {
         println!(
             "adaptive: per-class control plane (quorum {}, batch {}, \
@@ -501,7 +562,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         .batching(batching.policy)
         .coalescing(coalescing.mode)
         .concurrency(concurrency)
-        .adaptive(adaptive);
+        .adaptive(adaptive)
+        .link(link.clone());
     if let Some(p) = predictor {
         builder = builder.predictor(p);
     }
@@ -578,6 +640,22 @@ fn cmd_run(args: &Args) -> Result<()> {
             outcome.flush_verbs,
             outcome.compaction_lines,
             outcome.volatile_window_ns
+        );
+    }
+    if link.enabled() || outcome.retransmits > 0 || outcome.rnr_naks > 0 {
+        println!(
+            "  transport     : {} retransmit(s) ({} timeout, {} rnr nak), \
+             {:.3} ms backoff, {} qp reset(s)",
+            outcome.retransmits,
+            outcome.transport_timeouts,
+            outcome.rnr_naks,
+            outcome.backoff_ns as f64 / 1e6,
+            outcome.qp_resets
+        );
+        println!(
+            "                  {} duplicate line(s) on the wire, {} dropped \
+             by receiver dedup",
+            outcome.dups_injected, outcome.dup_drops
         );
     }
     if outcome.decisions.chose_ob + outcome.decisions.chose_dd > 0 {
@@ -841,6 +919,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
         coalescing,
         concurrency,
         adaptive,
+        link,
     } = setup_from(args)?;
     let strategy: StrategyKind = args.get("strategy").unwrap_or("sm-ob").parse()?;
     let txns = args.get_u64("txns", 10)?;
@@ -851,6 +930,14 @@ fn cmd_recover(args: &Args) -> Result<()> {
     let primary_faults = faults.plan.has_primary_faults();
     let on_loss = faults.on_loss;
     let domain = plat.persist_domain;
+    if link.enabled() {
+        println!(
+            "lossy link: plan {} (ack timeout {} ns, retry {}, rnr depth {}, \
+             seed {})",
+            link.plan, link.transport_timeout_ns, link.retry_count, link.rnr_depth,
+            link.seed
+        );
+    }
     let mut m = MirrorBuilder::new(plat, strategy)
         .replication(repl)
         .faults(faults)
@@ -859,6 +946,7 @@ fn cmd_recover(args: &Args) -> Result<()> {
         .coalescing(coalescing.mode)
         .concurrency(concurrency)
         .adaptive(adaptive)
+        .link(link)
         .ledger(true)
         .build()?;
     let mut t = ThreadCtx::new(0);
@@ -1608,6 +1696,108 @@ mod tests {
             "--on-loss".to_string(),
             "halt".to_string(),
         ])
+        .unwrap();
+    }
+
+    #[test]
+    fn cli_link_flags_roundtrip() {
+        // Disabled by default: the reliable-wire anchor.
+        let l = setup_from(&Args::parse(&argv(&["run"]))).unwrap().link;
+        assert_eq!(l, LinkConfig::default());
+        assert!(!l.enabled());
+        // All five flags land in the config.
+        let l = setup_from(&Args::parse(&argv(&[
+            "run", "--backups", "2", "--link-plan", "drop:1@40000,loss:0:1%",
+            "--transport-timeout-ns", "6000", "--retry-count", "5",
+            "--rnr-depth", "32", "--link-seed", "7",
+        ])))
+        .unwrap()
+        .link;
+        assert!(l.enabled());
+        assert_eq!(l.plan.to_string(), "drop:1@40000,loss:0:1%");
+        assert_eq!(l.transport_timeout_ns, 6_000);
+        assert_eq!(l.retry_count, 5);
+        assert_eq!(l.rnr_depth, 32);
+        assert_eq!(l.seed, 7);
+        // CLI overrides the [link] config table; the other knobs keep
+        // the file's values.
+        let dir = std::env::temp_dir().join("pmsm_cli_link_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("exp.toml");
+        std::fs::write(
+            &path,
+            "[link]\nplan = \"drop:0@10000\"\ntransport_timeout_ns = 5000\n\
+             retry_count = 4\n",
+        )
+        .unwrap();
+        let path = path.to_str().unwrap();
+        let l = setup_from(&Args::parse(&argv(&[
+            "run", "--config", path, "--retry-count", "9",
+        ])))
+        .unwrap()
+        .link;
+        assert_eq!(l.retry_count, 9, "flag overrides the TOML");
+        assert_eq!(l.transport_timeout_ns, 5_000, "timeout keeps the TOML value");
+        assert_eq!(l.plan.to_string(), "drop:0@10000", "plan keeps the TOML value");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn cli_rejects_bad_link_shapes() {
+        // Plan names a backup outside the group.
+        let err = setup_from(&Args::parse(&argv(&[
+            "run", "--backups", "2", "--link-plan", "drop:5@100",
+        ])))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("backup 5"), "{err:#}");
+        // Malformed token names the flag.
+        let err = setup_from(&Args::parse(&argv(&[
+            "run", "--link-plan", "snip:0@100",
+        ])))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("--link-plan"), "{err:#}");
+        // Out-of-range probability and degenerate knobs.
+        assert!(setup_from(&Args::parse(&argv(&[
+            "run", "--backups", "2", "--link-plan", "loss:0:150%",
+        ])))
+        .is_err());
+        assert!(setup_from(&Args::parse(&argv(&[
+            "run", "--retry-count", "-1",
+        ])))
+        .is_err());
+        assert!(setup_from(&Args::parse(&argv(&[
+            "run", "--backups", "2", "--link-plan", "drop:0@100",
+            "--transport-timeout-ns", "0",
+        ])))
+        .is_err());
+    }
+
+    #[test]
+    fn run_command_lossy_link_smoke() {
+        // One-shot drops + run-long loss complete under degrade.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-ob", "--txns", "40", "--backups", "2",
+            "--ack-policy", "quorum:1", "--on-loss", "degrade",
+            "--link-plan", "drop:1@40000,loss:0:0.5%",
+        ]))
+        .unwrap();
+        // Sharded + RNR-bounded receiver.
+        main_with_args(&argv(&[
+            "run", "--strategy", "sm-dd", "--txns", "20", "--shards", "2",
+            "--link-plan", "delay:0@30000:20000", "--rnr-depth", "64",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn recover_command_lossy_link_check() {
+        // The crash sweep holds under wire loss: retransmits and dedup
+        // never weaken durability verdicts.
+        main_with_args(&argv(&[
+            "recover", "--strategy", "sm-ob", "--txns", "6", "--backups", "2",
+            "--ack-policy", "quorum:1", "--on-loss", "degrade",
+            "--link-plan", "drop:1@20000,dup:0@30000",
+        ]))
         .unwrap();
     }
 }

@@ -17,6 +17,7 @@ pub use crate::net::PersistDomain;
 use crate::coordinator::pipeline::ConcurrencyConfig;
 use crate::coordinator::shard::ShardingConfig;
 use crate::net::faults::FaultsConfig;
+use crate::net::link::LinkConfig;
 use crate::net::wqe::{BatchingConfig, CoalescingConfig, FlushPolicy};
 use anyhow::{bail, Context, Result};
 
@@ -64,6 +65,11 @@ pub struct Experiment {
     /// mode/quorum/batch tuning with measured-latency feedback;
     /// defaults to disabled — the static SM-AD predictor path).
     pub adaptive: AdaptiveConfig,
+    /// Lossy-link fault injection (`[link]` section: per-backup
+    /// drop/delay/dup plan + the RC retry knobs that mask it —
+    /// `transport_timeout_ns`, `retry_count`, `rnr_depth`, `seed`;
+    /// defaults to a perfectly reliable wire — link layer off).
+    pub link: LinkConfig,
     pub seed: u64,
     /// Record the durability ledger (needed for recovery checks; off for
     /// large benches).
@@ -87,6 +93,7 @@ impl Default for Experiment {
             coalescing: CoalescingConfig::default(),
             concurrency: ConcurrencyConfig::default(),
             adaptive: AdaptiveConfig::default(),
+            link: LinkConfig::default(),
             seed: 42,
             ledger: false,
         }
@@ -246,6 +253,40 @@ impl Experiment {
         exp.adaptive
             .validate()
             .context("invalid [adaptive] section")?;
+        if let Some(v) = doc.get("link.plan") {
+            exp.link.plan = v.as_str()?.parse().context("link.plan")?;
+        }
+        if let Some(v) = doc.get("link.transport_timeout_ns") {
+            let n = v.as_int()?;
+            if n < 1 {
+                bail!("link.transport_timeout_ns must be >= 1, got {n}");
+            }
+            exp.link.transport_timeout_ns = n as u64;
+        }
+        if let Some(v) = doc.get("link.retry_count") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("link.retry_count must be >= 0, got {n}");
+            }
+            exp.link.retry_count = n as u32;
+        }
+        if let Some(v) = doc.get("link.rnr_depth") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("link.rnr_depth must be >= 0, got {n}");
+            }
+            exp.link.rnr_depth = n as usize;
+        }
+        if let Some(v) = doc.get("link.seed") {
+            let n = v.as_int()?;
+            if n < 0 {
+                bail!("link.seed must be >= 0, got {n}");
+            }
+            exp.link.seed = n as u64;
+        }
+        exp.link
+            .validate(exp.replication.backups)
+            .context("invalid [link] section")?;
         if let Some(v) = doc.get("workload.kind") {
             match v.as_str()? {
                 "transact" => {
@@ -707,6 +748,52 @@ hysteresis_pct = 5
         // Malformed values are experiment-load errors.
         assert!(Experiment::from_str("[remote]\npersist_domain = \"dax\"").is_err());
         assert!(Experiment::from_str("[remote]\npersist_domain = 3").is_err());
+    }
+
+    #[test]
+    fn link_section_roundtrip() {
+        let text = r#"
+[replication]
+backups = 3
+ack_policy = "quorum:2"
+
+[link]
+plan = "drop:1@50000,loss:2:0.5%"
+transport_timeout_ns = 6000
+retry_count = 5
+rnr_depth = 32
+seed = 99
+"#;
+        let exp = Experiment::from_str(text).unwrap();
+        assert_eq!(exp.link.plan.to_string(), "drop:1@50000,loss:2:0.5%");
+        assert_eq!(exp.link.transport_timeout_ns, 6000);
+        assert_eq!(exp.link.retry_count, 5);
+        assert_eq!(exp.link.rnr_depth, 32);
+        assert_eq!(exp.link.seed, 99);
+        assert!(exp.link.enabled());
+    }
+
+    #[test]
+    fn link_defaults_to_reliable_wire_when_section_missing() {
+        let exp = Experiment::from_str("[experiment]\nseed = 1").unwrap();
+        assert_eq!(exp.link, LinkConfig::default());
+        assert!(!exp.link.enabled());
+    }
+
+    #[test]
+    fn link_section_rejects_bad_shapes() {
+        // Plan names a backup outside the group (default: 1 backup).
+        assert!(Experiment::from_str("[link]\nplan = \"drop:1@100\"").is_err());
+        // Malformed plan tokens.
+        assert!(Experiment::from_str("[link]\nplan = \"drop:0\"").is_err());
+        assert!(Experiment::from_str("[link]\nplan = \"loss:0:150%\"").is_err());
+        // Degenerate knobs.
+        assert!(
+            Experiment::from_str("[link]\ntransport_timeout_ns = 0").is_err()
+        );
+        assert!(Experiment::from_str("[link]\nretry_count = -1").is_err());
+        assert!(Experiment::from_str("[link]\nrnr_depth = -2").is_err());
+        assert!(Experiment::from_str("[link]\nseed = -7").is_err());
     }
 
     #[test]

@@ -42,8 +42,8 @@ use crate::mem::DurabilityLog;
 use crate::metrics::LogHistogram;
 use crate::net::{
     elect, BatchingConfig, Candidate, CoalesceMode, CoalescingConfig, Fabric, FaultKind,
-    FaultTimeline, FaultsConfig, FlushPolicy, PersistDomain, RemoteEngine, Stall,
-    WriteMeta,
+    FaultTimeline, FaultsConfig, FlushPolicy, LinkConfig, PersistDomain, RemoteEngine,
+    Stall, WriteMeta,
 };
 use crate::replication::{
     self, ControlPlane, DecisionStats, KnobPredictor, Predictor, SmAd, Strategy, TxnShape,
@@ -175,6 +175,10 @@ pub struct Mirror {
     /// membership poll on the hot paths (false = guard-clause
     /// pass-through, event-for-event the pre-failover coordinator).
     primary_faults: bool,
+    /// Lossy-link shape every shard's fabric runs under (disabled by
+    /// default — the perfectly-reliable-wire anchor; see
+    /// [`crate::net::link`]).
+    link: LinkConfig,
     /// Online adaptive control-plane shape (disabled by default — the
     /// static SM-AD anchor; see [`crate::replication::adaptive`]).
     adaptive: AdaptiveConfig,
@@ -286,6 +290,7 @@ impl Mirror {
             repl,
             faults,
             sharding,
+            LinkConfig::default(),
             ledger,
             AdaptiveConfig::default(),
             None,
@@ -307,6 +312,7 @@ impl Mirror {
         repl: ReplicationConfig,
         faults: FaultsConfig,
         sharding: ShardingConfig,
+        link: LinkConfig,
         ledger: bool,
         adaptive: AdaptiveConfig,
         knob_predictor: Option<KnobPredictor>,
@@ -314,6 +320,7 @@ impl Mirror {
         repl.validate()?;
         faults.validate(repl.backups)?;
         sharding.validate()?;
+        link.validate(repl.backups)?;
         if kind == StrategyKind::SmRc
             && (faults
                 .plan
@@ -386,8 +393,12 @@ impl Mirror {
             } else {
                 replication::make_strategy(kind, pred)?
             };
-            let mut fabric =
-                Fabric::with_faults(&plat, &repl, faults.clone(), ledger).with_shard(s);
+            // `with_shard` before `with_link`: the shard id salts the
+            // link's per-backup hash streams, so shards flip
+            // independent loss coins under one seed.
+            let mut fabric = Fabric::with_faults(&plat, &repl, faults.clone(), ledger)
+                .with_shard(s)
+                .with_link(&link);
             // Primary events are coordinator business: all S shards must
             // fail over to ONE cross-shard winner, so each lane's fabric
             // treats them as barriers and the mirror consumes them in
@@ -415,6 +426,7 @@ impl Mirror {
             pipe_wait_ns: 0,
             pipe_busy_ns: 0,
             primary_faults,
+            link,
             adaptive,
             load_cost: 5,
         })
@@ -649,6 +661,55 @@ impl Mirror {
             .iter()
             .map(|l| l.fabric.volatile_window_ns_total())
             .sum()
+    }
+
+    /// The lossy-link shape every shard runs under (disabled by
+    /// default).
+    pub fn link(&self) -> &LinkConfig {
+        &self.link
+    }
+
+    /// Wire re-sends across all shards and backups, any cause (0 on a
+    /// reliable wire; always `>= transport_timeouts()`).
+    pub fn retransmits(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.retransmits_total()).sum()
+    }
+
+    /// ACK-timeout expiries across all shards and backups.
+    pub fn transport_timeouts(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.timeouts_total()).sum()
+    }
+
+    /// RNR NAKs taken at saturated backups across all shards.
+    pub fn rnr_naks(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.rnr_naks_total()).sum()
+    }
+
+    /// QP error-state transitions healed via transient kill + rejoin,
+    /// across all shards and backups.
+    pub fn qp_resets(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.qp_resets_total()).sum()
+    }
+
+    /// Total timeout/backoff ns the transport spent masking lossy
+    /// links, across all shards and backups.
+    pub fn backoff_ns(&self) -> Ns {
+        self.lanes.iter().map(|l| l.fabric.backoff_ns_total()).sum()
+    }
+
+    /// Duplicate line deliveries injected (dup events and spurious
+    /// retransmits) across all shards and backups.
+    pub fn dups_injected(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.fabric.dups_injected_total())
+            .sum()
+    }
+
+    /// Duplicate line deliveries dropped by the remote PSN dedup across
+    /// all shards and backups (`<= retransmits() + dups_injected()`).
+    pub fn dup_drops(&self) -> u64 {
+        self.lanes.iter().map(|l| l.fabric.dup_drops_total()).sum()
     }
 
     /// Completed membership-epoch changes. All shards fail over together,
@@ -1009,6 +1070,7 @@ pub struct MirrorBuilder {
     repl: ReplicationConfig,
     faults: FaultsConfig,
     sharding: ShardingConfig,
+    link: LinkConfig,
     batching: FlushPolicy,
     coalescing: CoalesceMode,
     concurrency: ConcurrencyConfig,
@@ -1026,6 +1088,7 @@ impl MirrorBuilder {
             repl: ReplicationConfig::default(),
             faults: FaultsConfig::default(),
             sharding: ShardingConfig::default(),
+            link: LinkConfig::default(),
             batching: FlushPolicy::Eager,
             coalescing: CoalesceMode::None,
             concurrency: ConcurrencyConfig::default(),
@@ -1074,6 +1137,14 @@ impl MirrorBuilder {
     /// Address-space sharding shape.
     pub fn sharding(mut self, sharding: ShardingConfig) -> Self {
         self.sharding = sharding;
+        self
+    }
+
+    /// Lossy-link shape (per-backup drop/delay/dup plan + RC retry
+    /// knobs; the disabled default is the reliable-wire anchor — see
+    /// [`crate::net::link`]).
+    pub fn link(mut self, link: LinkConfig) -> Self {
+        self.link = link;
         self
     }
 
@@ -1126,6 +1197,7 @@ impl MirrorBuilder {
             self.repl,
             self.faults,
             self.sharding,
+            self.link,
             self.ledger,
             self.adaptive,
             self.knob_predictor,

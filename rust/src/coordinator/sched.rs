@@ -131,6 +131,28 @@ pub struct RunOutcome {
     /// the write-to-flush gap under `rpmem-flush`; 0 under eADR
     /// where completion implies persistence).
     pub volatile_window_ns: u64,
+    /// Wire re-sends across all shards and backups, steady state (0 on
+    /// a reliable wire; always `>= transport_timeouts` — RNR retries
+    /// re-send without an ACK timeout). The figure `fig15_lossy_links`
+    /// sweeps.
+    pub retransmits: u64,
+    /// ACK-timeout expiries, steady state.
+    pub transport_timeouts: u64,
+    /// RNR NAKs taken at saturated backups, steady state.
+    pub rnr_naks: u64,
+    /// QP error-state transitions healed via transient kill + rejoin
+    /// episodes, steady state (retry exhaustion — see
+    /// [`crate::net::link`]).
+    pub qp_resets: u64,
+    /// Total timeout/backoff ns the transport spent masking lossy
+    /// links, steady state (NIC hardware time — never CPU busy time).
+    pub backoff_ns: Ns,
+    /// Duplicate line deliveries injected by the link (dup events and
+    /// spurious retransmits), steady state.
+    pub dups_injected: u64,
+    /// Duplicate line deliveries the remote PSN dedup dropped, steady
+    /// state (`dup_drops <= retransmits + dups_injected`).
+    pub dup_drops: u64,
     /// Lines-per-WQE distribution of the whole run (including any
     /// warmup/load phase — unlike the counters above, a histogram
     /// cannot be watermarked; Transact-style workloads have no load
@@ -282,6 +304,13 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     let flush_verbs_zero = mirror.flush_verbs();
     let compaction_zero = mirror.compaction_lines();
     let volatile_zero = mirror.volatile_window_ns();
+    let retransmits_zero = mirror.retransmits();
+    let timeouts_zero = mirror.transport_timeouts();
+    let rnr_naks_zero = mirror.rnr_naks();
+    let qp_resets_zero = mirror.qp_resets();
+    let backoff_zero = mirror.backoff_ns();
+    let dups_injected_zero = mirror.dups_injected();
+    let dup_drops_zero = mirror.dup_drops();
     let decisions_zero = mirror.decision_stats();
 
     // A stalled fabric on any shard (halt-mode fault injection) stops
@@ -334,6 +363,13 @@ pub fn run_threads(mirror: &mut Mirror, sources: &mut [Box<dyn TxnSource>]) -> R
     out.flush_verbs = mirror.flush_verbs() - flush_verbs_zero;
     out.compaction_lines = mirror.compaction_lines() - compaction_zero;
     out.volatile_window_ns = mirror.volatile_window_ns() - volatile_zero;
+    out.retransmits = mirror.retransmits() - retransmits_zero;
+    out.transport_timeouts = mirror.transport_timeouts() - timeouts_zero;
+    out.rnr_naks = mirror.rnr_naks() - rnr_naks_zero;
+    out.qp_resets = mirror.qp_resets() - qp_resets_zero;
+    out.backoff_ns = mirror.backoff_ns() - backoff_zero;
+    out.dups_injected = mirror.dups_injected() - dups_injected_zero;
+    out.dup_drops = mirror.dup_drops() - dup_drops_zero;
     out.decisions = mirror.decision_stats().minus(&decisions_zero);
     out.span_hist = mirror.span_hist();
     out.per_backup_horizon = mirror.persist_horizons();

@@ -66,6 +66,18 @@
 //!   `[adaptive]` config keys, `--adaptive*` CLI, decision histograms
 //!   in reports and the `fig14_adaptive` bench; disabled — the
 //!   default — reproduces the legacy SM-AD path event-for-event);
+//! * **lossy-link fault injection with a reliable RC transport**: a
+//!   deterministic per-backup link plan (one-shot drops/dups/delays,
+//!   loss windows, seeded run-long loss rates with common random
+//!   numbers, so makespan is monotone in the loss rate) masked by
+//!   ACK-timeout retransmission with exponential backoff, RNR NAK
+//!   backpressure, PSN-style duplicate suppression at the ledger
+//!   boundary, and QP-reset healing that replays the lost suffix
+//!   through the ordinary transient kill + rejoin resync — loss costs
+//!   time, never durability truth ([`net::link`], `[link]` config
+//!   keys, `--link-plan` CLI, transport counters in reports and the
+//!   `fig15_lossy_links` bench; an empty plan reproduces the reliable
+//!   wire event-for-event);
 //! * the mirroring coordinator that binds a primary node's persistency
 //!   traffic to the replica groups over the simulated fabric
 //!   ([`coordinator`]);

@@ -132,6 +132,43 @@ impl GroupReport {
         self.stats.iter().map(|s| s.volatile_window_ns).sum()
     }
 
+    /// Transport retransmissions across the group (timeout + RNR; 0 on
+    /// a reliable wire).
+    pub fn retransmits(&self) -> u64 {
+        self.stats.iter().map(|s| s.retransmits).sum()
+    }
+
+    /// ACK-timeout expiries across the group (bounded by
+    /// [`GroupReport::retransmits`]).
+    pub fn timeouts(&self) -> u64 {
+        self.stats.iter().map(|s| s.timeouts).sum()
+    }
+
+    /// RNR NAKs taken at saturated receivers across the group.
+    pub fn rnr_naks(&self) -> u64 {
+        self.stats.iter().map(|s| s.rnr_naks).sum()
+    }
+
+    /// Retry-exhaustion QP resets across the group.
+    pub fn qp_resets(&self) -> u64 {
+        self.stats.iter().map(|s| s.qp_resets).sum()
+    }
+
+    /// Total timeout/backoff wait across the group (ns).
+    pub fn backoff_ns(&self) -> Ns {
+        self.stats.iter().map(|s| s.backoff_ns).sum()
+    }
+
+    /// Duplicate line deliveries put on the wire across the group.
+    pub fn dups_injected(&self) -> u64 {
+        self.stats.iter().map(|s| s.dups_injected).sum()
+    }
+
+    /// Duplicate deliveries dropped by receiver-side PSN dedup.
+    pub fn dup_drops(&self) -> u64 {
+        self.stats.iter().map(|s| s.dup_drops).sum()
+    }
+
     /// Mean data WQEs per doorbell (see [`crate::net::wqe::mean_batch`]).
     pub fn mean_batch(&self) -> f64 {
         crate::net::wqe::mean_batch(self.posted_wqes, self.doorbells())
@@ -283,6 +320,20 @@ impl GroupReport {
                 self.volatile_window_ns(),
             ));
         }
+        if self.retransmits() > 0 || self.rnr_naks() > 0 || self.dup_drops() > 0 {
+            out.push_str(&format!(
+                "group: transport — {} retransmit(s) ({} timeout, {} rnr \
+                 nak), {} ns backoff, {} qp reset(s), {} dup(s) on the \
+                 wire / {} dropped by dedup\n",
+                self.retransmits(),
+                self.timeouts(),
+                self.rnr_naks(),
+                self.backoff_ns(),
+                self.qp_resets(),
+                self.dups_injected(),
+                self.dup_drops(),
+            ));
+        }
         if self.decisions.chose_ob + self.decisions.chose_dd > 0 {
             out.push_str(&format!(
                 "group: adaptive — {}\n",
@@ -315,6 +366,13 @@ impl GroupReport {
                     ("flush_verbs", s.flush_verbs.to_string()),
                     ("compaction_lines", s.compaction_lines.to_string()),
                     ("volatile_window_ns", s.volatile_window_ns.to_string()),
+                    ("retransmits", s.retransmits.to_string()),
+                    ("timeouts", s.timeouts.to_string()),
+                    ("rnr_naks", s.rnr_naks.to_string()),
+                    ("qp_resets", s.qp_resets.to_string()),
+                    ("backoff_ns", s.backoff_ns.to_string()),
+                    ("dups_injected", s.dups_injected.to_string()),
+                    ("dup_drops", s.dup_drops.to_string()),
                 ])
             })
             .collect();
@@ -348,6 +406,13 @@ impl GroupReport {
             ("flush_verbs", self.flush_verbs().to_string()),
             ("compaction_lines", self.compaction_lines().to_string()),
             ("volatile_window_ns", self.volatile_window_ns().to_string()),
+            ("retransmits", self.retransmits().to_string()),
+            ("timeouts", self.timeouts().to_string()),
+            ("rnr_naks", self.rnr_naks().to_string()),
+            ("qp_resets", self.qp_resets().to_string()),
+            ("backoff_ns", self.backoff_ns().to_string()),
+            ("dups_injected", self.dups_injected().to_string()),
+            ("dup_drops", self.dup_drops().to_string()),
             ("stalled", self.stalled.is_some().to_string()),
             ("chose_ob", self.decisions.chose_ob.to_string()),
             ("chose_dd", self.decisions.chose_dd.to_string()),
@@ -535,6 +600,31 @@ impl ShardedReport {
         self.per_shard.iter().map(|r| r.volatile_window_ns()).sum()
     }
 
+    /// Total transport retransmissions across all shards and backups.
+    pub fn total_retransmits(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.retransmits()).sum()
+    }
+
+    /// Total ACK-timeout expiries across all shards and backups.
+    pub fn total_timeouts(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.timeouts()).sum()
+    }
+
+    /// Total RNR NAKs across all shards and backups.
+    pub fn total_rnr_naks(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.rnr_naks()).sum()
+    }
+
+    /// Total retry-exhaustion QP resets across all shards and backups.
+    pub fn total_qp_resets(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.qp_resets()).sum()
+    }
+
+    /// Total duplicate deliveries dropped by dedup across all shards.
+    pub fn total_dup_drops(&self) -> u64 {
+        self.per_shard.iter().map(|r| r.dup_drops()).sum()
+    }
+
     /// Mean lines per wire WQE across the whole deployment.
     pub fn mean_span(&self) -> f64 {
         let lines: u64 = self.per_shard.iter().map(|r| r.posted_wqes).sum();
@@ -588,6 +678,17 @@ impl ShardedReport {
                 self.failover_downtime_ns(),
                 self.total_rereplicated_lines(),
                 self.total_revoked_wqes(),
+            ));
+        }
+        if self.total_retransmits() > 0 || self.total_rnr_naks() > 0 {
+            out.push_str(&format!(
+                "shards: transport — {} retransmit(s) ({} timeout, {} rnr \
+                 nak), {} qp reset(s), {} dropped by dedup\n",
+                self.total_retransmits(),
+                self.total_timeouts(),
+                self.total_rnr_naks(),
+                self.total_qp_resets(),
+                self.total_dup_drops(),
             ));
         }
         if self.decisions.chose_ob + self.decisions.chose_dd > 0 {
@@ -994,6 +1095,62 @@ mod tests {
         assert!(j.contains("\"cap\":32"), "{j}");
         assert!(j.contains("\"feedback_samples\":12"), "{j}");
         assert!(j.contains("\"mean_err_pct\":"), "{j}");
+    }
+
+    #[test]
+    fn report_surfaces_transport_counters() {
+        use crate::net::LinkConfig;
+        let p = Platform::default();
+        let repl = ReplicationConfig::new(2, AckPolicy::All);
+        // Backup 1's first message is lost (one timeout + retransmit);
+        // backup 0's is duplicated (dedup drops the extra copy).
+        let link = LinkConfig::with_plan("drop:1@0,dup:0@0").unwrap();
+        let mut f = Fabric::new(&p, &repl, true).with_link(&link);
+        let mut t = ThreadClock::new(0);
+        for s in 0..3u64 {
+            f.post_write_wt(
+                &mut t,
+                WriteMeta {
+                    addr: 0x40 * (1 + s),
+                    val: s,
+                    thread: 0,
+                    txn: 0,
+                    epoch: 0,
+                    seq: s,
+                },
+            );
+        }
+        f.rdfence(&mut t);
+        let r = GroupReport::from_fabric(&f);
+        assert_eq!(r.retransmits(), 1);
+        assert_eq!(r.timeouts(), 1);
+        assert!(r.retransmits() >= r.timeouts());
+        assert_eq!(r.rnr_naks(), 0);
+        assert_eq!(r.qp_resets(), 0);
+        assert!(r.backoff_ns() > 0);
+        assert_eq!(r.dups_injected(), 1);
+        assert_eq!(r.dup_drops(), 1);
+        assert!(r.dup_drops() <= r.retransmits() + r.dups_injected());
+        // Per-backup attribution: the drop sits on backup 1, the dup on
+        // backup 0.
+        assert_eq!(r.stats[1].retransmits, 1);
+        assert_eq!(r.stats[0].dup_drops, 1);
+        // Dedup never inflates the applied-write count.
+        assert_eq!(r.stats[0].writes, r.stats[1].writes);
+        let text = r.render();
+        assert!(text.contains("group: transport"), "{text}");
+        assert!(text.contains("1 retransmit(s)"), "{text}");
+        let j = r.to_json();
+        assert!(j.contains("\"retransmits\":1"), "{j}");
+        assert!(j.contains("\"dup_drops\":1"), "{j}");
+        assert!(j.contains("\"rnr_naks\":0"), "{j}");
+        assert!(j.contains("\"backoff_ns\":"), "{j}");
+        // A reliable wire reports zeros and stays silent in render.
+        let quiet = Fabric::new(&p, &repl, true);
+        let r = GroupReport::from_fabric(&quiet);
+        assert_eq!(r.retransmits(), 0);
+        assert_eq!(r.dup_drops(), 0);
+        assert!(!r.render().contains("transport"), "{}", r.render());
     }
 
     #[test]

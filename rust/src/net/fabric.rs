@@ -134,6 +134,21 @@ pub struct BackupStats {
     pub compaction_lines: u64,
     /// Total replicated-but-volatile ns accumulated by drained lines.
     pub volatile_window_ns: u64,
+    // ---- lossy-link transport (all 0 without a `[link]` config)
+    /// Wire re-sends toward this backup, any cause (`>= timeouts`).
+    pub retransmits: u64,
+    /// ACK-timeout expiries on this backup's QPs.
+    pub timeouts: u64,
+    /// RNR NAKs taken at this backup's saturated pending buffer.
+    pub rnr_naks: u64,
+    /// QP error-state transitions healed via transient kill + rejoin.
+    pub qp_resets: u64,
+    /// Total timeout/backoff ns the transport spent masking this link.
+    pub backoff_ns: Ns,
+    /// Duplicate line deliveries injected toward this backup.
+    pub dups_injected: u64,
+    /// Duplicate line deliveries its PSN dedup dropped.
+    pub dup_drops: u64,
 }
 
 /// N-way mirroring fabric (see module docs).
@@ -247,6 +262,11 @@ pub struct Fabric {
     /// not dropped: the lines were never on the wire under the old
     /// permission and retry through the new primary after `admit_at`.
     pub revoked_wqes: u64,
+    // ---- lossy links (see `super::link`)
+    /// A lossy link is configured somewhere in the group: the data
+    /// dispatch points poll for QP error state after posting. False is
+    /// the guard-clause anchor — no polling, no healing, no dedup.
+    lossy: bool,
 }
 
 impl Fabric {
@@ -317,7 +337,33 @@ impl Fabric {
             failover_downtime_ns: 0,
             rereplicated_lines: 0,
             revoked_wqes: 0,
+            lossy: false,
         }
+    }
+
+    /// Attach a lossy-link config: every replica stack gets its slice
+    /// of the plan, the RC retry machinery, and PSN dedup on its remote
+    /// engine. Call after [`Fabric::with_shard`] — the shard salts the
+    /// probabilistic modes' hash streams so sharded lanes roll
+    /// independently. A disabled config is the no-op anchor. The config
+    /// must be pre-validated against the group size.
+    pub fn set_link(&mut self, cfg: &super::link::LinkConfig) {
+        cfg.validate(self.replicas.len())
+            .expect("LinkConfig must be validated before Fabric::set_link");
+        if !cfg.enabled() {
+            return;
+        }
+        let salt = self.shard as u64;
+        for (b, r) in self.replicas.iter_mut().enumerate() {
+            r.set_link(cfg, b, salt);
+        }
+        self.lossy = true;
+    }
+
+    /// Builder form of [`Fabric::set_link`].
+    pub fn with_link(mut self, cfg: &super::link::LinkConfig) -> Self {
+        self.set_link(cfg);
+        self
     }
 
     /// Set the staged pipeline's flush policy (`cap:1` normalizes to
@@ -596,6 +642,68 @@ impl Fabric {
         self.replicas.iter().map(|r| r.remote.volatile_window_ns).sum()
     }
 
+    /// Wire re-sends across the group, any cause (0 without a lossy
+    /// link; `retransmits_total() >= timeouts_total()` always — RNR
+    /// retries re-send without an ACK timeout).
+    pub fn retransmits_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.link())
+            .map(|l| l.retransmits)
+            .sum()
+    }
+
+    /// ACK-timeout expiries across the group.
+    pub fn timeouts_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.link())
+            .map(|l| l.timeouts)
+            .sum()
+    }
+
+    /// RNR NAKs across the group.
+    pub fn rnr_naks_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.link())
+            .map(|l| l.rnr_naks)
+            .sum()
+    }
+
+    /// QP error-state transitions healed across the group.
+    pub fn qp_resets_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.link())
+            .map(|l| l.qp_resets)
+            .sum()
+    }
+
+    /// Total timeout/backoff ns the transport spent masking the links.
+    pub fn backoff_ns_total(&self) -> Ns {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.link())
+            .map(|l| l.backoff_ns)
+            .sum()
+    }
+
+    /// Duplicate line deliveries injected across the group.
+    pub fn dups_injected_total(&self) -> u64 {
+        self.replicas
+            .iter()
+            .filter_map(|r| r.link())
+            .map(|l| l.dups_injected)
+            .sum()
+    }
+
+    /// Duplicate line deliveries dropped by the PSN dedup across the
+    /// group (`<= retransmits_total() + dups_injected_total()`).
+    pub fn dup_drops_total(&self) -> u64 {
+        self.replicas.iter().map(|r| r.remote.dup_drops).sum()
+    }
+
     /// Lines-per-WQE distribution merged across every backup's stack.
     pub fn span_hist(&self) -> LogHistogram {
         let mut h = LogHistogram::new();
@@ -657,6 +765,7 @@ impl Fabric {
     /// bookkeeping before metrics/recovery).
     pub fn settle(&mut self, now: Ns) {
         self.seen = self.seen.max(now);
+        self.heal_qp_errors(now);
         self.apply_faults(now);
     }
 
@@ -702,6 +811,13 @@ impl Fabric {
                 flush_verbs: r.remote.flush_verbs,
                 compaction_lines: r.remote.compaction_lines,
                 volatile_window_ns: r.remote.volatile_window_ns,
+                retransmits: r.link().map_or(0, |l| l.retransmits),
+                timeouts: r.link().map_or(0, |l| l.timeouts),
+                rnr_naks: r.link().map_or(0, |l| l.rnr_naks),
+                qp_resets: r.link().map_or(0, |l| l.qp_resets),
+                backoff_ns: r.link().map_or(0, |l| l.backoff_ns),
+                dups_injected: r.link().map_or(0, |l| l.dups_injected),
+                dup_drops: r.remote.dup_drops,
             })
             .collect()
     }
@@ -874,6 +990,37 @@ impl Fabric {
         self.states[b] = BackupState::Alive;
         self.dead_ns[b] += ready_at.saturating_sub(since);
         self.transitions.push((ready_at, b, true));
+    }
+
+    /// Heal QP error states accrued since the last dispatch (see
+    /// `super::link`): a replica whose link exhausted `retry_count`
+    /// sits in QP error — nothing more reaches its wire — until the
+    /// fabric tears the connection down and re-establishes it here.
+    /// Healing is modeled as a transient kill + rejoin episode at
+    /// `at`: [`Rdma::reset_qps`] clears the per-lane windows and the
+    /// error flag, and the rejoin replays everything past the last
+    /// remotely-acked line via the resync machinery (ledger diff from
+    /// the healthiest peer). A flapping link thereby degrades into an
+    /// ordinary out-of-quorum interval without any `kill:` plan event,
+    /// and [`OnLoss`]::{`Halt`,`Degrade`} apply to links unchanged.
+    /// Guarded by `self.lossy` so the no-link anchor never takes the
+    /// extra scan.
+    fn heal_qp_errors(&mut self, at: Ns) {
+        if !self.lossy {
+            return;
+        }
+        for b in 0..self.replicas.len() {
+            if self.replicas[b].qp_error() {
+                self.replicas[b].reset_qps();
+                // A plan `kill:` may already have taken the backup out
+                // between the exhaustion and this heal — then the plan's
+                // own rejoin resyncs it; nothing more to do here.
+                if self.states[b].is_alive() {
+                    self.kill(b, at);
+                    self.begin_rejoin(b, at);
+                }
+            }
+        }
     }
 
     // ---- primary failover (see `super::membership`) ----------------------
@@ -1071,6 +1218,7 @@ impl Fabric {
                 r.submit_data(t, verb, meta);
             });
             self.ring_alive_doorbells();
+            self.heal_qp_errors(t.now);
             return;
         }
         let id = t.id;
@@ -1141,6 +1289,7 @@ impl Fabric {
             self.doorbells[b] += 1;
             self.replicas[b].post_batch(t, &chain);
         }
+        self.heal_qp_errors(t.now);
     }
 
     /// Posted one-sided DDIO write to every live backup (SM-RC data path).

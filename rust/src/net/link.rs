@@ -1,0 +1,952 @@
+//! Deterministic lossy-link injection and the reliable-transport
+//! machinery that masks it.
+//!
+//! A [`LinkPlan`] is the wire-level sibling of the node-level
+//! [`super::faults::FaultPlan`]: a per-backup schedule of link faults
+//! consulted at the wire-issue point of every data WQE (see
+//! [`super::rdma::Rdma`]). Three event families compose:
+//!
+//! * **One-shot events** — `drop:B@T` (the first message issued at or
+//!   after `T` is lost), `delay:B@T:D` (it arrives `D` ns late; a delay
+//!   past the ACK timeout also triggers a spurious retransmit whose
+//!   duplicate delivery the remote dedup drops), `dup:B@T` (it is
+//!   delivered twice). Each event is consumed by exactly one message.
+//! * **Loss windows** — `drop:B@T1..T2:p`: every transmission attempt
+//!   issued inside `[T1, T2)` is dropped with probability `p`.
+//! * **Run-long random loss** — `loss:B:p%`: every attempt toward `B`
+//!   is dropped with probability `p`, for chaos sweeps.
+//!
+//! Probabilistic fates use *common random numbers*: attempt `k` of
+//! message `m` rolls a pure hash of `(seed, salt, m, k)`, independent of
+//! the loss probability, so for a fixed seed the drop set at rate `p1`
+//! is a subset of the drop set at any `p2 > p1` — per-message delivery
+//! latency, and therefore makespan, is deterministically monotone in the
+//! loss rate (the `fig15_lossy_links` invariant).
+//!
+//! The masking side is the RC transport state machine, one
+//! [`LinkState`] per requester stack:
+//!
+//! * a lost message arms the per-QP ACK timeout (`transport_timeout_ns`)
+//!   and retransmits with exponential backoff (`timeout << attempt`), up
+//!   to `retry_count` retransmissions;
+//! * a saturated receiver (the remote engine's volatile pending buffer
+//!   at `rnr_depth` lines — this is what finally gives `rpmem-flush`'s
+//!   buffer a real capacity) answers RNR NAK: the message is retried
+//!   after a NAK round-trip plus one backoff period, counted as a
+//!   retransmit but not a timeout (hence `retransmits >= timeouts`);
+//! * retry exhaustion transitions the QP to **error state**: nothing
+//!   more reaches this backup's wire until the fabric heals the
+//!   connection — re-establishment plus replay from the last
+//!   remotely-acked sequence number, modeled as a transient
+//!   kill + rejoin episode through the PR 2 resync machinery (see
+//!   `Fabric::heal_qp_errors`). [`super::faults::OnLoss`] semantics
+//!   extend to links unchanged: the episode is just a backup leaving
+//!   and re-entering the quorum.
+//!
+//! Because a retransmitted or duplicated message must not double-apply,
+//! the remote engines run PSN-style duplicate suppression on
+//! `(thread, seq)` at the ledger boundary whenever a link is configured
+//! (see [`super::remote::RemoteEngine`]) — the at-least-once →
+//! exactly-once step real RC hardware does with packet sequence numbers.
+//!
+//! The empty [`LinkConfig`] (no plan, unbounded receiver) is the
+//! guard-clause anchor: [`LinkConfig::enabled`] is false, no
+//! [`LinkState`] is attached anywhere, and the wire path is
+//! event-for-event the pre-link tree.
+
+use crate::util::Pcg64;
+use crate::Ns;
+use anyhow::{anyhow, bail, Result};
+use std::fmt;
+use std::str::FromStr;
+
+/// What happens to the one message that consumes a one-shot link event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkEventKind {
+    /// The message is lost on the wire (its retransmit is re-consulted).
+    Drop,
+    /// The message arrives this many ns late. A delay of at least the
+    /// ACK timeout also triggers a spurious retransmit — the requester
+    /// cannot tell a slow ack from a lost one.
+    Delay(Ns),
+    /// The message is delivered twice (fabric-level duplication).
+    Dup,
+}
+
+/// One scheduled one-shot link event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkEvent {
+    /// Consumed by the first message issued at or after this instant.
+    pub at: Ns,
+    /// Backup index whose link the event sits on.
+    pub backup: usize,
+    pub kind: LinkEventKind,
+}
+
+/// A probabilistic drop window: attempts issued in `[from, until)`
+/// toward `backup` are dropped with probability `ppm / 1e6`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LossWindow {
+    pub backup: usize,
+    pub from: Ns,
+    pub until: Ns,
+    /// Drop probability in parts per million (exact round-tripping).
+    pub ppm: u64,
+}
+
+/// Run-long random loss on one backup's link (`loss:B:p%`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LossRate {
+    pub backup: usize,
+    /// Drop probability in parts per million.
+    pub ppm: u64,
+}
+
+/// A deterministic per-backup link-fault schedule (see module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LinkPlan {
+    events: Vec<LinkEvent>,
+    windows: Vec<LossWindow>,
+    rates: Vec<LossRate>,
+}
+
+/// Parse a probability: `30%` / `0.125%` (percent) or `0.3` (fraction),
+/// returned in parts per million.
+fn parse_ppm(s: &str) -> Result<u64> {
+    let s = s.trim();
+    let (num, scale) = match s.strip_suffix('%') {
+        Some(pct) => (pct.trim(), 10_000.0),
+        None => (s, 1_000_000.0),
+    };
+    let p: f64 = num
+        .parse()
+        .map_err(|e| anyhow!("bad probability {s:?}: {e}"))?;
+    let ppm = (p * scale).round();
+    if !(0.0..=1_000_000.0).contains(&ppm) {
+        bail!("probability {s:?} out of range (expected 0..=100% or 0..=1)");
+    }
+    Ok(ppm as u64)
+}
+
+/// Render a ppm probability in canonical percent form (`300_000` →
+/// `"30%"`; f64 Display picks the shortest round-tripping repr).
+fn fmt_ppm(ppm: u64) -> String {
+    format!("{}%", ppm as f64 / 10_000.0)
+}
+
+impl LinkPlan {
+    /// Build a plan from parts (events are sorted by time; shape is
+    /// checked by [`LinkPlan::validate`]).
+    pub fn new(
+        mut events: Vec<LinkEvent>,
+        windows: Vec<LossWindow>,
+        rates: Vec<LossRate>,
+    ) -> Self {
+        events.sort_by_key(|e| e.at);
+        LinkPlan {
+            events,
+            windows,
+            rates,
+        }
+    }
+
+    pub fn events(&self) -> &[LinkEvent] {
+        &self.events
+    }
+
+    pub fn windows(&self) -> &[LossWindow] {
+        &self.windows
+    }
+
+    pub fn rates(&self) -> &[LossRate] {
+        &self.rates
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len() + self.windows.len() + self.rates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.windows.is_empty() && self.rates.is_empty()
+    }
+
+    /// Shape check that needs no group size: well-formed windows
+    /// (`from < until`), probabilities already range-checked at parse
+    /// time, at most one run-long loss rate per backup.
+    pub fn validate_shape(&self) -> Result<()> {
+        for w in &self.windows {
+            if w.from >= w.until {
+                bail!(
+                    "link plan: empty loss window {}..{} on backup {}",
+                    w.from,
+                    w.until,
+                    w.backup
+                );
+            }
+        }
+        let mut seen: Vec<usize> = self.rates.iter().map(|r| r.backup).collect();
+        seen.sort_unstable();
+        for pair in seen.windows(2) {
+            if pair[0] == pair[1] {
+                bail!("link plan: duplicate loss rate for backup {}", pair[0]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Shape rules plus indices in range for a group of `backups`.
+    pub fn validate(&self, backups: usize) -> Result<()> {
+        self.validate_shape()?;
+        let oob = self
+            .events
+            .iter()
+            .map(|e| e.backup)
+            .chain(self.windows.iter().map(|w| w.backup))
+            .chain(self.rates.iter().map(|r| r.backup))
+            .find(|&b| b >= backups);
+        if let Some(b) = oob {
+            bail!("link plan names backup {b} but the group only has {backups}");
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for LinkPlan {
+    type Err = anyhow::Error;
+
+    /// Parse a `--link-plan` spec: comma-separated `drop:B@T`,
+    /// `drop:B@T1..T2:p`, `delay:B@T:D`, `dup:B@T`, `loss:B:p%` entries
+    /// (times in ns, underscores allowed; probabilities as `30%` or
+    /// `0.3`). The empty string is the empty plan.
+    fn from_str(s: &str) -> Result<Self> {
+        let parse_ns = |tok: &str, what: &str, v: &str| -> Result<Ns> {
+            v.trim()
+                .replace('_', "")
+                .parse()
+                .map_err(|e| anyhow!("link event {tok:?}: bad {what}: {e}"))
+        };
+        let mut events = Vec::new();
+        let mut windows = Vec::new();
+        let mut rates = Vec::new();
+        for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (kind_s, rest) = tok.split_once(':').ok_or_else(|| {
+                anyhow!("link event {tok:?}: expected drop:/delay:/dup:/loss:")
+            })?;
+            let kind_s = kind_s.trim().to_ascii_lowercase();
+            if kind_s == "loss" {
+                let (backup_s, p_s) = rest
+                    .split_once(':')
+                    .ok_or_else(|| anyhow!("link event {tok:?}: expected loss:B:p%"))?;
+                let backup: usize = backup_s
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow!("link event {tok:?}: bad backup index: {e}"))?;
+                rates.push(LossRate {
+                    backup,
+                    ppm: parse_ppm(p_s)
+                        .map_err(|e| anyhow!("link event {tok:?}: {e}"))?,
+                });
+                continue;
+            }
+            let (backup_s, time_s) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow!("link event {tok:?}: missing @time"))?;
+            let backup: usize = backup_s
+                .trim()
+                .parse()
+                .map_err(|e| anyhow!("link event {tok:?}: bad backup index: {e}"))?;
+            match kind_s.as_str() {
+                "drop" => {
+                    if let Some((from_s, rest2)) = time_s.split_once("..") {
+                        // Windowed probabilistic drop: drop:B@T1..T2:p.
+                        let (until_s, p_s) = rest2.split_once(':').ok_or_else(|| {
+                            anyhow!("link event {tok:?}: expected drop:B@T1..T2:p")
+                        })?;
+                        windows.push(LossWindow {
+                            backup,
+                            from: parse_ns(tok, "window start", from_s)?,
+                            until: parse_ns(tok, "window end", until_s)?,
+                            ppm: parse_ppm(p_s)
+                                .map_err(|e| anyhow!("link event {tok:?}: {e}"))?,
+                        });
+                    } else {
+                        events.push(LinkEvent {
+                            at: parse_ns(tok, "time", time_s)?,
+                            backup,
+                            kind: LinkEventKind::Drop,
+                        });
+                    }
+                }
+                "delay" => {
+                    let (at_s, d_s) = time_s.split_once(':').ok_or_else(|| {
+                        anyhow!("link event {tok:?}: expected delay:B@T:D")
+                    })?;
+                    events.push(LinkEvent {
+                        at: parse_ns(tok, "time", at_s)?,
+                        backup,
+                        kind: LinkEventKind::Delay(parse_ns(tok, "delay", d_s)?),
+                    });
+                }
+                "dup" => events.push(LinkEvent {
+                    at: parse_ns(tok, "time", time_s)?,
+                    backup,
+                    kind: LinkEventKind::Dup,
+                }),
+                other => {
+                    bail!("unknown link fault {other:?}; expected drop | delay | dup | loss")
+                }
+            }
+        }
+        let plan = LinkPlan::new(events, windows, rates);
+        plan.validate_shape()?;
+        Ok(plan)
+    }
+}
+
+impl fmt::Display for LinkPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut items: Vec<(Ns, String)> = self
+            .events
+            .iter()
+            .map(|e| {
+                let s = match e.kind {
+                    LinkEventKind::Drop => format!("drop:{}@{}", e.backup, e.at),
+                    LinkEventKind::Delay(d) => format!("delay:{}@{}:{}", e.backup, e.at, d),
+                    LinkEventKind::Dup => format!("dup:{}@{}", e.backup, e.at),
+                };
+                (e.at, s)
+            })
+            .collect();
+        items.extend(self.windows.iter().map(|w| {
+            (
+                w.from,
+                format!("drop:{}@{}..{}:{}", w.backup, w.from, w.until, fmt_ppm(w.ppm)),
+            )
+        }));
+        items.sort_by_key(|(at, _)| *at);
+        let mut first = true;
+        for (_, item) in &items {
+            if !first {
+                f.write_str(",")?;
+            }
+            f.write_str(item)?;
+            first = false;
+        }
+        for r in &self.rates {
+            if !first {
+                f.write_str(",")?;
+            }
+            write!(f, "loss:{}:{}", r.backup, fmt_ppm(r.ppm))?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+/// Default per-QP ACK timeout (ns): comfortably above the default RTT
+/// (2600 ns) so a healthy link never times out spuriously.
+pub const DEFAULT_TRANSPORT_TIMEOUT_NS: Ns = 8_000;
+/// Default retransmission budget before the QP enters error state —
+/// the RC verbs' maximum `retry_cnt`.
+pub const DEFAULT_RETRY_COUNT: u32 = 7;
+/// Cap on the exponential-backoff shift (keeps `timeout << attempt`
+/// well inside u64 for any plausible retry budget).
+const BACKOFF_SHIFT_CAP: u32 = 20;
+
+/// Lossy-link configuration (`[link]` table / `--link-plan` +
+/// transport knobs). The default — empty plan, unbounded receiver — is
+/// disabled: no link state is attached and the wire path is the
+/// pre-link tree, event-for-event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkConfig {
+    pub plan: LinkPlan,
+    /// Per-QP ACK timeout arming retransmission (ns).
+    pub transport_timeout_ns: Ns,
+    /// Retransmissions allowed before the QP enters error state.
+    pub retry_count: u32,
+    /// Remote pending-buffer capacity in lines (0 = unbounded): at or
+    /// above it the receiver answers RNR NAK. Gives `rpmem-flush`'s
+    /// volatile buffer a real capacity.
+    pub rnr_depth: usize,
+    /// Seed of the probabilistic modes' hash stream.
+    pub seed: u64,
+}
+
+impl Default for LinkConfig {
+    fn default() -> Self {
+        LinkConfig {
+            plan: LinkPlan::default(),
+            transport_timeout_ns: DEFAULT_TRANSPORT_TIMEOUT_NS,
+            retry_count: DEFAULT_RETRY_COUNT,
+            rnr_depth: 0,
+            seed: 0,
+        }
+    }
+}
+
+impl LinkConfig {
+    /// Parse `spec` as the link plan, with default transport knobs —
+    /// the common construction across tests and benches.
+    pub fn with_plan(spec: &str) -> Result<Self> {
+        Ok(LinkConfig {
+            plan: spec.parse()?,
+            ..LinkConfig::default()
+        })
+    }
+
+    /// Whether any link machinery is active. False is the guard-clause
+    /// anchor: no [`LinkState`] is attached, no duplicate suppression,
+    /// the pre-link wire path bit for bit.
+    pub fn enabled(&self) -> bool {
+        !self.plan.is_empty() || self.rnr_depth > 0
+    }
+
+    /// Validate against the replica-group size.
+    pub fn validate(&self, backups: usize) -> Result<()> {
+        self.plan.validate(backups)?;
+        if self.enabled() && self.transport_timeout_ns == 0 {
+            bail!("[link] transport_timeout_ns must be > 0 when the link is enabled");
+        }
+        Ok(())
+    }
+}
+
+/// The wire fate of one message after the link layer and the RC retry
+/// machinery have spoken.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TxOutcome {
+    /// Delivered: `first` is the arrival instant of the copy the remote
+    /// applies; `dup` (arriving at or after `first`) is a duplicate
+    /// delivery the remote's PSN dedup will drop.
+    Deliver { first: Ns, dup: Option<Ns> },
+    /// Retry exhaustion: nothing arrived and the QP is now in error
+    /// state (see `Fabric::heal_qp_errors`).
+    Lost,
+}
+
+enum Fate {
+    Deliver,
+    Drop,
+    Delay(Ns),
+    Dup,
+}
+
+/// Per-requester-stack RC transport state: this backup's slice of the
+/// [`LinkPlan`] plus the retry machinery and its counters. Lives inside
+/// [`super::rdma::Rdma`] only when [`LinkConfig::enabled`].
+#[derive(Clone, Debug)]
+pub struct LinkState {
+    /// This backup's one-shot events, time-sorted; `cursor` is the next
+    /// unconsumed one.
+    events: Vec<(Ns, LinkEventKind)>,
+    cursor: usize,
+    /// This backup's loss windows `(from, until, ppm)`.
+    windows: Vec<(Ns, Ns, u64)>,
+    /// Run-long loss probability (ppm; 0 = none).
+    rate_ppm: u64,
+    timeout_ns: Ns,
+    retry_count: u32,
+    rnr_depth: usize,
+    /// Hash-stream key: seed mixed with the backup id and the owning
+    /// fabric's shard, so replica stacks roll independent streams.
+    stream: u64,
+    /// Messages transmitted (the hash stream's message index).
+    msg: u64,
+    /// QP in error state: retry budget exhausted; nothing reaches the
+    /// wire until the fabric heals the connection.
+    pub qp_error: bool,
+    // stats
+    /// Re-sends of any cause (timeout or RNR) — `>= timeouts`.
+    pub retransmits: u64,
+    /// ACK-timeout expiries (lost messages and over-delayed acks).
+    pub timeouts: u64,
+    /// RNR NAKs taken at a saturated receiver.
+    pub rnr_naks: u64,
+    /// Transitions into QP error state (each heals via a transient
+    /// kill + rejoin episode).
+    pub qp_resets: u64,
+    /// Total ns spent in timeout/backoff waits (shifts arrivals only —
+    /// retransmission is NIC hardware, not CPU time).
+    pub backoff_ns: Ns,
+    /// Duplicate line deliveries injected (dup events and spurious
+    /// retransmits, counted per line by the caller).
+    pub dups_injected: u64,
+}
+
+impl LinkState {
+    /// Build the per-stack state for `backup`; `salt` (the owning
+    /// fabric's shard) decorrelates hash streams across sharded lanes.
+    pub fn new(cfg: &LinkConfig, backup: usize, salt: u64) -> Self {
+        LinkState {
+            events: cfg
+                .plan
+                .events
+                .iter()
+                .filter(|e| e.backup == backup)
+                .map(|e| (e.at, e.kind))
+                .collect(),
+            cursor: 0,
+            windows: cfg
+                .plan
+                .windows
+                .iter()
+                .filter(|w| w.backup == backup)
+                .map(|w| (w.from, w.until, w.ppm))
+                .collect(),
+            rate_ppm: cfg
+                .plan
+                .rates
+                .iter()
+                .find(|r| r.backup == backup)
+                .map_or(0, |r| r.ppm),
+            timeout_ns: cfg.transport_timeout_ns,
+            retry_count: cfg.retry_count,
+            rnr_depth: cfg.rnr_depth,
+            stream: cfg
+                .seed
+                .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add((backup as u64) << 32 | salt),
+            msg: 0,
+            qp_error: false,
+            retransmits: 0,
+            timeouts: 0,
+            rnr_naks: 0,
+            qp_resets: 0,
+            backoff_ns: 0,
+            dups_injected: 0,
+        }
+    }
+
+    /// Remote pending-buffer capacity (0 = unbounded; the caller checks
+    /// saturation against its remote engine).
+    pub fn rnr_depth(&self) -> usize {
+        self.rnr_depth
+    }
+
+    /// Common-random-numbers roll for attempt `attempt` of the current
+    /// message: a pure function of (seed, backup/shard, message,
+    /// attempt), independent of any loss probability — see module docs.
+    fn roll(&self, attempt: u32) -> u64 {
+        let mut g = Pcg64::with_stream(self.stream, (self.msg << 8) | attempt as u64);
+        g.next_u64() % 1_000_000
+    }
+
+    /// The plan's verdict for one transmission attempt issued at
+    /// `send_at`: a pending one-shot event is consumed first; otherwise
+    /// a covering loss window, else the run-long rate, rolls a drop.
+    fn consult(&mut self, send_at: Ns, attempt: u32) -> Fate {
+        if let Some(&(at, kind)) = self.events.get(self.cursor) {
+            if at <= send_at {
+                self.cursor += 1;
+                return match kind {
+                    LinkEventKind::Drop => Fate::Drop,
+                    LinkEventKind::Delay(d) => Fate::Delay(d),
+                    LinkEventKind::Dup => Fate::Dup,
+                };
+            }
+        }
+        let ppm = self
+            .windows
+            .iter()
+            .find(|&&(from, until, _)| from <= send_at && send_at < until)
+            .map(|&(_, _, ppm)| ppm)
+            .unwrap_or(self.rate_ppm);
+        if ppm > 0 && self.roll(attempt) < ppm {
+            Fate::Drop
+        } else {
+            Fate::Deliver
+        }
+    }
+
+    /// Resolve the wire fate of one message issued at `iss` over a
+    /// one-way latency of `half` ns. `saturated` is the receiver's RNR
+    /// condition at issue time. Retransmission shifts arrival instants
+    /// only — it is NIC hardware, so no thread clock is touched.
+    pub fn transmit(&mut self, iss: Ns, half: Ns, saturated: bool) -> TxOutcome {
+        if self.qp_error {
+            // Error state: the send queue is frozen until the fabric
+            // re-establishes the connection (no counters — nothing was
+            // transmitted).
+            return TxOutcome::Lost;
+        }
+        self.msg += 1;
+        let mut send_at = iss;
+        if saturated {
+            // RNR NAK: the receiver refuses the message; the requester
+            // learns after a NAK round-trip and retries one backoff
+            // period later. One NAK per message — the buffer admits the
+            // retry (the penalty models the concurrent drain).
+            let wait = 2 * half + self.timeout_ns;
+            self.rnr_naks += 1;
+            self.retransmits += 1;
+            self.backoff_ns += wait;
+            send_at += wait;
+        }
+        let mut attempt: u32 = 0;
+        loop {
+            match self.consult(send_at, attempt) {
+                Fate::Deliver => {
+                    return TxOutcome::Deliver {
+                        first: send_at + half,
+                        dup: None,
+                    }
+                }
+                Fate::Dup => {
+                    let a = send_at + half;
+                    return TxOutcome::Deliver {
+                        first: a,
+                        dup: Some(a),
+                    };
+                }
+                Fate::Delay(d) => {
+                    if d >= self.timeout_ns {
+                        // The ack misses the timeout window: the
+                        // requester retransmits although the original
+                        // is still in flight — the classic duplicate
+                        // the PSN dedup exists for.
+                        self.timeouts += 1;
+                        self.retransmits += 1;
+                        self.backoff_ns += self.timeout_ns;
+                        let original = send_at + half + d;
+                        let retx = send_at + self.timeout_ns + half;
+                        let (first, dup) = if retx <= original {
+                            (retx, original)
+                        } else {
+                            (original, retx)
+                        };
+                        return TxOutcome::Deliver {
+                            first,
+                            dup: Some(dup),
+                        };
+                    }
+                    return TxOutcome::Deliver {
+                        first: send_at + half + d,
+                        dup: None,
+                    };
+                }
+                Fate::Drop => {
+                    if attempt >= self.retry_count {
+                        self.qp_error = true;
+                        self.qp_resets += 1;
+                        return TxOutcome::Lost;
+                    }
+                    // The ACK timeout expires, then the retransmit goes
+                    // out with exponential backoff.
+                    let wait = self.timeout_ns << attempt.min(BACKOFF_SHIFT_CAP);
+                    self.timeouts += 1;
+                    self.retransmits += 1;
+                    self.backoff_ns += wait;
+                    send_at += wait;
+                    attempt += 1;
+                }
+            }
+        }
+    }
+
+    /// Connection re-establishment after retry exhaustion: clear the
+    /// error state (the owning fabric resets the QPs and replays the
+    /// lost suffix through the resync machinery).
+    pub fn clear_error(&mut self) {
+        self.qp_error = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_and_display_round_trip() {
+        let plan: LinkPlan = "drop:1@5_000, delay:0@2000:300,dup:1@9000".parse().unwrap();
+        assert_eq!(plan.events().len(), 3);
+        assert_eq!(plan.to_string(), "delay:0@2000:300,drop:1@5000,dup:1@9000");
+        let again: LinkPlan = plan.to_string().parse().unwrap();
+        assert_eq!(plan, again);
+        assert!("".parse::<LinkPlan>().unwrap().is_empty());
+        assert!("  ".parse::<LinkPlan>().unwrap().is_empty());
+    }
+
+    #[test]
+    fn windows_and_rates_round_trip() {
+        let plan: LinkPlan = "drop:0@1000..5000:30%,loss:1:5%".parse().unwrap();
+        assert_eq!(plan.windows().len(), 1);
+        assert_eq!(plan.windows()[0].ppm, 300_000);
+        assert_eq!(plan.rates().len(), 1);
+        assert_eq!(plan.rates()[0].ppm, 50_000);
+        assert_eq!(plan.to_string(), "drop:0@1000..5000:30%,loss:1:5%");
+        let again: LinkPlan = plan.to_string().parse().unwrap();
+        assert_eq!(plan, again);
+        // Fractional probabilities parse too, and sub-percent rates
+        // survive the round trip.
+        let plan: LinkPlan = "drop:0@1..9:0.3,loss:2:0.125%".parse().unwrap();
+        assert_eq!(plan.windows()[0].ppm, 300_000);
+        assert_eq!(plan.rates()[0].ppm, 1_250);
+        assert_eq!(plan.to_string().parse::<LinkPlan>().unwrap(), plan);
+    }
+
+    #[test]
+    fn plan_parse_rejects_malformed_specs() {
+        for bad in [
+            "drop",
+            "drop:1",
+            "drop:@100",
+            "drop:x@100",
+            "drop:1@",
+            "drop:1@abc",
+            "snip:1@100",
+            "delay:1@100",
+            "delay:1@100:x",
+            "dup:1",
+            "loss:1",
+            "loss:1:200%",
+            "loss:1:1.5",
+            "drop:1@100..50:10%",
+            "drop:1@100..100:10%",
+            "loss:0:1%,loss:0:2%",
+        ] {
+            assert!(bad.parse::<LinkPlan>().is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn plan_validation_checks_indices() {
+        let plan: LinkPlan = "drop:2@100".parse().unwrap();
+        assert!(plan.validate(2).is_err());
+        plan.validate(3).unwrap();
+        let plan: LinkPlan = "loss:1:10%".parse().unwrap();
+        assert!(plan.validate(1).is_err());
+        plan.validate(2).unwrap();
+    }
+
+    #[test]
+    fn config_default_is_disabled() {
+        let cfg = LinkConfig::default();
+        assert!(!cfg.enabled());
+        cfg.validate(1).unwrap();
+        // A plan or a bounded receiver enables the machinery.
+        assert!(LinkConfig::with_plan("drop:0@100").unwrap().enabled());
+        assert!(LinkConfig {
+            rnr_depth: 8,
+            ..LinkConfig::default()
+        }
+        .enabled());
+        // An enabled link needs a live timeout.
+        let cfg = LinkConfig {
+            transport_timeout_ns: 0,
+            ..LinkConfig::with_plan("drop:0@100").unwrap()
+        };
+        assert!(cfg.validate(1).is_err());
+    }
+
+    fn state(spec: &str) -> LinkState {
+        LinkState::new(&LinkConfig::with_plan(spec).unwrap(), 0, 0)
+    }
+
+    #[test]
+    fn clean_link_is_identity() {
+        let mut s = state("");
+        assert_eq!(
+            s.transmit(1_000, 1_300, false),
+            TxOutcome::Deliver {
+                first: 2_300,
+                dup: None
+            }
+        );
+        assert_eq!(s.retransmits, 0);
+        assert_eq!(s.timeouts, 0);
+    }
+
+    #[test]
+    fn one_shot_drop_costs_one_timeout_backoff() {
+        let mut s = state("drop:0@500");
+        // Issued before the event: untouched, event stays armed.
+        assert_eq!(
+            s.transmit(100, 1_300, false),
+            TxOutcome::Deliver {
+                first: 1_400,
+                dup: None
+            }
+        );
+        // First message at/after t=500 consumes the drop: one timeout,
+        // retransmit delivered one backoff later.
+        let out = s.transmit(600, 1_300, false);
+        assert_eq!(
+            out,
+            TxOutcome::Deliver {
+                first: 600 + DEFAULT_TRANSPORT_TIMEOUT_NS + 1_300,
+                dup: None
+            }
+        );
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.retransmits, 1);
+        assert_eq!(s.backoff_ns, DEFAULT_TRANSPORT_TIMEOUT_NS);
+        // Event consumed: the next message sails through.
+        assert_eq!(
+            s.transmit(700, 1_300, false),
+            TxOutcome::Deliver {
+                first: 2_000,
+                dup: None
+            }
+        );
+    }
+
+    #[test]
+    fn short_delay_shifts_arrival_long_delay_duplicates() {
+        let mut s = state("delay:0@0:500");
+        assert_eq!(
+            s.transmit(100, 1_300, false),
+            TxOutcome::Deliver {
+                first: 100 + 1_300 + 500,
+                dup: None
+            }
+        );
+        assert_eq!(s.retransmits, 0);
+        // A delay past the ACK timeout triggers a spurious retransmit:
+        // the retransmit's copy arrives first, the original becomes the
+        // duplicate.
+        let mut s = state("delay:0@0:20000");
+        let out = s.transmit(100, 1_300, false);
+        let retx = 100 + DEFAULT_TRANSPORT_TIMEOUT_NS + 1_300;
+        let original = 100 + 1_300 + 20_000;
+        assert_eq!(
+            out,
+            TxOutcome::Deliver {
+                first: retx,
+                dup: Some(original)
+            }
+        );
+        assert_eq!(s.timeouts, 1);
+        assert_eq!(s.retransmits, 1);
+    }
+
+    #[test]
+    fn dup_event_delivers_twice() {
+        let mut s = state("dup:0@0");
+        assert_eq!(
+            s.transmit(100, 1_300, false),
+            TxOutcome::Deliver {
+                first: 1_400,
+                dup: Some(1_400)
+            }
+        );
+    }
+
+    #[test]
+    fn rnr_nak_retries_after_nak_round_trip() {
+        let mut s = LinkState::new(
+            &LinkConfig {
+                rnr_depth: 4,
+                ..LinkConfig::default()
+            },
+            0,
+            0,
+        );
+        let wait = 2 * 1_300 + DEFAULT_TRANSPORT_TIMEOUT_NS;
+        assert_eq!(
+            s.transmit(100, 1_300, true),
+            TxOutcome::Deliver {
+                first: 100 + wait + 1_300,
+                dup: None
+            }
+        );
+        assert_eq!(s.rnr_naks, 1);
+        assert_eq!(s.retransmits, 1);
+        assert_eq!(s.timeouts, 0, "an RNR NAK is not an ACK timeout");
+        assert!(s.retransmits >= s.timeouts);
+    }
+
+    #[test]
+    fn certain_loss_window_exhausts_retries_into_qp_error() {
+        let mut cfg = LinkConfig::with_plan("drop:0@0..100000000:100%").unwrap();
+        cfg.retry_count = 3;
+        let mut s = LinkState::new(&cfg, 0, 0);
+        assert_eq!(s.transmit(1_000, 1_300, false), TxOutcome::Lost);
+        assert!(s.qp_error);
+        assert_eq!(s.qp_resets, 1);
+        assert_eq!(s.retransmits, 3);
+        assert_eq!(s.timeouts, 3);
+        // Exponential backoff: t + t<<1 + t<<2.
+        assert_eq!(s.backoff_ns, DEFAULT_TRANSPORT_TIMEOUT_NS * 7);
+        // Error state freezes the send queue without new counters.
+        assert_eq!(s.transmit(2_000, 1_300, false), TxOutcome::Lost);
+        assert_eq!(s.qp_resets, 1);
+        // Healing re-opens the wire.
+        s.clear_error();
+        assert!(matches!(
+            s.transmit(200_000_000, 1_300, false),
+            TxOutcome::Deliver { .. }
+        ));
+    }
+
+    #[test]
+    fn window_escapes_after_until() {
+        let mut cfg = LinkConfig::with_plan("drop:0@0..10000:100%").unwrap();
+        cfg.retry_count = 7;
+        let mut s = LinkState::new(&cfg, 0, 0);
+        // First attempts drop inside the window; backoff walks the
+        // retransmit out of it and the message finally lands.
+        let out = s.transmit(0, 1_300, false);
+        match out {
+            TxOutcome::Deliver { first, .. } => {
+                assert!(first >= 10_000, "delivered inside the window: {first}")
+            }
+            TxOutcome::Lost => panic!("retry budget should outlast the window"),
+        }
+        assert!(s.retransmits >= 1);
+        assert!(!s.qp_error);
+    }
+
+    #[test]
+    fn random_loss_is_deterministic_and_monotone_in_rate() {
+        // Same seed, increasing loss rates: common random numbers make
+        // each message's delivery latency monotone in the rate.
+        let run = |ppm: u64| -> (Vec<Ns>, u64) {
+            let cfg = LinkConfig {
+                plan: LinkPlan::new(
+                    Vec::new(),
+                    Vec::new(),
+                    vec![LossRate { backup: 0, ppm }],
+                ),
+                seed: 42,
+                ..LinkConfig::default()
+            };
+            let mut s = LinkState::new(&cfg, 0, 0);
+            let arrivals: Vec<Ns> = (0..200u64)
+                .map(|i| match s.transmit(i * 3_000, 1_300, false) {
+                    TxOutcome::Deliver { first, .. } => first,
+                    TxOutcome::Lost => Ns::MAX,
+                })
+                .collect();
+            (arrivals, s.retransmits)
+        };
+        let (a10, r10) = run(100_000);
+        let (a10b, _) = run(100_000);
+        assert_eq!(a10, a10b, "same seed must replay identically");
+        let (a30, r30) = run(300_000);
+        for (i, (x, y)) in a10.iter().zip(&a30).enumerate() {
+            assert!(x <= y, "message {i}: latency not monotone ({x} > {y})");
+        }
+        assert!(r30 > r10, "higher rate must retransmit more");
+        // A different seed rolls a different realization.
+        let cfg = LinkConfig {
+            plan: LinkPlan::new(
+                Vec::new(),
+                Vec::new(),
+                vec![LossRate {
+                    backup: 0,
+                    ppm: 100_000,
+                }],
+            ),
+            seed: 43,
+            ..LinkConfig::default()
+        };
+        let mut s = LinkState::new(&cfg, 0, 0);
+        let a_other: Vec<Ns> = (0..200u64)
+            .map(|i| match s.transmit(i * 3_000, 1_300, false) {
+                TxOutcome::Deliver { first, .. } => first,
+                TxOutcome::Lost => Ns::MAX,
+            })
+            .collect();
+        assert_ne!(a10, a_other, "seed must steer the realization");
+    }
+}

@@ -11,9 +11,16 @@
 //! ledger prefix, ties to the lowest id) the fabric runs on `kill:p@T`,
 //! fencing the old primary's staged WQE chains via permission revocation
 //! and re-replicating the winner's suffix before admitting writes.
+//! The wire itself can misbehave: [`link`] injects deterministic
+//! per-backup loss/delay/duplication plans at the wire-issue point,
+//! masked by RC retry machinery (ACK timeout + exponential backoff,
+//! RNR NAKs at a bounded receiver buffer, QP error state healed via a
+//! transient kill + rejoin episode) with PSN-style duplicate
+//! suppression at the remote ledger boundary.
 
 pub mod fabric;
 pub mod faults;
+pub mod link;
 pub mod membership;
 pub mod qp;
 pub mod rdma;
@@ -26,6 +33,7 @@ pub use faults::{
     effective_required, BackupState, ElectionConfig, FaultEvent, FaultKind, FaultPlan,
     FaultTimeline, FaultsConfig, OnLoss, PrimaryEvent, Stall,
 };
+pub use link::{LinkConfig, LinkEvent, LinkEventKind, LinkPlan, LinkState, TxOutcome};
 pub use membership::{elect, Candidate};
 pub use qp::LocalQp;
 pub use rdma::Rdma;

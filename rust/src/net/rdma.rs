@@ -13,7 +13,15 @@
 //! ordering trick — and its stated scalability weakness): a shared
 //! rate limiter carries that bottleneck, with per-thread send windows
 //! coupling remote back-pressure to the issuing threads.
+//!
+//! Data WQEs traverse the (optionally lossy) link layer on their way to
+//! the remote engine — see [`super::link`] for the drop/delay/dup plan
+//! and the RC retry machinery. Fence verbs are modeled reliable: by the
+//! time a fence could observe a broken link, the retry exhaustion has
+//! already put the QP in error state and the fabric has taken the
+//! backup out of the quorum, so the fence never issues toward it.
 
+use super::link::{LinkConfig, LinkState, TxOutcome};
 use super::qp::LocalQp;
 use super::remote::RemoteEngine;
 use super::verbs::{Verb, WriteMeta};
@@ -49,6 +57,10 @@ pub struct Rdma {
     /// span (see [`crate::net::wqe`] and `Platform::wire_line_ns`).
     wire_line_ns: Ns,
     pub remote: RemoteEngine,
+    /// Lossy-link + RC transport state (`None` = perfectly reliable
+    /// wire, the pre-link anchor: every data WQE arrives exactly once
+    /// at `issue + half`).
+    link: Option<LinkState>,
     // stats
     /// Data *lines* submitted to the wire (a span counts once per line).
     pub posted_writes: u64,
@@ -81,6 +93,7 @@ impl Rdma {
             poll_cost: p.poll_cost,
             wire_line_ns: p.wire_line_ns,
             remote: RemoteEngine::new(p, ledger),
+            link: None,
             posted_writes: 0,
             wire_wqes: 0,
             span_hist: LogHistogram::new(),
@@ -158,6 +171,70 @@ impl Rdma {
         win.push_back(done);
     }
 
+    // ---- lossy link + RC transport (see `super::link`) ------------------
+
+    /// Attach a lossy link: this stack's slice of the plan plus the RC
+    /// retry machinery, and PSN-style duplicate suppression on the
+    /// remote. A no-op when the config is disabled — the guard-clause
+    /// anchor.
+    pub fn set_link(&mut self, cfg: &LinkConfig, backup: usize, salt: u64) {
+        if cfg.enabled() {
+            self.link = Some(LinkState::new(cfg, backup, salt));
+            self.remote.enable_dedup();
+        }
+    }
+
+    /// The link transport state, if one is attached.
+    pub fn link(&self) -> Option<&LinkState> {
+        self.link.as_ref()
+    }
+
+    /// Whether the QP sits in error state (retry budget exhausted) and
+    /// needs the fabric to heal the connection.
+    pub fn qp_error(&self) -> bool {
+        self.link.as_ref().is_some_and(|l| l.qp_error)
+    }
+
+    /// Connection re-establishment after retry exhaustion: every local
+    /// QP resets (in-flight WQEs are gone — the fabric replays the lost
+    /// suffix through the resync machinery) and the link leaves error
+    /// state.
+    pub fn reset_qps(&mut self) {
+        for qp in self.lanes.values_mut() {
+            qp.reset();
+        }
+        self.dd_windows.clear();
+        if let Some(l) = self.link.as_mut() {
+            l.clear_error();
+        }
+    }
+
+    /// The wire fate of one message issued at `iss`: without a link it
+    /// arrives exactly once at `iss + half` (the anchor); with one, the
+    /// plan and the RC retry machinery decide (see
+    /// [`LinkState::transmit`]).
+    fn wire(&mut self, iss: Ns) -> TxOutcome {
+        match self.link.as_mut() {
+            None => TxOutcome::Deliver {
+                first: iss + self.half,
+                dup: None,
+            },
+            Some(l) => {
+                let saturated =
+                    l.rnr_depth() > 0 && self.remote.pending_lines() >= l.rnr_depth();
+                l.transmit(iss, self.half, saturated)
+            }
+        }
+    }
+
+    /// Per-line duplicate-injection accounting (dup events and spurious
+    /// retransmits deliver every line of the WQE twice).
+    fn note_dup_lines(&mut self, lines: u64) {
+        if let Some(l) = self.link.as_mut() {
+            l.dups_injected += lines;
+        }
+    }
+
     fn block(&mut self, t: &mut ThreadClock, completion: Ns) {
         self.blocking_waits += 1;
         self.blocked_ns += completion.saturating_sub(t.now);
@@ -177,26 +254,42 @@ impl Rdma {
                 let lane = self.next_lane(thread);
                 let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
                 t.wait_until(ready);
-                let arrive = iss + self.half;
-                self.remote.write_ddio(lane, arrive, meta);
-                // Posted: the ack returns as soon as the remote NIC
-                // receives it.
-                self.complete_lane(thread, lane, arrive + self.half);
+                if let TxOutcome::Deliver { first, dup } = self.wire(iss) {
+                    self.remote.write_ddio(lane, first, meta);
+                    if let Some(d) = dup {
+                        // The duplicate delivery hits the PSN dedup.
+                        self.remote.write_ddio(lane, d, meta);
+                        self.note_dup_lines(1);
+                    }
+                    // Posted: the ack returns as soon as the remote NIC
+                    // receives it.
+                    self.complete_lane(thread, lane, first + self.half);
+                }
             }
             Verb::WriteWT => {
                 let lane = self.next_lane(thread);
                 let (ready, iss) = self.post_lane(thread, lane, t.now, 0);
                 t.wait_until(ready);
-                let arrive = iss + self.half;
-                self.remote.write_wt(lane, arrive, meta);
-                self.complete_lane(thread, lane, arrive + self.half);
+                if let TxOutcome::Deliver { first, dup } = self.wire(iss) {
+                    self.remote.write_wt(lane, first, meta);
+                    if let Some(d) = dup {
+                        self.remote.write_wt(lane, d, meta);
+                        self.note_dup_lines(1);
+                    }
+                    self.complete_lane(thread, lane, first + self.half);
+                }
             }
             Verb::WriteNT => {
                 let (ready, iss) = self.post_dd(thread, t.now, 0);
                 t.wait_until(ready);
-                let arrive = iss + self.half;
-                let (_proc, persist) = self.remote.write_nt(0, arrive, meta);
-                self.complete_dd(thread, persist + self.half);
+                if let TxOutcome::Deliver { first, dup } = self.wire(iss) {
+                    let (_proc, persist) = self.remote.write_nt(0, first, meta);
+                    if let Some(d) = dup {
+                        self.remote.write_nt(0, d, meta);
+                        self.note_dup_lines(1);
+                    }
+                    self.complete_dd(thread, persist + self.half);
+                }
             }
             other => unreachable!("submit_data: {other:?} is not a data verb"),
         }
@@ -223,33 +316,53 @@ impl Rdma {
                 let lane = self.next_lane(thread);
                 let (ready, iss) = self.post_lane(thread, lane, t.now, extra);
                 t.wait_until(ready);
-                let arrive = iss + self.half;
-                self.remote
-                    .write_ddio_span(lane, arrive, self.wire_line_ns, w.meta, &w.tail);
-                // Posted span: one ack once the last line is received.
-                self.complete_lane(thread, lane, arrive + extra + self.half);
+                if let TxOutcome::Deliver { first, dup } = self.wire(iss) {
+                    self.remote
+                        .write_ddio_span(lane, first, self.wire_line_ns, w.meta, &w.tail);
+                    if let Some(d) = dup {
+                        // The whole span is redelivered; every line hits
+                        // the PSN dedup.
+                        self.remote
+                            .write_ddio_span(lane, d, self.wire_line_ns, w.meta, &w.tail);
+                        self.note_dup_lines(lines as u64);
+                    }
+                    // Posted span: one ack once the last line is received.
+                    self.complete_lane(thread, lane, first + extra + self.half);
+                }
             }
             Verb::WriteWT => {
                 let lane = self.next_lane(thread);
                 let (ready, iss) = self.post_lane(thread, lane, t.now, extra);
                 t.wait_until(ready);
-                let arrive = iss + self.half;
-                self.remote
-                    .write_wt_span(lane, arrive, self.wire_line_ns, w.meta, &w.tail);
-                self.complete_lane(thread, lane, arrive + extra + self.half);
+                if let TxOutcome::Deliver { first, dup } = self.wire(iss) {
+                    self.remote
+                        .write_wt_span(lane, first, self.wire_line_ns, w.meta, &w.tail);
+                    if let Some(d) = dup {
+                        self.remote
+                            .write_wt_span(lane, d, self.wire_line_ns, w.meta, &w.tail);
+                        self.note_dup_lines(lines as u64);
+                    }
+                    self.complete_lane(thread, lane, first + extra + self.half);
+                }
             }
             Verb::WriteNT => {
                 // `post_dd` floors the shared QP's issue stage for the
                 // span's extra serialization (see its doc comment).
                 let (ready, iss) = self.post_dd(thread, t.now, extra);
                 t.wait_until(ready);
-                let arrive = iss + self.half;
-                let (_proc, last_persist) =
-                    self.remote
-                        .write_nt_span(0, arrive, self.wire_line_ns, w.meta, &w.tail);
-                // Non-posted span: the single completion carries the
-                // persistence of every line (window slot freed then).
-                self.complete_dd(thread, last_persist + self.half);
+                if let TxOutcome::Deliver { first, dup } = self.wire(iss) {
+                    let (_proc, last_persist) =
+                        self.remote
+                            .write_nt_span(0, first, self.wire_line_ns, w.meta, &w.tail);
+                    if let Some(d) = dup {
+                        self.remote
+                            .write_nt_span(0, d, self.wire_line_ns, w.meta, &w.tail);
+                        self.note_dup_lines(lines as u64);
+                    }
+                    // Non-posted span: the single completion carries the
+                    // persistence of every line (window slot freed then).
+                    self.complete_dd(thread, last_persist + self.half);
+                }
             }
             other => unreachable!("submit_wqe: {other:?} is not a data verb"),
         }

@@ -147,6 +147,13 @@ pub struct RemoteEngine {
     per_thread_persist: HashMap<u32, Ns>,
     /// Durability ledger of the backup PM.
     pub ledger: DurabilityLog,
+    /// PSN-style duplicate suppression, active only when a lossy link
+    /// is configured (see [`crate::net::link`]): the `(thread, seq)` of
+    /// every line this engine has applied. A redelivered line —
+    /// fabric duplication or a spurious retransmit — is detected here,
+    /// at the ledger boundary, and dropped without any side effect:
+    /// the at-least-once transport becomes exactly-once storage.
+    dedup: Option<HashSet<(u32, u64)>>,
     // stats
     pub writes: u64,
     pub persists: u64,
@@ -160,6 +167,10 @@ pub struct RemoteEngine {
     /// Total ns lines spent replicated-but-volatile before persisting
     /// (Σ persist_at − proc_at over drained/flushed lines).
     pub volatile_window_ns: u64,
+    /// Duplicate line deliveries dropped by the PSN dedup (0 unless a
+    /// lossy link is configured; `dup_drops <= retransmits +
+    /// dups_injected` on the requester side).
+    pub dup_drops: u64,
 }
 
 impl RemoteEngine {
@@ -185,12 +196,38 @@ impl RemoteEngine {
             per_thread_proc: HashMap::new(),
             per_thread_persist: HashMap::new(),
             ledger: DurabilityLog::new(ledger),
+            dedup: None,
             writes: 0,
             persists: 0,
             barriers: 0,
             flush_verbs: 0,
             compaction_lines: 0,
             volatile_window_ns: 0,
+            dup_drops: 0,
+        }
+    }
+
+    /// Turn on PSN-style duplicate suppression (lossy-link runs only —
+    /// the lossless anchor never pays for the seen-set).
+    pub fn enable_dedup(&mut self) {
+        if self.dedup.is_none() {
+            self.dedup = Some(HashSet::new());
+        }
+    }
+
+    /// Whether `meta`'s line is a duplicate delivery. First sight
+    /// registers the line and admits it; a repeat is counted and the
+    /// verb returns without any side effect. `false` always when dedup
+    /// is off (the anchor: no set maintenance, no behavior change).
+    fn dedup_drop(&mut self, meta: &WriteMeta) -> bool {
+        let Some(seen) = self.dedup.as_mut() else {
+            return false;
+        };
+        if seen.insert((meta.thread, meta.seq)) {
+            false
+        } else {
+            self.dup_drops += 1;
+            true
         }
     }
 
@@ -231,6 +268,9 @@ impl RemoteEngine {
     /// the MC queue; the other domains reroute the persist instant (see
     /// [`PersistDomain`]).
     pub fn write_ddio(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> Ns {
+        if self.dedup_drop(&meta) {
+            return arrive;
+        }
         self.writes += 1;
         let proc = self.process(qp, meta.thread, arrive);
         let line = line_of(meta.addr);
@@ -292,6 +332,9 @@ impl RemoteEngine {
     /// immediate write-through to the MC queue; the LLC copy stays clean.
     /// Returns `(proc, persist)`.
     pub fn write_wt(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> (Ns, Ns) {
+        if self.dedup_drop(&meta) {
+            return (arrive, arrive);
+        }
         self.writes += 1;
         let proc = self.process(qp, meta.thread, arrive);
         let line = line_of(meta.addr);
@@ -354,6 +397,9 @@ impl RemoteEngine {
     /// non-posted PCIe transaction serialized at `nt_serial` per line.
     /// Returns `(proc, persist)` — completion is non-posted (at persist).
     pub fn write_nt(&mut self, qp: usize, arrive: Ns, meta: WriteMeta) -> (Ns, Ns) {
+        if self.dedup_drop(&meta) {
+            return (arrive, arrive);
+        }
         self.writes += 1;
         let slot = self.order.entry((qp, meta.thread)).or_insert(0);
         let ordered = arrive.max(*slot);
@@ -710,6 +756,11 @@ impl RemoteEngine {
             let stamped = at.max(ev.at);
             self.ledger.record(DurEvent { at: stamped, ..*ev });
             self.max_persist = self.max_persist.max(stamped);
+            // Resynced lines register with the PSN dedup too: a delayed
+            // duplicate arriving after the replay must still be dropped.
+            if let Some(seen) = self.dedup.as_mut() {
+                seen.insert((ev.thread, ev.seq));
+            }
         }
         self.writes += lines;
         self.persists += lines;

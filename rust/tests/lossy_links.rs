@@ -1,0 +1,576 @@
+//! Lossy-link suite (`net::link`): the reliable-wire regression anchor
+//! — an explicitly configured empty `[link]` section is event-for-event
+//! identical (instants included) to the default construction path,
+//! across replica groups, sharded construction and a faulted plan —
+//! plus the transport behaviors the RC machinery must exhibit (timeout
+//! retransmission, duplicate suppression at the ledger, RNR
+//! backpressure, retry exhaustion healing as a transient-backup
+//! episode), the adaptive-quorum × Degrade composition guard, and the
+//! chaos property: under randomized seeded link faults, every strategy
+//! × persist domain still commits every transaction, every backup's
+//! final ledger image matches the lossless run's, and the merged crash
+//! sweep covers every durably-acked transaction.
+
+use std::collections::BTreeSet;
+
+use pmsm::config::{AckPolicy, Platform, ReplicationConfig, StrategyKind};
+use pmsm::coordinator::{Mirror, MirrorBuilder, ShardingConfig, ThreadCtx};
+use pmsm::net::{Fabric, FaultsConfig, LinkConfig, OnLoss, PersistDomain, WriteMeta};
+use pmsm::ptest::{check, Gen};
+use pmsm::recovery;
+use pmsm::runtime::fallback_predictor;
+use pmsm::sim::ThreadClock;
+use pmsm::txn::Txn;
+
+/// Drive a deterministic single-thread Transact-shaped workload;
+/// returns the thread's final virtual time.
+fn drive(m: &mut Mirror, shape: &[(u32, u32)]) -> u64 {
+    let mut t = ThreadCtx::new(0);
+    for (i, &(epochs, writes)) in shape.iter().enumerate() {
+        m.txn_begin(&mut t, None);
+        for e in 0..epochs {
+            for w in 0..writes {
+                let addr =
+                    0x1000_0000 + ((i as u64 * 7 + e as u64 * 3 + w as u64) % 32) * 64;
+                m.store(&mut t, addr, i as u64);
+                m.clwb(&mut t, addr);
+            }
+            m.sfence(&mut t);
+        }
+        m.txn_commit(&mut t);
+    }
+    t.now()
+}
+
+/// Per-backup ledger with every coordinate INCLUDING the durability
+/// instant — the full event-for-event projection.
+fn full_events(m: &Mirror, backup: usize) -> Vec<(u32, u64, u64, u64, u32, u64)> {
+    m.backup(backup)
+        .ledger
+        .events()
+        .iter()
+        .map(|e| (e.thread, e.seq, e.addr, e.val, e.epoch, e.at))
+        .collect()
+}
+
+/// The instant-free ledger image: what was replicated, not when.
+fn image_keys(m: &Mirror, backup: usize) -> BTreeSet<(u32, u64, u64, u64)> {
+    m.backup(backup)
+        .ledger
+        .events()
+        .iter()
+        .map(|e| (e.thread, e.seq, e.addr, e.val))
+        .collect()
+}
+
+/// Every (thread, seq) pair appears exactly once — retransmits and
+/// wire duplicates never double-apply at the ledger.
+fn assert_psn_unique(m: &Mirror, backup: usize, label: &str) {
+    let events = m.backup(backup).ledger.events().to_vec();
+    let keys: BTreeSet<(u32, u64)> = events.iter().map(|e| (e.thread, e.seq)).collect();
+    assert_eq!(
+        keys.len(),
+        events.len(),
+        "{label} backup {backup}: duplicate (thread, seq) in the ledger"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The acceptance anchor: no `[link]` section == an explicitly empty one,
+// bit for bit.
+
+/// Building with an explicit default `LinkConfig` (empty plan, unbounded
+/// receiver) is a guard-clause pass-through: same thread timeline, same
+/// ledger (instants included), same doorbell/posted/wire counts as the
+/// pre-link default path, for every SM strategy on a single backup.
+#[test]
+fn default_link_is_event_identical_to_the_prelink_path() {
+    let shape = [(3u32, 2u32), (1, 4), (5, 1)];
+    for kind in StrategyKind::SM {
+        let mut legacy = MirrorBuilder::new(Platform::default(), kind)
+            .replication(ReplicationConfig::new(1, AckPolicy::All))
+            .ledger(true)
+            .build()
+            .unwrap();
+        let legacy_now = drive(&mut legacy, &shape);
+        let mut pinned = MirrorBuilder::new(Platform::default(), kind)
+            .replication(ReplicationConfig::new(1, AckPolicy::All))
+            .link(LinkConfig::default())
+            .ledger(true)
+            .build()
+            .unwrap();
+        let pinned_now = drive(&mut pinned, &shape);
+        assert_eq!(legacy_now, pinned_now, "{kind:?}: thread timeline diverged");
+        assert_eq!(
+            full_events(&legacy, 0),
+            full_events(&pinned, 0),
+            "{kind:?}: ledger diverged under the explicit empty link"
+        );
+        assert_eq!(legacy.doorbells(), pinned.doorbells(), "{kind:?}");
+        assert_eq!(legacy.posted_wqes(), pinned.posted_wqes(), "{kind:?}");
+        assert_eq!(legacy.wire_wqes(), pinned.wire_wqes(), "{kind:?}");
+        // The anchor never touches the transport machinery.
+        assert_eq!(pinned.retransmits(), 0, "{kind:?}: anchor retransmitted");
+        assert_eq!(pinned.transport_timeouts(), 0, "{kind:?}");
+        assert_eq!(pinned.dup_drops(), 0, "{kind:?}: anchor ran dedup");
+    }
+}
+
+/// The same pin through the sharded constructor and under a node-fault
+/// plan: explicit empty link == default, instants included.
+#[test]
+fn empty_link_pins_sharded_and_faulted_paths() {
+    // Sharded: 2 shards x 2 backups.
+    let shape = [(2u32, 3u32), (4, 1)];
+    let repl = ReplicationConfig::new(2, AckPolicy::All);
+    let mut legacy = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(repl)
+        .sharding(ShardingConfig::new(2, Default::default()))
+        .ledger(true)
+        .build()
+        .unwrap();
+    let legacy_now = drive(&mut legacy, &shape);
+    let mut pinned = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(repl)
+        .sharding(ShardingConfig::new(2, Default::default()))
+        .link(LinkConfig::default())
+        .ledger(true)
+        .build()
+        .unwrap();
+    let pinned_now = drive(&mut pinned, &shape);
+    assert_eq!(legacy_now, pinned_now, "sharded: thread timeline diverged");
+    for s in 0..2 {
+        for b in 0..2 {
+            let ev = |m: &Mirror| -> Vec<(u32, u64, u64, u64, u32, u64)> {
+                m.shard_fabric(s)
+                    .backup(b)
+                    .ledger
+                    .events()
+                    .iter()
+                    .map(|e| (e.thread, e.seq, e.addr, e.val, e.epoch, e.at))
+                    .collect()
+            };
+            assert_eq!(
+                ev(&legacy),
+                ev(&pinned),
+                "shard {s} backup {b}: ledger diverged"
+            );
+        }
+    }
+    assert_eq!(legacy.doorbells(), pinned.doorbells());
+
+    // Faulted: one kill mid-run on a quorum group.
+    let shape = [(3u32, 2u32), (3, 2), (3, 2), (3, 2)];
+    let repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+    let faults = FaultsConfig::with_plan("kill:1@40000", OnLoss::Degrade).unwrap();
+    let mut legacy = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(repl)
+        .faults(faults.clone())
+        .ledger(true)
+        .build()
+        .unwrap();
+    let legacy_now = drive(&mut legacy, &shape);
+    let mut pinned = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(repl)
+        .faults(faults)
+        .link(LinkConfig::default())
+        .ledger(true)
+        .build()
+        .unwrap();
+    let pinned_now = drive(&mut pinned, &shape);
+    assert_eq!(legacy_now, pinned_now, "faulted: thread timeline diverged");
+    for b in 0..3 {
+        assert_eq!(
+            full_events(&legacy, b),
+            full_events(&pinned, b),
+            "faulted backup {b}: ledger diverged"
+        );
+    }
+    assert_eq!(legacy.doorbells(), pinned.doorbells());
+}
+
+// ---------------------------------------------------------------------------
+// Transport behaviors.
+
+/// A one-shot drop is masked by the ACK timeout + retransmit: the run
+/// completes, the ledger image is unchanged (only instants shift, never
+/// earlier), and the counters record exactly one timeout.
+#[test]
+fn lost_message_is_masked_by_retransmission() {
+    let shape = [(3u32, 2u32), (2, 2)];
+    let mut clean = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(1, AckPolicy::All))
+        .ledger(true)
+        .build()
+        .unwrap();
+    let clean_now = drive(&mut clean, &shape);
+    let mut lossy = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(1, AckPolicy::All))
+        .link(LinkConfig::with_plan("drop:0@0").unwrap())
+        .ledger(true)
+        .build()
+        .unwrap();
+    let lossy_now = drive(&mut lossy, &shape);
+    assert_eq!(lossy.retransmits(), 1);
+    assert_eq!(lossy.transport_timeouts(), 1);
+    assert_eq!(lossy.qp_resets(), 0);
+    assert!(lossy.backoff_ns() > 0);
+    assert!(lossy_now >= clean_now, "a lost message cannot speed the run up");
+    assert_eq!(
+        image_keys(&clean, 0),
+        image_keys(&lossy, 0),
+        "the drop must not change WHAT was replicated"
+    );
+    assert_psn_unique(&lossy, 0, "one-shot drop");
+    // Instants only ever move later under loss.
+    let clean_at: std::collections::BTreeMap<(u32, u64), u64> = clean
+        .backup(0)
+        .ledger
+        .events()
+        .iter()
+        .map(|e| ((e.thread, e.seq), e.at))
+        .collect();
+    for e in lossy.backup(0).ledger.events() {
+        assert!(
+            e.at >= clean_at[&(e.thread, e.seq)],
+            "({}, {}): lossy persisted earlier than lossless",
+            e.thread,
+            e.seq
+        );
+    }
+}
+
+/// Wire duplicates — fabric-level dup events and the spurious
+/// retransmit a long-delayed ack triggers — are dropped by the PSN
+/// dedup at the ledger boundary: applied writes and the ledger stay
+/// exactly-once.
+#[test]
+fn duplicates_are_suppressed_at_the_ledger() {
+    let shape = [(3u32, 2u32), (2, 3)];
+    let mut clean = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(1, AckPolicy::All))
+        .ledger(true)
+        .build()
+        .unwrap();
+    drive(&mut clean, &shape);
+    // dup:0@0 duplicates the first message; delay:0@2000:20000 delays
+    // a later one past the 8 us ACK timeout, forcing a spurious
+    // retransmit.
+    let mut lossy = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(1, AckPolicy::All))
+        .link(LinkConfig::with_plan("dup:0@0,delay:0@2000:20000").unwrap())
+        .ledger(true)
+        .build()
+        .unwrap();
+    drive(&mut lossy, &shape);
+    assert!(lossy.dups_injected() >= 2, "both events must inject a duplicate");
+    assert_eq!(
+        lossy.dup_drops(),
+        lossy.dups_injected(),
+        "every duplicate delivery must be dropped by dedup"
+    );
+    assert!(lossy.dup_drops() <= lossy.retransmits() + lossy.dups_injected());
+    assert_eq!(image_keys(&clean, 0), image_keys(&lossy, 0));
+    assert_psn_unique(&lossy, 0, "duplicates");
+    // The applied-write counter excludes the dropped copies.
+    assert_eq!(
+        lossy.fabric().backup_stats()[0].writes,
+        clean.fabric().backup_stats()[0].writes,
+        "dedup must keep the applied-write count exactly-once"
+    );
+}
+
+/// RNR backpressure: a depth-1 receiver NAKs bursts; NAK retries count
+/// as retransmits but never as ACK timeouts, and nothing is lost.
+#[test]
+fn rnr_nak_backpressure_is_lossless() {
+    let shape = [(2u32, 4u32), (2, 4)];
+    let mut clean = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(1, AckPolicy::All))
+        .ledger(true)
+        .build()
+        .unwrap();
+    drive(&mut clean, &shape);
+    let link = LinkConfig {
+        rnr_depth: 1,
+        ..LinkConfig::default()
+    };
+    let mut lossy = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(1, AckPolicy::All))
+        .link(link)
+        .ledger(true)
+        .build()
+        .unwrap();
+    drive(&mut lossy, &shape);
+    assert!(lossy.rnr_naks() > 0, "a depth-1 receiver never NAKed");
+    assert_eq!(lossy.transport_timeouts(), 0, "an RNR NAK is not an ACK timeout");
+    assert!(lossy.retransmits() >= lossy.rnr_naks());
+    assert_eq!(image_keys(&clean, 0), image_keys(&lossy, 0));
+    assert_psn_unique(&lossy, 0, "rnr");
+}
+
+/// Retry exhaustion heals as a transient-backup episode: the QP resets,
+/// the backup leaves the quorum (Degrade carries the run), rejoins via
+/// the ordinary resync, and after settling its ledger image converges
+/// back to the survivor's.
+#[test]
+fn qp_exhaustion_heals_as_a_transient_backup_episode() {
+    let shape = [(3u32, 2u32); 6];
+    // A 100% window opening early in the run (the backoff chain at
+    // retry 2 spans 8 + 16 + 32 us, well inside the window), so the
+    // first lost message deterministically exhausts its retries.
+    let mut link = LinkConfig::with_plan("drop:1@5000..200000:100%").unwrap();
+    link.retry_count = 2;
+    let mut m = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(2, AckPolicy::Quorum(1)))
+        .faults(FaultsConfig::with_plan("", OnLoss::Degrade).unwrap())
+        .link(link)
+        .ledger(true)
+        .build()
+        .unwrap();
+    let now = drive(&mut m, &shape);
+    assert!(m.stall().is_none(), "quorum:1 + degrade must mask the lost link");
+    assert!(m.qp_resets() >= 1, "the loss window never exhausted the QP");
+    // The episode went through the node-fault machinery: the healed
+    // backup accrued out-of-quorum time and resynced lines on rejoin.
+    let far = now + 50_000_000;
+    m.settle(far);
+    m.settle(far + 50_000_000);
+    assert!(
+        m.accrued_dead_ns(far)[1] > 0,
+        "the exhausted backup never left the quorum"
+    );
+    assert!(m.resync_lines()[1] > 0, "the rejoin never resynced");
+    assert_eq!(
+        image_keys(&m, 0),
+        image_keys(&m, 1),
+        "after healing + resync the ledger images must converge"
+    );
+    assert_psn_unique(&m, 0, "exhaustion");
+    assert_psn_unique(&m, 1, "exhaustion");
+}
+
+/// `OnLoss::Halt` extends to links: retry exhaustion on a required
+/// backup stalls the run instead of weakening durability.
+#[test]
+fn on_loss_halt_stalls_when_a_required_link_dies() {
+    let shape = [(3u32, 2u32); 6];
+    let mut link = LinkConfig::with_plan("drop:1@5000..600000:100%").unwrap();
+    link.retry_count = 2;
+    let mut m = MirrorBuilder::new(Platform::default(), StrategyKind::SmOb)
+        .replication(ReplicationConfig::new(2, AckPolicy::All))
+        .faults(FaultsConfig::with_plan("", OnLoss::Halt).unwrap())
+        .link(link)
+        .ledger(true)
+        .build()
+        .unwrap();
+    drive(&mut m, &shape);
+    let stall = m.stall().expect("ack all + halt must stall on a dead link");
+    assert!(stall.at >= 5_000, "stalled before the loss window opened");
+    assert!(m.qp_resets() >= 1);
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive-quorum x Degrade composition guard (regression).
+
+/// A per-txn adaptive quorum override must never make a fence wait on a
+/// dead backup: when a backup dies mid-txn, the override's floor clamps
+/// to the survivor count, so the fence completes exactly like a static
+/// quorum over the survivors — no stall, no phantom wait.
+#[test]
+fn txn_quorum_override_composes_with_degrade_clamping() {
+    let p = Platform::default();
+    let repl = ReplicationConfig::new(3, AckPolicy::Quorum(1));
+    let faults = FaultsConfig::with_plan("kill:2@10000", OnLoss::Degrade).unwrap();
+    let mut f = Fabric::with_faults(&p, &repl, faults.clone(), false);
+    // The controller asks for all 3 acks on this txn's fences.
+    f.set_txn_quorum(Some(3));
+    // Reference: a static quorum:2 group under the same plan — after
+    // the kill, 2 survivors is exactly what the clamped override waits
+    // on.
+    let static_repl = ReplicationConfig::new(3, AckPolicy::Quorum(2));
+    let mut r = Fabric::with_faults(&p, &static_repl, faults, false);
+    let mut tf = ThreadClock::new(0);
+    let mut tr = ThreadClock::new(0);
+    // Past the kill: backup 2 is dead; the override's k=3 must clamp to
+    // the 2 survivors rather than waiting on the corpse (or stalling).
+    tf.wait_until(20_000);
+    tr.wait_until(20_000);
+    for (i, t, fab) in [(0u64, &mut tf, &mut f), (0u64, &mut tr, &mut r)] {
+        fab.post_write_wt(
+            t,
+            WriteMeta {
+                addr: 0x40,
+                val: i,
+                thread: 0,
+                txn: 0,
+                epoch: 0,
+                seq: i,
+            },
+        );
+        fab.rdfence(t);
+    }
+    assert!(f.stall().is_none(), "the override must not stall a degraded group");
+    assert!(r.stall().is_none());
+    assert_eq!(
+        tf.now, tr.now,
+        "clamped override (k=3 -> 2 survivors) must fence exactly like \
+         static quorum:2"
+    );
+    // The override survives as asked (it re-applies if the backup
+    // rejoins) — only its effective value clamps per fence.
+    assert_eq!(f.txn_quorum(), Some(3));
+}
+
+// ---------------------------------------------------------------------------
+// Chaos property: strategies x persist domains under random link plans.
+
+/// One randomized lossy run vs its lossless twin: same strategy, same
+/// domain, same transactions. Checks commit completeness, ledger-image
+/// equality, PSN uniqueness, and the merged fault-aware crash sweep.
+fn chaos_case(g: &mut Gen, kind: StrategyKind, domain: PersistDomain) {
+    let txns = g.u64(2, 5);
+    let backups = 2;
+    let repl = ReplicationConfig::new(backups, AckPolicy::Quorum(1));
+    let build = |link: Option<LinkConfig>| -> Mirror {
+        let mut b = MirrorBuilder::new(Platform::default(), kind)
+            .replication(repl)
+            .faults(FaultsConfig::with_plan("", OnLoss::Degrade).unwrap())
+            .persist_domain(domain)
+            .ledger(true);
+        if kind == StrategyKind::SmAd {
+            b = b.predictor(fallback_predictor(&Platform::default()));
+        }
+        if let Some(link) = link {
+            b = b.link(link);
+        }
+        b.build().unwrap()
+    };
+    // A random plan: a run-long loss rate on a random backup (<= 30% so
+    // the default retry budget keeps exhaustion rare), plus up to two
+    // one-shot events, under a random seed.
+    let mut spec = format!("loss:{}:{}%", g.usize(0, backups - 1), g.u64(0, 30));
+    for _ in 0..g.usize(0, 2) {
+        let b = g.usize(0, backups - 1);
+        let at = g.u64(1_000, 80_000);
+        match g.usize(0, 2) {
+            0 => spec.push_str(&format!(",drop:{b}@{at}")),
+            1 => spec.push_str(&format!(",dup:{b}@{at}")),
+            _ => spec.push_str(&format!(",delay:{b}@{at}:{}", g.u64(100, 20_000))),
+        }
+    }
+    let mut link = LinkConfig::with_plan(&spec).unwrap();
+    link.seed = g.u64(0, u64::MAX / 2);
+    // A generous retry budget keeps retry exhaustion (and its kill +
+    // rejoin episode) out of the chaos property — the exhaustion path
+    // has its own dedicated tests above; here every loss must be
+    // masked purely by retransmission so the ledger images stay
+    // instant-for-instant comparable as key sets.
+    link.retry_count = 16;
+
+    let log = pmsm::pstore::log_base_for(0);
+    let d0 = 0x20_0000u64;
+    let d1 = 0x20_0040u64;
+    let run = |m: &mut Mirror| -> (recovery::TxnHistory, u64) {
+        let mut t = ThreadCtx::new(0);
+        let mut hist = recovery::TxnHistory::new(Default::default());
+        for i in 0..txns {
+            let mut tx = Txn::begin(m, &mut t, log, None);
+            tx.write(m, &mut t, d0, 100 + i);
+            tx.write(m, &mut t, d1, 200 + i);
+            tx.commit(m, &mut t);
+            assert!(m.stall().is_none(), "degrade must never stall");
+            let mut snap = std::collections::HashMap::new();
+            snap.insert(d0, 100 + i);
+            snap.insert(d1, 200 + i);
+            hist.commit(snap, t.last_dfence);
+        }
+        // Settle twice with a wide horizon: the second pass lands any
+        // rejoin a QP heal scheduled after the first.
+        let far = t.now() + 50_000_000;
+        m.settle(far);
+        m.settle(far + 50_000_000);
+        (hist, t.now())
+    };
+    let mut clean = build(None);
+    let (_, _) = run(&mut clean);
+    let mut lossy = build(Some(link));
+    let (hist, _) = run(&mut lossy);
+    let label = format!("{kind:?}/{domain}/{spec}");
+
+    // Ledger truth: what was replicated matches the lossless run
+    // exactly, on every backup, exactly once.
+    for b in 0..backups {
+        assert_eq!(
+            image_keys(&clean, b),
+            image_keys(&lossy, b),
+            "{label} backup {b}: lossy ledger image diverged"
+        );
+        assert_psn_unique(&lossy, b, &label);
+    }
+    assert!(
+        lossy.dup_drops() <= lossy.retransmits() + lossy.dups_injected(),
+        "{label}: dedup dropped more than was ever duplicated"
+    );
+    assert!(
+        lossy.retransmits() >= lossy.transport_timeouts(),
+        "{label}: timeouts without retransmits"
+    );
+
+    // Recovery: the merged fault-aware crash sweep covers every durably
+    // acked transaction despite loss, retransmission and healing.
+    let shard_ledgers = lossy.shard_ledgers();
+    for ledgers in &shard_ledgers {
+        recovery::check_group_epoch_ordering(ledgers).unwrap();
+    }
+    let timeline = lossy.fabric().timeline();
+    let log_bases = [log];
+    let data_addrs = [d0, d1];
+    let check = recovery::CrashCheck::new(&hist, &log_bases, &data_addrs)
+        .required(repl.required())
+        .on_loss(OnLoss::Degrade)
+        .persist_domain(domain);
+    let checked = check
+        .ledgers(&shard_ledgers[0])
+        .faults(&timeline)
+        .sweep()
+        .unwrap_or_else(|e| panic!("{label}: crash sweep failed: {e}"));
+    assert!(checked > 0, "{label}: the sweep checked nothing");
+}
+
+/// The chaos matrix: every mirroring strategy x every persist domain,
+/// each under a handful of random seeded link plans.
+#[test]
+fn prop_chaos_lossy_runs_preserve_ledger_truth_and_recovery() {
+    for kind in [
+        StrategyKind::SmRc,
+        StrategyKind::SmOb,
+        StrategyKind::SmDd,
+        StrategyKind::SmAd,
+    ] {
+        for domain in PersistDomain::ALL {
+            check(
+                &format!("lossy-chaos-{kind}-{domain}"),
+                3,
+                |g: &mut Gen| chaos_case(g, kind, domain),
+            );
+        }
+    }
+}
+
+/// The fifth strategy: without mirroring there is no wire, so a link
+/// config is inert — NO-SM runs untouched under any plan.
+#[test]
+fn no_sm_is_untouched_by_link_plans() {
+    let shape = [(3u32, 2u32), (2, 4)];
+    let mut plain = Mirror::new(Platform::default(), StrategyKind::NoSm, false);
+    let plain_now = drive(&mut plain, &shape);
+    let mut linked = MirrorBuilder::new(Platform::default(), StrategyKind::NoSm)
+        .link(LinkConfig::with_plan("drop:0@1000,loss:0:50%").unwrap())
+        .build()
+        .unwrap();
+    let linked_now = drive(&mut linked, &shape);
+    assert_eq!(plain_now, linked_now, "NO-SM must not see the link layer");
+    assert_eq!(linked.retransmits(), 0);
+    assert_eq!(linked.transport_timeouts(), 0);
+}
